@@ -1,0 +1,59 @@
+//! Compare every recovery algorithm in the crate on one problem instance:
+//! IHT, StoIHT, OMP, CoSaMP, StoGradMP, plus the Fig.-1 oracle-assisted
+//! StoIHT — iterations, wallclock, residual, and recovery error.
+//!
+//!     cargo run --release --example algorithm_comparison
+
+use std::time::Instant;
+
+use astir::algorithms::{cosamp, iht, make_oracle, omp, stogradmp, stoiht, stoiht_with_oracle, GreedyOpts};
+use astir::problem::ProblemSpec;
+use astir::rng::Rng;
+
+fn main() {
+    let spec = ProblemSpec::paper();
+    let mut rng = Rng::seed_from(7);
+    let p = spec.generate(&mut rng);
+    let opts = GreedyOpts::default();
+
+    println!("n={} m={} b={} s={} gamma={} tol={:.0e}\n", spec.n, spec.m, spec.b, spec.s, opts.gamma, opts.tolerance);
+    println!("{:<22} {:>7} {:>10} {:>12} {:>12}", "algorithm", "iters", "wall", "residual", "error");
+
+    let report = |name: &str, f: &mut dyn FnMut() -> astir::algorithms::RunResult| {
+        let t0 = Instant::now();
+        let r = f();
+        let dt = t0.elapsed();
+        println!(
+            "{:<22} {:>7} {:>10.2?} {:>12.3e} {:>12.3e}",
+            name,
+            r.iters,
+            dt,
+            r.residual,
+            p.recovery_error(&r.x)
+        );
+    };
+
+    report("IHT", &mut || iht(&p, &opts));
+    report("StoIHT", &mut || stoiht(&p, &opts, &mut Rng::seed_from(100)));
+    report("OMP", &mut || omp(&p, &opts));
+    report("CoSaMP", &mut || {
+        cosamp(&p, &GreedyOpts { max_iters: 100, ..opts.clone() })
+    });
+    report("StoGradMP", &mut || {
+        stogradmp(&p, &GreedyOpts { max_iters: 200, ..opts.clone() }, &mut Rng::seed_from(101))
+    });
+
+    // Fig.-1 oracle variants: union the estimate step with a support guess
+    // of accuracy alpha.
+    for alpha in [0.5, 1.0] {
+        let oracle = make_oracle(&p, alpha, &mut Rng::seed_from(55));
+        let name = format!("StoIHT oracle α={alpha}");
+        report(&name, &mut || {
+            stoiht_with_oracle(&p, &opts, &mut Rng::seed_from(100), &oracle)
+        });
+    }
+
+    println!("\nNote: CoSaMP/StoGradMP/OMP converge in few (expensive, LS-solve)");
+    println!("iterations; IHT/StoIHT take many cheap gradient steps. The async");
+    println!("runtime (examples/async_speedup.rs) parallelizes the latter.");
+}

@@ -1,0 +1,73 @@
+//! Fig.-2-style sweep on *real threads*: wallclock and steps-to-exit of
+//! asynchronous StoIHT vs core count, under the all-fast and half-slow
+//! schedules — the measured version of what the paper simulates.
+//!
+//!     cargo run --release --example async_speedup [trials]
+
+use astir::algorithms::{stoiht, GreedyOpts};
+use astir::async_runtime::{run_async, AsyncOpts};
+use astir::metrics::stats;
+use astir::problem::ProblemSpec;
+use astir::rng::Rng;
+use astir::sim::SpeedSchedule;
+
+fn main() {
+    let trials: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(5);
+    let spec = ProblemSpec::paper();
+    let hw = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4);
+    println!("hardware threads: {hw}; trials per point: {trials}\n");
+
+    // Sequential baseline.
+    let mut seq_iters = Vec::new();
+    let mut seq_wall = Vec::new();
+    for t in 0..trials {
+        let p = spec.generate(&mut Rng::seed_from(t as u64));
+        let t0 = std::time::Instant::now();
+        let r = stoiht(&p, &GreedyOpts::default(), &mut Rng::seed_from(900 + t as u64));
+        seq_wall.push(t0.elapsed().as_secs_f64());
+        seq_iters.push(r.iters as f64);
+    }
+    println!(
+        "sequential StoIHT: {:.0} iters (mean), {:.1} ms (mean wall)",
+        stats(&seq_iters).mean,
+        1e3 * stats(&seq_wall).mean
+    );
+
+    for (label, schedule) in [
+        ("all-fast", SpeedSchedule::AllFast),
+        ("half-slow(4)", SpeedSchedule::HalfSlow { period: 4 }),
+    ] {
+        println!("\nschedule: {label}");
+        println!("{:>6} {:>12} {:>12} {:>10}", "cores", "iters(win)", "wall-mean", "speedup");
+        for cores in [1usize, 2, 4, 8] {
+            let mut walls = Vec::new();
+            let mut iters = Vec::new();
+            let mut conv = 0;
+            for t in 0..trials {
+                let p = spec.generate(&mut Rng::seed_from(t as u64));
+                let opts = AsyncOpts { schedule: schedule.clone(), ..Default::default() };
+                let out = run_async(&p, cores, &opts, 4000 + t as u64);
+                if out.converged {
+                    conv += 1;
+                    walls.push(out.wall.as_secs_f64());
+                    let win = out.exit_core.unwrap();
+                    iters.push(out.local_iters[win] as f64);
+                }
+            }
+            if walls.is_empty() {
+                println!("{cores:>6} (no converged trials)");
+                continue;
+            }
+            let wall_mean = stats(&walls).mean;
+            println!(
+                "{:>6} {:>12.0} {:>10.1}ms {:>9.2}x  ({conv}/{trials} converged)",
+                cores,
+                stats(&iters).mean,
+                1e3 * wall_mean,
+                stats(&seq_wall).mean / wall_mean
+            );
+        }
+    }
+    println!("\n(speedup = sequential wall / async wall; the winner's iteration");
+    println!("count shows the algorithmic effect, wallclock shows the system one)");
+}

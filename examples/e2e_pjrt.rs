@@ -1,0 +1,99 @@
+//! END-TO-END DRIVER — proves the full three-layer stack composes on a
+//! real workload:
+//!
+//!   Layer 1  Pallas `block_grad` kernel (interpret mode)      [python]
+//!   Layer 2  JAX `stoiht_step` graph, AOT-lowered to HLO text [python]
+//!   bridge   `artifacts/*.hlo.txt` + `.meta` sidecars
+//!   Layer 3  THIS BINARY: Rust coordinator loads the HLO via the PJRT C
+//!            API and runs (a) sequential StoIHT and (b) multi-worker
+//!            asynchronous StoIHT with a lock-free shared tally, where
+//!            every proxy/identify/estimate step executes inside XLA.
+//!
+//! Requires `make artifacts`. Reports the paper's headline metric —
+//! steps-to-exit and wallclock vs cores — plus PJRT-vs-native agreement.
+//!
+//!     cargo run --release --example e2e_pjrt
+
+use std::time::Instant;
+
+use astir::async_runtime::{run_async_with, AsyncOpts, BackendStep};
+use astir::backend::{Backend, NativeBackend, PjrtBackend};
+use astir::problem::ProblemSpec;
+use astir::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // The artifact set ships two shapes; the tiny one keeps this example
+    // fast under interpret-lowered XLA while exercising every layer.
+    // Switch to ProblemSpec::paper() to run the full paper shape.
+    let spec = ProblemSpec { n: 32, m: 16, b: 4, s: 3, ..ProblemSpec::tiny() };
+    let mut rng = Rng::seed_from(99);
+    let problem = spec.generate(&mut rng);
+
+    println!("== layer check: PJRT artifact vs native kernel on one step ==");
+    let mut native = NativeBackend::new();
+    let mut pjrt = PjrtBackend::from_default_dir()?;
+    println!("PJRT platform: {}", pjrt.runtime().platform());
+    let x0: Vec<f64> = (0..spec.n).map(|_| 0.1 * rng.gauss()).collect();
+    let mask = vec![0.0; spec.n];
+    let (nx, ng) = native.stoiht_step(&problem, 0, &x0, 1.0, &mask)?;
+    let (px, pg) = pjrt.stoiht_step(&problem, 0, &x0, 1.0, &mask)?;
+    let max_diff = nx
+        .iter()
+        .zip(&px)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("gamma sets equal: {} | max |Δx| = {max_diff:.2e} (f32 artifact)", ng == pg);
+    assert!(ng == pg && max_diff < 1e-4);
+
+    println!("\n== sequential StoIHT with every step on PJRT ==");
+    let t0 = Instant::now();
+    let mut x = vec![0.0f64; spec.n];
+    let mut iters = 0;
+    let zero_mask = vec![0.0f64; spec.n];
+    let mut solver_rng = Rng::seed_from(5);
+    while iters < 1500 {
+        let block = solver_rng.below(spec.num_blocks());
+        let (xn, _) = pjrt.stoiht_step(&problem, block, &x, 1.0, &zero_mask)?;
+        x = xn;
+        iters += 1;
+        if pjrt.residual_norm(&problem, &x)? < 1e-5 {
+            break;
+        }
+    }
+    println!(
+        "iters={iters} wall={:.1?} residual={:.3e} error={:.3e}",
+        t0.elapsed(),
+        problem.residual_norm(&x),
+        problem.recovery_error(&x)
+    );
+    assert!(problem.recovery_error(&x) < 1e-2);
+
+    println!("\n== asynchronous StoIHT: workers drive PJRT executables ==");
+    println!("{:>6} {:>8} {:>12} {:>12} {:>12}", "cores", "conv", "win-iters", "wall", "error");
+    for cores in [1usize, 2, 4] {
+        let opts = AsyncOpts {
+            tolerance: 1e-5, // f32 artifacts
+            max_local_iters: 1500,
+            ..Default::default()
+        };
+        // Each worker thread constructs its own PJRT runtime (the client is
+        // not Send); the factory runs inside the spawned thread.
+        let out = run_async_with(&problem, cores, &opts, 31 + cores as u64, |p| {
+            let backend = PjrtBackend::from_default_dir().expect("artifacts available");
+            Box::new(BackendStep::new(p, backend))
+        });
+        let win_iters = out
+            .exit_core
+            .map(|w| out.local_iters[w].to_string())
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "{:>6} {:>8} {:>12} {:>12.1?} {:>12.3e}",
+            cores, out.converged, win_iters, out.wall, out.final_error
+        );
+        assert!(out.converged, "PJRT async run must converge");
+    }
+
+    println!("\nAll three layers compose: Pallas kernel -> JAX graph -> HLO text ->");
+    println!("PJRT executable -> Rust async coordinator. Python never ran here.");
+    Ok(())
+}

@@ -1,0 +1,121 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Each artifact ``<name>.hlo.txt`` gets a ``<name>.meta`` sidecar of
+``key = value`` lines that the Rust ``runtime::artifact`` module parses to
+discover shapes without re-deriving them from HLO:
+
+    kind = stoiht_step
+    n = 1000
+    m = 300
+    b = 15
+    s = 20
+    dtype = f32
+    inputs = 5
+    outputs = 2
+
+Usage (from ``python/``):
+
+    python -m compile.aot --out-dir ../artifacts            # default shape set
+    python -m compile.aot --out-dir ../artifacts --n 512 --m 128 --b 8 --s 10
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Default artifact shape set: the paper's evaluation shape and a tiny shape
+# used by fast Rust integration tests.
+DEFAULT_SHAPES = [
+    # (n, m, b, s)
+    (1000, 300, 15, 20),  # paper §IV
+    (32, 16, 4, 3),       # test shape
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, example_args) -> str:
+    return to_hlo_text(fn.lower(*example_args))
+
+
+def write_artifact(out_dir, name, hlo_text, meta):
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(hlo_text)
+    meta_path = os.path.join(out_dir, f"{name}.meta")
+    with open(meta_path, "w") as f:
+        for k, v in meta.items():
+            f.write(f"{k} = {v}\n")
+    return path
+
+
+def build_shape_set(out_dir, n, m, b, s, tiled=False, tile_n=256):
+    """Lower and write the full artifact set for one problem shape."""
+    written = []
+    for name, fn, example_args, meta in model.entry_points(
+        n, m, b, s, tiled=tiled, tile_n=tile_n
+    ):
+        hlo = lower_entry(fn, example_args)
+        meta = dict(meta)
+        meta["dtype"] = "f32"
+        meta["inputs"] = len(example_args)
+        meta["outputs"] = 2 if meta["kind"] == "stoiht_step" else 1
+        meta["tiled"] = int(tiled)
+        path = write_artifact(out_dir, name, hlo, meta)
+        written.append(path)
+        print(f"  wrote {path} ({len(hlo)} chars)")
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="stamp file to touch on success")
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--m", type=int, default=None)
+    ap.add_argument("--b", type=int, default=None)
+    ap.add_argument("--s", type=int, default=None)
+    ap.add_argument("--tiled", action="store_true", help="use the column-tiled kernel")
+    ap.add_argument("--tile-n", type=int, default=256)
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    if args.n is not None:
+        shapes = [(args.n, args.m, args.b, args.s)]
+    else:
+        shapes = DEFAULT_SHAPES
+
+    print(f"jax {jax.__version__} lowering {len(shapes)} shape set(s) -> {out_dir}")
+    for n, m, b, s in shapes:
+        assert m % b == 0, f"block size {b} must divide m={m}"
+        print(f"shape n={n} m={m} b={b} s={s} tiled={args.tiled}")
+        build_shape_set(out_dir, n, m, b, s, tiled=args.tiled, tile_n=args.tile_n)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Export deterministic oracle test vectors for the Rust test suite.
+
+The Rust native backend re-implements the StoIHT step in f64; its unit
+tests load these vectors (plain-text, one value per line) and assert
+agreement with the JAX oracle to f32 precision.  Run by ``make artifacts``.
+
+Format of ``artifacts/testvectors/<case>.txt``::
+
+    # key = value header lines
+    # then one section per tensor:
+    tensor <name> <len>
+    v0
+    v1
+    ...
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+
+from .kernels import ref
+
+F32 = np.float32
+
+
+def _emit(f, name, arr):
+    arr = np.asarray(arr, dtype=np.float64).reshape(-1)
+    f.write(f"tensor {name} {arr.size}\n")
+    for v in arr:
+        f.write(f"{float(v)!r}\n")
+
+
+def export_case(out_dir, case_id, n, m, b, s, seed):
+    rng = np.random.default_rng(seed)
+    M = m // b
+    a = (rng.standard_normal((m, n)) / np.sqrt(m)).astype(F32)
+    x_true = np.zeros(n, F32)
+    supp = np.sort(rng.choice(n, s, replace=False))
+    x_true[supp] = rng.standard_normal(s).astype(F32)
+    y = (a @ x_true).astype(F32)
+    x = rng.standard_normal(n).astype(F32) * 0.1
+    tally = np.zeros(n, F32)
+    tally[np.sort(rng.choice(n, s, replace=False))] = 1.0
+    blk = int(rng.integers(M))
+    ab = a[blk * b : (blk + 1) * b]
+    yb = y[blk * b : (blk + 1) * b]
+    alpha = F32(1.0)
+
+    bvec = np.asarray(ref.block_grad_ref(ab, yb, x, alpha))
+    x_next, gmask = ref.stoiht_step_ref(ab, yb, x, alpha, tally, s)
+    rnorm = float(ref.residual_norm_ref(a, y, x))
+    iht_next = np.asarray(ref.iht_step_ref(a, y, x, F32(0.8), s))
+
+    path = os.path.join(out_dir, f"{case_id}.txt")
+    with open(path, "w") as f:
+        f.write(f"# n = {n}\n# m = {m}\n# b = {b}\n# s = {s}\n")
+        f.write(f"# block = {blk}\n# alpha = 1.0\n# gamma_iht = 0.8\n")
+        f.write(f"# residual_norm = {float(rnorm)!r}\n")
+        _emit(f, "a", a)            # row-major (m, n)
+        _emit(f, "y", y)
+        _emit(f, "x", x)
+        _emit(f, "x_true", x_true)
+        _emit(f, "tally_mask", tally)
+        _emit(f, "proxy", bvec)
+        _emit(f, "x_next", np.asarray(x_next))
+        _emit(f, "gamma_mask", np.asarray(gmask))
+        _emit(f, "iht_next", iht_next)
+    return path
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "../artifacts/testvectors"
+    os.makedirs(out_dir, exist_ok=True)
+    cases = [
+        ("case_small", 32, 16, 4, 3, 101),
+        ("case_mid", 128, 64, 8, 6, 202),
+        ("case_paper", 1000, 300, 15, 20, 303),
+    ]
+    for cid, n, m, b, s, seed in cases:
+        p = export_case(out_dir, cid, n, m, b, s, seed)
+        print(f"  wrote {p}")
+
+
+if __name__ == "__main__":
+    main()

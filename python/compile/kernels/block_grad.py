@@ -1,0 +1,153 @@
+"""Layer-1 Pallas kernels for the StoIHT proxy hot-spot.
+
+The proxy step ``b = x + alpha * A_b^T (y_b - A_b x)`` dominates the
+per-iteration cost of (a)synchronous StoIHT: two dense matvecs against a
+``b x n`` block of the measurement matrix.  Two kernels are provided:
+
+* :func:`block_grad` — single-invocation fused kernel.  For the paper shape
+  (b=15, n=1000, f32) the whole block is 60 KB, far below VMEM (~16 MB on a
+  TPU core), so the natural TPU schedule keeps ``A_b`` resident and fuses
+  residual + transpose-matvec + axpy in one pass.  This is the kernel the
+  AOT artifacts embed.
+
+* :func:`block_grad_tiled` — column-tiled variant for ``n`` too large for a
+  single VMEM block.  The grid walks ``n`` in ``tile_n``-wide column tiles;
+  a VMEM scratch accumulates the partial residual across tiles (phase 1),
+  and the final tile triggers phase 2 which replays the column tiles for
+  the ``A^T r`` update.  This expresses the HBM<->VMEM schedule that a CUDA
+  implementation would phrase with threadblocks + shared memory, using
+  BlockSpec index maps instead (see DESIGN.md "Hardware adaptation").
+
+Both are lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and interpret-mode lowers to plain HLO that any
+backend (including the Rust-side PJRT CPU client) executes.  Correctness is
+pinned to :mod:`ref` by ``python/tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# Fused single-block kernel (the default for the paper shape).
+# ---------------------------------------------------------------------------
+
+
+def _block_grad_kernel(a_ref, y_ref, x_ref, alpha_ref, o_ref):
+    """Fused proxy kernel body.
+
+    VMEM residency: A_b (b x n), x (n), y (b), all read once.
+    Compute: one (b x n) @ (n) matvec, one (n x b) @ (b) matvec, one axpy.
+    The two matvecs hit the MXU as (1, b) x (b, n) shaped contractions after
+    jnp promotes; elementwise runs on the VPU.
+    """
+    a = a_ref[...]
+    x = x_ref[...]
+    alpha = alpha_ref[0]
+    r = y_ref[...] - a @ x
+    o_ref[...] = x + alpha * (r @ a)  # r @ A == A^T r for 1-D r
+
+
+def block_grad(a_blk, y_blk, x, alpha, *, interpret=True):
+    """Proxy step ``x + alpha A_b^T (y_b - A_b x)`` as a fused Pallas call.
+
+    Args:
+      a_blk: ``(b, n)`` measurement block.
+      y_blk: ``(b,)`` observations for the block.
+      x: ``(n,)`` iterate.
+      alpha: scalar step weight ``gamma / (M p(i))``.
+      interpret: must stay True for CPU-PJRT execution (see module docs).
+
+    Returns:
+      ``(n,)`` proxy vector.
+    """
+    (_, n) = a_blk.shape
+    alpha_arr = jnp.asarray(alpha, a_blk.dtype).reshape((1,))
+    return pl.pallas_call(
+        _block_grad_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), a_blk.dtype),
+        interpret=interpret,
+    )(a_blk, y_blk, x, alpha_arr)
+
+
+# ---------------------------------------------------------------------------
+# Column-tiled kernel for large n (two-phase residual/update schedule).
+# ---------------------------------------------------------------------------
+
+
+def _block_grad_tiled_kernel(a_ref, y_ref, x_ref, alpha_ref, o_ref, r_ref):
+    """Grid body: program (phase, j) handles column tile j of phase `phase`.
+
+    Phase 0 (residual accumulation): walk column tiles, accumulating
+        r -= A[:, tile_j] @ x[tile_j]        (init: r = y at j == 0)
+    into ``r_ref``, a ``(b,)`` accumulator that is an *output* of the call —
+    output blocks persist across grid steps, giving us a VMEM-resident
+    accumulator without version-specific scratch APIs.
+
+    Phase 1 (update): replay the column tiles; with ``r`` now complete emit
+        o[tile_j] = x[tile_j] + alpha * A[:, tile_j]^T r.
+
+    On TPU the grid executes sequentially per core, so the phase-0 -> phase-1
+    dependency through ``r_ref`` is respected; interpret mode preserves the
+    same ordering.
+    """
+    phase = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(phase == 0)
+    def _phase1():
+        @pl.when(j == 0)
+        def _init():
+            r_ref[...] = y_ref[...]
+
+        r_ref[...] = r_ref[...] - a_ref[...] @ x_ref[...]
+
+    @pl.when(phase == 1)
+    def _phase2():
+        o_ref[...] = x_ref[...] + alpha_ref[0] * (r_ref[...] @ a_ref[...])
+
+
+def block_grad_tiled(a_blk, y_blk, x, alpha, *, tile_n=256, interpret=True):
+    """Column-tiled proxy step for ``n`` beyond single-block VMEM capacity.
+
+    The grid is ``(2, n_tiles)``: axis 0 is the residual/update phase (major,
+    so every residual tile completes before any update tile runs under the
+    row-major grid order), axis 1 walks column tiles.  ``A_b`` column tiles are streamed twice (once
+    per phase) while the ``b``-long residual stays VMEM-resident — the same
+    traffic pattern as a shared-memory CUDA reduction + broadcast, expressed
+    with BlockSpec index maps instead of threadblocks.
+
+    Requires ``n % tile_n == 0`` (callers pad; the AOT path only emits this
+    variant for shapes where it divides evenly).
+    """
+    b, n = a_blk.shape
+    if n % tile_n:
+        raise ValueError(f"tile_n={tile_n} must divide n={n}")
+    n_tiles = n // tile_n
+    alpha_arr = jnp.asarray(alpha, a_blk.dtype).reshape((1,))
+
+    out, _r = pl.pallas_call(
+        _block_grad_tiled_kernel,
+        grid=(2, n_tiles),  # phase-major: all residual tiles before any update tile
+        in_specs=[
+            pl.BlockSpec((b, tile_n), lambda p, j: (0, j)),   # A_b column tile
+            pl.BlockSpec((b,), lambda p, j: (0,)),            # y_b (whole)
+            pl.BlockSpec((tile_n,), lambda p, j: (j,)),       # x tile
+            pl.BlockSpec((1,), lambda p, j: (0,)),            # alpha
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_n,), lambda p, j: (j,)),       # o tile
+            pl.BlockSpec((b,), lambda p, j: (0,)),            # residual accumulator
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), a_blk.dtype),
+            jax.ShapeDtypeStruct((b,), a_blk.dtype),
+        ],
+        interpret=interpret,
+    )(a_blk, y_blk, x, alpha_arr)
+    return out

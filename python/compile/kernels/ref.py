@@ -1,0 +1,90 @@
+"""Pure-jnp reference oracle for every Layer-1 kernel and Layer-2 graph.
+
+This module is the single source of numerical truth: the Pallas kernels in
+``block_grad.py`` / ``threshold.py`` and the lowered HLO artifacts are all
+checked against these functions by ``python/tests``.  The Rust native
+backend is in turn checked against vectors exported from here (see
+``tests/test_vectors.py`` which writes ``artifacts/testvectors/*.txt``).
+
+All functions are shape-polymorphic and dtype-preserving so hypothesis can
+sweep them.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def block_grad_ref(a_blk, y_blk, x, alpha):
+    """Proxy step of StoIHT on one measurement block (paper Alg. 1 "proxy").
+
+    Computes ``b = x + alpha * A_b^T (y_b - A_b x)`` where ``alpha`` folds
+    the paper's step weight ``gamma / (M p(i))``.
+
+    Args:
+      a_blk: ``(b, n)`` block of the measurement matrix.
+      y_blk: ``(b,)`` corresponding observations.
+      x: ``(n,)`` current iterate.
+      alpha: scalar step weight.
+
+    Returns:
+      ``(n,)`` proxy vector ``b``.
+    """
+    r = y_blk - a_blk @ x
+    return x + alpha * (a_blk.T @ r)
+
+
+def residual_ref(a, y, x):
+    """Full residual vector ``y - A x`` (used for halting)."""
+    return y - a @ x
+
+
+def residual_norm_ref(a, y, x):
+    """Euclidean halting statistic ``||y - A x||_2`` (paper exit criterion)."""
+    r = residual_ref(a, y, x)
+    return jnp.sqrt(jnp.sum(r * r))
+
+
+def top_s_mask_ref(v, s):
+    """0/1 mask of the ``s`` largest-magnitude entries of ``v``.
+
+    Ties are broken toward the lower index, matching ``jax.lax.top_k`` and
+    the Rust ``support::top_s`` implementation.
+    """
+    n = v.shape[0]
+    _, idx = lax.top_k(jnp.abs(v), s)
+    return jnp.zeros((n,), v.dtype).at[idx].set(jnp.ones((s,), v.dtype))
+
+
+def hard_threshold_ref(v, s):
+    """IHT thresholding operator ``H_s``: keep the top-s entries, zero rest."""
+    return v * top_s_mask_ref(v, s)
+
+
+def stoiht_step_ref(a_blk, y_blk, x, alpha, tally_mask, s):
+    """One full asynchronous-StoIHT estimate step (paper Alg. 2, lines 2-5).
+
+    proxy:    ``b = x + alpha A_b^T (y_b - A_b x)``
+    identify: ``gamma_mask = top_s_mask(|b|)``          (Gamma^t)
+    union:    ``u = gamma_mask OR tally_mask``          (Gamma^t ∪ T~^t)
+    estimate: ``x_next = b|_u``
+
+    ``tally_mask`` is the 0/1 indicator of ``supp_s(phi)`` computed by the
+    Rust coordinator from the shared tally; passing a zero mask recovers the
+    *synchronous* StoIHT estimate step (Alg. 1) exactly.
+
+    Returns ``(x_next, gamma_mask)`` — the coordinator needs ``Gamma^t`` to
+    cast its tally votes.
+    """
+    b = block_grad_ref(a_blk, y_blk, x, alpha)
+    gamma_mask = top_s_mask_ref(b, s)
+    union = jnp.maximum(gamma_mask, tally_mask)
+    return b * union, gamma_mask
+
+
+def iht_step_ref(a, y, x, gamma, s):
+    """One classical IHT iteration (paper eq. (2)):
+    ``x_{t+1} = H_s(x_t + gamma * A^T (y - A x_t))``."""
+    g = x + gamma * (a.T @ (y - a @ x))
+    return hard_threshold_ref(g, s)

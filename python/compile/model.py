@@ -1,0 +1,146 @@
+"""Layer-2 JAX compute graphs for (asynchronous) StoIHT.
+
+These are the functions the Rust coordinator executes on its solve path via
+AOT-lowered HLO artifacts (see :mod:`compile.aot`).  Each graph calls the
+Layer-1 Pallas kernel for its hot-spot and keeps the support logic (top-k,
+union, projection) in plain XLA ops so the whole step lowers to a single
+fused module.
+
+Graph inventory (shapes are static at lowering time, one artifact per shape):
+
+* :func:`stoiht_step` — one full Alg.-2 iteration body: proxy + identify +
+  union-with-tally + estimate.  Inputs ``(A_b, y_b, x, alpha, tally_mask)``,
+  outputs ``(x_next, gamma_mask)``.  With ``tally_mask = 0`` this is exactly
+  the synchronous Alg.-1 step.
+* :func:`residual_norm` — halting statistic ``||y - A x||_2`` over the full
+  measurement matrix.
+* :func:`iht_step` — classical IHT iteration (paper eq. (2)), the
+  sequential baseline, AOT-compiled so the Rust side can run IHT through
+  PJRT too.
+
+The paper's per-core weight ``alpha = gamma / (M p(i))`` is a runtime input
+(scalar tensor) so one artifact serves any sampling distribution.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.block_grad import block_grad, block_grad_tiled
+
+
+def _top_s_mask(v, s):
+    """0/1 mask (dtype of ``v``) of the s largest-|.| entries of ``v``.
+
+    Deliberately avoids ``lax.top_k``: jax >= 0.6 lowers it to the ``topk``
+    HLO instruction with a ``largest=`` attribute that the xla_extension
+    0.5.1 text parser (our AOT interchange target) rejects. Instead we sort
+    the magnitudes (plain HLO ``sort``), read the s-th largest as a
+    threshold, and build the mask with a cumulative count so that ties at
+    the threshold are broken toward the **lower index** — bit-identical to
+    ``lax.top_k`` and to the Rust `support::top_s`.
+    """
+    n = v.shape[0]
+    a = jnp.abs(v)
+    sorted_a = lax.sort(a, dimension=0)  # ascending
+    thr = sorted_a[n - s]  # s-th largest magnitude
+    gt = (a > thr).astype(v.dtype)
+    need = jnp.asarray(s, v.dtype) - jnp.sum(gt)  # ties to admit
+    eq = (a == thr).astype(v.dtype)
+    rank_among_eq = jnp.cumsum(eq)  # 1-based, in index order
+    return gt + eq * (rank_among_eq <= need).astype(v.dtype)
+
+
+def stoiht_step(a_blk, y_blk, x, alpha, tally_mask, *, s, tiled=False, tile_n=256):
+    """One asynchronous-StoIHT iteration body (paper Alg. 2 lines 2–5).
+
+    proxy:     ``b = x + alpha * A_b^T (y_b - A_b x)``   (Pallas kernel)
+    identify:  ``gamma = supp_s(b)``                      (lax.top_k)
+    estimate:  ``x_next = b|_{gamma ∪ supp(tally_mask)}``
+
+    Args:
+      a_blk: ``(b, n)`` measurement block selected by the coordinator.
+      y_blk: ``(b,)`` observations.
+      x: ``(n,)`` the core's local iterate.
+      alpha: scalar ``gamma_step / (M p(i))``.
+      tally_mask: ``(n,)`` 0/1 indicator of ``supp_s(phi)`` (zeros ⇒ Alg. 1).
+      s: static sparsity level (baked into the artifact).
+      tiled: lower the column-tiled kernel instead of the fused one.
+
+    Returns:
+      ``(x_next, gamma_mask)`` — the coordinator casts tally votes on the
+      nonzeros of ``gamma_mask``.
+    """
+    kern = block_grad_tiled if tiled else block_grad
+    kw = {"tile_n": tile_n} if tiled else {}
+    b = kern(a_blk, y_blk, x, alpha, **kw)
+    gamma_mask = _top_s_mask(b, s)
+    union = jnp.maximum(gamma_mask, tally_mask)
+    return b * union, gamma_mask
+
+
+def residual_norm(a, y, x):
+    """Halting statistic ``||y - A x||_2`` (full measurement matrix)."""
+    r = y - a @ x
+    return jnp.sqrt(jnp.sum(r * r))
+
+
+def iht_step(a, y, x, gamma, *, s):
+    """Classical IHT iteration (paper eq. (2)): ``H_s(x + gamma A^T(y-Ax))``.
+
+    Uses the same Pallas proxy kernel with the full matrix as one "block",
+    so IHT and StoIHT share the Layer-1 hot-spot implementation.
+    """
+    g = block_grad(a, y, x, gamma)
+    return g * _top_s_mask(g, s)
+
+
+# ---------------------------------------------------------------------------
+# Lowering entry points — one (name, fn, example_args) triple per artifact.
+# ---------------------------------------------------------------------------
+
+
+def entry_points(n, m, b, s, dtype=jnp.float32, tiled=False, tile_n=256):
+    """The artifact set for one problem shape.
+
+    Returns a list of ``(name, jitted_fn, example_args)`` with static shapes
+    baked in; :mod:`compile.aot` lowers each to HLO text.
+    """
+    f = dtype
+    vec = lambda k: jax.ShapeDtypeStruct((k,), f)  # noqa: E731
+    mat = lambda r, c: jax.ShapeDtypeStruct((r, c), f)  # noqa: E731
+    scal = jax.ShapeDtypeStruct((), f)
+
+    def step_fn(a_blk, y_blk, x, alpha, tally_mask):
+        return stoiht_step(
+            a_blk, y_blk, x, alpha, tally_mask, s=s, tiled=tiled, tile_n=tile_n
+        )
+
+    def iht_fn(a, y, x, gamma):
+        return iht_step(a, y, x, gamma, s=s)
+
+    def resid_fn(a, y, x):
+        return (residual_norm(a, y, x),)
+
+    return [
+        (
+            f"stoiht_step_n{n}_b{b}_s{s}",
+            jax.jit(step_fn),
+            (mat(b, n), vec(b), vec(n), scal, vec(n)),
+            {"kind": "stoiht_step", "n": n, "m": m, "b": b, "s": s},
+        ),
+        (
+            f"iht_step_n{n}_m{m}_s{s}",
+            jax.jit(iht_fn),
+            (mat(m, n), vec(m), vec(n), scal),
+            {"kind": "iht_step", "n": n, "m": m, "b": m, "s": s},
+        ),
+        (
+            f"residual_n{n}_m{m}",
+            jax.jit(resid_fn),
+            (mat(m, n), vec(m), vec(n)),
+            {"kind": "residual", "n": n, "m": m, "b": m, "s": s},
+        ),
+    ]

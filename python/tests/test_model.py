@@ -1,0 +1,134 @@
+"""Layer-2 correctness: full step graphs vs the oracle, and support-logic
+invariants (top-s cardinality, union semantics, Alg.1/Alg.2 equivalence at
+zero tally)."""
+
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+F32 = np.float32
+
+
+def _problem(rng, b, n):
+    a = (rng.standard_normal((b, n)) / np.sqrt(b)).astype(F32)
+    y = rng.standard_normal((b,)).astype(F32)
+    x = rng.standard_normal((n,)).astype(F32)
+    return a, y, x
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b=st.integers(1, 12),
+    n=st.integers(4, 120),
+    s_frac=st.floats(0.05, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_stoiht_step_matches_ref(b, n, s_frac, seed):
+    rng = np.random.default_rng(seed)
+    s = max(1, int(n * s_frac))
+    a, y, x = _problem(rng, b, n)
+    tally = (rng.random(n) < 0.1).astype(F32)
+    got_x, got_g = model.stoiht_step(a, y, x, F32(0.9), tally, s=s)
+    want_x, want_g = ref.stoiht_step_ref(a, y, x, F32(0.9), tally, s)
+    np.testing.assert_allclose(np.asarray(got_x), np.asarray(want_x), rtol=3e-5, atol=3e-5)
+    np.testing.assert_array_equal(np.asarray(got_g), np.asarray(want_g))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), s=st.integers(1, 20))
+def test_gamma_mask_cardinality(seed, s):
+    rng = np.random.default_rng(seed)
+    a, y, x = _problem(rng, 8, 64)
+    _, g = model.stoiht_step(a, y, x, F32(1.0), np.zeros(64, F32), s=s)
+    g = np.asarray(g)
+    assert set(np.unique(g)) <= {0.0, 1.0}
+    assert int(g.sum()) == s
+
+
+def test_zero_tally_equals_alg1():
+    """Alg. 2 with an empty tally estimate reduces exactly to Alg. 1."""
+    rng = np.random.default_rng(7)
+    a, y, x = _problem(rng, 6, 50)
+    s = 5
+    x2, g = model.stoiht_step(a, y, x, F32(1.0), np.zeros(50, F32), s=s)
+    b = ref.block_grad_ref(a, y, x, F32(1.0))
+    alg1 = ref.hard_threshold_ref(b, s)
+    np.testing.assert_allclose(np.asarray(x2), np.asarray(alg1), rtol=1e-5, atol=1e-5)
+    # With zero tally the support of x_next is exactly Gamma^t.
+    assert int(np.count_nonzero(np.asarray(x2))) <= s
+
+
+def test_estimate_support_is_union():
+    """supp(x_next) ⊆ Gamma^t ∪ supp(tally_mask), and covers tally entries
+    where b is nonzero."""
+    rng = np.random.default_rng(11)
+    a, y, x = _problem(rng, 6, 50)
+    s = 5
+    tally = np.zeros(50, F32)
+    tally_idx = [3, 17, 42]
+    tally[tally_idx] = 1.0
+    x2, g = model.stoiht_step(a, y, x, F32(1.0), tally, s=s)
+    x2, g = np.asarray(x2), np.asarray(g)
+    union = np.maximum(g, tally)
+    assert np.all((x2 != 0) <= (union > 0))
+    b = np.asarray(ref.block_grad_ref(a, y, x, F32(1.0)))
+    for i in tally_idx:
+        np.testing.assert_allclose(x2[i], b[i], rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_residual_norm_matches_ref(seed):
+    rng = np.random.default_rng(seed)
+    m, n = 24, 60
+    a = rng.standard_normal((m, n)).astype(F32)
+    y = rng.standard_normal((m,)).astype(F32)
+    x = rng.standard_normal((n,)).astype(F32)
+    got = float(model.residual_norm(a, y, x))
+    want = float(ref.residual_norm_ref(a, y, x))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), s=st.integers(1, 10))
+def test_iht_step_matches_ref(seed, s):
+    rng = np.random.default_rng(seed)
+    m, n = 20, 64
+    a = (rng.standard_normal((m, n)) / np.sqrt(m)).astype(F32)
+    y = rng.standard_normal((m,)).astype(F32)
+    x = rng.standard_normal((n,)).astype(F32)
+    got = np.asarray(model.iht_step(a, y, x, F32(0.8), s=s))
+    want = np.asarray(ref.iht_step_ref(a, y, x, F32(0.8), s))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+    assert int(np.count_nonzero(got)) <= s
+
+
+def test_stoiht_converges_on_easy_problem():
+    """Pure-oracle sanity: Alg. 1 solves an easy compressed-sensing instance.
+
+    This pins the *algorithm semantics* (step weight gamma/(M p), uniform
+    block sampling, top-s projection) that the Rust port must reproduce.
+    """
+    rng = np.random.default_rng(42)
+    n, m, b, s = 128, 64, 8, 4
+    M = m // b
+    a = (rng.standard_normal((m, n)) / np.sqrt(m)).astype(F32)
+    xt = np.zeros(n, F32)
+    supp = rng.choice(n, s, replace=False)
+    xt[supp] = rng.standard_normal(s).astype(F32)
+    y = a @ xt
+    x = np.zeros(n, F32)
+    for t in range(400):
+        i = rng.integers(M)
+        ab, yb = a[i * b : (i + 1) * b], y[i * b : (i + 1) * b]
+        bvec = ref.block_grad_ref(ab, yb, x, F32(1.0))  # gamma/(M p) = 1*M/M
+        x = np.asarray(ref.hard_threshold_ref(bvec, s))
+        if np.linalg.norm(y - a @ x) < 1e-6:
+            break
+    assert np.linalg.norm(x - xt) < 1e-4, np.linalg.norm(x - xt)

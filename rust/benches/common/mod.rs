@@ -1,0 +1,46 @@
+//! Shared plumbing for the `harness = false` bench binaries.
+//!
+//! Every figure bench accepts its Monte-Carlo budget from the environment
+//! so `cargo bench` stays tractable by default while the paper-fidelity
+//! run is one env var away:
+//!
+//! ```text
+//! cargo bench                              # quick: ASTIR defaults below
+//! ASTIR_BENCH_TRIALS=500 cargo bench       # the paper's 500 trials
+//! ```
+
+#![allow(dead_code)] // each bench binary uses a subset of these helpers
+
+use astir::config::ExperimentConfig;
+
+/// Trial budget: `$ASTIR_BENCH_TRIALS` (default `default_trials`).
+pub fn bench_trials(default_trials: usize) -> usize {
+    std::env::var("ASTIR_BENCH_TRIALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default_trials)
+}
+
+/// The paper's experiment configuration with the bench trial budget.
+pub fn paper_cfg(default_trials: usize) -> ExperimentConfig {
+    ExperimentConfig { trials: bench_trials(default_trials), ..Default::default() }
+}
+
+/// Standard bench banner.
+pub fn banner(what: &str, cfg: &ExperimentConfig) {
+    println!("\n################################################################");
+    println!("# {what}");
+    println!(
+        "# n={} m={} b={} s={} gamma={} tol={:.0e} trials={} threads={}",
+        cfg.problem.n,
+        cfg.problem.m,
+        cfg.problem.b,
+        cfg.problem.s,
+        cfg.gamma,
+        cfg.tolerance,
+        cfg.trials,
+        cfg.trial_threads
+    );
+    println!("# (set ASTIR_BENCH_TRIALS=500 for the paper's full budget)");
+    println!("################################################################");
+}

@@ -1,0 +1,175 @@
+//! PERF — hot-path microbenches (`cargo bench --bench hot_path`).
+//!
+//! Measures the per-iteration cost centers of the whole stack and reports
+//! achieved memory bandwidth against a STREAM-like roofline measured in
+//! the same process:
+//!
+//! * native proxy step (the Layer-1 twin): b=15, n=1000 fused kernel
+//! * gemv / gemv_t primitives
+//! * top-s quickselect and tally ops (vote + estimate)
+//! * full StoIHT iteration (proxy + identify + estimate + sparse exit check)
+//! * PJRT stoiht_step executable (artifact path), when artifacts exist
+//! * atomic tally contention: 8 threads hammering commit()
+
+mod common;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use astir::backend::{Backend, PjrtBackend};
+use astir::bench_harness::{bench_header, human_time, quick_bench};
+use astir::linalg::{dot, Mat};
+use astir::problem::ProblemSpec;
+use astir::rng::Rng;
+use astir::support::{top_s_into, union};
+use astir::tally::{AtomicTally, TallyWeighting};
+
+fn main() {
+    let spec = ProblemSpec::paper();
+    let mut rng = Rng::seed_from(1);
+    let p = spec.generate(&mut rng);
+    let x: Vec<f64> = (0..spec.n).map(|_| rng.gauss() * 0.1).collect();
+
+    bench_header("memory roofline (in-process STREAM-like)");
+    // Triad a[i] = b[i] + s*c[i] over 8 MB working set.
+    let nn = 1 << 20;
+    let bsrc: Vec<f64> = (0..nn).map(|i| i as f64).collect();
+    let csrc: Vec<f64> = (0..nn).map(|i| (i * 7) as f64).collect();
+    let mut asink = vec![0.0f64; nn];
+    let triad = quick_bench("triad 1M f64 (24 MB traffic)", || {
+        for i in 0..nn {
+            asink[i] = bsrc[i] + 0.5 * csrc[i];
+        }
+        std::hint::black_box(&asink);
+    });
+    let bw = 24e6 / triad.time.mean / 1e9; // GB/s (3 streams x 8 B x 1M)
+    println!("  => sustainable bandwidth ≈ {bw:.1} GB/s");
+
+    bench_header("linalg primitives (paper shape)");
+    let blk_rows = spec.b;
+    let a_blk = Mat::<f64>::from_fn(blk_rows, spec.n, |i, j| ((i * spec.n + j) as f64 * 0.37).sin());
+    let yv: Vec<f64> = (0..blk_rows).map(|i| i as f64 * 0.1).collect();
+    let mut scratch = vec![0.0; blk_rows];
+    let mut out = vec![0.0; spec.n];
+    quick_bench("dot n=1000", || {
+        std::hint::black_box(dot(&x, &out));
+    });
+    quick_bench("gemv 15x1000", || {
+        a_blk.as_block().gemv_into(&x, &mut scratch);
+        std::hint::black_box(&scratch);
+    });
+    let proxy = quick_bench("proxy_step 15x1000 fused", || {
+        a_blk.as_block().proxy_step_into(&yv, &x, 1.0, &mut scratch, &mut out);
+        std::hint::black_box(&out);
+    });
+    // Proxy traffic: A streamed twice (2 * 15k * 8 B) + vectors.
+    let traffic = (2 * blk_rows * spec.n + 4 * spec.n + 2 * blk_rows) as f64 * 8.0;
+    println!(
+        "  => proxy streams {:.0} KB/iter at {:.1} GB/s ({:.0}% of triad roofline)",
+        traffic / 1e3,
+        traffic / proxy.time.mean / 1e9,
+        100.0 * (traffic / proxy.time.mean / 1e9) / bw
+    );
+
+    bench_header("support + tally ops");
+    let v: Vec<f64> = (0..spec.n).map(|i| ((i * 31 % 97) as f64) - 48.0).collect();
+    let mut idx_scratch = Vec::new();
+    let mut sel = vec![0usize; spec.s];
+    quick_bench("top_s quickselect n=1000 s=20", || {
+        top_s_into(&v, spec.s, &mut idx_scratch, &mut sel);
+        std::hint::black_box(&sel);
+    });
+    let tally = AtomicTally::new(spec.n, TallyWeighting::Progress);
+    let gamma: Vec<usize> = (0..spec.s).map(|k| k * 37 % spec.n).collect();
+    let mut sorted_gamma = gamma.clone();
+    sorted_gamma.sort_unstable();
+    quick_bench("tally commit (2s atomic RMWs)", || {
+        tally.commit(&sorted_gamma, &sorted_gamma, 7);
+    });
+    let mut tally_scratch = Vec::new();
+    quick_bench("tally estimate (snapshot + top-s)", || {
+        std::hint::black_box(tally.estimate(spec.s, &mut tally_scratch));
+    });
+
+    bench_header("full StoIHT iteration (native)");
+    let mut kernel = astir::algorithms::StoihtKernel::new(&p, 1.0);
+    let mut xi = vec![0.0f64; spec.n];
+    let mut block_rng = Rng::seed_from(3);
+    let est: Vec<usize> = (0..spec.s).map(|k| k * 17 % spec.n).collect();
+    let mut est_sorted = est.clone();
+    est_sorted.sort_unstable();
+    est_sorted.dedup();
+    quick_bench("kernel.step + sparse exit check", || {
+        let b = kernel.sample_block(&mut block_rng);
+        let gamma = kernel.step(&mut xi, b, Some(&est_sorted)).to_vec();
+        let supp = union(&gamma, &est_sorted);
+        std::hint::black_box(p.residual_norm_sparse(&xi, &supp));
+    });
+    quick_bench("dense residual check (m x n gemv)", || {
+        std::hint::black_box(p.residual_norm(&xi));
+    });
+
+    bench_header("atomic tally under contention (8 threads)");
+    let shared = Arc::new(AtomicTally::new(spec.n, TallyWeighting::Progress));
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut handles = Vec::new();
+    for w in 0..7 {
+        let shared = Arc::clone(&shared);
+        let stop = Arc::clone(&stop);
+        handles.push(std::thread::spawn(move || {
+            let mut r = Rng::seed_from(w);
+            let mut prev: Vec<usize> = Vec::new();
+            let mut t = 1u64;
+            while !stop.load(Ordering::Relaxed) {
+                let mut g = r.subset(1000, 20);
+                g.sort_unstable();
+                shared.commit(&g, &prev, t);
+                prev = g;
+                t += 1;
+            }
+        }));
+    }
+    let res = quick_bench("tally commit w/ 7 writer threads", || {
+        shared.commit(&sorted_gamma, &sorted_gamma, 9);
+    });
+    stop.store(true, Ordering::Relaxed);
+    for h in handles {
+        h.join().unwrap();
+    }
+    println!("  => contended commit {}", human_time(res.time.mean));
+
+    bench_header("PJRT artifact path (needs `make artifacts`)");
+    match PjrtBackend::from_default_dir() {
+        Ok(mut be) => {
+            let tiny = ProblemSpec::tiny().generate(&mut Rng::seed_from(2));
+            let xt = vec![0.0f64; tiny.spec.n];
+            let mask = vec![0.0f64; tiny.spec.n];
+            // warm the executable cache outside the timer
+            let _ = be.stoiht_step(&tiny, 0, &xt, 1.0, &mask).unwrap();
+            let r = astir::bench_harness::bench(
+                "pjrt stoiht_step n=32 b=4 (marshal+execute)",
+                Duration::from_millis(200),
+                Duration::from_secs(1),
+                || {
+                    std::hint::black_box(be.stoiht_step(&tiny, 0, &xt, 1.0, &mask).unwrap());
+                },
+            );
+            println!("{}", r.summary());
+            let paper = spec.generate(&mut Rng::seed_from(3));
+            let xp = vec![0.0f64; spec.n];
+            let maskp = vec![0.0f64; spec.n];
+            let _ = be.stoiht_step(&paper, 0, &xp, 1.0, &maskp).unwrap();
+            let r = astir::bench_harness::bench(
+                "pjrt stoiht_step n=1000 b=15 (marshal+execute)",
+                Duration::from_millis(200),
+                Duration::from_secs(1),
+                || {
+                    std::hint::black_box(be.stoiht_step(&paper, 0, &xp, 1.0, &maskp).unwrap());
+                },
+            );
+            println!("{}", r.summary());
+        }
+        Err(e) => println!("skipped: {e}"),
+    }
+}

@@ -1,0 +1,114 @@
+//! CoSaMP (Needell & Tropp 2009): per iteration, merge the top-`2s` proxy
+//! coordinates with the current support, least-squares re-fit on the merged
+//! set, prune to the top `s`.
+
+use super::{GreedyOpts, RunResult};
+use crate::linalg::{lstsq, nrm2};
+use crate::metrics::Trace;
+use crate::problem::Problem;
+use crate::support::{support_of, top_s, union};
+
+/// Run CoSaMP. Uses `opts.tolerance` / `max_iters` for halting (CoSaMP
+/// iteration counts are small — tens, not the paper's 1500).
+pub fn cosamp(problem: &Problem, opts: &GreedyOpts) -> RunResult {
+    let spec = &problem.spec;
+    let a = &problem.a;
+    let mut x = vec![0.0f64; spec.n];
+    let mut r = problem.y.clone();
+    let mut error_trace = Trace::new();
+    let mut resid_trace = Trace::new();
+    let mut converged = nrm2(&r) < opts.tolerance;
+    let mut iters = 0;
+
+    while !converged && iters < opts.max_iters {
+        // proxy = A^T r; identify top 2s.
+        let proxy = a.gemv_t(&r);
+        let omega = top_s(&proxy, 2 * spec.s);
+        // merge with the current support.
+        let merged = union(&omega, &support_of(&x));
+        // least squares on the merged support.
+        let sub = a.select_cols(&merged);
+        let z = lstsq(&sub, &problem.y);
+        // prune: keep the top-s of the merged-coefficient vector.
+        let keep = top_s(&z, spec.s);
+        x.fill(0.0);
+        for &k in &keep {
+            x[merged[k]] = z[k];
+        }
+        // residual update.
+        let ax = a.gemv(&x);
+        for i in 0..spec.m {
+            r[i] = problem.y[i] - ax[i];
+        }
+        iters += 1;
+        if opts.record_error {
+            error_trace.push(problem.recovery_error(&x));
+        }
+        let rn = nrm2(&r);
+        if opts.record_resid {
+            resid_trace.push(rn);
+        }
+        converged = rn < opts.tolerance;
+    }
+
+    let residual = problem.residual_norm(&x);
+    RunResult { x, iters, converged, residual, error_trace, resid_trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problem::ProblemSpec;
+    use crate::rng::Rng;
+    use crate::support::support_of;
+
+    fn easy(seed: u64) -> Problem {
+        ProblemSpec { n: 128, m: 64, b: 8, s: 4, ..ProblemSpec::tiny() }
+            .generate(&mut Rng::seed_from(seed))
+    }
+
+    #[test]
+    fn exact_recovery_noiseless() {
+        for seed in 1..6u64 {
+            let p = easy(seed);
+            let r = cosamp(&p, &GreedyOpts { max_iters: 50, ..Default::default() });
+            assert!(r.converged, "seed {seed}: residual {}", r.residual);
+            assert!(p.recovery_error(&r.x) < 1e-7, "seed {seed}");
+            assert_eq!(support_of(&r.x), p.support);
+        }
+    }
+
+    #[test]
+    fn converges_in_few_iterations() {
+        let p = easy(6);
+        let r = cosamp(&p, &GreedyOpts { max_iters: 50, ..Default::default() });
+        assert!(r.iters < 20, "iters {}", r.iters);
+    }
+
+    #[test]
+    fn iterate_stays_s_sparse() {
+        let p = easy(7);
+        let r = cosamp(&p, &GreedyOpts { max_iters: 3, ..Default::default() });
+        assert!(support_of(&r.x).len() <= p.spec.s);
+    }
+
+    #[test]
+    fn paper_scale_recovery() {
+        // CoSaMP at the paper's shape (n=1000, m=300, s=20).
+        let p = ProblemSpec::paper().generate(&mut Rng::seed_from(42));
+        let r = cosamp(&p, &GreedyOpts { max_iters: 60, ..Default::default() });
+        assert!(r.converged, "residual {}", r.residual);
+        assert!(p.relative_error(&r.x) < 1e-6);
+    }
+
+    #[test]
+    fn zero_measurement_edge_case() {
+        // y = 0 -> immediate convergence to x = 0.
+        let mut p = easy(8);
+        p.y.iter_mut().for_each(|v| *v = 0.0);
+        let r = cosamp(&p, &GreedyOpts::default());
+        assert!(r.converged);
+        assert_eq!(r.iters, 0);
+        assert!(r.x.iter().all(|&v| v == 0.0));
+    }
+}

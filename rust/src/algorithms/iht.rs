@@ -1,0 +1,124 @@
+//! Classical Iterative Hard Thresholding (paper eq. (2); Blumensath &
+//! Davies 2009): `x^{t+1} = H_s(x^t + gamma A^T (y - A x^t))`.
+//!
+//! IHT is the deterministic ancestor of StoIHT — one full-gradient step per
+//! iteration instead of a sampled block — and serves as a baseline in the
+//! A5 benchmark sweep.
+
+use super::{GreedyOpts, RunResult};
+use crate::linalg::nrm2;
+use crate::metrics::Trace;
+use crate::problem::Problem;
+use crate::support::{hard_threshold_in_place, top_s_into};
+
+/// Run IHT. `opts.gamma` is the full-gradient step size; block structure is
+/// ignored.
+pub fn iht(problem: &Problem, opts: &GreedyOpts) -> RunResult {
+    let spec = &problem.spec;
+    let blk = problem.a.as_block();
+    let mut x = vec![0.0f64; spec.n];
+    let mut proxy = vec![0.0f64; spec.n];
+    let mut resid = vec![0.0f64; spec.m];
+    let mut idx_scratch: Vec<usize> = Vec::with_capacity(spec.n);
+    let mut sel = vec![0usize; spec.s];
+    let mut error_trace = Trace::new();
+    let mut resid_trace = Trace::new();
+    let mut converged = false;
+    let mut iters = 0;
+    let mut residual = nrm2(&problem.y);
+
+    for t in 1..=opts.max_iters {
+        // proxy = x + gamma * A^T (y - A x); resid doubles as scratch.
+        blk.proxy_step_into(&problem.y, &x, opts.gamma, &mut resid, &mut proxy);
+        // x = H_s(proxy)
+        top_s_into(&proxy, spec.s, &mut idx_scratch, &mut sel);
+        x.fill(0.0);
+        for &i in sel.iter() {
+            x[i] = proxy[i];
+        }
+        iters = t;
+        if opts.record_error {
+            error_trace.push(problem.recovery_error(&x));
+        }
+        if t % opts.check_every == 0 {
+            residual = problem.residual_norm(&x);
+            if opts.record_resid {
+                resid_trace.push(residual);
+            }
+            if residual < opts.tolerance {
+                converged = true;
+                break;
+            }
+        }
+    }
+    if !converged {
+        residual = problem.residual_norm(&x);
+    }
+    RunResult { x, iters, converged, residual, error_trace, resid_trace }
+}
+
+/// One IHT step in isolation (used by tests and the PJRT cross-check).
+pub fn iht_step(problem: &Problem, x: &[f64], gamma: f64) -> Vec<f64> {
+    let spec = &problem.spec;
+    let blk = problem.a.as_block();
+    let mut proxy = vec![0.0f64; spec.n];
+    let mut resid = vec![0.0f64; spec.m];
+    blk.proxy_step_into(&problem.y, x, gamma, &mut resid, &mut proxy);
+    let mut idx_scratch = Vec::new();
+    let mut sel = vec![0usize; spec.s.min(spec.n)];
+    hard_threshold_in_place(&mut proxy, spec.s, &mut idx_scratch, &mut sel);
+    proxy
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problem::ProblemSpec;
+    use crate::rng::Rng;
+
+    fn easy(seed: u64) -> Problem {
+        ProblemSpec { n: 128, m: 64, b: 8, s: 4, ..ProblemSpec::tiny() }
+            .generate(&mut Rng::seed_from(seed))
+    }
+
+    #[test]
+    fn converges_and_recovers() {
+        let p = easy(1);
+        let r = iht(&p, &GreedyOpts::default());
+        assert!(r.converged, "residual {}", r.residual);
+        assert!(p.recovery_error(&r.x) < 1e-6);
+    }
+
+    #[test]
+    fn iterates_are_s_sparse() {
+        let p = easy(2);
+        let opts = GreedyOpts { max_iters: 5, ..Default::default() };
+        let r = iht(&p, &opts);
+        assert!(r.x.iter().filter(|&&v| v != 0.0).count() <= p.spec.s);
+    }
+
+    #[test]
+    fn step_matches_run_first_iteration() {
+        let p = easy(3);
+        let one = iht_step(&p, &vec![0.0; p.spec.n], 1.0);
+        let opts = GreedyOpts { max_iters: 1, ..Default::default() };
+        let r = iht(&p, &opts);
+        assert_eq!(one, r.x);
+    }
+
+    #[test]
+    fn error_trace_decreases_overall() {
+        let p = easy(4);
+        let r = iht(&p, &GreedyOpts::recording());
+        let tr = &r.error_trace.values;
+        assert!(tr.first().unwrap() > tr.last().unwrap());
+    }
+
+    #[test]
+    fn tiny_gamma_fails_to_converge_quickly() {
+        let p = easy(5);
+        let opts = GreedyOpts { gamma: 1e-4, max_iters: 50, ..Default::default() };
+        let r = iht(&p, &opts);
+        assert!(!r.converged);
+    }
+}

@@ -1,0 +1,132 @@
+//! Orthogonal Matching Pursuit (Tropp & Gilbert 2007) — the classical
+//! greedy baseline: grow the support one index at a time by correlation,
+//! re-fit by least squares, repeat `s` times.
+
+use super::{GreedyOpts, RunResult};
+use crate::linalg::{lstsq, nrm2};
+use crate::metrics::Trace;
+use crate::problem::Problem;
+
+/// Run OMP for exactly `s` selection rounds (or until the residual drops
+/// below `opts.tolerance`). `opts.gamma` / `max_iters` are unused; the
+/// iteration count in the result equals the number of selected atoms.
+pub fn omp(problem: &Problem, opts: &GreedyOpts) -> RunResult {
+    let spec = &problem.spec;
+    let a = &problem.a;
+    let mut support: Vec<usize> = Vec::with_capacity(spec.s);
+    let mut r = problem.y.clone();
+    let mut error_trace = Trace::new();
+    let mut resid_trace = Trace::new();
+    let mut x = vec![0.0f64; spec.n];
+    let mut converged = nrm2(&r) < opts.tolerance;
+    let mut iters = 0;
+
+    while !converged && support.len() < spec.s {
+        // correlate: pick argmax_j |A^T r| over j not yet selected.
+        let corr = a.gemv_t(&r);
+        let mut best: Option<usize> = None;
+        for j in 0..spec.n {
+            if support.contains(&j) {
+                continue;
+            }
+            match best {
+                None => best = Some(j),
+                Some(b) => {
+                    let (cj, cb) = (corr[j].abs(), corr[b].abs());
+                    if cj > cb || (cj == cb && j < b) {
+                        best = Some(j);
+                    }
+                }
+            }
+        }
+        let j = best.expect("n > s guarantees a candidate");
+        support.push(j);
+        // least-squares re-fit on the selected columns.
+        let sub = a.select_cols(&support);
+        let z = lstsq(&sub, &problem.y);
+        x.fill(0.0);
+        for (k, &col) in support.iter().enumerate() {
+            x[col] = z[k];
+        }
+        // residual r = y - A_T z
+        let az = sub.gemv(&z);
+        for i in 0..spec.m {
+            r[i] = problem.y[i] - az[i];
+        }
+        iters += 1;
+        if opts.record_error {
+            error_trace.push(problem.recovery_error(&x));
+        }
+        let rn = nrm2(&r);
+        if opts.record_resid {
+            resid_trace.push(rn);
+        }
+        converged = rn < opts.tolerance;
+    }
+
+    let residual = problem.residual_norm(&x);
+    RunResult { x, iters, converged, residual, error_trace, resid_trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problem::ProblemSpec;
+    use crate::rng::Rng;
+    use crate::support::support_of;
+
+    fn easy(seed: u64) -> Problem {
+        ProblemSpec { n: 128, m: 64, b: 8, s: 4, ..ProblemSpec::tiny() }
+            .generate(&mut Rng::seed_from(seed))
+    }
+
+    #[test]
+    fn exact_recovery_noiseless() {
+        for seed in 1..6u64 {
+            let p = easy(seed);
+            let r = omp(&p, &GreedyOpts::default());
+            assert!(r.converged, "seed {seed}: residual {}", r.residual);
+            assert!(p.recovery_error(&r.x) < 1e-8, "seed {seed}");
+            assert_eq!(support_of(&r.x), p.support, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn stops_early_when_tolerance_met() {
+        // Signal with 1 spike but s = 4: OMP should exit after ~1 atom.
+        let mut rng = Rng::seed_from(10);
+        let mut sp = ProblemSpec { n: 64, m: 32, b: 4, s: 1, ..ProblemSpec::tiny() };
+        let p = sp.generate(&mut rng);
+        sp.s = 4; // solver believes s = 4
+        let mut p4 = p;
+        p4.spec = sp;
+        let r = omp(&p4, &GreedyOpts::default());
+        assert!(r.converged);
+        assert!(r.iters <= 2, "iters {}", r.iters);
+    }
+
+    #[test]
+    fn selects_at_most_s_atoms() {
+        let p = easy(7);
+        let r = omp(&p, &GreedyOpts::default());
+        assert!(support_of(&r.x).len() <= p.spec.s);
+        assert!(r.iters <= p.spec.s);
+    }
+
+    #[test]
+    fn noisy_case_still_close() {
+        let mut rng = Rng::seed_from(8);
+        let sp = ProblemSpec { n: 128, m: 64, b: 8, s: 4, noise_std: 1e-3, ..ProblemSpec::tiny() };
+        let p = sp.generate(&mut rng);
+        let r = omp(&p, &GreedyOpts::default());
+        assert!(p.relative_error(&r.x) < 0.05, "rel err {}", p.relative_error(&r.x));
+    }
+
+    #[test]
+    fn traces_align_with_iterations() {
+        let p = easy(9);
+        let r = omp(&p, &GreedyOpts { record_error: true, record_resid: true, ..Default::default() });
+        assert_eq!(r.error_trace.len(), r.iters);
+        assert_eq!(r.resid_trace.len(), r.iters);
+    }
+}

@@ -1,0 +1,144 @@
+//! StoGradMP (Nguyen, Needell & Woolf 2014) — the stochastic GradMP /
+//! CoSaMP relative of StoIHT and the paper's §V extension target: per
+//! iteration, take the *block* gradient as the proxy, merge its top-`2s`
+//! set with the current support (and optionally an external support
+//! estimate — that is the asynchronous tally hook), least-squares re-fit,
+//! prune to `s`.
+
+use super::{GreedyOpts, RunResult};
+use crate::linalg::{lstsq, nrm2};
+use crate::metrics::Trace;
+use crate::problem::Problem;
+use crate::rng::Rng;
+use crate::support::{support_of, top_s, union};
+
+/// One StoGradMP iteration body, reusable by the asynchronous runtimes.
+///
+/// * `x` — current iterate (overwritten with the new estimate)
+/// * `block` — sampled measurement block
+/// * `extra_support` — `T̃^t` from the shared tally (Alg.-2-style union),
+///   or `None` for the sequential algorithm.
+///
+/// Returns the sorted merged support used for the re-fit (the tally votes
+/// on its top-`s` prune, matching the StoIHT tally protocol).
+pub fn stogradmp_step(
+    problem: &Problem,
+    x: &mut [f64],
+    block: usize,
+    extra_support: Option<&[usize]>,
+) -> Vec<usize> {
+    let spec = &problem.spec;
+    let (blk, yb) = problem.block(block);
+    // block gradient g = A_b^T (y_b - A_b x)
+    let ax = blk.gemv(x);
+    let r: Vec<f64> = yb.iter().zip(&ax).map(|(&a, &b)| a - b).collect();
+    let g = blk.gemv_t(&r);
+    // identify top-2s of the block gradient, merge with current support.
+    let omega = top_s(&g, 2 * spec.s);
+    let mut merged = union(&omega, &support_of(x));
+    if let Some(extra) = extra_support {
+        merged = union(&merged, extra);
+    }
+    // estimate: least squares over the merged support on the FULL system
+    // (GradMP's estimation uses the global objective).
+    let sub = problem.a.select_cols(&merged);
+    let z = lstsq(&sub, &problem.y);
+    // prune to top-s.
+    let keep = top_s(&z, spec.s);
+    x.fill(0.0);
+    let mut pruned: Vec<usize> = keep.iter().map(|&k| merged[k]).collect();
+    for (&k, &col) in keep.iter().zip(&pruned) {
+        x[col] = z[k];
+    }
+    pruned.sort_unstable();
+    pruned
+}
+
+/// Sequential StoGradMP.
+pub fn stogradmp(problem: &Problem, opts: &GreedyOpts, rng: &mut Rng) -> RunResult {
+    let spec = &problem.spec;
+    let m_blocks = spec.num_blocks();
+    let mut x = vec![0.0f64; spec.n];
+    let mut error_trace = Trace::new();
+    let mut resid_trace = Trace::new();
+    let mut converged = false;
+    let mut iters = 0;
+    let mut residual = nrm2(&problem.y);
+
+    for t in 1..=opts.max_iters {
+        let block = rng.below(m_blocks);
+        stogradmp_step(problem, &mut x, block, None);
+        iters = t;
+        if opts.record_error {
+            error_trace.push(problem.recovery_error(&x));
+        }
+        if t % opts.check_every == 0 {
+            residual = problem.residual_norm(&x);
+            if opts.record_resid {
+                resid_trace.push(residual);
+            }
+            if residual < opts.tolerance {
+                converged = true;
+                break;
+            }
+        }
+    }
+    if !converged {
+        residual = problem.residual_norm(&x);
+    }
+    RunResult { x, iters, converged, residual, error_trace, resid_trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problem::ProblemSpec;
+
+    fn easy(seed: u64) -> Problem {
+        ProblemSpec { n: 128, m: 64, b: 8, s: 4, ..ProblemSpec::tiny() }
+            .generate(&mut Rng::seed_from(seed))
+    }
+
+    #[test]
+    fn recovers_quickly_noiseless() {
+        for seed in 1..5u64 {
+            let p = easy(seed);
+            let r = stogradmp(&p, &GreedyOpts { max_iters: 100, ..Default::default() }, &mut Rng::seed_from(seed));
+            assert!(r.converged, "seed {seed} residual {}", r.residual);
+            assert!(p.recovery_error(&r.x) < 1e-7, "seed {seed}");
+            // GradMP-family converges much faster than StoIHT.
+            assert!(r.iters < 60, "iters {}", r.iters);
+        }
+    }
+
+    #[test]
+    fn step_keeps_s_sparsity() {
+        let p = easy(6);
+        let mut x = vec![0.0; p.spec.n];
+        for blk in 0..4 {
+            let pruned = stogradmp_step(&p, &mut x, blk, None);
+            assert!(pruned.len() <= p.spec.s);
+            assert_eq!(support_of(&x), pruned);
+        }
+    }
+
+    #[test]
+    fn extra_support_is_respected() {
+        let p = easy(7);
+        let mut x = vec![0.0; p.spec.n];
+        // With the planted support as the extra set, one step should nail
+        // the least-squares fit on (a superset of) the truth.
+        let pruned = stogradmp_step(&p, &mut x, 0, Some(&p.support));
+        assert!(pruned.len() <= p.spec.s);
+        assert!(p.recovery_error(&x) < 1e-7, "err {}", p.recovery_error(&x));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = easy(8);
+        let r1 = stogradmp(&p, &GreedyOpts::default(), &mut Rng::seed_from(3));
+        let r2 = stogradmp(&p, &GreedyOpts::default(), &mut Rng::seed_from(3));
+        assert_eq!(r1.x, r2.x);
+        assert_eq!(r1.iters, r2.iters);
+    }
+}

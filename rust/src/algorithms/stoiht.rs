@@ -1,0 +1,335 @@
+//! StoIHT (paper Algorithm 1) and its Fig.-1 oracle-support variant.
+//!
+//! The per-iteration arithmetic lives in [`StoihtKernel`] — a reusable,
+//! allocation-free step object — so the discrete-time simulator and the
+//! real-thread runtime execute *exactly* the arithmetic validated here
+//! (and, via the test-vector suite, against the JAX oracle).
+
+use super::{GreedyOpts, RunResult};
+use crate::linalg::nrm2;
+use crate::metrics::Trace;
+use crate::problem::Problem;
+use crate::rng::Rng;
+use crate::support::{self, top_s_into};
+
+/// Reusable StoIHT step state: scratch buffers plus the sampling
+/// distribution. One kernel per (simulated or real) core.
+pub struct StoihtKernel<'p> {
+    problem: &'p Problem,
+    /// Per-block selection probabilities `p(i)` (uniform by default).
+    probs: Vec<f64>,
+    /// `gamma / (M p(i))` precomputed per block.
+    alphas: Vec<f64>,
+    // scratch
+    proxy: Vec<f64>,
+    resid: Vec<f64>,
+    idx_scratch: Vec<usize>,
+    gamma_set: Vec<usize>,
+}
+
+impl<'p> StoihtKernel<'p> {
+    /// Uniform block sampling (the paper's experiments).
+    pub fn new(problem: &'p Problem, gamma: f64) -> Self {
+        let m_blocks = problem.spec.num_blocks();
+        let probs = vec![1.0 / m_blocks as f64; m_blocks];
+        Self::with_probs(problem, gamma, probs)
+    }
+
+    /// Arbitrary block distribution `p(i)` (must sum to 1).
+    pub fn with_probs(problem: &'p Problem, gamma: f64, probs: Vec<f64>) -> Self {
+        let m_blocks = problem.spec.num_blocks();
+        assert_eq!(probs.len(), m_blocks, "probs length != number of blocks");
+        let total: f64 = probs.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9, "block probabilities must sum to 1");
+        let alphas = probs
+            .iter()
+            .map(|&p| {
+                assert!(p > 0.0, "every block needs positive probability");
+                gamma / (m_blocks as f64 * p)
+            })
+            .collect();
+        StoihtKernel {
+            problem,
+            probs,
+            alphas,
+            proxy: vec![0.0; problem.spec.n],
+            resid: vec![0.0; problem.spec.b],
+            idx_scratch: Vec::with_capacity(problem.spec.n),
+            gamma_set: vec![0; problem.spec.s],
+        }
+    }
+
+    /// Sample a block index from `p(·)`.
+    pub fn sample_block(&self, rng: &mut Rng) -> usize {
+        rng.categorical(&self.probs)
+    }
+
+    /// One full Algorithm-1/2 iteration body.
+    ///
+    /// * randomize — caller supplies `block` (so schedulers control sampling)
+    /// * proxy     — `b = x + gamma/(M p) A_b^T (y_b - A_b x)`
+    /// * identify  — `Γ = supp_s(b)`
+    /// * estimate  — `x <- b|_{Γ ∪ extra}` where `extra` is the oracle `T̃`
+    ///   (Fig. 1) or the tally's `T̃^t` (Alg. 2); `None` gives Algorithm 1.
+    ///
+    /// Returns the sorted `Γ^t` (borrow of internal scratch — copy it out if
+    /// it must outlive the next call).
+    pub fn step(&mut self, x: &mut [f64], block: usize, extra_support: Option<&[usize]>) -> &[usize] {
+        let spec = &self.problem.spec;
+        let (blk, yb) = self.problem.block(block);
+        blk.proxy_step_into(yb, x, self.alphas[block], &mut self.resid, &mut self.proxy);
+        top_s_into(&self.proxy, spec.s, &mut self.idx_scratch, &mut self.gamma_set);
+        // estimate: copy proxy restricted to the union onto x.
+        match extra_support {
+            None => {
+                x.fill(0.0);
+                for &i in &self.gamma_set {
+                    x[i] = self.proxy[i];
+                }
+            }
+            Some(extra) => {
+                x.fill(0.0);
+                for &i in &self.gamma_set {
+                    x[i] = self.proxy[i];
+                }
+                for &i in extra {
+                    x[i] = self.proxy[i];
+                }
+            }
+        }
+        &self.gamma_set
+    }
+
+    /// The halting statistic `||y - A x||_2`.
+    pub fn residual_norm(&self, x: &[f64]) -> f64 {
+        self.problem.residual_norm(x)
+    }
+
+    /// Problem dimension.
+    pub fn n(&self) -> usize {
+        self.problem.spec.n
+    }
+}
+
+/// StoIHT — paper Algorithm 1 (sequential).
+pub fn stoiht(problem: &Problem, opts: &GreedyOpts, rng: &mut Rng) -> RunResult {
+    stoiht_impl(problem, opts, rng, None)
+}
+
+/// Fig.-1 modified StoIHT: estimate onto `Γ^t ∪ T̃` for a *fixed* support
+/// estimate `T̃` (sorted). `oracle` with accuracy α is built via
+/// [`support::oracle_estimate`].
+pub fn stoiht_with_oracle(
+    problem: &Problem,
+    opts: &GreedyOpts,
+    rng: &mut Rng,
+    oracle: &[usize],
+) -> RunResult {
+    debug_assert!(oracle.windows(2).all(|w| w[0] < w[1]), "oracle must be sorted");
+    stoiht_impl(problem, opts, rng, Some(oracle))
+}
+
+fn stoiht_impl(
+    problem: &Problem,
+    opts: &GreedyOpts,
+    rng: &mut Rng,
+    oracle: Option<&[usize]>,
+) -> RunResult {
+    assert!(opts.check_every >= 1);
+    let mut kernel = StoihtKernel::new(problem, opts.gamma);
+    let mut x = vec![0.0f64; problem.spec.n];
+    let mut error_trace = Trace::new();
+    let mut resid_trace = Trace::new();
+    let mut converged = false;
+    let mut iters = 0;
+    let mut residual = nrm2(&problem.y);
+
+    for t in 1..=opts.max_iters {
+        let block = kernel.sample_block(rng);
+        kernel.step(&mut x, block, oracle);
+        iters = t;
+        if opts.record_error {
+            error_trace.push(problem.recovery_error(&x));
+        }
+        if t % opts.check_every == 0 {
+            residual = kernel.residual_norm(&x);
+            if opts.record_resid {
+                resid_trace.push(residual);
+            }
+            if residual < opts.tolerance {
+                converged = true;
+                break;
+            }
+        }
+    }
+    if !converged {
+        residual = kernel.residual_norm(&x);
+    }
+    RunResult { x, iters, converged, residual, error_trace, resid_trace }
+}
+
+/// Convenience used by Fig. 1: oracle estimate with exact accuracy
+/// `alpha = hits / s` against the planted support.
+pub fn make_oracle(problem: &Problem, alpha: f64, rng: &mut Rng) -> Vec<usize> {
+    let s = problem.spec.s;
+    let hits = (alpha * s as f64).round() as usize;
+    support::oracle_estimate(&problem.support, problem.spec.n, s, hits.min(s), rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problem::ProblemSpec;
+
+    fn easy_problem(seed: u64) -> Problem {
+        // Comfortable oversampling: n=128, m=64, s=4.
+        ProblemSpec { n: 128, m: 64, b: 8, s: 4, ..ProblemSpec::tiny() }.generate(&mut Rng::seed_from(seed))
+    }
+
+    #[test]
+    fn converges_on_easy_problem() {
+        let p = easy_problem(1);
+        let mut rng = Rng::seed_from(100);
+        let r = stoiht(&p, &GreedyOpts::default(), &mut rng);
+        assert!(r.converged, "residual {}", r.residual);
+        assert!(p.recovery_error(&r.x) < 1e-6, "err {}", p.recovery_error(&r.x));
+        assert!(r.residual < 1e-7);
+    }
+
+    #[test]
+    fn iterate_is_always_sparse_enough() {
+        let p = easy_problem(2);
+        let mut rng = Rng::seed_from(3);
+        let mut kernel = StoihtKernel::new(&p, 1.0);
+        let mut x = vec![0.0; p.spec.n];
+        for _ in 0..50 {
+            let blk = kernel.sample_block(&mut rng);
+            kernel.step(&mut x, blk, None);
+            let nnz = x.iter().filter(|&&v| v != 0.0).count();
+            assert!(nnz <= p.spec.s);
+        }
+    }
+
+    #[test]
+    fn oracle_union_allows_up_to_2s_nonzeros() {
+        let p = easy_problem(3);
+        let mut rng = Rng::seed_from(4);
+        let oracle = make_oracle(&p, 1.0, &mut rng);
+        let mut kernel = StoihtKernel::new(&p, 1.0);
+        let mut x = vec![0.0; p.spec.n];
+        for _ in 0..20 {
+            let blk = kernel.sample_block(&mut rng);
+            kernel.step(&mut x, blk, Some(&oracle));
+            let nnz = x.iter().filter(|&&v| v != 0.0).count();
+            assert!(nnz <= 2 * p.spec.s);
+        }
+    }
+
+    #[test]
+    fn perfect_oracle_speeds_convergence() {
+        // Mean iterations over a few trials: alpha=1 should beat standard.
+        let mut iters_std = 0usize;
+        let mut iters_orc = 0usize;
+        for seed in 0..8u64 {
+            let p = easy_problem(50 + seed);
+            let mut rng1 = Rng::seed_from(1000 + seed);
+            let mut rng2 = Rng::seed_from(1000 + seed);
+            let r1 = stoiht(&p, &GreedyOpts::default(), &mut rng1);
+            let oracle = p.support.clone();
+            let r2 = stoiht_with_oracle(&p, &GreedyOpts::default(), &mut rng2, &oracle);
+            assert!(r1.converged && r2.converged);
+            iters_std += r1.iters;
+            iters_orc += r2.iters;
+        }
+        assert!(
+            iters_orc < iters_std,
+            "oracle {iters_orc} !< standard {iters_std}"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = easy_problem(5);
+        let r1 = stoiht(&p, &GreedyOpts::default(), &mut Rng::seed_from(9));
+        let r2 = stoiht(&p, &GreedyOpts::default(), &mut Rng::seed_from(9));
+        assert_eq!(r1.x, r2.x);
+        assert_eq!(r1.iters, r2.iters);
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let p = easy_problem(6);
+        let opts = GreedyOpts { max_iters: 3, ..Default::default() };
+        let r = stoiht(&p, &opts, &mut Rng::seed_from(1));
+        assert_eq!(r.iters, 3);
+        assert!(!r.converged);
+    }
+
+    #[test]
+    fn traces_recorded_when_asked() {
+        let p = easy_problem(7);
+        let opts = GreedyOpts { record_error: true, record_resid: true, max_iters: 10, ..Default::default() };
+        let r = stoiht(&p, &opts, &mut Rng::seed_from(2));
+        assert_eq!(r.error_trace.len(), r.iters);
+        assert_eq!(r.resid_trace.len(), r.iters);
+        let opts = GreedyOpts { max_iters: 10, ..Default::default() };
+        let r = stoiht(&p, &opts, &mut Rng::seed_from(2));
+        assert!(r.error_trace.is_empty());
+    }
+
+    #[test]
+    fn check_every_amortizes_but_still_converges() {
+        let p = easy_problem(8);
+        let opts = GreedyOpts { check_every: 10, ..Default::default() };
+        let r = stoiht(&p, &opts, &mut Rng::seed_from(3));
+        assert!(r.converged);
+        assert_eq!(r.iters % 10, 0);
+    }
+
+    #[test]
+    fn nonuniform_probabilities_scale_alpha() {
+        let p = easy_problem(9);
+        let mb = p.spec.num_blocks();
+        let mut probs = vec![0.5 / (mb - 1) as f64; mb];
+        probs[0] = 0.5;
+        let kernel = StoihtKernel::with_probs(&p, 1.0, probs.clone());
+        // alpha_0 = gamma / (M * 0.5)
+        assert!((kernel.alphas[0] - 1.0 / (mb as f64 * 0.5)).abs() < 1e-12);
+        // sampling respects the distribution
+        let mut rng = Rng::seed_from(11);
+        let hits = (0..4000).filter(|_| kernel.sample_block(&mut rng) == 0).count();
+        assert!((1700..2300).contains(&hits), "{hits}");
+    }
+
+    #[test]
+    #[should_panic(expected = "sum to 1")]
+    fn bad_probs_rejected() {
+        let p = easy_problem(10);
+        let mb = p.spec.num_blocks();
+        let _ = StoihtKernel::with_probs(&p, 1.0, vec![0.3 / mb as f64; mb]);
+    }
+
+    #[test]
+    fn union_includes_oracle_values_from_proxy() {
+        let p = easy_problem(11);
+        let mut kernel = StoihtKernel::new(&p, 1.0);
+        let mut x = vec![0.0; p.spec.n];
+        let oracle: Vec<usize> = vec![0, 1]; // arbitrary indices
+        kernel.step(&mut x, 0, Some(&oracle));
+        // x at oracle indices equals the proxy there (possibly ~0 but set).
+        assert_eq!(x[0], kernel.proxy[0]);
+        assert_eq!(x[1], kernel.proxy[1]);
+    }
+
+    #[test]
+    fn make_oracle_accuracy() {
+        let p = easy_problem(12);
+        let mut rng = Rng::seed_from(13);
+        for alpha in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let est = make_oracle(&p, alpha, &mut rng);
+            let acc = support::accuracy(&est, &p.support);
+            assert!((acc - alpha).abs() < 0.26, "alpha {alpha} acc {acc}");
+            assert_eq!(est.len(), p.spec.s);
+        }
+    }
+}

@@ -1,0 +1,348 @@
+//! Real-thread asynchronous StoIHT — the deployment the paper *simulates*.
+//!
+//! `c` OS threads run Algorithm 2 concurrently against a lock-free
+//! [`crate::tally::AtomicTally`]; there are no barriers, no locks on the
+//! solve path, and reads of `φ` are genuinely inconsistent (relaxed atomic
+//! loads racing concurrent `fetch_add`s). The first worker whose local
+//! iterate passes `||y − A x||_2 < tol` raises a stop flag; everyone else
+//! drains out. This module turns the paper's simulated claim ("a speedup
+//! in total time is expected") into a measured wallclock number (see
+//! EXPERIMENTS.md §E2E and the `hot_path` bench).
+//!
+//! Slow cores are emulated by *work*, not sleep: a worker with period `k`
+//! recomputes its proxy `k − 1` extra times per iteration, so the
+//! time-dilation is made of the same memory traffic the fast cores issue —
+//! closer to a genuinely contended machine than `thread::sleep`.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::algorithms::StoihtKernel;
+use crate::backend::Backend;
+use crate::problem::Problem;
+use crate::rng::Rng;
+use crate::sim::SpeedSchedule;
+use crate::support::union;
+use crate::tally::{AtomicTally, TallyWeighting};
+
+/// Options for the real-thread runtime.
+#[derive(Clone, Debug)]
+pub struct AsyncOpts {
+    pub gamma: f64,
+    pub tolerance: f64,
+    /// Per-worker local iteration cap.
+    pub max_local_iters: usize,
+    /// Tally weighting (paper: Progress).
+    pub weighting: TallyWeighting,
+    /// Check the exit residual every `check_every` local iterations.
+    pub check_every: usize,
+    /// Per-core speed schedule (slow = extra proxy recomputations).
+    pub schedule: SpeedSchedule,
+}
+
+impl Default for AsyncOpts {
+    fn default() -> Self {
+        AsyncOpts {
+            gamma: 1.0,
+            tolerance: 1e-7,
+            max_local_iters: 1500,
+            weighting: TallyWeighting::Progress,
+            check_every: 1,
+            schedule: SpeedSchedule::AllFast,
+        }
+    }
+}
+
+/// Result of a real-thread run.
+#[derive(Clone, Debug)]
+pub struct AsyncOutcome {
+    /// Wallclock from launch to the winner's exit signal.
+    pub wall: Duration,
+    /// Whether any worker met the tolerance.
+    pub converged: bool,
+    /// Winning worker id.
+    pub exit_core: Option<usize>,
+    /// Local iterations completed per worker at drain time.
+    pub local_iters: Vec<u64>,
+    /// Winner's final `||y − A x||`.
+    pub residual: f64,
+    /// Winner's recovery error.
+    pub final_error: f64,
+    /// Winner's iterate.
+    pub x: Vec<f64>,
+}
+
+/// Winner info published through the stop protocol.
+struct ExitInfo {
+    core: usize,
+    residual: f64,
+    x: Vec<f64>,
+    at: Instant,
+}
+
+/// Run asynchronous StoIHT on `cores` OS threads (native compute).
+pub fn run_async(problem: &Problem, cores: usize, opts: &AsyncOpts, seed: u64) -> AsyncOutcome {
+    run_async_with(problem, cores, opts, seed, |p| Box::new(NativeStep::new(p)))
+}
+
+/// As [`run_async`] but with a custom per-worker step factory, used to run
+/// the same protocol over the PJRT backend (`examples/e2e_pjrt.rs`).
+pub fn run_async_with<'p, F>(
+    problem: &'p Problem,
+    cores: usize,
+    opts: &AsyncOpts,
+    seed: u64,
+    make_step: F,
+) -> AsyncOutcome
+where
+    F: Fn(&'p Problem) -> Box<dyn WorkerStep + 'p> + Sync,
+{
+    assert!(cores >= 1);
+    let spec = &problem.spec;
+    let periods = opts.schedule.periods(cores);
+    let tally = AtomicTally::new(spec.n, opts.weighting);
+    let stop = AtomicBool::new(false);
+    let exit_info: Mutex<Option<ExitInfo>> = Mutex::new(None);
+    let iter_counters: Vec<AtomicU64> = (0..cores).map(|_| AtomicU64::new(0)).collect();
+    let mut seed_root = Rng::seed_from(seed);
+    let worker_rngs: Vec<Rng> = (0..cores).map(|i| seed_root.split(i as u64)).collect();
+    let start = Instant::now();
+
+    std::thread::scope(|scope| {
+        for w in 0..cores {
+            let mut rng = worker_rngs[w].clone();
+            let tally = &tally;
+            let stop = &stop;
+            let exit_info = &exit_info;
+            let counter = &iter_counters[w];
+            let period = periods[w];
+            let make_step = &make_step;
+            scope.spawn(move || {
+                let mut step = make_step(problem);
+                let mut x = vec![0.0f64; spec.n];
+                let mut prev_gamma: Vec<usize> = Vec::new();
+                let mut tally_scratch: Vec<i64> = Vec::new();
+                for t in 1..=opts.max_local_iters as u64 {
+                    if stop.load(Ordering::Acquire) {
+                        break;
+                    }
+                    // read: T̃ = supp_s(φ) — racy by design.
+                    let estimate = tally.estimate(spec.s, &mut tally_scratch);
+                    let block = step.sample_block(&mut rng);
+                    // slow-core emulation: burn (period-1) extra proxies.
+                    for _ in 1..period {
+                        step.burn(&x, block);
+                    }
+                    let gamma = step.step(&mut x, block, &estimate, opts.gamma);
+                    // update tally: φ_Γt += t, φ_Γ(t-1) -= t-1 (atomic RMWs).
+                    tally.commit(&gamma, &prev_gamma, t);
+                    prev_gamma = gamma;
+                    counter.store(t, Ordering::Relaxed);
+                    if t as usize % opts.check_every == 0 {
+                        let support = union(&prev_gamma, &estimate);
+                        let r = problem.residual_norm_sparse(&x, &support);
+                        if r < opts.tolerance {
+                            let mut guard = exit_info.lock().unwrap();
+                            if guard.is_none() {
+                                *guard = Some(ExitInfo {
+                                    core: w,
+                                    residual: r,
+                                    x: x.clone(),
+                                    at: Instant::now(),
+                                });
+                            }
+                            drop(guard);
+                            stop.store(true, Ordering::Release);
+                            break;
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    let info = exit_info.into_inner().unwrap();
+    let local_iters: Vec<u64> = iter_counters.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+    match info {
+        Some(info) => AsyncOutcome {
+            wall: info.at.duration_since(start),
+            converged: true,
+            exit_core: Some(info.core),
+            local_iters,
+            residual: info.residual,
+            final_error: problem.recovery_error(&info.x),
+            x: info.x,
+        },
+        None => AsyncOutcome {
+            wall: start.elapsed(),
+            converged: false,
+            exit_core: None,
+            local_iters,
+            residual: f64::NAN,
+            final_error: f64::NAN,
+            x: vec![0.0; spec.n],
+        },
+    }
+}
+
+/// One worker's per-iteration compute, abstracted so native Rust kernels
+/// and the PJRT-executed AOT artifacts are interchangeable under the same
+/// coordination protocol.
+///
+/// Deliberately **not** `Send`: each worker constructs its step inside its
+/// own thread (the PJRT client is not thread-safe in the 0.1.6 crate), so
+/// the factory crosses the thread boundary, never the step object.
+pub trait WorkerStep {
+    /// Sample a measurement block.
+    fn sample_block(&mut self, rng: &mut Rng) -> usize;
+    /// Full Alg.-2 iteration body; returns the sorted `Γ^t`.
+    fn step(&mut self, x: &mut [f64], block: usize, estimate: &[usize], gamma: f64) -> Vec<usize>;
+    /// Throwaway proxy computation (slow-core work emulation).
+    fn burn(&mut self, x: &[f64], block: usize);
+}
+
+/// Native worker step backed by [`StoihtKernel`].
+pub struct NativeStep<'p> {
+    kernel: StoihtKernel<'p>,
+    burn_out: Vec<f64>,
+    burn_scratch: Vec<f64>,
+    problem: &'p Problem,
+}
+
+impl<'p> NativeStep<'p> {
+    pub fn new(problem: &'p Problem) -> Self {
+        NativeStep {
+            kernel: StoihtKernel::new(problem, 1.0),
+            burn_out: vec![0.0; problem.spec.n],
+            burn_scratch: vec![0.0; problem.spec.b],
+            problem,
+        }
+    }
+}
+
+impl<'p> WorkerStep for NativeStep<'p> {
+    fn sample_block(&mut self, rng: &mut Rng) -> usize {
+        self.kernel.sample_block(rng)
+    }
+
+    fn step(&mut self, x: &mut [f64], block: usize, estimate: &[usize], _gamma: f64) -> Vec<usize> {
+        let extra = if estimate.is_empty() { None } else { Some(estimate) };
+        self.kernel.step(x, block, extra).to_vec()
+    }
+
+    fn burn(&mut self, x: &[f64], block: usize) {
+        let (blk, yb) = self.problem.block(block);
+        blk.proxy_step_into(yb, x, 1.0, &mut self.burn_scratch, &mut self.burn_out);
+        std::hint::black_box(&self.burn_out);
+    }
+}
+
+/// Backend-driven worker step (PJRT or any [`Backend`] impl).
+pub struct BackendStep<'p, B: Backend> {
+    backend: B,
+    problem: &'p Problem,
+    mask: Vec<f64>,
+}
+
+impl<'p, B: Backend> BackendStep<'p, B> {
+    pub fn new(problem: &'p Problem, backend: B) -> Self {
+        BackendStep { backend, problem, mask: vec![0.0; problem.spec.n] }
+    }
+}
+
+impl<'p, B: Backend> WorkerStep for BackendStep<'p, B> {
+    fn sample_block(&mut self, rng: &mut Rng) -> usize {
+        rng.below(self.problem.spec.num_blocks())
+    }
+
+    fn step(&mut self, x: &mut [f64], block: usize, estimate: &[usize], gamma: f64) -> Vec<usize> {
+        self.mask.fill(0.0);
+        for &i in estimate {
+            self.mask[i] = 1.0;
+        }
+        let mb = self.problem.spec.num_blocks() as f64;
+        let alpha = gamma / (mb * (1.0 / mb)); // uniform p(i)
+        let (x_next, gamma_set) = self
+            .backend
+            .stoiht_step(self.problem, block, x, alpha, &self.mask)
+            .expect("backend step failed");
+        x.copy_from_slice(&x_next);
+        gamma_set
+    }
+
+    fn burn(&mut self, x: &[f64], block: usize) {
+        let _ = self.backend.proxy_step(self.problem, block, x, 1.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problem::ProblemSpec;
+
+    fn easy(seed: u64) -> Problem {
+        ProblemSpec { n: 128, m: 64, b: 8, s: 4, ..ProblemSpec::tiny() }
+            .generate(&mut Rng::seed_from(seed))
+    }
+
+    #[test]
+    fn single_thread_converges() {
+        let p = easy(1);
+        let out = run_async(&p, 1, &AsyncOpts::default(), 42);
+        assert!(out.converged);
+        assert!(out.residual < 1e-7);
+        assert!(out.final_error < 1e-5);
+        assert_eq!(out.exit_core, Some(0));
+    }
+
+    #[test]
+    fn winner_residual_is_verified_post_hoc() {
+        let p = easy(2);
+        let out = run_async(&p, 4, &AsyncOpts::default(), 7);
+        assert!(out.converged);
+        // Re-verify the published iterate against the full dense residual.
+        assert!(p.residual_norm(&out.x) < 1e-6, "{}", p.residual_norm(&out.x));
+    }
+
+    #[test]
+    fn all_workers_progress() {
+        let p = easy(3);
+        let out = run_async(&p, 4, &AsyncOpts::default(), 9);
+        assert!(out.converged);
+        assert_eq!(out.local_iters.len(), 4);
+        // The winner must have progressed; losers may have been stopped
+        // before completing a single iteration on a fast-converging run.
+        let winner = out.exit_core.unwrap();
+        assert!(out.local_iters[winner] > 0);
+        assert!(out.local_iters.iter().all(|&t| t <= 1500));
+    }
+
+    #[test]
+    fn cap_without_convergence() {
+        let p = easy(4);
+        let opts = AsyncOpts { max_local_iters: 2, ..Default::default() };
+        let out = run_async(&p, 2, &opts, 11);
+        assert!(!out.converged);
+        assert!(out.exit_core.is_none());
+        assert!(out.local_iters.iter().all(|&t| t <= 2));
+    }
+
+    #[test]
+    fn slow_schedule_still_converges() {
+        let p = easy(5);
+        let opts = AsyncOpts { schedule: SpeedSchedule::HalfSlow { period: 4 }, ..Default::default() };
+        let out = run_async(&p, 4, &opts, 13);
+        assert!(out.converged);
+    }
+
+    #[test]
+    fn stress_many_threads_tiny_problem() {
+        // More threads than hardware cores on a tiny problem: exercises the
+        // stop/drain protocol under heavy interleaving.
+        let p = easy(6);
+        let out = run_async(&p, 12, &AsyncOpts::default(), 17);
+        assert!(out.converged);
+        assert!(p.residual_norm(&out.x) < 1e-6);
+    }
+}

@@ -1,0 +1,254 @@
+//! Compute-backend abstraction: the same StoIHT arithmetic served by either
+//! the hand-optimized native kernels or the AOT-compiled HLO artifacts.
+//!
+//! The asynchronous protocols (sim, threads) are backend-agnostic; the
+//! Monte-Carlo sweeps use [`NativeBackend`] for throughput while
+//! [`PjrtBackend`] proves the three-layer composition (Pallas kernel → JAX
+//! graph → HLO text → PJRT execution) on the same problems — the
+//! integration tests in `rust/tests/pjrt_integration.rs` pin the two
+//! backends against each other to f32 tolerance.
+
+use anyhow::Result;
+
+use crate::linalg::RowBlock;
+use crate::problem::Problem;
+use crate::runtime::PjrtRuntime;
+use crate::support::top_s;
+
+/// One iteration's worth of StoIHT compute.
+pub trait Backend {
+    /// Human-readable backend name (diagnostics / bench labels).
+    fn name(&self) -> &'static str;
+
+    /// Proxy step on one measurement block:
+    /// `b = x + alpha * A_b^T (y_b - A_b x)`.
+    fn proxy_step(&mut self, problem: &Problem, block: usize, x: &[f64], alpha: f64) -> Result<Vec<f64>>;
+
+    /// Full Alg.-2 step: proxy + identify + union(tally mask) + estimate.
+    /// `tally_mask` is a 0/1 vector of length `n`.
+    /// Returns `(x_next, sorted Γ^t)`.
+    fn stoiht_step(
+        &mut self,
+        problem: &Problem,
+        block: usize,
+        x: &[f64],
+        alpha: f64,
+        tally_mask: &[f64],
+    ) -> Result<(Vec<f64>, Vec<usize>)>;
+
+    /// Halting statistic `||y - A x||_2`.
+    fn residual_norm(&mut self, problem: &Problem, x: &[f64]) -> Result<f64>;
+}
+
+/// Pure-Rust backend (f64, allocation-free inner kernels).
+#[derive(Default)]
+pub struct NativeBackend {
+    resid_scratch: Vec<f64>,
+    proxy_scratch: Vec<f64>,
+    idx_scratch: Vec<usize>,
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn proxy_into(&mut self, blk: RowBlock<'_, f64>, yb: &[f64], x: &[f64], alpha: f64) {
+        self.resid_scratch.resize(blk.rows(), 0.0);
+        self.proxy_scratch.resize(blk.cols(), 0.0);
+        blk.proxy_step_into(yb, x, alpha, &mut self.resid_scratch, &mut self.proxy_scratch);
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn proxy_step(&mut self, problem: &Problem, block: usize, x: &[f64], alpha: f64) -> Result<Vec<f64>> {
+        let (blk, yb) = problem.block(block);
+        self.proxy_into(blk, yb, x, alpha);
+        Ok(self.proxy_scratch.clone())
+    }
+
+    fn stoiht_step(
+        &mut self,
+        problem: &Problem,
+        block: usize,
+        x: &[f64],
+        alpha: f64,
+        tally_mask: &[f64],
+    ) -> Result<(Vec<f64>, Vec<usize>)> {
+        let s = problem.spec.s;
+        let (blk, yb) = problem.block(block);
+        self.proxy_into(blk, yb, x, alpha);
+        let gamma = {
+            let mut sel = vec![0usize; s.min(self.proxy_scratch.len())];
+            crate::support::top_s_into(&self.proxy_scratch, s, &mut self.idx_scratch, &mut sel);
+            sel
+        };
+        let mut x_next = vec![0.0; problem.spec.n];
+        for &i in &gamma {
+            x_next[i] = self.proxy_scratch[i];
+        }
+        for (i, &m) in tally_mask.iter().enumerate() {
+            if m != 0.0 {
+                x_next[i] = self.proxy_scratch[i];
+            }
+        }
+        Ok((x_next, gamma))
+    }
+
+    fn residual_norm(&mut self, problem: &Problem, x: &[f64]) -> Result<f64> {
+        Ok(problem.residual_norm(x))
+    }
+}
+
+/// Backend executing the AOT HLO artifacts through PJRT.
+///
+/// Not `Send`: construct one per thread (see [`PjrtRuntime`]).
+pub struct PjrtBackend {
+    runtime: PjrtRuntime,
+}
+
+impl PjrtBackend {
+    pub fn new(runtime: PjrtRuntime) -> Self {
+        PjrtBackend { runtime }
+    }
+
+    /// Runtime from the default artifact directory.
+    pub fn from_default_dir() -> Result<Self> {
+        Ok(PjrtBackend { runtime: PjrtRuntime::from_default_dir()? })
+    }
+
+    pub fn runtime(&self) -> &PjrtRuntime {
+        &self.runtime
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn proxy_step(&mut self, problem: &Problem, block: usize, x: &[f64], alpha: f64) -> Result<Vec<f64>> {
+        // The artifact set has no bare-proxy entry point; run the full step
+        // with an all-ones tally mask, which returns b restricted to
+        // Γ ∪ everything = b itself.
+        let spec = &problem.spec;
+        let ones = vec![1.0f64; spec.n];
+        let (x_next, _) = self.stoiht_step(problem, block, x, alpha, &ones)?;
+        Ok(x_next)
+    }
+
+    fn stoiht_step(
+        &mut self,
+        problem: &Problem,
+        block: usize,
+        x: &[f64],
+        alpha: f64,
+        tally_mask: &[f64],
+    ) -> Result<(Vec<f64>, Vec<usize>)> {
+        let spec = &problem.spec;
+        let b = spec.b;
+        let a_blk = &problem.a.data()[block * b * spec.n..(block + 1) * b * spec.n];
+        let y_blk = &problem.y[block * b..(block + 1) * b];
+        self.runtime
+            .stoiht_step(spec.n, b, spec.s, a_blk, y_blk, x, alpha, tally_mask)
+    }
+
+    fn residual_norm(&mut self, problem: &Problem, x: &[f64]) -> Result<f64> {
+        let spec = &problem.spec;
+        self.runtime
+            .residual_norm(spec.n, spec.m, problem.a.data(), &problem.y, x)
+    }
+}
+
+/// Reference helper shared by backend tests: the full Alg.-2 step computed
+/// naively (dense top-s via sort) — a third, independent implementation to
+/// triangulate native vs PJRT.
+pub fn reference_step(
+    problem: &Problem,
+    block: usize,
+    x: &[f64],
+    alpha: f64,
+    tally_mask: &[f64],
+) -> (Vec<f64>, Vec<usize>) {
+    let spec = &problem.spec;
+    let (blk, yb) = problem.block(block);
+    let ax = blk.gemv(x);
+    let r: Vec<f64> = yb.iter().zip(&ax).map(|(&a, &b)| a - b).collect();
+    let atr = blk.gemv_t(&r);
+    let proxy: Vec<f64> = x.iter().zip(&atr).map(|(&xi, &gi)| xi + alpha * gi).collect();
+    let gamma = top_s(&proxy, spec.s);
+    let mut x_next = vec![0.0; spec.n];
+    for &i in &gamma {
+        x_next[i] = proxy[i];
+    }
+    for (i, &m) in tally_mask.iter().enumerate() {
+        if m != 0.0 {
+            x_next[i] = proxy[i];
+        }
+    }
+    (x_next, gamma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problem::ProblemSpec;
+    use crate::rng::Rng;
+
+    fn tiny() -> Problem {
+        ProblemSpec::tiny().generate(&mut Rng::seed_from(5))
+    }
+
+    #[test]
+    fn native_step_matches_reference() {
+        let p = tiny();
+        let mut be = NativeBackend::new();
+        let mut rng = Rng::seed_from(1);
+        for block in 0..p.spec.num_blocks() {
+            let x: Vec<f64> = (0..p.spec.n).map(|_| rng.gauss() * 0.1).collect();
+            let mut mask = vec![0.0; p.spec.n];
+            for i in rng.subset(p.spec.n, 5) {
+                mask[i] = 1.0;
+            }
+            let (want_x, want_g) = reference_step(&p, block, &x, 1.0, &mask);
+            let (got_x, got_g) = be.stoiht_step(&p, block, &x, 1.0, &mask).unwrap();
+            assert_eq!(got_g, want_g);
+            for i in 0..p.spec.n {
+                assert!((got_x[i] - want_x[i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn native_proxy_matches_composition() {
+        let p = tiny();
+        let mut be = NativeBackend::new();
+        let x: Vec<f64> = (0..p.spec.n).map(|i| (i as f64 * 0.3).sin()).collect();
+        let proxy = be.proxy_step(&p, 1, &x, 0.7).unwrap();
+        let (blk, yb) = p.block(1);
+        let ax = blk.gemv(&x);
+        let r: Vec<f64> = yb.iter().zip(&ax).map(|(&a, &b)| a - b).collect();
+        let atr = blk.gemv_t(&r);
+        for i in 0..p.spec.n {
+            assert!((proxy[i] - (x[i] + 0.7 * atr[i])).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn native_residual_matches_problem() {
+        let p = tiny();
+        let mut be = NativeBackend::new();
+        let x = vec![0.0; p.spec.n];
+        let r = be.residual_norm(&p, &x).unwrap();
+        assert!((r - p.residual_norm(&x)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn backend_names() {
+        assert_eq!(NativeBackend::new().name(), "native");
+    }
+}

@@ -1,0 +1,160 @@
+//! In-repo micro-benchmark harness (criterion is unavailable offline).
+//!
+//! The `cargo bench` targets are `harness = false` binaries that use this
+//! module for timing and the `experiments` drivers for figure
+//! regeneration. The measurement loop is deliberately simple: warm up
+//! until timings stabilize (or the warmup budget is spent), then run
+//! fixed-size batches until the measurement budget is spent, reporting
+//! mean / σ / min over batch means.
+
+use std::time::{Duration, Instant};
+
+use crate::metrics::{format_sig, stats, Stats};
+
+/// One benchmark's timing summary (seconds per iteration).
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Total measured iterations.
+    pub iters: usize,
+    /// Statistics over per-iteration times (seconds), from batch means.
+    pub time: Stats,
+}
+
+impl BenchResult {
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (±{}, min {}, {} iters)",
+            self.name,
+            human_time(self.time.mean),
+            human_time(self.time.std),
+            human_time(self.time.min),
+            self.iters
+        )
+    }
+
+    /// Iterations per second at the mean time.
+    pub fn throughput(&self) -> f64 {
+        1.0 / self.time.mean
+    }
+}
+
+/// Render seconds with an adaptive unit.
+pub fn human_time(secs: f64) -> String {
+    if !secs.is_finite() {
+        return format!("{secs}");
+    }
+    let (v, unit) = if secs >= 1.0 {
+        (secs, "s")
+    } else if secs >= 1e-3 {
+        (secs * 1e3, "ms")
+    } else if secs >= 1e-6 {
+        (secs * 1e6, "µs")
+    } else {
+        (secs * 1e9, "ns")
+    };
+    format!("{} {unit}", format_sig(v, 4))
+}
+
+/// Benchmark a closure: warm up for `warmup`, then measure for `measure`.
+pub fn bench<F: FnMut()>(name: &str, warmup: Duration, measure: Duration, mut f: F) -> BenchResult {
+    // Warmup + calibration: find a batch size that runs >= ~1 ms.
+    let warm_start = Instant::now();
+    let mut batch = 1usize;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t0.elapsed();
+        if dt >= Duration::from_millis(1) || batch >= 1 << 20 {
+            if warm_start.elapsed() >= warmup {
+                break;
+            }
+        } else {
+            batch *= 2;
+        }
+        if warm_start.elapsed() >= warmup.max(Duration::from_millis(10)) {
+            break;
+        }
+    }
+
+    // Measurement: batches of `batch` iterations.
+    let mut batch_means: Vec<f64> = Vec::new();
+    let mut iters = 0usize;
+    let meas_start = Instant::now();
+    while meas_start.elapsed() < measure || batch_means.len() < 3 {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        batch_means.push(dt / batch as f64);
+        iters += batch;
+        if batch_means.len() > 10_000 {
+            break;
+        }
+    }
+    BenchResult { name: name.to_string(), iters, time: stats(&batch_means) }
+}
+
+/// Default quick bench (0.2 s warmup, 1 s measurement) with printing.
+pub fn quick_bench<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    let r = bench(name, Duration::from_millis(200), Duration::from_secs(1), f);
+    println!("{}", r.summary());
+    r
+}
+
+/// Standard header printed by every bench binary.
+pub fn bench_header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_a_cheap_closure() {
+        let mut acc = 0u64;
+        let r = bench(
+            "noop-ish",
+            Duration::from_millis(10),
+            Duration::from_millis(50),
+            || {
+                acc = acc.wrapping_add(std::hint::black_box(1));
+            },
+        );
+        assert!(r.iters > 100);
+        assert!(r.time.mean > 0.0 && r.time.mean < 1e-3);
+        assert!(r.throughput() > 1000.0);
+    }
+
+    #[test]
+    fn measures_a_slow_closure() {
+        let r = bench(
+            "sleepy",
+            Duration::from_millis(1),
+            Duration::from_millis(30),
+            || std::thread::sleep(Duration::from_millis(2)),
+        );
+        assert!(r.time.mean >= 1.5e-3, "{}", r.time.mean);
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert!(human_time(2.0).ends_with(" s"));
+        assert!(human_time(2e-3).ends_with(" ms"));
+        assert!(human_time(2e-6).ends_with(" µs"));
+        assert!(human_time(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn summary_contains_name() {
+        let r = bench("xyz", Duration::from_millis(1), Duration::from_millis(5), || {
+            std::hint::black_box(3 + 4);
+        });
+        assert!(r.summary().contains("xyz"));
+    }
+}

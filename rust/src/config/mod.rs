@@ -1,0 +1,211 @@
+//! Configuration substrate: a dependency-free TOML-subset parser plus the
+//! typed experiment configuration the CLI consumes.
+//!
+//! The subset covers what experiment configs need — top-level and `[table]`
+//! sections, `key = value` with integers, floats, booleans, strings
+//! (double-quoted, with `\"`, `\\`, `\n`, `\t` escapes), and flat arrays of
+//! primitives. Comments (`#`) and blank lines are ignored. Unknown keys are
+//! rejected at the typed layer so typos fail loudly.
+
+mod toml;
+
+pub use toml::{parse_toml, TomlDoc, TomlError, Value};
+
+use crate::problem::{Ensemble, ProblemSpec, SignalModel};
+
+/// Typed experiment configuration (see `configs/*.toml` for examples).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Problem distribution.
+    pub problem: ProblemSpec,
+    /// Step size `gamma` (paper: 1.0).
+    pub gamma: f64,
+    /// Exit tolerance on `||y - A x||_2` (paper: 1e-7).
+    pub tolerance: f64,
+    /// Maximum iterations / time steps (paper: 1500).
+    pub max_iters: usize,
+    /// Monte-Carlo trials.
+    pub trials: usize,
+    /// Master seed.
+    pub seed: u64,
+    /// Core counts to sweep in async experiments.
+    pub cores: Vec<usize>,
+    /// Worker threads used to parallelize *trials* (not the simulated cores).
+    pub trial_threads: usize,
+}
+
+impl Default for ExperimentConfig {
+    /// The paper's §IV setup.
+    fn default() -> Self {
+        ExperimentConfig {
+            problem: ProblemSpec::paper(),
+            gamma: 1.0,
+            tolerance: 1e-7,
+            max_iters: 1500,
+            trials: 500,
+            seed: 20170301,
+            cores: vec![1, 2, 4, 8, 16],
+            trial_threads: default_trial_threads(),
+        }
+    }
+}
+
+/// Default parallelism for Monte-Carlo trials: available cores, capped.
+pub fn default_trial_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+impl ExperimentConfig {
+    /// Parse from TOML text. Unknown keys are errors.
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        let doc = parse_toml(text).map_err(|e| e.to_string())?;
+        let mut cfg = ExperimentConfig::default();
+
+        for (key, value) in doc.section("") {
+            match key.as_str() {
+                "gamma" => cfg.gamma = value.as_f64().ok_or("gamma must be a number")?,
+                "tolerance" => cfg.tolerance = value.as_f64().ok_or("tolerance must be a number")?,
+                "max_iters" => cfg.max_iters = value.as_usize().ok_or("max_iters must be a positive integer")?,
+                "trials" => cfg.trials = value.as_usize().ok_or("trials must be a positive integer")?,
+                "seed" => cfg.seed = value.as_u64().ok_or("seed must be a nonnegative integer")?,
+                "trial_threads" => cfg.trial_threads = value.as_usize().ok_or("trial_threads must be a positive integer")?,
+                "cores" => {
+                    cfg.cores = value
+                        .as_array()
+                        .ok_or("cores must be an array")?
+                        .iter()
+                        .map(|v| v.as_usize().ok_or("cores entries must be positive integers"))
+                        .collect::<Result<Vec<_>, _>>()?;
+                }
+                other => return Err(format!("unknown top-level key `{other}`")),
+            }
+        }
+
+        for (key, value) in doc.section("problem") {
+            let p = &mut cfg.problem;
+            match key.as_str() {
+                "n" => p.n = value.as_usize().ok_or("problem.n must be a positive integer")?,
+                "m" => p.m = value.as_usize().ok_or("problem.m must be a positive integer")?,
+                "b" => p.b = value.as_usize().ok_or("problem.b must be a positive integer")?,
+                "s" => p.s = value.as_usize().ok_or("problem.s must be a positive integer")?,
+                "noise_std" => p.noise_std = value.as_f64().ok_or("problem.noise_std must be a number")?,
+                "ensemble" => {
+                    let s = value.as_str().ok_or("problem.ensemble must be a string")?;
+                    p.ensemble = Ensemble::parse(s).ok_or_else(|| format!("unknown ensemble `{s}`"))?;
+                }
+                "signal" => {
+                    let s = value.as_str().ok_or("problem.signal must be a string")?;
+                    p.signal = SignalModel::parse(s).ok_or_else(|| format!("unknown signal model `{s}`"))?;
+                }
+                other => return Err(format!("unknown problem key `{other}`")),
+            }
+        }
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &std::path::Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    /// Cross-field validation.
+    pub fn validate(&self) -> Result<(), String> {
+        self.problem.validate()?;
+        if self.gamma <= 0.0 {
+            return Err("gamma must be positive".into());
+        }
+        if self.tolerance <= 0.0 {
+            return Err("tolerance must be positive".into());
+        }
+        if self.max_iters == 0 {
+            return Err("max_iters must be positive".into());
+        }
+        if self.trials == 0 {
+            return Err("trials must be positive".into());
+        }
+        if self.cores.is_empty() || self.cores.contains(&0) {
+            return Err("cores must be a nonempty list of positive integers".into());
+        }
+        if self.trial_threads == 0 {
+            return Err("trial_threads must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.problem.n, 1000);
+        assert_eq!(c.problem.m, 300);
+        assert_eq!(c.problem.b, 15);
+        assert_eq!(c.problem.s, 20);
+        assert_eq!(c.gamma, 1.0);
+        assert_eq!(c.tolerance, 1e-7);
+        assert_eq!(c.max_iters, 1500);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let text = r#"
+# experiment
+gamma = 0.5
+tolerance = 1e-6
+max_iters = 200
+trials = 10
+seed = 7
+cores = [1, 2, 4]
+trial_threads = 2
+
+[problem]
+n = 64
+m = 32
+b = 8
+s = 4
+ensemble = "bernoulli"
+signal = "flat"
+noise_std = 0.01
+"#;
+        let c = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(c.gamma, 0.5);
+        assert_eq!(c.tolerance, 1e-6);
+        assert_eq!(c.max_iters, 200);
+        assert_eq!(c.trials, 10);
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.cores, vec![1, 2, 4]);
+        assert_eq!(c.problem.n, 64);
+        assert_eq!(c.problem.ensemble, Ensemble::Bernoulli);
+        assert_eq!(c.problem.signal, SignalModel::FlatSpikes);
+        assert_eq!(c.problem.noise_std, 0.01);
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        assert!(ExperimentConfig::from_toml("gamam = 1.0").is_err());
+        assert!(ExperimentConfig::from_toml("[problem]\nq = 3").is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_values() {
+        assert!(ExperimentConfig::from_toml("gamma = -1.0").is_err());
+        assert!(ExperimentConfig::from_toml("[problem]\nb = 7").is_err()); // 7 ∤ 300
+        assert!(ExperimentConfig::from_toml("cores = []").is_err());
+        assert!(ExperimentConfig::from_toml("cores = [0]").is_err());
+        assert!(ExperimentConfig::from_toml("[problem]\nensemble = \"martian\"").is_err());
+    }
+
+    #[test]
+    fn partial_override_keeps_defaults() {
+        let c = ExperimentConfig::from_toml("trials = 3").unwrap();
+        assert_eq!(c.trials, 3);
+        assert_eq!(c.problem.n, 1000); // untouched default
+    }
+}

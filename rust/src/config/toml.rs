@@ -1,0 +1,346 @@
+//! A dependency-free parser for the TOML subset used by ASTIR configs.
+//!
+//! Supported: top-level and `[section]` tables, `key = value` lines where a
+//! value is an integer, float, boolean, double-quoted string, or a flat
+//! array of those; `#` comments; blank lines. Nested tables, dotted keys,
+//! multiline strings, and datetimes are intentionally out of scope.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed primitive or flat-array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(v) => Some(*v as f64),
+            Value::Float(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Int(v) if *v >= 0 => Some(*v as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().map(|v| v as usize)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with 1-based line number.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TomlError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// A parsed document: map from section name ("" = top level) to key/value
+/// pairs in declaration order.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, Vec<(String, Value)>>,
+}
+
+impl TomlDoc {
+    /// Key/value pairs of a section (empty slice if absent).
+    pub fn section(&self, name: &str) -> &[(String, Value)] {
+        self.sections.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Look up one key in one section.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.section(section).iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    pub fn section_names(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+}
+
+fn err<T>(line: usize, message: impl Into<String>) -> Result<T, TomlError> {
+    Err(TomlError { line, message: message.into() })
+}
+
+/// Parse a TOML-subset document.
+pub fn parse_toml(text: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc = TomlDoc::default();
+    let mut current = String::new();
+    doc.sections.entry(current.clone()).or_default();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let lineno = lineno + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                return err(lineno, "unterminated section header");
+            };
+            let name = name.trim();
+            if name.is_empty() || !name.chars().all(is_key_char) {
+                return err(lineno, format!("invalid section name `{name}`"));
+            }
+            current = name.to_string();
+            doc.sections.entry(current.clone()).or_default();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            return err(lineno, "expected `key = value`");
+        };
+        let key = line[..eq].trim();
+        if key.is_empty() || !key.chars().all(is_key_char) {
+            return err(lineno, format!("invalid key `{key}`"));
+        }
+        let value_text = line[eq + 1..].trim();
+        if value_text.is_empty() {
+            return err(lineno, "missing value");
+        }
+        let (value, rest) = parse_value(value_text, lineno)?;
+        if !rest.trim().is_empty() {
+            return err(lineno, format!("trailing characters `{}`", rest.trim()));
+        }
+        let entries = doc.sections.get_mut(&current).unwrap();
+        if entries.iter().any(|(k, _)| k == key) {
+            return err(lineno, format!("duplicate key `{key}`"));
+        }
+        entries.push((key.to_string(), value));
+    }
+    Ok(doc)
+}
+
+fn is_key_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_' || c == '-'
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '\\' if in_str && !escaped => {
+                escaped = true;
+                continue;
+            }
+            '"' if !escaped => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+        escaped = false;
+    }
+    line
+}
+
+/// Parse one value at the start of `text`; return (value, remaining text).
+fn parse_value<'a>(text: &'a str, lineno: usize) -> Result<(Value, &'a str), TomlError> {
+    let text = text.trim_start();
+    if text.starts_with('"') {
+        return parse_string(text, lineno);
+    }
+    if let Some(rest) = text.strip_prefix('[') {
+        return parse_array(rest, lineno);
+    }
+    if let Some(rest) = text.strip_prefix("true") {
+        return Ok((Value::Bool(true), rest));
+    }
+    if let Some(rest) = text.strip_prefix("false") {
+        return Ok((Value::Bool(false), rest));
+    }
+    // Number: consume chars valid in numbers, then decide int vs float.
+    let end = text
+        .char_indices()
+        .find(|(_, c)| !matches!(c, '0'..='9' | '+' | '-' | '.' | 'e' | 'E' | '_'))
+        .map(|(i, _)| i)
+        .unwrap_or(text.len());
+    let (num, rest) = text.split_at(end);
+    let num_clean: String = num.chars().filter(|&c| c != '_').collect();
+    if num_clean.is_empty() {
+        return err(lineno, format!("cannot parse value starting at `{text}`"));
+    }
+    let looks_float = num_clean.contains('.') || num_clean.contains('e') || num_clean.contains('E');
+    if looks_float {
+        match num_clean.parse::<f64>() {
+            Ok(v) => Ok((Value::Float(v), rest)),
+            Err(_) => err(lineno, format!("invalid float `{num}`")),
+        }
+    } else {
+        match num_clean.parse::<i64>() {
+            Ok(v) => Ok((Value::Int(v), rest)),
+            Err(_) => err(lineno, format!("invalid integer `{num}`")),
+        }
+    }
+}
+
+fn parse_string<'a>(text: &'a str, lineno: usize) -> Result<(Value, &'a str), TomlError> {
+    debug_assert!(text.starts_with('"'));
+    let mut out = String::new();
+    let mut chars = text[1..].char_indices();
+    while let Some((i, c)) = chars.next() {
+        match c {
+            '"' => return Ok((Value::Str(out), &text[1 + i + 1..])),
+            '\\' => match chars.next() {
+                Some((_, 'n')) => out.push('\n'),
+                Some((_, 't')) => out.push('\t'),
+                Some((_, '"')) => out.push('"'),
+                Some((_, '\\')) => out.push('\\'),
+                Some((_, other)) => return err(lineno, format!("unknown escape `\\{other}`")),
+                None => return err(lineno, "dangling escape"),
+            },
+            other => out.push(other),
+        }
+    }
+    err(lineno, "unterminated string")
+}
+
+fn parse_array<'a>(mut text: &'a str, lineno: usize) -> Result<(Value, &'a str), TomlError> {
+    let mut items = Vec::new();
+    loop {
+        text = text.trim_start();
+        if let Some(rest) = text.strip_prefix(']') {
+            return Ok((Value::Array(items), rest));
+        }
+        if text.is_empty() {
+            return err(lineno, "unterminated array");
+        }
+        let (v, rest) = parse_value(text, lineno)?;
+        if matches!(v, Value::Array(_)) {
+            return err(lineno, "nested arrays are not supported");
+        }
+        items.push(v);
+        text = rest.trim_start();
+        if let Some(rest) = text.strip_prefix(',') {
+            text = rest;
+        } else if !text.starts_with(']') {
+            return err(lineno, "expected `,` or `]` in array");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_primitives() {
+        let d = parse_toml("a = 1\nb = -2.5\nc = true\nd = \"hi\"\ne = 1e-7\n").unwrap();
+        assert_eq!(d.get("", "a"), Some(&Value::Int(1)));
+        assert_eq!(d.get("", "b"), Some(&Value::Float(-2.5)));
+        assert_eq!(d.get("", "c"), Some(&Value::Bool(true)));
+        assert_eq!(d.get("", "d"), Some(&Value::Str("hi".into())));
+        assert_eq!(d.get("", "e"), Some(&Value::Float(1e-7)));
+    }
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let d = parse_toml("# top\nx = 1 # trailing\n[sec]\ny = 2\n").unwrap();
+        assert_eq!(d.get("", "x"), Some(&Value::Int(1)));
+        assert_eq!(d.get("sec", "y"), Some(&Value::Int(2)));
+        assert!(d.section_names().any(|s| s == "sec"));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let d = parse_toml("a = [1, 2, 3]\nb = [1.5, 2]\nc = [\"x\", \"y\"]\nd = []\n").unwrap();
+        assert_eq!(
+            d.get("", "a"),
+            Some(&Value::Array(vec![Value::Int(1), Value::Int(2), Value::Int(3)]))
+        );
+        assert_eq!(d.get("", "d"), Some(&Value::Array(vec![])));
+        let b = d.get("", "b").unwrap().as_array().unwrap();
+        assert_eq!(b[0].as_f64(), Some(1.5));
+        assert_eq!(b[1].as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn string_escapes_and_hash_inside_string() {
+        let d = parse_toml(r#"s = "a#b\n\"q\"\\" "#).unwrap();
+        assert_eq!(d.get("", "s").unwrap().as_str(), Some("a#b\n\"q\"\\"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse_toml("ok = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(e.to_string().contains("line 2"));
+    }
+
+    #[test]
+    fn rejects_malformed_input() {
+        assert!(parse_toml("[unterminated").is_err());
+        assert!(parse_toml("[]").is_err());
+        assert!(parse_toml("k = ").is_err());
+        assert!(parse_toml("k = \"open").is_err());
+        assert!(parse_toml("k = [1, 2").is_err());
+        assert!(parse_toml("k = [[1]]").is_err());
+        assert!(parse_toml("k = 1 2").is_err());
+        assert!(parse_toml("k = zzz").is_err());
+        assert!(parse_toml("a = 1\na = 2").is_err()); // duplicate
+        assert!(parse_toml("bad key = 1").is_err());
+    }
+
+    #[test]
+    fn numbers_with_underscores_and_signs() {
+        let d = parse_toml("a = 1_000\nb = +2\nc = -0.5\n").unwrap();
+        assert_eq!(d.get("", "a").unwrap().as_i64(), Some(1000));
+        assert_eq!(d.get("", "b").unwrap().as_i64(), Some(2));
+        assert_eq!(d.get("", "c").unwrap().as_f64(), Some(-0.5));
+    }
+
+    #[test]
+    fn value_accessors() {
+        assert_eq!(Value::Int(3).as_usize(), Some(3));
+        assert_eq!(Value::Int(-3).as_u64(), None);
+        assert_eq!(Value::Float(1.0).as_i64(), None);
+        assert_eq!(Value::Bool(true).as_bool(), Some(true));
+        assert_eq!(Value::Str("x".into()).as_f64(), None);
+    }
+}

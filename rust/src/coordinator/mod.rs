@@ -1,0 +1,223 @@
+//! Leader/worker orchestration.
+//!
+//! The experiments are Monte-Carlo sweeps: hundreds of independent trials
+//! (fresh problem instance each) per configuration point. The coordinator
+//! owns that outer loop:
+//!
+//! * [`run_trials`] — a deterministic work-stealing trial pool: trial `i`
+//!   always receives the same RNG stream regardless of which OS thread
+//!   executes it, so results are bit-identical at any `threads` setting.
+//! * [`Leader`] — the config-driven facade the CLI and benches use:
+//!   generate per-trial problems, dispatch to the sequential solvers, the
+//!   discrete-time simulator, or the real-thread runtime, and aggregate
+//!   [`crate::metrics::Stats`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::algorithms::{self, GreedyOpts, RunResult};
+use crate::config::ExperimentConfig;
+use crate::metrics::{stats, Stats};
+use crate::problem::Problem;
+use crate::rng::Rng;
+use crate::sim::{simulate, SimOpts, SimOutcome, SpeedSchedule};
+
+/// Run `trials` independent jobs on `threads` OS threads.
+///
+/// Job `i` gets an RNG derived from `master_seed` and `i` only — results
+/// are independent of the thread count and of scheduling order. Outputs
+/// are returned in trial order.
+pub fn run_trials<T, F>(trials: usize, threads: usize, master_seed: u64, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, &mut Rng) -> T + Sync,
+{
+    assert!(threads >= 1);
+    // Pre-derive one RNG per trial from the master stream (serially, so
+    // the assignment is scheduling-independent).
+    let mut root = Rng::seed_from(master_seed);
+    let trial_rngs: Vec<Rng> = (0..trials).map(|i| root.split(i as u64)).collect();
+
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<T>>> = Mutex::new((0..trials).map(|_| None).collect());
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(trials.max(1)) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= trials {
+                    break;
+                }
+                let mut rng = trial_rngs[i].clone();
+                let out = f(i, &mut rng);
+                results.lock().unwrap()[i] = Some(out);
+            });
+        }
+    });
+
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("every trial must produce a result"))
+        .collect()
+}
+
+/// Aggregated sweep point: a configuration value and the sample statistics
+/// of its per-trial outcomes.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    /// The swept parameter (e.g. number of cores).
+    pub param: f64,
+    /// Statistics of steps-to-exit across trials.
+    pub steps: Stats,
+    /// Fraction of trials that converged.
+    pub convergence_rate: f64,
+}
+
+/// Config-driven experiment facade.
+pub struct Leader {
+    pub cfg: ExperimentConfig,
+}
+
+impl Leader {
+    pub fn new(cfg: ExperimentConfig) -> Self {
+        cfg.validate().expect("invalid experiment config");
+        Leader { cfg }
+    }
+
+    /// Fresh problem instance for trial `i` (deterministic in the config
+    /// seed; shared by all solvers compared within the trial).
+    pub fn problem_for_trial(&self, rng: &mut Rng) -> Problem {
+        self.cfg.problem.generate(rng)
+    }
+
+    /// Greedy options implied by the config.
+    pub fn greedy_opts(&self) -> GreedyOpts {
+        GreedyOpts {
+            gamma: self.cfg.gamma,
+            tolerance: self.cfg.tolerance,
+            max_iters: self.cfg.max_iters,
+            ..Default::default()
+        }
+    }
+
+    /// Monte-Carlo over sequential StoIHT (the paper's horizontal line in
+    /// Fig. 2): returns per-trial results.
+    pub fn monte_carlo_stoiht(&self, opts: &GreedyOpts) -> Vec<RunResult> {
+        run_trials(self.cfg.trials, self.cfg.trial_threads, self.cfg.seed, |_i, rng| {
+            let p = self.problem_for_trial(rng);
+            let mut solver_rng = rng.split(0xA160);
+            algorithms::stoiht(&p, opts, &mut solver_rng)
+        })
+    }
+
+    /// Monte-Carlo over the discrete-time simulator at a fixed core count.
+    pub fn monte_carlo_sim(
+        &self,
+        cores: usize,
+        schedule: &SpeedSchedule,
+        sim_opts: &SimOpts,
+    ) -> Vec<SimOutcome> {
+        run_trials(self.cfg.trials, self.cfg.trial_threads, self.cfg.seed, |_i, rng| {
+            let p = self.problem_for_trial(rng);
+            let mut sim_rng = rng.split(0x519);
+            simulate(&p, cores, schedule, sim_opts, &mut sim_rng)
+        })
+    }
+
+    /// Sweep the configured core counts; aggregate steps-to-exit stats.
+    pub fn sweep_cores(&self, schedule: &SpeedSchedule, sim_opts: &SimOpts) -> Vec<SweepPoint> {
+        self.cfg
+            .cores
+            .iter()
+            .map(|&c| {
+                let outs = self.monte_carlo_sim(c, schedule, sim_opts);
+                let steps: Vec<f64> = outs.iter().map(|o| o.steps as f64).collect();
+                let conv = outs.iter().filter(|o| o.converged).count() as f64 / outs.len() as f64;
+                SweepPoint { param: c as f64, steps: stats(&steps), convergence_rate: conv }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problem::ProblemSpec;
+
+    fn small_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            problem: ProblemSpec { n: 96, m: 48, b: 8, s: 4, ..ProblemSpec::tiny() },
+            trials: 8,
+            max_iters: 1500,
+            cores: vec![1, 2],
+            trial_threads: 3,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn run_trials_returns_in_order() {
+        let out = run_trials(10, 4, 1, |i, _rng| i * 2);
+        assert_eq!(out, (0..10).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_trials_deterministic_across_thread_counts() {
+        let a: Vec<u64> = run_trials(12, 1, 99, |_i, rng| rng.next_u64());
+        let b: Vec<u64> = run_trials(12, 5, 99, |_i, rng| rng.next_u64());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn run_trials_zero_trials() {
+        let out: Vec<u32> = run_trials(0, 4, 1, |_, _| 0u32);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn leader_monte_carlo_stoiht_converges() {
+        let leader = Leader::new(small_cfg());
+        let results = leader.monte_carlo_stoiht(&leader.greedy_opts());
+        assert_eq!(results.len(), 8);
+        let conv = results.iter().filter(|r| r.converged).count();
+        assert!(conv >= 7, "only {conv}/8 converged");
+    }
+
+    #[test]
+    fn leader_sweep_has_configured_points() {
+        let mut cfg = small_cfg();
+        cfg.trials = 5;
+        let leader = Leader::new(cfg);
+        let pts = leader.sweep_cores(&SpeedSchedule::AllFast, &SimOpts::default());
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].param, 1.0);
+        assert_eq!(pts[1].param, 2.0);
+        for p in &pts {
+            assert!(p.convergence_rate > 0.5);
+            assert!(p.steps.mean > 0.0);
+        }
+    }
+
+    #[test]
+    fn trial_problems_differ_but_are_reproducible() {
+        let leader = Leader::new(small_cfg());
+        let probs: Vec<Vec<f64>> = run_trials(3, 2, leader.cfg.seed, |_i, rng| {
+            leader.problem_for_trial(rng).x_true
+        });
+        assert_ne!(probs[0], probs[1]);
+        let again: Vec<Vec<f64>> = run_trials(3, 1, leader.cfg.seed, |_i, rng| {
+            leader.problem_for_trial(rng).x_true
+        });
+        assert_eq!(probs, again);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid experiment config")]
+    fn leader_rejects_bad_config() {
+        let mut cfg = small_cfg();
+        cfg.problem.b = 7;
+        let _ = Leader::new(cfg);
+    }
+}

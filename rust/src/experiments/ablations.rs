@@ -1,0 +1,198 @@
+//! Ablations A1–A4 (DESIGN.md §4) — design choices the paper argues for in
+//! prose, each turned into a measured comparison.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::Leader;
+use crate::metrics::{stats, Table};
+use crate::sim::{SharingMode, SimOpts, SpeedSchedule};
+use crate::tally::TallyWeighting;
+
+/// A1 — tally sharing (Alg. 2) vs HOGWILD!-style shared iterate.
+///
+/// The paper's §I argument: with a dense cost function, sharing `x` makes
+/// overwrites frequent and lets slow cores undo fast cores' progress;
+/// sharing the passively-used tally is robust. Output columns:
+/// `cores, tally_mean, tally_conv, sharedx_mean, sharedx_conv`.
+pub fn tally_vs_shared_x(cfg: &ExperimentConfig) -> Table {
+    let leader = Leader::new(cfg.clone());
+    let mk_opts = |mode: SharingMode| SimOpts {
+        gamma: cfg.gamma,
+        tolerance: cfg.tolerance,
+        max_steps: cfg.max_iters,
+        mode,
+        ..Default::default()
+    };
+    // Slow cores make the overwrite hazard visible (paper's motivation).
+    let schedule = SpeedSchedule::HalfSlow { period: 4 };
+
+    let mut table = Table::new(&["cores", "tally_mean", "tally_conv", "sharedx_mean", "sharedx_conv"]);
+    for &c in &cfg.cores {
+        let tally = leader.monte_carlo_sim(c, &schedule, &mk_opts(SharingMode::Tally));
+        let shared = leader.monte_carlo_sim(c, &schedule, &mk_opts(SharingMode::SharedX));
+        let mean = |outs: &[crate::sim::SimOutcome]| {
+            stats(&outs.iter().map(|o| o.steps as f64).collect::<Vec<_>>()).mean
+        };
+        let conv = |outs: &[crate::sim::SimOutcome]| {
+            outs.iter().filter(|o| o.converged).count() as f64 / outs.len() as f64
+        };
+        table.push_row(vec![c as f64, mean(&tally), conv(&tally), mean(&shared), conv(&shared)]);
+    }
+    table
+}
+
+/// A2 — inconsistent reads of the tally.
+///
+/// Sweeps the per-coordinate staleness probability of each `φ` read at a
+/// fixed core count (the largest configured). The paper's §III hope is
+/// that the algorithm is robust because `φ` is used passively; this
+/// measures the cost. Output: `stale_prob, steps_mean, steps_std, conv`.
+pub fn inconsistent_reads(cfg: &ExperimentConfig) -> Table {
+    let leader = Leader::new(cfg.clone());
+    let cores = *cfg.cores.iter().max().expect("validated nonempty");
+    let probs = [0.0, 0.1, 0.25, 0.5, 0.75, 1.0];
+
+    let mut table = Table::new(&["stale_prob", "steps_mean", "steps_std", "conv"]);
+    for &p in &probs {
+        let opts = SimOpts {
+            gamma: cfg.gamma,
+            tolerance: cfg.tolerance,
+            max_steps: cfg.max_iters,
+            stale_read_prob: p,
+            ..Default::default()
+        };
+        let outs = leader.monte_carlo_sim(cores, &SpeedSchedule::AllFast, &opts);
+        let st = stats(&outs.iter().map(|o| o.steps as f64).collect::<Vec<_>>());
+        let conv = outs.iter().filter(|o| o.converged).count() as f64 / outs.len() as f64;
+        table.push_row(vec![p, st.mean, st.std, conv]);
+    }
+    table
+}
+
+/// A3 — tally weighting schemes (paper `+t/−(t−1)` vs unweighted vs
+/// no-decrement), under the slow-core schedule where weighting matters.
+/// Output: `cores, progress_mean, unit_mean, nodecr_mean` (+ conv columns).
+pub fn tally_weighting(cfg: &ExperimentConfig) -> Table {
+    let leader = Leader::new(cfg.clone());
+    let schedule = SpeedSchedule::HalfSlow { period: 4 };
+    let weightings = [
+        ("progress", TallyWeighting::Progress),
+        ("unit", TallyWeighting::Unit),
+        ("nodecr", TallyWeighting::NoDecrement),
+    ];
+
+    let mut table = Table::new(&[
+        "cores",
+        "progress_mean",
+        "progress_conv",
+        "unit_mean",
+        "unit_conv",
+        "nodecr_mean",
+        "nodecr_conv",
+    ]);
+    for &c in &cfg.cores {
+        let mut row = vec![c as f64];
+        for (_, w) in weightings {
+            let opts = SimOpts {
+                gamma: cfg.gamma,
+                tolerance: cfg.tolerance,
+                max_steps: cfg.max_iters,
+                weighting: w,
+                ..Default::default()
+            };
+            let outs = leader.monte_carlo_sim(c, &schedule, &opts);
+            let st = stats(&outs.iter().map(|o| o.steps as f64).collect::<Vec<_>>());
+            let conv = outs.iter().filter(|o| o.converged).count() as f64 / outs.len() as f64;
+            row.push(st.mean);
+            row.push(conv);
+        }
+        table.push_row(row);
+    }
+    table
+}
+
+/// A4 — block size sweep for sequential StoIHT (the paper notes the
+/// recovery error depends on `b`, deferring to [22]). Sweeps divisors of
+/// `m`; output: `b, iters_mean, iters_std, conv`.
+pub fn block_size_sweep(cfg: &ExperimentConfig, block_sizes: &[usize]) -> Table {
+    let mut table = Table::new(&["b", "iters_mean", "iters_std", "conv"]);
+    for &b in block_sizes {
+        assert_eq!(cfg.problem.m % b, 0, "b={b} must divide m={}", cfg.problem.m);
+        let mut cfg_b = cfg.clone();
+        cfg_b.problem.b = b;
+        let leader = Leader::new(cfg_b.clone());
+        let runs = leader.monte_carlo_stoiht(&leader.greedy_opts());
+        let st = stats(&runs.iter().map(|r| r.iters as f64).collect::<Vec<_>>());
+        let conv = runs.iter().filter(|r| r.converged).count() as f64 / runs.len() as f64;
+        table.push_row(vec![b as f64, st.mean, st.std, conv]);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problem::ProblemSpec;
+
+    fn small_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            problem: ProblemSpec { n: 96, m: 48, b: 8, s: 4, ..ProblemSpec::tiny() },
+            trials: 6,
+            max_iters: 1500,
+            cores: vec![2, 6],
+            trial_threads: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn a1_tally_beats_shared_x_with_slow_cores() {
+        let table = tally_vs_shared_x(&small_cfg());
+        assert_eq!(table.rows.len(), 2);
+        // At the larger core count the tally variant must converge at
+        // least as reliably as the shared-x strawman.
+        let last = table.rows.last().unwrap();
+        let (tally_conv, sharedx_conv) = (last[2], last[4]);
+        assert!(tally_conv >= sharedx_conv, "tally {tally_conv} vs sharedx {sharedx_conv}");
+        assert!(tally_conv > 0.8);
+    }
+
+    #[test]
+    fn a2_staleness_grid() {
+        let mut cfg = small_cfg();
+        cfg.trials = 4;
+        let table = inconsistent_reads(&cfg);
+        assert_eq!(table.rows.len(), 6);
+        // Zero staleness must converge.
+        assert!(table.rows[0][3] > 0.7);
+    }
+
+    #[test]
+    fn a3_weightings_all_converge_on_easy_problem() {
+        let mut cfg = small_cfg();
+        cfg.trials = 4;
+        cfg.cores = vec![4];
+        let table = tally_weighting(&cfg);
+        assert_eq!(table.rows.len(), 1);
+        let row = &table.rows[0];
+        for conv_col in [2, 4, 6] {
+            assert!(row[conv_col] > 0.5, "col {conv_col}: {}", row[conv_col]);
+        }
+    }
+
+    #[test]
+    fn a4_block_sizes_run() {
+        let mut cfg = small_cfg();
+        cfg.trials = 4;
+        let table = block_size_sweep(&cfg, &[4, 8, 16]);
+        assert_eq!(table.rows.len(), 3);
+        for row in &table.rows {
+            assert!(row[3] > 0.5, "b={} conv={}", row[0], row[3]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn a4_rejects_non_divisor() {
+        block_size_sweep(&small_cfg(), &[7]);
+    }
+}

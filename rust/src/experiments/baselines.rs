@@ -1,0 +1,100 @@
+//! A5 — baseline field: phase-transition sweep over the measurement count
+//! for every recovery algorithm in the crate (IHT, StoIHT, OMP, CoSaMP,
+//! StoGradMP).
+//!
+//! For each `m` in the sweep, run `cfg.trials` fresh instances and record
+//! each solver's success rate (relative recovery error < 1e-4) — the
+//! classic compressed-sensing phase-transition curves the paper's §II
+//! situates itself in.
+
+use crate::algorithms::{cosamp, iht, omp, stogradmp, stoiht, GreedyOpts};
+use crate::config::ExperimentConfig;
+use crate::coordinator::run_trials;
+use crate::metrics::Table;
+use crate::problem::ProblemSpec;
+
+/// Success threshold on relative recovery error.
+pub const SUCCESS_REL_ERR: f64 = 1e-4;
+
+/// Sweep `m` over `ms`; returns columns
+/// `m, iht, stoiht, omp, cosamp, stogradmp` (success rates in [0, 1]).
+pub fn phase_transition(cfg: &ExperimentConfig, ms: &[usize]) -> Table {
+    let mut table = Table::new(&["m", "iht", "stoiht", "omp", "cosamp", "stogradmp"]);
+    for &m in ms {
+        let spec = ProblemSpec { m, b: pick_block(m, cfg.problem.b), ..cfg.problem.clone() };
+        spec.validate().expect("swept spec invalid");
+        let opts = GreedyOpts {
+            gamma: cfg.gamma,
+            tolerance: cfg.tolerance,
+            max_iters: cfg.max_iters,
+            ..Default::default()
+        };
+        let cosamp_opts = GreedyOpts { max_iters: 100, ..opts.clone() };
+
+        // success counts per algorithm
+        let results = run_trials(cfg.trials, cfg.trial_threads, cfg.seed ^ m as u64, |_i, rng| {
+            let p = spec.generate(rng);
+            let mut r1 = rng.split(1);
+            let mut r2 = rng.split(2);
+            let ok = |x: &[f64]| (p.relative_error(x) < SUCCESS_REL_ERR) as u32;
+            [
+                ok(&iht(&p, &opts).x),
+                ok(&stoiht(&p, &opts, &mut r1).x),
+                ok(&omp(&p, &opts).x),
+                ok(&cosamp(&p, &cosamp_opts).x),
+                ok(&stogradmp(&p, &cosamp_opts, &mut r2).x),
+            ]
+        });
+        let mut row = vec![m as f64];
+        for alg in 0..5 {
+            let succ: u32 = results.iter().map(|r| r[alg]).sum();
+            row.push(succ as f64 / cfg.trials as f64);
+        }
+        table.push_row(row);
+    }
+    table
+}
+
+/// Largest divisor of `m` that is `<= preferred` (keeps the block count
+/// integral as `m` sweeps).
+fn pick_block(m: usize, preferred: usize) -> usize {
+    (1..=preferred.min(m)).rev().find(|b| m % b == 0).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            problem: ProblemSpec { n: 96, m: 48, b: 8, s: 4, ..ProblemSpec::tiny() },
+            trials: 4,
+            max_iters: 1500,
+            trial_threads: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn pick_block_prefers_divisors() {
+        assert_eq!(pick_block(48, 8), 8);
+        assert_eq!(pick_block(50, 8), 5);
+        assert_eq!(pick_block(7, 8), 7);
+        assert_eq!(pick_block(13, 4), 1);
+    }
+
+    #[test]
+    fn phase_transition_monotone_ends() {
+        // Success should be ~0 with far too few measurements and ~1 with
+        // plenty, for every algorithm.
+        let cfg = small_cfg();
+        let table = phase_transition(&cfg, &[8, 72]);
+        assert_eq!(table.rows.len(), 2);
+        let low = &table.rows[0];
+        let high = &table.rows[1];
+        for alg in 1..6 {
+            assert!(low[alg] <= 0.5, "alg {alg} at m=8: {}", low[alg]);
+            assert!(high[alg] >= 0.75, "alg {alg} at m=72: {}", high[alg]);
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Figure 1 — StoIHT with an accurate support estimate.
+//!
+//! Reproduces the paper's first experiment: standard StoIHT (Alg. 1)
+//! against the modified StoIHT whose estimate step projects onto
+//! `Γ^t ∪ T̃` for a *fixed* oracle estimate `T̃` of accuracy
+//! `α = |T̃ ∩ T| / s ∈ {0, 0.25, 0.5, 0.75, 1}`. Output: mean recovery
+//! error `‖x^t − x‖₂` per iteration over `cfg.trials` trials (paper: 50).
+//!
+//! Expected shape (paper): curves with α > 0.5 converge in fewer
+//! iterations; α = 1 needs roughly **half** the iterations of standard
+//! StoIHT; α = 0 is slower than standard.
+
+use crate::algorithms::{make_oracle, stoiht, stoiht_with_oracle};
+use crate::config::ExperimentConfig;
+use crate::coordinator::run_trials;
+use crate::metrics::{mean_trace, Table, Trace};
+
+/// The α grid of the paper's Fig. 1.
+pub const ALPHAS: [f64; 5] = [0.0, 0.25, 0.5, 0.75, 1.0];
+
+/// Fig.-1 outputs: the mean-error series (the figure itself) plus a
+/// per-variant convergence summary (mean traces plateau when a minority of
+/// trials stall, so the summary separates rate from speed).
+pub struct Fig1Output {
+    /// Columns `iteration, stoiht, alpha_0, …, alpha_100` — mean error.
+    pub series: Table,
+    /// Columns `variant(0=stoiht,1..=alphas), conv_rate, iters_mean_conv,
+    /// iters_median_conv` over trials that reached the tolerance.
+    pub summary: Table,
+}
+
+/// Run the Fig.-1 experiment (see [`Fig1Output`]).
+pub fn fig1(cfg: &ExperimentConfig) -> Fig1Output {
+    let opts = crate::algorithms::GreedyOpts {
+        gamma: cfg.gamma,
+        tolerance: cfg.tolerance,
+        max_iters: cfg.max_iters,
+        record_error: true,
+        ..Default::default()
+    };
+
+    // Each trial returns per-variant (trace, converged, iters); paired
+    // common-random-numbers design: same problem instance per trial for
+    // every variant, independent solver streams. Variant 0 = standard.
+    let per_trial = run_trials(cfg.trials, cfg.trial_threads, cfg.seed, |_i, rng| {
+        let problem = cfg.problem.generate(rng);
+        let mut solver_rng = rng.split(1);
+        let std_run = stoiht(&problem, &opts, &mut solver_rng);
+        let mut outs: Vec<(Trace, bool, usize)> =
+            vec![(std_run.error_trace, std_run.converged, std_run.iters)];
+        for (k, &alpha) in ALPHAS.iter().enumerate() {
+            let mut oracle_rng = rng.split(100 + k as u64);
+            let oracle = make_oracle(&problem, alpha, &mut oracle_rng);
+            let mut srng = rng.split(200 + k as u64);
+            let run = stoiht_with_oracle(&problem, &opts, &mut srng, &oracle);
+            outs.push((run.error_trace, run.converged, run.iters));
+        }
+        outs
+    });
+
+    let n_variants = ALPHAS.len() + 1;
+    let mut summary = Table::new(&["variant", "conv_rate", "iters_mean_conv", "iters_median_conv"]);
+    for v in 0..n_variants {
+        let conv: Vec<f64> = per_trial
+            .iter()
+            .filter(|t| t[v].1)
+            .map(|t| t[v].2 as f64)
+            .collect();
+        let rate = conv.len() as f64 / per_trial.len() as f64;
+        let st = crate::metrics::stats(&conv);
+        summary.push_row(vec![v as f64, rate, st.mean, st.median]);
+    }
+
+    let std_mean = mean_trace(&per_trial.iter().map(|t| t[0].0.clone()).collect::<Vec<_>>());
+    let alpha_means: Vec<Trace> = (0..ALPHAS.len())
+        .map(|k| mean_trace(&per_trial.iter().map(|t| t[k + 1].0.clone()).collect::<Vec<_>>()))
+        .collect();
+
+    let len = std_mean
+        .len()
+        .max(alpha_means.iter().map(|t| t.len()).max().unwrap_or(0));
+    let std_mean = std_mean.resampled(len);
+    let alpha_means: Vec<Trace> = alpha_means.iter().map(|t| t.resampled(len)).collect();
+
+    let mut table = Table::new(&[
+        "iteration", "stoiht", "alpha_0", "alpha_25", "alpha_50", "alpha_75", "alpha_100",
+    ]);
+    for t in 0..len {
+        let mut row = Vec::with_capacity(7);
+        row.push((t + 1) as f64);
+        row.push(std_mean.values[t]);
+        for am in &alpha_means {
+            row.push(am.values[t]);
+        }
+        table.push_row(row);
+    }
+    Fig1Output { series: table, summary }
+}
+
+/// Iterations-to-reach-threshold summary of a Fig.-1 table (used by tests
+/// and the bench to assert the paper's qualitative claims).
+pub fn iters_to_threshold(table: &Table, col: usize, threshold: f64) -> Option<usize> {
+    table
+        .rows
+        .iter()
+        .position(|row| row[col] < threshold)
+        .map(|idx| idx + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problem::ProblemSpec;
+
+    fn small_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            problem: ProblemSpec { n: 128, m: 64, b: 8, s: 4, ..ProblemSpec::tiny() },
+            trials: 6,
+            max_iters: 800,
+            trial_threads: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fig1_shape_and_headline_claim() {
+        let out = fig1(&small_cfg());
+        let table = &out.series;
+        assert_eq!(table.columns.len(), 7);
+        assert!(!table.rows.is_empty());
+        // Columns: 1 = stoiht, 6 = alpha_100.
+        let thr = 1e-4;
+        let std_iters = iters_to_threshold(table, 1, thr).expect("stoiht should converge");
+        let a100_iters = iters_to_threshold(table, 6, thr).expect("alpha=1 should converge");
+        // Paper: alpha = 1 needs roughly half the iterations.
+        assert!(
+            (a100_iters as f64) < 0.8 * std_iters as f64,
+            "alpha=1: {a100_iters}, standard: {std_iters}"
+        );
+        // alpha = 0 must not be faster than alpha = 1.
+        let a0 = iters_to_threshold(table, 2, thr).unwrap_or(usize::MAX);
+        assert!(a0 >= a100_iters);
+        // summary: 6 variants; standard + alpha=1 converge on easy problems
+        assert_eq!(out.summary.rows.len(), 6);
+        assert!(out.summary.rows[0][1] > 0.8, "standard conv rate");
+        assert!(out.summary.rows[5][1] > 0.8, "alpha=1 conv rate");
+        // alpha=1 mean iterations (converged) beat standard's
+        assert!(out.summary.rows[5][2] < out.summary.rows[0][2]);
+    }
+
+    #[test]
+    fn fig1_is_deterministic() {
+        let cfg = small_cfg();
+        let t1 = fig1(&cfg);
+        let t2 = fig1(&cfg);
+        assert_eq!(t1.series.rows[10], t2.series.rows[10]);
+        assert_eq!(t1.summary.rows, t2.summary.rows);
+    }
+
+    #[test]
+    fn iters_to_threshold_basics() {
+        let mut t = Table::new(&["it", "v"]);
+        t.push_row(vec![1.0, 0.5]);
+        t.push_row(vec![2.0, 0.05]);
+        assert_eq!(iters_to_threshold(&t, 1, 0.1), Some(2));
+        assert_eq!(iters_to_threshold(&t, 1, 0.01), None);
+    }
+}

@@ -1,0 +1,16 @@
+//! Experiment drivers — one per figure/ablation in DESIGN.md §4.
+//!
+//! Each driver is a pure function from an [`ExperimentConfig`] to a
+//! [`Table`], shared by the CLI (`astir fig1`, …) and the `cargo bench`
+//! targets, so the regenerated series are identical however they are
+//! invoked.
+
+pub mod ablations;
+pub mod baselines;
+pub mod fig1;
+pub mod fig2;
+
+pub use ablations::{block_size_sweep, inconsistent_reads, tally_vs_shared_x, tally_weighting};
+pub use baselines::phase_transition;
+pub use fig1::fig1;
+pub use fig2::{fig2, Fig2Variant};

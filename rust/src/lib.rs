@@ -1,0 +1,65 @@
+//! # ASTIR — Asynchronous Stochastic Iterative Recovery
+//!
+//! A production-quality reproduction of Needell & Woolf,
+//! *"An Asynchronous Parallel Approach to Sparse Recovery"* (2017), built as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's coordination contribution: a
+//!   multi-core asynchronous runtime in which worker cores run StoIHT
+//!   iterations and share a *tally vector* `φ` (not the iterate itself) in
+//!   shared memory via atomic updates.
+//! * **Layer 2 (`python/compile/model.py`)** — the StoIHT proxy/identify
+//!   compute graph in JAX, AOT-lowered to HLO text artifacts.
+//! * **Layer 1 (`python/compile/kernels/`)** — the block-gradient hot-spot as
+//!   a Pallas kernel (interpret mode on CPU), validated against a pure-jnp
+//!   oracle.
+//!
+//! Python never runs on the solve path: `make artifacts` lowers the compute
+//! graph once, and the Rust binary loads the HLO via the PJRT C API
+//! (`runtime` module) or runs the hand-optimized native kernels (`backend`).
+//!
+//! ## Crate map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`linalg`] | dense BLAS-like substrate (gemv/gemm, QR, CGLS) |
+//! | [`rng`] | deterministic xoshiro256++ RNG, Gaussian sampling |
+//! | [`problem`] | compressed-sensing problem generation (matrix ensembles, sparse signals, block partitions) |
+//! | [`support`] | top-`s` support identification, unions, accuracy metrics |
+//! | [`algorithms`] | IHT, StoIHT, OMP, CoSaMP, StoGradMP baselines |
+//! | [`tally`] | the shared atomic tally vector `φ` (the paper's §III) |
+//! | [`sim`] | discrete-time multicore simulator (paper §IV-B semantics) |
+//! | [`async_runtime`] | real-thread asynchronous execution with shared tally |
+//! | [`coordinator`] | leader/worker orchestration, trial batching, halting |
+//! | [`runtime`] | PJRT client wrapper: load + execute AOT HLO artifacts |
+//! | [`backend`] | compute-backend abstraction (native vs PJRT) |
+//! | [`config`] | TOML-subset config parser + experiment configs |
+//! | [`metrics`] | convergence traces, trial statistics, CSV/JSON output |
+//! | [`experiments`] | drivers regenerating every figure in the paper |
+//! | [`report`] | text/CSV rendering of experiment outputs |
+//! | [`bench_harness`] | the in-repo micro-benchmark harness (no criterion offline) |
+//! | [`testutil`] | mini property-testing framework used by unit tests |
+
+pub mod algorithms;
+pub mod async_runtime;
+pub mod backend;
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod linalg;
+pub mod metrics;
+pub mod problem;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod support;
+pub mod tally;
+pub mod testutil;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Version string reported by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

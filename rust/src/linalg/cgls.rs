@@ -1,0 +1,114 @@
+//! CGLS (conjugate gradient on the normal equations) — the iterative
+//! least-squares alternative to QR used by StoGradMP when the selected
+//! support is large enough that `O(m k^2)` QR becomes noticeable, and as an
+//! independent cross-check of the QR solver in tests.
+
+use super::dense::{axpy, dot, Mat};
+use super::scalar::Scalar;
+
+/// Outcome of a CGLS solve.
+#[derive(Clone, Debug)]
+pub struct CglsResult<S: Scalar> {
+    /// Solution estimate.
+    pub z: Vec<S>,
+    /// Iterations executed.
+    pub iters: usize,
+    /// Final `||A^T (y - A z)||` (normal-equation residual).
+    pub grad_norm: S,
+    /// Whether `grad_norm <= tol * ||A^T y||` was reached.
+    pub converged: bool,
+}
+
+/// Solve `min ||A z - y||_2` by CGLS.
+///
+/// * `tol` — relative tolerance on the normal-equation residual.
+/// * `max_iters` — hard cap (the exact solution is reached in `<= k`
+///   iterations in exact arithmetic).
+pub fn cgls<S: Scalar>(a: &Mat<S>, y: &[S], tol: S, max_iters: usize) -> CglsResult<S> {
+    let m = a.rows();
+    let k = a.cols();
+    assert_eq!(y.len(), m, "rhs length");
+
+    let mut z = vec![S::ZERO; k];
+    let mut r = y.to_vec(); // residual y - A z (z = 0)
+    let mut s = a.gemv_t(&r); // normal residual A^T r
+    let s0_norm = dot(&s, &s).sqrt();
+    if s0_norm == S::ZERO {
+        return CglsResult { z, iters: 0, grad_norm: S::ZERO, converged: true };
+    }
+    let threshold = tol * s0_norm;
+
+    let mut p = s.clone();
+    let mut gamma = dot(&s, &s);
+    let mut q = vec![S::ZERO; m];
+    let mut iters = 0;
+
+    for _ in 0..max_iters {
+        a.as_block().gemv_into(&p, &mut q);
+        let qq = dot(&q, &q);
+        if qq == S::ZERO {
+            break;
+        }
+        let alpha = gamma / qq;
+        axpy(alpha, &p, &mut z);
+        axpy(-alpha, &q, &mut r);
+        s = a.gemv_t(&r);
+        let gamma_new = dot(&s, &s);
+        iters += 1;
+        if gamma_new.sqrt() <= threshold {
+            return CglsResult { z, iters, grad_norm: gamma_new.sqrt(), converged: true };
+        }
+        let beta = gamma_new / gamma;
+        gamma = gamma_new;
+        // p = s + beta p
+        for i in 0..k {
+            p[i] = s[i] + beta * p[i];
+        }
+    }
+    let grad_norm = dot(&s, &s).sqrt();
+    CglsResult { z, iters, grad_norm, converged: grad_norm <= threshold }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::dist2;
+    use crate::linalg::qr::lstsq;
+    use crate::rng::Rng;
+
+    #[test]
+    fn matches_qr_on_random_problems() {
+        let mut rng = Rng::seed_from(9);
+        for &(m, k) in &[(12usize, 4usize), (50, 12), (80, 30)] {
+            let a = Mat::from_fn(m, k, |_, _| rng.gauss());
+            let y: Vec<f64> = (0..m).map(|_| rng.gauss()).collect();
+            let zq = lstsq(&a, &y);
+            let res = cgls(&a, &y, 1e-12, 200);
+            assert!(res.converged, "m={m} k={k}");
+            assert!(dist2(&res.z, &zq) < 1e-7, "m={m} k={k} dist={}", dist2(&res.z, &zq));
+        }
+    }
+
+    #[test]
+    fn zero_rhs_returns_zero() {
+        let a = Mat::<f64>::from_fn(5, 3, |i, j| (i + j) as f64);
+        let res = cgls(&a, &[0.0; 5], 1e-10, 50);
+        assert!(res.converged);
+        assert_eq!(res.iters, 0);
+        assert!(res.z.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn exact_in_k_iterations() {
+        // Exact arithmetic property holds approximately: k+small iterations.
+        let mut rng = Rng::seed_from(11);
+        let (m, k) = (40, 6);
+        let a = Mat::from_fn(m, k, |_, _| rng.gauss());
+        let z_true: Vec<f64> = (0..k).map(|_| rng.gauss()).collect();
+        let y = a.gemv(&z_true);
+        let res = cgls(&a, &y, 1e-10, 40);
+        assert!(res.converged);
+        assert!(res.iters <= k + 4, "iters = {}", res.iters);
+        assert!(dist2(&res.z, &z_true) < 1e-6);
+    }
+}

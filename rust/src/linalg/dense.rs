@@ -1,0 +1,447 @@
+//! Row-major dense matrix type and the blocked matvec kernels that form the
+//! native hot path of every recovery algorithm in this crate.
+//!
+//! Layout choice: **row-major** — the StoIHT proxy step does one
+//! `A_b x` (row-major friendly) and one `A_b^T r`; the transpose matvec is
+//! implemented as a row-scaled accumulation so both passes stream `A_b`
+//! sequentially (see [`Mat::gemv_t_acc`]), which is what makes the native
+//! backend memory-bandwidth-bound rather than cache-miss-bound.
+
+use super::scalar::Scalar;
+
+/// Dense row-major matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat<S: Scalar> {
+    rows: usize,
+    cols: usize,
+    data: Vec<S>,
+}
+
+impl<S: Scalar> Mat<S> {
+    /// Zero matrix of the given shape.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![S::ZERO; rows * cols] }
+    }
+
+    /// Build from a row-major data vector. Panics if the length mismatches.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<S>) -> Self {
+        assert_eq!(data.len(), rows * cols, "row-major data length mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> S) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        Self::from_fn(n, n, |i, j| if i == j { S::ONE } else { S::ZERO })
+    }
+
+    #[inline(always)]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline(always)]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Raw row-major data.
+    #[inline(always)]
+    pub fn data(&self) -> &[S] {
+        &self.data
+    }
+
+    #[inline(always)]
+    pub fn data_mut(&mut self) -> &mut [S] {
+        &mut self.data
+    }
+
+    #[inline(always)]
+    pub fn get(&self, i: usize, j: usize) -> S {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, i: usize, j: usize, v: S) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Row `i` as a slice.
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[S] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline(always)]
+    pub fn row_mut(&mut self, i: usize) -> &mut [S] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Borrow rows `r0..r1` as a [`RowBlock`] view (no copy) — this is how
+    /// algorithms address the measurement block `A_{b_i}`.
+    pub fn row_block(&self, r0: usize, r1: usize) -> RowBlock<'_, S> {
+        assert!(r0 <= r1 && r1 <= self.rows, "row block out of range");
+        RowBlock {
+            rows: r1 - r0,
+            cols: self.cols,
+            data: &self.data[r0 * self.cols..r1 * self.cols],
+        }
+    }
+
+    /// The whole matrix as a view.
+    pub fn as_block(&self) -> RowBlock<'_, S> {
+        self.row_block(0, self.rows)
+    }
+
+    /// Copy of column `j`.
+    pub fn col_copy(&self, j: usize) -> Vec<S> {
+        (0..self.rows).map(|i| self.get(i, j)).collect()
+    }
+
+    /// New matrix made of the given columns (in the given order) — used by
+    /// OMP/CoSaMP/StoGradMP to form the least-squares submatrix `A_T`.
+    pub fn select_cols(&self, cols: &[usize]) -> Mat<S> {
+        let mut out = Mat::zeros(self.rows, cols.len());
+        for i in 0..self.rows {
+            let src = self.row(i);
+            let dst = out.row_mut(i);
+            for (k, &j) in cols.iter().enumerate() {
+                dst[k] = src[j];
+            }
+        }
+        out
+    }
+
+    /// `y = A x` (allocating convenience wrapper over the view kernel).
+    pub fn gemv(&self, x: &[S]) -> Vec<S> {
+        self.as_block().gemv(x)
+    }
+
+    /// `y = A^T x`.
+    pub fn gemv_t(&self, x: &[S]) -> Vec<S> {
+        self.as_block().gemv_t(x)
+    }
+
+    /// Cast every element through f64 (used to hand f64-native problems to
+    /// the f32 PJRT artifacts).
+    pub fn cast<T: Scalar>(&self) -> Mat<T> {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|v| T::from_f64(v.to_f64())).collect(),
+        }
+    }
+}
+
+/// Borrowed row-contiguous block of a [`Mat`] (e.g. the sub-matrix
+/// `A_{b_i}` of measurement block `i`).
+#[derive(Clone, Copy, Debug)]
+pub struct RowBlock<'a, S: Scalar> {
+    rows: usize,
+    cols: usize,
+    data: &'a [S],
+}
+
+impl<'a, S: Scalar> RowBlock<'a, S> {
+    pub fn from_slice(rows: usize, cols: usize, data: &'a [S]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        RowBlock { rows, cols, data }
+    }
+
+    #[inline(always)]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline(always)]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[S] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline(always)]
+    pub fn data(&self) -> &[S] {
+        self.data
+    }
+
+    /// `out = A x`, allocating.
+    pub fn gemv(&self, x: &[S]) -> Vec<S> {
+        let mut out = vec![S::ZERO; self.rows];
+        self.gemv_into(x, &mut out);
+        out
+    }
+
+    /// `out = A x`, no allocation. `x.len() == cols`, `out.len() == rows`.
+    ///
+    /// Inner loop is 4-way unrolled; with row-major storage each row is a
+    /// sequential stream so the hardware prefetcher keeps the FPU fed.
+    pub fn gemv_into(&self, x: &[S], out: &mut [S]) {
+        assert_eq!(x.len(), self.cols, "gemv: x length");
+        assert_eq!(out.len(), self.rows, "gemv: out length");
+        for i in 0..self.rows {
+            out[i] = dot(self.row(i), x);
+        }
+    }
+
+    /// `out = A^T x`, allocating.
+    pub fn gemv_t(&self, x: &[S]) -> Vec<S> {
+        let mut out = vec![S::ZERO; self.cols];
+        self.gemv_t_acc(x, S::ZERO, &mut out);
+        out
+    }
+
+    /// `out = beta * out + A^T x` with **row-sequential** access:
+    /// for each row `i`, `out += x[i] * A[i, :]` (an axpy). This streams the
+    /// matrix in storage order instead of striding down columns.
+    pub fn gemv_t_acc(&self, x: &[S], beta: S, out: &mut [S]) {
+        assert_eq!(x.len(), self.rows, "gemv_t: x length");
+        assert_eq!(out.len(), self.cols, "gemv_t: out length");
+        if beta != S::ONE {
+            if beta == S::ZERO {
+                out.fill(S::ZERO);
+            } else {
+                for o in out.iter_mut() {
+                    *o *= beta;
+                }
+            }
+        }
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == S::ZERO {
+                continue;
+            }
+            axpy(xi, self.row(i), out);
+        }
+    }
+
+    /// Fused StoIHT proxy kernel: `out = x + alpha * A^T (y - A x)` with a
+    /// caller-provided residual scratch (`scratch.len() == rows`). This is
+    /// the native twin of the Layer-1 Pallas kernel and the single hottest
+    /// function in the crate — zero allocation, two sequential passes over
+    /// the block.
+    pub fn proxy_step_into(&self, y: &[S], x: &[S], alpha: S, scratch: &mut [S], out: &mut [S]) {
+        assert_eq!(y.len(), self.rows);
+        assert_eq!(scratch.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        // pass 1: scratch = y - A x
+        for i in 0..self.rows {
+            scratch[i] = y[i] - dot(self.row(i), x);
+        }
+        // pass 2: out = x + alpha * A^T scratch
+        out.copy_from_slice(x);
+        for i in 0..self.rows {
+            let w = alpha * scratch[i];
+            if w == S::ZERO {
+                continue;
+            }
+            axpy(w, self.row(i), out);
+        }
+    }
+}
+
+/// Dot product, 4-way unrolled with independent accumulators so the adds
+/// pipeline (and the compiler can vectorize under `-C opt-level=3`).
+#[inline]
+pub fn dot<S: Scalar>(a: &[S], b: &[S]) -> S {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (S::ZERO, S::ZERO, S::ZERO, S::ZERO);
+    for k in 0..chunks {
+        let i = 4 * k;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in 4 * chunks..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `y += a * x` (axpy), unrolled like [`dot`].
+#[inline]
+pub fn axpy<S: Scalar>(a: S, x: &[S], y: &mut [S]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4;
+    for k in 0..chunks {
+        let i = 4 * k;
+        y[i] += a * x[i];
+        y[i + 1] += a * x[i + 1];
+        y[i + 2] += a * x[i + 2];
+        y[i + 3] += a * x[i + 3];
+    }
+    for i in 4 * chunks..n {
+        y[i] += a * x[i];
+    }
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn nrm2<S: Scalar>(v: &[S]) -> S {
+    dot(v, v).sqrt()
+}
+
+/// `a - b`, allocating.
+pub fn sub<S: Scalar>(a: &[S], b: &[S]) -> Vec<S> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&p, &q)| p - q).collect()
+}
+
+/// `||a - b||_2` without allocating.
+pub fn dist2<S: Scalar>(a: &[S], b: &[S]) -> S {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = S::ZERO;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s.sqrt()
+}
+
+/// Scale in place.
+pub fn scale<S: Scalar>(v: &mut [S], a: S) {
+    for x in v.iter_mut() {
+        *x *= a;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() <= tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn construction_and_access() {
+        let m = Mat::<f64>::from_fn(3, 2, |i, j| (i * 10 + j) as f64);
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.cols(), 2);
+        assert_eq!(m.get(2, 1), 21.0);
+        assert_eq!(m.row(1), &[10.0, 11.0]);
+        assert_eq!(m.col_copy(1), vec![1.0, 11.0, 21.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn from_vec_checks_len() {
+        let _ = Mat::<f64>::from_vec(2, 2, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn eye_gemv_is_identity() {
+        let m = Mat::<f64>::eye(5);
+        let x = vec![1.0, -2.0, 3.0, 0.5, 4.0];
+        assert_eq!(m.gemv(&x), x);
+        assert_eq!(m.gemv_t(&x), x);
+    }
+
+    #[test]
+    fn gemv_matches_manual() {
+        // [[1,2,3],[4,5,6]] @ [1,1,2] = [9, 21]
+        let m = Mat::from_vec(2, 3, vec![1.0f64, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(m.gemv(&[1.0, 1.0, 2.0]), vec![9.0, 21.0]);
+        // A^T [1, 2] = [9, 12, 15]
+        assert_eq!(m.gemv_t(&[1.0, 2.0]), vec![9.0, 12.0, 15.0]);
+    }
+
+    #[test]
+    fn row_block_view() {
+        let m = Mat::<f64>::from_fn(6, 3, |i, j| (i * 3 + j) as f64);
+        let blk = m.row_block(2, 4);
+        assert_eq!(blk.rows(), 2);
+        assert_eq!(blk.row(0), m.row(2));
+        assert_eq!(blk.row(1), m.row(3));
+        let x = vec![1.0, 0.0, -1.0];
+        let full = m.gemv(&x);
+        assert_eq!(blk.gemv(&x), &full[2..4]);
+    }
+
+    #[test]
+    fn gemv_t_acc_beta() {
+        let m = Mat::from_vec(2, 2, vec![1.0f64, 2.0, 3.0, 4.0]);
+        let mut out = vec![10.0, 20.0];
+        // out = 0.5*out + A^T [1,1] = [5,10] + [4,6] = [9,16]
+        m.as_block().gemv_t_acc(&[1.0, 1.0], 0.5, &mut out);
+        assert_eq!(out, vec![9.0, 16.0]);
+    }
+
+    #[test]
+    fn proxy_step_matches_composition() {
+        let m = Mat::<f64>::from_fn(4, 7, |i, j| ((i * 7 + j) as f64 * 0.13).sin());
+        let x: Vec<f64> = (0..7).map(|i| (i as f64 * 0.71).cos()).collect();
+        let y: Vec<f64> = (0..4).map(|i| (i as f64 * 0.37).sin()).collect();
+        let alpha = 0.8;
+        let blk = m.as_block();
+        let mut scratch = vec![0.0; 4];
+        let mut out = vec![0.0; 7];
+        blk.proxy_step_into(&y, &x, alpha, &mut scratch, &mut out);
+        // reference composition
+        let ax = blk.gemv(&x);
+        let r: Vec<f64> = y.iter().zip(&ax).map(|(&a, &b)| a - b).collect();
+        let atr = blk.gemv_t(&r);
+        for j in 0..7 {
+            approx(out[j], x[j] + alpha * atr[j], 1e-12);
+        }
+    }
+
+    #[test]
+    fn select_cols_permutes() {
+        let m = Mat::<f64>::from_fn(2, 4, |i, j| (i * 4 + j) as f64);
+        let sel = m.select_cols(&[3, 0]);
+        assert_eq!(sel.row(0), &[3.0, 0.0]);
+        assert_eq!(sel.row(1), &[7.0, 4.0]);
+    }
+
+    #[test]
+    fn dot_axpy_odd_lengths() {
+        // exercise the remainder loop (n % 4 != 0)
+        for n in [1usize, 2, 3, 5, 7, 9] {
+            let a: Vec<f64> = (0..n).map(|i| i as f64 + 1.0).collect();
+            let b: Vec<f64> = (0..n).map(|i| (i as f64) * 0.5).collect();
+            let want: f64 = (0..n).map(|i| (i as f64 + 1.0) * (i as f64) * 0.5).sum();
+            approx(dot(&a, &b), want, 1e-12);
+            let mut y = vec![1.0; n];
+            axpy(2.0, &a, &mut y);
+            for i in 0..n {
+                approx(y[i], 1.0 + 2.0 * (i as f64 + 1.0), 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn norms_and_dist() {
+        approx(nrm2(&[3.0f64, 4.0]), 5.0, 1e-15);
+        approx(dist2(&[1.0f64, 2.0], &[4.0, 6.0]), 5.0, 1e-15);
+        assert_eq!(sub(&[3.0f64, 4.0], &[1.0, 1.0]), vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn cast_roundtrip() {
+        let m = Mat::<f64>::from_fn(2, 2, |i, j| (i + j) as f64 + 0.25);
+        let f: Mat<f32> = m.cast();
+        let back: Mat<f64> = f.cast();
+        assert_eq!(m, back);
+    }
+}

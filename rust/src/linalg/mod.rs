@@ -1,0 +1,22 @@
+//! Dense linear-algebra substrate.
+//!
+//! The paper's cost function is *dense* in `x` (Gaussian `A`), so unlike the
+//! HOGWILD!-style literature there is no sparse-matrix machinery here — the
+//! substrate is a small, cache-conscious dense BLAS subset plus the two
+//! least-squares solvers the greedy baselines need:
+//!
+//! * [`dense::Mat`] / [`dense::RowBlock`] — row-major storage with zero-copy
+//!   measurement-block views and the fused [`dense::RowBlock::proxy_step_into`]
+//!   hot-path kernel (the native twin of the Layer-1 Pallas kernel).
+//! * [`qr::Qr`] — Householder least squares for OMP/CoSaMP/StoGradMP.
+//! * [`cgls::cgls`] — iterative least squares (cross-check + large supports).
+
+pub mod cgls;
+pub mod dense;
+pub mod qr;
+pub mod scalar;
+
+pub use cgls::{cgls, CglsResult};
+pub use dense::{axpy, dist2, dot, nrm2, scale, sub, Mat, RowBlock};
+pub use qr::{lstsq, Qr};
+pub use scalar::Scalar;

@@ -1,0 +1,232 @@
+//! Householder QR and least-squares solves.
+//!
+//! OMP / CoSaMP / StoGradMP repeatedly solve small overdetermined systems
+//! `min ||A_T z - y||` where `A_T` is the `m x k` submatrix of selected
+//! columns (`k <= 3s << m`). Householder QR is backward-stable and cheap at
+//! these sizes; the factorization is in-place and the solve reuses it.
+
+use super::dense::Mat;
+use super::scalar::Scalar;
+
+/// In-place Householder QR factorization of an `m x k` matrix (`m >= k`).
+///
+/// After construction, `R` occupies the upper triangle of `a` and the
+/// Householder vectors live below the diagonal (LAPACK `geqrf` layout) with
+/// their scaling factors in `tau`.
+pub struct Qr<S: Scalar> {
+    a: Mat<S>,
+    tau: Vec<S>,
+}
+
+impl<S: Scalar> Qr<S> {
+    /// Factor `a` (consumed). Panics if `rows < cols`.
+    pub fn factor(mut a: Mat<S>) -> Self {
+        let m = a.rows();
+        let k = a.cols();
+        assert!(m >= k, "QR requires rows >= cols (got {m} x {k})");
+        let mut tau = vec![S::ZERO; k];
+        for j in 0..k {
+            // Householder vector for column j, rows j..m.
+            let mut norm2 = S::ZERO;
+            for i in j..m {
+                let v = a.get(i, j);
+                norm2 += v * v;
+            }
+            let norm = norm2.sqrt();
+            if norm == S::ZERO {
+                tau[j] = S::ZERO;
+                continue;
+            }
+            let a_jj = a.get(j, j);
+            // alpha = -sign(a_jj) * ||col|| avoids cancellation.
+            let alpha = if a_jj >= S::ZERO { -norm } else { norm };
+            let v0 = a_jj - alpha;
+            // Normalize so v[j] = 1 implicitly; store v[i]/v0 below diag.
+            for i in (j + 1)..m {
+                let v = a.get(i, j) / v0;
+                a.set(i, j, v);
+            }
+            // tau = (alpha - a_jj)/alpha ... standard: tau = v0 / -alpha? Use
+            // tau = 2 / (1 + sum_{i>j} v_i^2) with v_j = 1.
+            let mut vtv = S::ONE;
+            for i in (j + 1)..m {
+                let v = a.get(i, j);
+                vtv += v * v;
+            }
+            let t = S::from_f64(2.0) / vtv;
+            tau[j] = t;
+            a.set(j, j, alpha);
+            // Apply H_j = I - tau v v^T to the trailing columns.
+            for c in (j + 1)..k {
+                // w = v^T a[:, c] (v_j = 1)
+                let mut w = a.get(j, c);
+                for i in (j + 1)..m {
+                    w += a.get(i, j) * a.get(i, c);
+                }
+                w *= t;
+                let prev = a.get(j, c);
+                a.set(j, c, prev - w);
+                for i in (j + 1)..m {
+                    let prev = a.get(i, c);
+                    let vij = a.get(i, j);
+                    a.set(i, c, prev - w * vij);
+                }
+            }
+        }
+        Qr { a, tau }
+    }
+
+    /// Number of columns (solution length).
+    pub fn k(&self) -> usize {
+        self.a.cols()
+    }
+
+    /// Apply `Q^T` to `rhs` in place (length `m`).
+    fn apply_qt(&self, rhs: &mut [S]) {
+        let m = self.a.rows();
+        let k = self.a.cols();
+        assert_eq!(rhs.len(), m);
+        for j in 0..k {
+            let t = self.tau[j];
+            if t == S::ZERO {
+                continue;
+            }
+            let mut w = rhs[j];
+            for i in (j + 1)..m {
+                w += self.a.get(i, j) * rhs[i];
+            }
+            w *= t;
+            rhs[j] -= w;
+            for i in (j + 1)..m {
+                let vij = self.a.get(i, j);
+                rhs[i] -= w * vij;
+            }
+        }
+    }
+
+    /// Solve `min ||A z - y||_2` (least squares). Returns `z` of length `k`.
+    ///
+    /// Rank-deficient columns (|R_jj| below `EPS * max|R|`) get `z_j = 0` —
+    /// OMP can momentarily select nearly-dependent columns on noisy data and
+    /// must not blow up.
+    pub fn solve(&self, y: &[S]) -> Vec<S> {
+        let m = self.a.rows();
+        let k = self.a.cols();
+        assert_eq!(y.len(), m, "rhs length");
+        let mut rhs = y.to_vec();
+        self.apply_qt(&mut rhs);
+        // Back-substitute R z = rhs[0..k].
+        let mut rmax = S::ZERO;
+        for j in 0..k {
+            rmax = rmax.max_s(self.a.get(j, j).abs());
+        }
+        let tol = rmax * S::EPS * S::from_f64(64.0);
+        let mut z = vec![S::ZERO; k];
+        for j in (0..k).rev() {
+            let mut v = rhs[j];
+            for c in (j + 1)..k {
+                v -= self.a.get(j, c) * z[c];
+            }
+            let d = self.a.get(j, j);
+            z[j] = if d.abs() <= tol { S::ZERO } else { v / d };
+        }
+        z
+    }
+}
+
+/// Convenience: least-squares solve `min ||a z - y||`.
+///
+/// Overdetermined systems (`rows >= cols`) use Householder QR;
+/// underdetermined ones (which CoSaMP/StoGradMP can produce when the merged
+/// support outgrows `m` at very low sampling rates) fall back to CGLS,
+/// whose iterates stay in the row space (minimum-norm solution).
+pub fn lstsq<S: Scalar>(a: &Mat<S>, y: &[S]) -> Vec<S> {
+    if a.rows() >= a.cols() {
+        Qr::factor(a.clone()).solve(y)
+    } else {
+        super::cgls::cgls(a, y, S::from_f64(1e-12), 4 * a.rows().max(8)).z
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::{dist2, nrm2};
+    use crate::rng::Rng;
+
+    fn rand_mat(rng: &mut Rng, m: usize, k: usize) -> Mat<f64> {
+        Mat::from_fn(m, k, |_, _| rng.gauss())
+    }
+
+    #[test]
+    fn solves_square_system_exactly() {
+        let a = Mat::from_vec(2, 2, vec![2.0f64, 1.0, 1.0, 3.0]);
+        let z = lstsq(&a, &[5.0, 10.0]);
+        // 2x + y = 5; x + 3y = 10 -> x = 1, y = 3
+        assert!((z[0] - 1.0).abs() < 1e-12);
+        assert!((z[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recovers_planted_solution_overdetermined() {
+        let mut rng = Rng::seed_from(7);
+        for &(m, k) in &[(10usize, 3usize), (40, 10), (100, 25)] {
+            let a = rand_mat(&mut rng, m, k);
+            let z_true: Vec<f64> = (0..k).map(|_| rng.gauss()).collect();
+            let y = a.gemv(&z_true);
+            let z = lstsq(&a, &y);
+            assert!(dist2(&z, &z_true) < 1e-9, "m={m} k={k}");
+        }
+    }
+
+    #[test]
+    fn residual_is_orthogonal_to_columns() {
+        let mut rng = Rng::seed_from(42);
+        let (m, k) = (30, 8);
+        let a = rand_mat(&mut rng, m, k);
+        let y: Vec<f64> = (0..m).map(|_| rng.gauss()).collect();
+        let z = lstsq(&a, &y);
+        let az = a.gemv(&z);
+        let r: Vec<f64> = y.iter().zip(&az).map(|(&p, &q)| p - q).collect();
+        // A^T r == 0 at the least-squares optimum.
+        let atr = a.gemv_t(&r);
+        assert!(nrm2(&atr) < 1e-9 * nrm2(&y), "normal equations violated");
+    }
+
+    #[test]
+    fn rank_deficient_does_not_blow_up() {
+        // Two identical columns.
+        let a = Mat::from_vec(3, 2, vec![1.0f64, 1.0, 2.0, 2.0, 3.0, 3.0]);
+        let z = lstsq(&a, &[1.0, 2.0, 3.0]);
+        assert!(z.iter().all(|v| v.is_finite()));
+        // The reachable residual is zero: a z should equal y via one column.
+        let az = a.gemv(&z);
+        assert!(dist2(&az, &[1.0, 2.0, 3.0]) < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "rows >= cols")]
+    fn underdetermined_qr_panics() {
+        let a = Mat::<f64>::zeros(2, 3);
+        let _ = Qr::factor(a);
+    }
+
+    #[test]
+    fn underdetermined_lstsq_falls_back_to_cgls() {
+        // 2 x 4 system with an exact solution: residual must vanish.
+        let mut rng = Rng::seed_from(3);
+        let a = rand_mat(&mut rng, 2, 4);
+        let z0: Vec<f64> = (0..4).map(|_| rng.gauss()).collect();
+        let y = a.gemv(&z0);
+        let z = lstsq(&a, &y);
+        let az = a.gemv(&z);
+        assert!(dist2(&az, &y) < 1e-8, "residual {}", dist2(&az, &y));
+    }
+
+    #[test]
+    fn f32_path_works() {
+        let a = Mat::from_vec(3, 2, vec![1.0f32, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        let z = lstsq(&a, &[1.0, 2.0, 3.1]);
+        assert!(z.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,146 @@
+//! Scalar abstraction so the dense substrate works in both `f32` (matching
+//! the AOT artifacts) and `f64` (the native solve path; the paper's 1e-7
+//! exit tolerance sits below f32 round-off at m = 300).
+
+use std::fmt::Debug;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// Floating-point scalar usable by the dense linear-algebra substrate.
+pub trait Scalar:
+    Copy
+    + Clone
+    + Debug
+    + PartialOrd
+    + Default
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+    + DivAssign
+    + Sum
+    + Send
+    + Sync
+    + 'static
+{
+    const ZERO: Self;
+    const ONE: Self;
+    /// Machine epsilon for this type.
+    const EPS: Self;
+
+    fn from_f64(v: f64) -> Self;
+    fn to_f64(self) -> f64;
+    fn abs(self) -> Self;
+    fn sqrt(self) -> Self;
+    fn max_s(self, other: Self) -> Self;
+    fn min_s(self, other: Self) -> Self;
+    fn is_finite_s(self) -> bool;
+}
+
+impl Scalar for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const EPS: Self = f64::EPSILON;
+
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline(always)]
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+    #[inline(always)]
+    fn sqrt(self) -> Self {
+        f64::sqrt(self)
+    }
+    #[inline(always)]
+    fn max_s(self, other: Self) -> Self {
+        f64::max(self, other)
+    }
+    #[inline(always)]
+    fn min_s(self, other: Self) -> Self {
+        f64::min(self, other)
+    }
+    #[inline(always)]
+    fn is_finite_s(self) -> bool {
+        f64::is_finite(self)
+    }
+}
+
+impl Scalar for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const EPS: Self = f32::EPSILON;
+
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline(always)]
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
+    #[inline(always)]
+    fn sqrt(self) -> Self {
+        f32::sqrt(self)
+    }
+    #[inline(always)]
+    fn max_s(self, other: Self) -> Self {
+        f32::max(self, other)
+    }
+    #[inline(always)]
+    fn min_s(self, other: Self) -> Self {
+        f32::min(self, other)
+    }
+    #[inline(always)]
+    fn is_finite_s(self) -> bool {
+        f32::is_finite(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<S: Scalar>(v: f64) -> f64 {
+        S::from_f64(v).to_f64()
+    }
+
+    #[test]
+    fn constants() {
+        assert_eq!(f64::ZERO, 0.0);
+        assert_eq!(f32::ONE, 1.0);
+        assert!(f64::EPS < 1e-15 && f64::EPS > 0.0);
+        assert!(f32::EPS < 1e-6 && f32::EPS > 0.0);
+    }
+
+    #[test]
+    fn conversions() {
+        assert_eq!(roundtrip::<f64>(1.25), 1.25);
+        assert_eq!(roundtrip::<f32>(1.25), 1.25);
+        assert!((roundtrip::<f32>(0.1) - 0.1).abs() < 1e-7);
+    }
+
+    #[test]
+    fn basic_ops() {
+        assert_eq!(f64::from_f64(-3.0).abs(), 3.0);
+        assert_eq!(f64::from_f64(9.0).sqrt(), 3.0);
+        assert_eq!(2.0f64.max_s(3.0), 3.0);
+        assert_eq!(2.0f64.min_s(3.0), 2.0);
+        assert!(1.0f32.is_finite_s());
+        assert!(!f32::INFINITY.is_finite_s());
+    }
+}

@@ -1,0 +1,407 @@
+//! `astir` — CLI for the ASTIR asynchronous sparse-recovery stack.
+//!
+//! Subcommands map 1:1 onto the paper's figures and this repo's ablations
+//! (see DESIGN.md §4):
+//!
+//! ```text
+//! astir fig1                         # Fig. 1: oracle-support StoIHT
+//! astir fig2 --schedule all-fast     # Fig. 2 upper
+//! astir fig2 --schedule half-slow    # Fig. 2 lower
+//! astir ablation tally-vs-shared-x | inconsistent-reads | weighting | block-size
+//! astir baselines                    # A5 phase-transition sweep
+//! astir run --alg stoiht             # one solve, native backend
+//! astir run --alg stoiht --backend pjrt
+//! astir async --cores 8              # real-thread asynchronous StoIHT
+//! astir info                         # artifact + config introspection
+//! ```
+//!
+//! Common flags: `--config <file.toml>`, `--trials N`, `--seed N`,
+//! `--cores-list a,b,c`. Argument parsing is hand-rolled (offline build —
+//! no clap); unknown flags are hard errors.
+
+use std::process::ExitCode;
+
+use astir::algorithms::{self, GreedyOpts};
+use astir::async_runtime::{run_async, AsyncOpts};
+use astir::backend::{Backend, NativeBackend, PjrtBackend};
+use astir::config::ExperimentConfig;
+use astir::experiments::{self, Fig2Variant};
+use astir::report;
+use astir::rng::Rng;
+use astir::runtime::ArtifactStore;
+use astir::sim::SpeedSchedule;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(args: Vec<String>) -> Result<(), String> {
+    let Some((cmd, rest)) = args.split_first() else {
+        print_usage();
+        return Ok(());
+    };
+    let mut flags = Flags::parse(rest)?;
+    let cfg = load_config(&mut flags)?;
+
+    match cmd.as_str() {
+        "fig1" => {
+            flags.finish()?;
+            println!("Fig. 1 — StoIHT with an accurate support estimate");
+            println!(
+                "n={} m={} b={} s={} gamma={} tol={} trials={}",
+                cfg.problem.n, cfg.problem.m, cfg.problem.b, cfg.problem.s,
+                cfg.gamma, cfg.tolerance, cfg.trials
+            );
+            let out = experiments::fig1(&cfg);
+            report::emit("fig1", "mean recovery error vs iteration (thinned)", &summarize_fig1(&out.series));
+            report::emit("fig1_full", "full per-iteration series", &out.series);
+            report::emit("fig1_summary", "per-variant convergence summary", &out.summary);
+        }
+        "fig2" => {
+            let schedule = flags.take("schedule")?.unwrap_or_else(|| "all-fast".into());
+            flags.finish()?;
+            let variant = match schedule.as_str() {
+                "all-fast" => Fig2Variant::Upper,
+                "half-slow" => Fig2Variant::Lower { period: 4 },
+                other => return Err(format!("unknown --schedule `{other}` (all-fast|half-slow)")),
+            };
+            println!("Fig. 2 — time steps to exit vs cores ({})", variant.label());
+            let table = experiments::fig2(&cfg, variant);
+            let name = if matches!(variant, Fig2Variant::Upper) { "fig2_upper" } else { "fig2_lower" };
+            report::emit(name, variant.label(), &table);
+        }
+        "ablation" => {
+            let mut which = flags.take("name")?;
+            if which.is_none() {
+                which = flags.positional.pop();
+            }
+            flags.finish()?;
+            match which.as_deref() {
+                Some("tally-vs-shared-x") => {
+                    let t = experiments::tally_vs_shared_x(&cfg);
+                    report::emit("ablation_tally_vs_shared_x", "A1: tally vs shared-x sharing", &t);
+                }
+                Some("inconsistent-reads") => {
+                    let t = experiments::inconsistent_reads(&cfg);
+                    report::emit("ablation_inconsistent_reads", "A2: stale tally reads", &t);
+                }
+                Some("weighting") => {
+                    let t = experiments::tally_weighting(&cfg);
+                    report::emit("ablation_weighting", "A3: tally weighting schemes", &t);
+                }
+                Some("block-size") => {
+                    let bs = divisors_near(cfg.problem.m);
+                    let t = experiments::block_size_sweep(&cfg, &bs);
+                    report::emit("ablation_block_size", "A4: block size sweep", &t);
+                }
+                other => {
+                    return Err(format!(
+                        "unknown ablation {other:?} (tally-vs-shared-x|inconsistent-reads|weighting|block-size)"
+                    ))
+                }
+            }
+        }
+        "baselines" => {
+            flags.finish()?;
+            let ms = baseline_ms(&cfg);
+            println!("A5 — phase transition over m = {ms:?}");
+            let t = experiments::phase_transition(&cfg, &ms);
+            report::emit("baselines_phase_transition", "A5: success rate vs m", &t);
+        }
+        "run" => {
+            let alg = flags.take("alg")?.unwrap_or_else(|| "stoiht".into());
+            let backend = flags.take("backend")?.unwrap_or_else(|| "native".into());
+            flags.finish()?;
+            run_single(&cfg, &alg, &backend)?;
+        }
+        "async" => {
+            let cores: usize = flags
+                .take("cores")?
+                .unwrap_or_else(|| "4".into())
+                .parse()
+                .map_err(|e| format!("--cores: {e}"))?;
+            let schedule = flags.take("schedule")?.unwrap_or_else(|| "all-fast".into());
+            flags.finish()?;
+            run_async_cmd(&cfg, cores, &schedule)?;
+        }
+        "info" => {
+            flags.finish()?;
+            print_info(&cfg);
+        }
+        "help" | "--help" | "-h" => {
+            print_usage();
+        }
+        other => {
+            print_usage();
+            return Err(format!("unknown command `{other}`"));
+        }
+    }
+    Ok(())
+}
+
+/// Flag parser: `--key value` pairs plus positionals.
+struct Flags {
+    pairs: Vec<(String, String)>,
+    positional: Vec<String>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Self, String> {
+        let mut pairs = Vec::new();
+        let mut positional = Vec::new();
+        let mut it = args.iter();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let value = it
+                    .next()
+                    .ok_or_else(|| format!("flag --{key} needs a value"))?
+                    .clone();
+                pairs.push((key.to_string(), value));
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Flags { pairs, positional })
+    }
+
+    /// Remove and return a flag's value.
+    fn take(&mut self, key: &str) -> Result<Option<String>, String> {
+        let idx = self.pairs.iter().position(|(k, _)| k == key);
+        Ok(idx.map(|i| self.pairs.remove(i).1))
+    }
+
+    /// Error on any unconsumed flag/positional.
+    fn finish(&mut self) -> Result<(), String> {
+        if let Some((k, _)) = self.pairs.first() {
+            return Err(format!("unknown flag --{k}"));
+        }
+        if let Some(p) = self.positional.first() {
+            return Err(format!("unexpected argument `{p}`"));
+        }
+        Ok(())
+    }
+}
+
+/// Load the config file (if any) and apply common overrides.
+fn load_config(flags: &mut Flags) -> Result<ExperimentConfig, String> {
+    let mut cfg = match flags.take("config")? {
+        Some(path) => ExperimentConfig::from_file(std::path::Path::new(&path))?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(v) = flags.take("trials")? {
+        cfg.trials = v.parse().map_err(|e| format!("--trials: {e}"))?;
+    }
+    if let Some(v) = flags.take("seed")? {
+        cfg.seed = v.parse().map_err(|e| format!("--seed: {e}"))?;
+    }
+    if let Some(v) = flags.take("threads")? {
+        cfg.trial_threads = v.parse().map_err(|e| format!("--threads: {e}"))?;
+    }
+    if let Some(v) = flags.take("cores-list")? {
+        cfg.cores = v
+            .split(',')
+            .map(|s| s.trim().parse::<usize>().map_err(|e| format!("--cores-list: {e}")))
+            .collect::<Result<Vec<_>, _>>()?;
+    }
+    if let Some(v) = flags.take("max-iters")? {
+        cfg.max_iters = v.parse().map_err(|e| format!("--max-iters: {e}"))?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Thin the Fig.-1 table for terminal display (every 50th iteration).
+fn summarize_fig1(full: &astir::metrics::Table) -> astir::metrics::Table {
+    let mut t = astir::metrics::Table::new(
+        &full.columns.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for (i, row) in full.rows.iter().enumerate() {
+        if i % 50 == 0 || i + 1 == full.rows.len() {
+            t.push_row(row.clone());
+        }
+    }
+    t
+}
+
+fn divisors_near(m: usize) -> Vec<usize> {
+    // A small spread of block sizes dividing m, around the paper's 15.
+    let candidates = [5usize, 10, 15, 20, 25, 30, 50, 60, 75];
+    let mut out: Vec<usize> = candidates.iter().copied().filter(|&b| b <= m && m % b == 0).collect();
+    if out.is_empty() {
+        out.push(1);
+    }
+    out
+}
+
+fn baseline_ms(cfg: &ExperimentConfig) -> Vec<usize> {
+    // Sweep m from deeply undersampled to the configured m.
+    let m = cfg.problem.m;
+    let mut ms: Vec<usize> = (1..=6).map(|k| k * m / 6).filter(|&v| v >= cfg.problem.s).collect();
+    ms.dedup();
+    ms
+}
+
+fn run_single(cfg: &ExperimentConfig, alg: &str, backend_name: &str) -> Result<(), String> {
+    let mut rng = Rng::seed_from(cfg.seed);
+    let problem = cfg.problem.generate(&mut rng);
+    let opts = GreedyOpts {
+        gamma: cfg.gamma,
+        tolerance: cfg.tolerance,
+        max_iters: cfg.max_iters,
+        ..Default::default()
+    };
+    println!(
+        "single solve: alg={alg} backend={backend_name} n={} m={} b={} s={}",
+        cfg.problem.n, cfg.problem.m, cfg.problem.b, cfg.problem.s
+    );
+    let t0 = std::time::Instant::now();
+    let result = match (alg, backend_name) {
+        ("stoiht", "native") => algorithms::stoiht(&problem, &opts, &mut rng),
+        ("iht", "native") => algorithms::iht(&problem, &opts),
+        ("omp", "native") => algorithms::omp(&problem, &opts),
+        ("cosamp", "native") => {
+            algorithms::cosamp(&problem, &GreedyOpts { max_iters: 100, ..opts })
+        }
+        ("stogradmp", "native") => {
+            algorithms::stogradmp(&problem, &GreedyOpts { max_iters: 200, ..opts }, &mut rng)
+        }
+        ("stoiht", "pjrt") => {
+            let mut be = PjrtBackend::from_default_dir().map_err(|e| e.to_string())?;
+            println!("PJRT platform: {}", be.runtime().platform());
+            run_stoiht_on_backend(&problem, &opts, &mut be, &mut rng).map_err(|e| e.to_string())?
+        }
+        (a, b) => return Err(format!("unsupported combination alg={a} backend={b}")),
+    };
+    let dt = t0.elapsed();
+    println!(
+        "converged={} iters={} residual={:.3e} recovery_error={:.3e} wall={:.1?}",
+        result.converged,
+        result.iters,
+        result.residual,
+        problem.recovery_error(&result.x),
+        dt
+    );
+    Ok(())
+}
+
+/// Sequential StoIHT driven through a [`Backend`] (exercises PJRT).
+fn run_stoiht_on_backend<B: Backend>(
+    problem: &astir::problem::Problem,
+    opts: &GreedyOpts,
+    backend: &mut B,
+    rng: &mut Rng,
+) -> anyhow::Result<algorithms::RunResult> {
+    let spec = &problem.spec;
+    let mb = spec.num_blocks();
+    let mut x = vec![0.0f64; spec.n];
+    let zero_mask = vec![0.0f64; spec.n];
+    let mut iters = 0;
+    let mut converged = false;
+    let mut residual = f64::INFINITY;
+    for t in 1..=opts.max_iters {
+        let block = rng.below(mb);
+        let (x_next, _gamma) = backend.stoiht_step(problem, block, &x, opts.gamma, &zero_mask)?;
+        x = x_next;
+        iters = t;
+        residual = backend.residual_norm(problem, &x)?;
+        if residual < opts.tolerance {
+            converged = true;
+            break;
+        }
+    }
+    Ok(algorithms::RunResult {
+        x,
+        iters,
+        converged,
+        residual,
+        error_trace: Default::default(),
+        resid_trace: Default::default(),
+    })
+}
+
+fn run_async_cmd(cfg: &ExperimentConfig, cores: usize, schedule: &str) -> Result<(), String> {
+    let sched = match schedule {
+        "all-fast" => SpeedSchedule::AllFast,
+        "half-slow" => SpeedSchedule::HalfSlow { period: 4 },
+        other => return Err(format!("unknown --schedule `{other}`")),
+    };
+    let mut rng = Rng::seed_from(cfg.seed);
+    let problem = cfg.problem.generate(&mut rng);
+    let opts = AsyncOpts {
+        gamma: cfg.gamma,
+        tolerance: cfg.tolerance,
+        max_local_iters: cfg.max_iters,
+        schedule: sched,
+        ..Default::default()
+    };
+    println!("real-thread asynchronous StoIHT: cores={cores} schedule={schedule}");
+    let out = run_async(&problem, cores, &opts, cfg.seed ^ 0xA5);
+    println!(
+        "converged={} exit_core={:?} wall={:.1?} residual={:.3e} error={:.3e}",
+        out.converged, out.exit_core, out.wall, out.residual, out.final_error
+    );
+    println!("local iterations per core: {:?}", out.local_iters);
+    Ok(())
+}
+
+fn print_info(cfg: &ExperimentConfig) {
+    println!("astir {} — asynchronous sparse recovery (Needell & Woolf 2017)", astir::VERSION);
+    println!("\n[config]");
+    println!(
+        "problem: n={} m={} b={} s={} ensemble={:?} signal={:?} noise={}",
+        cfg.problem.n, cfg.problem.m, cfg.problem.b, cfg.problem.s,
+        cfg.problem.ensemble, cfg.problem.signal, cfg.problem.noise_std
+    );
+    println!(
+        "gamma={} tol={} max_iters={} trials={} seed={} cores={:?} trial_threads={}",
+        cfg.gamma, cfg.tolerance, cfg.max_iters, cfg.trials, cfg.seed, cfg.cores, cfg.trial_threads
+    );
+    println!("\n[artifacts] ({})", ArtifactStore::default_dir().display());
+    match ArtifactStore::discover(&ArtifactStore::default_dir()) {
+        Ok(store) => {
+            for meta in store.iter() {
+                println!(
+                    "  {:?} n={} m={} rows={} s={} -> {}",
+                    meta.kind, meta.n, meta.m, meta.b, meta.s, meta.hlo_path.display()
+                );
+            }
+        }
+        Err(e) => println!("  (unavailable: {e})"),
+    }
+    println!("\n[backends] native: {} | pjrt: executes the artifacts above", NativeBackend::new().name());
+}
+
+fn print_usage() {
+    println!(
+        "astir — asynchronous parallel sparse recovery (Needell & Woolf 2017)
+
+USAGE: astir <command> [flags]
+
+COMMANDS
+  fig1                         regenerate Fig. 1 (oracle-support StoIHT)
+  fig2 --schedule all-fast     regenerate Fig. 2 upper panel
+  fig2 --schedule half-slow    regenerate Fig. 2 lower panel
+  ablation <name>              A1..A4 (tally-vs-shared-x, inconsistent-reads,
+                               weighting, block-size)
+  baselines                    A5 phase-transition sweep (IHT/StoIHT/OMP/...)
+  run --alg X --backend Y      one solve (alg: stoiht|iht|omp|cosamp|stogradmp;
+                               backend: native|pjrt)
+  async --cores N              real-thread asynchronous StoIHT
+  info                         show config + discovered AOT artifacts
+
+COMMON FLAGS
+  --config file.toml   load an experiment config (see configs/)
+  --trials N           Monte-Carlo trials (default 500)
+  --seed N             master seed
+  --threads N          worker threads for trial batching
+  --cores-list a,b,c   core counts to sweep
+  --max-iters N        iteration / time-step cap"
+    );
+}

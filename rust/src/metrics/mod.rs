@@ -1,0 +1,341 @@
+//! Metrics: per-iteration convergence traces, Monte-Carlo trial statistics
+//! (the mean ± σ curves of the paper's figures), and CSV/JSON writers used
+//! by `report` to persist regenerated figure data under `results/`.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// A per-iteration scalar trace (e.g. recovery error vs iteration).
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub values: Vec<f64>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Trace { values: Vec::new() }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.values.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Pad (with the last value) or truncate to exactly `len` — Fig. 1
+    /// averages traces of unequal length by holding the final error.
+    pub fn resampled(&self, len: usize) -> Trace {
+        let mut v = self.values.clone();
+        let last = v.last().copied().unwrap_or(f64::NAN);
+        v.resize(len, last);
+        Trace { values: v }
+    }
+}
+
+/// Pointwise mean of traces (padded to the longest with their final value).
+pub fn mean_trace(traces: &[Trace]) -> Trace {
+    if traces.is_empty() {
+        return Trace::new();
+    }
+    let len = traces.iter().map(|t| t.len()).max().unwrap_or(0);
+    let mut out = vec![0.0f64; len];
+    for t in traces {
+        let r = t.resampled(len);
+        for (o, v) in out.iter_mut().zip(&r.values) {
+            *o += v;
+        }
+    }
+    for o in out.iter_mut() {
+        *o /= traces.len() as f64;
+    }
+    Trace { values: out }
+}
+
+/// Streaming mean/variance accumulator (Welford) plus min/max.
+#[derive(Clone, Debug, Default)]
+pub struct Accumulator {
+    n: usize,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Accumulator {
+    pub fn new() -> Self {
+        Accumulator { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.n += 1;
+        let d = v - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (v - self.mean);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    /// Sample standard deviation (n-1 denominator).
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Summary statistics of a sample (the `mean ± σ` bands of Fig. 2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+}
+
+/// Compute summary statistics of a sample.
+pub fn stats(sample: &[f64]) -> Stats {
+    let mut acc = Accumulator::new();
+    for &v in sample {
+        acc.push(v);
+    }
+    Stats {
+        n: sample.len(),
+        mean: acc.mean(),
+        std: acc.std(),
+        min: acc.min(),
+        max: acc.max(),
+        median: quantile(sample, 0.5),
+    }
+}
+
+/// Empirical quantile (linear interpolation between order statistics).
+pub fn quantile(sample: &[f64], q: f64) -> f64 {
+    if sample.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = sample.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = pos - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// A rectangular table of named columns, writable as CSV — the exchange
+/// format for every regenerated figure.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl Table {
+    pub fn new(columns: &[&str]) -> Self {
+        Table { columns: columns.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn push_row(&mut self, row: Vec<f64>) {
+        assert_eq!(row.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(row);
+    }
+
+    /// Render as CSV text.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.columns.join(","));
+        out.push('\n');
+        for r in &self.rows {
+            let cells: Vec<String> = r.iter().map(|v| format!("{v}")).collect();
+            out.push_str(&cells.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write CSV under the given path, creating parent dirs.
+    pub fn write_csv(&self, path: &Path) -> io::Result<()> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        fs::write(path, self.to_csv())
+    }
+
+    /// Render as an aligned text table (what the benches print).
+    pub fn to_aligned(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        let cells: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| r.iter().map(|v| format_sig(*v, 6)).collect())
+            .collect();
+        for row in &cells {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        for (i, c) in self.columns.iter().enumerate() {
+            let _ = write!(out, "{:>w$}  ", c, w = widths[i]);
+        }
+        out.push('\n');
+        for row in &cells {
+            for (i, c) in row.iter().enumerate() {
+                let _ = write!(out, "{:>w$}  ", c, w = widths[i]);
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format with ~`sig` significant digits, avoiding exponent noise for
+/// mid-range values.
+pub fn format_sig(v: f64, sig: usize) -> String {
+    if v == 0.0 {
+        return "0".to_string();
+    }
+    if !v.is_finite() {
+        return format!("{v}");
+    }
+    let a = v.abs();
+    if (1e-4..1e7).contains(&a) {
+        let digits = (sig as i32 - 1 - a.log10().floor() as i32).max(0) as usize;
+        format!("{v:.digits$}")
+    } else {
+        format!("{v:.prec$e}", prec = sig - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_resample_pads_with_last() {
+        let t = Trace { values: vec![3.0, 2.0, 1.0] };
+        assert_eq!(t.resampled(5).values, vec![3.0, 2.0, 1.0, 1.0, 1.0]);
+        assert_eq!(t.resampled(2).values, vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn mean_trace_averages_pointwise() {
+        let a = Trace { values: vec![2.0, 4.0] };
+        let b = Trace { values: vec![4.0] }; // pads to [4.0, 4.0]
+        let m = mean_trace(&[a, b]);
+        assert_eq!(m.values, vec![3.0, 4.0]);
+        assert!(mean_trace(&[]).is_empty());
+    }
+
+    #[test]
+    fn welford_matches_two_pass() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut acc = Accumulator::new();
+        for &x in &xs {
+            acc.push(x);
+        }
+        let mean: f64 = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var: f64 = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((acc.mean() - mean).abs() < 1e-12);
+        assert!((acc.std() - var.sqrt()).abs() < 1e-12);
+        assert_eq!(acc.min(), 1.0);
+        assert_eq!(acc.max(), 16.0);
+        assert_eq!(acc.count(), 5);
+    }
+
+    #[test]
+    fn stats_and_quantiles() {
+        let s = stats(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.mean, 2.5);
+        assert_eq!(s.median, 2.5);
+        assert_eq!(quantile(&[1.0, 2.0, 3.0, 4.0], 0.0), 1.0);
+        assert_eq!(quantile(&[1.0, 2.0, 3.0, 4.0], 1.0), 4.0);
+        assert_eq!(quantile(&[3.0, 1.0, 2.0], 0.5), 2.0);
+        assert!(quantile(&[], 0.5).is_nan());
+    }
+
+    #[test]
+    fn single_sample_stats() {
+        let s = stats(&[7.0]);
+        assert_eq!(s.mean, 7.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.median, 7.0);
+    }
+
+    #[test]
+    fn table_csv_and_alignment() {
+        let mut t = Table::new(&["cores", "mean", "std"]);
+        t.push_row(vec![1.0, 612.25, 55.5]);
+        t.push_row(vec![16.0, 403.0, 41.25]);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("cores,mean,std\n"));
+        assert!(csv.contains("16,403,41.25"));
+        let txt = t.to_aligned();
+        assert!(txt.contains("cores"));
+        assert_eq!(txt.lines().count(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.push_row(vec![1.0]);
+    }
+
+    #[test]
+    fn format_sig_ranges() {
+        assert_eq!(format_sig(0.0, 4), "0");
+        assert_eq!(format_sig(1.0, 3), "1.00");
+        assert!(format_sig(1e-9, 3).contains('e'));
+        assert!(format_sig(f64::INFINITY, 3).contains("inf"));
+    }
+
+    #[test]
+    fn table_write_csv_roundtrip() {
+        let dir = std::env::temp_dir().join("astir_test_metrics");
+        let path = dir.join("t.csv");
+        let mut t = Table::new(&["x"]);
+        t.push_row(vec![1.5]);
+        t.write_csv(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(body, "x\n1.5\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,441 @@
+//! Compressed-sensing problem generation.
+//!
+//! Builds the `y = A x + z` instances of the paper's §IV: `A ∈ R^{m x n}`
+//! from a configurable ensemble, `x` exactly `s`-sparse from a configurable
+//! coefficient model, optional Gaussian noise, and the block partition
+//! `M = m / b` that StoIHT samples from.
+//!
+//! The paper does not state its matrix normalization; the default here is
+//! i.i.d. `N(0, 1/m)` entries (columns have unit expected norm), the
+//! standard choice under which `gamma = 1` StoIHT converges as in Fig. 1.
+//! Alternatives are exposed for ablations.
+
+use crate::linalg::{nrm2, Mat, RowBlock};
+use crate::rng::Rng;
+
+/// Measurement-matrix ensembles.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ensemble {
+    /// i.i.d. `N(0, 1/m)` entries (default; unit expected column norm).
+    Gaussian,
+    /// i.i.d. `N(0, 1)` entries (unnormalized — for ablations).
+    GaussianUnnormalized,
+    /// i.i.d. `±1/√m` (Rademacher / Bernoulli ensemble).
+    Bernoulli,
+    /// `m` distinct rows of the `n x n` DCT-II matrix, chosen uniformly,
+    /// scaled by `√(n/m)` so columns have unit norm in expectation —
+    /// a deterministic-row structured ensemble (subsampled DCT).
+    PartialDct,
+}
+
+impl Ensemble {
+    /// Parse from a config string.
+    pub fn parse(s: &str) -> Option<Ensemble> {
+        match s {
+            "gaussian" => Some(Ensemble::Gaussian),
+            "gaussian_unnormalized" => Some(Ensemble::GaussianUnnormalized),
+            "bernoulli" => Some(Ensemble::Bernoulli),
+            "partial_dct" => Some(Ensemble::PartialDct),
+            _ => None,
+        }
+    }
+}
+
+/// Distribution of the `s` nonzero signal coefficients.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SignalModel {
+    /// i.i.d. standard normal nonzeros (default).
+    GaussianSpikes,
+    /// `±1` nonzeros (hardest case for support identification).
+    FlatSpikes,
+    /// Linearly decaying magnitudes `1, (s-1)/s, ..., 1/s` with random signs.
+    LinearDecay,
+}
+
+impl SignalModel {
+    pub fn parse(s: &str) -> Option<SignalModel> {
+        match s {
+            "gaussian" => Some(SignalModel::GaussianSpikes),
+            "flat" => Some(SignalModel::FlatSpikes),
+            "linear_decay" => Some(SignalModel::LinearDecay),
+            _ => None,
+        }
+    }
+}
+
+/// Full specification of a problem instance distribution.
+#[derive(Clone, Debug)]
+pub struct ProblemSpec {
+    /// Signal dimension `n`.
+    pub n: usize,
+    /// Number of measurements `m`.
+    pub m: usize,
+    /// Block size `b` (must divide `m`).
+    pub b: usize,
+    /// Sparsity level `s`.
+    pub s: usize,
+    /// Matrix ensemble.
+    pub ensemble: Ensemble,
+    /// Signal coefficient model.
+    pub signal: SignalModel,
+    /// Standard deviation of additive measurement noise `z`.
+    pub noise_std: f64,
+}
+
+impl ProblemSpec {
+    /// The paper's §IV configuration: n=1000, m=300, b=15, s=20, noiseless.
+    pub fn paper() -> Self {
+        ProblemSpec {
+            n: 1000,
+            m: 300,
+            b: 15,
+            s: 20,
+            ensemble: Ensemble::Gaussian,
+            signal: SignalModel::GaussianSpikes,
+            noise_std: 0.0,
+        }
+    }
+
+    /// A small configuration for fast tests (matches the test artifacts).
+    pub fn tiny() -> Self {
+        ProblemSpec {
+            n: 32,
+            m: 16,
+            b: 4,
+            s: 3,
+            ensemble: Ensemble::Gaussian,
+            signal: SignalModel::GaussianSpikes,
+            noise_std: 0.0,
+        }
+    }
+
+    /// Number of measurement blocks `M = m / b`.
+    pub fn num_blocks(&self) -> usize {
+        self.m / self.b
+    }
+
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n == 0 || self.m == 0 || self.b == 0 || self.s == 0 {
+            return Err("n, m, b, s must all be positive".into());
+        }
+        if self.m % self.b != 0 {
+            return Err(format!("block size b={} must divide m={}", self.b, self.m));
+        }
+        if self.s > self.n {
+            return Err(format!("sparsity s={} exceeds dimension n={}", self.s, self.n));
+        }
+        if self.ensemble == Ensemble::PartialDct && self.m > self.n {
+            return Err("partial DCT requires m <= n (distinct rows)".into());
+        }
+        if self.noise_std < 0.0 {
+            return Err("noise_std must be nonnegative".into());
+        }
+        Ok(())
+    }
+
+    /// Draw a problem instance.
+    pub fn generate(&self, rng: &mut Rng) -> Problem {
+        self.validate().expect("invalid ProblemSpec");
+        let a = self.gen_matrix(rng);
+        let (x_true, supp) = self.gen_signal(rng);
+        let mut y = a.gemv(&x_true);
+        if self.noise_std > 0.0 {
+            for v in y.iter_mut() {
+                *v += self.noise_std * rng.gauss();
+            }
+        }
+        let a_t = transpose(&a);
+        Problem { spec: self.clone(), a, a_t, x_true, support: supp, y }
+    }
+
+    fn gen_matrix(&self, rng: &mut Rng) -> Mat<f64> {
+        let (m, n) = (self.m, self.n);
+        match self.ensemble {
+            Ensemble::Gaussian => {
+                let sc = 1.0 / (m as f64).sqrt();
+                Mat::from_fn(m, n, |_, _| sc * rng.gauss())
+            }
+            Ensemble::GaussianUnnormalized => Mat::from_fn(m, n, |_, _| rng.gauss()),
+            Ensemble::Bernoulli => {
+                let sc = 1.0 / (m as f64).sqrt();
+                Mat::from_fn(m, n, |_, _| sc * rng.sign())
+            }
+            Ensemble::PartialDct => {
+                let rows = rng.subset(n, m);
+                let sc = (n as f64 / m as f64).sqrt();
+                let nf = n as f64;
+                Mat::from_fn(m, n, |i, j| {
+                    let k = rows[i] as f64;
+                    // Orthonormal DCT-II row k.
+                    let c0 = if rows[i] == 0 { (1.0 / nf).sqrt() } else { (2.0 / nf).sqrt() };
+                    sc * c0 * (std::f64::consts::PI * k * (j as f64 + 0.5) / nf).cos()
+                })
+            }
+        }
+    }
+
+    fn gen_signal(&self, rng: &mut Rng) -> (Vec<f64>, Vec<usize>) {
+        let mut supp = rng.subset(self.n, self.s);
+        supp.sort_unstable();
+        let mut x = vec![0.0f64; self.n];
+        for (k, &i) in supp.iter().enumerate() {
+            x[i] = match self.signal {
+                SignalModel::GaussianSpikes => rng.gauss(),
+                SignalModel::FlatSpikes => rng.sign(),
+                SignalModel::LinearDecay => rng.sign() * (self.s - k) as f64 / self.s as f64,
+            };
+        }
+        (x, supp)
+    }
+}
+
+/// Transposed copy of a matrix (row-major `n x m` = column-major `m x n`).
+fn transpose(a: &Mat<f64>) -> Mat<f64> {
+    Mat::from_fn(a.cols(), a.rows(), |i, j| a.get(j, i))
+}
+
+/// A concrete compressed-sensing instance.
+#[derive(Clone, Debug)]
+pub struct Problem {
+    pub spec: ProblemSpec,
+    /// Measurement matrix, row-major `m x n`.
+    pub a: Mat<f64>,
+    /// Transposed copy (`n x m`, i.e. column-major view of `A`): the
+    /// asynchronous runtimes' sparse exit check walks *columns* of `A`
+    /// (one per support index), which in row-major storage touches one
+    /// cache line per row; the transpose makes each column a contiguous
+    /// `m`-length stream (§Perf in EXPERIMENTS.md — ~4x on the check).
+    pub a_t: Mat<f64>,
+    /// Planted `s`-sparse signal.
+    pub x_true: Vec<f64>,
+    /// Sorted support of `x_true`.
+    pub support: Vec<usize>,
+    /// Observations `y = A x + z`.
+    pub y: Vec<f64>,
+}
+
+impl Problem {
+    /// Assemble an instance from raw parts (test vectors, custom data).
+    /// Derives the support and the transposed copy.
+    pub fn from_parts(spec: ProblemSpec, a: Mat<f64>, x_true: Vec<f64>, y: Vec<f64>) -> Problem {
+        let support = crate::support::support_of(&x_true);
+        let a_t = transpose(&a);
+        Problem { spec, a, a_t, x_true, support, y }
+    }
+
+    /// Measurement block `A_{b_i}` as a zero-copy view, with its `y` slice.
+    pub fn block(&self, i: usize) -> (RowBlock<'_, f64>, &[f64]) {
+        let b = self.spec.b;
+        assert!(i < self.spec.num_blocks(), "block index {i} out of range");
+        (self.a.row_block(i * b, (i + 1) * b), &self.y[i * b..(i + 1) * b])
+    }
+
+    /// `||y - A x||_2` — the paper's halting statistic.
+    pub fn residual_norm(&self, x: &[f64]) -> f64 {
+        let ax = self.a.gemv(x);
+        let mut s = 0.0;
+        for i in 0..self.spec.m {
+            let d = self.y[i] - ax[i];
+            s += d * d;
+        }
+        s.sqrt()
+    }
+
+    /// `||y - A x||_2` exploiting a known (sorted) support of `x`:
+    /// `A x` touches only the supported columns, so the check costs
+    /// `O(m |supp|)` instead of `O(m n)` — the asynchronous runtimes call
+    /// this once per core per time step. Uses the transposed copy so each
+    /// supported column is one contiguous stream (see [`Problem::a_t`]).
+    pub fn residual_norm_sparse(&self, x: &[f64], support: &[usize]) -> f64 {
+        debug_assert!(support.windows(2).all(|w| w[0] < w[1]));
+        let m = self.spec.m;
+        let mut r = self.y.clone();
+        for &j in support {
+            let xj = x[j];
+            if xj != 0.0 {
+                crate::linalg::axpy(-xj, &self.a_t.row(j)[..m], &mut r);
+            }
+        }
+        crate::linalg::nrm2(&r)
+    }
+
+    /// Recovery error `||x - x_true||_2` (Fig. 1's y-axis).
+    pub fn recovery_error(&self, x: &[f64]) -> f64 {
+        crate::linalg::dist2(x, &self.x_true)
+    }
+
+    /// Relative recovery error `||x - x_true|| / ||x_true||`.
+    pub fn relative_error(&self, x: &[f64]) -> f64 {
+        let denom = nrm2(&self.x_true);
+        if denom == 0.0 {
+            self.recovery_error(x)
+        } else {
+            self.recovery_error(x) / denom
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dot;
+
+    fn spec(e: Ensemble) -> ProblemSpec {
+        ProblemSpec { ensemble: e, ..ProblemSpec::tiny() }
+    }
+
+    #[test]
+    fn paper_spec_is_valid() {
+        let sp = ProblemSpec::paper();
+        sp.validate().unwrap();
+        assert_eq!(sp.num_blocks(), 20);
+    }
+
+    #[test]
+    fn validation_catches_bad_specs() {
+        let mut sp = ProblemSpec::tiny();
+        sp.b = 5; // doesn't divide m=16
+        assert!(sp.validate().is_err());
+        let mut sp = ProblemSpec::tiny();
+        sp.s = 100; // > n
+        assert!(sp.validate().is_err());
+        let mut sp = ProblemSpec::tiny();
+        sp.noise_std = -1.0;
+        assert!(sp.validate().is_err());
+        let mut sp = ProblemSpec::tiny();
+        sp.m = 64;
+        sp.b = 4;
+        sp.ensemble = Ensemble::PartialDct; // m > n
+        assert!(sp.validate().is_err());
+    }
+
+    #[test]
+    fn generated_signal_is_exactly_s_sparse() {
+        let mut rng = Rng::seed_from(1);
+        for model in [SignalModel::GaussianSpikes, SignalModel::FlatSpikes, SignalModel::LinearDecay] {
+            let sp = ProblemSpec { signal: model, ..ProblemSpec::tiny() };
+            let p = sp.generate(&mut rng);
+            let nnz = p.x_true.iter().filter(|&&v| v != 0.0).count();
+            assert_eq!(nnz, sp.s);
+            assert_eq!(p.support.len(), sp.s);
+            for &i in &p.support {
+                assert!(p.x_true[i] != 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn noiseless_measurements_are_consistent() {
+        let mut rng = Rng::seed_from(2);
+        let p = ProblemSpec::tiny().generate(&mut rng);
+        assert!(p.residual_norm(&p.x_true) < 1e-12);
+        assert_eq!(p.recovery_error(&p.x_true), 0.0);
+    }
+
+    #[test]
+    fn noise_perturbs_measurements() {
+        let mut rng = Rng::seed_from(3);
+        let sp = ProblemSpec { noise_std: 0.1, ..ProblemSpec::tiny() };
+        let p = sp.generate(&mut rng);
+        let r = p.residual_norm(&p.x_true);
+        // E[r] ≈ 0.1 * sqrt(m) = 0.4
+        assert!(r > 0.05 && r < 1.5, "residual {r}");
+    }
+
+    #[test]
+    fn gaussian_columns_have_unit_expected_norm() {
+        let mut rng = Rng::seed_from(4);
+        let sp = ProblemSpec { n: 64, m: 256, b: 16, ..spec(Ensemble::Gaussian) };
+        let p = sp.generate(&mut rng);
+        let mut mean = 0.0;
+        for j in 0..sp.n {
+            let c = p.a.col_copy(j);
+            mean += dot(&c, &c);
+        }
+        mean /= sp.n as f64;
+        assert!((mean - 1.0).abs() < 0.15, "mean col norm^2 {mean}");
+    }
+
+    #[test]
+    fn bernoulli_entries_are_pm_inv_sqrt_m() {
+        let mut rng = Rng::seed_from(5);
+        let p = spec(Ensemble::Bernoulli).generate(&mut rng);
+        let v = 1.0 / (p.spec.m as f64).sqrt();
+        assert!(p.a.data().iter().all(|&x| (x.abs() - v).abs() < 1e-15));
+    }
+
+    #[test]
+    fn partial_dct_rows_are_orthonormal_before_scaling() {
+        let mut rng = Rng::seed_from(6);
+        let sp = ProblemSpec { n: 32, m: 16, b: 4, ..spec(Ensemble::PartialDct) };
+        let p = sp.generate(&mut rng);
+        let sc2 = sp.n as f64 / sp.m as f64;
+        // Rows of the scaled matrix: ||row||^2 = n/m; distinct rows orthogonal.
+        for i in 0..sp.m {
+            let ri = p.a.row(i);
+            assert!((dot(ri, ri) - sc2).abs() < 1e-10, "row norm");
+            for j in (i + 1)..sp.m {
+                assert!(dot(ri, p.a.row(j)).abs() < 1e-10, "orthogonality");
+            }
+        }
+    }
+
+    #[test]
+    fn block_views_tile_the_matrix() {
+        let mut rng = Rng::seed_from(7);
+        let p = ProblemSpec::tiny().generate(&mut rng);
+        let x: Vec<f64> = (0..p.spec.n).map(|i| (i as f64 * 0.1).sin()).collect();
+        let full = p.a.gemv(&x);
+        for i in 0..p.spec.num_blocks() {
+            let (blk, yb) = p.block(i);
+            assert_eq!(blk.gemv(&x), &full[i * p.spec.b..(i + 1) * p.spec.b]);
+            assert_eq!(yb, &p.y[i * p.spec.b..(i + 1) * p.spec.b]);
+        }
+    }
+
+    #[test]
+    fn transposed_copy_is_consistent() {
+        let mut rng = Rng::seed_from(9);
+        let p = ProblemSpec::tiny().generate(&mut rng);
+        for i in 0..p.spec.m {
+            for j in 0..p.spec.n {
+                assert_eq!(p.a.get(i, j), p.a_t.get(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_residual_matches_dense() {
+        let mut rng = Rng::seed_from(8);
+        let p = ProblemSpec::tiny().generate(&mut rng);
+        let mut x = vec![0.0; p.spec.n];
+        let supp = vec![1usize, 7, 20];
+        for &i in &supp {
+            x[i] = rng.gauss();
+        }
+        let dense = p.residual_norm(&x);
+        let sparse = p.residual_norm_sparse(&x, &supp);
+        assert!((dense - sparse).abs() < 1e-12);
+        // empty support = ||y||
+        assert!((p.residual_norm_sparse(&vec![0.0; p.spec.n], &[]) - crate::linalg::nrm2(&p.y)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let p1 = ProblemSpec::paper().generate(&mut Rng::seed_from(42));
+        let p2 = ProblemSpec::paper().generate(&mut Rng::seed_from(42));
+        assert_eq!(p1.a.data(), p2.a.data());
+        assert_eq!(p1.x_true, p2.x_true);
+        assert_eq!(p1.y, p2.y);
+    }
+
+    #[test]
+    fn parse_enums() {
+        assert_eq!(Ensemble::parse("gaussian"), Some(Ensemble::Gaussian));
+        assert_eq!(Ensemble::parse("partial_dct"), Some(Ensemble::PartialDct));
+        assert_eq!(Ensemble::parse("nope"), None);
+        assert_eq!(SignalModel::parse("flat"), Some(SignalModel::FlatSpikes));
+        assert_eq!(SignalModel::parse("nope"), None);
+    }
+}

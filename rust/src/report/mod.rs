@@ -1,0 +1,57 @@
+//! Report emission: every experiment driver funnels its table through
+//! [`emit`], which prints the aligned text (what the paper's figure shows)
+//! and persists the CSV under `results/` so the series can be re-plotted.
+
+use std::path::PathBuf;
+
+use crate::metrics::Table;
+
+/// Directory for CSV outputs: `$ASTIR_RESULTS` or `./results`.
+pub fn results_dir() -> PathBuf {
+    std::env::var_os("ASTIR_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("results"))
+}
+
+/// Print a titled, aligned table and write `results/<name>.csv`.
+/// Returns the CSV path (best-effort: IO errors are reported, not fatal —
+/// benches still print their numbers on read-only filesystems).
+pub fn emit(name: &str, title: &str, table: &Table) -> Option<PathBuf> {
+    println!("\n--- {title} ---");
+    print!("{}", table.to_aligned());
+    let path = results_dir().join(format!("{name}.csv"));
+    match table.write_csv(&path) {
+        Ok(()) => {
+            println!("[written {}]", path.display());
+            Some(path)
+        }
+        Err(e) => {
+            eprintln!("[warn] could not write {}: {e}", path.display());
+            None
+        }
+    }
+}
+
+/// A free-form note printed alongside a report (assumptions, paper refs).
+pub fn note(text: &str) {
+    println!("    {text}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emit_writes_csv() {
+        let dir = std::env::temp_dir().join("astir_report_test");
+        std::env::set_var("ASTIR_RESULTS", &dir);
+        let mut t = Table::new(&["a", "b"]);
+        t.push_row(vec![1.0, 2.0]);
+        let p = emit("unit_test_table", "unit test", &t).unwrap();
+        assert!(p.exists());
+        let body = std::fs::read_to_string(&p).unwrap();
+        assert!(body.contains("a,b"));
+        std::env::remove_var("ASTIR_RESULTS");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,308 @@
+//! Deterministic, splittable pseudo-randomness.
+//!
+//! Everything stochastic in the crate — measurement matrices, sparse
+//! signals, block sampling, core interleavings — flows through this module
+//! so that every experiment is reproducible from a single `u64` seed and
+//! every Monte-Carlo trial / worker core gets an *independent* stream
+//! ([`Rng::split`], seeded via SplitMix64 like the reference xoshiro
+//! implementation recommends).
+//!
+//! The generator is **xoshiro256++** (Blackman & Vigna): 4x64-bit state,
+//! sub-ns per draw, passes BigCrush; Gaussian variates use the polar
+//! Box–Muller method with a cached spare.
+
+/// SplitMix64 — used to expand seeds into xoshiro state and to derive
+/// independent child seeds.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256++ generator with Gaussian support.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second Box–Muller variate.
+    spare: Option<f64>,
+}
+
+impl Rng {
+    /// Seed deterministically from a single u64 (SplitMix64 expansion).
+    pub fn seed_from(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare: None }
+    }
+
+    /// Derive an independent child stream (e.g. one per trial or per core).
+    ///
+    /// Uses fresh SplitMix64 output keyed by the next raw draw and the
+    /// index, so `split(i)` and `split(j)` are uncorrelated for `i != j`
+    /// and neither correlates with the parent's continuation.
+    pub fn split(&mut self, index: u64) -> Rng {
+        let mut sm = self.next_u64() ^ index.wrapping_mul(0xA24BAED4963EE407);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare: None }
+    }
+
+    /// Next raw 64 random bits (xoshiro256++ step).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's multiply-shift with rejection).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "below(0)");
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n {
+                return (m >> 64) as usize;
+            }
+            // Rejection zone: accept unless lo < (2^64 mod n).
+            let t = n.wrapping_neg() % n;
+            if lo >= t {
+                return (m >> 64) as usize;
+            }
+        }
+    }
+
+    /// Standard normal variate (polar Box–Muller with cached spare).
+    pub fn gauss(&mut self) -> f64 {
+        if let Some(v) = self.spare.take() {
+            return v;
+        }
+        loop {
+            let u = 2.0 * self.next_f64() - 1.0;
+            let v = 2.0 * self.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.spare = Some(v * f);
+                return u * f;
+            }
+        }
+    }
+
+    /// `k` distinct indices drawn uniformly from `[0, n)`, in random order
+    /// (partial Fisher–Yates over an index table; O(n) memory, O(n) time —
+    /// fine at the crate's dimensions).
+    pub fn subset(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "subset: k > n");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Sample an index from an (unnormalized, nonnegative) weight vector.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "categorical: zero total weight");
+        let mut u = self.next_f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            debug_assert!(w >= 0.0);
+            if u < w {
+                return i;
+            }
+            u -= w;
+        }
+        weights.len() - 1 // numerical slack
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Random sign (+1.0 / -1.0).
+    #[inline]
+    pub fn sign(&mut self) -> f64 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Rng::seed_from(123);
+        let mut b = Rng::seed_from(123);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::seed_from(1);
+        let mut b = Rng::seed_from(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn split_streams_are_independent_and_deterministic() {
+        let mut parent1 = Rng::seed_from(5);
+        let mut parent2 = Rng::seed_from(5);
+        let mut c1 = parent1.split(0);
+        let mut c2 = parent2.split(0);
+        for _ in 0..50 {
+            assert_eq!(c1.next_u64(), c2.next_u64());
+        }
+        let mut p = Rng::seed_from(5);
+        let mut a = p.split(1);
+        let mut b = p.split(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut rng = Rng::seed_from(99);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let v = rng.next_f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut rng = Rng::seed_from(7);
+        let mut counts = [0usize; 10];
+        for _ in 0..50_000 {
+            counts[rng.below(10)] += 1;
+        }
+        for &c in &counts {
+            assert!((4000..6000).contains(&c), "counts {counts:?}");
+        }
+    }
+
+    #[test]
+    fn gauss_moments() {
+        let mut rng = Rng::seed_from(31);
+        let n = 100_000;
+        let (mut s1, mut s2, mut s4) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let g = rng.gauss();
+            s1 += g;
+            s2 += g * g;
+            s4 += g * g * g * g;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        let kurt = s4 / n as f64 / (var * var);
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+        assert!((kurt - 3.0).abs() < 0.15, "kurtosis {kurt}");
+    }
+
+    #[test]
+    fn subset_distinct_and_in_range() {
+        let mut rng = Rng::seed_from(3);
+        for _ in 0..200 {
+            let k = rng.below(20);
+            let s = rng.subset(50, k);
+            assert_eq!(s.len(), k);
+            let mut sorted = s.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), k, "duplicates in subset");
+            assert!(s.iter().all(|&i| i < 50));
+        }
+    }
+
+    #[test]
+    fn subset_covers_uniformly() {
+        let mut rng = Rng::seed_from(13);
+        let mut counts = [0usize; 20];
+        for _ in 0..20_000 {
+            for i in rng.subset(20, 3) {
+                counts[i] += 1;
+            }
+        }
+        // Each index expected 3000 hits.
+        for &c in &counts {
+            assert!((2500..3500).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut rng = Rng::seed_from(17);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[rng.categorical(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio {ratio}");
+    }
+
+    #[test]
+    #[should_panic(expected = "below(0)")]
+    fn below_zero_panics() {
+        Rng::seed_from(0).below(0);
+    }
+
+    #[test]
+    fn bernoulli_and_sign() {
+        let mut rng = Rng::seed_from(23);
+        let heads = (0..10_000).filter(|_| rng.bernoulli(0.25)).count();
+        assert!((2000..3000).contains(&heads), "{heads}");
+        let pos = (0..10_000).filter(|_| rng.sign() > 0.0).count();
+        assert!((4500..5500).contains(&pos), "{pos}");
+    }
+}

@@ -1,0 +1,374 @@
+//! PJRT runtime — loads and executes the AOT artifacts produced by
+//! `make artifacts` (`python/compile/aot.py`).
+//!
+//! Interchange is HLO **text** (`*.hlo.txt`): jax ≥ 0.5 serializes protos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects, while the
+//! text parser reassigns ids (see `/opt/xla-example/README.md`). Each
+//! artifact carries a `.meta` sidecar of `key = value` lines; discovery
+//! ([`ArtifactStore::discover`]) indexes those so callers ask for
+//! *"the stoiht_step for (n=1000, b=15, s=20)"* rather than file names.
+//!
+//! [`PjrtRuntime`] compiles artifacts on the PJRT CPU client once and
+//! exposes typed entry points ([`PjrtRuntime::stoiht_step`], …) that do the
+//! f64↔f32 marshalling at the boundary. The handle is cheap to clone
+//! (client + compiled executables are shared), but **not** `Send`: each
+//! worker thread builds its own runtime (`PjRtClient` wraps a C++ pointer
+//! without thread-safety guarantees in the 0.1.6 crate).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Artifact kinds emitted by `python/compile/aot.py`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// Full Alg.-2 step: `(A_b, y_b, x, alpha, tally_mask) -> (x_next, gamma_mask)`.
+    StoihtStep,
+    /// Classical IHT step: `(A, y, x, gamma) -> (x_next,)`.
+    IhtStep,
+    /// Halting statistic: `(A, y, x) -> (||y - A x||,)`.
+    Residual,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "stoiht_step" => Some(ArtifactKind::StoihtStep),
+            "iht_step" => Some(ArtifactKind::IhtStep),
+            "residual" => Some(ArtifactKind::Residual),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed `.meta` sidecar.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub kind: ArtifactKind,
+    pub n: usize,
+    pub m: usize,
+    /// Row count of the step input (`b` for stoiht_step, `m` otherwise).
+    pub b: usize,
+    pub s: usize,
+    /// Path of the HLO text file.
+    pub hlo_path: PathBuf,
+}
+
+/// Key under which artifacts are indexed: (kind, n, rows, s).
+pub type ArtifactKey = (ArtifactKind, usize, usize, usize);
+
+impl ArtifactMeta {
+    pub fn key(&self) -> ArtifactKey {
+        (self.kind, self.n, self.b, self.s)
+    }
+
+    /// Parse a sidecar file (`key = value` lines).
+    pub fn from_sidecar(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut kv: HashMap<String, String> = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("bad meta line `{line}` in {}", path.display()))?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let get = |k: &str| -> Result<&String> {
+            kv.get(k).ok_or_else(|| anyhow!("meta {} missing `{k}`", path.display()))
+        };
+        let kind = ArtifactKind::parse(get("kind")?)
+            .ok_or_else(|| anyhow!("unknown artifact kind `{}`", kv["kind"]))?;
+        let parse_usize =
+            |k: &str| -> Result<usize> { Ok(get(k)?.parse::<usize>().context(k.to_string())?) };
+        let hlo_path = path.with_extension("hlo.txt");
+        if !hlo_path.exists() {
+            bail!("HLO file {} missing for sidecar {}", hlo_path.display(), path.display());
+        }
+        Ok(ArtifactMeta {
+            kind,
+            n: parse_usize("n")?,
+            m: parse_usize("m")?,
+            b: parse_usize("b")?,
+            s: parse_usize("s")?,
+            hlo_path,
+        })
+    }
+}
+
+/// Index of all artifacts under a directory.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactStore {
+    artifacts: HashMap<ArtifactKey, ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+impl ArtifactStore {
+    /// Scan `dir` for `*.meta` sidecars.
+    pub fn discover(dir: &Path) -> Result<Self> {
+        let mut artifacts = HashMap::new();
+        let entries = std::fs::read_dir(dir)
+            .with_context(|| format!("artifact dir {} (run `make artifacts`)", dir.display()))?;
+        for entry in entries {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) == Some("meta") {
+                let meta = ArtifactMeta::from_sidecar(&path)?;
+                artifacts.insert(meta.key(), meta);
+            }
+        }
+        Ok(ArtifactStore { artifacts, dir: dir.to_path_buf() })
+    }
+
+    /// Default directory: `$ASTIR_ARTIFACTS`, else `./artifacts`, else
+    /// `<crate root>/artifacts` (so examples work from any cwd).
+    pub fn default_dir() -> PathBuf {
+        if let Some(dir) = std::env::var_os("ASTIR_ARTIFACTS") {
+            return PathBuf::from(dir);
+        }
+        let local = PathBuf::from("artifacts");
+        if local.is_dir() {
+            return local;
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+
+    pub fn get(&self, key: &ArtifactKey) -> Option<&ArtifactMeta> {
+        self.artifacts.get(key)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ArtifactMeta> {
+        self.artifacts.values()
+    }
+}
+
+/// A compiled-executable cache over an [`ArtifactStore`] on the PJRT CPU
+/// client. Not `Send` — build one per thread.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    store: ArtifactStore,
+    compiled: std::cell::RefCell<HashMap<ArtifactKey, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtRuntime {
+    /// CPU client over the given artifact directory.
+    pub fn new(dir: &Path) -> Result<Self> {
+        let store = ArtifactStore::discover(dir)?;
+        if store.is_empty() {
+            bail!("no artifacts found in {} (run `make artifacts`)", dir.display());
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(PjrtRuntime { client, store, compiled: Default::default() })
+    }
+
+    /// Runtime over [`ArtifactStore::default_dir`].
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(&ArtifactStore::default_dir())
+    }
+
+    pub fn store(&self) -> &ArtifactStore {
+        &self.store
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile (memoized) the artifact for `key`.
+    fn executable(&self, key: ArtifactKey) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.compiled.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let meta = self
+            .store
+            .get(&key)
+            .ok_or_else(|| anyhow!("no artifact for {key:?} in {}", self.store.dir.display()))?;
+        let path_str = meta
+            .hlo_path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-UTF8 path {}", meta.hlo_path.display()))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", meta.hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", meta.hlo_path.display()))?;
+        let exe = std::rc::Rc::new(exe);
+        self.compiled.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute one Alg.-2 step on the artifact for `(n, b, s)`.
+    ///
+    /// Marshals f64 slices to the artifact's f32 and back.
+    /// Returns `(x_next, gamma_mask_indices)` with the gamma mask already
+    /// converted to sorted indices.
+    pub fn stoiht_step(
+        &self,
+        n: usize,
+        b: usize,
+        s: usize,
+        a_blk: &[f64],
+        y_blk: &[f64],
+        x: &[f64],
+        alpha: f64,
+        tally_mask: &[f64],
+    ) -> Result<(Vec<f64>, Vec<usize>)> {
+        assert_eq!(a_blk.len(), b * n);
+        assert_eq!(y_blk.len(), b);
+        assert_eq!(x.len(), n);
+        assert_eq!(tally_mask.len(), n);
+        let exe = self.executable((ArtifactKind::StoihtStep, n, b, s))?;
+        let a_lit = lit_mat(a_blk, b, n)?;
+        let y_lit = lit_vec(y_blk);
+        let x_lit = lit_vec(x);
+        let alpha_lit = xla::Literal::scalar(alpha as f32);
+        let mask_lit = lit_vec(tally_mask);
+        let result = exe
+            .execute::<xla::Literal>(&[a_lit, y_lit, x_lit, alpha_lit, mask_lit])
+            .map_err(|e| anyhow!("execute stoiht_step: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let mut parts = result.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        if parts.len() != 2 {
+            bail!("stoiht_step artifact returned {} outputs, want 2", parts.len());
+        }
+        let gamma_lit = parts.pop().unwrap();
+        let x_lit = parts.pop().unwrap();
+        let x_next: Vec<f64> = to_f64(&x_lit)?;
+        let gamma_mask: Vec<f64> = to_f64(&gamma_lit)?;
+        let gamma: Vec<usize> = (0..n).filter(|&i| gamma_mask[i] != 0.0).collect();
+        Ok((x_next, gamma))
+    }
+
+    /// Execute one classical IHT step on the artifact for `(n, m, s)`.
+    pub fn iht_step(
+        &self,
+        n: usize,
+        m: usize,
+        s: usize,
+        a: &[f64],
+        y: &[f64],
+        x: &[f64],
+        gamma: f64,
+    ) -> Result<Vec<f64>> {
+        let exe = self.executable((ArtifactKind::IhtStep, n, m, s))?;
+        let a_lit = lit_mat(a, m, n)?;
+        let y_lit = lit_vec(y);
+        let x_lit = lit_vec(x);
+        let g_lit = xla::Literal::scalar(gamma as f32);
+        let result = exe
+            .execute::<xla::Literal>(&[a_lit, y_lit, x_lit, g_lit])
+            .map_err(|e| anyhow!("execute iht_step: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        to_f64(&out)
+    }
+
+    /// Execute the residual-norm artifact for `(n, m)`.
+    pub fn residual_norm(&self, n: usize, m: usize, a: &[f64], y: &[f64], x: &[f64]) -> Result<f64> {
+        // residual artifacts are keyed with rows = m, s = m (see aot.py meta).
+        let key = self
+            .store
+            .iter()
+            .find(|meta| meta.kind == ArtifactKind::Residual && meta.n == n && meta.m == m)
+            .map(|meta| meta.key())
+            .ok_or_else(|| anyhow!("no residual artifact for n={n} m={m}"))?;
+        let exe = self.executable(key)?;
+        let a_lit = lit_mat(a, m, n)?;
+        let y_lit = lit_vec(y);
+        let x_lit = lit_vec(x);
+        let result = exe
+            .execute::<xla::Literal>(&[a_lit, y_lit, x_lit])
+            .map_err(|e| anyhow!("execute residual: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let v = out
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow!("scalar fetch: {e:?}"))?;
+        Ok(v as f64)
+    }
+}
+
+fn lit_vec(v: &[f64]) -> xla::Literal {
+    let f: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+    xla::Literal::vec1(&f)
+}
+
+fn lit_mat(v: &[f64], rows: usize, cols: usize) -> Result<xla::Literal> {
+    let f: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+    xla::Literal::vec1(&f)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| anyhow!("reshape ({rows},{cols}): {e:?}"))
+}
+
+fn to_f64(lit: &xla::Literal) -> Result<Vec<f64>> {
+    let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+    Ok(v.into_iter().map(|x| x as f64).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        // Tests run from the crate root; skip when artifacts are not built.
+        let dir = ArtifactStore::default_dir();
+        if dir.join("stoiht_step_n32_b4_s3.meta").exists() {
+            Some(dir)
+        } else {
+            eprintln!("skipping PJRT test: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+
+    #[test]
+    fn sidecar_parsing_roundtrip() {
+        let Some(dir) = artifacts_dir() else { return };
+        let meta = ArtifactMeta::from_sidecar(&dir.join("stoiht_step_n32_b4_s3.meta")).unwrap();
+        assert_eq!(meta.kind, ArtifactKind::StoihtStep);
+        assert_eq!((meta.n, meta.m, meta.b, meta.s), (32, 16, 4, 3));
+        assert!(meta.hlo_path.exists());
+    }
+
+    #[test]
+    fn discovery_finds_default_set() {
+        let Some(dir) = artifacts_dir() else { return };
+        let store = ArtifactStore::discover(&dir).unwrap();
+        // 2 shapes x 3 kinds
+        assert!(store.len() >= 6, "found {}", store.len());
+        assert!(store.get(&(ArtifactKind::StoihtStep, 1000, 15, 20)).is_some());
+        assert!(store.get(&(ArtifactKind::IhtStep, 32, 16, 3)).is_some());
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(ArtifactStore::discover(Path::new("/nonexistent/astir")).is_err());
+    }
+
+    #[test]
+    fn bad_sidecar_errors() {
+        let dir = std::env::temp_dir().join("astir_meta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.meta");
+        std::fs::write(&p, "kind = stoiht_step\nn = 4\n").unwrap();
+        // missing keys + missing HLO file
+        assert!(ArtifactMeta::from_sidecar(&p).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

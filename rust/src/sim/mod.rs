@@ -1,0 +1,495 @@
+//! Discrete-time multicore simulator — the semantics of the paper's §IV-B.
+//!
+//! A **time step** is the time the fastest core needs for one iteration of
+//! Algorithm 2. Within step `τ`:
+//!
+//! 1. *Read phase* — every core **starting** an iteration this step reads
+//!    the same tally estimate `T̃ = supp_s(φ)` ("every core utilizes the
+//!    same set identified by the tally"), samples its block, and computes
+//!    its proxy/identify/estimate arithmetic from its **local** iterate.
+//! 2. *Commit phase* — every core **finishing** an iteration this step
+//!    (fast cores: the same step; slow cores with period `k`: `k−1` steps
+//!    after the read — they compute from information that is `k−1` steps
+//!    stale, which is the asynchrony hazard being studied) installs its new
+//!    local iterate, casts its tally votes `φ_{Γ^t} += t`,
+//!    `φ_{Γ^{t−1}} −= t−1`, and checks the exit criterion
+//!    `||y − A x||_2 < tol`.
+//!
+//! The run terminates the first time **any** core passes the exit check
+//! (the paper records that step count), or at `max_steps`.
+//!
+//! Beyond the paper, the simulator also implements:
+//!
+//! * [`SharingMode::SharedX`] — ablation A1: HOGWILD!-style sharing of the
+//!   *iterate* instead of the tally (cores read the shared `x`, compute,
+//!   and write their sparse updates back, zeroing their previously-written
+//!   support). This is the strawman §I argues cannot work because dense
+//!   cost functions make overwrites frequent.
+//! * `stale_read_prob` — ablation A2: inconsistent reads of `φ`; each
+//!   coordinate of the read snapshot is, with this probability, taken from
+//!   the tally as of the *previous* step (an entry-granularity torn read).
+//! * [`crate::tally::TallyWeighting`] — ablation A3.
+//! * `self_exclude` — ablation A6 (a reproduction finding, not in the
+//!   paper): each core subtracts its **own** standing vote before taking
+//!   `supp_s(φ)`, so `T̃` carries only *other* cores' information. With
+//!   this on, `c = 1` degenerates *exactly* to Algorithm 1 (empty `T̃`),
+//!   which removes the small-`c` penalty of the literal Alg. 2 (see
+//!   EXPERIMENTS.md §F2).
+
+use crate::algorithms::StoihtKernel;
+use crate::problem::Problem;
+use crate::rng::Rng;
+use crate::support::{support_of, union};
+use crate::tally::{positive_top_s, LocalTally, TallyWeighting};
+
+/// Per-core speed assignment.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SpeedSchedule {
+    /// Every core completes one iteration per time step (Fig. 2 upper).
+    AllFast,
+    /// The first `ceil(c/2)` cores are fast; the rest complete one
+    /// iteration every `period` steps (Fig. 2 lower uses `period = 4`).
+    HalfSlow { period: usize },
+    /// Explicit per-core periods (1 = fast).
+    Custom(Vec<usize>),
+}
+
+impl SpeedSchedule {
+    /// Resolve to per-core periods for `cores` cores.
+    pub fn periods(&self, cores: usize) -> Vec<usize> {
+        match self {
+            SpeedSchedule::AllFast => vec![1; cores],
+            SpeedSchedule::HalfSlow { period } => {
+                assert!(*period >= 1);
+                let fast = cores - cores / 2; // ceil(c/2) fast
+                (0..cores).map(|i| if i < fast { 1 } else { *period }).collect()
+            }
+            SpeedSchedule::Custom(p) => {
+                assert_eq!(p.len(), cores, "custom schedule length != cores");
+                assert!(p.iter().all(|&k| k >= 1), "periods must be >= 1");
+                p.clone()
+            }
+        }
+    }
+}
+
+/// What the cores share.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SharingMode {
+    /// The paper's Algorithm 2: share the tally `φ`, keep iterates local.
+    Tally,
+    /// Ablation A1: share the iterate `x` HOGWILD!-style (no tally).
+    SharedX,
+}
+
+/// Simulator options (defaults = paper §IV).
+#[derive(Clone, Debug)]
+pub struct SimOpts {
+    /// Step size `gamma`.
+    pub gamma: f64,
+    /// Exit tolerance on `||y − A x||_2`.
+    pub tolerance: f64,
+    /// Hard cap on global time steps.
+    pub max_steps: usize,
+    /// Tally weighting scheme (paper: `Progress`).
+    pub weighting: TallyWeighting,
+    /// Sharing mode (paper: `Tally`).
+    pub mode: SharingMode,
+    /// Probability that each coordinate of a tally read is one step stale.
+    pub stale_read_prob: f64,
+    /// A6: subtract the reading core's own standing vote from `φ` before
+    /// `supp_s` (the paper's Alg. 2 reads the raw tally; default false).
+    pub self_exclude: bool,
+    /// Record per-step recovery error of the best core (diagnostics).
+    pub record_error: bool,
+}
+
+impl Default for SimOpts {
+    fn default() -> Self {
+        SimOpts {
+            gamma: 1.0,
+            tolerance: 1e-7,
+            max_steps: 1500, // the paper's cap applies to time steps too
+            weighting: TallyWeighting::Progress,
+            mode: SharingMode::Tally,
+            stale_read_prob: 0.0,
+            self_exclude: false,
+            record_error: false,
+        }
+    }
+}
+
+/// Result of one simulated multicore run.
+#[derive(Clone, Debug)]
+pub struct SimOutcome {
+    /// Global time steps elapsed when the first core exited (or `max_steps`).
+    pub steps: usize,
+    /// Whether any core met the tolerance.
+    pub converged: bool,
+    /// Index of the first core to exit.
+    pub exit_core: Option<usize>,
+    /// Local iterations completed per core.
+    pub local_iters: Vec<u64>,
+    /// Recovery error of the exiting core's iterate (or best core at cap).
+    pub final_error: f64,
+    /// Per-step min-over-cores recovery error (empty unless `record_error`).
+    pub error_trace: Vec<f64>,
+}
+
+/// One in-flight iteration (between its read and commit steps).
+struct Pending {
+    commit_at: usize,
+    new_x: Vec<f64>,
+    gamma: Vec<usize>,
+    /// Support of `new_x` (sorted) for the sparse residual check.
+    support: Vec<usize>,
+}
+
+/// Simulate asynchronous StoIHT with `cores` cores (paper Alg. 2 + §IV-B).
+pub fn simulate(
+    problem: &Problem,
+    cores: usize,
+    schedule: &SpeedSchedule,
+    opts: &SimOpts,
+    rng: &mut Rng,
+) -> SimOutcome {
+    assert!(cores >= 1);
+    let spec = &problem.spec;
+    let periods = schedule.periods(cores);
+    let n = spec.n;
+    let s = spec.s;
+
+    // Per-core state.
+    let mut kernels: Vec<StoihtKernel> =
+        (0..cores).map(|_| StoihtKernel::new(problem, opts.gamma)).collect();
+    let mut rngs: Vec<Rng> = (0..cores).map(|i| rng.split(i as u64 + 1)).collect();
+    let mut xs: Vec<Vec<f64>> = vec![vec![0.0; n]; cores];
+    let mut t_local: Vec<u64> = vec![1; cores];
+    let mut prev_gamma: Vec<Vec<usize>> = vec![Vec::new(); cores];
+    let mut pending: Vec<Option<Pending>> = (0..cores).map(|_| None).collect();
+
+    // Shared state.
+    let mut tally = LocalTally::new(n, opts.weighting);
+    let mut prev_votes: Vec<i64> = vec![0; n]; // tally as of previous step
+    let mut shared_x: Vec<f64> = vec![0.0; n]; // SharedX mode only
+    let mut commit_order_rng = rng.split(0x5EED);
+    let mut fault_rng = rng.split(0xFA17);
+
+    let mut error_trace = Vec::new();
+
+    for step in 1..=opts.max_steps {
+        // ---- read phase: cores starting an iteration this step ----------
+        // All readers in this step see the same tally state (pre-commit),
+        // modulo injected stale coordinates (and minus their own vote under
+        // A6 self-exclusion).
+        let shared_estimate: Vec<usize> = if opts.mode == SharingMode::Tally && !opts.self_exclude {
+            read_estimate(&tally, &prev_votes, s, opts.stale_read_prob, &mut fault_rng)
+        } else {
+            Vec::new()
+        };
+        for c in 0..cores {
+            if pending[c].is_some() {
+                continue; // mid-iteration (slow core)
+            }
+            if (step - 1) % periods[c] != 0 {
+                continue; // not scheduled to start this step
+            }
+            let commit_at = step + periods[c] - 1;
+            let block = kernels[c].sample_block(&mut rngs[c]);
+            let p = match opts.mode {
+                SharingMode::Tally => {
+                    let estimate: Vec<usize> = if opts.self_exclude {
+                        read_estimate_excluding(
+                            &tally,
+                            &prev_votes,
+                            s,
+                            opts.stale_read_prob,
+                            &mut fault_rng,
+                            &prev_gamma[c],
+                            opts.weighting.add_weight(t_local[c].saturating_sub(1)),
+                        )
+                    } else {
+                        shared_estimate.clone()
+                    };
+                    let extra = if estimate.is_empty() { None } else { Some(estimate.as_slice()) };
+                    let mut new_x = xs[c].clone();
+                    let gamma = kernels[c].step(&mut new_x, block, extra).to_vec();
+                    let support = union(&gamma, &estimate);
+                    Pending { commit_at, new_x, gamma, support }
+                }
+                SharingMode::SharedX => {
+                    // HOGWILD!-style: read the shared iterate, Alg.-1 step.
+                    let mut new_x = shared_x.clone();
+                    let gamma = kernels[c].step(&mut new_x, block, None).to_vec();
+                    let support = gamma.clone();
+                    Pending { commit_at, new_x, gamma, support }
+                }
+            };
+            pending[c] = Some(p);
+        }
+
+        // ---- commit phase: cores finishing an iteration this step --------
+        prev_votes.copy_from_slice(tally.votes());
+        let mut committers: Vec<usize> = (0..cores)
+            .filter(|&c| pending[c].as_ref().is_some_and(|p| p.commit_at == step))
+            .collect();
+        // Randomize commit order (matters for SharedX overwrites).
+        shuffle(&mut committers, &mut commit_order_rng);
+
+        let mut exited: Option<(usize, f64)> = None;
+        for &c in &committers {
+            let p = pending[c].take().unwrap();
+            match opts.mode {
+                SharingMode::Tally => {
+                    xs[c].copy_from_slice(&p.new_x);
+                    tally.commit(&p.gamma, &prev_gamma[c], t_local[c]);
+                    prev_gamma[c] = p.gamma;
+                    t_local[c] += 1;
+                    if exited.is_none() {
+                        let r = problem.residual_norm_sparse(&xs[c], &p.support);
+                        if r < opts.tolerance {
+                            exited = Some((c, problem.recovery_error(&xs[c])));
+                        }
+                    }
+                }
+                SharingMode::SharedX => {
+                    // Zero what this core wrote last time, then write Γ^t.
+                    for &i in &prev_gamma[c] {
+                        shared_x[i] = 0.0;
+                    }
+                    for &i in &p.gamma {
+                        shared_x[i] = p.new_x[i];
+                    }
+                    prev_gamma[c] = p.gamma;
+                    t_local[c] += 1;
+                }
+            }
+        }
+        if opts.mode == SharingMode::SharedX && !committers.is_empty() && exited.is_none() {
+            // Exit is judged on the shared iterate after all writes land.
+            let supp = support_of(&shared_x);
+            let r = problem.residual_norm_sparse(&shared_x, &supp);
+            if r < opts.tolerance {
+                exited = Some((usize::MAX, problem.recovery_error(&shared_x)));
+            }
+        }
+
+        if opts.record_error {
+            let err = match opts.mode {
+                SharingMode::Tally => xs
+                    .iter()
+                    .map(|x| problem.recovery_error(x))
+                    .fold(f64::INFINITY, f64::min),
+                SharingMode::SharedX => problem.recovery_error(&shared_x),
+            };
+            error_trace.push(err);
+        }
+
+        if let Some((core, err)) = exited {
+            return SimOutcome {
+                steps: step,
+                converged: true,
+                exit_core: if core == usize::MAX { None } else { Some(core) },
+                local_iters: t_local.iter().map(|&t| t - 1).collect(),
+                final_error: err,
+                error_trace,
+            };
+        }
+    }
+
+    // Cap reached: report the best core (or the shared iterate).
+    let final_error = match opts.mode {
+        SharingMode::Tally => xs
+            .iter()
+            .map(|x| problem.recovery_error(x))
+            .fold(f64::INFINITY, f64::min),
+        SharingMode::SharedX => problem.recovery_error(&shared_x),
+    };
+    SimOutcome {
+        steps: opts.max_steps,
+        converged: false,
+        exit_core: None,
+        local_iters: t_local.iter().map(|&t| t - 1).collect(),
+        final_error,
+        error_trace,
+    }
+}
+
+/// Read `T̃` with staleness injection, minus the reading core's own
+/// standing vote (`own_weight` on `own_gamma`) — A6 self-exclusion.
+fn read_estimate_excluding(
+    tally: &LocalTally,
+    prev_votes: &[i64],
+    s: usize,
+    stale_prob: f64,
+    fault_rng: &mut Rng,
+    own_gamma: &[usize],
+    own_weight: i64,
+) -> Vec<usize> {
+    let cur = tally.votes();
+    let mut mixed: Vec<i64> = if stale_prob <= 0.0 {
+        cur.to_vec()
+    } else {
+        (0..cur.len())
+            .map(|i| if fault_rng.bernoulli(stale_prob) { prev_votes[i] } else { cur[i] })
+            .collect()
+    };
+    for &i in own_gamma {
+        mixed[i] -= own_weight;
+    }
+    positive_top_s(&mixed, s)
+}
+
+/// Read `T̃` with optional per-coordinate staleness injection.
+fn read_estimate(
+    tally: &LocalTally,
+    prev_votes: &[i64],
+    s: usize,
+    stale_prob: f64,
+    fault_rng: &mut Rng,
+) -> Vec<usize> {
+    if stale_prob <= 0.0 {
+        return tally.estimate(s);
+    }
+    let cur = tally.votes();
+    let mixed: Vec<i64> = (0..cur.len())
+        .map(|i| if fault_rng.bernoulli(stale_prob) { prev_votes[i] } else { cur[i] })
+        .collect();
+    positive_top_s(&mixed, s)
+}
+
+/// Fisher–Yates shuffle using the crate RNG.
+fn shuffle<T>(items: &mut [T], rng: &mut Rng) {
+    for i in (1..items.len()).rev() {
+        let j = rng.below(i + 1);
+        items.swap(i, j);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problem::ProblemSpec;
+
+    fn easy(seed: u64) -> Problem {
+        ProblemSpec { n: 128, m: 64, b: 8, s: 4, ..ProblemSpec::tiny() }
+            .generate(&mut Rng::seed_from(seed))
+    }
+
+    #[test]
+    fn schedules_resolve_correctly() {
+        assert_eq!(SpeedSchedule::AllFast.periods(3), vec![1, 1, 1]);
+        assert_eq!(SpeedSchedule::HalfSlow { period: 4 }.periods(4), vec![1, 1, 4, 4]);
+        // odd cores: ceil(c/2) fast
+        assert_eq!(SpeedSchedule::HalfSlow { period: 4 }.periods(5), vec![1, 1, 1, 4, 4]);
+        assert_eq!(SpeedSchedule::Custom(vec![1, 2, 3]).periods(3), vec![1, 2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "length != cores")]
+    fn custom_schedule_length_checked() {
+        SpeedSchedule::Custom(vec![1]).periods(2);
+    }
+
+    #[test]
+    fn single_core_converges() {
+        let p = easy(1);
+        let out = simulate(&p, 1, &SpeedSchedule::AllFast, &SimOpts::default(), &mut Rng::seed_from(7));
+        assert!(out.converged, "steps {}", out.steps);
+        assert!(out.final_error < 1e-5);
+        assert_eq!(out.exit_core, Some(0));
+        assert_eq!(out.local_iters.len(), 1);
+        assert_eq!(out.local_iters[0] as usize, out.steps);
+    }
+
+    #[test]
+    fn multicore_converges_and_is_deterministic() {
+        let p = easy(2);
+        let a = simulate(&p, 4, &SpeedSchedule::AllFast, &SimOpts::default(), &mut Rng::seed_from(9));
+        let b = simulate(&p, 4, &SpeedSchedule::AllFast, &SimOpts::default(), &mut Rng::seed_from(9));
+        assert!(a.converged);
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.exit_core, b.exit_core);
+        assert_eq!(a.local_iters, b.local_iters);
+    }
+
+    #[test]
+    fn more_cores_do_not_hurt_on_average() {
+        let mut total1 = 0usize;
+        let mut total8 = 0usize;
+        for seed in 0..6u64 {
+            let p = easy(40 + seed);
+            let o1 = simulate(&p, 1, &SpeedSchedule::AllFast, &SimOpts::default(), &mut Rng::seed_from(seed));
+            let o8 = simulate(&p, 8, &SpeedSchedule::AllFast, &SimOpts::default(), &mut Rng::seed_from(seed));
+            assert!(o1.converged && o8.converged);
+            total1 += o1.steps;
+            total8 += o8.steps;
+        }
+        assert!(total8 <= total1, "8 cores {total8} vs 1 core {total1}");
+    }
+
+    #[test]
+    fn slow_cores_complete_fewer_local_iterations() {
+        let p = easy(3);
+        let out = simulate(
+            &p,
+            4,
+            &SpeedSchedule::HalfSlow { period: 4 },
+            &SimOpts::default(),
+            &mut Rng::seed_from(11),
+        );
+        assert!(out.converged);
+        // Cores 0,1 fast; 2,3 slow: slow complete ~steps/4 iterations.
+        let fast = out.local_iters[0].max(out.local_iters[1]);
+        let slow = out.local_iters[2].max(out.local_iters[3]);
+        assert!(slow <= fast / 2 + 1, "fast {fast} slow {slow}");
+    }
+
+    #[test]
+    fn shared_x_single_core_converges() {
+        // c=1 SharedX is plain sequential StoIHT (no tally, no contention).
+        let p = easy(4);
+        let opts = SimOpts { mode: SharingMode::SharedX, ..Default::default() };
+        let out = simulate(&p, 1, &SpeedSchedule::AllFast, &opts, &mut Rng::seed_from(5));
+        assert!(out.converged);
+        assert!(out.final_error < 1e-5);
+    }
+
+    #[test]
+    fn stale_reads_do_not_break_convergence() {
+        let p = easy(5);
+        let opts = SimOpts { stale_read_prob: 0.3, ..Default::default() };
+        let out = simulate(&p, 4, &SpeedSchedule::AllFast, &opts, &mut Rng::seed_from(6));
+        assert!(out.converged, "steps {}", out.steps);
+    }
+
+    #[test]
+    fn max_steps_cap_is_respected() {
+        let p = easy(6);
+        let opts = SimOpts { max_steps: 3, ..Default::default() };
+        let out = simulate(&p, 2, &SpeedSchedule::AllFast, &opts, &mut Rng::seed_from(8));
+        assert!(!out.converged);
+        assert_eq!(out.steps, 3);
+        assert!(out.final_error.is_finite());
+    }
+
+    #[test]
+    fn error_trace_recorded_when_asked() {
+        let p = easy(7);
+        let opts = SimOpts { record_error: true, max_steps: 20, ..Default::default() };
+        let out = simulate(&p, 2, &SpeedSchedule::AllFast, &opts, &mut Rng::seed_from(3));
+        assert_eq!(out.error_trace.len(), out.steps);
+        // errors are finite and eventually decrease
+        assert!(out.error_trace.iter().all(|e| e.is_finite()));
+    }
+
+    #[test]
+    fn tally_weighting_variants_run() {
+        let p = easy(8);
+        for w in [TallyWeighting::Progress, TallyWeighting::Unit, TallyWeighting::NoDecrement] {
+            let opts = SimOpts { weighting: w, ..Default::default() };
+            let out = simulate(&p, 4, &SpeedSchedule::AllFast, &opts, &mut Rng::seed_from(2));
+            assert!(out.converged, "{w:?} did not converge");
+        }
+    }
+}

@@ -1,0 +1,350 @@
+//! Support identification — the `supp_s(·)` operator of the paper and the
+//! set plumbing around it.
+//!
+//! `supp_s(a)` returns the indices of the `s` largest-magnitude entries of
+//! `a`. It runs on every iteration of every algorithm here, so the
+//! implementation is an allocation-free (given a scratch buffer) quickselect
+//! over indices with **deterministic tie-breaking toward the lower index**,
+//! matching `jax.lax.top_k` so the native backend and the AOT artifacts
+//! agree bit-for-bit on supports.
+
+use crate::linalg::Scalar;
+
+/// Ordering used everywhere: entry `i` beats entry `j` iff
+/// `|v[i]| > |v[j]|`, or the magnitudes are equal and `i < j`.
+#[inline(always)]
+fn beats<S: Scalar>(v: &[S], i: usize, j: usize) -> bool {
+    let (ai, aj) = (v[i].abs(), v[j].abs());
+    if ai != aj {
+        ai > aj
+    } else {
+        i < j
+    }
+}
+
+/// Indices of the `s` largest-|·| entries of `v`, **sorted ascending**.
+///
+/// Allocates two scratch vectors; use [`top_s_into`] in hot loops.
+pub fn top_s<S: Scalar>(v: &[S], s: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..v.len()).collect();
+    let mut out = vec![0usize; s.min(v.len())];
+    top_s_into(v, s, &mut idx, &mut out);
+    out
+}
+
+/// Allocation-free top-`s`: `idx` must be a scratch of length `v.len()`
+/// (contents ignored), `out` of length `min(s, v.len())`. `out` is filled
+/// with the selected indices, sorted ascending.
+pub fn top_s_into<S: Scalar>(v: &[S], s: usize, idx: &mut Vec<usize>, out: &mut [usize]) {
+    let n = v.len();
+    let s = s.min(n);
+    assert_eq!(out.len(), s, "top_s_into: out length");
+    idx.clear();
+    idx.extend(0..n);
+    if s > 0 && s < n {
+        quickselect(v, idx, s);
+    }
+    out.copy_from_slice(&idx[..s]);
+    out.sort_unstable();
+}
+
+/// Partition `idx` so its first `s` entries are the top-`s` under [`beats`].
+fn quickselect<S: Scalar>(v: &[S], idx: &mut [usize], s: usize) {
+    let mut lo = 0usize;
+    let mut hi = idx.len();
+    let mut want = s;
+    // Deterministic pseudo-random pivot stream (decouples worst cases from
+    // adversarial input order without RNG plumbing).
+    let mut pstate = 0x9E3779B97F4A7C15u64 ^ (idx.len() as u64);
+    while hi - lo > 1 {
+        pstate ^= pstate << 13;
+        pstate ^= pstate >> 7;
+        pstate ^= pstate << 17;
+        let pivot_at = lo + (pstate % (hi - lo) as u64) as usize;
+        idx.swap(lo, pivot_at);
+        let pivot = idx[lo];
+        // Hoare-style partition on `beats(pivot)`.
+        let mut i = lo + 1;
+        let mut j = hi - 1;
+        loop {
+            while i <= j && beats(v, idx[i], pivot) {
+                i += 1;
+            }
+            while i <= j && !beats(v, idx[j], pivot) {
+                if j == 0 {
+                    break;
+                }
+                j -= 1;
+            }
+            if i >= j {
+                break;
+            }
+            idx.swap(i, j);
+            i += 1;
+            j -= 1;
+        }
+        let pivot_pos = i - 1;
+        idx.swap(lo, pivot_pos);
+        let rank = pivot_pos - lo + 1; // # of elements in [lo, pivot_pos]
+        if want == rank || want == rank - 1 {
+            // pivot lands exactly at or just past the boundary
+            if want >= rank {
+                return;
+            }
+            hi = pivot_pos;
+        } else if want < rank {
+            hi = pivot_pos;
+        } else {
+            want -= rank;
+            lo = pivot_pos + 1;
+        }
+        if want == 0 || lo >= hi {
+            return;
+        }
+    }
+}
+
+/// 0/1 mask of the top-`s` entries (same dtype as `v`).
+pub fn top_s_mask<S: Scalar>(v: &[S], s: usize) -> Vec<S> {
+    let mut mask = vec![S::ZERO; v.len()];
+    for i in top_s(v, s) {
+        mask[i] = S::ONE;
+    }
+    mask
+}
+
+/// Hard-thresholding operator `H_s` (paper eq. (2)): zero all but the
+/// top-`s` entries, in place.
+pub fn hard_threshold_in_place<S: Scalar>(v: &mut [S], s: usize, idx_scratch: &mut Vec<usize>, sel_scratch: &mut [usize]) {
+    top_s_into(v, s, idx_scratch, sel_scratch);
+    let mut keep = 0usize;
+    // sel_scratch is ascending: zero everything not in it with one pass.
+    for i in 0..v.len() {
+        if keep < sel_scratch.len() && sel_scratch[keep] == i {
+            keep += 1;
+        } else {
+            v[i] = S::ZERO;
+        }
+    }
+}
+
+/// Project `v` onto an index set: zero everything outside `keep`
+/// (`keep` must be sorted ascending).
+pub fn project_onto<S: Scalar>(v: &mut [S], keep: &[usize]) {
+    debug_assert!(keep.windows(2).all(|w| w[0] < w[1]), "keep must be sorted");
+    let mut k = 0usize;
+    for i in 0..v.len() {
+        if k < keep.len() && keep[k] == i {
+            k += 1;
+        } else {
+            v[i] = S::ZERO;
+        }
+    }
+}
+
+/// Sorted union of two ascending index sets.
+pub fn union(a: &[usize], b: &[usize]) -> Vec<usize> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() || j < b.len() {
+        let v = match (a.get(i), b.get(j)) {
+            (Some(&x), Some(&y)) if x == y => {
+                i += 1;
+                j += 1;
+                x
+            }
+            (Some(&x), Some(&y)) if x < y => {
+                i += 1;
+                x
+            }
+            (Some(_), Some(&y)) => {
+                j += 1;
+                y
+            }
+            (Some(&x), None) => {
+                i += 1;
+                x
+            }
+            (None, Some(&y)) => {
+                j += 1;
+                y
+            }
+            (None, None) => unreachable!(),
+        };
+        out.push(v);
+    }
+    out
+}
+
+/// Size of the intersection of two ascending index sets.
+pub fn intersection_size(a: &[usize], b: &[usize]) -> usize {
+    let (mut i, mut j, mut k) = (0usize, 0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                k += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    k
+}
+
+/// Support-estimate accuracy `|T̃ ∩ T| / |T̃|` (the paper's `α`, Fig. 1).
+pub fn accuracy(estimate: &[usize], truth: &[usize]) -> f64 {
+    if estimate.is_empty() {
+        return 0.0;
+    }
+    intersection_size(estimate, truth) as f64 / estimate.len() as f64
+}
+
+/// The (sorted) support of a vector: indices with nonzero entries.
+pub fn support_of<S: Scalar>(v: &[S]) -> Vec<usize> {
+    (0..v.len()).filter(|&i| v[i] != S::ZERO).collect()
+}
+
+/// Build a support estimate of size `s` with exact accuracy `α = hits/s`
+/// against `truth` (Fig. 1's oracle T̃): take `hits` true indices and
+/// `s - hits` indices outside the truth, both chosen at random.
+pub fn oracle_estimate(
+    truth: &[usize],
+    n: usize,
+    s: usize,
+    hits: usize,
+    rng: &mut crate::rng::Rng,
+) -> Vec<usize> {
+    assert!(hits <= s && hits <= truth.len());
+    let mut est: Vec<usize> = {
+        let picked = rng.subset(truth.len(), hits);
+        picked.into_iter().map(|k| truth[k]).collect()
+    };
+    let truth_set: std::collections::HashSet<usize> = truth.iter().copied().collect();
+    let complement: Vec<usize> = (0..n).filter(|i| !truth_set.contains(i)).collect();
+    let extra = rng.subset(complement.len(), s - hits);
+    est.extend(extra.into_iter().map(|k| complement[k]));
+    est.sort_unstable();
+    est
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Reference top-s by full sort (the oracle the quickselect must match).
+    fn top_s_ref(v: &[f64], s: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..v.len()).collect();
+        idx.sort_by(|&i, &j| {
+            v[j].abs()
+                .partial_cmp(&v[i].abs())
+                .unwrap()
+                .then(i.cmp(&j))
+        });
+        let mut out = idx[..s.min(v.len())].to_vec();
+        out.sort_unstable();
+        out
+    }
+
+    #[test]
+    fn matches_sort_reference_randomized() {
+        let mut rng = Rng::seed_from(2024);
+        for trial in 0..300 {
+            let n = 1 + rng.below(200);
+            let s = rng.below(n + 1);
+            let v: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+            assert_eq!(top_s(&v, s), top_s_ref(&v, s), "trial {trial} n={n} s={s}");
+        }
+    }
+
+    #[test]
+    fn handles_ties_deterministically() {
+        // all equal magnitudes -> lowest indices win
+        let v = vec![1.0f64; 10];
+        assert_eq!(top_s(&v, 3), vec![0, 1, 2]);
+        // equal |.| with mixed signs
+        let v = vec![-2.0, 2.0, -2.0, 1.0];
+        assert_eq!(top_s(&v, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        let v = vec![3.0f64, -1.0, 2.0];
+        assert_eq!(top_s(&v, 0), Vec::<usize>::new());
+        assert_eq!(top_s(&v, 3), vec![0, 1, 2]);
+        assert_eq!(top_s(&v, 10), vec![0, 1, 2]); // s > n clamps
+        let empty: Vec<f64> = vec![];
+        assert_eq!(top_s(&empty, 5), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn mask_and_threshold_consistent() {
+        let mut rng = Rng::seed_from(77);
+        let v: Vec<f64> = (0..50).map(|_| rng.gauss()).collect();
+        let mask = top_s_mask(&v, 7);
+        assert_eq!(mask.iter().filter(|&&m| m == 1.0).count(), 7);
+        let mut w = v.clone();
+        let mut scratch = Vec::new();
+        let mut sel = vec![0usize; 7];
+        hard_threshold_in_place(&mut w, 7, &mut scratch, &mut sel);
+        for i in 0..50 {
+            if mask[i] == 1.0 {
+                assert_eq!(w[i], v[i]);
+            } else {
+                assert_eq!(w[i], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn project_keeps_only_listed() {
+        let mut v = vec![1.0f64, 2.0, 3.0, 4.0, 5.0];
+        project_onto(&mut v, &[1, 3]);
+        assert_eq!(v, vec![0.0, 2.0, 0.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn union_and_intersection() {
+        assert_eq!(union(&[1, 3, 5], &[2, 3, 6]), vec![1, 2, 3, 5, 6]);
+        assert_eq!(union(&[], &[2]), vec![2]);
+        assert_eq!(union(&[], &[]), Vec::<usize>::new());
+        assert_eq!(intersection_size(&[1, 3, 5], &[3, 5, 9]), 2);
+        assert_eq!(intersection_size(&[], &[1]), 0);
+    }
+
+    #[test]
+    fn accuracy_matches_definition() {
+        assert_eq!(accuracy(&[1, 2, 3, 4], &[2, 4, 9]), 0.5);
+        assert_eq!(accuracy(&[], &[1]), 0.0);
+        assert_eq!(accuracy(&[1, 2], &[1, 2]), 1.0);
+    }
+
+    #[test]
+    fn oracle_estimate_has_exact_accuracy() {
+        let mut rng = Rng::seed_from(5);
+        let truth: Vec<usize> = vec![3, 10, 25, 40, 77];
+        for hits in 0..=5usize {
+            let est = oracle_estimate(&truth, 100, 5, hits, &mut rng);
+            assert_eq!(est.len(), 5);
+            assert_eq!(intersection_size(&est, &truth), hits);
+            assert!(est.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn support_of_finds_nonzeros() {
+        assert_eq!(support_of(&[0.0f64, 1.0, 0.0, -2.0]), vec![1, 3]);
+        assert_eq!(support_of::<f64>(&[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn top_s_into_no_alloc_path() {
+        let v: Vec<f64> = vec![5.0, -9.0, 1.0, 7.0];
+        let mut scratch = Vec::new();
+        let mut out = vec![0usize; 2];
+        top_s_into(&v, 2, &mut scratch, &mut out);
+        assert_eq!(out, vec![1, 3]);
+    }
+}

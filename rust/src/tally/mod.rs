@@ -1,0 +1,323 @@
+//! The shared **tally vector** `φ` — the paper's §III contribution.
+//!
+//! Instead of sharing the iterate, cores share a vote vector over
+//! coordinates: at local iteration `t` a core adds weight `t` on its
+//! freshly-identified support `Γ^t` and removes the weight `t-1` it added
+//! on `Γ^{t-1}` last iteration, so
+//!
+//! * only each core's **latest** belief is represented, and
+//! * faster cores (larger local `t`) carry **more weight** — they are
+//!   further along and likelier to have found the true support.
+//!
+//! Two implementations share the voting/estimate logic:
+//!
+//! * [`AtomicTally`] — lock-free `AtomicI64` per coordinate for the real
+//!   thread runtime (`fetch_add` with relaxed ordering; the paper leans on
+//!   exactly this hardware guarantee, citing HOGWILD!).
+//! * [`LocalTally`] — plain `i64`s for the single-threaded discrete-time
+//!   simulator (and for snapshot arithmetic in fault injection).
+//!
+//! The support estimate `T̃ = supp_s(φ)` is restricted to coordinates with
+//! **positive** tally: an all-zero tally yields an *empty* estimate rather
+//! than an arbitrary tie-broken index set, which makes "no information"
+//! degrade exactly to Algorithm 1 (the paper's Alg. 2 is silent on the
+//! cold-start tie; see DESIGN.md §6).
+
+use std::sync::atomic::{AtomicI64, Ordering};
+
+/// Tally weighting schemes (ablation A3; the paper uses [`Progress`]).
+///
+/// [`Progress`]: TallyWeighting::Progress
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TallyWeighting {
+    /// Paper Alg. 2: `+t` on `Γ^t`, `-(t-1)` on `Γ^{t-1}`.
+    Progress,
+    /// Unweighted: `+1` on `Γ^t`, `-1` on `Γ^{t-1}` (pure frequency of the
+    /// latest beliefs, no speed preference).
+    Unit,
+    /// `+t` on `Γ^t`, never decrement (beliefs accumulate forever —
+    /// demonstrates why removing the stale vote matters).
+    NoDecrement,
+}
+
+impl TallyWeighting {
+    /// Weight added on `Γ^t` at local iteration `t`.
+    #[inline]
+    pub fn add_weight(self, t: u64) -> i64 {
+        match self {
+            TallyWeighting::Progress | TallyWeighting::NoDecrement => t as i64,
+            TallyWeighting::Unit => 1,
+        }
+    }
+
+    /// Weight removed from `Γ^{t-1}` at local iteration `t` (0 = skip).
+    #[inline]
+    pub fn remove_weight(self, t: u64) -> i64 {
+        match self {
+            TallyWeighting::Progress => t as i64 - 1,
+            TallyWeighting::Unit => 1,
+            TallyWeighting::NoDecrement => 0,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "progress" => Some(TallyWeighting::Progress),
+            "unit" => Some(TallyWeighting::Unit),
+            "no_decrement" => Some(TallyWeighting::NoDecrement),
+            _ => None,
+        }
+    }
+}
+
+/// Select up to `s` indices with the largest **strictly positive** values.
+/// Returned sorted ascending. `snapshot` is any integer view of `φ`.
+pub fn positive_top_s(snapshot: &[i64], s: usize) -> Vec<usize> {
+    let mut candidates: Vec<usize> = (0..snapshot.len()).filter(|&i| snapshot[i] > 0).collect();
+    if candidates.len() > s {
+        // partial sort by (value desc, index asc)
+        candidates.sort_by(|&i, &j| snapshot[j].cmp(&snapshot[i]).then(i.cmp(&j)));
+        candidates.truncate(s);
+    }
+    candidates.sort_unstable();
+    candidates
+}
+
+/// Lock-free shared tally for the real-thread runtime.
+pub struct AtomicTally {
+    votes: Vec<AtomicI64>,
+    weighting: TallyWeighting,
+}
+
+impl AtomicTally {
+    pub fn new(n: usize, weighting: TallyWeighting) -> Self {
+        AtomicTally { votes: (0..n).map(|_| AtomicI64::new(0)).collect(), weighting }
+    }
+
+    pub fn len(&self) -> usize {
+        self.votes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.votes.is_empty()
+    }
+
+    /// Commit one iteration's vote transition: `φ_{Γ^t} += w_add(t)`,
+    /// `φ_{Γ^{t-1}} -= w_rem(t)`. Each coordinate update is an atomic RMW
+    /// (relaxed — the algorithm tolerates any interleaving by design).
+    pub fn commit(&self, gamma_t: &[usize], gamma_prev: &[usize], t: u64) {
+        let add = self.weighting.add_weight(t);
+        for &i in gamma_t {
+            self.votes[i].fetch_add(add, Ordering::Relaxed);
+        }
+        let rem = self.weighting.remove_weight(t);
+        if rem != 0 {
+            for &i in gamma_prev {
+                self.votes[i].fetch_sub(rem, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Relaxed-load snapshot into a caller buffer (no global consistency —
+    /// this *is* the inconsistent read the paper discusses; the algorithm
+    /// is designed to tolerate it).
+    pub fn snapshot_into(&self, out: &mut [i64]) {
+        assert_eq!(out.len(), self.votes.len());
+        for (o, v) in out.iter_mut().zip(&self.votes) {
+            *o = v.load(Ordering::Relaxed);
+        }
+    }
+
+    /// `T̃ = supp_s(φ)` (positive entries only), via a fresh snapshot.
+    pub fn estimate(&self, s: usize, scratch: &mut Vec<i64>) -> Vec<usize> {
+        scratch.resize(self.votes.len(), 0);
+        self.snapshot_into(scratch);
+        positive_top_s(scratch, s)
+    }
+
+    /// Sum of all votes (diagnostic; equals Σ_cores w(t_core) under
+    /// Progress weighting once all commits have landed).
+    pub fn total(&self) -> i64 {
+        self.votes.iter().map(|v| v.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Plain (single-threaded) tally for the discrete-time simulator.
+#[derive(Clone, Debug)]
+pub struct LocalTally {
+    votes: Vec<i64>,
+    weighting: TallyWeighting,
+}
+
+impl LocalTally {
+    pub fn new(n: usize, weighting: TallyWeighting) -> Self {
+        LocalTally { votes: vec![0; n], weighting }
+    }
+
+    pub fn commit(&mut self, gamma_t: &[usize], gamma_prev: &[usize], t: u64) {
+        let add = self.weighting.add_weight(t);
+        for &i in gamma_t {
+            self.votes[i] += add;
+        }
+        let rem = self.weighting.remove_weight(t);
+        if rem != 0 {
+            for &i in gamma_prev {
+                self.votes[i] -= rem;
+            }
+        }
+    }
+
+    pub fn estimate(&self, s: usize) -> Vec<usize> {
+        positive_top_s(&self.votes, s)
+    }
+
+    pub fn votes(&self) -> &[i64] {
+        &self.votes
+    }
+
+    pub fn total(&self) -> i64 {
+        self.votes.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn weighting_schemes() {
+        assert_eq!(TallyWeighting::Progress.add_weight(5), 5);
+        assert_eq!(TallyWeighting::Progress.remove_weight(5), 4);
+        assert_eq!(TallyWeighting::Unit.add_weight(5), 1);
+        assert_eq!(TallyWeighting::Unit.remove_weight(5), 1);
+        assert_eq!(TallyWeighting::NoDecrement.add_weight(5), 5);
+        assert_eq!(TallyWeighting::NoDecrement.remove_weight(5), 0);
+        assert_eq!(TallyWeighting::parse("progress"), Some(TallyWeighting::Progress));
+        assert_eq!(TallyWeighting::parse("bogus"), None);
+    }
+
+    #[test]
+    fn positive_top_s_ignores_nonpositive() {
+        let snap = vec![0i64, -3, 5, 2, 0, 7];
+        assert_eq!(positive_top_s(&snap, 2), vec![2, 5]);
+        assert_eq!(positive_top_s(&snap, 10), vec![2, 3, 5]);
+        assert_eq!(positive_top_s(&[0, 0, 0], 2), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn positive_top_s_tie_break_low_index() {
+        let snap = vec![3i64, 5, 3, 5, 3];
+        assert_eq!(positive_top_s(&snap, 3), vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn local_tally_paper_protocol() {
+        // Single core: after iterations t = 1..=3 with supports g1, g2, g3,
+        // the tally holds exactly +3 on g3 (all earlier votes retracted).
+        let mut t = LocalTally::new(8, TallyWeighting::Progress);
+        let g1 = vec![0, 1];
+        let g2 = vec![1, 2];
+        let g3 = vec![2, 3];
+        t.commit(&g1, &[], 1);
+        assert_eq!(t.votes(), &[1, 1, 0, 0, 0, 0, 0, 0]);
+        t.commit(&g2, &g1, 2);
+        assert_eq!(t.votes(), &[0, 2, 2, 0, 0, 0, 0, 0]);
+        t.commit(&g3, &g2, 3);
+        assert_eq!(t.votes(), &[0, 0, 3, 3, 0, 0, 0, 0]);
+        assert_eq!(t.estimate(2), vec![2, 3]);
+        assert_eq!(t.total(), 6);
+    }
+
+    #[test]
+    fn faster_core_outvotes_slower() {
+        let mut t = LocalTally::new(6, TallyWeighting::Progress);
+        // slow core at t=2 votes {0,1}; fast core at t=9 votes {4,5}.
+        t.commit(&[0, 1], &[], 2);
+        t.commit(&[4, 5], &[], 9);
+        assert_eq!(t.estimate(2), vec![4, 5]);
+    }
+
+    #[test]
+    fn unit_weighting_counts_frequency() {
+        let mut t = LocalTally::new(6, TallyWeighting::Unit);
+        t.commit(&[0], &[], 50); // late core, weight still 1
+        t.commit(&[1], &[], 1);
+        t.commit(&[1], &[], 1); // two cores agree on 1
+        assert_eq!(t.estimate(1), vec![1]);
+    }
+
+    #[test]
+    fn no_decrement_accumulates() {
+        let mut t = LocalTally::new(4, TallyWeighting::NoDecrement);
+        t.commit(&[0], &[], 1);
+        t.commit(&[1], &[0], 2); // the remove of {0} is skipped
+        assert_eq!(t.votes(), &[1, 2, 0, 0]);
+    }
+
+    #[test]
+    fn atomic_matches_local_single_thread() {
+        let at = AtomicTally::new(8, TallyWeighting::Progress);
+        let mut lt = LocalTally::new(8, TallyWeighting::Progress);
+        let seqs: Vec<(Vec<usize>, Vec<usize>, u64)> = vec![
+            (vec![0, 2], vec![], 1),
+            (vec![2, 4], vec![0, 2], 2),
+            (vec![4, 6], vec![2, 4], 3),
+        ];
+        for (g, gp, t) in &seqs {
+            at.commit(g, gp, *t);
+            lt.commit(g, gp, *t);
+        }
+        let mut snap = vec![0i64; 8];
+        at.snapshot_into(&mut snap);
+        assert_eq!(&snap, lt.votes());
+        let mut scratch = Vec::new();
+        assert_eq!(at.estimate(2, &mut scratch), lt.estimate(2));
+        assert_eq!(at.total(), lt.total());
+    }
+
+    #[test]
+    fn atomic_concurrent_commits_conserve_total() {
+        // 8 threads x 100 iterations of the paper protocol each; the final
+        // total must equal Σ_threads s * final_t (every intermediate vote
+        // retracted) regardless of interleaving — the core lock-free
+        // invariant the design relies on.
+        let n = 64;
+        let tally = Arc::new(AtomicTally::new(n, TallyWeighting::Progress));
+        let threads = 8;
+        let iters = 100u64;
+        let s = 4;
+        let handles: Vec<_> = (0..threads)
+            .map(|tid| {
+                let tally = Arc::clone(&tally);
+                std::thread::spawn(move || {
+                    let mut rng = crate::rng::Rng::seed_from(900 + tid as u64);
+                    let mut prev: Vec<usize> = Vec::new();
+                    for t in 1..=iters {
+                        let mut g = rng.subset(n, s);
+                        g.sort_unstable();
+                        tally.commit(&g, &prev, t);
+                        prev = g;
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Each thread's surviving weight is its final t times s entries.
+        let expected = threads as i64 * iters as i64 * s as i64;
+        assert_eq!(tally.total(), expected);
+    }
+
+    #[test]
+    fn estimate_is_sorted_and_bounded() {
+        let at = AtomicTally::new(16, TallyWeighting::Progress);
+        at.commit(&[3, 9, 12], &[], 4);
+        let mut scratch = Vec::new();
+        let est = at.estimate(2, &mut scratch);
+        assert!(est.len() <= 2);
+        assert!(est.windows(2).all(|w| w[0] < w[1]));
+        assert!(est.iter().all(|&i| [3usize, 9, 12].contains(&i)));
+    }
+}

@@ -1,0 +1,108 @@
+//! End-to-end integration: config file → leader → simulator / threads →
+//! metrics, at reduced trial counts. These are the cross-module journeys a
+//! user takes; shape-level assertions mirror the paper's claims.
+
+use astir::algorithms::{stoiht, GreedyOpts};
+use astir::async_runtime::{run_async, AsyncOpts};
+use astir::config::ExperimentConfig;
+use astir::coordinator::Leader;
+use astir::experiments::{self, Fig2Variant};
+use astir::problem::ProblemSpec;
+use astir::rng::Rng;
+use astir::sim::{simulate, SimOpts, SpeedSchedule};
+
+fn small_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        problem: ProblemSpec { n: 96, m: 48, b: 8, s: 4, ..ProblemSpec::tiny() },
+        trials: 6,
+        cores: vec![1, 4],
+        trial_threads: 4,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn config_file_to_experiment() {
+    let dir = std::env::temp_dir().join("astir_e2e_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp.toml");
+    std::fs::write(
+        &path,
+        r#"
+trials = 4
+max_iters = 1200
+cores = [1, 2]
+trial_threads = 2
+seed = 11
+
+[problem]
+n = 96
+m = 48
+b = 8
+s = 4
+"#,
+    )
+    .unwrap();
+    let cfg = ExperimentConfig::from_file(&path).unwrap();
+    assert_eq!(cfg.trials, 4);
+    let leader = Leader::new(cfg);
+    let pts = leader.sweep_cores(&SpeedSchedule::AllFast, &SimOpts::default());
+    assert_eq!(pts.len(), 2);
+    assert!(pts.iter().all(|p| p.convergence_rate > 0.5));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn simulated_and_real_async_agree_qualitatively() {
+    // Same problem: the discrete-time sim and the real-thread runtime must
+    // both converge and produce solutions of the same quality.
+    let p = small_cfg().problem.generate(&mut Rng::seed_from(21));
+    let sim_out = simulate(&p, 4, &SpeedSchedule::AllFast, &SimOpts::default(), &mut Rng::seed_from(1));
+    let thr_out = run_async(&p, 4, &AsyncOpts::default(), 2);
+    assert!(sim_out.converged, "sim steps {}", sim_out.steps);
+    assert!(thr_out.converged);
+    assert!(sim_out.final_error < 1e-5);
+    assert!(thr_out.final_error < 1e-5);
+}
+
+#[test]
+fn fig1_and_fig2_tables_have_consistent_shapes() {
+    let mut cfg = small_cfg();
+    cfg.trials = 5;
+    let t1 = experiments::fig1(&cfg);
+    assert_eq!(t1.series.columns[0], "iteration");
+    assert!(t1.series.rows.len() > 20);
+    // error columns start positive
+    assert!(t1.series.rows[0][1] > 0.0);
+    assert_eq!(t1.summary.rows.len(), 6);
+
+    let t2 = experiments::fig2(&cfg, Fig2Variant::Upper);
+    assert_eq!(t2.rows.len(), cfg.cores.len());
+    // stoiht columns constant across rows
+    assert_eq!(t2.rows[0][4], t2.rows[1][4]);
+}
+
+#[test]
+fn paper_scale_single_trial_smoke() {
+    // One full paper-scale trial through each major path (kept single-trial
+    // so the suite stays fast).
+    let p = ProblemSpec::paper().generate(&mut Rng::seed_from(5));
+    let r = stoiht(&p, &GreedyOpts::default(), &mut Rng::seed_from(6));
+    assert!(r.converged, "stoiht residual {}", r.residual);
+    // Generous cap for the single-trial smoke: individual trials have a
+    // long upper tail (the Fig.-2 sweep caps at 1500 like the paper, which
+    // censors that tail in the aggregate statistics).
+    let sim_opts = SimOpts { max_steps: 5000, ..Default::default() };
+    let o = simulate(&p, 8, &SpeedSchedule::AllFast, &sim_opts, &mut Rng::seed_from(7));
+    assert!(o.converged, "sim steps {}", o.steps);
+    assert!(o.final_error < 1e-4);
+}
+
+#[test]
+fn slow_schedule_real_threads() {
+    let p = small_cfg().problem.generate(&mut Rng::seed_from(30));
+    let opts = AsyncOpts { schedule: SpeedSchedule::HalfSlow { period: 3 }, ..Default::default() };
+    let out = run_async(&p, 4, &opts, 31);
+    assert!(out.converged);
+    assert!(p.residual_norm(&out.x) < 1e-6);
+}

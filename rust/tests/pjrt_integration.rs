@@ -1,0 +1,127 @@
+//! Three-layer composition: the AOT HLO artifacts (Pallas kernel → JAX
+//! graph → HLO text) executed through PJRT from Rust, pinned against the
+//! native backend on identical inputs.
+//!
+//! Skipped (with a notice) when `artifacts/` has not been built.
+
+use std::path::PathBuf;
+
+use astir::backend::{reference_step, Backend, NativeBackend, PjrtBackend};
+use astir::problem::{Problem, ProblemSpec};
+use astir::rng::Rng;
+use astir::runtime::{ArtifactStore, PjrtRuntime};
+
+fn artifacts_ready() -> bool {
+    let dir: PathBuf = ArtifactStore::default_dir();
+    let ok = dir.join("stoiht_step_n32_b4_s3.meta").exists();
+    if !ok {
+        eprintln!("skipping PJRT integration tests: run `make artifacts` first");
+    }
+    ok
+}
+
+fn tiny_problem(seed: u64) -> Problem {
+    ProblemSpec::tiny().generate(&mut Rng::seed_from(seed))
+}
+
+#[test]
+fn pjrt_step_matches_native_and_reference() {
+    if !artifacts_ready() {
+        return;
+    }
+    let p = tiny_problem(11);
+    let mut native = NativeBackend::new();
+    let mut pjrt = PjrtBackend::from_default_dir().unwrap();
+    let mut rng = Rng::seed_from(3);
+    for block in 0..p.spec.num_blocks() {
+        let x: Vec<f64> = (0..p.spec.n).map(|_| 0.2 * rng.gauss()).collect();
+        let mut mask = vec![0.0; p.spec.n];
+        for i in rng.subset(p.spec.n, 4) {
+            mask[i] = 1.0;
+        }
+        let (nx, ng) = native.stoiht_step(&p, block, &x, 1.0, &mask).unwrap();
+        let (px, pg) = pjrt.stoiht_step(&p, block, &x, 1.0, &mask).unwrap();
+        let (rx, rg) = reference_step(&p, block, &x, 1.0, &mask);
+        assert_eq!(ng, rg, "native vs reference gamma (block {block})");
+        assert_eq!(pg, rg, "pjrt vs reference gamma (block {block})");
+        for i in 0..p.spec.n {
+            assert!((nx[i] - rx[i]).abs() < 1e-10, "native i={i}");
+            assert!((px[i] - rx[i]).abs() < 1e-4, "pjrt i={i}: {} vs {}", px[i], rx[i]);
+        }
+    }
+}
+
+#[test]
+fn pjrt_residual_matches_native() {
+    if !artifacts_ready() {
+        return;
+    }
+    let p = tiny_problem(12);
+    let mut pjrt = PjrtBackend::from_default_dir().unwrap();
+    let mut rng = Rng::seed_from(4);
+    for _ in 0..5 {
+        let x: Vec<f64> = (0..p.spec.n).map(|_| rng.gauss()).collect();
+        let want = p.residual_norm(&x);
+        let got = pjrt.residual_norm(&p, &x).unwrap();
+        assert!(
+            (got - want).abs() / want.max(1.0) < 1e-4,
+            "pjrt residual {got} vs native {want}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_iht_step_matches_native() {
+    if !artifacts_ready() {
+        return;
+    }
+    let p = tiny_problem(13);
+    let rt = PjrtRuntime::from_default_dir().unwrap();
+    let mut rng = Rng::seed_from(5);
+    let x: Vec<f64> = (0..p.spec.n).map(|_| 0.3 * rng.gauss()).collect();
+    let got = rt
+        .iht_step(p.spec.n, p.spec.m, p.spec.s, p.a.data(), &p.y, &x, 0.8)
+        .unwrap();
+    let want = astir::algorithms::iht::iht_step(&p, &x, 0.8);
+    for i in 0..p.spec.n {
+        assert!((got[i] - want[i]).abs() < 1e-4, "i={i}: {} vs {}", got[i], want[i]);
+    }
+}
+
+#[test]
+fn pjrt_full_recovery_tiny() {
+    // Sequential StoIHT through the PJRT backend end-to-end (f32 artifacts
+    // => relaxed exit tolerance).
+    if !artifacts_ready() {
+        return;
+    }
+    let p = tiny_problem(14);
+    let mut pjrt = PjrtBackend::from_default_dir().unwrap();
+    let mut rng = Rng::seed_from(6);
+    let mb = p.spec.num_blocks();
+    let zero_mask = vec![0.0; p.spec.n];
+    let mut x = vec![0.0f64; p.spec.n];
+    let mut converged = false;
+    for _ in 0..800 {
+        let block = rng.below(mb);
+        let (xn, _) = pjrt.stoiht_step(&p, block, &x, 1.0, &zero_mask).unwrap();
+        x = xn;
+        if pjrt.residual_norm(&p, &x).unwrap() < 1e-5 {
+            converged = true;
+            break;
+        }
+    }
+    assert!(converged, "PJRT StoIHT did not reach 1e-5");
+    assert!(p.recovery_error(&x) < 1e-3, "error {}", p.recovery_error(&x));
+}
+
+#[test]
+fn runtime_reports_platform() {
+    if !artifacts_ready() {
+        return;
+    }
+    let rt = PjrtRuntime::from_default_dir().unwrap();
+    let platform = rt.platform();
+    assert!(!platform.is_empty());
+    assert!(rt.store().len() >= 6);
+}

@@ -1,0 +1,203 @@
+//! Property-based tests over the coordinator-side invariants (routing,
+//! batching, state) and the numerical substrate, using the in-repo
+//! `testutil` mini-framework. Each property runs across on the order of a
+//! hundred randomized cases; failures print an `ASTIR_PROP_SEED` repro.
+
+use astir::algorithms::StoihtKernel;
+use astir::coordinator::run_trials;
+use astir::linalg::{dist2, dot, lstsq, nrm2, Mat};
+use astir::problem::{Problem, ProblemSpec};
+use astir::sim::{simulate, SimOpts, SpeedSchedule};
+use astir::support::{accuracy, intersection_size, top_s, union};
+use astir::tally::{positive_top_s, LocalTally, TallyWeighting};
+use astir::testutil::{property, Gen, OrFail};
+
+fn random_problem(g: &mut Gen) -> Problem {
+    let b = g.usize_in(2, 8);
+    let blocks = g.usize_in(2, 6);
+    let m = b * blocks;
+    let n = m * 2 + g.usize_in(0, 32);
+    let s = g.usize_in(1, (m / 4).max(1).min(8));
+    ProblemSpec { n, m, b, s, ..ProblemSpec::tiny() }.generate(g.rng())
+}
+
+#[test]
+fn prop_top_s_is_a_maximal_magnitude_set() {
+    property("top_s maximal", 150, |g| {
+        let n = g.usize_in(1, 120);
+        let s = g.usize_in(0, n);
+        let v = g.vec_gauss(n);
+        let sel = top_s(&v, s);
+        (sel.len() == s.min(n)).or_fail("cardinality")?;
+        // every selected magnitude >= every unselected magnitude
+        let min_in = sel.iter().map(|&i| v[i].abs()).fold(f64::INFINITY, f64::min);
+        let max_out = (0..n)
+            .filter(|i| !sel.contains(i))
+            .map(|i| v[i].abs())
+            .fold(0.0f64, f64::max);
+        (sel.is_empty() || min_in >= max_out)
+            .or_fail(format!("min_in {min_in} < max_out {max_out}"))
+    });
+}
+
+#[test]
+fn prop_union_is_sorted_superset() {
+    property("union sorted superset", 150, |g| {
+        let n = 80;
+        let ka = g.usize_in(0, 20);
+        let a = g.sorted_subset(n, ka);
+        let kb = g.usize_in(0, 20);
+        let b = g.sorted_subset(n, kb);
+        let u = union(&a, &b);
+        u.windows(2).all(|w| w[0] < w[1]).or_fail("not strictly sorted")?;
+        (a.iter().all(|x| u.contains(x)) && b.iter().all(|x| u.contains(x)))
+            .or_fail("missing member")?;
+        (intersection_size(&a, &b) + u.len() == a.len() + b.len())
+            .or_fail("inclusion-exclusion violated")
+    });
+}
+
+#[test]
+fn prop_tally_votes_conserved() {
+    // After any interleaving of per-core commit sequences, the tally total
+    // equals the sum over cores of s * w(final t) under Progress weighting.
+    property("tally conservation", 80, |g| {
+        let n = 60;
+        let cores = g.usize_in(1, 5);
+        let s = g.usize_in(1, 6);
+        let iters = g.usize_in(1, 30);
+        let mut tally = LocalTally::new(n, TallyWeighting::Progress);
+        let mut prev: Vec<Vec<usize>> = vec![Vec::new(); cores];
+        // random global interleaving of (core, t) pairs, order preserved per core
+        let mut t_next = vec![1u64; cores];
+        for _ in 0..(cores * iters) {
+            let c = g.usize_in(0, cores - 1);
+            let t = t_next[c];
+            let gamma = g.sorted_subset(n, s);
+
+            tally.commit(&gamma, &prev[c], t);
+            prev[c] = gamma;
+            t_next[c] += 1;
+        }
+        let expected: i64 = t_next.iter().map(|&t| (t as i64 - 1) * s as i64).sum();
+        (tally.total() == expected)
+            .or_fail(format!("total {} != expected {expected}", tally.total()))
+    });
+}
+
+#[test]
+fn prop_positive_top_s_subset_of_positives() {
+    property("positive_top_s positives only", 120, |g| {
+        let n = g.usize_in(1, 100);
+        let votes: Vec<i64> = (0..n).map(|_| g.usize_in(0, 6) as i64 - 2).collect();
+        let s = g.usize_in(0, n);
+        let est = positive_top_s(&votes, s);
+
+        (est.len() <= s).or_fail("size")?;
+        est.iter().all(|&i| votes[i] > 0).or_fail("non-positive selected")?;
+        let positives = votes.iter().filter(|&&v| v > 0).count();
+        (est.len() == s.min(positives)).or_fail("not maximal")
+    });
+}
+
+#[test]
+fn prop_stoiht_step_support_invariant() {
+    // After one kernel step, supp(x) ⊆ Γ ∪ extra and |supp(x)| ≤ s + |extra|.
+    property("stoiht step support", 60, |g| {
+        let p = random_problem(g);
+        let mut kernel = StoihtKernel::new(&p, 1.0);
+        let mut x: Vec<f64> = g.vec_gauss(p.spec.n).iter().map(|v| v * 0.1).collect();
+        let k_extra = g.usize_in(0, p.spec.s);
+        let extra = g.sorted_subset(p.spec.n, k_extra);
+        let block = g.usize_in(0, p.spec.num_blocks() - 1);
+        let gamma = kernel
+            .step(&mut x, block, if extra.is_empty() { None } else { Some(&extra) })
+            .to_vec();
+        (gamma.len() == p.spec.s.min(p.spec.n)).or_fail("gamma size")?;
+        let allowed = union(&gamma, &extra);
+        (0..p.spec.n)
+            .all(|i| x[i] == 0.0 || allowed.binary_search(&i).is_ok())
+            .or_fail("support escaped the union")
+    });
+}
+
+#[test]
+fn prop_run_trials_thread_invariant() {
+    // Monte-Carlo batching must be bit-deterministic in the thread count.
+    property("run_trials determinism", 20, |g| {
+        let trials = g.usize_in(1, 12);
+        let seed = g.rng().next_u64();
+        let threads = g.usize_in(2, 6);
+        let one: Vec<u64> = run_trials(trials, 1, seed, |_i, r| r.next_u64());
+        let many: Vec<u64> = run_trials(trials, threads, seed, |_i, r| r.next_u64());
+        (one == many).or_fail("outputs depend on thread count")
+    });
+}
+
+#[test]
+fn prop_sim_exit_implies_tolerance() {
+    // Whenever the simulator reports convergence, the winning core's
+    // iterate truly satisfies the dense residual tolerance.
+    property("sim exit honest", 25, |g| {
+        let p = random_problem(g);
+        let cores = g.usize_in(1, 6);
+        let opts = SimOpts { max_steps: 4000, ..Default::default() };
+        let out = simulate(&p, cores, &SpeedSchedule::AllFast, &opts, g.rng());
+        if !out.converged {
+            return Ok(()); // hard instances are allowed to time out
+        }
+        (out.final_error.is_finite() && out.steps <= 4000).or_fail("bookkeeping")?;
+        // recovery error should be small when the residual is < 1e-7 on a
+        // noiseless instance (allowing loose slack for conditioning).
+        (out.final_error < 1e-3).or_fail(format!("error {}", out.final_error))
+    });
+}
+
+#[test]
+fn prop_lstsq_normal_equations() {
+    property("lstsq optimality", 80, |g| {
+        let m = g.usize_in(1, 30);
+        let k = g.usize_in(1, 30);
+        let a = Mat::from_fn(m, k, |_, _| g.gauss());
+        let y = g.vec_gauss(m);
+        let z = lstsq(&a, &y);
+        let az = a.gemv(&z);
+        let r: Vec<f64> = y.iter().zip(&az).map(|(&p, &q)| p - q).collect();
+        let atr = a.gemv_t(&r);
+        // A^T r ≈ 0 at any least-squares solution (over- or under-determined).
+        (nrm2(&atr) <= 1e-6 * (1.0 + nrm2(&y)) * (1.0 + frob(&a)))
+            .or_fail(format!("||A^T r|| = {}", nrm2(&atr)))
+    });
+}
+
+fn frob(a: &Mat<f64>) -> f64 {
+    dot(a.data(), a.data()).sqrt()
+}
+
+#[test]
+fn prop_accuracy_bounds() {
+    property("accuracy in [0,1]", 100, |g| {
+        let n = 60;
+        let ke = g.usize_in(1, 20);
+        let est = g.sorted_subset(n, ke);
+        let kt = g.usize_in(0, 20);
+        let truth = g.sorted_subset(n, kt);
+        let acc = accuracy(&est, &truth);
+        (0.0..=1.0).contains(&acc).or_fail(format!("acc {acc}"))
+    });
+}
+
+#[test]
+fn prop_problem_blocks_partition() {
+    property("blocks partition measurements", 40, |g| {
+        let p = random_problem(g);
+        let x = g.vec_gauss(p.spec.n);
+        let full = p.a.gemv(&x);
+        let mut reassembled = Vec::new();
+        for i in 0..p.spec.num_blocks() {
+            let (blk, _) = p.block(i);
+            reassembled.extend(blk.gemv(&x));
+        }
+        (dist2(&full, &reassembled) < 1e-10).or_fail("block views disagree with full gemv")
+    });
+}
