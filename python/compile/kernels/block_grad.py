@@ -16,7 +16,7 @@ per-iteration cost of (a)synchronous StoIHT: two dense matvecs against a
   and the final tile triggers phase 2 which replays the column tiles for
   the ``A^T r`` update.  This expresses the HBM<->VMEM schedule that a CUDA
   implementation would phrase with threadblocks + shared memory, using
-  BlockSpec index maps instead (see DESIGN.md "Hardware adaptation").
+  BlockSpec index maps instead (see README.md, "Hardware adaptation").
 
 Both are lowered with ``interpret=True``: the CPU PJRT plugin cannot run
 Mosaic custom-calls, and interpret-mode lowers to plain HLO that any

@@ -5,7 +5,7 @@
 //! * `tally_weighting`    — A3: +t/−(t−1) vs unit vs no-decrement
 //! * `block_size`         — A4: StoIHT iterations vs b
 //! * `self_exclusion`     — A6: reading φ minus one's own votes
-//!   (reproduction finding, see EXPERIMENTS.md §F2)
+//!   (reproduction finding, see the notes in README.md)
 //!
 //! With no filter argument, all ablations run.
 

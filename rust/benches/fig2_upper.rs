@@ -3,7 +3,7 @@
 //!
 //! Paper shape to verify: async mean below the standard-StoIHT horizontal
 //! line, improving with core count. Our faithful Alg.-2 reproduction finds
-//! the crossover at c ≈ 4 (see EXPERIMENTS.md §F2 for the analysis); the
+//! the crossover at c ≈ 4 (see the reproduction notes in README.md); the
 //! self-exclusion variant (`ablations` bench) removes the small-c penalty.
 
 mod common;

@@ -8,8 +8,14 @@
 //! * gemv / gemv_t primitives
 //! * top-s quickselect and tally ops (vote + estimate)
 //! * full StoIHT iteration (proxy + identify + estimate + sparse exit check)
+//! * **dense vs sparse step** at the paper scale and at stress scales
+//!   (n = 10^4 and 10^5 with s = 20–50) — the `s ≪ n` regime the paper
+//!   targets; prints the measured speedup of the sparse fast path
 //! * PJRT stoiht_step executable (artifact path), when artifacts exist
 //! * atomic tally contention: 8 threads hammering commit()
+//!
+//! Set `ASTIR_BENCH_SKIP_JUMBO=1` to skip the n = 10^5 point (its matrix
+//! plus transpose needs ~200 MB).
 
 mod common;
 
@@ -17,13 +23,80 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use astir::algorithms::StoihtKernel;
 use astir::backend::{Backend, PjrtBackend};
 use astir::bench_harness::{bench_header, human_time, quick_bench};
-use astir::linalg::{dot, Mat};
-use astir::problem::ProblemSpec;
+use astir::linalg::{dot, Mat, SparseIterate};
+use astir::problem::{Problem, ProblemSpec};
 use astir::rng::Rng;
 use astir::support::{top_s_into, union};
 use astir::tally::{AtomicTally, TallyWeighting};
+
+/// Dense-vs-sparse comparison at one problem scale: the fused proxy kernel
+/// alone, then the full Alg.-2 step (proxy + identify + estimate).
+fn sparse_vs_dense_at(label: &str, spec: &ProblemSpec, seed: u64) {
+    bench_header(&format!(
+        "sparse fast path — {label} (n={} b={} s={})",
+        spec.n, spec.b, spec.s
+    ));
+    let mut rng = Rng::seed_from(seed);
+    let p: Problem = spec.generate(&mut rng);
+
+    // A representative 2s-support iterate (Γ ∪ T̃) and tally estimate.
+    let est: Vec<usize> = {
+        let mut e = rng.subset(spec.n, spec.s);
+        e.sort_unstable();
+        e
+    };
+    let mut warm = StoihtKernel::new(&p, 1.0);
+    let mut x_sparse = SparseIterate::zeros(spec.n);
+    for _ in 0..5 {
+        let b = warm.sample_block(&mut rng);
+        warm.step_sparse(&mut x_sparse, b, Some(&est));
+    }
+    let x_dense: Vec<f64> = x_sparse.to_dense();
+
+    // --- fused proxy kernel alone -----------------------------------
+    let (blk, yb) = p.block(0);
+    let mut scratch = vec![0.0; spec.b];
+    let mut out = vec![0.0; spec.n];
+    let dense_proxy = quick_bench("proxy_step_into (dense residual pass)", || {
+        blk.proxy_step_into(yb, &x_dense, 1.0, &mut scratch, &mut out);
+        std::hint::black_box(&out);
+    });
+    let supp = x_sparse.support().to_vec();
+    let sparse_proxy = quick_bench("proxy_step_sparse_into (gathered)", || {
+        blk.proxy_step_sparse_into(&p.a_t, 0, yb, x_sparse.values(), &supp, 1.0, &mut scratch, &mut out);
+        std::hint::black_box(&out);
+    });
+    println!(
+        "  => proxy kernel speedup: {:.2}x (|supp| = {})",
+        dense_proxy.time.mean / sparse_proxy.time.mean,
+        supp.len()
+    );
+
+    // --- full Alg.-2 step (proxy + identify + estimate) -------------
+    let mut kd = StoihtKernel::new(&p, 1.0);
+    let mut xd = x_dense.clone();
+    let mut rng_d = Rng::seed_from(seed ^ 0xBEEF);
+    let dense_step = quick_bench("full step, dense iterate", || {
+        let b = kd.sample_block(&mut rng_d);
+        std::hint::black_box(kd.step(&mut xd, b, Some(&est)));
+    });
+    let mut ks = StoihtKernel::new(&p, 1.0);
+    let mut xs = x_sparse.clone();
+    let mut rng_s = Rng::seed_from(seed ^ 0xBEEF);
+    let sparse_step = quick_bench("full step, sparse iterate", || {
+        let b = ks.sample_block(&mut rng_s);
+        std::hint::black_box(ks.step_sparse(&mut xs, b, Some(&est)));
+    });
+    println!(
+        "  => full-step speedup: {:.2}x ({} vs {} per iter)",
+        dense_step.time.mean / sparse_step.time.mean,
+        human_time(dense_step.time.mean),
+        human_time(sparse_step.time.mean)
+    );
+}
 
 fn main() {
     let spec = ProblemSpec::paper();
@@ -109,6 +182,25 @@ fn main() {
     quick_bench("dense residual check (m x n gemv)", || {
         std::hint::black_box(p.residual_norm(&xi));
     });
+
+    // Dense-vs-sparse step at the paper scale and in the s ≪ n stress
+    // regime the paper targets (and where a production service would
+    // live). The equivalence suite (rust/tests/sparse_equivalence.rs)
+    // proves the two paths produce bit-identical iterates; this measures
+    // what the sparsity buys.
+    sparse_vs_dense_at("paper scale", &ProblemSpec::paper(), 11);
+    sparse_vs_dense_at(
+        "stress scale",
+        &ProblemSpec { n: 10_000, m: 300, b: 15, s: 20, ..ProblemSpec::paper() },
+        12,
+    );
+    if std::env::var_os("ASTIR_BENCH_SKIP_JUMBO").is_none() {
+        sparse_vs_dense_at(
+            "jumbo scale",
+            &ProblemSpec { n: 100_000, m: 120, b: 15, s: 50, ..ProblemSpec::paper() },
+            13,
+        );
+    }
 
     bench_header("atomic tally under contention (8 threads)");
     let shared = Arc::new(AtomicTally::new(spec.n, TallyWeighting::Progress));

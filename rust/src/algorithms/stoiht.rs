@@ -6,11 +6,11 @@
 //! (and, via the test-vector suite, against the JAX oracle).
 
 use super::{GreedyOpts, RunResult};
-use crate::linalg::nrm2;
+use crate::linalg::{nrm2, SparseIterate};
 use crate::metrics::Trace;
 use crate::problem::Problem;
 use crate::rng::Rng;
-use crate::support::{self, top_s_into};
+use crate::support::{self, top_s_into, union_into};
 
 /// Reusable StoIHT step state: scratch buffers plus the sampling
 /// distribution. One kernel per (simulated or real) core.
@@ -25,6 +25,7 @@ pub struct StoihtKernel<'p> {
     resid: Vec<f64>,
     idx_scratch: Vec<usize>,
     gamma_set: Vec<usize>,
+    union_scratch: Vec<usize>,
 }
 
 impl<'p> StoihtKernel<'p> {
@@ -55,7 +56,8 @@ impl<'p> StoihtKernel<'p> {
             proxy: vec![0.0; problem.spec.n],
             resid: vec![0.0; problem.spec.b],
             idx_scratch: Vec::with_capacity(problem.spec.n),
-            gamma_set: vec![0; problem.spec.s],
+            gamma_set: vec![0; problem.spec.s.min(problem.spec.n)],
+            union_scratch: Vec::with_capacity(2 * problem.spec.s),
         }
     }
 
@@ -100,6 +102,44 @@ impl<'p> StoihtKernel<'p> {
         &self.gamma_set
     }
 
+    /// Sparse fast path of [`StoihtKernel::step`]: identical arithmetic —
+    /// bit-for-bit identical iterates, see the `sparse_equivalence`
+    /// integration suite — but the proxy's residual pass gathers only the
+    /// iterate's supported columns (`O(b (s + |T̃|))` instead of `O(b n)`),
+    /// and the estimate update touches `O(s)` coordinates instead of
+    /// clearing all `n`. This is the kernel the simulator and the
+    /// real-thread runtime drive.
+    pub fn step_sparse(
+        &mut self,
+        x: &mut SparseIterate<f64>,
+        block: usize,
+        extra_support: Option<&[usize]>,
+    ) -> &[usize] {
+        let spec = &self.problem.spec;
+        debug_assert_eq!(x.n(), spec.n, "iterate dimension");
+        let (blk, yb) = self.problem.block(block);
+        let row0 = block * spec.b;
+        blk.proxy_step_sparse_into(
+            &self.problem.a_t,
+            row0,
+            yb,
+            x.values(),
+            x.support(),
+            self.alphas[block],
+            &mut self.resid,
+            &mut self.proxy,
+        );
+        top_s_into(&self.proxy, spec.s, &mut self.idx_scratch, &mut self.gamma_set);
+        match extra_support {
+            None => x.assign_from(&self.proxy, &self.gamma_set),
+            Some(extra) => {
+                union_into(&self.gamma_set, extra, &mut self.union_scratch);
+                x.assign_from(&self.proxy, &self.union_scratch);
+            }
+        }
+        &self.gamma_set
+    }
+
     /// The halting statistic `||y - A x||_2`.
     pub fn residual_norm(&self, x: &[f64]) -> f64 {
         self.problem.residual_norm(x)
@@ -137,7 +177,9 @@ fn stoiht_impl(
 ) -> RunResult {
     assert!(opts.check_every >= 1);
     let mut kernel = StoihtKernel::new(problem, opts.gamma);
-    let mut x = vec![0.0f64; problem.spec.n];
+    // The sequential solver rides the sparse fast path too; `step_sparse`
+    // is bit-identical to the dense step, so nothing observable changes.
+    let mut x = SparseIterate::zeros(problem.spec.n);
     let mut error_trace = Trace::new();
     let mut resid_trace = Trace::new();
     let mut converged = false;
@@ -146,13 +188,13 @@ fn stoiht_impl(
 
     for t in 1..=opts.max_iters {
         let block = kernel.sample_block(rng);
-        kernel.step(&mut x, block, oracle);
+        kernel.step_sparse(&mut x, block, oracle);
         iters = t;
         if opts.record_error {
-            error_trace.push(problem.recovery_error(&x));
+            error_trace.push(problem.recovery_error(x.values()));
         }
         if t % opts.check_every == 0 {
-            residual = kernel.residual_norm(&x);
+            residual = kernel.residual_norm(x.values());
             if opts.record_resid {
                 resid_trace.push(residual);
             }
@@ -163,9 +205,9 @@ fn stoiht_impl(
         }
     }
     if !converged {
-        residual = kernel.residual_norm(&x);
+        residual = kernel.residual_norm(x.values());
     }
-    RunResult { x, iters, converged, residual, error_trace, resid_trace }
+    RunResult { x: x.into_values(), iters, converged, residual, error_trace, resid_trace }
 }
 
 /// Convenience used by Fig. 1: oracle estimate with exact accuracy
@@ -319,6 +361,46 @@ mod tests {
         // x at oracle indices equals the proxy there (possibly ~0 but set).
         assert_eq!(x[0], kernel.proxy[0]);
         assert_eq!(x[1], kernel.proxy[1]);
+    }
+
+    #[test]
+    fn sparse_step_matches_dense_step_bitwise() {
+        let p = easy_problem(20);
+        let mut rng = Rng::seed_from(21);
+        let oracle = make_oracle(&p, 0.5, &mut rng);
+        let mut kd = StoihtKernel::new(&p, 1.0);
+        let mut ks = StoihtKernel::new(&p, 1.0);
+        let mut xd = vec![0.0f64; p.spec.n];
+        let mut xs = SparseIterate::zeros(p.spec.n);
+        for it in 0..60 {
+            let blk = kd.sample_block(&mut rng);
+            // Alternate Alg.-1 and Alg.-2-style steps to exercise both arms.
+            let extra = if it % 2 == 0 { None } else { Some(oracle.as_slice()) };
+            let gd = kd.step(&mut xd, blk, extra).to_vec();
+            let gs = ks.step_sparse(&mut xs, blk, extra).to_vec();
+            assert_eq!(gd, gs, "iteration {it}: gamma sets differ");
+            for i in 0..p.spec.n {
+                assert_eq!(
+                    xd[i].to_bits(),
+                    xs.values()[i].to_bits(),
+                    "iteration {it} coordinate {i}: {} vs {}",
+                    xd[i],
+                    xs.values()[i]
+                );
+            }
+            assert!(xs.nnz() <= 2 * p.spec.s);
+        }
+    }
+
+    #[test]
+    fn sparse_sequential_solver_converges() {
+        // stoiht() now rides step_sparse internally; same guarantees hold.
+        let p = easy_problem(21);
+        let r = stoiht(&p, &GreedyOpts::default(), &mut Rng::seed_from(7));
+        assert!(r.converged);
+        assert!(p.recovery_error(&r.x) < 1e-6);
+        let nnz = r.x.iter().filter(|&&v| v != 0.0).count();
+        assert!(nnz <= p.spec.s);
     }
 
     #[test]

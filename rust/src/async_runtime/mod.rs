@@ -7,7 +7,12 @@
 //! iterate passes `||y − A x||_2 < tol` raises a stop flag; everyone else
 //! drains out. This module turns the paper's simulated claim ("a speedup
 //! in total time is expected") into a measured wallclock number (see
-//! EXPERIMENTS.md §E2E and the `hot_path` bench).
+//! README.md and the `hot_path` bench).
+//!
+//! The worker inner loop is allocation-free after warmup: iterates are
+//! [`SparseIterate`]s driven through the sparse proxy kernel, `Γ^t` is
+//! written into reused buffers (no per-iteration `to_vec`), and the tally
+//! estimate and the sparse exit check run in caller-owned scratch.
 //!
 //! Slow cores are emulated by *work*, not sleep: a worker with period `k`
 //! recomputes its proxy `k − 1` extra times per iteration, so the
@@ -20,10 +25,11 @@ use std::time::{Duration, Instant};
 
 use crate::algorithms::StoihtKernel;
 use crate::backend::Backend;
+use crate::linalg::SparseIterate;
 use crate::problem::Problem;
 use crate::rng::Rng;
 use crate::sim::SpeedSchedule;
-use crate::support::union;
+use crate::support::union_into;
 use crate::tally::{AtomicTally, TallyWeighting};
 
 /// Options for the real-thread runtime.
@@ -120,35 +126,44 @@ where
             let make_step = &make_step;
             scope.spawn(move || {
                 let mut step = make_step(problem);
-                let mut x = vec![0.0f64; spec.n];
+                let mut x = SparseIterate::zeros(spec.n);
+                // Reused per-iteration buffers — the loop below does no
+                // heap allocation once these reach steady-state capacity.
+                let mut gamma: Vec<usize> = Vec::new();
                 let mut prev_gamma: Vec<usize> = Vec::new();
+                let mut estimate: Vec<usize> = Vec::new();
                 let mut tally_scratch: Vec<i64> = Vec::new();
+                let mut resid_scratch: Vec<f64> = Vec::new();
                 for t in 1..=opts.max_local_iters as u64 {
                     if stop.load(Ordering::Acquire) {
                         break;
                     }
                     // read: T̃ = supp_s(φ) — racy by design.
-                    let estimate = tally.estimate(spec.s, &mut tally_scratch);
+                    tally.estimate_into(spec.s, &mut tally_scratch, &mut estimate);
                     let block = step.sample_block(&mut rng);
                     // slow-core emulation: burn (period-1) extra proxies.
                     for _ in 1..period {
                         step.burn(&x, block);
                     }
-                    let gamma = step.step(&mut x, block, &estimate, opts.gamma);
+                    step.step(&mut x, block, &estimate, opts.gamma, &mut gamma);
                     // update tally: φ_Γt += t, φ_Γ(t-1) -= t-1 (atomic RMWs).
                     tally.commit(&gamma, &prev_gamma, t);
-                    prev_gamma = gamma;
+                    std::mem::swap(&mut prev_gamma, &mut gamma);
                     counter.store(t, Ordering::Relaxed);
                     if t as usize % opts.check_every == 0 {
-                        let support = union(&prev_gamma, &estimate);
-                        let r = problem.residual_norm_sparse(&x, &support);
+                        // x.support() is exactly Γ^t ∪ T̃ after the step.
+                        let r = problem.residual_norm_sparse_with(
+                            x.values(),
+                            x.support(),
+                            &mut resid_scratch,
+                        );
                         if r < opts.tolerance {
                             let mut guard = exit_info.lock().unwrap();
                             if guard.is_none() {
                                 *guard = Some(ExitInfo {
                                     core: w,
                                     residual: r,
-                                    x: x.clone(),
+                                    x: x.values().to_vec(),
                                     at: Instant::now(),
                                 });
                             }
@@ -196,13 +211,23 @@ where
 pub trait WorkerStep {
     /// Sample a measurement block.
     fn sample_block(&mut self, rng: &mut Rng) -> usize;
-    /// Full Alg.-2 iteration body; returns the sorted `Γ^t`.
-    fn step(&mut self, x: &mut [f64], block: usize, estimate: &[usize], gamma: f64) -> Vec<usize>;
+    /// Full Alg.-2 iteration body. Updates `x` in place (its support
+    /// becomes `Γ^t ∪ estimate`) and writes the sorted `Γ^t` into
+    /// `gamma_out` (cleared first) — a caller scratch buffer, so no
+    /// per-iteration vector is allocated.
+    fn step(
+        &mut self,
+        x: &mut SparseIterate<f64>,
+        block: usize,
+        estimate: &[usize],
+        gamma: f64,
+        gamma_out: &mut Vec<usize>,
+    );
     /// Throwaway proxy computation (slow-core work emulation).
-    fn burn(&mut self, x: &[f64], block: usize);
+    fn burn(&mut self, x: &SparseIterate<f64>, block: usize);
 }
 
-/// Native worker step backed by [`StoihtKernel`].
+/// Native worker step backed by [`StoihtKernel`]'s sparse fast path.
 pub struct NativeStep<'p> {
     kernel: StoihtKernel<'p>,
     burn_out: Vec<f64>,
@@ -226,14 +251,33 @@ impl<'p> WorkerStep for NativeStep<'p> {
         self.kernel.sample_block(rng)
     }
 
-    fn step(&mut self, x: &mut [f64], block: usize, estimate: &[usize], _gamma: f64) -> Vec<usize> {
+    fn step(
+        &mut self,
+        x: &mut SparseIterate<f64>,
+        block: usize,
+        estimate: &[usize],
+        _gamma: f64,
+        gamma_out: &mut Vec<usize>,
+    ) {
         let extra = if estimate.is_empty() { None } else { Some(estimate) };
-        self.kernel.step(x, block, extra).to_vec()
+        let gamma = self.kernel.step_sparse(x, block, extra);
+        gamma_out.clear();
+        gamma_out.extend_from_slice(gamma);
     }
 
-    fn burn(&mut self, x: &[f64], block: usize) {
+    fn burn(&mut self, x: &SparseIterate<f64>, block: usize) {
         let (blk, yb) = self.problem.block(block);
-        blk.proxy_step_into(yb, x, 1.0, &mut self.burn_scratch, &mut self.burn_out);
+        let row0 = block * self.problem.spec.b;
+        blk.proxy_step_sparse_into(
+            &self.problem.a_t,
+            row0,
+            yb,
+            x.values(),
+            x.support(),
+            1.0,
+            &mut self.burn_scratch,
+            &mut self.burn_out,
+        );
         std::hint::black_box(&self.burn_out);
     }
 }
@@ -243,42 +287,84 @@ pub struct BackendStep<'p, B: Backend> {
     backend: B,
     problem: &'p Problem,
     mask: Vec<f64>,
+    /// Per-block selection probabilities `p(i)`.
+    probs: Vec<f64>,
+    /// `1 / (M p(i))` per block, so `alpha = gamma / (M p(i))` — matching
+    /// `StoihtKernel::with_probs` for any (not just uniform) distribution.
+    inv_mp: Vec<f64>,
+    support_scratch: Vec<usize>,
 }
 
 impl<'p, B: Backend> BackendStep<'p, B> {
+    /// Uniform block sampling (the paper's experiments).
     pub fn new(problem: &'p Problem, backend: B) -> Self {
-        BackendStep { backend, problem, mask: vec![0.0; problem.spec.n] }
+        let mb = problem.spec.num_blocks();
+        Self::with_probs(problem, backend, vec![1.0 / mb as f64; mb])
+    }
+
+    /// Arbitrary block distribution `p(i)` (must sum to 1).
+    pub fn with_probs(problem: &'p Problem, backend: B, probs: Vec<f64>) -> Self {
+        let mb = problem.spec.num_blocks();
+        assert_eq!(probs.len(), mb, "probs length != number of blocks");
+        let total: f64 = probs.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9, "block probabilities must sum to 1");
+        let inv_mp = probs
+            .iter()
+            .map(|&p| {
+                assert!(p > 0.0, "every block needs positive probability");
+                1.0 / (mb as f64 * p)
+            })
+            .collect();
+        BackendStep {
+            backend,
+            problem,
+            mask: vec![0.0; problem.spec.n],
+            probs,
+            inv_mp,
+            support_scratch: Vec::new(),
+        }
     }
 }
 
 impl<'p, B: Backend> WorkerStep for BackendStep<'p, B> {
     fn sample_block(&mut self, rng: &mut Rng) -> usize {
-        rng.below(self.problem.spec.num_blocks())
+        rng.categorical(&self.probs)
     }
 
-    fn step(&mut self, x: &mut [f64], block: usize, estimate: &[usize], gamma: f64) -> Vec<usize> {
+    fn step(
+        &mut self,
+        x: &mut SparseIterate<f64>,
+        block: usize,
+        estimate: &[usize],
+        gamma: f64,
+        gamma_out: &mut Vec<usize>,
+    ) {
         self.mask.fill(0.0);
         for &i in estimate {
             self.mask[i] = 1.0;
         }
-        let mb = self.problem.spec.num_blocks() as f64;
-        let alpha = gamma / (mb * (1.0 / mb)); // uniform p(i)
+        let alpha = gamma * self.inv_mp[block];
         let (x_next, gamma_set) = self
             .backend
-            .stoiht_step(self.problem, block, x, alpha, &self.mask)
+            .stoiht_step(self.problem, block, x.values(), alpha, &self.mask)
             .expect("backend step failed");
-        x.copy_from_slice(&x_next);
-        gamma_set
+        // x_next is zero off Γ^t ∪ estimate by construction (the mask is
+        // the estimate's indicator), so that union is its support.
+        union_into(&gamma_set, estimate, &mut self.support_scratch);
+        x.assign_from(&x_next, &self.support_scratch);
+        gamma_out.clear();
+        gamma_out.extend_from_slice(&gamma_set);
     }
 
-    fn burn(&mut self, x: &[f64], block: usize) {
-        let _ = self.backend.proxy_step(self.problem, block, x, 1.0);
+    fn burn(&mut self, x: &SparseIterate<f64>, block: usize) {
+        let _ = self.backend.proxy_step(self.problem, block, x.values(), 1.0);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::NativeBackend;
     use crate::problem::ProblemSpec;
 
     fn easy(seed: u64) -> Problem {
@@ -344,5 +430,46 @@ mod tests {
         let out = run_async(&p, 12, &AsyncOpts::default(), 17);
         assert!(out.converged);
         assert!(p.residual_norm(&out.x) < 1e-6);
+    }
+
+    #[test]
+    fn backend_step_converges_through_native_backend() {
+        // The Backend-driven worker (the PJRT protocol path) over the
+        // native backend: exercises the mask/union/assign plumbing.
+        let p = easy(7);
+        let out = run_async_with(&p, 2, &AsyncOpts::default(), 23, |prob| {
+            Box::new(BackendStep::new(prob, NativeBackend::new()))
+        });
+        assert!(out.converged);
+        assert!(p.residual_norm(&out.x) < 1e-6);
+    }
+
+    #[test]
+    fn backend_step_alpha_honors_nonuniform_probs() {
+        // gamma / (M p(i)) must match StoihtKernel::with_probs, not the
+        // uniform collapse the seed shipped.
+        let p = easy(8);
+        let mb = p.spec.num_blocks();
+        let mut probs = vec![0.5 / (mb - 1) as f64; mb];
+        probs[0] = 0.5;
+        let step = BackendStep::with_probs(&p, NativeBackend::new(), probs.clone());
+        let gamma = 0.8;
+        assert!((gamma * step.inv_mp[0] - gamma / (mb as f64 * 0.5)).abs() < 1e-12);
+        assert!(
+            (gamma * step.inv_mp[1] - gamma / (mb as f64 * probs[1])).abs() < 1e-12
+        );
+        // sampling respects the distribution
+        let mut step = step;
+        let mut rng = Rng::seed_from(11);
+        let hits = (0..4000).filter(|_| step.sample_block(&mut rng) == 0).count();
+        assert!((1700..2300).contains(&hits), "{hits}");
+    }
+
+    #[test]
+    #[should_panic(expected = "sum to 1")]
+    fn backend_step_rejects_bad_probs() {
+        let p = easy(9);
+        let mb = p.spec.num_blocks();
+        let _ = BackendStep::with_probs(&p, NativeBackend::new(), vec![0.3 / mb as f64; mb]);
     }
 }

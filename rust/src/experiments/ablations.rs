@@ -1,4 +1,4 @@
-//! Ablations A1–A4 (DESIGN.md §4) — design choices the paper argues for in
+//! Ablations A1–A4 — design choices the paper argues for in
 //! prose, each turned into a measured comparison.
 
 use crate::config::ExperimentConfig;

@@ -99,7 +99,7 @@ mod tests {
     fn upper_panel_shape() {
         let table = fig2(&small_cfg(), Fig2Variant::Upper);
         assert_eq!(table.rows.len(), 3);
-        // Reproduced shape (see EXPERIMENTS.md §F2): async improves with
+        // Reproduced shape (see the reproduction notes in README.md): async improves with
         // core count and sits at or below standard for the larger counts;
         // small-c means may exceed standard by the union overhead.
         let std_mean = table.rows[0][4];

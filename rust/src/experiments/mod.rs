@@ -1,4 +1,4 @@
-//! Experiment drivers — one per figure/ablation in DESIGN.md §4.
+//! Experiment drivers — one per figure/ablation (see README.md for the map).
 //!
 //! Each driver is a pure function from an [`ExperimentConfig`] to a
 //! [`Table`], shared by the CLI (`astir fig1`, …) and the `cargo bench`

@@ -253,6 +253,94 @@ impl<'a, S: Scalar> RowBlock<'a, S> {
             axpy(w, self.row(i), out);
         }
     }
+
+    /// Sparse-iterate twin of [`RowBlock::proxy_step_into`], exploiting a
+    /// known support of `x`: the residual pass gathers only the supported
+    /// columns of `A_b` — `O(rows * |support|)` instead of `O(rows * cols)`
+    /// — via `a_t`, the transposed copy of the *full* matrix, whose row `j`
+    /// holds column `j` of `A` contiguously (the same layout trick the
+    /// sparse exit check uses). `row0` is this block's first row within the
+    /// full matrix, so column `j` of `A_b` is `a_t.row(j)[row0 .. row0+rows]`.
+    ///
+    /// Bit-for-bit contract: when `x[j] == +0.0` for every `j ∉ support`
+    /// (the [`super::sparse::SparseIterate`] invariant) and `support` is
+    /// strictly ascending, `out` is **bit-identical** to what
+    /// `proxy_step_into` produces on the dense `x`. Pass 1 replicates
+    /// [`dot`]'s 4-lane accumulation order over the surviving terms (adding
+    /// `±0.0` products to lanes that are never `-0.0` is an IEEE identity),
+    /// and pass 2 performs the identical row-ordered axpy sequence — only
+    /// column-blocked so `out` stays cache-resident while `A_b` streams.
+    #[allow(clippy::too_many_arguments)]
+    pub fn proxy_step_sparse_into(
+        &self,
+        a_t: &Mat<S>,
+        row0: usize,
+        y: &[S],
+        x: &[S],
+        support: &[usize],
+        alpha: S,
+        scratch: &mut [S],
+        out: &mut [S],
+    ) {
+        let b = self.rows;
+        let n = self.cols;
+        assert_eq!(y.len(), b, "proxy_step_sparse: y length");
+        assert_eq!(x.len(), n, "proxy_step_sparse: x length");
+        assert_eq!(scratch.len(), b, "proxy_step_sparse: scratch length");
+        assert_eq!(out.len(), n, "proxy_step_sparse: out length");
+        assert_eq!(a_t.rows(), n, "proxy_step_sparse: a_t must be the n x m transpose");
+        assert!(row0 + b <= a_t.cols(), "proxy_step_sparse: row window out of range");
+        debug_assert!(
+            support.windows(2).all(|w| w[0] < w[1]),
+            "proxy_step_sparse: support must be strictly ascending"
+        );
+        let m = a_t.cols();
+        let at = a_t.data();
+        // pass 1: scratch = y - A_b x over the supported columns only,
+        // in dot()'s exact lane order (lane = column index mod 4, with the
+        // tail past 4*(n/4) folded in sequentially after the lane merge).
+        let split = 4 * (n / 4);
+        let tail_start = support.partition_point(|&j| j < split);
+        for i in 0..b {
+            let base = row0 + i;
+            let (mut s0, mut s1, mut s2, mut s3) = (S::ZERO, S::ZERO, S::ZERO, S::ZERO);
+            for &j in &support[..tail_start] {
+                let t = at[j * m + base] * x[j];
+                match j & 3 {
+                    0 => s0 += t,
+                    1 => s1 += t,
+                    2 => s2 += t,
+                    _ => s3 += t,
+                }
+            }
+            let mut s = (s0 + s1) + (s2 + s3);
+            for &j in &support[tail_start..] {
+                s += at[j * m + base] * x[j];
+            }
+            scratch[i] = y[i] - s;
+        }
+        // pass 2: out = x + alpha * A_b^T scratch. Same per-coordinate row
+        // order as the dense kernel (axpy is elementwise, so the column
+        // blocking below cannot change any result bit); `x` is scattered
+        // sparsely instead of copied densely.
+        out.fill(S::ZERO);
+        for &j in support {
+            out[j] = x[j];
+        }
+        const CHUNK: usize = 1024;
+        let mut c0 = 0usize;
+        while c0 < n {
+            let c1 = (c0 + CHUNK).min(n);
+            for i in 0..b {
+                let w = alpha * scratch[i];
+                if w == S::ZERO {
+                    continue;
+                }
+                axpy(w, &self.row(i)[c0..c1], &mut out[c0..c1]);
+            }
+            c0 = c1;
+        }
+    }
 }
 
 /// Dot product, 4-way unrolled with independent accumulators so the adds
@@ -403,6 +491,68 @@ mod tests {
         let atr = blk.gemv_t(&r);
         for j in 0..7 {
             approx(out[j], x[j] + alpha * atr[j], 1e-12);
+        }
+    }
+
+    #[test]
+    fn sparse_proxy_matches_dense_bitwise() {
+        // Full matrix 12x9 split into 3 blocks of 4 rows; x sparse.
+        let (m, n, b) = (12usize, 9usize, 4usize);
+        let a = Mat::<f64>::from_fn(m, n, |i, j| ((i * n + j) as f64 * 0.29).sin());
+        let a_t = Mat::<f64>::from_fn(n, m, |i, j| a.get(j, i));
+        let supports: [&[usize]; 5] = [&[], &[0], &[2, 5, 8], &[0, 1, 2, 3, 4, 5, 6, 7, 8], &[7, 8]];
+        for (k, supp) in supports.iter().enumerate() {
+            let mut x = vec![0.0f64; n];
+            for (q, &j) in supp.iter().enumerate() {
+                x[j] = ((q + k) as f64 * 0.61).cos();
+            }
+            for block in 0..m / b {
+                let row0 = block * b;
+                let blk = a.row_block(row0, row0 + b);
+                let y: Vec<f64> = (0..b).map(|i| ((row0 + i) as f64 * 0.37).sin()).collect();
+                let mut scr_d = vec![0.0; b];
+                let mut out_d = vec![0.0; n];
+                blk.proxy_step_into(&y, &x, 0.8, &mut scr_d, &mut out_d);
+                let mut scr_s = vec![0.0; b];
+                let mut out_s = vec![0.0; n];
+                blk.proxy_step_sparse_into(&a_t, row0, &y, &x, supp, 0.8, &mut scr_s, &mut out_s);
+                for i in 0..b {
+                    assert_eq!(
+                        scr_d[i].to_bits(),
+                        scr_s[i].to_bits(),
+                        "case {k} block {block} residual row {i}"
+                    );
+                }
+                for j in 0..n {
+                    assert_eq!(
+                        out_d[j].to_bits(),
+                        out_s[j].to_bits(),
+                        "case {k} block {block} coord {j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_proxy_chunking_is_exact_at_large_n() {
+        // n past the 1024-column chunk boundary: blocking must not change bits.
+        let (n, b) = (2500usize, 3usize);
+        let a = Mat::<f64>::from_fn(b, n, |i, j| ((i * n + j) as f64 * 0.013).sin());
+        let a_t = Mat::<f64>::from_fn(n, b, |i, j| a.get(j, i));
+        let supp: Vec<usize> = (0..20).map(|k| k * 117 % n).collect::<std::collections::BTreeSet<_>>().into_iter().collect();
+        let mut x = vec![0.0f64; n];
+        for (q, &j) in supp.iter().enumerate() {
+            x[j] = (q as f64 * 0.7).sin() + 0.1;
+        }
+        let y: Vec<f64> = (0..b).map(|i| (i as f64 * 0.9).cos()).collect();
+        let blk = a.as_block();
+        let (mut scr_d, mut out_d) = (vec![0.0; b], vec![0.0; n]);
+        blk.proxy_step_into(&y, &x, 1.0, &mut scr_d, &mut out_d);
+        let (mut scr_s, mut out_s) = (vec![0.0; b], vec![0.0; n]);
+        blk.proxy_step_sparse_into(&a_t, 0, &y, &x, &supp, 1.0, &mut scr_s, &mut out_s);
+        for j in 0..n {
+            assert_eq!(out_d[j].to_bits(), out_s[j].to_bits(), "coord {j}");
         }
     }
 

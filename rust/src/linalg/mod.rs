@@ -8,6 +8,9 @@
 //! * [`dense::Mat`] / [`dense::RowBlock`] — row-major storage with zero-copy
 //!   measurement-block views and the fused [`dense::RowBlock::proxy_step_into`]
 //!   hot-path kernel (the native twin of the Layer-1 Pallas kernel).
+//! * [`sparse::SparseIterate`] — iterate values plus an incrementally
+//!   maintained sorted support, feeding the sparse fast path
+//!   [`dense::RowBlock::proxy_step_sparse_into`] that honors `s ≪ n`.
 //! * [`qr::Qr`] — Householder least squares for OMP/CoSaMP/StoGradMP.
 //! * [`cgls::cgls`] — iterative least squares (cross-check + large supports).
 
@@ -15,8 +18,10 @@ pub mod cgls;
 pub mod dense;
 pub mod qr;
 pub mod scalar;
+pub mod sparse;
 
 pub use cgls::{cgls, CglsResult};
 pub use dense::{axpy, dist2, dot, nrm2, scale, sub, Mat, RowBlock};
 pub use qr::{lstsq, Qr};
 pub use scalar::Scalar;
+pub use sparse::SparseIterate;

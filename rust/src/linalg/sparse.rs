@@ -1,0 +1,170 @@
+//! Sparse iterate: dense value storage plus an incrementally-maintained
+//! sorted support.
+//!
+//! The paper's whole premise is `s ≪ n`: StoIHT iterates carry at most
+//! `2s` nonzeros (`Γ^t ∪ T̃`), yet the seed kernels treated them as dense
+//! vectors and paid `O(n)` per iteration on clears, copies, and the
+//! residual pass of the proxy step. [`SparseIterate`] makes the support
+//! explicit so the solve stack can do `O(s)` bookkeeping and hand the
+//! fused sparse kernel ([`crate::linalg::RowBlock::proxy_step_sparse_into`])
+//! the exact column set it needs to gather.
+//!
+//! Invariant: `values[i] == 0.0` (positive zero) for every `i` outside
+//! `support`, and `support` is strictly ascending. All mutation goes
+//! through [`SparseIterate::assign_from`] / [`SparseIterate::clear`],
+//! which maintain the invariant in `O(|old| + |new|)` — never `O(n)`.
+
+use super::scalar::Scalar;
+
+/// An `n`-dimensional vector that is zero outside a small, sorted support.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseIterate<S: Scalar> {
+    values: Vec<S>,
+    support: Vec<usize>,
+}
+
+impl<S: Scalar> SparseIterate<S> {
+    /// The all-zero iterate of dimension `n` (empty support).
+    pub fn zeros(n: usize) -> Self {
+        SparseIterate { values: vec![S::ZERO; n], support: Vec::new() }
+    }
+
+    /// Build from a dense vector; the support is its set of nonzeros.
+    pub fn from_dense(v: &[S]) -> Self {
+        let support: Vec<usize> = (0..v.len()).filter(|&i| v[i] != S::ZERO).collect();
+        SparseIterate { values: v.to_vec(), support }
+    }
+
+    /// Ambient dimension `n`.
+    #[inline(always)]
+    pub fn n(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Dense view of the values (zero off support).
+    #[inline(always)]
+    pub fn values(&self) -> &[S] {
+        &self.values
+    }
+
+    /// The sorted support. May include indices whose value is exactly zero
+    /// (e.g. a tally estimate whose proxy coefficient vanished); it is
+    /// always a superset of the true nonzero set.
+    #[inline(always)]
+    pub fn support(&self) -> &[usize] {
+        &self.support
+    }
+
+    /// Number of supported entries (`<= n`, typically `<= 2s`).
+    #[inline(always)]
+    pub fn nnz(&self) -> usize {
+        self.support.len()
+    }
+
+    /// Value at coordinate `i`.
+    #[inline(always)]
+    pub fn get(&self, i: usize) -> S {
+        self.values[i]
+    }
+
+    /// Reset to the zero iterate in `O(|support|)`.
+    pub fn clear(&mut self) {
+        for &i in &self.support {
+            self.values[i] = S::ZERO;
+        }
+        self.support.clear();
+    }
+
+    /// Replace the contents with `source` restricted to `new_support`
+    /// (strictly ascending). Entries of the old support that are not in the
+    /// new one are zeroed; cost is `O(|old| + |new|)`, never `O(n)`.
+    pub fn assign_from(&mut self, source: &[S], new_support: &[usize]) {
+        debug_assert_eq!(source.len(), self.values.len(), "assign_from: dimension");
+        debug_assert!(
+            new_support.windows(2).all(|w| w[0] < w[1]),
+            "assign_from: support must be strictly ascending"
+        );
+        for &i in &self.support {
+            self.values[i] = S::ZERO;
+        }
+        self.support.clear();
+        self.support.extend_from_slice(new_support);
+        for &i in &self.support {
+            self.values[i] = source[i];
+        }
+    }
+
+    /// Copy out a dense clone of the values.
+    pub fn to_dense(&self) -> Vec<S> {
+        self.values.clone()
+    }
+
+    /// Consume, returning the dense value vector.
+    pub fn into_values(self) -> Vec<S> {
+        self.values
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_dims() {
+        let x = SparseIterate::<f64>::zeros(7);
+        assert_eq!(x.n(), 7);
+        assert_eq!(x.nnz(), 0);
+        assert!(x.values().iter().all(|&v| v == 0.0));
+        assert!(x.support().is_empty());
+    }
+
+    #[test]
+    fn assign_replaces_and_zeroes_old_support() {
+        let mut x = SparseIterate::<f64>::zeros(8);
+        let src1 = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        x.assign_from(&src1, &[1, 4]);
+        assert_eq!(x.values(), &[0.0, 2.0, 0.0, 0.0, 5.0, 0.0, 0.0, 0.0]);
+        assert_eq!(x.support(), &[1, 4]);
+        // New assignment drops coordinate 1 entirely.
+        x.assign_from(&src1, &[4, 6]);
+        assert_eq!(x.values(), &[0.0, 0.0, 0.0, 0.0, 5.0, 0.0, 7.0, 0.0]);
+        assert_eq!(x.support(), &[4, 6]);
+        assert_eq!(x.nnz(), 2);
+    }
+
+    #[test]
+    fn support_may_carry_exact_zeros() {
+        let mut x = SparseIterate::<f64>::zeros(4);
+        x.assign_from(&[0.0, 0.0, 3.0, 0.0], &[1, 2]);
+        assert_eq!(x.support(), &[1, 2]);
+        assert_eq!(x.get(1), 0.0);
+        assert_eq!(x.get(2), 3.0);
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let mut x = SparseIterate::<f64>::zeros(5);
+        x.assign_from(&[9.0; 5], &[0, 3]);
+        x.clear();
+        assert!(x.values().iter().all(|&v| v == 0.0));
+        assert_eq!(x.nnz(), 0);
+    }
+
+    #[test]
+    fn from_dense_finds_nonzeros() {
+        let x = SparseIterate::from_dense(&[0.0f64, -1.5, 0.0, 2.0]);
+        assert_eq!(x.support(), &[1, 3]);
+        assert_eq!(x.to_dense(), vec![0.0, -1.5, 0.0, 2.0]);
+        assert_eq!(x.into_values(), vec![0.0, -1.5, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn empty_and_full_supports() {
+        let mut x = SparseIterate::<f64>::zeros(3);
+        x.assign_from(&[1.0, 2.0, 3.0], &[0, 1, 2]);
+        assert_eq!(x.values(), &[1.0, 2.0, 3.0]);
+        x.assign_from(&[1.0, 2.0, 3.0], &[]);
+        assert!(x.values().iter().all(|&v| v == 0.0));
+        assert_eq!(x.nnz(), 0);
+    }
+}

@@ -1,7 +1,7 @@
 //! `astir` — CLI for the ASTIR asynchronous sparse-recovery stack.
 //!
 //! Subcommands map 1:1 onto the paper's figures and this repo's ablations
-//! (see DESIGN.md §4):
+//! (see README.md for the experiment map):
 //!
 //! ```text
 //! astir fig1                         # Fig. 1: oracle-support StoIHT

@@ -201,11 +201,11 @@ pub struct Problem {
     pub spec: ProblemSpec,
     /// Measurement matrix, row-major `m x n`.
     pub a: Mat<f64>,
-    /// Transposed copy (`n x m`, i.e. column-major view of `A`): the
-    /// asynchronous runtimes' sparse exit check walks *columns* of `A`
-    /// (one per support index), which in row-major storage touches one
-    /// cache line per row; the transpose makes each column a contiguous
-    /// `m`-length stream (§Perf in EXPERIMENTS.md — ~4x on the check).
+    /// Transposed copy (`n x m`, i.e. column-major view of `A`): the sparse
+    /// proxy kernel and the asynchronous runtimes' sparse exit check walk
+    /// *columns* of `A` (one per support index), which in row-major storage
+    /// touches one cache line per row; the transpose makes each column a
+    /// contiguous `m`-length stream (see README.md, "sparse fast path").
     pub a_t: Mat<f64>,
     /// Planted `s`-sparse signal.
     pub x_true: Vec<f64>,
@@ -247,17 +247,32 @@ impl Problem {
     /// `O(m |supp|)` instead of `O(m n)` — the asynchronous runtimes call
     /// this once per core per time step. Uses the transposed copy so each
     /// supported column is one contiguous stream (see [`Problem::a_t`]).
-    pub fn residual_norm_sparse(&self, x: &[f64], support: &[usize]) -> f64 {
+    /// The residual is accumulated in `r_scratch` (resized as needed), so
+    /// the per-check `y.clone()` allocation of the naive form disappears
+    /// from the hot loop.
+    pub fn residual_norm_sparse_with(
+        &self,
+        x: &[f64],
+        support: &[usize],
+        r_scratch: &mut Vec<f64>,
+    ) -> f64 {
         debug_assert!(support.windows(2).all(|w| w[0] < w[1]));
         let m = self.spec.m;
-        let mut r = self.y.clone();
+        r_scratch.clear();
+        r_scratch.extend_from_slice(&self.y);
         for &j in support {
             let xj = x[j];
             if xj != 0.0 {
-                crate::linalg::axpy(-xj, &self.a_t.row(j)[..m], &mut r);
+                crate::linalg::axpy(-xj, &self.a_t.row(j)[..m], r_scratch);
             }
         }
-        crate::linalg::nrm2(&r)
+        crate::linalg::nrm2(r_scratch)
+    }
+
+    /// Allocating convenience wrapper over [`Problem::residual_norm_sparse_with`].
+    pub fn residual_norm_sparse(&self, x: &[f64], support: &[usize]) -> f64 {
+        let mut r = Vec::new();
+        self.residual_norm_sparse_with(x, support, &mut r)
     }
 
     /// Recovery error `||x - x_true||_2` (Fig. 1's y-axis).

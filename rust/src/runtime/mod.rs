@@ -153,173 +153,275 @@ impl ArtifactStore {
     }
 }
 
-/// A compiled-executable cache over an [`ArtifactStore`] on the PJRT CPU
-/// client. Not `Send` — build one per thread.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    store: ArtifactStore,
-    compiled: std::cell::RefCell<HashMap<ArtifactKey, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::PjrtRuntime;
+#[cfg(not(feature = "pjrt"))]
+pub use pjrt_stub::PjrtRuntime;
 
-impl PjrtRuntime {
-    /// CPU client over the given artifact directory.
-    pub fn new(dir: &Path) -> Result<Self> {
-        let store = ArtifactStore::discover(dir)?;
-        if store.is_empty() {
-            bail!("no artifacts found in {} (run `make artifacts`)", dir.display());
+/// Real PJRT-backed runtime — compiled only with the off-by-default `pjrt`
+/// feature, which additionally requires the `xla` bindings crate (see the
+/// feature note in `rust/Cargo.toml` and README.md). The plain build links
+/// no XLA symbols and stays hermetic.
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use std::collections::HashMap;
+    use std::path::Path;
+
+    use anyhow::{anyhow, bail, Result};
+
+    use super::{ArtifactKey, ArtifactKind, ArtifactStore};
+
+    /// A compiled-executable cache over an [`ArtifactStore`] on the PJRT CPU
+    /// client. Not `Send` — build one per thread.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        store: ArtifactStore,
+        compiled: std::cell::RefCell<HashMap<ArtifactKey, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    }
+
+    impl PjrtRuntime {
+        /// CPU client over the given artifact directory.
+        pub fn new(dir: &Path) -> Result<Self> {
+            let store = ArtifactStore::discover(dir)?;
+            if store.is_empty() {
+                bail!("no artifacts found in {} (run `make artifacts`)", dir.display());
+            }
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+            Ok(PjrtRuntime { client, store, compiled: Default::default() })
         }
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
-        Ok(PjrtRuntime { client, store, compiled: Default::default() })
-    }
 
-    /// Runtime over [`ArtifactStore::default_dir`].
-    pub fn from_default_dir() -> Result<Self> {
-        Self::new(&ArtifactStore::default_dir())
-    }
-
-    pub fn store(&self) -> &ArtifactStore {
-        &self.store
-    }
-
-    /// PJRT platform name (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile (memoized) the artifact for `key`.
-    fn executable(&self, key: ArtifactKey) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.compiled.borrow().get(&key) {
-            return Ok(exe.clone());
+        /// Runtime over [`ArtifactStore::default_dir`].
+        pub fn from_default_dir() -> Result<Self> {
+            Self::new(&ArtifactStore::default_dir())
         }
-        let meta = self
-            .store
-            .get(&key)
-            .ok_or_else(|| anyhow!("no artifact for {key:?} in {}", self.store.dir.display()))?;
-        let path_str = meta
-            .hlo_path
-            .to_str()
-            .ok_or_else(|| anyhow!("non-UTF8 path {}", meta.hlo_path.display()))?;
-        let proto = xla::HloModuleProto::from_text_file(path_str)
-            .map_err(|e| anyhow!("parsing {}: {e:?}", meta.hlo_path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e:?}", meta.hlo_path.display()))?;
-        let exe = std::rc::Rc::new(exe);
-        self.compiled.borrow_mut().insert(key, exe.clone());
-        Ok(exe)
-    }
 
-    /// Execute one Alg.-2 step on the artifact for `(n, b, s)`.
-    ///
-    /// Marshals f64 slices to the artifact's f32 and back.
-    /// Returns `(x_next, gamma_mask_indices)` with the gamma mask already
-    /// converted to sorted indices.
-    pub fn stoiht_step(
-        &self,
-        n: usize,
-        b: usize,
-        s: usize,
-        a_blk: &[f64],
-        y_blk: &[f64],
-        x: &[f64],
-        alpha: f64,
-        tally_mask: &[f64],
-    ) -> Result<(Vec<f64>, Vec<usize>)> {
-        assert_eq!(a_blk.len(), b * n);
-        assert_eq!(y_blk.len(), b);
-        assert_eq!(x.len(), n);
-        assert_eq!(tally_mask.len(), n);
-        let exe = self.executable((ArtifactKind::StoihtStep, n, b, s))?;
-        let a_lit = lit_mat(a_blk, b, n)?;
-        let y_lit = lit_vec(y_blk);
-        let x_lit = lit_vec(x);
-        let alpha_lit = xla::Literal::scalar(alpha as f32);
-        let mask_lit = lit_vec(tally_mask);
-        let result = exe
-            .execute::<xla::Literal>(&[a_lit, y_lit, x_lit, alpha_lit, mask_lit])
-            .map_err(|e| anyhow!("execute stoiht_step: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        let mut parts = result.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        if parts.len() != 2 {
-            bail!("stoiht_step artifact returned {} outputs, want 2", parts.len());
+        pub fn store(&self) -> &ArtifactStore {
+            &self.store
         }
-        let gamma_lit = parts.pop().unwrap();
-        let x_lit = parts.pop().unwrap();
-        let x_next: Vec<f64> = to_f64(&x_lit)?;
-        let gamma_mask: Vec<f64> = to_f64(&gamma_lit)?;
-        let gamma: Vec<usize> = (0..n).filter(|&i| gamma_mask[i] != 0.0).collect();
-        Ok((x_next, gamma))
+
+        /// PJRT platform name (diagnostics).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile (memoized) the artifact for `key`.
+        fn executable(&self, key: ArtifactKey) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+            if let Some(exe) = self.compiled.borrow().get(&key) {
+                return Ok(exe.clone());
+            }
+            let meta = self
+                .store
+                .get(&key)
+                .ok_or_else(|| anyhow!("no artifact for {key:?} in {}", self.store.dir.display()))?;
+            let path_str = meta
+                .hlo_path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-UTF8 path {}", meta.hlo_path.display()))?;
+            let proto = xla::HloModuleProto::from_text_file(path_str)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", meta.hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", meta.hlo_path.display()))?;
+            let exe = std::rc::Rc::new(exe);
+            self.compiled.borrow_mut().insert(key, exe.clone());
+            Ok(exe)
+        }
+
+        /// Execute one Alg.-2 step on the artifact for `(n, b, s)`.
+        ///
+        /// Marshals f64 slices to the artifact's f32 and back.
+        /// Returns `(x_next, gamma_mask_indices)` with the gamma mask already
+        /// converted to sorted indices.
+        #[allow(clippy::too_many_arguments)]
+        pub fn stoiht_step(
+            &self,
+            n: usize,
+            b: usize,
+            s: usize,
+            a_blk: &[f64],
+            y_blk: &[f64],
+            x: &[f64],
+            alpha: f64,
+            tally_mask: &[f64],
+        ) -> Result<(Vec<f64>, Vec<usize>)> {
+            assert_eq!(a_blk.len(), b * n);
+            assert_eq!(y_blk.len(), b);
+            assert_eq!(x.len(), n);
+            assert_eq!(tally_mask.len(), n);
+            let exe = self.executable((ArtifactKind::StoihtStep, n, b, s))?;
+            let a_lit = lit_mat(a_blk, b, n)?;
+            let y_lit = lit_vec(y_blk);
+            let x_lit = lit_vec(x);
+            let alpha_lit = xla::Literal::scalar(alpha as f32);
+            let mask_lit = lit_vec(tally_mask);
+            let result = exe
+                .execute::<xla::Literal>(&[a_lit, y_lit, x_lit, alpha_lit, mask_lit])
+                .map_err(|e| anyhow!("execute stoiht_step: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+            let mut parts = result.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+            if parts.len() != 2 {
+                bail!("stoiht_step artifact returned {} outputs, want 2", parts.len());
+            }
+            let gamma_lit = parts.pop().unwrap();
+            let x_lit = parts.pop().unwrap();
+            let x_next: Vec<f64> = to_f64(&x_lit)?;
+            let gamma_mask: Vec<f64> = to_f64(&gamma_lit)?;
+            let gamma: Vec<usize> = (0..n).filter(|&i| gamma_mask[i] != 0.0).collect();
+            Ok((x_next, gamma))
+        }
+
+        /// Execute one classical IHT step on the artifact for `(n, m, s)`.
+        #[allow(clippy::too_many_arguments)]
+        pub fn iht_step(
+            &self,
+            n: usize,
+            m: usize,
+            s: usize,
+            a: &[f64],
+            y: &[f64],
+            x: &[f64],
+            gamma: f64,
+        ) -> Result<Vec<f64>> {
+            let exe = self.executable((ArtifactKind::IhtStep, n, m, s))?;
+            let a_lit = lit_mat(a, m, n)?;
+            let y_lit = lit_vec(y);
+            let x_lit = lit_vec(x);
+            let g_lit = xla::Literal::scalar(gamma as f32);
+            let result = exe
+                .execute::<xla::Literal>(&[a_lit, y_lit, x_lit, g_lit])
+                .map_err(|e| anyhow!("execute iht_step: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+            let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+            to_f64(&out)
+        }
+
+        /// Execute the residual-norm artifact for `(n, m)`.
+        pub fn residual_norm(&self, n: usize, m: usize, a: &[f64], y: &[f64], x: &[f64]) -> Result<f64> {
+            // residual artifacts are keyed with rows = m, s = m (see aot.py meta).
+            let key = self
+                .store
+                .iter()
+                .find(|meta| meta.kind == ArtifactKind::Residual && meta.n == n && meta.m == m)
+                .map(|meta| meta.key())
+                .ok_or_else(|| anyhow!("no residual artifact for n={n} m={m}"))?;
+            let exe = self.executable(key)?;
+            let a_lit = lit_mat(a, m, n)?;
+            let y_lit = lit_vec(y);
+            let x_lit = lit_vec(x);
+            let result = exe
+                .execute::<xla::Literal>(&[a_lit, y_lit, x_lit])
+                .map_err(|e| anyhow!("execute residual: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+            let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+            let v = out
+                .get_first_element::<f32>()
+                .map_err(|e| anyhow!("scalar fetch: {e:?}"))?;
+            Ok(v as f64)
+        }
     }
 
-    /// Execute one classical IHT step on the artifact for `(n, m, s)`.
-    pub fn iht_step(
-        &self,
-        n: usize,
-        m: usize,
-        s: usize,
-        a: &[f64],
-        y: &[f64],
-        x: &[f64],
-        gamma: f64,
-    ) -> Result<Vec<f64>> {
-        let exe = self.executable((ArtifactKind::IhtStep, n, m, s))?;
-        let a_lit = lit_mat(a, m, n)?;
-        let y_lit = lit_vec(y);
-        let x_lit = lit_vec(x);
-        let g_lit = xla::Literal::scalar(gamma as f32);
-        let result = exe
-            .execute::<xla::Literal>(&[a_lit, y_lit, x_lit, g_lit])
-            .map_err(|e| anyhow!("execute iht_step: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        to_f64(&out)
+    fn lit_vec(v: &[f64]) -> xla::Literal {
+        let f: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+        xla::Literal::vec1(&f)
     }
 
-    /// Execute the residual-norm artifact for `(n, m)`.
-    pub fn residual_norm(&self, n: usize, m: usize, a: &[f64], y: &[f64], x: &[f64]) -> Result<f64> {
-        // residual artifacts are keyed with rows = m, s = m (see aot.py meta).
-        let key = self
-            .store
-            .iter()
-            .find(|meta| meta.kind == ArtifactKind::Residual && meta.n == n && meta.m == m)
-            .map(|meta| meta.key())
-            .ok_or_else(|| anyhow!("no residual artifact for n={n} m={m}"))?;
-        let exe = self.executable(key)?;
-        let a_lit = lit_mat(a, m, n)?;
-        let y_lit = lit_vec(y);
-        let x_lit = lit_vec(x);
-        let result = exe
-            .execute::<xla::Literal>(&[a_lit, y_lit, x_lit])
-            .map_err(|e| anyhow!("execute residual: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        let v = out
-            .get_first_element::<f32>()
-            .map_err(|e| anyhow!("scalar fetch: {e:?}"))?;
-        Ok(v as f64)
+    fn lit_mat(v: &[f64], rows: usize, cols: usize) -> Result<xla::Literal> {
+        let f: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+        xla::Literal::vec1(&f)
+            .reshape(&[rows as i64, cols as i64])
+            .map_err(|e| anyhow!("reshape ({rows},{cols}): {e:?}"))
+    }
+
+    fn to_f64(lit: &xla::Literal) -> Result<Vec<f64>> {
+        let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+        Ok(v.into_iter().map(|x| x as f64).collect())
     }
 }
 
-fn lit_vec(v: &[f64]) -> xla::Literal {
-    let f: Vec<f32> = v.iter().map(|&x| x as f32).collect();
-    xla::Literal::vec1(&f)
-}
+/// Stub runtime compiled when the `pjrt` feature is **off** (the default):
+/// keeps every call site — `backend::PjrtBackend`, the CLI, the benches —
+/// type-checking without linking any XLA symbol. Construction fails with an
+/// actionable error, so a hermetic `cargo build && cargo test` never hits
+/// the missing runtime.
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_stub {
+    use std::path::Path;
 
-fn lit_mat(v: &[f64], rows: usize, cols: usize) -> Result<xla::Literal> {
-    let f: Vec<f32> = v.iter().map(|&x| x as f32).collect();
-    xla::Literal::vec1(&f)
-        .reshape(&[rows as i64, cols as i64])
-        .map_err(|e| anyhow!("reshape ({rows},{cols}): {e:?}"))
-}
+    use anyhow::{bail, Result};
 
-fn to_f64(lit: &xla::Literal) -> Result<Vec<f64>> {
-    let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
-    Ok(v.into_iter().map(|x| x as f64).collect())
+    use super::ArtifactStore;
+
+    const UNAVAILABLE: &str =
+        "PJRT support is not compiled in: rebuild with `--features pjrt` \
+         (requires the `xla` bindings crate; see README.md)";
+
+    /// Placeholder with the same API surface as the real `PjrtRuntime`.
+    pub struct PjrtRuntime {
+        store: ArtifactStore,
+    }
+
+    impl PjrtRuntime {
+        pub fn new(_dir: &Path) -> Result<Self> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn from_default_dir() -> Result<Self> {
+            Self::new(&ArtifactStore::default_dir())
+        }
+
+        pub fn store(&self) -> &ArtifactStore {
+            &self.store
+        }
+
+        pub fn platform(&self) -> String {
+            String::from("unavailable (built without the `pjrt` feature)")
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        pub fn stoiht_step(
+            &self,
+            _n: usize,
+            _b: usize,
+            _s: usize,
+            _a_blk: &[f64],
+            _y_blk: &[f64],
+            _x: &[f64],
+            _alpha: f64,
+            _tally_mask: &[f64],
+        ) -> Result<(Vec<f64>, Vec<usize>)> {
+            bail!(UNAVAILABLE)
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        pub fn iht_step(
+            &self,
+            _n: usize,
+            _m: usize,
+            _s: usize,
+            _a: &[f64],
+            _y: &[f64],
+            _x: &[f64],
+            _gamma: f64,
+        ) -> Result<Vec<f64>> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn residual_norm(
+            &self,
+            _n: usize,
+            _m: usize,
+            _a: &[f64],
+            _y: &[f64],
+            _x: &[f64],
+        ) -> Result<f64> {
+            bail!(UNAVAILABLE)
+        }
+    }
 }
 
 #[cfg(test)]

@@ -33,10 +33,16 @@
 //!   paper): each core subtracts its **own** standing vote before taking
 //!   `supp_s(φ)`, so `T̃` carries only *other* cores' information. With
 //!   this on, `c = 1` degenerates *exactly* to Algorithm 1 (empty `T̃`),
-//!   which removes the small-`c` penalty of the literal Alg. 2 (see
-//!   EXPERIMENTS.md §F2).
+//!   which removes the small-`c` penalty of the literal Alg. 2 (see the
+//!   reproduction notes in README.md).
+//!
+//! Tally-mode cores keep their local iterates as [`SparseIterate`]s and
+//! step through the sparse proxy kernel — bit-identical to the dense step,
+//! but `O(b (s + |T̃|))` on the residual pass. The SharedX ablation keeps a
+//! dense shared vector (overwrites break the sparse invariant by design).
 
 use crate::algorithms::StoihtKernel;
+use crate::linalg::SparseIterate;
 use crate::problem::Problem;
 use crate::rng::Rng;
 use crate::support::{support_of, union};
@@ -136,10 +142,17 @@ pub struct SimOutcome {
     pub error_trace: Vec<f64>,
 }
 
+/// The iterate produced by an in-flight iteration: sparse in Tally mode,
+/// dense in the HOGWILD!-style SharedX ablation.
+enum PendingX {
+    Sparse(SparseIterate<f64>),
+    Dense(Vec<f64>),
+}
+
 /// One in-flight iteration (between its read and commit steps).
 struct Pending {
     commit_at: usize,
-    new_x: Vec<f64>,
+    new_x: PendingX,
     gamma: Vec<usize>,
     /// Support of `new_x` (sorted) for the sparse residual check.
     support: Vec<usize>,
@@ -163,7 +176,7 @@ pub fn simulate(
     let mut kernels: Vec<StoihtKernel> =
         (0..cores).map(|_| StoihtKernel::new(problem, opts.gamma)).collect();
     let mut rngs: Vec<Rng> = (0..cores).map(|i| rng.split(i as u64 + 1)).collect();
-    let mut xs: Vec<Vec<f64>> = vec![vec![0.0; n]; cores];
+    let mut xs: Vec<SparseIterate<f64>> = (0..cores).map(|_| SparseIterate::zeros(n)).collect();
     let mut t_local: Vec<u64> = vec![1; cores];
     let mut prev_gamma: Vec<Vec<usize>> = vec![Vec::new(); cores];
     let mut pending: Vec<Option<Pending>> = (0..cores).map(|_| None).collect();
@@ -213,16 +226,16 @@ pub fn simulate(
                     };
                     let extra = if estimate.is_empty() { None } else { Some(estimate.as_slice()) };
                     let mut new_x = xs[c].clone();
-                    let gamma = kernels[c].step(&mut new_x, block, extra).to_vec();
+                    let gamma = kernels[c].step_sparse(&mut new_x, block, extra).to_vec();
                     let support = union(&gamma, &estimate);
-                    Pending { commit_at, new_x, gamma, support }
+                    Pending { commit_at, new_x: PendingX::Sparse(new_x), gamma, support }
                 }
                 SharingMode::SharedX => {
                     // HOGWILD!-style: read the shared iterate, Alg.-1 step.
                     let mut new_x = shared_x.clone();
                     let gamma = kernels[c].step(&mut new_x, block, None).to_vec();
                     let support = gamma.clone();
-                    Pending { commit_at, new_x, gamma, support }
+                    Pending { commit_at, new_x: PendingX::Dense(new_x), gamma, support }
                 }
             };
             pending[c] = Some(p);
@@ -239,26 +252,28 @@ pub fn simulate(
         let mut exited: Option<(usize, f64)> = None;
         for &c in &committers {
             let p = pending[c].take().unwrap();
-            match opts.mode {
-                SharingMode::Tally => {
-                    xs[c].copy_from_slice(&p.new_x);
+            match p.new_x {
+                PendingX::Sparse(nx) => {
+                    debug_assert_eq!(opts.mode, SharingMode::Tally);
+                    xs[c] = nx;
                     tally.commit(&p.gamma, &prev_gamma[c], t_local[c]);
                     prev_gamma[c] = p.gamma;
                     t_local[c] += 1;
                     if exited.is_none() {
-                        let r = problem.residual_norm_sparse(&xs[c], &p.support);
+                        let r = problem.residual_norm_sparse(xs[c].values(), &p.support);
                         if r < opts.tolerance {
-                            exited = Some((c, problem.recovery_error(&xs[c])));
+                            exited = Some((c, problem.recovery_error(xs[c].values())));
                         }
                     }
                 }
-                SharingMode::SharedX => {
+                PendingX::Dense(nx) => {
+                    debug_assert_eq!(opts.mode, SharingMode::SharedX);
                     // Zero what this core wrote last time, then write Γ^t.
                     for &i in &prev_gamma[c] {
                         shared_x[i] = 0.0;
                     }
                     for &i in &p.gamma {
-                        shared_x[i] = p.new_x[i];
+                        shared_x[i] = nx[i];
                     }
                     prev_gamma[c] = p.gamma;
                     t_local[c] += 1;
@@ -278,7 +293,7 @@ pub fn simulate(
             let err = match opts.mode {
                 SharingMode::Tally => xs
                     .iter()
-                    .map(|x| problem.recovery_error(x))
+                    .map(|x| problem.recovery_error(x.values()))
                     .fold(f64::INFINITY, f64::min),
                 SharingMode::SharedX => problem.recovery_error(&shared_x),
             };
@@ -301,7 +316,7 @@ pub fn simulate(
     let final_error = match opts.mode {
         SharingMode::Tally => xs
             .iter()
-            .map(|x| problem.recovery_error(x))
+            .map(|x| problem.recovery_error(x.values()))
             .fold(f64::INFINITY, f64::min),
         SharingMode::SharedX => problem.recovery_error(&shared_x),
     };

@@ -57,6 +57,11 @@ fn quickselect<S: Scalar>(v: &[S], idx: &mut [usize], s: usize) {
     // adversarial input order without RNG plumbing).
     let mut pstate = 0x9E3779B97F4A7C15u64 ^ (idx.len() as u64);
     while hi - lo > 1 {
+        if want >= hi - lo {
+            // The remaining range is selected wholesale — partitioning it
+            // further would only shuffle already-chosen entries.
+            return;
+        }
         pstate ^= pstate << 13;
         pstate ^= pstate >> 7;
         pstate ^= pstate << 17;
@@ -86,20 +91,14 @@ fn quickselect<S: Scalar>(v: &[S], idx: &mut [usize], s: usize) {
         let pivot_pos = i - 1;
         idx.swap(lo, pivot_pos);
         let rank = pivot_pos - lo + 1; // # of elements in [lo, pivot_pos]
-        if want == rank || want == rank - 1 {
-            // pivot lands exactly at or just past the boundary
-            if want >= rank {
-                return;
-            }
-            hi = pivot_pos;
-        } else if want < rank {
+        if want == rank {
+            return; // the pivot closes the boundary exactly
+        }
+        if want < rank {
             hi = pivot_pos;
         } else {
             want -= rank;
             lo = pivot_pos + 1;
-        }
-        if want == 0 || lo >= hi {
-            return;
         }
     }
 }
@@ -142,37 +141,37 @@ pub fn project_onto<S: Scalar>(v: &mut [S], keep: &[usize]) {
     }
 }
 
+/// Sorted union of two ascending index sets, written into a caller buffer
+/// (cleared first) — the allocation-free form the hot loops use.
+pub fn union_into(a: &[usize], b: &[usize], out: &mut Vec<usize>) {
+    out.clear();
+    out.reserve(a.len() + b.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => {
+                out.push(a[i]);
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                out.push(b[j]);
+                j += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                out.push(a[i]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    out.extend_from_slice(&a[i..]);
+    out.extend_from_slice(&b[j..]);
+}
+
 /// Sorted union of two ascending index sets.
 pub fn union(a: &[usize], b: &[usize]) -> Vec<usize> {
-    let mut out = Vec::with_capacity(a.len() + b.len());
-    let (mut i, mut j) = (0usize, 0usize);
-    while i < a.len() || j < b.len() {
-        let v = match (a.get(i), b.get(j)) {
-            (Some(&x), Some(&y)) if x == y => {
-                i += 1;
-                j += 1;
-                x
-            }
-            (Some(&x), Some(&y)) if x < y => {
-                i += 1;
-                x
-            }
-            (Some(_), Some(&y)) => {
-                j += 1;
-                y
-            }
-            (Some(&x), None) => {
-                i += 1;
-                x
-            }
-            (None, Some(&y)) => {
-                j += 1;
-                y
-            }
-            (None, None) => unreachable!(),
-        };
-        out.push(v);
-    }
+    let mut out = Vec::new();
+    union_into(a, b, &mut out);
     out
 }
 
@@ -312,6 +311,33 @@ mod tests {
         assert_eq!(union(&[], &[]), Vec::<usize>::new());
         assert_eq!(intersection_size(&[1, 3, 5], &[3, 5, 9]), 2);
         assert_eq!(intersection_size(&[], &[1]), 0);
+    }
+
+    #[test]
+    fn union_into_reuses_buffer() {
+        let mut buf = vec![99usize; 3]; // stale contents must be discarded
+        union_into(&[0, 4], &[2, 4, 7], &mut buf);
+        assert_eq!(buf, vec![0, 2, 4, 7]);
+        union_into(&[], &[], &mut buf);
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn quickselect_fully_selected_ranges() {
+        // Exercise the early-return paths: want equal to the live range and
+        // want == rank - 1 (pivot lands just past the boundary).
+        let mut rng = Rng::seed_from(404);
+        for _ in 0..200 {
+            let n = 2 + rng.below(64);
+            let s = 1 + rng.below(n - 1);
+            let v: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+            assert_eq!(top_s(&v, s), top_s_ref(&v, s));
+        }
+        // Many ties force rank boundaries of every flavour.
+        let v = vec![1.0f64; 17];
+        for s in 1..17 {
+            assert_eq!(top_s(&v, s), (0..s).collect::<Vec<_>>());
+        }
     }
 
     #[test]

@@ -21,7 +21,7 @@
 //! **positive** tally: an all-zero tally yields an *empty* estimate rather
 //! than an arbitrary tie-broken index set, which makes "no information"
 //! degrade exactly to Algorithm 1 (the paper's Alg. 2 is silent on the
-//! cold-start tie; see DESIGN.md §6).
+//! cold-start tie; see the design notes in README.md).
 
 use std::sync::atomic::{AtomicI64, Ordering};
 
@@ -70,17 +70,34 @@ impl TallyWeighting {
     }
 }
 
-/// Select up to `s` indices with the largest **strictly positive** values.
-/// Returned sorted ascending. `snapshot` is any integer view of `φ`.
-pub fn positive_top_s(snapshot: &[i64], s: usize) -> Vec<usize> {
-    let mut candidates: Vec<usize> = (0..snapshot.len()).filter(|&i| snapshot[i] > 0).collect();
-    if candidates.len() > s {
-        // partial sort by (value desc, index asc)
-        candidates.sort_by(|&i, &j| snapshot[j].cmp(&snapshot[i]).then(i.cmp(&j)));
-        candidates.truncate(s);
+/// Select up to `s` indices with the largest **strictly positive** values,
+/// written into a caller buffer (cleared first). Sorted ascending.
+/// `snapshot` is any integer view of `φ`.
+///
+/// Uses `select_nth_unstable_by` — `O(candidates)` partial selection
+/// instead of a full `O(candidates log candidates)` sort; the runtimes call
+/// this once per core per iteration.
+pub fn positive_top_s_into(snapshot: &[i64], s: usize, out: &mut Vec<usize>) {
+    out.clear();
+    out.extend((0..snapshot.len()).filter(|&i| snapshot[i] > 0));
+    if out.len() > s {
+        if s == 0 {
+            out.clear();
+        } else {
+            // (value desc, index asc) is a total order: the selected set is
+            // identical to the full-sort-and-truncate it replaces.
+            out.select_nth_unstable_by(s - 1, |&i, &j| snapshot[j].cmp(&snapshot[i]).then(i.cmp(&j)));
+            out.truncate(s);
+        }
     }
-    candidates.sort_unstable();
-    candidates
+    out.sort_unstable();
+}
+
+/// Allocating convenience wrapper over [`positive_top_s_into`].
+pub fn positive_top_s(snapshot: &[i64], s: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    positive_top_s_into(snapshot, s, &mut out);
+    out
 }
 
 /// Lock-free shared tally for the real-thread runtime.
@@ -128,11 +145,19 @@ impl AtomicTally {
         }
     }
 
-    /// `T̃ = supp_s(φ)` (positive entries only), via a fresh snapshot.
-    pub fn estimate(&self, s: usize, scratch: &mut Vec<i64>) -> Vec<usize> {
+    /// `T̃ = supp_s(φ)` (positive entries only), via a fresh snapshot, into
+    /// a caller buffer — the allocation-free form the worker loops use.
+    pub fn estimate_into(&self, s: usize, scratch: &mut Vec<i64>, out: &mut Vec<usize>) {
         scratch.resize(self.votes.len(), 0);
         self.snapshot_into(scratch);
-        positive_top_s(scratch, s)
+        positive_top_s_into(scratch, s, out);
+    }
+
+    /// `T̃ = supp_s(φ)` (positive entries only), via a fresh snapshot.
+    pub fn estimate(&self, s: usize, scratch: &mut Vec<i64>) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.estimate_into(s, scratch, &mut out);
+        out
     }
 
     /// Sum of all votes (diagnostic; equals Σ_cores w(t_core) under
@@ -209,6 +234,38 @@ mod tests {
     fn positive_top_s_tie_break_low_index() {
         let snap = vec![3i64, 5, 3, 5, 3];
         assert_eq!(positive_top_s(&snap, 3), vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn positive_top_s_partial_selection_matches_full_sort() {
+        // Reference: full sort by (value desc, index asc), truncate, re-sort.
+        let reference = |snap: &[i64], s: usize| -> Vec<usize> {
+            let mut c: Vec<usize> = (0..snap.len()).filter(|&i| snap[i] > 0).collect();
+            c.sort_by(|&i, &j| snap[j].cmp(&snap[i]).then(i.cmp(&j)));
+            c.truncate(s);
+            c.sort_unstable();
+            c
+        };
+        let mut rng = crate::rng::Rng::seed_from(55);
+        for _ in 0..300 {
+            let n = 1 + rng.below(80);
+            let snap: Vec<i64> = (0..n).map(|_| rng.below(9) as i64 - 3).collect();
+            let s = rng.below(n + 2);
+            assert_eq!(positive_top_s(&snap, s), reference(&snap, s), "n={n} s={s}");
+        }
+        assert_eq!(positive_top_s(&[5, 5, 5], 0), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn estimate_into_reuses_buffers() {
+        let at = AtomicTally::new(8, TallyWeighting::Progress);
+        at.commit(&[1, 6], &[], 3);
+        let mut scratch = Vec::new();
+        let mut out = vec![42usize; 5];
+        at.estimate_into(2, &mut scratch, &mut out);
+        assert_eq!(out, vec![1, 6]);
+        at.estimate_into(1, &mut scratch, &mut out);
+        assert_eq!(out, vec![1]);
     }
 
     #[test]

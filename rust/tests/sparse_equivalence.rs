@@ -1,0 +1,168 @@
+//! Equivalence suite for the sparse fast path: `proxy_step_sparse_into`
+//! must match `proxy_step_into` **bit-for-bit** across randomized supports
+//! (including empty, full, and `s > n` clamps), the sparse kernel step
+//! must track the dense kernel step bit-for-bit across whole trajectories,
+//! and `residual_norm_sparse` must agree with the dense `residual_norm`
+//! on every winner iterate published by the real-thread runtime.
+
+use astir::algorithms::StoihtKernel;
+use astir::async_runtime::{run_async, AsyncOpts};
+use astir::linalg::{Mat, SparseIterate};
+use astir::problem::{Problem, ProblemSpec};
+use astir::rng::Rng;
+use astir::sim::SpeedSchedule;
+use astir::support::support_of;
+
+fn assert_bits_eq(a: &[f64], b: &[f64], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length");
+    for i in 0..a.len() {
+        assert_eq!(
+            a[i].to_bits(),
+            b[i].to_bits(),
+            "{ctx}: coordinate {i}: {} vs {}",
+            a[i],
+            b[i]
+        );
+    }
+}
+
+#[test]
+fn proxy_kernels_bitwise_equal_on_random_supports() {
+    let mut rng = Rng::seed_from(2024);
+    for trial in 0..200 {
+        let b = 1 + rng.below(12);
+        let blocks = 1 + rng.below(5);
+        let m = b * blocks;
+        let n = 1 + rng.below(300);
+        let a = Mat::<f64>::from_fn(m, n, |_, _| rng.gauss());
+        let a_t = Mat::<f64>::from_fn(n, m, |i, j| a.get(j, i));
+        // Random support size over the full range [0, n] — empty and full
+        // supports both land here with positive probability; force them on
+        // the first trials to make sure.
+        let k = match trial {
+            0 => 0,
+            1 => n,
+            _ => rng.below(n + 1),
+        };
+        let mut supp = rng.subset(n, k);
+        supp.sort_unstable();
+        let mut x = vec![0.0f64; n];
+        for &j in &supp {
+            x[j] = rng.gauss();
+        }
+        let alpha = if trial % 3 == 0 { 0.0 } else { rng.gauss() };
+        let block = rng.below(blocks);
+        let row0 = block * b;
+        let blk = a.row_block(row0, row0 + b);
+        let y: Vec<f64> = (0..b).map(|_| rng.gauss()).collect();
+
+        let (mut scr_d, mut out_d) = (vec![0.0; b], vec![0.0; n]);
+        blk.proxy_step_into(&y, &x, alpha, &mut scr_d, &mut out_d);
+        let (mut scr_s, mut out_s) = (vec![0.0; b], vec![0.0; n]);
+        blk.proxy_step_sparse_into(&a_t, row0, &y, &x, &supp, alpha, &mut scr_s, &mut out_s);
+
+        assert_bits_eq(&scr_d, &scr_s, &format!("trial {trial} residual (n={n} b={b} k={k})"));
+        assert_bits_eq(&out_d, &out_s, &format!("trial {trial} proxy (n={n} b={b} k={k})"));
+    }
+}
+
+#[test]
+fn kernel_trajectories_bitwise_equal() {
+    // Whole StoIHT trajectories: dense step vs sparse step, with and
+    // without an extra (tally-style) support, must agree on every bit of
+    // every iterate — so the runtimes' switch to the sparse path cannot
+    // change any experiment by even an ulp.
+    for seed in 0..4u64 {
+        let spec = ProblemSpec { n: 160, m: 80, b: 8, s: 5, ..ProblemSpec::tiny() };
+        let p = spec.generate(&mut Rng::seed_from(100 + seed));
+        let mut rng = Rng::seed_from(500 + seed);
+        let mut extra = rng.subset(spec.n, spec.s);
+        extra.sort_unstable();
+        let mut kd = StoihtKernel::new(&p, 1.0);
+        let mut ks = StoihtKernel::new(&p, 1.0);
+        let mut xd = vec![0.0f64; spec.n];
+        let mut xs = SparseIterate::zeros(spec.n);
+        for it in 0..80 {
+            let block = kd.sample_block(&mut rng);
+            let use_extra = it % 3 != 0;
+            let e = if use_extra { Some(extra.as_slice()) } else { None };
+            let gd = kd.step(&mut xd, block, e).to_vec();
+            let gs = ks.step_sparse(&mut xs, block, e).to_vec();
+            assert_eq!(gd, gs, "seed {seed} iter {it}: gamma");
+            assert_bits_eq(&xd, xs.values(), &format!("seed {seed} iter {it}"));
+        }
+    }
+}
+
+#[test]
+fn sparse_step_handles_s_equal_n_clamp() {
+    // s == n: top_s clamps to the full index set; the sparse support is
+    // everything and both paths must still agree bit-for-bit.
+    let spec = ProblemSpec { n: 24, m: 12, b: 4, s: 24, ..ProblemSpec::tiny() };
+    let p = spec.generate(&mut Rng::seed_from(9));
+    let mut kd = StoihtKernel::new(&p, 1.0);
+    let mut ks = StoihtKernel::new(&p, 1.0);
+    let mut xd = vec![0.0f64; spec.n];
+    let mut xs = SparseIterate::zeros(spec.n);
+    for it in 0..20 {
+        let block = it % spec.num_blocks();
+        kd.step(&mut xd, block, None);
+        ks.step_sparse(&mut xs, block, None);
+        assert_bits_eq(&xd, xs.values(), &format!("iter {it}"));
+        assert_eq!(xs.support().len(), spec.n);
+    }
+}
+
+#[test]
+fn sequential_solver_unchanged_by_sparse_path() {
+    // stoiht() now runs step_sparse internally; a hand-rolled dense-step
+    // replay with the same RNG stream must reproduce its iterate exactly.
+    let spec = ProblemSpec { n: 128, m: 64, b: 8, s: 4, ..ProblemSpec::tiny() };
+    let p = spec.generate(&mut Rng::seed_from(77));
+    let opts = astir::algorithms::GreedyOpts::default();
+    let r = astir::algorithms::stoiht(&p, &opts, &mut Rng::seed_from(31));
+    assert!(r.converged);
+
+    let mut kernel = StoihtKernel::new(&p, opts.gamma);
+    let mut rng = Rng::seed_from(31);
+    let mut x = vec![0.0f64; spec.n];
+    for _ in 0..r.iters {
+        let block = kernel.sample_block(&mut rng);
+        kernel.step(&mut x, block, None);
+    }
+    assert_bits_eq(&r.x, &x, "sequential replay");
+}
+
+#[test]
+fn async_winner_iterates_pass_dense_residual_cross_check() {
+    // Multi-thread stress: across seeds, schedules, and core counts, every
+    // winner iterate published by run_async must satisfy
+    // residual_norm_sparse == residual_norm (the exit check is honest).
+    let spec = ProblemSpec { n: 128, m: 64, b: 8, s: 4, ..ProblemSpec::tiny() };
+    let mut checked = 0usize;
+    for seed in 0..6u64 {
+        let p: Problem = spec.generate(&mut Rng::seed_from(1000 + seed));
+        for (cores, schedule) in [
+            (2usize, SpeedSchedule::AllFast),
+            (4, SpeedSchedule::AllFast),
+            (4, SpeedSchedule::HalfSlow { period: 3 }),
+        ] {
+            let opts = AsyncOpts { schedule: schedule.clone(), ..Default::default() };
+            let out = run_async(&p, cores, &opts, 7000 + seed);
+            if !out.converged {
+                continue;
+            }
+            checked += 1;
+            let supp = support_of(&out.x);
+            assert!(supp.len() <= 2 * spec.s, "winner support too large: {}", supp.len());
+            let sparse = p.residual_norm_sparse(&out.x, &supp);
+            let dense = p.residual_norm(&out.x);
+            assert!(
+                (sparse - dense).abs() <= 1e-12 * (1.0 + dense),
+                "seed {seed} cores {cores}: sparse {sparse} vs dense {dense}"
+            );
+            assert!(dense < opts.tolerance * 1.0000001, "published residual not under tol");
+        }
+    }
+    assert!(checked >= 10, "too few converged runs to be meaningful: {checked}");
+}
