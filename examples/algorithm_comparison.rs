@@ -6,7 +6,9 @@
 
 use std::time::Instant;
 
-use astir::algorithms::{cosamp, iht, make_oracle, omp, stogradmp, stoiht, stoiht_with_oracle, GreedyOpts};
+use astir::algorithms::{
+    cosamp, iht, make_oracle, omp, stogradmp, stoiht, stoiht_with_oracle, GreedyOpts,
+};
 use astir::problem::ProblemSpec;
 use astir::rng::Rng;
 
@@ -16,8 +18,14 @@ fn main() {
     let p = spec.generate(&mut rng);
     let opts = GreedyOpts::default();
 
-    println!("n={} m={} b={} s={} gamma={} tol={:.0e}\n", spec.n, spec.m, spec.b, spec.s, opts.gamma, opts.tolerance);
-    println!("{:<22} {:>7} {:>10} {:>12} {:>12}", "algorithm", "iters", "wall", "residual", "error");
+    println!(
+        "n={} m={} b={} s={} gamma={} tol={:.0e}\n",
+        spec.n, spec.m, spec.b, spec.s, opts.gamma, opts.tolerance
+    );
+    println!(
+        "{:<22} {:>7} {:>10} {:>12} {:>12}",
+        "algorithm", "iters", "wall", "residual", "error"
+    );
 
     let report = |name: &str, f: &mut dyn FnMut() -> astir::algorithms::RunResult| {
         let t0 = Instant::now();

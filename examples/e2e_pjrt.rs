@@ -21,7 +21,7 @@ use astir::backend::{Backend, NativeBackend, PjrtBackend};
 use astir::problem::ProblemSpec;
 use astir::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> astir::error::Result<()> {
     // The artifact set ships two shapes; the tiny one keeps this example
     // fast under interpret-lowered XLA while exercising every layer.
     // Switch to ProblemSpec::paper() to run the full paper shape.

@@ -24,7 +24,8 @@ fn main() {
         for t in 0..trials {
             let p = spec.generate(&mut Rng::seed_from(t as u64));
             let opts = SimOpts { stale_read_prob: prob, max_steps: 3000, ..Default::default() };
-            let out = simulate(&p, cores, &SpeedSchedule::AllFast, &opts, &mut Rng::seed_from(70 + t as u64));
+            let sim_rng = &mut Rng::seed_from(70 + t as u64);
+            let out = simulate(&p, cores, &SpeedSchedule::AllFast, &opts, sim_rng);
             steps.push(out.steps as f64);
             conv += out.converged as usize;
         }

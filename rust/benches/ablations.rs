@@ -1,80 +1,18 @@
-//! Ablations A1–A4 + A6 (`cargo bench --bench ablations [-- <name>]`):
+//! Ablations A1–A4 + A6 (`cargo bench --bench ablations [-- <name>]`),
+//! via the `ablations` suite in `astir::bench_harness::suites`:
 //!
 //! * `tally_vs_shared_x`  — A1: the paper's central design choice
 //! * `inconsistent_reads` — A2: stale tally reads (paper §III ¶3)
-//! * `tally_weighting`    — A3: +t/−(t−1) vs unit vs no-decrement
+//! * `weighting`          — A3: +t/−(t−1) vs unit vs no-decrement
 //! * `block_size`         — A4: StoIHT iterations vs b
 //! * `self_exclusion`     — A6: reading φ minus one's own votes
 //!   (reproduction finding, see the notes in README.md)
 //!
 //! With no filter argument, all ablations run.
+//! Telemetry: `results/BENCH_ablations.json`.
 
 mod common;
 
-use astir::coordinator::Leader;
-use astir::experiments;
-use astir::metrics::{stats, Table};
-use astir::report;
-use astir::sim::{SimOpts, SpeedSchedule};
-
 fn main() {
-    let filter: Option<String> = std::env::args().skip(1).find(|a| !a.starts_with('-'));
-    let want = |name: &str| filter.as_deref().map_or(true, |f| f == name);
-    let cfg = common::paper_cfg(15);
-    common::banner("Ablations A1–A4, A6", &cfg);
-
-    if want("tally_vs_shared_x") {
-        let t0 = std::time::Instant::now();
-        let t = experiments::tally_vs_shared_x(&cfg);
-        println!("[A1 in {:.1?}]", t0.elapsed());
-        report::emit("ablation_tally_vs_shared_x", "A1: tally vs HOGWILD!-style shared x (half-slow schedule)", &t);
-        report::note("paper §I: with dense cost functions, sharing x lets slow cores undo progress;");
-        report::note("sharing the passively-read tally is robust. Compare the *_conv columns.");
-    }
-
-    if want("inconsistent_reads") {
-        let t0 = std::time::Instant::now();
-        let t = experiments::inconsistent_reads(&cfg);
-        println!("[A2 in {:.1?}]", t0.elapsed());
-        report::emit("ablation_inconsistent_reads", "A2: per-coordinate stale-read probability", &t);
-    }
-
-    if want("tally_weighting") {
-        let t0 = std::time::Instant::now();
-        let t = experiments::tally_weighting(&cfg);
-        println!("[A3 in {:.1?}]", t0.elapsed());
-        report::emit("ablation_weighting", "A3: tally weighting schemes (half-slow schedule)", &t);
-        report::note("paper Alg. 2 weights votes by local iteration (+t/−(t−1)) so fast cores dominate.");
-    }
-
-    if want("block_size") {
-        let t0 = std::time::Instant::now();
-        let t = experiments::block_size_sweep(&cfg, &[5, 10, 15, 25, 50, 75]);
-        println!("[A4 in {:.1?}]", t0.elapsed());
-        report::emit("ablation_block_size", "A4: StoIHT iterations vs block size b (m = 300)", &t);
-    }
-
-    if want("self_exclusion") {
-        let t0 = std::time::Instant::now();
-        let leader = Leader::new(cfg.clone());
-        let mut t = Table::new(&["cores", "literal_mean", "literal_conv", "selfexcl_mean", "selfexcl_conv"]);
-        for &c in &cfg.cores {
-            let lit = leader.monte_carlo_sim(
-                c,
-                &SpeedSchedule::AllFast,
-                &SimOpts { max_steps: cfg.max_iters, ..Default::default() },
-            );
-            let sx = leader.monte_carlo_sim(
-                c,
-                &SpeedSchedule::AllFast,
-                &SimOpts { max_steps: cfg.max_iters, self_exclude: true, ..Default::default() },
-            );
-            let mean = |o: &[astir::sim::SimOutcome]| stats(&o.iter().map(|x| x.steps as f64).collect::<Vec<_>>()).mean;
-            let conv = |o: &[astir::sim::SimOutcome]| o.iter().filter(|x| x.converged).count() as f64 / o.len() as f64;
-            t.push_row(vec![c as f64, mean(&lit), conv(&lit), mean(&sx), conv(&sx)]);
-        }
-        println!("[A6 in {:.1?}]", t0.elapsed());
-        report::emit("ablation_self_exclusion", "A6: literal Alg. 2 vs self-excluding tally reads", &t);
-        report::note("self-exclusion makes c=1 degenerate exactly to Alg. 1, removing the small-c penalty.");
-    }
+    common::bench_binary_main("ablations");
 }

@@ -1,25 +1,14 @@
-//! A5 — baseline phase-transition sweep (`cargo bench --bench baselines`).
+//! A5 — baseline phase-transition sweep (`cargo bench --bench baselines`),
+//! via the `baselines` suite in `astir::bench_harness::suites`.
 //!
 //! Success rate (relative error < 1e-4) vs number of measurements `m` for
 //! IHT, StoIHT, OMP, CoSaMP and StoGradMP at the paper's n = 1000, s = 20.
 //! Expected shape: all curves rise from 0 to 1; LS-refitting algorithms
 //! (OMP/CoSaMP/StoGradMP) transition earlier than the thresholding family.
+//! Telemetry: `results/BENCH_baselines.json`.
 
 mod common;
 
-use astir::experiments::phase_transition;
-use astir::report;
-
 fn main() {
-    let mut cfg = common::paper_cfg(15);
-    // Phase transitions are the expensive sweep (5 solvers x trials x m).
-    cfg.trials = cfg.trials.min(50);
-    common::banner("A5 — success rate vs m (phase transition)", &cfg);
-
-    let ms = [60, 90, 120, 150, 180, 240, 300];
-    let t0 = std::time::Instant::now();
-    let table = phase_transition(&cfg, &ms);
-    println!("[baselines computed in {:.1?}]", t0.elapsed());
-    report::emit("baselines_phase_transition", "A5: success rate vs m", &table);
-    report::note("success = relative recovery error < 1e-4; n=1000, s=20, Gaussian ensemble");
+    common::bench_binary_main("baselines");
 }

@@ -1,46 +1,82 @@
-//! Shared plumbing for the `harness = false` bench binaries.
+//! Shared entry point for the `harness = false` bench binaries.
 //!
-//! Every figure bench accepts its Monte-Carlo budget from the environment
-//! so `cargo bench` stays tractable by default while the paper-fidelity
-//! run is one env var away:
+//! Every binary is one named suite from the in-crate registry
+//! (`astir::bench_harness::suites`) — `astir bench` runs the same
+//! definitions, so a perf number means the same thing however produced.
+//! Each full run also writes its suite's telemetry (schema
+//! `astir-bench-v1`) to `results/BENCH_<suite>.json`; smoke runs write
+//! `smoke_BENCH_<suite>.json`, and filtered runs write only with an
+//! explicit `--json` — recorded full-budget baselines are never
+//! clobbered by partial data.
+//!
+//! Arguments (after `--` with `cargo bench`):
 //!
 //! ```text
-//! cargo bench                              # quick: ASTIR defaults below
-//! ASTIR_BENCH_TRIALS=500 cargo bench       # the paper's 500 trials
+//! cargo bench --bench hot_path                     # full budgets
+//! cargo bench --bench hot_path -- --smoke          # CI-sized budgets
+//! cargo bench --bench ablations -- block_size      # bare word = filter
+//! cargo bench --bench fig1 -- --json out.json      # telemetry elsewhere
+//! ASTIR_BENCH_TRIALS=500 cargo bench --bench fig2_upper   # paper budget
+//! ASTIR_BENCH_SKIP_JUMBO=1 cargo bench --bench hot_path   # skip n=10^5
 //! ```
+//!
+//! Unknown `-*` flags are ignored (cargo may pass harness flags through).
 
-#![allow(dead_code)] // each bench binary uses a subset of these helpers
+use std::path::PathBuf;
 
-use astir::config::ExperimentConfig;
+use astir::bench_harness::json::write_report;
+use astir::bench_harness::{suites, Mode, RunOpts};
 
-/// Trial budget: `$ASTIR_BENCH_TRIALS` (default `default_trials`).
-pub fn bench_trials(default_trials: usize) -> usize {
-    std::env::var("ASTIR_BENCH_TRIALS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default_trials)
-}
+pub fn bench_binary_main(suite_name: &str) {
+    let mut filter: Option<String> = None;
+    let mut mode = Mode::Full;
+    let mut json: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    // A flag's value must not itself look like a flag — otherwise
+    // `-- --json --smoke` would eat the smoke switch as a path.
+    fn value_for(flag: &str, args: &mut dyn Iterator<Item = String>) -> String {
+        match args.next() {
+            Some(v) if !v.starts_with('-') => v,
+            _ => {
+                eprintln!("error: {flag} needs a value");
+                std::process::exit(2);
+            }
+        }
+    }
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--smoke" => mode = Mode::Smoke,
+            "--json" => json = Some(PathBuf::from(value_for("--json", &mut args))),
+            "--filter" => filter = Some(value_for("--filter", &mut args)),
+            s if !s.starts_with('-') => filter = Some(s.to_string()),
+            _ => {}
+        }
+    }
+    let mut opts = RunOpts::from_env(mode);
+    // A bare filter word from `cargo bench -- <word>` is scoped to this
+    // suite; an explicit `--filter` with a `/` is taken verbatim.
+    opts.filter = filter.map(|f| if f.contains('/') { f } else { format!("{suite_name}/{f}") });
 
-/// The paper's experiment configuration with the bench trial budget.
-pub fn paper_cfg(default_trials: usize) -> ExperimentConfig {
-    ExperimentConfig { trials: bench_trials(default_trials), ..Default::default() }
-}
+    let def = suites::find(suite_name).expect("bench binary names a registered suite");
+    let report = suites::run_one(&def, &opts);
 
-/// Standard bench banner.
-pub fn banner(what: &str, cfg: &ExperimentConfig) {
-    println!("\n################################################################");
-    println!("# {what}");
-    println!(
-        "# n={} m={} b={} s={} gamma={} tol={:.0e} trials={} threads={}",
-        cfg.problem.n,
-        cfg.problem.m,
-        cfg.problem.b,
-        cfg.problem.s,
-        cfg.gamma,
-        cfg.tolerance,
-        cfg.trials,
-        cfg.trial_threads
-    );
-    println!("# (set ASTIR_BENCH_TRIALS=500 for the paper's full budget)");
-    println!("################################################################");
+    // Default telemetry paths are mode-distinct (a smoke run must not
+    // clobber a recorded full-budget baseline), and a filtered run is
+    // partial telemetry — written only when a path is asked for.
+    let path = if let Some(p) = json {
+        p
+    } else if opts.filter.is_some() {
+        println!("\n[filtered run: telemetry not written; pass --json <path> to keep it]");
+        return;
+    } else {
+        let stem = match mode {
+            Mode::Full => format!("BENCH_{suite_name}.json"),
+            Mode::Smoke => format!("smoke_BENCH_{suite_name}.json"),
+        };
+        astir::report::results_dir().join(stem)
+    };
+    match write_report(&report, &path) {
+        Ok(()) => println!("\n[bench telemetry written {}]", path.display()),
+        Err(e) => eprintln!("\n[warn] could not write {}: {e}", path.display()),
+    }
 }

@@ -1,55 +1,13 @@
 //! Regenerates **Fig. 1** — StoIHT vs oracle-support StoIHT
-//! (`cargo bench --bench fig1`).
+//! (`cargo bench --bench fig1`), via the `fig1` suite in
+//! `astir::bench_harness::suites`.
 //!
 //! Paper shape to verify: α > 0.5 converges in fewer iterations than
 //! standard; α = 1 in roughly **half**; α = 0 no faster than standard.
+//! Telemetry: `results/BENCH_fig1.json`; tables: `results/fig1*.csv/json`.
 
 mod common;
 
-use astir::experiments::fig1::{fig1, iters_to_threshold};
-use astir::report;
-
 fn main() {
-    let cfg = common::paper_cfg(25); // paper budget: ASTIR_BENCH_TRIALS=50
-    common::banner("Fig. 1 — mean recovery error vs iteration", &cfg);
-
-    let t0 = std::time::Instant::now();
-    let out = fig1(&cfg);
-    let table = out.series;
-    println!("[fig1 computed in {:.1?}]", t0.elapsed());
-
-    // Thin for the terminal; full series to CSV.
-    let mut thin = astir::metrics::Table::new(
-        &table.columns.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
-    );
-    for (i, row) in table.rows.iter().enumerate() {
-        if i % 100 == 0 || i + 1 == table.rows.len() {
-            thin.push_row(row.clone());
-        }
-    }
-    report::emit("fig1", "Fig. 1 (every 100th iteration)", &thin);
-    report::emit("fig1_full", "Fig. 1 full series", &table);
-    report::emit(
-        "fig1_summary",
-        "Fig. 1 per-variant convergence (variant 0=stoiht, 1..=alpha 0,.25,.5,.75,1)",
-        &out.summary,
-    );
-
-    // Quantified paper claims at the 1e-5 error level.
-    let thr = 1e-5;
-    let std_it = iters_to_threshold(&table, 1, thr);
-    println!("\niterations to mean error < {thr:.0e}:");
-    let labels = ["stoiht", "alpha=0", "alpha=.25", "alpha=.5", "alpha=.75", "alpha=1"];
-    for (k, label) in labels.iter().enumerate() {
-        match iters_to_threshold(&table, k + 1, thr) {
-            Some(it) => println!("  {label:>9}: {it}"),
-            None => println!("  {label:>9}: (not reached)"),
-        }
-    }
-    if let (Some(s), Some(a1)) = (std_it, iters_to_threshold(&table, 6, thr)) {
-        println!(
-            "\npaper claim `alpha=1 needs ~half the iterations`: ratio = {:.2}",
-            a1 as f64 / s as f64
-        );
-    }
+    common::bench_binary_main("fig1");
 }

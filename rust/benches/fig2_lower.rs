@@ -1,41 +1,14 @@
 //! Regenerates **Fig. 2 (lower)** — time steps to exit vs cores with half
 //! the cores slow (one iteration per four steps)
-//! (`cargo bench --bench fig2_lower`).
+//! (`cargo bench --bench fig2_lower`), via the `fig2_lower` suite in
+//! `astir::bench_harness::suites`.
 //!
 //! Paper shape to verify: no improvement at c = 2 (one fast + one slow),
 //! improvement for the larger core counts.
+//! Telemetry: `results/BENCH_fig2_lower.json`.
 
 mod common;
 
-use astir::experiments::{fig2, Fig2Variant};
-use astir::report;
-
 fn main() {
-    let mut cfg = common::paper_cfg(30);
-    // The paper's lower panel is about the slow-core regime; include c = 2
-    // explicitly since the "no gain at 2" claim is the headline.
-    if !cfg.cores.contains(&2) {
-        cfg.cores.push(2);
-        cfg.cores.sort_unstable();
-    }
-    common::banner("Fig. 2 lower — half the cores slow (period 4)", &cfg);
-
-    let t0 = std::time::Instant::now();
-    let table = fig2(&cfg, Fig2Variant::Lower { period: 4 });
-    println!("[fig2 lower computed in {:.1?}]", t0.elapsed());
-    report::emit("fig2_lower", "Fig. 2 lower (async vs standard StoIHT)", &table);
-
-    let std_mean = table.rows[0][4];
-    println!("\nstandard StoIHT line: {std_mean:.0} steps");
-    for row in &table.rows {
-        println!(
-            "  c={:<3} async {:6.0} ± {:4.0}  ({:4.2}x vs standard, conv {:.0}%)",
-            row[0],
-            row[1],
-            row[2],
-            std_mean / row[1],
-            100.0 * row[3]
-        );
-    }
-    println!("\npaper claim: c=2 ⇒ no improvement; larger c ⇒ improvement.");
+    common::bench_binary_main("fig2_lower");
 }

@@ -1,36 +1,15 @@
 //! Regenerates **Fig. 2 (upper)** — time steps to exit vs cores, all cores
-//! fast (`cargo bench --bench fig2_upper`).
+//! fast (`cargo bench --bench fig2_upper`), via the `fig2_upper` suite in
+//! `astir::bench_harness::suites`.
 //!
 //! Paper shape to verify: async mean below the standard-StoIHT horizontal
 //! line, improving with core count. Our faithful Alg.-2 reproduction finds
 //! the crossover at c ≈ 4 (see the reproduction notes in README.md); the
 //! self-exclusion variant (`ablations` bench) removes the small-c penalty.
+//! Telemetry: `results/BENCH_fig2_upper.json`.
 
 mod common;
 
-use astir::experiments::{fig2, Fig2Variant};
-use astir::report;
-
 fn main() {
-    let cfg = common::paper_cfg(30);
-    common::banner("Fig. 2 upper — steps to exit vs cores (all fast)", &cfg);
-
-    let t0 = std::time::Instant::now();
-    let table = fig2(&cfg, Fig2Variant::Upper);
-    println!("[fig2 upper computed in {:.1?}]", t0.elapsed());
-    report::emit("fig2_upper", "Fig. 2 upper (async vs standard StoIHT)", &table);
-
-    let std_mean = table.rows[0][4];
-    println!("\nstandard StoIHT line: {std_mean:.0} steps");
-    for row in &table.rows {
-        let gain = std_mean / row[1];
-        println!(
-            "  c={:<3} async {:6.0} ± {:4.0}  ({:4.2}x vs standard, conv {:.0}%)",
-            row[0],
-            row[1],
-            row[2],
-            gain,
-            100.0 * row[3]
-        );
-    }
+    common::bench_binary_main("fig2_upper");
 }

@@ -1,267 +1,18 @@
 //! PERF — hot-path microbenches (`cargo bench --bench hot_path`).
 //!
-//! Measures the per-iteration cost centers of the whole stack and reports
-//! achieved memory bandwidth against a STREAM-like roofline measured in
-//! the same process:
-//!
-//! * native proxy step (the Layer-1 twin): b=15, n=1000 fused kernel
-//! * gemv / gemv_t primitives
-//! * top-s quickselect and tally ops (vote + estimate)
-//! * full StoIHT iteration (proxy + identify + estimate + sparse exit check)
-//! * **dense vs sparse step** at the paper scale and at stress scales
-//!   (n = 10^4 and 10^5 with s = 20–50) — the `s ≪ n` regime the paper
-//!   targets; prints the measured speedup of the sparse fast path
-//! * PJRT stoiht_step executable (artifact path), when artifacts exist
-//! * atomic tally contention: 8 threads hammering commit()
+//! Thin wrapper over the `hot_path` suite in
+//! `astir::bench_harness::suites`: per-iteration cost centers of the whole
+//! stack against a STREAM-like roofline measured in the same process —
+//! gemv / fused proxy primitives, top-s quickselect, tally ops (incl. an
+//! 8-thread contended commit), full Alg.-2 steps, **dense vs sparse** at
+//! the paper scale and at stress scales (n = 10^4 and 10^5), and the PJRT
+//! stoiht_step executable when artifacts exist.
 //!
 //! Set `ASTIR_BENCH_SKIP_JUMBO=1` to skip the n = 10^5 point (its matrix
-//! plus transpose needs ~200 MB).
+//! plus transpose needs ~200 MB). Telemetry: `results/BENCH_hot_path.json`.
 
 mod common;
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
-use std::time::Duration;
-
-use astir::algorithms::StoihtKernel;
-use astir::backend::{Backend, PjrtBackend};
-use astir::bench_harness::{bench_header, human_time, quick_bench};
-use astir::linalg::{dot, Mat, SparseIterate};
-use astir::problem::{Problem, ProblemSpec};
-use astir::rng::Rng;
-use astir::support::{top_s_into, union};
-use astir::tally::{AtomicTally, TallyWeighting};
-
-/// Dense-vs-sparse comparison at one problem scale: the fused proxy kernel
-/// alone, then the full Alg.-2 step (proxy + identify + estimate).
-fn sparse_vs_dense_at(label: &str, spec: &ProblemSpec, seed: u64) {
-    bench_header(&format!(
-        "sparse fast path — {label} (n={} b={} s={})",
-        spec.n, spec.b, spec.s
-    ));
-    let mut rng = Rng::seed_from(seed);
-    let p: Problem = spec.generate(&mut rng);
-
-    // A representative 2s-support iterate (Γ ∪ T̃) and tally estimate.
-    let est: Vec<usize> = {
-        let mut e = rng.subset(spec.n, spec.s);
-        e.sort_unstable();
-        e
-    };
-    let mut warm = StoihtKernel::new(&p, 1.0);
-    let mut x_sparse = SparseIterate::zeros(spec.n);
-    for _ in 0..5 {
-        let b = warm.sample_block(&mut rng);
-        warm.step_sparse(&mut x_sparse, b, Some(&est));
-    }
-    let x_dense: Vec<f64> = x_sparse.to_dense();
-
-    // --- fused proxy kernel alone -----------------------------------
-    let (blk, yb) = p.block(0);
-    let mut scratch = vec![0.0; spec.b];
-    let mut out = vec![0.0; spec.n];
-    let dense_proxy = quick_bench("proxy_step_into (dense residual pass)", || {
-        blk.proxy_step_into(yb, &x_dense, 1.0, &mut scratch, &mut out);
-        std::hint::black_box(&out);
-    });
-    let supp = x_sparse.support().to_vec();
-    let sparse_proxy = quick_bench("proxy_step_sparse_into (gathered)", || {
-        blk.proxy_step_sparse_into(&p.a_t, 0, yb, x_sparse.values(), &supp, 1.0, &mut scratch, &mut out);
-        std::hint::black_box(&out);
-    });
-    println!(
-        "  => proxy kernel speedup: {:.2}x (|supp| = {})",
-        dense_proxy.time.mean / sparse_proxy.time.mean,
-        supp.len()
-    );
-
-    // --- full Alg.-2 step (proxy + identify + estimate) -------------
-    let mut kd = StoihtKernel::new(&p, 1.0);
-    let mut xd = x_dense.clone();
-    let mut rng_d = Rng::seed_from(seed ^ 0xBEEF);
-    let dense_step = quick_bench("full step, dense iterate", || {
-        let b = kd.sample_block(&mut rng_d);
-        std::hint::black_box(kd.step(&mut xd, b, Some(&est)));
-    });
-    let mut ks = StoihtKernel::new(&p, 1.0);
-    let mut xs = x_sparse.clone();
-    let mut rng_s = Rng::seed_from(seed ^ 0xBEEF);
-    let sparse_step = quick_bench("full step, sparse iterate", || {
-        let b = ks.sample_block(&mut rng_s);
-        std::hint::black_box(ks.step_sparse(&mut xs, b, Some(&est)));
-    });
-    println!(
-        "  => full-step speedup: {:.2}x ({} vs {} per iter)",
-        dense_step.time.mean / sparse_step.time.mean,
-        human_time(dense_step.time.mean),
-        human_time(sparse_step.time.mean)
-    );
-}
-
 fn main() {
-    let spec = ProblemSpec::paper();
-    let mut rng = Rng::seed_from(1);
-    let p = spec.generate(&mut rng);
-    let x: Vec<f64> = (0..spec.n).map(|_| rng.gauss() * 0.1).collect();
-
-    bench_header("memory roofline (in-process STREAM-like)");
-    // Triad a[i] = b[i] + s*c[i] over 8 MB working set.
-    let nn = 1 << 20;
-    let bsrc: Vec<f64> = (0..nn).map(|i| i as f64).collect();
-    let csrc: Vec<f64> = (0..nn).map(|i| (i * 7) as f64).collect();
-    let mut asink = vec![0.0f64; nn];
-    let triad = quick_bench("triad 1M f64 (24 MB traffic)", || {
-        for i in 0..nn {
-            asink[i] = bsrc[i] + 0.5 * csrc[i];
-        }
-        std::hint::black_box(&asink);
-    });
-    let bw = 24e6 / triad.time.mean / 1e9; // GB/s (3 streams x 8 B x 1M)
-    println!("  => sustainable bandwidth ≈ {bw:.1} GB/s");
-
-    bench_header("linalg primitives (paper shape)");
-    let blk_rows = spec.b;
-    let a_blk = Mat::<f64>::from_fn(blk_rows, spec.n, |i, j| ((i * spec.n + j) as f64 * 0.37).sin());
-    let yv: Vec<f64> = (0..blk_rows).map(|i| i as f64 * 0.1).collect();
-    let mut scratch = vec![0.0; blk_rows];
-    let mut out = vec![0.0; spec.n];
-    quick_bench("dot n=1000", || {
-        std::hint::black_box(dot(&x, &out));
-    });
-    quick_bench("gemv 15x1000", || {
-        a_blk.as_block().gemv_into(&x, &mut scratch);
-        std::hint::black_box(&scratch);
-    });
-    let proxy = quick_bench("proxy_step 15x1000 fused", || {
-        a_blk.as_block().proxy_step_into(&yv, &x, 1.0, &mut scratch, &mut out);
-        std::hint::black_box(&out);
-    });
-    // Proxy traffic: A streamed twice (2 * 15k * 8 B) + vectors.
-    let traffic = (2 * blk_rows * spec.n + 4 * spec.n + 2 * blk_rows) as f64 * 8.0;
-    println!(
-        "  => proxy streams {:.0} KB/iter at {:.1} GB/s ({:.0}% of triad roofline)",
-        traffic / 1e3,
-        traffic / proxy.time.mean / 1e9,
-        100.0 * (traffic / proxy.time.mean / 1e9) / bw
-    );
-
-    bench_header("support + tally ops");
-    let v: Vec<f64> = (0..spec.n).map(|i| ((i * 31 % 97) as f64) - 48.0).collect();
-    let mut idx_scratch = Vec::new();
-    let mut sel = vec![0usize; spec.s];
-    quick_bench("top_s quickselect n=1000 s=20", || {
-        top_s_into(&v, spec.s, &mut idx_scratch, &mut sel);
-        std::hint::black_box(&sel);
-    });
-    let tally = AtomicTally::new(spec.n, TallyWeighting::Progress);
-    let gamma: Vec<usize> = (0..spec.s).map(|k| k * 37 % spec.n).collect();
-    let mut sorted_gamma = gamma.clone();
-    sorted_gamma.sort_unstable();
-    quick_bench("tally commit (2s atomic RMWs)", || {
-        tally.commit(&sorted_gamma, &sorted_gamma, 7);
-    });
-    let mut tally_scratch = Vec::new();
-    quick_bench("tally estimate (snapshot + top-s)", || {
-        std::hint::black_box(tally.estimate(spec.s, &mut tally_scratch));
-    });
-
-    bench_header("full StoIHT iteration (native)");
-    let mut kernel = astir::algorithms::StoihtKernel::new(&p, 1.0);
-    let mut xi = vec![0.0f64; spec.n];
-    let mut block_rng = Rng::seed_from(3);
-    let est: Vec<usize> = (0..spec.s).map(|k| k * 17 % spec.n).collect();
-    let mut est_sorted = est.clone();
-    est_sorted.sort_unstable();
-    est_sorted.dedup();
-    quick_bench("kernel.step + sparse exit check", || {
-        let b = kernel.sample_block(&mut block_rng);
-        let gamma = kernel.step(&mut xi, b, Some(&est_sorted)).to_vec();
-        let supp = union(&gamma, &est_sorted);
-        std::hint::black_box(p.residual_norm_sparse(&xi, &supp));
-    });
-    quick_bench("dense residual check (m x n gemv)", || {
-        std::hint::black_box(p.residual_norm(&xi));
-    });
-
-    // Dense-vs-sparse step at the paper scale and in the s ≪ n stress
-    // regime the paper targets (and where a production service would
-    // live). The equivalence suite (rust/tests/sparse_equivalence.rs)
-    // proves the two paths produce bit-identical iterates; this measures
-    // what the sparsity buys.
-    sparse_vs_dense_at("paper scale", &ProblemSpec::paper(), 11);
-    sparse_vs_dense_at(
-        "stress scale",
-        &ProblemSpec { n: 10_000, m: 300, b: 15, s: 20, ..ProblemSpec::paper() },
-        12,
-    );
-    if std::env::var_os("ASTIR_BENCH_SKIP_JUMBO").is_none() {
-        sparse_vs_dense_at(
-            "jumbo scale",
-            &ProblemSpec { n: 100_000, m: 120, b: 15, s: 50, ..ProblemSpec::paper() },
-            13,
-        );
-    }
-
-    bench_header("atomic tally under contention (8 threads)");
-    let shared = Arc::new(AtomicTally::new(spec.n, TallyWeighting::Progress));
-    let stop = Arc::new(AtomicBool::new(false));
-    let mut handles = Vec::new();
-    for w in 0..7 {
-        let shared = Arc::clone(&shared);
-        let stop = Arc::clone(&stop);
-        handles.push(std::thread::spawn(move || {
-            let mut r = Rng::seed_from(w);
-            let mut prev: Vec<usize> = Vec::new();
-            let mut t = 1u64;
-            while !stop.load(Ordering::Relaxed) {
-                let mut g = r.subset(1000, 20);
-                g.sort_unstable();
-                shared.commit(&g, &prev, t);
-                prev = g;
-                t += 1;
-            }
-        }));
-    }
-    let res = quick_bench("tally commit w/ 7 writer threads", || {
-        shared.commit(&sorted_gamma, &sorted_gamma, 9);
-    });
-    stop.store(true, Ordering::Relaxed);
-    for h in handles {
-        h.join().unwrap();
-    }
-    println!("  => contended commit {}", human_time(res.time.mean));
-
-    bench_header("PJRT artifact path (needs `make artifacts`)");
-    match PjrtBackend::from_default_dir() {
-        Ok(mut be) => {
-            let tiny = ProblemSpec::tiny().generate(&mut Rng::seed_from(2));
-            let xt = vec![0.0f64; tiny.spec.n];
-            let mask = vec![0.0f64; tiny.spec.n];
-            // warm the executable cache outside the timer
-            let _ = be.stoiht_step(&tiny, 0, &xt, 1.0, &mask).unwrap();
-            let r = astir::bench_harness::bench(
-                "pjrt stoiht_step n=32 b=4 (marshal+execute)",
-                Duration::from_millis(200),
-                Duration::from_secs(1),
-                || {
-                    std::hint::black_box(be.stoiht_step(&tiny, 0, &xt, 1.0, &mask).unwrap());
-                },
-            );
-            println!("{}", r.summary());
-            let paper = spec.generate(&mut Rng::seed_from(3));
-            let xp = vec![0.0f64; spec.n];
-            let maskp = vec![0.0f64; spec.n];
-            let _ = be.stoiht_step(&paper, 0, &xp, 1.0, &maskp).unwrap();
-            let r = astir::bench_harness::bench(
-                "pjrt stoiht_step n=1000 b=15 (marshal+execute)",
-                Duration::from_millis(200),
-                Duration::from_secs(1),
-                || {
-                    std::hint::black_box(be.stoiht_step(&paper, 0, &xp, 1.0, &maskp).unwrap());
-                },
-            );
-            println!("{}", r.summary());
-        }
-        Err(e) => println!("skipped: {e}"),
-    }
+    common::bench_binary_main("hot_path");
 }

@@ -125,7 +125,8 @@ mod tests {
     #[test]
     fn traces_align_with_iterations() {
         let p = easy(9);
-        let r = omp(&p, &GreedyOpts { record_error: true, record_resid: true, ..Default::default() });
+        let opts = GreedyOpts { record_error: true, record_resid: true, ..Default::default() };
+        let r = omp(&p, &opts);
         assert_eq!(r.error_trace.len(), r.iters);
         assert_eq!(r.resid_trace.len(), r.iters);
     }

@@ -103,7 +103,8 @@ mod tests {
     fn recovers_quickly_noiseless() {
         for seed in 1..5u64 {
             let p = easy(seed);
-            let r = stogradmp(&p, &GreedyOpts { max_iters: 100, ..Default::default() }, &mut Rng::seed_from(seed));
+            let opts = GreedyOpts { max_iters: 100, ..Default::default() };
+            let r = stogradmp(&p, &opts, &mut Rng::seed_from(seed));
             assert!(r.converged, "seed {seed} residual {}", r.residual);
             assert!(p.recovery_error(&r.x) < 1e-7, "seed {seed}");
             // GradMP-family converges much faster than StoIHT.

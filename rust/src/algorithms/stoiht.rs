@@ -76,7 +76,12 @@ impl<'p> StoihtKernel<'p> {
     ///
     /// Returns the sorted `Γ^t` (borrow of internal scratch — copy it out if
     /// it must outlive the next call).
-    pub fn step(&mut self, x: &mut [f64], block: usize, extra_support: Option<&[usize]>) -> &[usize] {
+    pub fn step(
+        &mut self,
+        x: &mut [f64],
+        block: usize,
+        extra_support: Option<&[usize]>,
+    ) -> &[usize] {
         let spec = &self.problem.spec;
         let (blk, yb) = self.problem.block(block);
         blk.proxy_step_into(yb, x, self.alphas[block], &mut self.resid, &mut self.proxy);
@@ -225,7 +230,8 @@ mod tests {
 
     fn easy_problem(seed: u64) -> Problem {
         // Comfortable oversampling: n=128, m=64, s=4.
-        ProblemSpec { n: 128, m: 64, b: 8, s: 4, ..ProblemSpec::tiny() }.generate(&mut Rng::seed_from(seed))
+        ProblemSpec { n: 128, m: 64, b: 8, s: 4, ..ProblemSpec::tiny() }
+            .generate(&mut Rng::seed_from(seed))
     }
 
     #[test]
@@ -310,7 +316,12 @@ mod tests {
     #[test]
     fn traces_recorded_when_asked() {
         let p = easy_problem(7);
-        let opts = GreedyOpts { record_error: true, record_resid: true, max_iters: 10, ..Default::default() };
+        let opts = GreedyOpts {
+            record_error: true,
+            record_resid: true,
+            max_iters: 10,
+            ..Default::default()
+        };
         let r = stoiht(&p, &opts, &mut Rng::seed_from(2));
         assert_eq!(r.error_trace.len(), r.iters);
         assert_eq!(r.resid_trace.len(), r.iters);

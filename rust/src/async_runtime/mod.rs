@@ -417,7 +417,8 @@ mod tests {
     #[test]
     fn slow_schedule_still_converges() {
         let p = easy(5);
-        let opts = AsyncOpts { schedule: SpeedSchedule::HalfSlow { period: 4 }, ..Default::default() };
+        let opts =
+            AsyncOpts { schedule: SpeedSchedule::HalfSlow { period: 4 }, ..Default::default() };
         let out = run_async(&p, 4, &opts, 13);
         assert!(out.converged);
     }

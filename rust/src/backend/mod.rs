@@ -8,8 +8,7 @@
 //! integration tests in `rust/tests/pjrt_integration.rs` pin the two
 //! backends against each other to f32 tolerance.
 
-use anyhow::Result;
-
+use crate::error::Result;
 use crate::linalg::RowBlock;
 use crate::problem::Problem;
 use crate::runtime::PjrtRuntime;
@@ -22,7 +21,13 @@ pub trait Backend {
 
     /// Proxy step on one measurement block:
     /// `b = x + alpha * A_b^T (y_b - A_b x)`.
-    fn proxy_step(&mut self, problem: &Problem, block: usize, x: &[f64], alpha: f64) -> Result<Vec<f64>>;
+    fn proxy_step(
+        &mut self,
+        problem: &Problem,
+        block: usize,
+        x: &[f64],
+        alpha: f64,
+    ) -> Result<Vec<f64>>;
 
     /// Full Alg.-2 step: proxy + identify + union(tally mask) + estimate.
     /// `tally_mask` is a 0/1 vector of length `n`.
@@ -65,7 +70,13 @@ impl Backend for NativeBackend {
         "native"
     }
 
-    fn proxy_step(&mut self, problem: &Problem, block: usize, x: &[f64], alpha: f64) -> Result<Vec<f64>> {
+    fn proxy_step(
+        &mut self,
+        problem: &Problem,
+        block: usize,
+        x: &[f64],
+        alpha: f64,
+    ) -> Result<Vec<f64>> {
         let (blk, yb) = problem.block(block);
         self.proxy_into(blk, yb, x, alpha);
         Ok(self.proxy_scratch.clone())
@@ -131,7 +142,13 @@ impl Backend for PjrtBackend {
         "pjrt"
     }
 
-    fn proxy_step(&mut self, problem: &Problem, block: usize, x: &[f64], alpha: f64) -> Result<Vec<f64>> {
+    fn proxy_step(
+        &mut self,
+        problem: &Problem,
+        block: usize,
+        x: &[f64],
+        alpha: f64,
+    ) -> Result<Vec<f64>> {
         // The artifact set has no bare-proxy entry point; run the full step
         // with an all-ones tally mask, which returns b restricted to
         // Γ ∪ everything = b itself.

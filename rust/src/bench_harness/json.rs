@@ -1,0 +1,551 @@
+//! Hand-rolled JSON for the bench telemetry (offline build — no serde):
+//! a schema-stable writer for [`RunReport`] and a small RFC 8259 parser
+//! (lenient only in accepting leading zeros in numbers) used by
+//! `astir bench --compare` and the round-trip tests.
+//!
+//! ## The `astir-bench-v1` schema
+//!
+//! ```json
+//! {
+//!   "schema": "astir-bench-v1",
+//!   "git_rev": "0123abcd4567" | null,
+//!   "mode": "smoke" | "full",
+//!   "suites": [{
+//!     "name": "hot_path",
+//!     "skipped": ["jumbo_step_sparse"],
+//!     "benches": [{
+//!       "name": "proxy_fused_15x1000",
+//!       "scale": "standard" | "jumbo",
+//!       "seed": 11,
+//!       "dims": {"n": 1000, "m": 300, "b": 15, "s": 20} | null,
+//!       "iters": 123456,
+//!       "samples": 321,
+//!       "mean_s": 1.1e-6, "std_s": 2.0e-8, "min_s": 1.0e-6,
+//!       "throughput_iters_per_s": 9.1e5
+//!     }]
+//!   }]
+//! }
+//! ```
+//!
+//! Numbers are shortest-round-trip `f64` (or plain integers); non-finite
+//! statistics (a dry-run record) serialize as `null` and parse back as
+//! NaN. Integer fields (seed, iters, samples) follow the JSON interop
+//! convention of at most 2^53 — larger values survive serialization but
+//! lose precision through the `f64` parse, like in every JS consumer.
+//! Key order is fixed — the snapshot test in
+//! `rust/tests/bench_telemetry.rs` pins it.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::metrics::{json_escape, json_f64, Stats};
+
+use super::{BenchDims, BenchRecord, Mode, RunReport, Scale, SuiteReport, SCHEMA};
+
+/// Serialize a [`RunReport`] as one line of schema-stable JSON.
+pub fn report_to_json(report: &RunReport) -> String {
+    let mut out = String::new();
+    out.push_str("{\"schema\":\"");
+    out.push_str(&json_escape(&report.schema));
+    out.push_str("\",\"git_rev\":");
+    match &report.git_rev {
+        Some(rev) => {
+            let _ = write!(out, "\"{}\"", json_escape(rev));
+        }
+        None => out.push_str("null"),
+    }
+    let _ = write!(out, ",\"mode\":\"{}\",\"suites\":[", report.mode.as_str());
+    for (i, suite) in report.suites.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        suite_to_json(&mut out, suite);
+    }
+    out.push_str("]}");
+    out
+}
+
+fn suite_to_json(out: &mut String, suite: &SuiteReport) {
+    let _ = write!(out, "{{\"name\":\"{}\",\"skipped\":[", json_escape(&suite.name));
+    for (i, s) in suite.skipped.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "\"{}\"", json_escape(s));
+    }
+    out.push_str("],\"benches\":[");
+    for (i, b) in suite.benches.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        bench_to_json(out, b);
+    }
+    out.push_str("]}");
+}
+
+fn bench_to_json(out: &mut String, b: &BenchRecord) {
+    let _ = write!(
+        out,
+        "{{\"name\":\"{}\",\"scale\":\"{}\",\"seed\":{},\"dims\":",
+        json_escape(&b.name),
+        b.scale.as_str(),
+        b.seed
+    );
+    match &b.dims {
+        Some(d) => {
+            let _ = write!(out, "{{\"n\":{},\"m\":{},\"b\":{},\"s\":{}}}", d.n, d.m, d.b, d.s);
+        }
+        None => out.push_str("null"),
+    }
+    let throughput = b.throughput();
+    let _ = write!(
+        out,
+        ",\"iters\":{},\"samples\":{},\"mean_s\":{},\"std_s\":{},\"min_s\":{},\
+         \"throughput_iters_per_s\":{}}}",
+        b.iters,
+        b.time.n,
+        json_f64(b.time.mean),
+        json_f64(b.time.std),
+        json_f64(b.time.min),
+        json_f64(throughput)
+    );
+}
+
+/// Write a report to `path`, creating parent dirs.
+pub fn write_report(report: &RunReport, path: &Path) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, report_to_json(report))
+}
+
+/// Parse and validate an `astir-bench-v1` document back into a
+/// [`RunReport`] (statistics not carried by the schema — max, median —
+/// come back as NaN).
+pub fn parse_report(text: &str) -> Result<RunReport, String> {
+    let doc = Json::parse(text)?;
+    let schema = req_str(&doc, "schema")?;
+    if schema != SCHEMA {
+        return Err(format!("unsupported bench schema `{schema}` (want `{SCHEMA}`)"));
+    }
+    let git_rev = match doc.get("git_rev") {
+        None | Some(Json::Null) => None,
+        Some(Json::Str(s)) => Some(s.clone()),
+        Some(_) => return Err("git_rev must be a string or null".to_string()),
+    };
+    let mode_s = req_str(&doc, "mode")?;
+    let mode = Mode::parse(&mode_s).ok_or_else(|| format!("unknown mode `{mode_s}`"))?;
+    let suites = doc
+        .get("suites")
+        .and_then(Json::as_arr)
+        .ok_or("missing `suites` array")?
+        .iter()
+        .map(parse_suite)
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(RunReport { schema, git_rev, mode, suites })
+}
+
+fn parse_suite(j: &Json) -> Result<SuiteReport, String> {
+    let name = req_str(j, "name")?;
+    let skipped = j
+        .get("skipped")
+        .and_then(Json::as_arr)
+        .ok_or("missing `skipped` array")?
+        .iter()
+        .map(|s| s.as_str().map(str::to_string).ok_or("skipped entries must be strings"))
+        .collect::<Result<Vec<_>, _>>()?;
+    let benches = j
+        .get("benches")
+        .and_then(Json::as_arr)
+        .ok_or("missing `benches` array")?
+        .iter()
+        .map(parse_bench)
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(SuiteReport { name, benches, skipped })
+}
+
+fn parse_bench(j: &Json) -> Result<BenchRecord, String> {
+    let name = req_str(j, "name")?;
+    let scale_s = req_str(j, "scale")?;
+    let scale = Scale::parse(&scale_s).ok_or_else(|| format!("unknown scale `{scale_s}`"))?;
+    let seed = req_num(j, "seed")? as u64;
+    let dims = match j.get("dims") {
+        None | Some(Json::Null) => None,
+        Some(d) => Some(BenchDims {
+            n: req_num(d, "n")? as usize,
+            m: req_num(d, "m")? as usize,
+            b: req_num(d, "b")? as usize,
+            s: req_num(d, "s")? as usize,
+        }),
+    };
+    let iters = req_num(j, "iters")? as usize;
+    let samples = req_num(j, "samples")? as usize;
+    let mean = opt_num(j, "mean_s");
+    let std = opt_num(j, "std_s");
+    let min = opt_num(j, "min_s");
+    Ok(BenchRecord {
+        name,
+        scale,
+        dims,
+        seed,
+        iters,
+        time: Stats { n: samples, mean, std, min, max: f64::NAN, median: f64::NAN },
+    })
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String, String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("missing string field `{key}`"))
+}
+
+fn req_num(j: &Json, key: &str) -> Result<f64, String> {
+    j.get(key).and_then(Json::as_f64).ok_or_else(|| format!("missing numeric field `{key}`"))
+}
+
+/// Numeric-or-null field (non-finite stats serialize as null → NaN).
+fn opt_num(j: &Json, key: &str) -> f64 {
+    j.get(key).and_then(Json::as_f64).unwrap_or(f64::NAN)
+}
+
+/// A parsed JSON value. Objects keep insertion order (no dedup — last
+/// `get` match wins is not needed; first wins).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Parse a complete document (trailing garbage is an error).
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let mut p = Parser { s: text.as_bytes(), i: 0 };
+        p.skip_ws();
+        let v = p.value(0)?;
+        p.skip_ws();
+        if p.i != p.s.len() {
+            return Err(p.err("trailing characters after JSON value"));
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+const MAX_DEPTH: usize = 128;
+
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn err(&self, msg: &str) -> String {
+        format!("{msg} at byte {}", self.i)
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.s.get(self.i).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected `{}`", c as char)))
+        }
+    }
+
+    fn eat_lit(&mut self, lit: &str, v: Json) -> Result<Json, String> {
+        if self.s[self.i..].starts_with(lit.as_bytes()) {
+            self.i += lit.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected `{lit}`")))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json, String> {
+        if depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        self.skip_ws();
+        match self.peek() {
+            Some(b'n') => self.eat_lit("null", Json::Null),
+            Some(b't') => self.eat_lit("true", Json::Bool(true)),
+            Some(b'f') => self.eat_lit("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => self.array(depth),
+            Some(b'{') => self.object(depth),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(self.err("expected a JSON value")),
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json, String> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.i += 1;
+                }
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(self.err("expected `,` or `]`")),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json, String> {
+        self.eat(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            let val = self.value(depth + 1)?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.i += 1;
+                }
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(self.err("expected `,` or `}`")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(c) = self.peek() else {
+                return Err(self.err("unterminated string"));
+            };
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(e) = self.peek() else {
+                        return Err(self.err("unterminated escape"));
+                    };
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let code = if (0xD800..0xDC00).contains(&hi) {
+                                // high surrogate: require a \uXXXX low pair
+                                if self.peek() == Some(b'\\') {
+                                    self.i += 1;
+                                    self.eat(b'u')?;
+                                    let lo = self.hex4()?;
+                                    if !(0xDC00..0xE000).contains(&lo) {
+                                        return Err(self.err("invalid low surrogate"));
+                                    }
+                                    0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                                } else {
+                                    return Err(self.err("lone high surrogate"));
+                                }
+                            } else {
+                                hi
+                            };
+                            match char::from_u32(code) {
+                                Some(ch) => out.push(ch),
+                                None => return Err(self.err("invalid unicode escape")),
+                            }
+                        }
+                        _ => return Err(self.err("unknown escape")),
+                    }
+                }
+                // Raw bytes: the input is a &str, so multibyte UTF-8
+                // sequences are valid — copy them through byte-wise.
+                _ => {
+                    if c < 0x20 {
+                        return Err(self.err("control character in string"));
+                    }
+                    let start = self.i - 1;
+                    let mut end = self.i;
+                    while end < self.s.len() && self.s[end] >= 0x80 {
+                        end += 1;
+                    }
+                    // SAFETY-free: re-slice the original str boundaries.
+                    let chunk = std::str::from_utf8(&self.s[start..end])
+                        .map_err(|_| self.err("invalid UTF-8"))?;
+                    out.push_str(chunk);
+                    self.i = end;
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let Some(c) = self.peek() else {
+                return Err(self.err("truncated \\u escape"));
+            };
+            let d = (c as char).to_digit(16).ok_or_else(|| self.err("bad hex digit"))?;
+            v = v * 16 + d;
+            self.i += 1;
+        }
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.i += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            if !matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                return Err(self.err("expected digit after decimal point"));
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.i += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.s[start..self.i]).expect("ascii number");
+        text.parse::<f64>().map(Json::Num).map_err(|_| self.err("invalid number"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse(" true ").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("false").unwrap(), Json::Bool(false));
+        assert_eq!(Json::parse("-1.5e3").unwrap(), Json::Num(-1500.0));
+        assert_eq!(Json::parse("42").unwrap(), Json::Num(42.0));
+        assert_eq!(Json::parse("\"hi\"").unwrap(), Json::Str("hi".to_string()));
+    }
+
+    #[test]
+    fn parses_structures() {
+        let j = Json::parse(r#"{"a": [1, 2, {"b": null}], "c": "x"}"#).unwrap();
+        assert_eq!(j.get("c").and_then(Json::as_str), Some("x"));
+        let arr = j.get("a").and_then(Json::as_arr).unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[0].as_f64(), Some(1.0));
+        assert_eq!(arr[2].get("b"), Some(&Json::Null));
+        assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
+        assert_eq!(Json::parse("{}").unwrap(), Json::Obj(vec![]));
+    }
+
+    #[test]
+    fn parses_escapes_and_unicode() {
+        let j = Json::parse(r#""a\"b\\c\n\t\u00b5\ud83d\ude00""#).unwrap();
+        assert_eq!(j.as_str(), Some("a\"b\\c\n\tµ😀"));
+        // raw multibyte UTF-8 passes through
+        assert_eq!(Json::parse("\"µs 😀\"").unwrap().as_str(), Some("µs 😀"));
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for bad in [
+            "", "tru", "{", "[1,", "[1 2]", "{\"a\" 1}", "{\"a\":}", "\"\\q\"", "\"\\u12g4\"",
+            "\"unterminated", "1.5 extra", "\"\\ud800x\"", "nul", "+1", "{1: 2}", "1.", "[1.e3]",
+        ] {
+            assert!(Json::parse(bad).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn escape_roundtrip_through_parser() {
+        let original = "quote\" slash\\ tab\t newline\n µ";
+        let doc = format!("\"{}\"", json_escape(original));
+        assert_eq!(Json::parse(&doc).unwrap().as_str(), Some(original));
+    }
+}

@@ -1,15 +1,35 @@
-//! In-repo micro-benchmark harness (criterion is unavailable offline).
+//! Bench suite registry + timing harness + perf telemetry (criterion is
+//! unavailable offline, so all of it is in-repo).
 //!
-//! The `cargo bench` targets are `harness = false` binaries that use this
-//! module for timing and the `experiments` drivers for figure
-//! regeneration. The measurement loop is deliberately simple: warm up
-//! until timings stabilize (or the warmup budget is spent), then run
-//! fixed-size batches until the measurement budget is spent, reporting
-//! mean / σ / min over batch means.
+//! Three layers:
+//!
+//! * **Timing core** — [`bench_with`]/[`bench`]: warm up until timings
+//!   stabilize (or the warmup budget is spent), then run fixed-size
+//!   batches until the measurement budget is spent, reporting mean / σ /
+//!   min over batch means.
+//! * **Registry** — every benchmark is declared as a [`BenchSpec`] (name,
+//!   scale tag, problem dims, seed, smoke/full [`Budget`]s) and registered
+//!   into a named [`Suite`]; the six suites live in [`suites`] and are
+//!   shared by the `cargo bench` binaries and the `astir bench` CLI.
+//! * **Telemetry** — a finished run serializes to a schema-stable JSON
+//!   document ([`json`], hand-rolled — no serde offline) that CI uploads
+//!   and [`compare_reports`] diffs against a committed baseline, failing
+//!   the run when any benchmark regresses beyond a threshold.
+
+pub mod json;
+pub mod suites;
 
 use std::time::{Duration, Instant};
 
 use crate::metrics::{format_sig, stats, Stats};
+
+/// Identifier of the JSON telemetry schema emitted by this crate.
+pub const SCHEMA: &str = "astir-bench-v1";
+
+/// Default `--compare` regression threshold: fail when a benchmark's mean
+/// time grows by more than this fraction (50% — shared CI runners are
+/// noisy; tighten via `astir bench --threshold`).
+pub const DEFAULT_REGRESSION_THRESHOLD: f64 = 0.5;
 
 /// One benchmark's timing summary (seconds per iteration).
 #[derive(Clone, Debug)]
@@ -57,26 +77,389 @@ pub fn human_time(secs: f64) -> String {
     format!("{} {unit}", format_sig(v, 4))
 }
 
-/// Benchmark a closure: warm up for `warmup`, then measure for `measure`.
-pub fn bench<F: FnMut()>(name: &str, warmup: Duration, measure: Duration, mut f: F) -> BenchResult {
-    // Warmup + calibration: find a batch size that runs >= ~1 ms.
-    let warm_start = Instant::now();
-    let mut batch = 1usize;
-    loop {
-        let t0 = Instant::now();
-        for _ in 0..batch {
-            f();
+/// Measurement budget for one benchmark run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Budget {
+    pub warmup: Duration,
+    pub measure: Duration,
+    /// Minimum number of measured batches regardless of elapsed time.
+    pub min_samples: usize,
+}
+
+impl Budget {
+    /// Microbenchmark budget under `--smoke` (CI-sized).
+    pub const fn micro_smoke() -> Self {
+        Budget {
+            warmup: Duration::from_millis(20),
+            measure: Duration::from_millis(100),
+            min_samples: 3,
         }
-        let dt = t0.elapsed();
-        if dt >= Duration::from_millis(1) || batch >= 1 << 20 {
-            if warm_start.elapsed() >= warmup {
+    }
+
+    /// Microbenchmark budget for a full run.
+    pub const fn micro_full() -> Self {
+        Budget {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_secs(1),
+            min_samples: 3,
+        }
+    }
+
+    /// One timed pass, no warmup — for Monte-Carlo experiment drivers
+    /// where a single run is already an aggregate over many trials.
+    pub const fn once() -> Self {
+        Budget { warmup: Duration::ZERO, measure: Duration::ZERO, min_samples: 1 }
+    }
+}
+
+/// Smoke (CI) vs full measurement mode; selects which [`BenchSpec`]
+/// budget applies and how experiment suites size their trial counts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Smoke,
+    Full,
+}
+
+impl Mode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Mode::Smoke => "smoke",
+            Mode::Full => "full",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Mode> {
+        match s {
+            "smoke" => Some(Mode::Smoke),
+            "full" => Some(Mode::Full),
+            _ => None,
+        }
+    }
+}
+
+/// Scale tag: `Jumbo` points allocate disproportionate memory/time and are
+/// env-gated (`ASTIR_BENCH_SKIP_JUMBO=1`, always set in CI).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Standard,
+    Jumbo,
+}
+
+impl Scale {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Scale::Standard => "standard",
+            Scale::Jumbo => "jumbo",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s {
+            "standard" => Some(Scale::Standard),
+            "jumbo" => Some(Scale::Jumbo),
+            _ => None,
+        }
+    }
+}
+
+/// Problem dimensions attached to a benchmark record (telemetry context:
+/// a perf number is meaningless without the shape it was measured on).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BenchDims {
+    pub n: usize,
+    pub m: usize,
+    pub b: usize,
+    pub s: usize,
+}
+
+/// Declarative description of one benchmark in a suite.
+#[derive(Clone, Debug)]
+pub struct BenchSpec {
+    pub name: String,
+    pub scale: Scale,
+    pub dims: Option<BenchDims>,
+    pub seed: u64,
+    pub smoke: Budget,
+    pub full: Budget,
+}
+
+impl BenchSpec {
+    /// Repeated-timing microbenchmark (quick smoke batch, 1 s full batch).
+    pub fn micro(name: &str) -> Self {
+        BenchSpec {
+            name: name.to_string(),
+            scale: Scale::Standard,
+            dims: None,
+            seed: 0,
+            smoke: Budget::micro_smoke(),
+            full: Budget::micro_full(),
+        }
+    }
+
+    /// Single-pass experiment driver (one timed run in both modes — the
+    /// Monte-Carlo trial count, not repetition, supplies the averaging).
+    pub fn experiment(name: &str) -> Self {
+        BenchSpec { smoke: Budget::once(), full: Budget::once(), ..BenchSpec::micro(name) }
+    }
+
+    /// Attach problem dimensions.
+    pub fn dims(mut self, n: usize, m: usize, b: usize, s: usize) -> Self {
+        self.dims = Some(BenchDims { n, m, b, s });
+        self
+    }
+
+    /// Attach the RNG seed the workload was generated from.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Tag as a jumbo-scale point (env-gated).
+    pub fn jumbo(mut self) -> Self {
+        self.scale = Scale::Jumbo;
+        self
+    }
+
+    /// The budget selected by `mode`.
+    pub fn budget(&self, mode: Mode) -> Budget {
+        match mode {
+            Mode::Smoke => self.smoke,
+            Mode::Full => self.full,
+        }
+    }
+}
+
+/// One executed benchmark with its spec metadata — the unit of the JSON
+/// telemetry schema.
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    pub name: String,
+    pub scale: Scale,
+    pub dims: Option<BenchDims>,
+    pub seed: u64,
+    pub iters: usize,
+    pub time: Stats,
+}
+
+impl BenchRecord {
+    /// Iterations per second at the mean time (NaN for records without a
+    /// positive finite mean — dry-run placeholders).
+    pub fn throughput(&self) -> f64 {
+        if self.time.mean > 0.0 {
+            1.0 / self.time.mean
+        } else {
+            f64::NAN
+        }
+    }
+
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (±{}, min {}, {} iters)",
+            self.name,
+            human_time(self.time.mean),
+            human_time(self.time.std),
+            human_time(self.time.min),
+            self.iters
+        )
+    }
+}
+
+/// All records from one named suite.
+#[derive(Clone, Debug)]
+pub struct SuiteReport {
+    pub name: String,
+    pub benches: Vec<BenchRecord>,
+    /// Bench names skipped at run time (jumbo gate, unavailable backend).
+    pub skipped: Vec<String>,
+}
+
+/// A full run: what `BENCH_<suite>.json` / `astir bench --json` contain.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub schema: String,
+    pub git_rev: Option<String>,
+    pub mode: Mode,
+    pub suites: Vec<SuiteReport>,
+}
+
+/// Options controlling a suite run (CLI flags / environment).
+#[derive(Clone, Debug)]
+pub struct RunOpts {
+    pub mode: Mode,
+    /// Substring filter over `suite/bench` names.
+    pub filter: Option<String>,
+    /// Skip [`Scale::Jumbo`] points (`ASTIR_BENCH_SKIP_JUMBO=1`).
+    pub skip_jumbo: bool,
+    /// Register specs without timing anything (`astir bench --list` and
+    /// the determinism tests).
+    pub dry_run: bool,
+}
+
+impl RunOpts {
+    /// Mode plus environment-derived gates; no filter.
+    pub fn from_env(mode: Mode) -> Self {
+        RunOpts { mode, filter: None, skip_jumbo: skip_jumbo_env(), dry_run: false }
+    }
+}
+
+/// The jumbo gate: `ASTIR_BENCH_SKIP_JUMBO` set to anything but `0`/empty.
+pub fn skip_jumbo_env() -> bool {
+    std::env::var_os("ASTIR_BENCH_SKIP_JUMBO").is_some_and(|v| !v.is_empty() && v != "0")
+}
+
+/// An executing (or dry-run) suite: benches register and run in order.
+pub struct Suite {
+    name: String,
+    opts: RunOpts,
+    benches: Vec<BenchRecord>,
+    skipped: Vec<String>,
+}
+
+impl Suite {
+    pub fn new(name: &str, opts: &RunOpts) -> Self {
+        Suite {
+            name: name.to_string(),
+            opts: opts.clone(),
+            benches: Vec::new(),
+            skipped: Vec::new(),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn mode(&self) -> Mode {
+        self.opts.mode
+    }
+
+    pub fn is_dry_run(&self) -> bool {
+        self.opts.dry_run
+    }
+
+    fn full_name(&self, bench: &str) -> String {
+        format!("{}/{bench}", self.name)
+    }
+
+    fn filtered_out(&self, bench: &str) -> bool {
+        match &self.opts.filter {
+            Some(f) => !self.full_name(bench).contains(f.as_str()),
+            None => false,
+        }
+    }
+
+    /// Jumbo points are skipped by the env gate and in smoke mode
+    /// (CI-sized by definition). Dry runs still *list* jumbo specs —
+    /// suite definitions must register them without paying setup
+    /// (see `suites::sparse_vs_dense_at`).
+    pub fn jumbo_gated(&self) -> bool {
+        self.opts.skip_jumbo || self.opts.mode == Mode::Smoke
+    }
+
+    /// Would [`Suite::bench`] measure this spec? Lets suite definitions
+    /// skip expensive setup for filtered-out or jumbo-gated points.
+    pub fn wants(&self, spec: &BenchSpec) -> bool {
+        !(self.filtered_out(&spec.name) || (spec.scale == Scale::Jumbo && self.jumbo_gated()))
+    }
+
+    /// Record a benchmark as skipped (gated scale, unavailable backend).
+    pub fn skip(&mut self, name: &str, why: &str) {
+        if self.filtered_out(name) {
+            return;
+        }
+        if !self.opts.dry_run {
+            println!("{:<44} skipped: {why}", self.full_name(name));
+        }
+        self.skipped.push(name.to_string());
+    }
+
+    /// Run one benchmark under the mode-selected budget and record it.
+    /// Returns the record, or `None` when the spec was filtered out,
+    /// jumbo-gated, or this is a dry run (so derived-metric printouts
+    /// guarded by the return value stay quiet).
+    pub fn bench<F: FnMut()>(&mut self, spec: BenchSpec, f: F) -> Option<BenchRecord> {
+        if self.filtered_out(&spec.name) {
+            return None;
+        }
+        if spec.scale == Scale::Jumbo && self.jumbo_gated() {
+            self.skip(&spec.name, "jumbo scale gated (smoke mode / ASTIR_BENCH_SKIP_JUMBO)");
+            return None;
+        }
+        if self.opts.dry_run {
+            // Listing: record the spec (even a jumbo one) without running.
+            self.benches.push(BenchRecord {
+                name: spec.name.clone(),
+                scale: spec.scale,
+                dims: spec.dims,
+                seed: spec.seed,
+                iters: 0,
+                time: stats(&[]),
+            });
+            return None;
+        }
+        let r = bench_with(&spec.name, spec.budget(self.opts.mode), f);
+        let rec = BenchRecord {
+            name: spec.name,
+            scale: spec.scale,
+            dims: spec.dims,
+            seed: spec.seed,
+            iters: r.iters,
+            time: r.time,
+        };
+        println!("{}", rec.summary());
+        self.benches.push(rec.clone());
+        Some(rec)
+    }
+
+    /// Finish the suite, yielding its report.
+    pub fn into_report(self) -> SuiteReport {
+        SuiteReport { name: self.name, benches: self.benches, skipped: self.skipped }
+    }
+}
+
+/// Best-effort git revision for telemetry: `$ASTIR_GIT_REV` override,
+/// else `git rev-parse --short=12 HEAD`, else `None`.
+pub fn git_rev() -> Option<String> {
+    if let Ok(v) = std::env::var("ASTIR_GIT_REV") {
+        if !v.is_empty() {
+            return Some(v);
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+}
+
+/// Benchmark a closure under an explicit [`Budget`].
+pub fn bench_with<F: FnMut()>(name: &str, budget: Budget, mut f: F) -> BenchResult {
+    // Warmup + calibration: find a batch size that runs >= ~1 ms. A zero
+    // warmup (experiment budgets) skips calibration entirely — the single
+    // measured pass must not be preceded by a hidden extra run.
+    let mut batch = 1usize;
+    if budget.warmup > Duration::ZERO {
+        let warm_start = Instant::now();
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let dt = t0.elapsed();
+            if dt >= Duration::from_millis(1) || batch >= 1 << 20 {
+                if warm_start.elapsed() >= budget.warmup {
+                    break;
+                }
+            } else {
+                batch *= 2;
+            }
+            if warm_start.elapsed() >= budget.warmup.max(Duration::from_millis(10)) {
                 break;
             }
-        } else {
-            batch *= 2;
-        }
-        if warm_start.elapsed() >= warmup.max(Duration::from_millis(10)) {
-            break;
         }
     }
 
@@ -84,7 +467,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: Duration, measure: Duration, mut f:
     let mut batch_means: Vec<f64> = Vec::new();
     let mut iters = 0usize;
     let meas_start = Instant::now();
-    while meas_start.elapsed() < measure || batch_means.len() < 3 {
+    while meas_start.elapsed() < budget.measure || batch_means.len() < budget.min_samples {
         let t0 = Instant::now();
         for _ in 0..batch {
             f();
@@ -99,9 +482,14 @@ pub fn bench<F: FnMut()>(name: &str, warmup: Duration, measure: Duration, mut f:
     BenchResult { name: name.to_string(), iters, time: stats(&batch_means) }
 }
 
+/// Benchmark a closure: warm up for `warmup`, then measure for `measure`.
+pub fn bench<F: FnMut()>(name: &str, warmup: Duration, measure: Duration, f: F) -> BenchResult {
+    bench_with(name, Budget { warmup, measure, min_samples: 3 }, f)
+}
+
 /// Default quick bench (0.2 s warmup, 1 s measurement) with printing.
 pub fn quick_bench<F: FnMut()>(name: &str, f: F) -> BenchResult {
-    let r = bench(name, Duration::from_millis(200), Duration::from_secs(1), f);
+    let r = bench_with(name, Budget::micro_full(), f);
     println!("{}", r.summary());
     r
 }
@@ -109,6 +497,79 @@ pub fn quick_bench<F: FnMut()>(name: &str, f: F) -> BenchResult {
 /// Standard header printed by every bench binary.
 pub fn bench_header(title: &str) {
     println!("\n=== {title} ===");
+}
+
+/// One bench's baseline-vs-current delta from [`compare_reports`].
+#[derive(Clone, Debug)]
+pub struct Delta {
+    /// `suite/bench` key.
+    pub name: String,
+    pub base_mean: f64,
+    pub new_mean: f64,
+    /// `new_mean / base_mean` (> 1 means slower than baseline).
+    pub ratio: f64,
+    pub regressed: bool,
+}
+
+/// Outcome of diffing a run against a baseline report.
+#[derive(Clone, Debug, Default)]
+pub struct CompareOutcome {
+    pub deltas: Vec<Delta>,
+    /// Baseline benches absent from the new run (renamed/removed).
+    pub missing_in_new: Vec<String>,
+    /// New benches with no baseline (informational).
+    pub new_only: Vec<String>,
+}
+
+impl CompareOutcome {
+    /// The deltas that exceeded the threshold.
+    pub fn regressions(&self) -> Vec<&Delta> {
+        self.deltas.iter().filter(|d| d.regressed).collect()
+    }
+}
+
+/// Compare `new` against `base`: a bench regresses when its mean time
+/// grows by more than `threshold` (fractional; 0.5 = +50%). Benches are
+/// matched by `suite/bench` name; records without a finite positive mean
+/// (dry runs) are ignored.
+pub fn compare_reports(base: &RunReport, new: &RunReport, threshold: f64) -> CompareOutcome {
+    let index = |r: &RunReport| -> Vec<(String, f64)> {
+        r.suites
+            .iter()
+            .flat_map(|s| {
+                s.benches
+                    .iter()
+                    .map(|b| (format!("{}/{}", s.name, b.name), b.time.mean))
+                    .collect::<Vec<_>>()
+            })
+            .collect()
+    };
+    let base_idx = index(base);
+    let new_idx = index(new);
+    let mut out = CompareOutcome::default();
+    for (name, base_mean) in &base_idx {
+        let Some((_, new_mean)) = new_idx.iter().find(|(n, _)| n == name) else {
+            out.missing_in_new.push(name.clone());
+            continue;
+        };
+        if !(base_mean.is_finite() && *base_mean > 0.0 && new_mean.is_finite()) {
+            continue;
+        }
+        let ratio = new_mean / base_mean;
+        out.deltas.push(Delta {
+            name: name.clone(),
+            base_mean: *base_mean,
+            new_mean: *new_mean,
+            ratio,
+            regressed: ratio > 1.0 + threshold,
+        });
+    }
+    for (name, _) in &new_idx {
+        if !base_idx.iter().any(|(n, _)| n == name) {
+            out.new_only.push(name.clone());
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -143,6 +604,15 @@ mod tests {
     }
 
     #[test]
+    fn once_budget_runs_exactly_once() {
+        let mut calls = 0usize;
+        let r = bench_with("one-shot", Budget::once(), || calls += 1);
+        assert_eq!(calls, 1);
+        assert_eq!(r.iters, 1);
+        assert_eq!(r.time.n, 1);
+    }
+
+    #[test]
     fn human_time_units() {
         assert!(human_time(2.0).ends_with(" s"));
         assert!(human_time(2e-3).ends_with(" ms"));
@@ -156,5 +626,117 @@ mod tests {
             std::hint::black_box(3 + 4);
         });
         assert!(r.summary().contains("xyz"));
+    }
+
+    #[test]
+    fn spec_builders_and_budget_selection() {
+        let spec = BenchSpec::micro("m").dims(10, 4, 2, 1).seed(7);
+        assert_eq!(spec.scale, Scale::Standard);
+        assert_eq!(spec.dims, Some(BenchDims { n: 10, m: 4, b: 2, s: 1 }));
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.budget(Mode::Smoke), Budget::micro_smoke());
+        assert_eq!(spec.budget(Mode::Full), Budget::micro_full());
+        let e = BenchSpec::experiment("e").jumbo();
+        assert_eq!(e.scale, Scale::Jumbo);
+        assert_eq!(e.budget(Mode::Full), Budget::once());
+    }
+
+    #[test]
+    fn suite_filters_and_gates() {
+        let opts = RunOpts {
+            mode: Mode::Smoke,
+            filter: Some("demo/yes".to_string()),
+            skip_jumbo: true,
+            dry_run: false,
+        };
+        let mut suite = Suite::new("demo", &opts);
+        assert!(suite.wants(&BenchSpec::micro("yes_please")));
+        assert!(!suite.wants(&BenchSpec::micro("nope")));
+        assert!(!suite.wants(&BenchSpec::micro("yes_but_jumbo").jumbo()));
+        let mut ran = false;
+        assert!(suite.bench(BenchSpec::micro("nope"), || ran = true).is_none());
+        assert!(!ran);
+        let rec = suite.bench(BenchSpec::experiment("yes_once").seed(3), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(rec.unwrap().seed, 3);
+        let report = suite.into_report();
+        assert_eq!(report.benches.len(), 1);
+        assert_eq!(report.benches[0].name, "yes_once");
+    }
+
+    #[test]
+    fn suite_dry_run_records_specs_without_running() {
+        let opts = RunOpts { mode: Mode::Smoke, filter: None, skip_jumbo: false, dry_run: true };
+        let mut suite = Suite::new("demo", &opts);
+        let mut ran = false;
+        let rec = suite.bench(BenchSpec::micro("a").dims(5, 4, 2, 1), || ran = true);
+        assert!(rec.is_none() && !ran);
+        let report = suite.into_report();
+        assert_eq!(report.benches.len(), 1);
+        assert_eq!(report.benches[0].iters, 0);
+        assert_eq!(report.benches[0].dims, Some(BenchDims { n: 5, m: 4, b: 2, s: 1 }));
+    }
+
+    #[test]
+    fn jumbo_gate_records_skip() {
+        let opts = RunOpts { mode: Mode::Smoke, filter: None, skip_jumbo: true, dry_run: false };
+        let mut suite = Suite::new("demo", &opts);
+        let mut ran = false;
+        assert!(suite.bench(BenchSpec::micro("big").jumbo(), || ran = true).is_none());
+        assert!(!ran);
+        let report = suite.into_report();
+        assert!(report.benches.is_empty());
+        assert_eq!(report.skipped, ["big"]);
+    }
+
+    fn report_with(name: &str, mean: f64) -> RunReport {
+        RunReport {
+            schema: SCHEMA.to_string(),
+            git_rev: None,
+            mode: Mode::Smoke,
+            suites: vec![SuiteReport {
+                name: "s".to_string(),
+                benches: vec![BenchRecord {
+                    name: name.to_string(),
+                    scale: Scale::Standard,
+                    dims: None,
+                    seed: 0,
+                    iters: 10,
+                    time: crate::metrics::stats(&[mean]),
+                }],
+                skipped: Vec::new(),
+            }],
+        }
+    }
+
+    #[test]
+    fn compare_flags_regressions_beyond_threshold() {
+        let base = report_with("k", 1.0);
+        let ok = compare_reports(&base, &report_with("k", 1.2), 0.5);
+        assert_eq!(ok.regressions().len(), 0);
+        assert!((ok.deltas[0].ratio - 1.2).abs() < 1e-12);
+        let bad = compare_reports(&base, &report_with("k", 2.0), 0.5);
+        assert_eq!(bad.regressions().len(), 1);
+        assert!(bad.regressions()[0].regressed);
+    }
+
+    #[test]
+    fn compare_tracks_membership_changes() {
+        let base = report_with("old", 1.0);
+        let new = report_with("new", 1.0);
+        let out = compare_reports(&base, &new, 0.5);
+        assert!(out.deltas.is_empty());
+        assert_eq!(out.missing_in_new, ["s/old"]);
+        assert_eq!(out.new_only, ["s/new"]);
+    }
+
+    #[test]
+    fn mode_and_scale_roundtrip() {
+        assert_eq!(Mode::parse(Mode::Smoke.as_str()), Some(Mode::Smoke));
+        assert_eq!(Mode::parse(Mode::Full.as_str()), Some(Mode::Full));
+        assert_eq!(Mode::parse("nope"), None);
+        assert_eq!(Scale::parse(Scale::Jumbo.as_str()), Some(Scale::Jumbo));
+        assert_eq!(Scale::parse("nope"), None);
     }
 }

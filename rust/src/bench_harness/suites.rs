@@ -1,0 +1,770 @@
+//! The named bench suite registry.
+//!
+//! Every benchmark in the repo is defined here, once, as a function that
+//! registers [`BenchSpec`]s into a [`Suite`]; the `cargo bench` binaries
+//! (`rust/benches/*.rs`) and the `astir bench` CLI both execute suites
+//! from this registry, so a perf number means the same thing however it
+//! was produced. Six suites mirror the historical bench binaries:
+//!
+//! * `hot_path` — kernel microbenches: roofline triad, gemv/proxy
+//!   primitives, top-s + tally ops, full Alg.-2 steps, dense-vs-sparse at
+//!   paper/stress/jumbo scales, contended tally, PJRT artifact path.
+//! * `fig1`, `fig2_upper`, `fig2_lower`, `ablations`, `baselines` —
+//!   the Monte-Carlo figure/ablation regenerators, registered as
+//!   single-pass experiment benches (their trial counts, not repetition,
+//!   supply the averaging) that still emit their `results/` tables.
+//!
+//! Smoke mode shrinks the Monte-Carlo budgets to CI size; full mode keeps
+//! the paper-ish defaults (`ASTIR_BENCH_TRIALS` raises them further).
+//! Jumbo-tagged points are env-gated, see [`Suite::jumbo_gated`].
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::algorithms::StoihtKernel;
+use crate::backend::{Backend, PjrtBackend};
+use crate::config::ExperimentConfig;
+use crate::coordinator::Leader;
+use crate::experiments::{self, Fig2Variant};
+use crate::linalg::{dot, Mat, SparseIterate};
+use crate::metrics::{stats, Table};
+use crate::problem::{Problem, ProblemSpec};
+use crate::report;
+use crate::rng::Rng;
+use crate::sim::{SimOpts, SimOutcome, SpeedSchedule};
+use crate::support::{top_s_into, union};
+use crate::tally::{AtomicTally, TallyWeighting};
+
+use super::{
+    bench_header, git_rev, BenchSpec, Mode, RunOpts, RunReport, Scale, Suite, SuiteReport, SCHEMA,
+};
+
+/// A named, registered suite.
+#[derive(Clone, Copy)]
+pub struct SuiteDef {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub register: fn(&mut Suite),
+}
+
+/// The bench registry, in execution order.
+pub fn registry() -> Vec<SuiteDef> {
+    vec![
+        SuiteDef {
+            name: "hot_path",
+            about: "kernel microbenches (proxy, top-s, tally, dense vs sparse, PJRT)",
+            register: hot_path_suite,
+        },
+        SuiteDef {
+            name: "fig1",
+            about: "Fig. 1 — StoIHT vs oracle-support StoIHT",
+            register: fig1_suite,
+        },
+        SuiteDef {
+            name: "fig2_upper",
+            about: "Fig. 2 upper — steps to exit vs cores, all fast",
+            register: fig2_upper_suite,
+        },
+        SuiteDef {
+            name: "fig2_lower",
+            about: "Fig. 2 lower — steps to exit vs cores, half slow",
+            register: fig2_lower_suite,
+        },
+        SuiteDef {
+            name: "ablations",
+            about: "A1–A4, A6 design-choice ablations",
+            register: ablations_suite,
+        },
+        SuiteDef {
+            name: "baselines",
+            about: "A5 — phase-transition sweep over all solvers",
+            register: baselines_suite,
+        },
+    ]
+}
+
+/// Look up a suite by name.
+pub fn find(name: &str) -> Option<SuiteDef> {
+    registry().into_iter().find(|s| s.name == name)
+}
+
+/// Execute one suite under `opts`.
+pub fn run_suite(def: &SuiteDef, opts: &RunOpts) -> SuiteReport {
+    if !opts.dry_run {
+        bench_header(&format!("suite {} — {}", def.name, def.about));
+    }
+    let mut suite = Suite::new(def.name, opts);
+    (def.register)(&mut suite);
+    suite.into_report()
+}
+
+/// Execute one suite, wrapped as a full telemetry report
+/// (what `BENCH_<suite>.json` holds).
+pub fn run_one(def: &SuiteDef, opts: &RunOpts) -> RunReport {
+    RunReport {
+        schema: SCHEMA.to_string(),
+        git_rev: git_rev(),
+        mode: opts.mode,
+        suites: vec![run_suite(def, opts)],
+    }
+}
+
+/// Execute every registered suite (the `astir bench` path). Per-bench
+/// filtering still applies inside each suite.
+pub fn run_all(opts: &RunOpts) -> RunReport {
+    RunReport {
+        schema: SCHEMA.to_string(),
+        git_rev: git_rev(),
+        mode: opts.mode,
+        suites: registry().iter().map(|d| run_suite(d, opts)).collect(),
+    }
+}
+
+/// Full-mode trial budget: `$ASTIR_BENCH_TRIALS` (default per suite).
+pub fn bench_trials(default_trials: usize) -> usize {
+    std::env::var("ASTIR_BENCH_TRIALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default_trials)
+}
+
+/// Mode-scaled experiment config: full mode keeps the per-suite default
+/// (raised by `ASTIR_BENCH_TRIALS`); smoke shrinks trials and the core
+/// sweep to CI-sized numbers.
+fn experiment_cfg(mode: Mode, full_default_trials: usize, smoke_trials: usize) -> ExperimentConfig {
+    let mut cfg =
+        ExperimentConfig { trials: bench_trials(full_default_trials), ..Default::default() };
+    if mode == Mode::Smoke {
+        cfg.trials = smoke_trials;
+        cfg.cores = vec![1, 4];
+    }
+    cfg
+}
+
+/// Standard banner printed before an experiment suite runs.
+pub fn banner(what: &str, cfg: &ExperimentConfig) {
+    println!("\n################################################################");
+    println!("# {what}");
+    println!(
+        "# n={} m={} b={} s={} gamma={} tol={:.0e} trials={} threads={}",
+        cfg.problem.n,
+        cfg.problem.m,
+        cfg.problem.b,
+        cfg.problem.s,
+        cfg.gamma,
+        cfg.tolerance,
+        cfg.trials,
+        cfg.trial_threads
+    );
+    println!("# (set ASTIR_BENCH_TRIALS=500 for the paper's full budget)");
+    println!("################################################################");
+}
+
+/// Experiment-bench spec carrying the config's dims and seed.
+fn expspec(name: &str, cfg: &ExperimentConfig) -> BenchSpec {
+    BenchSpec::experiment(name)
+        .dims(cfg.problem.n, cfg.problem.m, cfg.problem.b, cfg.problem.s)
+        .seed(cfg.seed)
+}
+
+/// Results-table name for a suite emission. Smoke runs are CI-sized
+/// (trials=2), so their tables get a `smoke_` prefix rather than
+/// clobbering full-budget figure data under `results/`.
+fn results_name(mode: Mode, name: &str) -> String {
+    match mode {
+        Mode::Full => name.to_string(),
+        Mode::Smoke => format!("smoke_{name}"),
+    }
+}
+
+// ---------------------------------------------------------------- hot_path
+
+/// Dense-vs-sparse comparison at one problem scale: the fused proxy kernel
+/// alone, then the full Alg.-2 step (proxy + identify + estimate). The
+/// equivalence suite (`rust/tests/sparse_equivalence.rs`) proves the two
+/// paths produce bit-identical iterates; this measures what sparsity buys.
+fn sparse_vs_dense_at(suite: &mut Suite, label: &str, spec: &ProblemSpec, seed: u64, jumbo: bool) {
+    let mk = |name: &str| {
+        let s = BenchSpec::micro(&format!("{label}_{name}"))
+            .dims(spec.n, spec.m, spec.b, spec.s)
+            .seed(seed);
+        if jumbo {
+            s.jumbo()
+        } else {
+            s
+        }
+    };
+    let specs = [mk("proxy_dense"), mk("proxy_sparse"), mk("step_dense"), mk("step_sparse")];
+    if suite.is_dry_run() {
+        // Listing: register every spec (Suite::bench handles gates)
+        // without paying problem-generation setup.
+        for s in specs {
+            suite.bench(s, || {});
+        }
+        return;
+    }
+    if !specs.iter().any(|s| suite.wants(s)) {
+        // Record the jumbo gate without paying the (~200 MB at n=10^5)
+        // setup; filtered-out points stay silent.
+        for s in &specs {
+            if s.scale == Scale::Jumbo {
+                suite.skip(&s.name, "jumbo scale gated (smoke mode / ASTIR_BENCH_SKIP_JUMBO)");
+            }
+        }
+        return;
+    }
+    bench_header(&format!("sparse fast path — {label} (n={} b={} s={})", spec.n, spec.b, spec.s));
+    let mut rng = Rng::seed_from(seed);
+    let p: Problem = spec.generate(&mut rng);
+
+    // A representative 2s-support iterate (Γ ∪ T̃) and tally estimate.
+    let est: Vec<usize> = {
+        let mut e = rng.subset(spec.n, spec.s);
+        e.sort_unstable();
+        e
+    };
+    let mut warm = StoihtKernel::new(&p, 1.0);
+    let mut x_sparse = SparseIterate::zeros(spec.n);
+    for _ in 0..5 {
+        let b = warm.sample_block(&mut rng);
+        warm.step_sparse(&mut x_sparse, b, Some(&est));
+    }
+    let x_dense: Vec<f64> = x_sparse.to_dense();
+
+    let [pd_spec, ps_spec, sd_spec, ss_spec] = specs;
+
+    // --- fused proxy kernel alone -----------------------------------
+    let (blk, yb) = p.block(0);
+    let mut scratch = vec![0.0; spec.b];
+    let mut out = vec![0.0; spec.n];
+    let dense_proxy = suite.bench(pd_spec, || {
+        blk.proxy_step_into(yb, &x_dense, 1.0, &mut scratch, &mut out);
+        std::hint::black_box(&out);
+    });
+    let supp = x_sparse.support().to_vec();
+    let sparse_proxy = suite.bench(ps_spec, || {
+        blk.proxy_step_sparse_into(
+            &p.a_t,
+            0,
+            yb,
+            x_sparse.values(),
+            &supp,
+            1.0,
+            &mut scratch,
+            &mut out,
+        );
+        std::hint::black_box(&out);
+    });
+    if let (Some(d), Some(s)) = (&dense_proxy, &sparse_proxy) {
+        println!(
+            "  => proxy kernel speedup: {:.2}x (|supp| = {})",
+            d.time.mean / s.time.mean,
+            supp.len()
+        );
+    }
+
+    // --- full Alg.-2 step (proxy + identify + estimate) -------------
+    let mut kd = StoihtKernel::new(&p, 1.0);
+    let mut xd = x_dense.clone();
+    let mut rng_d = Rng::seed_from(seed ^ 0xBEEF);
+    let dense_step = suite.bench(sd_spec, || {
+        let b = kd.sample_block(&mut rng_d);
+        std::hint::black_box(kd.step(&mut xd, b, Some(&est)));
+    });
+    let mut ks = StoihtKernel::new(&p, 1.0);
+    let mut xs = x_sparse.clone();
+    let mut rng_s = Rng::seed_from(seed ^ 0xBEEF);
+    let sparse_step = suite.bench(ss_spec, || {
+        let b = ks.sample_block(&mut rng_s);
+        std::hint::black_box(ks.step_sparse(&mut xs, b, Some(&est)));
+    });
+    if let (Some(d), Some(s)) = (&dense_step, &sparse_step) {
+        println!(
+            "  => full-step speedup: {:.2}x ({} vs {} per iter)",
+            d.time.mean / s.time.mean,
+            super::human_time(d.time.mean),
+            super::human_time(s.time.mean)
+        );
+    }
+}
+
+/// The `hot_path` suite: per-iteration cost centers of the whole stack,
+/// with a STREAM-like roofline measured in the same process.
+///
+/// NOTE: the paper-scale setup below (a ~2.5 MB problem, a few ms) runs
+/// even for dry/filtered invocations — the bench closures must be
+/// constructible so the registered spec list is single-sourced and can
+/// never diverge between listing and measuring. Only genuinely heavy
+/// setup (the 8 MB triad buffers, stress/jumbo problems, worker threads,
+/// PJRT) is gated behind `wants()`/`is_dry_run()`.
+fn hot_path_suite(suite: &mut Suite) {
+    let spec = ProblemSpec::paper();
+    let mut rng = Rng::seed_from(1);
+    let p = spec.generate(&mut rng);
+    let x: Vec<f64> = (0..spec.n).map(|_| rng.gauss() * 0.1).collect();
+
+    // --- memory roofline (in-process STREAM-like triad) -------------
+    // Triad a[i] = b[i] + s*c[i] over an 8 MB working set.
+    let mut triad_bw = None;
+    let triad_spec = BenchSpec::micro("triad_1m").seed(0);
+    if suite.wants(&triad_spec) && !suite.is_dry_run() {
+        let nn = 1 << 20;
+        let bsrc: Vec<f64> = (0..nn).map(|i| i as f64).collect();
+        let csrc: Vec<f64> = (0..nn).map(|i| (i * 7) as f64).collect();
+        let mut asink = vec![0.0f64; nn];
+        let triad = suite.bench(triad_spec, || {
+            for (a, (b, c)) in asink.iter_mut().zip(bsrc.iter().zip(&csrc)) {
+                *a = b + 0.5 * c;
+            }
+            std::hint::black_box(&asink);
+        });
+        if let Some(t) = triad {
+            let bw = 24e6 / t.time.mean / 1e9; // GB/s (3 streams x 8 B x 1M)
+            println!("  => sustainable bandwidth ≈ {bw:.1} GB/s");
+            triad_bw = Some(bw);
+        }
+    } else {
+        suite.bench(triad_spec, || {});
+    }
+
+    // --- linalg primitives (paper shape) ----------------------------
+    let blk_rows = spec.b;
+    let a_blk =
+        Mat::<f64>::from_fn(blk_rows, spec.n, |i, j| ((i * spec.n + j) as f64 * 0.37).sin());
+    let yv: Vec<f64> = (0..blk_rows).map(|i| i as f64 * 0.1).collect();
+    let mut scratch = vec![0.0; blk_rows];
+    let mut out = vec![0.0; spec.n];
+    let dims = |s: BenchSpec| s.dims(spec.n, spec.m, spec.b, spec.s).seed(1);
+    suite.bench(dims(BenchSpec::micro("dot_n1000")), || {
+        std::hint::black_box(dot(&x, &out));
+    });
+    suite.bench(dims(BenchSpec::micro("gemv_15x1000")), || {
+        a_blk.as_block().gemv_into(&x, &mut scratch);
+        std::hint::black_box(&scratch);
+    });
+    let proxy = suite.bench(dims(BenchSpec::micro("proxy_fused_15x1000")), || {
+        a_blk.as_block().proxy_step_into(&yv, &x, 1.0, &mut scratch, &mut out);
+        std::hint::black_box(&out);
+    });
+    if let (Some(pr), Some(bw)) = (&proxy, triad_bw) {
+        // Proxy traffic: A streamed twice (2 * 15k * 8 B) + vectors.
+        let traffic = (2 * blk_rows * spec.n + 4 * spec.n + 2 * blk_rows) as f64 * 8.0;
+        println!(
+            "  => proxy streams {:.0} KB/iter at {:.1} GB/s ({:.0}% of triad roofline)",
+            traffic / 1e3,
+            traffic / pr.time.mean / 1e9,
+            100.0 * (traffic / pr.time.mean / 1e9) / bw
+        );
+    }
+
+    // --- support + tally ops ----------------------------------------
+    let v: Vec<f64> = (0..spec.n).map(|i| ((i * 31 % 97) as f64) - 48.0).collect();
+    let mut idx_scratch = Vec::new();
+    let mut sel = vec![0usize; spec.s];
+    suite.bench(dims(BenchSpec::micro("top_s_quickselect")), || {
+        top_s_into(&v, spec.s, &mut idx_scratch, &mut sel);
+        std::hint::black_box(&sel);
+    });
+    let tally = AtomicTally::new(spec.n, TallyWeighting::Progress);
+    let gamma: Vec<usize> = (0..spec.s).map(|k| k * 37 % spec.n).collect();
+    let mut sorted_gamma = gamma.clone();
+    sorted_gamma.sort_unstable();
+    suite.bench(dims(BenchSpec::micro("tally_commit")), || {
+        tally.commit(&sorted_gamma, &sorted_gamma, 7);
+    });
+    let mut tally_scratch = Vec::new();
+    suite.bench(dims(BenchSpec::micro("tally_estimate")), || {
+        std::hint::black_box(tally.estimate(spec.s, &mut tally_scratch));
+    });
+
+    // --- full StoIHT iteration (native) -----------------------------
+    let mut kernel = StoihtKernel::new(&p, 1.0);
+    let mut xi = vec![0.0f64; spec.n];
+    let mut block_rng = Rng::seed_from(3);
+    let mut est_sorted: Vec<usize> = (0..spec.s).map(|k| k * 17 % spec.n).collect();
+    est_sorted.sort_unstable();
+    est_sorted.dedup();
+    suite.bench(dims(BenchSpec::micro("full_step_sparse_exit")).seed(3), || {
+        let b = kernel.sample_block(&mut block_rng);
+        let gamma = kernel.step(&mut xi, b, Some(&est_sorted)).to_vec();
+        let supp = union(&gamma, &est_sorted);
+        std::hint::black_box(p.residual_norm_sparse(&xi, &supp));
+    });
+    suite.bench(dims(BenchSpec::micro("residual_dense")).seed(3), || {
+        std::hint::black_box(p.residual_norm(&xi));
+    });
+
+    // --- dense vs sparse in the s ≪ n regime the paper targets ------
+    sparse_vs_dense_at(suite, "paper", &ProblemSpec::paper(), 11, false);
+    sparse_vs_dense_at(
+        suite,
+        "stress",
+        &ProblemSpec { n: 10_000, m: 300, b: 15, s: 20, ..ProblemSpec::paper() },
+        12,
+        false,
+    );
+    sparse_vs_dense_at(
+        suite,
+        "jumbo",
+        &ProblemSpec { n: 100_000, m: 120, b: 15, s: 50, ..ProblemSpec::paper() },
+        13,
+        true,
+    );
+
+    // --- atomic tally under contention (8 threads) ------------------
+    let contended_spec = dims(BenchSpec::micro("tally_commit_contended")).seed(0);
+    if suite.wants(&contended_spec) && !suite.is_dry_run() {
+        let shared = Arc::new(AtomicTally::new(spec.n, TallyWeighting::Progress));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::new();
+        for w in 0..7 {
+            let shared = Arc::clone(&shared);
+            let stop = Arc::clone(&stop);
+            handles.push(std::thread::spawn(move || {
+                let mut r = Rng::seed_from(w);
+                let mut prev: Vec<usize> = Vec::new();
+                let mut t = 1u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let mut g = r.subset(1000, 20);
+                    g.sort_unstable();
+                    shared.commit(&g, &prev, t);
+                    prev = g;
+                    t += 1;
+                }
+            }));
+        }
+        let res = suite.bench(contended_spec, || {
+            shared.commit(&sorted_gamma, &sorted_gamma, 9);
+        });
+        stop.store(true, Ordering::Relaxed);
+        for h in handles {
+            h.join().unwrap();
+        }
+        if let Some(r) = res {
+            println!("  => contended commit {}", super::human_time(r.time.mean));
+        }
+    } else {
+        suite.bench(contended_spec, || {});
+    }
+
+    // --- PJRT artifact path (needs `make artifacts`) ----------------
+    let tiny_spec = BenchSpec::micro("pjrt_stoiht_step_tiny").dims(32, 16, 4, 3).seed(2);
+    let paper_spec = BenchSpec::micro("pjrt_stoiht_step_paper").dims(1000, 300, 15, 20).seed(3);
+    if suite.is_dry_run() {
+        suite.bench(tiny_spec, || {});
+        suite.bench(paper_spec, || {});
+    } else if suite.wants(&tiny_spec) || suite.wants(&paper_spec) {
+        match PjrtBackend::from_default_dir() {
+            Ok(mut be) => {
+                let tiny = ProblemSpec::tiny().generate(&mut Rng::seed_from(2));
+                let xt = vec![0.0f64; tiny.spec.n];
+                let mask = vec![0.0f64; tiny.spec.n];
+                // warm the executable cache outside the timer
+                let _ = be.stoiht_step(&tiny, 0, &xt, 1.0, &mask).unwrap();
+                suite.bench(tiny_spec, || {
+                    std::hint::black_box(be.stoiht_step(&tiny, 0, &xt, 1.0, &mask).unwrap());
+                });
+                let paper = spec.generate(&mut Rng::seed_from(3));
+                let xp = vec![0.0f64; spec.n];
+                let maskp = vec![0.0f64; spec.n];
+                let _ = be.stoiht_step(&paper, 0, &xp, 1.0, &maskp).unwrap();
+                suite.bench(paper_spec, || {
+                    std::hint::black_box(be.stoiht_step(&paper, 0, &xp, 1.0, &maskp).unwrap());
+                });
+            }
+            Err(e) => {
+                let why = format!("PJRT unavailable: {e}");
+                suite.skip(&tiny_spec.name, &why);
+                suite.skip(&paper_spec.name, &why);
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ experiments
+
+/// Fig. 1 — mean recovery error vs iteration, plus the paper's headline
+/// iteration-count claims at the 1e-5 error level.
+fn fig1_suite(suite: &mut Suite) {
+    let cfg = experiment_cfg(suite.mode(), 25, 2);
+    let spec = expspec("mean_error_series", &cfg);
+    if !suite.wants(&spec) {
+        return;
+    }
+    if !suite.is_dry_run() {
+        banner("Fig. 1 — mean recovery error vs iteration", &cfg);
+    }
+    let mut result = None;
+    suite.bench(spec, || result = Some(experiments::fig1(&cfg)));
+    let Some(out) = result else { return };
+    let table = out.series;
+
+    // Thin for the terminal; full series + summary to results/.
+    let thin = table.thinned(100);
+    let mode = suite.mode();
+    report::emit(&results_name(mode, "fig1"), "Fig. 1 (every 100th iteration)", &thin);
+    report::emit(&results_name(mode, "fig1_full"), "Fig. 1 full series", &table);
+    report::emit(
+        &results_name(mode, "fig1_summary"),
+        "Fig. 1 per-variant convergence (variant 0=stoiht, 1..=alpha 0,.25,.5,.75,1)",
+        &out.summary,
+    );
+
+    // Quantified paper claims at the 1e-5 error level.
+    let thr = 1e-5;
+    let std_it = experiments::fig1::iters_to_threshold(&table, 1, thr);
+    println!("\niterations to mean error < {thr:.0e}:");
+    let labels = ["stoiht", "alpha=0", "alpha=.25", "alpha=.5", "alpha=.75", "alpha=1"];
+    for (k, label) in labels.iter().enumerate() {
+        match experiments::fig1::iters_to_threshold(&table, k + 1, thr) {
+            Some(it) => println!("  {label:>9}: {it}"),
+            None => println!("  {label:>9}: (not reached)"),
+        }
+    }
+    if let (Some(s), Some(a1)) = (std_it, experiments::fig1::iters_to_threshold(&table, 6, thr)) {
+        println!(
+            "\npaper claim `alpha=1 needs ~half the iterations`: ratio = {:.2}",
+            a1 as f64 / s as f64
+        );
+    }
+}
+
+/// Shared Fig.-2 driver: one experiment bench per panel.
+fn fig2_suite(suite: &mut Suite, variant: Fig2Variant, emit_name: &str, what: &str) {
+    let mut cfg = experiment_cfg(suite.mode(), 30, 2);
+    if matches!(variant, Fig2Variant::Lower { .. }) && !cfg.cores.contains(&2) {
+        // The paper's lower panel headline is "no gain at c = 2".
+        cfg.cores.push(2);
+        cfg.cores.sort_unstable();
+    }
+    let spec = expspec("steps_vs_cores", &cfg);
+    if !suite.wants(&spec) {
+        return;
+    }
+    if !suite.is_dry_run() {
+        banner(what, &cfg);
+    }
+    let mut result = None;
+    suite.bench(spec, || result = Some(experiments::fig2(&cfg, variant)));
+    let Some(table) = result else { return };
+    report::emit(&results_name(suite.mode(), emit_name), variant.label(), &table);
+
+    let std_mean = table.rows[0][4];
+    println!("\nstandard StoIHT line: {std_mean:.0} steps");
+    for row in &table.rows {
+        println!(
+            "  c={:<3} async {:6.0} ± {:4.0}  ({:4.2}x vs standard, conv {:.0}%)",
+            row[0],
+            row[1],
+            row[2],
+            std_mean / row[1],
+            100.0 * row[3]
+        );
+    }
+}
+
+fn fig2_upper_suite(suite: &mut Suite) {
+    fig2_suite(
+        suite,
+        Fig2Variant::Upper,
+        "fig2_upper",
+        "Fig. 2 upper — steps to exit vs cores (all fast)",
+    );
+}
+
+fn fig2_lower_suite(suite: &mut Suite) {
+    fig2_suite(
+        suite,
+        Fig2Variant::Lower { period: 4 },
+        "fig2_lower",
+        "Fig. 2 lower — half the cores slow (period 4)",
+    );
+    if !suite.is_dry_run() {
+        println!("\npaper claim: c=2 ⇒ no improvement; larger c ⇒ improvement.");
+    }
+}
+
+/// Ablations A1–A4 + A6, each its own filterable bench.
+fn ablations_suite(suite: &mut Suite) {
+    let cfg = experiment_cfg(suite.mode(), 15, 2);
+    let mode = suite.mode();
+    if !suite.is_dry_run() {
+        banner("Ablations A1–A4, A6", &cfg);
+    }
+
+    let mut t1 = None;
+    suite.bench(expspec("tally_vs_shared_x", &cfg), || {
+        t1 = Some(experiments::tally_vs_shared_x(&cfg));
+    });
+    if let Some(t) = t1 {
+        report::emit(
+            &results_name(mode, "ablation_tally_vs_shared_x"),
+            "A1: tally vs HOGWILD!-style shared x (half-slow schedule)",
+            &t,
+        );
+        report::note(
+            "paper §I: with dense cost functions, sharing x lets slow cores undo progress;",
+        );
+        report::note("sharing the passively-read tally is robust. Compare the *_conv columns.");
+    }
+
+    let mut t2 = None;
+    suite.bench(expspec("inconsistent_reads", &cfg), || {
+        t2 = Some(experiments::inconsistent_reads(&cfg));
+    });
+    if let Some(t) = t2 {
+        report::emit(
+            &results_name(mode, "ablation_inconsistent_reads"),
+            "A2: per-coordinate stale-read probability",
+            &t,
+        );
+    }
+
+    let mut t3 = None;
+    suite.bench(expspec("weighting", &cfg), || {
+        t3 = Some(experiments::tally_weighting(&cfg));
+    });
+    if let Some(t) = t3 {
+        report::emit(
+            &results_name(mode, "ablation_weighting"),
+            "A3: tally weighting schemes (half-slow schedule)",
+            &t,
+        );
+        report::note(
+            "paper Alg. 2 weights votes by local iteration (+t/−(t−1)) so fast cores dominate.",
+        );
+    }
+
+    let sizes: &[usize] =
+        if suite.mode() == Mode::Smoke { &[15, 50] } else { &[5, 10, 15, 25, 50, 75] };
+    let mut t4 = None;
+    suite.bench(expspec("block_size", &cfg), || {
+        t4 = Some(experiments::block_size_sweep(&cfg, sizes));
+    });
+    if let Some(t) = t4 {
+        report::emit(
+            &results_name(mode, "ablation_block_size"),
+            "A4: StoIHT iterations vs block size b (m = 300)",
+            &t,
+        );
+    }
+
+    let mut t6 = None;
+    suite.bench(expspec("self_exclusion", &cfg), || {
+        let leader = Leader::new(cfg.clone());
+        let mut table = Table::new(&[
+            "cores",
+            "literal_mean",
+            "literal_conv",
+            "selfexcl_mean",
+            "selfexcl_conv",
+        ]);
+        for &c in &cfg.cores {
+            let lit = leader.monte_carlo_sim(
+                c,
+                &SpeedSchedule::AllFast,
+                &SimOpts { max_steps: cfg.max_iters, ..Default::default() },
+            );
+            let sx = leader.monte_carlo_sim(
+                c,
+                &SpeedSchedule::AllFast,
+                &SimOpts { max_steps: cfg.max_iters, self_exclude: true, ..Default::default() },
+            );
+            let mean = |o: &[SimOutcome]| {
+                stats(&o.iter().map(|x| x.steps as f64).collect::<Vec<_>>()).mean
+            };
+            let conv =
+                |o: &[SimOutcome]| o.iter().filter(|x| x.converged).count() as f64 / o.len() as f64;
+            table.push_row(vec![c as f64, mean(&lit), conv(&lit), mean(&sx), conv(&sx)]);
+        }
+        t6 = Some(table);
+    });
+    if let Some(t) = t6 {
+        report::emit(
+            &results_name(mode, "ablation_self_exclusion"),
+            "A6: literal Alg. 2 vs self-excluding tally reads",
+            &t,
+        );
+        report::note(
+            "self-exclusion makes c=1 degenerate exactly to Alg. 1, removing the small-c penalty.",
+        );
+    }
+}
+
+/// A5 — baseline phase-transition sweep over all five solvers.
+fn baselines_suite(suite: &mut Suite) {
+    let mut cfg = experiment_cfg(suite.mode(), 15, 3);
+    // Phase transitions are the expensive sweep (5 solvers x trials x m).
+    cfg.trials = cfg.trials.min(50);
+    let ms: &[usize] =
+        if suite.mode() == Mode::Smoke { &[120, 300] } else { &[60, 90, 120, 150, 180, 240, 300] };
+    let spec = expspec("phase_transition", &cfg);
+    if !suite.wants(&spec) {
+        return;
+    }
+    if !suite.is_dry_run() {
+        banner("A5 — success rate vs m (phase transition)", &cfg);
+    }
+    let mut result = None;
+    suite.bench(spec, || result = Some(experiments::phase_transition(&cfg, ms)));
+    let Some(table) = result else { return };
+    report::emit(
+        &results_name(suite.mode(), "baselines_phase_transition"),
+        "A5: success rate vs m",
+        &table,
+    );
+    report::note("success = relative recovery error < 1e-4; n=1000, s=20, Gaussian ensemble");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_complete() {
+        let names: Vec<&str> = registry().iter().map(|d| d.name).collect();
+        assert_eq!(
+            names,
+            ["hot_path", "fig1", "fig2_upper", "fig2_lower", "ablations", "baselines"]
+        );
+        for n in &names {
+            assert!(find(n).is_some());
+        }
+        assert!(find("nope").is_none());
+    }
+
+    #[test]
+    fn dry_run_registers_specs_for_every_suite() {
+        let opts = RunOpts { mode: Mode::Smoke, filter: None, skip_jumbo: true, dry_run: true };
+        let report = run_all(&opts);
+        assert_eq!(report.schema, SCHEMA);
+        assert_eq!(report.suites.len(), 6);
+        for s in &report.suites {
+            assert!(
+                !s.benches.is_empty() || !s.skipped.is_empty(),
+                "suite {} registered nothing",
+                s.name
+            );
+        }
+        // the registry's microbench core is present
+        let hot = &report.suites[0];
+        let names: Vec<&str> = hot.benches.iter().map(|b| b.name.as_str()).collect();
+        for expected in ["triad_1m", "proxy_fused_15x1000", "paper_step_sparse", "tally_commit"] {
+            assert!(names.contains(&expected), "missing {expected} in {names:?}");
+        }
+    }
+
+    #[test]
+    fn filter_narrows_to_one_bench() {
+        let opts = RunOpts {
+            mode: Mode::Smoke,
+            filter: Some("hot_path/tally_commit_contended".to_string()),
+            skip_jumbo: true,
+            dry_run: true,
+        };
+        let report = run_all(&opts);
+        let total: usize = report.suites.iter().map(|s| s.benches.len()).sum();
+        assert_eq!(total, 1);
+        assert_eq!(report.suites[0].benches[0].name, "tally_commit_contended");
+    }
+}

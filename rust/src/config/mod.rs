@@ -65,10 +65,18 @@ impl ExperimentConfig {
             match key.as_str() {
                 "gamma" => cfg.gamma = value.as_f64().ok_or("gamma must be a number")?,
                 "tolerance" => cfg.tolerance = value.as_f64().ok_or("tolerance must be a number")?,
-                "max_iters" => cfg.max_iters = value.as_usize().ok_or("max_iters must be a positive integer")?,
-                "trials" => cfg.trials = value.as_usize().ok_or("trials must be a positive integer")?,
+                "max_iters" => {
+                    cfg.max_iters =
+                        value.as_usize().ok_or("max_iters must be a positive integer")?
+                }
+                "trials" => {
+                    cfg.trials = value.as_usize().ok_or("trials must be a positive integer")?
+                }
                 "seed" => cfg.seed = value.as_u64().ok_or("seed must be a nonnegative integer")?,
-                "trial_threads" => cfg.trial_threads = value.as_usize().ok_or("trial_threads must be a positive integer")?,
+                "trial_threads" => {
+                    cfg.trial_threads =
+                        value.as_usize().ok_or("trial_threads must be a positive integer")?
+                }
                 "cores" => {
                     cfg.cores = value
                         .as_array()
@@ -88,14 +96,18 @@ impl ExperimentConfig {
                 "m" => p.m = value.as_usize().ok_or("problem.m must be a positive integer")?,
                 "b" => p.b = value.as_usize().ok_or("problem.b must be a positive integer")?,
                 "s" => p.s = value.as_usize().ok_or("problem.s must be a positive integer")?,
-                "noise_std" => p.noise_std = value.as_f64().ok_or("problem.noise_std must be a number")?,
+                "noise_std" => {
+                    p.noise_std = value.as_f64().ok_or("problem.noise_std must be a number")?
+                }
                 "ensemble" => {
                     let s = value.as_str().ok_or("problem.ensemble must be a string")?;
-                    p.ensemble = Ensemble::parse(s).ok_or_else(|| format!("unknown ensemble `{s}`"))?;
+                    p.ensemble =
+                        Ensemble::parse(s).ok_or_else(|| format!("unknown ensemble `{s}`"))?;
                 }
                 "signal" => {
                     let s = value.as_str().ok_or("problem.signal must be a string")?;
-                    p.signal = SignalModel::parse(s).ok_or_else(|| format!("unknown signal model `{s}`"))?;
+                    p.signal =
+                        SignalModel::parse(s).ok_or_else(|| format!("unknown signal model `{s}`"))?;
                 }
                 other => return Err(format!("unknown problem key `{other}`")),
             }

@@ -1,0 +1,158 @@
+//! Crate-local error type — the stand-in for `anyhow` in this offline,
+//! zero-dependency build.
+//!
+//! The surface mirrors the subset of `anyhow` the crate actually uses:
+//! a string-backed [`Error`], a [`Result`] alias with a defaulted error
+//! parameter, a [`Context`] extension trait for prefixing errors, and the
+//! [`err!`](crate::err)/[`bail!`](crate::bail) constructor macros. Keeping
+//! the same call-site shapes means the PJRT feature code (which is only
+//! compiled with `--features pjrt`) did not have to change its error
+//! handling when the dependency was dropped.
+
+use std::fmt;
+
+/// A string-backed error with optional context prefixes.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Error { msg: msg.to_string() }
+    }
+
+    /// Prefix the error with a context line (`context: original`).
+    pub fn context(self, ctx: impl fmt::Display) -> Self {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Debug mirrors Display so `fn main() -> Result<()>` prints the message,
+// not a struct dump.
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::msg(e)
+    }
+}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Self {
+        Error { msg }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Self {
+        Error { msg: msg.to_string() }
+    }
+}
+
+/// Crate-wide result alias (error type defaults to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding context prefixes to any displayable error.
+pub trait Context<T> {
+    /// Wrap the error as `ctx: original`.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+
+    /// Like [`Context::context`], with the prefix built lazily.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Construct an [`Error`] from a format string (the offline `anyhow!`).
+/// Like `anyhow!`, a single non-literal expression is taken as a
+/// displayable message, not a format string — `err!(UNAVAILABLE)` works.
+#[macro_export]
+macro_rules! err {
+    ($msg:literal $(,)?) => {
+        $crate::error::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::error::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::error::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("boom {}", 42)
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let e = err!("x = {}", 7);
+        assert_eq!(e.to_string(), "x = 7");
+        assert_eq!(fails().unwrap_err().to_string(), "boom 42");
+        // bare literal (with inline capture) and bare non-literal expression
+        let n = 3;
+        assert_eq!(err!("n = {n}").to_string(), "n = 3");
+        const MSG: &str = "const message";
+        assert_eq!(err!(MSG).to_string(), "const message");
+        fn const_bail() -> Result<()> {
+            bail!(MSG)
+        }
+        assert_eq!(const_bail().unwrap_err().to_string(), "const message");
+    }
+
+    #[test]
+    fn context_prefixes() {
+        let r: std::result::Result<(), String> = Err("inner".to_string());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let r: std::result::Result<(), String> = Err("inner".to_string());
+        let e = r.with_context(|| format!("outer {}", 2)).unwrap_err();
+        assert_eq!(e.to_string(), "outer 2: inner");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn read() -> Result<String> {
+            Ok(std::fs::read_to_string("/nonexistent/astir/x")?)
+        }
+        assert!(read().is_err());
+    }
+
+    #[test]
+    fn debug_matches_display() {
+        let e = Error::msg("plain");
+        assert_eq!(format!("{e:?}"), format!("{e}"));
+    }
+}

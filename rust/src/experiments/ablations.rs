@@ -25,7 +25,8 @@ pub fn tally_vs_shared_x(cfg: &ExperimentConfig) -> Table {
     // Slow cores make the overwrite hazard visible (paper's motivation).
     let schedule = SpeedSchedule::HalfSlow { period: 4 };
 
-    let mut table = Table::new(&["cores", "tally_mean", "tally_conv", "sharedx_mean", "sharedx_conv"]);
+    let mut table =
+        Table::new(&["cores", "tally_mean", "tally_conv", "sharedx_mean", "sharedx_conv"]);
     for &c in &cfg.cores {
         let tally = leader.monte_carlo_sim(c, &schedule, &mk_opts(SharingMode::Tally));
         let shared = leader.monte_carlo_sim(c, &schedule, &mk_opts(SharingMode::SharedX));

@@ -36,8 +36,9 @@
 //! | [`config`] | TOML-subset config parser + experiment configs |
 //! | [`metrics`] | convergence traces, trial statistics, CSV/JSON output |
 //! | [`experiments`] | drivers regenerating every figure in the paper |
-//! | [`report`] | text/CSV rendering of experiment outputs |
-//! | [`bench_harness`] | the in-repo micro-benchmark harness (no criterion offline) |
+//! | [`report`] | text/CSV/JSON rendering of experiment outputs |
+//! | [`bench_harness`] | bench suite registry, timing harness, JSON perf telemetry |
+//! | [`error`] | zero-dependency error type (`anyhow` stand-in) |
 //! | [`testutil`] | mini property-testing framework used by unit tests |
 
 pub mod algorithms;
@@ -46,6 +47,7 @@ pub mod backend;
 pub mod bench_harness;
 pub mod config;
 pub mod coordinator;
+pub mod error;
 pub mod experiments;
 pub mod linalg;
 pub mod metrics;
@@ -59,7 +61,7 @@ pub mod tally;
 pub mod testutil;
 
 /// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = error::Result<T>;
 
 /// Version string reported by the CLI.
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -500,7 +500,8 @@ mod tests {
         let (m, n, b) = (12usize, 9usize, 4usize);
         let a = Mat::<f64>::from_fn(m, n, |i, j| ((i * n + j) as f64 * 0.29).sin());
         let a_t = Mat::<f64>::from_fn(n, m, |i, j| a.get(j, i));
-        let supports: [&[usize]; 5] = [&[], &[0], &[2, 5, 8], &[0, 1, 2, 3, 4, 5, 6, 7, 8], &[7, 8]];
+        let supports: [&[usize]; 5] =
+            [&[], &[0], &[2, 5, 8], &[0, 1, 2, 3, 4, 5, 6, 7, 8], &[7, 8]];
         for (k, supp) in supports.iter().enumerate() {
             let mut x = vec![0.0f64; n];
             for (q, &j) in supp.iter().enumerate() {
@@ -540,7 +541,11 @@ mod tests {
         let (n, b) = (2500usize, 3usize);
         let a = Mat::<f64>::from_fn(b, n, |i, j| ((i * n + j) as f64 * 0.013).sin());
         let a_t = Mat::<f64>::from_fn(n, b, |i, j| a.get(j, i));
-        let supp: Vec<usize> = (0..20).map(|k| k * 117 % n).collect::<std::collections::BTreeSet<_>>().into_iter().collect();
+        let supp: Vec<usize> = (0..20)
+            .map(|k| k * 117 % n)
+            .collect::<std::collections::BTreeSet<_>>()
+            .into_iter()
+            .collect();
         let mut x = vec![0.0f64; n];
         for (q, &j) in supp.iter().enumerate() {
             x[j] = (q as f64 * 0.7).sin() + 0.1;

@@ -9,6 +9,8 @@
 //! astir fig2 --schedule half-slow    # Fig. 2 lower
 //! astir ablation tally-vs-shared-x | inconsistent-reads | weighting | block-size
 //! astir baselines                    # A5 phase-transition sweep
+//! astir bench --smoke --json out.json  # bench registry + JSON telemetry
+//! astir bench --compare baseline.json  # fail on perf regressions
 //! astir run --alg stoiht             # one solve, native backend
 //! astir run --alg stoiht --backend pjrt
 //! astir async --cores 8              # real-thread asynchronous StoIHT
@@ -24,6 +26,10 @@ use std::process::ExitCode;
 use astir::algorithms::{self, GreedyOpts};
 use astir::async_runtime::{run_async, AsyncOpts};
 use astir::backend::{Backend, NativeBackend, PjrtBackend};
+use astir::bench_harness::{
+    compare_reports, human_time, json as bench_json, suites, Mode, RunOpts,
+    DEFAULT_REGRESSION_THRESHOLD,
+};
 use astir::config::ExperimentConfig;
 use astir::experiments::{self, Fig2Variant};
 use astir::report;
@@ -47,7 +53,12 @@ fn run(args: Vec<String>) -> Result<(), String> {
         print_usage();
         return Ok(());
     };
-    let mut flags = Flags::parse(rest)?;
+    let mut flags = Flags::parse(rest);
+    if cmd == "bench" {
+        // The bench registry builds its own mode-scaled configs; the
+        // common experiment flags below do not apply.
+        return bench_cmd(&mut flags);
+    }
     let cfg = load_config(&mut flags)?;
 
     match cmd.as_str() {
@@ -60,7 +71,8 @@ fn run(args: Vec<String>) -> Result<(), String> {
                 cfg.gamma, cfg.tolerance, cfg.trials
             );
             let out = experiments::fig1(&cfg);
-            report::emit("fig1", "mean recovery error vs iteration (thinned)", &summarize_fig1(&out.series));
+            let thinned = summarize_fig1(&out.series);
+            report::emit("fig1", "mean recovery error vs iteration (thinned)", &thinned);
             report::emit("fig1_full", "full per-iteration series", &out.series);
             report::emit("fig1_summary", "per-variant convergence summary", &out.summary);
         }
@@ -74,13 +86,14 @@ fn run(args: Vec<String>) -> Result<(), String> {
             };
             println!("Fig. 2 — time steps to exit vs cores ({})", variant.label());
             let table = experiments::fig2(&cfg, variant);
-            let name = if matches!(variant, Fig2Variant::Upper) { "fig2_upper" } else { "fig2_lower" };
+            let name =
+                if matches!(variant, Fig2Variant::Upper) { "fig2_upper" } else { "fig2_lower" };
             report::emit(name, variant.label(), &table);
         }
         "ablation" => {
             let mut which = flags.take("name")?;
             if which.is_none() {
-                which = flags.positional.pop();
+                which = flags.take_positional();
             }
             flags.finish()?;
             match which.as_deref() {
@@ -146,47 +159,184 @@ fn run(args: Vec<String>) -> Result<(), String> {
     Ok(())
 }
 
-/// Flag parser: `--key value` pairs plus positionals.
+/// Flag parser: `--key value` pairs, boolean `--key` switches, and
+/// positionals, consumed by the subcommand and then checked empty.
 struct Flags {
-    pairs: Vec<(String, String)>,
-    positional: Vec<String>,
+    args: Vec<String>,
 }
 
 impl Flags {
-    fn parse(args: &[String]) -> Result<Self, String> {
-        let mut pairs = Vec::new();
-        let mut positional = Vec::new();
-        let mut it = args.iter();
-        while let Some(a) = it.next() {
-            if let Some(key) = a.strip_prefix("--") {
-                let value = it
-                    .next()
-                    .ok_or_else(|| format!("flag --{key} needs a value"))?
-                    .clone();
-                pairs.push((key.to_string(), value));
-            } else {
-                positional.push(a.clone());
-            }
-        }
-        Ok(Flags { pairs, positional })
+    fn parse(args: &[String]) -> Self {
+        Flags { args: args.to_vec() }
     }
 
-    /// Remove and return a flag's value.
+    /// Remove `--key <value>` and return the value.
     fn take(&mut self, key: &str) -> Result<Option<String>, String> {
-        let idx = self.pairs.iter().position(|(k, _)| k == key);
-        Ok(idx.map(|i| self.pairs.remove(i).1))
+        let Some(i) = self.args.iter().position(|a| a == &format!("--{key}")) else {
+            return Ok(None);
+        };
+        if i + 1 >= self.args.len() || self.args[i + 1].starts_with("--") {
+            return Err(format!("flag --{key} needs a value"));
+        }
+        self.args.remove(i);
+        Ok(Some(self.args.remove(i)))
+    }
+
+    /// Remove a boolean `--key` switch, returning whether it was present.
+    fn take_bool(&mut self, key: &str) -> bool {
+        match self.args.iter().position(|a| a == &format!("--{key}")) {
+            Some(i) => {
+                self.args.remove(i);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Remove and return the first positional (non-`--`) argument.
+    fn take_positional(&mut self) -> Option<String> {
+        let i = self.args.iter().position(|a| !a.starts_with("--"))?;
+        Some(self.args.remove(i))
     }
 
     /// Error on any unconsumed flag/positional.
     fn finish(&mut self) -> Result<(), String> {
-        if let Some((k, _)) = self.pairs.first() {
-            return Err(format!("unknown flag --{k}"));
+        match self.args.first() {
+            Some(a) if a.starts_with("--") => Err(format!("unknown flag {a}")),
+            Some(a) => Err(format!("unexpected argument `{a}`")),
+            None => Ok(()),
         }
-        if let Some(p) = self.positional.first() {
-            return Err(format!("unexpected argument `{p}`"));
-        }
-        Ok(())
     }
+}
+
+/// `astir bench`: run the suite registry with filtering, mode selection,
+/// JSON telemetry, and baseline regression comparison.
+fn bench_cmd(flags: &mut Flags) -> Result<(), String> {
+    let filter = flags.take("filter")?;
+    let smoke = flags.take_bool("smoke");
+    let list = flags.take_bool("list");
+    let json = flags.take("json")?;
+    let compare = flags.take("compare")?;
+    let threshold = match flags.take("threshold")? {
+        Some(v) => v.parse::<f64>().map_err(|e| format!("--threshold: {e}"))?,
+        None => DEFAULT_REGRESSION_THRESHOLD,
+    };
+    if !(threshold.is_finite() && threshold >= 0.0) {
+        return Err(format!("--threshold must be a nonnegative fraction, got {threshold}"));
+    }
+    flags.finish()?;
+
+    let mode = if smoke { Mode::Smoke } else { Mode::Full };
+    if list && (json.is_some() || compare.is_some()) {
+        return Err("--list cannot be combined with --json or --compare".to_string());
+    }
+
+    // Fail fast: a missing/malformed/mode-mismatched baseline must error
+    // before the (potentially minutes-long) suite run, not after.
+    let baseline = match &compare {
+        Some(base_path) => {
+            let text = std::fs::read_to_string(base_path)
+                .map_err(|e| format!("reading baseline {base_path}: {e}"))?;
+            let base = bench_json::parse_report(&text)
+                .map_err(|e| format!("parsing baseline {base_path}: {e}"))?;
+            if base.mode != mode {
+                // Experiment benches are mode-scaled (smoke shrinks trials
+                // and core sweeps ~10x), so cross-mode ratios are
+                // meaningless.
+                return Err(format!(
+                    "baseline {base_path} was recorded in {} mode but this run is {} mode; \
+                     rerun with {} (or record a matching baseline)",
+                    base.mode.as_str(),
+                    mode.as_str(),
+                    if base.mode == Mode::Smoke { "--smoke" } else { "full budgets" }
+                ));
+            }
+            Some(base)
+        }
+        None => None,
+    };
+
+    let mut opts = RunOpts::from_env(mode);
+    opts.filter = filter;
+    opts.dry_run = list;
+
+    let run_report = suites::run_all(&opts);
+
+    if list {
+        println!("registered benchmarks ({} mode):", mode.as_str());
+        for s in &run_report.suites {
+            for b in &s.benches {
+                println!("  {}/{}", s.name, b.name);
+            }
+            for name in &s.skipped {
+                println!("  {}/{name} (gated)", s.name);
+            }
+        }
+        return Ok(());
+    }
+
+    println!(
+        "\n=== bench summary ({} mode, rev {}) ===",
+        mode.as_str(),
+        run_report.git_rev.as_deref().unwrap_or("unknown")
+    );
+    for s in &run_report.suites {
+        for b in &s.benches {
+            let key = format!("{}/{}", s.name, b.name);
+            println!("  {key:<52} {:>12}/iter", human_time(b.time.mean));
+        }
+        for name in &s.skipped {
+            let key = format!("{}/{name}", s.name);
+            println!("  {key:<52} {:>12}", "skipped");
+        }
+    }
+
+    if let Some(path) = json {
+        let path = std::path::PathBuf::from(path);
+        bench_json::write_report(&run_report, &path)
+            .map_err(|e| format!("writing {}: {e}", path.display()))?;
+        println!("[bench telemetry written {}]", path.display());
+    }
+
+    if let (Some(base), Some(base_path)) = (baseline, compare.as_deref()) {
+        let outcome = compare_reports(&base, &run_report, threshold);
+        println!(
+            "\n=== regression check vs {base_path} (threshold +{:.0}%) ===",
+            threshold * 100.0
+        );
+        for d in &outcome.deltas {
+            println!(
+                "  {:<52} {:>8.2}x {}",
+                d.name,
+                d.ratio,
+                if d.regressed { "REGRESSED" } else { "ok" }
+            );
+        }
+        for name in &outcome.missing_in_new {
+            println!("  {name:<52} (in baseline, missing from this run)");
+        }
+        for name in &outcome.new_only {
+            println!("  {name:<52} (new, no baseline)");
+        }
+        if outcome.deltas.is_empty() {
+            // A filter typo must not let the gate pass vacuously.
+            return Err(format!(
+                "no benchmarks overlap between this run and the baseline {base_path} \
+                 (check --filter and the baseline's contents)"
+            ));
+        }
+        let regressions = outcome.regressions();
+        if !regressions.is_empty() {
+            return Err(format!(
+                "{} benchmark(s) regressed beyond +{:.0}%: {}",
+                regressions.len(),
+                threshold * 100.0,
+                regressions.iter().map(|d| d.name.as_str()).collect::<Vec<_>>().join(", ")
+            ));
+        }
+        println!("no regressions beyond +{:.0}%", threshold * 100.0);
+    }
+    Ok(())
 }
 
 /// Load the config file (if any) and apply common overrides.
@@ -219,21 +369,14 @@ fn load_config(flags: &mut Flags) -> Result<ExperimentConfig, String> {
 
 /// Thin the Fig.-1 table for terminal display (every 50th iteration).
 fn summarize_fig1(full: &astir::metrics::Table) -> astir::metrics::Table {
-    let mut t = astir::metrics::Table::new(
-        &full.columns.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
-    );
-    for (i, row) in full.rows.iter().enumerate() {
-        if i % 50 == 0 || i + 1 == full.rows.len() {
-            t.push_row(row.clone());
-        }
-    }
-    t
+    full.thinned(50)
 }
 
 fn divisors_near(m: usize) -> Vec<usize> {
     // A small spread of block sizes dividing m, around the paper's 15.
     let candidates = [5usize, 10, 15, 20, 25, 30, 50, 60, 75];
-    let mut out: Vec<usize> = candidates.iter().copied().filter(|&b| b <= m && m % b == 0).collect();
+    let mut out: Vec<usize> =
+        candidates.iter().copied().filter(|&b| b <= m && m % b == 0).collect();
     if out.is_empty() {
         out.push(1);
     }
@@ -297,7 +440,7 @@ fn run_stoiht_on_backend<B: Backend>(
     opts: &GreedyOpts,
     backend: &mut B,
     rng: &mut Rng,
-) -> anyhow::Result<algorithms::RunResult> {
+) -> astir::error::Result<algorithms::RunResult> {
     let spec = &problem.spec;
     let mb = spec.num_blocks();
     let mut x = vec![0.0f64; spec.n];
@@ -375,7 +518,10 @@ fn print_info(cfg: &ExperimentConfig) {
         }
         Err(e) => println!("  (unavailable: {e})"),
     }
-    println!("\n[backends] native: {} | pjrt: executes the artifacts above", NativeBackend::new().name());
+    println!(
+        "\n[backends] native: {} | pjrt: executes the artifacts above",
+        NativeBackend::new().name()
+    );
 }
 
 fn print_usage() {
@@ -391,6 +537,7 @@ COMMANDS
   ablation <name>              A1..A4 (tally-vs-shared-x, inconsistent-reads,
                                weighting, block-size)
   baselines                    A5 phase-transition sweep (IHT/StoIHT/OMP/...)
+  bench                        run the bench suite registry (perf telemetry)
   run --alg X --backend Y      one solve (alg: stoiht|iht|omp|cosamp|stogradmp;
                                backend: native|pjrt)
   async --cores N              real-thread asynchronous StoIHT
@@ -402,6 +549,14 @@ COMMON FLAGS
   --seed N             master seed
   --threads N          worker threads for trial batching
   --cores-list a,b,c   core counts to sweep
-  --max-iters N        iteration / time-step cap"
+  --max-iters N        iteration / time-step cap
+
+BENCH FLAGS (astir bench)
+  --filter substr      run only benches whose suite/name contains substr
+  --smoke              CI-sized budgets (also skips jumbo scales)
+  --list               list registered benches without running them
+  --json path          write the run's JSON telemetry (astir-bench-v1)
+  --compare base.json  diff against a baseline; exit nonzero on regression
+  --threshold frac     regression threshold as a fraction (default 0.5)"
     );
 }

@@ -197,6 +197,55 @@ impl Table {
         fs::write(path, self.to_csv())
     }
 
+    /// Render as a JSON object `{"columns": [...], "rows": [[...], ...]}`.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\"columns\":[");
+        for (i, c) in self.columns.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "\"{}\"", json_escape(c));
+        }
+        out.push_str("],\"rows\":[");
+        for (i, r) in self.rows.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push('[');
+            for (j, v) in r.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                out.push_str(&json_f64(*v));
+            }
+            out.push(']');
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Write JSON under the given path, creating parent dirs.
+    pub fn write_json(&self, path: &Path) -> io::Result<()> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        fs::write(path, self.to_json())
+    }
+
+    /// Every `stride`-th row plus the last — terminal-display thinning
+    /// shared by the CLI and the bench suites (long per-iteration series).
+    pub fn thinned(&self, stride: usize) -> Table {
+        let stride = stride.max(1);
+        let mut t = Table { columns: self.columns.clone(), rows: Vec::new() };
+        for (i, row) in self.rows.iter().enumerate() {
+            if i % stride == 0 || i + 1 == self.rows.len() {
+                t.rows.push(row.clone());
+            }
+        }
+        t
+    }
+
     /// Render as an aligned text table (what the benches print).
     pub fn to_aligned(&self) -> String {
         let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
@@ -222,6 +271,36 @@ impl Table {
             out.push('\n');
         }
         out
+    }
+}
+
+/// Escape a string for embedding in a JSON document (RFC 8259 §7): quote,
+/// backslash, and control characters; everything else passes through.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a finite `f64` as a JSON number in shortest round-trip form.
+/// Non-finite values have no JSON representation and become `null`.
+pub fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:?}")
+    } else {
+        "null".to_string()
     }
 }
 
@@ -325,6 +404,49 @@ mod tests {
         assert_eq!(format_sig(1.0, 3), "1.00");
         assert!(format_sig(1e-9, 3).contains('e'));
         assert!(format_sig(f64::INFINITY, 3).contains("inf"));
+    }
+
+    #[test]
+    fn thinned_keeps_stride_and_last_row() {
+        let mut t = Table::new(&["i"]);
+        for i in 0..7 {
+            t.push_row(vec![i as f64]);
+        }
+        let thin = t.thinned(3);
+        let col: Vec<f64> = thin.rows.iter().map(|r| r[0]).collect();
+        assert_eq!(col, vec![0.0, 3.0, 6.0]);
+        let thin1 = t.thinned(1);
+        assert_eq!(thin1.rows.len(), 7);
+        assert!(Table::new(&["i"]).thinned(0).rows.is_empty());
+    }
+
+    #[test]
+    fn json_escape_specials() {
+        assert_eq!(json_escape("plain"), "plain");
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(json_escape("x\n\t\r"), "x\\n\\t\\r");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+        assert_eq!(json_escape("µs"), "µs"); // non-ASCII passes through
+    }
+
+    #[test]
+    fn json_f64_forms() {
+        assert_eq!(json_f64(1.0), "1.0");
+        assert_eq!(json_f64(0.5), "0.5");
+        assert_eq!(json_f64(f64::NAN), "null");
+        assert_eq!(json_f64(f64::INFINITY), "null");
+        // shortest round-trip form parses back exactly
+        let v = 1.2345678912345e-7;
+        assert_eq!(json_f64(v).parse::<f64>().unwrap(), v);
+    }
+
+    #[test]
+    fn table_to_json_shape() {
+        let mut t = Table::new(&["a\"q", "b"]);
+        t.push_row(vec![1.0, f64::NAN]);
+        assert_eq!(t.to_json(), "{\"columns\":[\"a\\\"q\",\"b\"],\"rows\":[[1.0,null]]}");
+        let empty = Table::new(&[]);
+        assert_eq!(empty.to_json(), "{\"columns\":[],\"rows\":[]}");
     }
 
     #[test]

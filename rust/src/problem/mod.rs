@@ -328,7 +328,9 @@ mod tests {
     #[test]
     fn generated_signal_is_exactly_s_sparse() {
         let mut rng = Rng::seed_from(1);
-        for model in [SignalModel::GaussianSpikes, SignalModel::FlatSpikes, SignalModel::LinearDecay] {
+        let models =
+            [SignalModel::GaussianSpikes, SignalModel::FlatSpikes, SignalModel::LinearDecay];
+        for model in models {
             let sp = ProblemSpec { signal: model, ..ProblemSpec::tiny() };
             let p = sp.generate(&mut rng);
             let nnz = p.x_true.iter().filter(|&&v| v != 0.0).count();
@@ -433,7 +435,8 @@ mod tests {
         let sparse = p.residual_norm_sparse(&x, &supp);
         assert!((dense - sparse).abs() < 1e-12);
         // empty support = ||y||
-        assert!((p.residual_norm_sparse(&vec![0.0; p.spec.n], &[]) - crate::linalg::nrm2(&p.y)).abs() < 1e-12);
+        let zero = vec![0.0; p.spec.n];
+        assert!((p.residual_norm_sparse(&zero, &[]) - crate::linalg::nrm2(&p.y)).abs() < 1e-12);
     }
 
     #[test]

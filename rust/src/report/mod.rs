@@ -1,35 +1,69 @@
 //! Report emission: every experiment driver funnels its table through
 //! [`emit`], which prints the aligned text (what the paper's figure shows)
-//! and persists the CSV under `results/` so the series can be re-plotted.
+//! and persists the series under `results/` as both CSV and JSON so it can
+//! be re-plotted or machine-diffed.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 
 use crate::metrics::Table;
 
-/// Directory for CSV outputs: `$ASTIR_RESULTS` or `./results`.
+/// Directory for CSV/JSON outputs: `$ASTIR_RESULTS` or `./results`.
 pub fn results_dir() -> PathBuf {
     std::env::var_os("ASTIR_RESULTS")
         .map(PathBuf::from)
         .unwrap_or_else(|| PathBuf::from("results"))
 }
 
-/// Print a titled, aligned table and write `results/<name>.csv`.
-/// Returns the CSV path (best-effort: IO errors are reported, not fatal —
-/// benches still print their numbers on read-only filesystems).
-pub fn emit(name: &str, title: &str, table: &Table) -> Option<PathBuf> {
+/// Paths written by [`emit`]; `None` where the write failed (read-only
+/// results dir — the CI case).
+#[derive(Clone, Debug, Default)]
+pub struct Emitted {
+    pub csv: Option<PathBuf>,
+    pub json: Option<PathBuf>,
+}
+
+// A bench run emits many tables; an unwritable results dir should cost one
+// warning line, not one per table.
+static WRITE_WARNED: AtomicBool = AtomicBool::new(false);
+
+fn warn_once(path: &Path, e: &std::io::Error) {
+    if !WRITE_WARNED.swap(true, Ordering::Relaxed) {
+        eprintln!(
+            "[warn] could not write {} ({e}); further results-dir write warnings suppressed",
+            path.display()
+        );
+    }
+}
+
+/// Print a titled, aligned table and write `results/<name>.csv` plus
+/// `results/<name>.json`. Returns the written paths (best-effort: IO
+/// errors degrade to a single process-wide warning, and benches still
+/// print their numbers on read-only filesystems).
+pub fn emit(name: &str, title: &str, table: &Table) -> Emitted {
     println!("\n--- {title} ---");
     print!("{}", table.to_aligned());
-    let path = results_dir().join(format!("{name}.csv"));
-    match table.write_csv(&path) {
-        Ok(()) => {
-            println!("[written {}]", path.display());
-            Some(path)
-        }
+    let dir = results_dir();
+    let csv_path = dir.join(format!("{name}.csv"));
+    let json_path = dir.join(format!("{name}.json"));
+    let csv = match table.write_csv(&csv_path) {
+        Ok(()) => Some(csv_path),
         Err(e) => {
-            eprintln!("[warn] could not write {}: {e}", path.display());
+            warn_once(&csv_path, &e);
             None
         }
+    };
+    let json = match table.write_json(&json_path) {
+        Ok(()) => Some(json_path),
+        Err(e) => {
+            warn_once(&json_path, &e);
+            None
+        }
+    };
+    if let (Some(c), Some(j)) = (&csv, &json) {
+        println!("[written {} + {}]", c.display(), j.display());
     }
+    Emitted { csv, json }
 }
 
 /// A free-form note printed alongside a report (assumptions, paper refs).
@@ -41,17 +75,41 @@ pub fn note(text: &str) {
 mod tests {
     use super::*;
 
+    // Both tests rebind ASTIR_RESULTS; serialize them so the parallel test
+    // runner cannot interleave the set/remove pairs.
+    static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
     #[test]
-    fn emit_writes_csv() {
+    fn emit_writes_csv_and_json() {
+        let _guard = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
         let dir = std::env::temp_dir().join("astir_report_test");
         std::env::set_var("ASTIR_RESULTS", &dir);
         let mut t = Table::new(&["a", "b"]);
         t.push_row(vec![1.0, 2.0]);
-        let p = emit("unit_test_table", "unit test", &t).unwrap();
-        assert!(p.exists());
-        let body = std::fs::read_to_string(&p).unwrap();
-        assert!(body.contains("a,b"));
+        let out = emit("unit_test_table", "unit test", &t);
         std::env::remove_var("ASTIR_RESULTS");
+        let csv = out.csv.expect("csv written");
+        let json = out.json.expect("json written");
+        assert!(csv.exists() && json.exists());
+        assert!(std::fs::read_to_string(&csv).unwrap().contains("a,b"));
+        assert!(std::fs::read_to_string(&json).unwrap().starts_with("{\"columns\":"));
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn emit_degrades_on_unwritable_dir() {
+        let _guard = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        // Point the results dir *under a regular file* so create_dir_all
+        // fails deterministically, on any platform, even as root.
+        let blocker = std::env::temp_dir().join("astir_report_blocker");
+        std::fs::write(&blocker, b"x").unwrap();
+        let dir = blocker.join("sub");
+        std::env::set_var("ASTIR_RESULTS", &dir);
+        let mut t = Table::new(&["a"]);
+        t.push_row(vec![1.0]);
+        let out = emit("unwritable_table", "unwritable", &t);
+        std::env::remove_var("ASTIR_RESULTS");
+        assert!(out.csv.is_none() && out.json.is_none());
+        let _ = std::fs::remove_file(&blocker);
     }
 }

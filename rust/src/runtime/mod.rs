@@ -18,7 +18,8 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::error::{Context, Result};
+use crate::{bail, err};
 
 /// Artifact kinds emitted by `python/compile/aot.py`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -75,14 +76,14 @@ impl ArtifactMeta {
             }
             let (k, v) = line
                 .split_once('=')
-                .ok_or_else(|| anyhow!("bad meta line `{line}` in {}", path.display()))?;
+                .ok_or_else(|| err!("bad meta line `{line}` in {}", path.display()))?;
             kv.insert(k.trim().to_string(), v.trim().to_string());
         }
         let get = |k: &str| -> Result<&String> {
-            kv.get(k).ok_or_else(|| anyhow!("meta {} missing `{k}`", path.display()))
+            kv.get(k).ok_or_else(|| err!("meta {} missing `{k}`", path.display()))
         };
         let kind = ArtifactKind::parse(get("kind")?)
-            .ok_or_else(|| anyhow!("unknown artifact kind `{}`", kv["kind"]))?;
+            .ok_or_else(|| err!("unknown artifact kind `{}`", kv["kind"]))?;
         let parse_usize =
             |k: &str| -> Result<usize> { Ok(get(k)?.parse::<usize>().context(k.to_string())?) };
         let hlo_path = path.with_extension("hlo.txt");
@@ -167,7 +168,8 @@ mod pjrt_impl {
     use std::collections::HashMap;
     use std::path::Path;
 
-    use anyhow::{anyhow, bail, Result};
+    use crate::error::Result;
+    use crate::{bail, err};
 
     use super::{ArtifactKey, ArtifactKind, ArtifactStore};
 
@@ -186,7 +188,7 @@ mod pjrt_impl {
             if store.is_empty() {
                 bail!("no artifacts found in {} (run `make artifacts`)", dir.display());
             }
-            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+            let client = xla::PjRtClient::cpu().map_err(|e| err!("PJRT CPU client: {e:?}"))?;
             Ok(PjrtRuntime { client, store, compiled: Default::default() })
         }
 
@@ -212,18 +214,18 @@ mod pjrt_impl {
             let meta = self
                 .store
                 .get(&key)
-                .ok_or_else(|| anyhow!("no artifact for {key:?} in {}", self.store.dir.display()))?;
+                .ok_or_else(|| err!("no artifact for {key:?} in {}", self.store.dir.display()))?;
             let path_str = meta
                 .hlo_path
                 .to_str()
-                .ok_or_else(|| anyhow!("non-UTF8 path {}", meta.hlo_path.display()))?;
+                .ok_or_else(|| err!("non-UTF8 path {}", meta.hlo_path.display()))?;
             let proto = xla::HloModuleProto::from_text_file(path_str)
-                .map_err(|e| anyhow!("parsing {}: {e:?}", meta.hlo_path.display()))?;
+                .map_err(|e| err!("parsing {}: {e:?}", meta.hlo_path.display()))?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = self
                 .client
                 .compile(&comp)
-                .map_err(|e| anyhow!("compiling {}: {e:?}", meta.hlo_path.display()))?;
+                .map_err(|e| err!("compiling {}: {e:?}", meta.hlo_path.display()))?;
             let exe = std::rc::Rc::new(exe);
             self.compiled.borrow_mut().insert(key, exe.clone());
             Ok(exe)
@@ -258,10 +260,10 @@ mod pjrt_impl {
             let mask_lit = lit_vec(tally_mask);
             let result = exe
                 .execute::<xla::Literal>(&[a_lit, y_lit, x_lit, alpha_lit, mask_lit])
-                .map_err(|e| anyhow!("execute stoiht_step: {e:?}"))?[0][0]
+                .map_err(|e| err!("execute stoiht_step: {e:?}"))?[0][0]
                 .to_literal_sync()
-                .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-            let mut parts = result.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+                .map_err(|e| err!("fetch result: {e:?}"))?;
+            let mut parts = result.to_tuple().map_err(|e| err!("untuple: {e:?}"))?;
             if parts.len() != 2 {
                 bail!("stoiht_step artifact returned {} outputs, want 2", parts.len());
             }
@@ -292,35 +294,42 @@ mod pjrt_impl {
             let g_lit = xla::Literal::scalar(gamma as f32);
             let result = exe
                 .execute::<xla::Literal>(&[a_lit, y_lit, x_lit, g_lit])
-                .map_err(|e| anyhow!("execute iht_step: {e:?}"))?[0][0]
+                .map_err(|e| err!("execute iht_step: {e:?}"))?[0][0]
                 .to_literal_sync()
-                .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-            let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+                .map_err(|e| err!("fetch result: {e:?}"))?;
+            let out = result.to_tuple1().map_err(|e| err!("untuple: {e:?}"))?;
             to_f64(&out)
         }
 
         /// Execute the residual-norm artifact for `(n, m)`.
-        pub fn residual_norm(&self, n: usize, m: usize, a: &[f64], y: &[f64], x: &[f64]) -> Result<f64> {
+        pub fn residual_norm(
+            &self,
+            n: usize,
+            m: usize,
+            a: &[f64],
+            y: &[f64],
+            x: &[f64],
+        ) -> Result<f64> {
             // residual artifacts are keyed with rows = m, s = m (see aot.py meta).
             let key = self
                 .store
                 .iter()
                 .find(|meta| meta.kind == ArtifactKind::Residual && meta.n == n && meta.m == m)
                 .map(|meta| meta.key())
-                .ok_or_else(|| anyhow!("no residual artifact for n={n} m={m}"))?;
+                .ok_or_else(|| err!("no residual artifact for n={n} m={m}"))?;
             let exe = self.executable(key)?;
             let a_lit = lit_mat(a, m, n)?;
             let y_lit = lit_vec(y);
             let x_lit = lit_vec(x);
             let result = exe
                 .execute::<xla::Literal>(&[a_lit, y_lit, x_lit])
-                .map_err(|e| anyhow!("execute residual: {e:?}"))?[0][0]
+                .map_err(|e| err!("execute residual: {e:?}"))?[0][0]
                 .to_literal_sync()
-                .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-            let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+                .map_err(|e| err!("fetch result: {e:?}"))?;
+            let out = result.to_tuple1().map_err(|e| err!("untuple: {e:?}"))?;
             let v = out
                 .get_first_element::<f32>()
-                .map_err(|e| anyhow!("scalar fetch: {e:?}"))?;
+                .map_err(|e| err!("scalar fetch: {e:?}"))?;
             Ok(v as f64)
         }
     }
@@ -334,11 +343,11 @@ mod pjrt_impl {
         let f: Vec<f32> = v.iter().map(|&x| x as f32).collect();
         xla::Literal::vec1(&f)
             .reshape(&[rows as i64, cols as i64])
-            .map_err(|e| anyhow!("reshape ({rows},{cols}): {e:?}"))
+            .map_err(|e| err!("reshape ({rows},{cols}): {e:?}"))
     }
 
     fn to_f64(lit: &xla::Literal) -> Result<Vec<f64>> {
-        let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+        let v: Vec<f32> = lit.to_vec().map_err(|e| err!("literal to_vec: {e:?}"))?;
         Ok(v.into_iter().map(|x| x as f64).collect())
     }
 }
@@ -352,7 +361,8 @@ mod pjrt_impl {
 mod pjrt_stub {
     use std::path::Path;
 
-    use anyhow::{bail, Result};
+    use crate::bail;
+    use crate::error::Result;
 
     use super::ArtifactStore;
 

@@ -409,7 +409,8 @@ mod tests {
     #[test]
     fn single_core_converges() {
         let p = easy(1);
-        let out = simulate(&p, 1, &SpeedSchedule::AllFast, &SimOpts::default(), &mut Rng::seed_from(7));
+        let out =
+            simulate(&p, 1, &SpeedSchedule::AllFast, &SimOpts::default(), &mut Rng::seed_from(7));
         assert!(out.converged, "steps {}", out.steps);
         assert!(out.final_error < 1e-5);
         assert_eq!(out.exit_core, Some(0));
@@ -420,8 +421,10 @@ mod tests {
     #[test]
     fn multicore_converges_and_is_deterministic() {
         let p = easy(2);
-        let a = simulate(&p, 4, &SpeedSchedule::AllFast, &SimOpts::default(), &mut Rng::seed_from(9));
-        let b = simulate(&p, 4, &SpeedSchedule::AllFast, &SimOpts::default(), &mut Rng::seed_from(9));
+        let a =
+            simulate(&p, 4, &SpeedSchedule::AllFast, &SimOpts::default(), &mut Rng::seed_from(9));
+        let b =
+            simulate(&p, 4, &SpeedSchedule::AllFast, &SimOpts::default(), &mut Rng::seed_from(9));
         assert!(a.converged);
         assert_eq!(a.steps, b.steps);
         assert_eq!(a.exit_core, b.exit_core);
@@ -432,10 +435,12 @@ mod tests {
     fn more_cores_do_not_hurt_on_average() {
         let mut total1 = 0usize;
         let mut total8 = 0usize;
+        let sched = SpeedSchedule::AllFast;
+        let opts = SimOpts::default();
         for seed in 0..6u64 {
             let p = easy(40 + seed);
-            let o1 = simulate(&p, 1, &SpeedSchedule::AllFast, &SimOpts::default(), &mut Rng::seed_from(seed));
-            let o8 = simulate(&p, 8, &SpeedSchedule::AllFast, &SimOpts::default(), &mut Rng::seed_from(seed));
+            let o1 = simulate(&p, 1, &sched, &opts, &mut Rng::seed_from(seed));
+            let o8 = simulate(&p, 8, &sched, &opts, &mut Rng::seed_from(seed));
             assert!(o1.converged && o8.converged);
             total1 += o1.steps;
             total8 += o8.steps;

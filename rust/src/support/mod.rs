@@ -114,7 +114,12 @@ pub fn top_s_mask<S: Scalar>(v: &[S], s: usize) -> Vec<S> {
 
 /// Hard-thresholding operator `H_s` (paper eq. (2)): zero all but the
 /// top-`s` entries, in place.
-pub fn hard_threshold_in_place<S: Scalar>(v: &mut [S], s: usize, idx_scratch: &mut Vec<usize>, sel_scratch: &mut [usize]) {
+pub fn hard_threshold_in_place<S: Scalar>(
+    v: &mut [S],
+    s: usize,
+    idx_scratch: &mut Vec<usize>,
+    sel_scratch: &mut [usize],
+) {
     top_s_into(v, s, idx_scratch, sel_scratch);
     let mut keep = 0usize;
     // sel_scratch is ascending: zero everything not in it with one pass.

@@ -86,7 +86,9 @@ pub fn positive_top_s_into(snapshot: &[i64], s: usize, out: &mut Vec<usize>) {
         } else {
             // (value desc, index asc) is a total order: the selected set is
             // identical to the full-sort-and-truncate it replaces.
-            out.select_nth_unstable_by(s - 1, |&i, &j| snapshot[j].cmp(&snapshot[i]).then(i.cmp(&j)));
+            out.select_nth_unstable_by(s - 1, |&i, &j| {
+                snapshot[j].cmp(&snapshot[i]).then(i.cmp(&j))
+            });
             out.truncate(s);
         }
     }

@@ -1,0 +1,226 @@
+//! Perf-telemetry contract tests: the `astir-bench-v1` JSON schema
+//! round-trips and stays byte-stable, the suite registry is deterministic
+//! across runs, and `astir bench --compare` exits nonzero on an injected
+//! regression.
+
+use astir::bench_harness::json::{parse_report, report_to_json, write_report};
+use astir::bench_harness::{
+    compare_reports, suites, BenchDims, BenchRecord, Mode, RunOpts, RunReport, Scale, SuiteReport,
+    SCHEMA,
+};
+use astir::metrics::Stats;
+
+fn sample_report() -> RunReport {
+    RunReport {
+        schema: SCHEMA.to_string(),
+        git_rev: Some("abc123def456".to_string()),
+        mode: Mode::Smoke,
+        suites: vec![SuiteReport {
+            name: "demo".to_string(),
+            benches: vec![
+                BenchRecord {
+                    name: "proxy".to_string(),
+                    scale: Scale::Standard,
+                    dims: Some(BenchDims { n: 1000, m: 300, b: 15, s: 20 }),
+                    seed: 11,
+                    iters: 4,
+                    time: Stats { n: 2, mean: 0.5, std: 0.25, min: 0.25, max: 0.75, median: 0.5 },
+                },
+                BenchRecord {
+                    name: "dimless".to_string(),
+                    scale: Scale::Jumbo,
+                    dims: None,
+                    seed: 0,
+                    iters: 0,
+                    time: Stats {
+                        n: 0,
+                        mean: f64::NAN,
+                        std: f64::NAN,
+                        min: f64::INFINITY,
+                        max: f64::NEG_INFINITY,
+                        median: f64::NAN,
+                    },
+                },
+            ],
+            skipped: vec!["jumbo_step".to_string()],
+        }],
+    }
+}
+
+#[test]
+fn json_snapshot_is_schema_stable() {
+    // Byte-for-byte pin of the v1 schema: if this test needs editing, the
+    // schema changed — bump SCHEMA and say so in the README.
+    let expected = concat!(
+        "{\"schema\":\"astir-bench-v1\",\"git_rev\":\"abc123def456\",\"mode\":\"smoke\",",
+        "\"suites\":[{\"name\":\"demo\",\"skipped\":[\"jumbo_step\"],\"benches\":[",
+        "{\"name\":\"proxy\",\"scale\":\"standard\",\"seed\":11,",
+        "\"dims\":{\"n\":1000,\"m\":300,\"b\":15,\"s\":20},\"iters\":4,\"samples\":2,",
+        "\"mean_s\":0.5,\"std_s\":0.25,\"min_s\":0.25,\"throughput_iters_per_s\":2.0},",
+        "{\"name\":\"dimless\",\"scale\":\"jumbo\",\"seed\":0,\"dims\":null,",
+        "\"iters\":0,\"samples\":0,\"mean_s\":null,\"std_s\":null,\"min_s\":null,",
+        "\"throughput_iters_per_s\":null}]}]}"
+    );
+    assert_eq!(report_to_json(&sample_report()), expected);
+}
+
+#[test]
+fn json_roundtrip_preserves_schema_fields() {
+    let original = sample_report();
+    let parsed = parse_report(&report_to_json(&original)).expect("round-trip parse");
+    assert_eq!(parsed.schema, original.schema);
+    assert_eq!(parsed.git_rev, original.git_rev);
+    assert_eq!(parsed.mode, original.mode);
+    assert_eq!(parsed.suites.len(), 1);
+    let (ps, os) = (&parsed.suites[0], &original.suites[0]);
+    assert_eq!(ps.name, os.name);
+    assert_eq!(ps.skipped, os.skipped);
+    assert_eq!(ps.benches.len(), os.benches.len());
+    for (pb, ob) in ps.benches.iter().zip(&os.benches) {
+        assert_eq!(pb.name, ob.name);
+        assert_eq!(pb.scale, ob.scale);
+        assert_eq!(pb.dims, ob.dims);
+        assert_eq!(pb.seed, ob.seed);
+        assert_eq!(pb.iters, ob.iters);
+        assert_eq!(pb.time.n, ob.time.n);
+        // numeric fields: NaN-aware equality on what the schema carries
+        for (p, o) in [
+            (pb.time.mean, ob.time.mean),
+            (pb.time.std, ob.time.std),
+            (pb.time.min, ob.time.min),
+        ] {
+            assert!(p == o || (p.is_nan() && !o.is_finite()), "{p} vs {o}");
+        }
+    }
+    // serializing the parsed report again is byte-identical except for
+    // fields the schema does not carry (none at the top level)
+    assert_eq!(report_to_json(&parsed), report_to_json(&original));
+}
+
+#[test]
+fn parse_rejects_foreign_schema() {
+    let doc = report_to_json(&sample_report()).replace("astir-bench-v1", "someone-elses-v9");
+    let err = parse_report(&doc).unwrap_err();
+    assert!(err.contains("someone-elses-v9"), "{err}");
+    assert!(parse_report("{}").is_err());
+    assert!(parse_report("not json at all").is_err());
+}
+
+#[test]
+fn write_report_creates_parents_and_roundtrips() {
+    let dir = std::env::temp_dir().join("astir_bench_telemetry_test").join("nested");
+    let path = dir.join("BENCH_demo.json");
+    write_report(&sample_report(), &path).expect("write");
+    let parsed = parse_report(&std::fs::read_to_string(&path).unwrap()).expect("parse");
+    assert_eq!(parsed.suites[0].benches[0].name, "proxy");
+    let _ = std::fs::remove_dir_all(dir.parent().unwrap());
+}
+
+#[test]
+fn two_seeded_smoke_runs_register_identically() {
+    // Dry runs register every spec (names, dims, seeds, scales) without
+    // timing anything: two passes over the registry must agree exactly,
+    // and the smoke problem dims must be the deterministic paper shapes.
+    let opts = RunOpts { mode: Mode::Smoke, filter: None, skip_jumbo: true, dry_run: true };
+    let a = suites::run_all(&opts);
+    let b = suites::run_all(&opts);
+    assert_eq!(a.suites.len(), 6);
+    assert_eq!(a.suites.len(), b.suites.len());
+    for (sa, sb) in a.suites.iter().zip(&b.suites) {
+        assert_eq!(sa.name, sb.name);
+        assert_eq!(sa.skipped, sb.skipped);
+        assert_eq!(sa.benches.len(), sb.benches.len());
+        assert!(!sa.benches.is_empty(), "suite {} registered no benches", sa.name);
+        for (ba, bb) in sa.benches.iter().zip(&sb.benches) {
+            assert_eq!(ba.name, bb.name);
+            assert_eq!(ba.dims, bb.dims);
+            assert_eq!(ba.seed, bb.seed);
+            assert_eq!(ba.scale, bb.scale);
+        }
+    }
+    // experiment suites carry the paper problem shape
+    let fig1 = a.suites.iter().find(|s| s.name == "fig1").unwrap();
+    assert_eq!(fig1.benches[0].dims, Some(BenchDims { n: 1000, m: 300, b: 15, s: 20 }));
+}
+
+#[test]
+fn compare_exits_nonzero_on_injected_regression() {
+    // End-to-end through the CLI: run one real (tiny) smoke bench with
+    // --json, then doctor the baseline to be far faster and assert the
+    // --compare run fails while the honest compare passes.
+    let astir = env!("CARGO_BIN_EXE_astir");
+    let dir = std::env::temp_dir().join("astir_bench_compare_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let current = dir.join("current.json");
+
+    let out = std::process::Command::new(astir)
+        .args(["bench", "--smoke", "--filter", "hot_path/tally_estimate", "--json"])
+        .arg(&current)
+        .output()
+        .expect("run astir bench");
+    assert!(out.status.success(), "bench run failed: {}", String::from_utf8_lossy(&out.stderr));
+    let mut report = parse_report(&std::fs::read_to_string(&current).unwrap()).unwrap();
+    let bench = &report.suites[0].benches[0];
+    assert_eq!(bench.name, "tally_estimate");
+    assert!(bench.time.mean > 0.0);
+
+    // Self-compare with a generous threshold (re-measurement noise on a
+    // loaded test machine must not fail the honest case), must pass.
+    let ok = std::process::Command::new(astir)
+        .args(["bench", "--smoke", "--filter", "hot_path/tally_estimate", "--threshold", "3.0"])
+        .arg("--compare")
+        .arg(&current)
+        .output()
+        .expect("run astir bench --compare");
+    assert!(
+        ok.status.success(),
+        "self-compare should pass: {}",
+        String::from_utf8_lossy(&ok.stderr)
+    );
+
+    // Injected regression: pretend the baseline was 1000x faster.
+    for b in &mut report.suites[0].benches {
+        b.time.mean /= 1000.0;
+        b.time.std /= 1000.0;
+        b.time.min /= 1000.0;
+    }
+    let doctored = dir.join("doctored.json");
+    write_report(&report, &doctored).unwrap();
+    let bad = std::process::Command::new(astir)
+        .args(["bench", "--smoke", "--filter", "hot_path/tally_estimate", "--threshold", "3.0"])
+        .arg("--compare")
+        .arg(&doctored)
+        .output()
+        .expect("run astir bench --compare (doctored)");
+    assert!(!bad.status.success(), "doctored compare must exit nonzero");
+    let stderr = String::from_utf8_lossy(&bad.stderr);
+    assert!(stderr.contains("regressed"), "stderr: {stderr}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn compare_reports_threshold_boundaries() {
+    let mk = |mean: f64| RunReport {
+        schema: SCHEMA.to_string(),
+        git_rev: None,
+        mode: Mode::Full,
+        suites: vec![SuiteReport {
+            name: "s".to_string(),
+            benches: vec![BenchRecord {
+                name: "k".to_string(),
+                scale: Scale::Standard,
+                dims: None,
+                seed: 0,
+                iters: 1,
+                time: Stats { n: 1, mean, std: 0.0, min: mean, max: mean, median: mean },
+            }],
+            skipped: Vec::new(),
+        }],
+    };
+    let base = mk(1.0);
+    assert!(compare_reports(&base, &mk(1.49), 0.5).regressions().is_empty());
+    assert_eq!(compare_reports(&base, &mk(1.51), 0.5).regressions().len(), 1);
+    // improvements never regress
+    assert!(compare_reports(&base, &mk(0.1), 0.0).regressions().is_empty());
+}

@@ -57,7 +57,8 @@ fn simulated_and_real_async_agree_qualitatively() {
     // Same problem: the discrete-time sim and the real-thread runtime must
     // both converge and produce solutions of the same quality.
     let p = small_cfg().problem.generate(&mut Rng::seed_from(21));
-    let sim_out = simulate(&p, 4, &SpeedSchedule::AllFast, &SimOpts::default(), &mut Rng::seed_from(1));
+    let sim_out =
+        simulate(&p, 4, &SpeedSchedule::AllFast, &SimOpts::default(), &mut Rng::seed_from(1));
     let thr_out = run_async(&p, 4, &AsyncOpts::default(), 2);
     assert!(sim_out.converged, "sim steps {}", sim_out.steps);
     assert!(thr_out.converged);
