@@ -77,10 +77,12 @@ fn main() -> astir::error::Result<()> {
             ..Default::default()
         };
         // Each worker thread constructs its own PJRT runtime (the client is
-        // not Send); the factory runs inside the spawned thread.
-        let out = run_async_with(&problem, cores, &opts, 31 + cores as u64, |p| {
+        // not Send); the factory runs inside the spawned thread. Kernels
+        // bake their step size at construction, so gamma is threaded here.
+        let gamma = opts.gamma;
+        let out = run_async_with(&problem, cores, &opts, 31 + cores as u64, move |p| {
             let backend = PjrtBackend::from_default_dir().expect("artifacts available");
-            Box::new(BackendStep::new(p, backend))
+            Box::new(BackendStep::new(p, backend).with_gamma(gamma))
         });
         let win_iters = out
             .exit_core

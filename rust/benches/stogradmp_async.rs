@@ -1,0 +1,14 @@
+//! Asynchronous StoGradMP (`cargo bench --bench stogradmp_async`), via the
+//! `stogradmp_async` suite in `astir::bench_harness::suites`.
+//!
+//! The paper's §V extension measured end-to-end: sequential StoGradMP
+//! iterations-to-exit, a discrete-time steps-vs-cores sweep (the Fig.-2
+//! semantics for the new kernel), and real-thread async wallclock per core
+//! count at the paper's n = 1000 scale.
+//! Telemetry: `results/BENCH_stogradmp_async.json`.
+
+mod common;
+
+fn main() {
+    common::bench_binary_main("stogradmp_async");
+}

@@ -1,0 +1,197 @@
+//! The `SupportKernel` trait — the per-iteration contract every algorithm
+//! must satisfy to ride the asynchronous tally architecture.
+//!
+//! The paper's Algorithm 2 is agnostic to *which* greedy step each core
+//! runs: a core (1) samples a measurement block, (2) steps its local
+//! iterate given the shared support estimate `T̃ = supp_s(φ)`, (3) casts
+//! its vote `Γ^t` into the tally, and (4) checks the halting residual
+//! `‖y − A x‖₂`. This module captures exactly that identify/estimate/vote
+//! protocol as a trait — in the spirit of the generic asynchronous
+//! block-update frameworks of Liu & Wright (async stochastic coordinate
+//! descent) and Xu (async primal-dual block updates) — so the discrete-time
+//! simulator ([`crate::sim`]) and the real-thread runtime
+//! ([`crate::async_runtime`]) are written once and drive *any* kernel:
+//! StoIHT ([`super::StoihtKernel`]), StoGradMP
+//! ([`super::StoGradMpKernel`]), the PJRT-backed step
+//! ([`crate::async_runtime::BackendStep`]), and every future kernel
+//! (CoSaMP, HTP, weighted variants) without touching the runtimes again.
+//!
+//! Implementations are expected to be **allocation-free after warmup**:
+//! `tally_step` writes into caller-owned buffers and reuses internal
+//! scratch, because the runtimes call it once per core per iteration.
+
+use crate::linalg::SparseIterate;
+use crate::problem::Problem;
+use crate::rng::Rng;
+
+/// Per-iteration step object of one (simulated or real) core.
+///
+/// One kernel instance per core: implementations carry per-core scratch and
+/// are deliberately **not** required to be `Send` — the runtimes construct
+/// each kernel inside its own thread via a `Sync` factory (the PJRT client,
+/// for one, is not thread-safe in the 0.1.6 crate).
+pub trait SupportKernel {
+    /// The problem instance this kernel solves.
+    fn problem(&self) -> &Problem;
+
+    /// Sample a measurement block from the kernel's block distribution.
+    fn sample_block(&self, rng: &mut Rng) -> usize;
+
+    /// One full asynchronous iteration body (the tally protocol's step):
+    /// update the sparse iterate `x` in place given the tally estimate
+    /// `estimate = T̃^t` (empty slice = no shared information, degrading to
+    /// the sequential algorithm), and write the sorted voted support `Γ^t`
+    /// into `gamma_out` (cleared first) — a caller scratch buffer, so no
+    /// per-iteration vector is allocated.
+    fn tally_step(
+        &mut self,
+        x: &mut SparseIterate<f64>,
+        block: usize,
+        estimate: &[usize],
+        gamma_out: &mut Vec<usize>,
+    );
+
+    /// Dense twin of [`SupportKernel::tally_step`] with no tally estimate,
+    /// used by the HOGWILD!-style SharedX ablation (A1), where cores share
+    /// the *iterate* — dense by design, since concurrent overwrites break
+    /// the sparse-support invariant.
+    fn dense_step(&mut self, x: &mut [f64], block: usize, gamma_out: &mut Vec<usize>);
+
+    /// Throwaway recompute of the identify-phase arithmetic (slow-core
+    /// *work* emulation: a worker with period `k` burns `k − 1` of these
+    /// per iteration, so its time dilation is made of the same memory
+    /// traffic the fast cores issue).
+    fn burn(&mut self, x: &SparseIterate<f64>, block: usize);
+
+    /// The halting statistic `‖y − A x‖₂`, evaluated sparsely over `x`'s
+    /// support in caller-owned scratch.
+    fn residual(&self, x: &SparseIterate<f64>, r_scratch: &mut Vec<f64>) -> f64 {
+        self.problem().residual_norm_sparse_with(x.values(), x.support(), r_scratch)
+    }
+
+    /// Ambient problem dimension `n`.
+    fn n(&self) -> usize {
+        self.problem().spec.n
+    }
+}
+
+/// Boxed kernels forward, so factories may return `Box<dyn SupportKernel>`
+/// when heterogeneous dispatch is wanted (the runtimes themselves are
+/// generic and need no box).
+impl<K: SupportKernel + ?Sized> SupportKernel for Box<K> {
+    fn problem(&self) -> &Problem {
+        (**self).problem()
+    }
+
+    fn sample_block(&self, rng: &mut Rng) -> usize {
+        (**self).sample_block(rng)
+    }
+
+    fn tally_step(
+        &mut self,
+        x: &mut SparseIterate<f64>,
+        block: usize,
+        estimate: &[usize],
+        gamma_out: &mut Vec<usize>,
+    ) {
+        (**self).tally_step(x, block, estimate, gamma_out)
+    }
+
+    fn dense_step(&mut self, x: &mut [f64], block: usize, gamma_out: &mut Vec<usize>) {
+        (**self).dense_step(x, block, gamma_out)
+    }
+
+    fn burn(&mut self, x: &SparseIterate<f64>, block: usize) {
+        (**self).burn(x, block)
+    }
+
+    fn residual(&self, x: &SparseIterate<f64>, r_scratch: &mut Vec<f64>) -> f64 {
+        (**self).residual(x, r_scratch)
+    }
+
+    fn n(&self) -> usize {
+        (**self).n()
+    }
+}
+
+/// Which [`SupportKernel`] the config-driven layers (CLI, `Leader`,
+/// bench registry) drive — the algorithms with an asynchronous story.
+/// The purely sequential baselines (IHT, OMP, CoSaMP) are not listed:
+/// they have no per-block stochastic step to vote with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Alg {
+    /// StoIHT (paper Algorithms 1/2) — the reproduction's default.
+    Stoiht,
+    /// StoGradMP (the paper's §V extension target).
+    StoGradMp,
+}
+
+impl Alg {
+    pub fn parse(s: &str) -> Option<Alg> {
+        match s {
+            "stoiht" => Some(Alg::Stoiht),
+            "stogradmp" => Some(Alg::StoGradMp),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Alg::Stoiht => "stoiht",
+            Alg::StoGradMp => "stogradmp",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{StoGradMpKernel, StoihtKernel};
+    use crate::problem::ProblemSpec;
+
+    #[test]
+    fn alg_parses_and_round_trips() {
+        assert_eq!(Alg::parse("stoiht"), Some(Alg::Stoiht));
+        assert_eq!(Alg::parse("stogradmp"), Some(Alg::StoGradMp));
+        assert_eq!(Alg::parse("omp"), None);
+        for a in [Alg::Stoiht, Alg::StoGradMp] {
+            assert_eq!(Alg::parse(a.as_str()), Some(a));
+        }
+    }
+
+    #[test]
+    fn boxed_kernel_forwards() {
+        let p = ProblemSpec { n: 64, m: 32, b: 8, s: 3, ..ProblemSpec::tiny() }
+            .generate(&mut Rng::seed_from(4));
+        let mut boxed: Box<dyn SupportKernel + '_> = Box::new(StoihtKernel::new(&p, 1.0));
+        let mut x = SparseIterate::zeros(p.spec.n);
+        let mut gamma = Vec::new();
+        boxed.tally_step(&mut x, 0, &[], &mut gamma);
+        assert_eq!(gamma.len(), p.spec.s);
+        assert_eq!(boxed.n(), p.spec.n);
+        let mut scratch = Vec::new();
+        assert!(boxed.residual(&x, &mut scratch).is_finite());
+    }
+
+    fn check_residual_contract<K: SupportKernel>(p: &Problem, kernel: &mut K, name: &str) {
+        let mut rng = Rng::seed_from(6);
+        let mut x = SparseIterate::zeros(p.spec.n);
+        let mut gamma = Vec::new();
+        for _ in 0..5 {
+            let b = kernel.sample_block(&mut rng);
+            kernel.tally_step(&mut x, b, &[], &mut gamma);
+        }
+        let mut scratch = Vec::new();
+        let sparse = kernel.residual(&x, &mut scratch);
+        let dense = p.residual_norm(x.values());
+        assert!((sparse - dense).abs() <= 1e-12 * (1.0 + dense), "{name}: {sparse} vs {dense}");
+    }
+
+    #[test]
+    fn default_residual_matches_dense_residual() {
+        let p = ProblemSpec { n: 64, m: 32, b: 8, s: 3, ..ProblemSpec::tiny() }
+            .generate(&mut Rng::seed_from(5));
+        check_residual_contract(&p, &mut StoihtKernel::new(&p, 1.0), "stoiht");
+        check_residual_contract(&p, &mut StoGradMpKernel::new(&p), "stogradmp");
+    }
+}

@@ -1,23 +1,29 @@
 //! Sparse-recovery algorithms: the paper's Algorithm 1 (StoIHT), the
-//! Fig.-1 oracle-support variant, and the greedy baselines the paper cites
-//! (IHT, OMP, CoSaMP) plus StoGradMP (its §V extension target).
+//! Fig.-1 oracle-support variant, StoGradMP (its §V extension target), and
+//! the greedy baselines the paper cites (IHT, OMP, CoSaMP).
 //!
 //! All solvers consume a [`crate::problem::Problem`] and a [`GreedyOpts`]
-//! and produce a [`RunResult`]; the per-iteration *step* of StoIHT is
-//! factored into [`StoihtKernel`] so the asynchronous runtimes (`sim`,
-//! `async_runtime`) reuse exactly the same arithmetic the sequential
-//! solver is tested with.
+//! and produce a [`RunResult`]. The per-iteration *step* of each
+//! asynchronous-capable algorithm is factored into a step object —
+//! [`StoihtKernel`], [`StoGradMpKernel`] — implementing the
+//! [`SupportKernel`] trait (the tally protocol: sample a block, step the
+//! local iterate given `T̃`, return the voted support `Γ^t`, report the
+//! halting residual), so the asynchronous runtimes (`sim`,
+//! `async_runtime`) are generic over the algorithm and reuse exactly the
+//! arithmetic the sequential solvers are tested with.
 
 pub mod cosamp;
 pub mod iht;
+pub mod kernel;
 pub mod omp;
 pub mod stogradmp;
 pub mod stoiht;
 
 pub use cosamp::cosamp;
 pub use iht::iht;
+pub use kernel::{Alg, SupportKernel};
 pub use omp::omp;
-pub use stogradmp::stogradmp;
+pub use stogradmp::{stogradmp, stogradmp_step, StoGradMpKernel};
 pub use stoiht::{make_oracle, stoiht, stoiht_with_oracle, StoihtKernel};
 
 use crate::metrics::Trace;

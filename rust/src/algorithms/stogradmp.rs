@@ -2,25 +2,38 @@
 //! CoSaMP relative of StoIHT and the paper's §V extension target: per
 //! iteration, take the *block* gradient as the proxy, merge its top-`2s`
 //! set with the current support (and optionally an external support
-//! estimate — that is the asynchronous tally hook), least-squares re-fit,
-//! prune to `s`.
+//! estimate — that is the asynchronous tally hook), least-squares re-fit
+//! over the merged support, prune to `s`.
+//!
+//! Two forms live here:
+//!
+//! * [`stogradmp_step`] — the allocating reference implementation, kept as
+//!   the oracle the kernel is tested against.
+//! * [`StoGradMpKernel`] — the reusable, allocation-free step object
+//!   implementing [`SupportKernel`], which the sequential solver
+//!   ([`stogradmp`]), the discrete-time simulator, and the real-thread
+//!   runtime all drive. Its inner loop reuses residual/gradient/merge
+//!   scratch and cycles one matrix buffer through the Householder QR
+//!   re-fit ([`Qr::solve_into`] / [`Qr::into_matrix`]), so steady-state
+//!   iterations perform no heap allocation on the overdetermined path.
 
-use super::{GreedyOpts, RunResult};
-use crate::linalg::{lstsq, nrm2};
+use super::{GreedyOpts, RunResult, SupportKernel};
+use crate::linalg::{lstsq, nrm2, Mat, Qr, SparseIterate};
 use crate::metrics::Trace;
 use crate::problem::Problem;
 use crate::rng::Rng;
-use crate::support::{support_of, top_s, union};
+use crate::support::{support_of, top_s, top_s_into, union, union_into};
 
-/// One StoGradMP iteration body, reusable by the asynchronous runtimes.
+/// One StoGradMP iteration body — the allocating reference implementation
+/// (see [`StoGradMpKernel`] for the hot-path form).
 ///
 /// * `x` — current iterate (overwritten with the new estimate)
 /// * `block` — sampled measurement block
 /// * `extra_support` — `T̃^t` from the shared tally (Alg.-2-style union),
 ///   or `None` for the sequential algorithm.
 ///
-/// Returns the sorted merged support used for the re-fit (the tally votes
-/// on its top-`s` prune, matching the StoIHT tally protocol).
+/// Returns the sorted pruned support `Γ^t` (the tally votes on the top-`s`
+/// prune, matching the StoIHT tally protocol).
 pub fn stogradmp_step(
     problem: &Problem,
     x: &mut [f64],
@@ -54,11 +67,226 @@ pub fn stogradmp_step(
     pruned
 }
 
-/// Sequential StoGradMP.
+/// Reusable StoGradMP step state: the sampling distribution plus every
+/// scratch buffer the identify/merge/re-fit/prune pipeline needs. One
+/// kernel per (simulated or real) core.
+pub struct StoGradMpKernel<'p> {
+    problem: &'p Problem,
+    /// Per-block selection probabilities `p(i)` (uniform by default).
+    probs: Vec<f64>,
+    // scratch — reused across iterations, no steady-state allocation
+    resid: Vec<f64>,
+    grad: Vec<f64>,
+    idx_scratch: Vec<usize>,
+    omega: Vec<usize>,
+    merge_tmp: Vec<usize>,
+    merged: Vec<usize>,
+    supp_scratch: Vec<usize>,
+    /// Row-major `m x k` gather buffer, cycled through [`Qr::factor`] /
+    /// [`Qr::into_matrix`] so the re-fit never allocates the submatrix.
+    sub_data: Vec<f64>,
+    rhs: Vec<f64>,
+    z: Vec<f64>,
+    keep: Vec<usize>,
+    pruned: Vec<usize>,
+    pruned_vals: Vec<f64>,
+    nz_supp: Vec<usize>,
+    nz_vals: Vec<f64>,
+}
+
+impl<'p> StoGradMpKernel<'p> {
+    /// Uniform block sampling (the paper's experiments).
+    pub fn new(problem: &'p Problem) -> Self {
+        let m_blocks = problem.spec.num_blocks();
+        Self::with_probs(problem, vec![1.0 / m_blocks as f64; m_blocks])
+    }
+
+    /// Arbitrary block distribution `p(i)` (must sum to 1). GradMP's
+    /// estimation phase re-fits on the full system, so unlike StoIHT no
+    /// per-block step-size correction is needed.
+    pub fn with_probs(problem: &'p Problem, probs: Vec<f64>) -> Self {
+        let spec = &problem.spec;
+        assert_eq!(probs.len(), spec.num_blocks(), "probs length != number of blocks");
+        let total: f64 = probs.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9, "block probabilities must sum to 1");
+        assert!(probs.iter().all(|&p| p > 0.0), "every block needs positive probability");
+        StoGradMpKernel {
+            problem,
+            probs,
+            resid: vec![0.0; spec.b],
+            grad: vec![0.0; spec.n],
+            idx_scratch: Vec::with_capacity(spec.n),
+            omega: vec![0; (2 * spec.s).min(spec.n)],
+            merge_tmp: Vec::with_capacity(4 * spec.s),
+            merged: Vec::with_capacity(4 * spec.s),
+            supp_scratch: Vec::with_capacity(spec.s),
+            sub_data: Vec::new(),
+            rhs: Vec::with_capacity(spec.m),
+            z: Vec::with_capacity(4 * spec.s),
+            keep: Vec::with_capacity(spec.s),
+            pruned: Vec::with_capacity(spec.s),
+            pruned_vals: Vec::with_capacity(spec.s),
+            nz_supp: Vec::with_capacity(spec.s),
+            nz_vals: Vec::with_capacity(spec.s),
+        }
+    }
+
+    /// Least-squares re-fit over `self.merged` on the full system, then
+    /// prune to `s`: fills `self.pruned` (sorted `Γ^t`) and
+    /// `self.pruned_vals` (the surviving coefficients). Identical
+    /// arithmetic to the reference ([`lstsq`] + [`top_s`]); the
+    /// overdetermined path cycles `self.sub_data` through the QR instead
+    /// of allocating.
+    fn refit_and_prune(&mut self) {
+        let spec = &self.problem.spec;
+        let m = spec.m;
+        let k = self.merged.len();
+        if k <= m {
+            self.problem.a.select_cols_into(&self.merged, &mut self.sub_data);
+            let sub = Mat::from_vec(m, k, std::mem::take(&mut self.sub_data));
+            let qr = Qr::factor(sub);
+            qr.solve_into(&self.problem.y, &mut self.rhs, &mut self.z);
+            self.sub_data = qr.into_matrix().into_data();
+        } else {
+            // Underdetermined merged support (only reachable at very low
+            // sampling rates): cold CGLS fallback, allocating.
+            let sub = self.problem.a.select_cols(&self.merged);
+            let z = lstsq(&sub, &self.problem.y);
+            self.z.clear();
+            self.z.extend_from_slice(&z);
+        }
+        self.keep.resize(spec.s.min(k), 0);
+        top_s_into(&self.z, spec.s, &mut self.idx_scratch, &mut self.keep);
+        // `keep` is ascending and `merged` is sorted, so the image is
+        // already the sorted pruned support.
+        self.pruned.clear();
+        self.pruned_vals.clear();
+        for &kk in &self.keep {
+            self.pruned.push(self.merged[kk]);
+            self.pruned_vals.push(self.z[kk]);
+        }
+    }
+}
+
+/// The tally protocol over StoGradMP. `tally_step` is bit-identical to
+/// [`stogradmp_step`] on the same iterate (see the equivalence tests
+/// below): the identify phase rides the sparse residual gather
+/// ([`crate::linalg::RowBlock::residual_sparse_into`], bit-equal to the
+/// dense `y − A_b x` under the `SparseIterate` invariant) and the same
+/// row-ordered `A_b^T r` accumulation, so switching the runtimes to the
+/// kernel changes no experiment by even an ulp.
+impl<'p> SupportKernel for StoGradMpKernel<'p> {
+    fn problem(&self) -> &Problem {
+        self.problem
+    }
+
+    fn sample_block(&self, rng: &mut Rng) -> usize {
+        rng.categorical(&self.probs)
+    }
+
+    fn tally_step(
+        &mut self,
+        x: &mut SparseIterate<f64>,
+        block: usize,
+        estimate: &[usize],
+        gamma_out: &mut Vec<usize>,
+    ) {
+        let spec = &self.problem.spec;
+        debug_assert_eq!(x.n(), spec.n, "iterate dimension");
+        let (blk, yb) = self.problem.block(block);
+        let row0 = block * spec.b;
+        // identify: r = y_b - A_b x (sparse gather), g = A_b^T r.
+        blk.residual_sparse_into(
+            &self.problem.a_t,
+            row0,
+            yb,
+            x.values(),
+            x.support(),
+            &mut self.resid,
+        );
+        blk.gemv_t_acc(&self.resid, 0.0, &mut self.grad);
+        top_s_into(&self.grad, 2 * spec.s, &mut self.idx_scratch, &mut self.omega);
+        // merge: Ω ∪ supp(x^t) ∪ T̃ (the support carried by the iterate is
+        // the previous prune — GradMP's "current support").
+        union_into(&self.omega, x.support(), &mut self.merge_tmp);
+        if estimate.is_empty() {
+            std::mem::swap(&mut self.merged, &mut self.merge_tmp);
+        } else {
+            union_into(&self.merge_tmp, estimate, &mut self.merged);
+        }
+        self.refit_and_prune();
+        // The carried support is the *nonzero* prune, matching the dense
+        // reference's `support_of`: an exactly-zero LS coefficient (a
+        // rank-deficient merge clamped by the QR tolerance) must not
+        // survive into the next iteration's merge, or the kernel's
+        // trajectory would diverge from `stogradmp_step`'s. The vote Γ^t
+        // stays the full pruned set, as the reference returns it.
+        self.nz_supp.clear();
+        self.nz_vals.clear();
+        for (&col, &v) in self.pruned.iter().zip(&self.pruned_vals) {
+            if v != 0.0 {
+                self.nz_supp.push(col);
+                self.nz_vals.push(v);
+            }
+        }
+        x.assign_pairs(&self.nz_supp, &self.nz_vals);
+        gamma_out.clear();
+        gamma_out.extend_from_slice(&self.pruned);
+    }
+
+    fn dense_step(&mut self, x: &mut [f64], block: usize, gamma_out: &mut Vec<usize>) {
+        let spec = &self.problem.spec;
+        let (blk, yb) = self.problem.block(block);
+        // identify on the dense iterate (the SharedX ablation is O(n) by
+        // design — concurrent overwrites break the sparse invariant).
+        blk.gemv_into(x, &mut self.resid);
+        for (r, &y) in self.resid.iter_mut().zip(yb) {
+            *r = y - *r;
+        }
+        blk.gemv_t_acc(&self.resid, 0.0, &mut self.grad);
+        top_s_into(&self.grad, 2 * spec.s, &mut self.idx_scratch, &mut self.omega);
+        self.supp_scratch.clear();
+        self.supp_scratch.extend((0..spec.n).filter(|&i| x[i] != 0.0));
+        union_into(&self.omega, &self.supp_scratch, &mut self.merged);
+        self.refit_and_prune();
+        x.fill(0.0);
+        for (&col, &v) in self.pruned.iter().zip(&self.pruned_vals) {
+            x[col] = v;
+        }
+        gamma_out.clear();
+        gamma_out.extend_from_slice(&self.pruned);
+    }
+
+    fn burn(&mut self, x: &SparseIterate<f64>, block: usize) {
+        // Throwaway identify phase: the gradient pass is the stream-heavy
+        // part of a GradMP iteration (the LS re-fit is compute over a
+        // k ≤ 3s column panel).
+        let (blk, yb) = self.problem.block(block);
+        let row0 = block * self.problem.spec.b;
+        blk.residual_sparse_into(
+            &self.problem.a_t,
+            row0,
+            yb,
+            x.values(),
+            x.support(),
+            &mut self.resid,
+        );
+        blk.gemv_t_acc(&self.resid, 0.0, &mut self.grad);
+        std::hint::black_box(&self.grad);
+    }
+}
+
+/// Sequential StoGradMP, riding [`StoGradMpKernel`]'s allocation-free step
+/// — so the asynchronous runtimes execute *exactly* the arithmetic the
+/// sequential solver is tested with (the same factoring StoIHT has had
+/// since the seed), and the `c = 1` cross-check in
+/// `rust/tests/kernel_parity.rs` can replay it stream-for-stream.
 pub fn stogradmp(problem: &Problem, opts: &GreedyOpts, rng: &mut Rng) -> RunResult {
-    let spec = &problem.spec;
-    let m_blocks = spec.num_blocks();
-    let mut x = vec![0.0f64; spec.n];
+    assert!(opts.check_every >= 1);
+    let mut kernel = StoGradMpKernel::new(problem);
+    let mut x = SparseIterate::zeros(problem.spec.n);
+    let mut gamma = Vec::new();
+    let mut r_scratch = Vec::new();
     let mut error_trace = Trace::new();
     let mut resid_trace = Trace::new();
     let mut converged = false;
@@ -66,14 +294,14 @@ pub fn stogradmp(problem: &Problem, opts: &GreedyOpts, rng: &mut Rng) -> RunResu
     let mut residual = nrm2(&problem.y);
 
     for t in 1..=opts.max_iters {
-        let block = rng.below(m_blocks);
-        stogradmp_step(problem, &mut x, block, None);
+        let block = kernel.sample_block(rng);
+        kernel.tally_step(&mut x, block, &[], &mut gamma);
         iters = t;
         if opts.record_error {
-            error_trace.push(problem.recovery_error(&x));
+            error_trace.push(problem.recovery_error(x.values()));
         }
         if t % opts.check_every == 0 {
-            residual = problem.residual_norm(&x);
+            residual = kernel.residual(&x, &mut r_scratch);
             if opts.record_resid {
                 resid_trace.push(residual);
             }
@@ -84,9 +312,9 @@ pub fn stogradmp(problem: &Problem, opts: &GreedyOpts, rng: &mut Rng) -> RunResu
         }
     }
     if !converged {
-        residual = problem.residual_norm(&x);
+        residual = problem.residual_norm(x.values());
     }
-    RunResult { x, iters, converged, residual, error_trace, resid_trace }
+    RunResult { x: x.into_values(), iters, converged, residual, error_trace, resid_trace }
 }
 
 #[cfg(test)]
@@ -141,5 +369,91 @@ mod tests {
         let r2 = stogradmp(&p, &GreedyOpts::default(), &mut Rng::seed_from(3));
         assert_eq!(r1.x, r2.x);
         assert_eq!(r1.iters, r2.iters);
+    }
+
+    #[test]
+    fn kernel_matches_reference_step_bitwise() {
+        // Whole trajectories: the allocation-free kernel step vs the
+        // allocating reference, with and without a tally-style extra
+        // support, must agree on every bit of every iterate.
+        for seed in 0..4u64 {
+            let p = easy(40 + seed);
+            let mut rng = Rng::seed_from(600 + seed);
+            let mut extra = rng.subset(p.spec.n, p.spec.s);
+            extra.sort_unstable();
+            let mut kernel = StoGradMpKernel::new(&p);
+            let mut xs = SparseIterate::zeros(p.spec.n);
+            let mut xd = vec![0.0f64; p.spec.n];
+            let mut gamma = Vec::new();
+            for it in 0..25 {
+                let block = rng.below(p.spec.num_blocks());
+                let use_extra = it % 3 == 1;
+                let e: &[usize] = if use_extra { &extra } else { &[] };
+                kernel.tally_step(&mut xs, block, e, &mut gamma);
+                let pruned =
+                    stogradmp_step(&p, &mut xd, block, if use_extra { Some(&extra) } else { None });
+                assert_eq!(gamma, pruned, "seed {seed} iter {it}: pruned support");
+                for i in 0..p.spec.n {
+                    assert_eq!(
+                        xd[i].to_bits(),
+                        xs.values()[i].to_bits(),
+                        "seed {seed} iter {it} coord {i}: {} vs {}",
+                        xd[i],
+                        xs.values()[i]
+                    );
+                }
+                assert!(xs.nnz() <= p.spec.s);
+            }
+        }
+    }
+
+    #[test]
+    fn dense_step_matches_reference() {
+        let p = easy(50);
+        let mut kernel = StoGradMpKernel::new(&p);
+        let mut xk = vec![0.0f64; p.spec.n];
+        let mut xr = vec![0.0f64; p.spec.n];
+        let mut gamma = Vec::new();
+        for it in 0..15 {
+            let block = it % p.spec.num_blocks();
+            kernel.dense_step(&mut xk, block, &mut gamma);
+            let pruned = stogradmp_step(&p, &mut xr, block, None);
+            assert_eq!(gamma, pruned, "iter {it}");
+            for i in 0..p.spec.n {
+                assert_eq!(xk[i].to_bits(), xr[i].to_bits(), "iter {it} coord {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_sequential_solver_converges_sparse() {
+        let p = easy(51);
+        let opts = GreedyOpts { max_iters: 100, ..Default::default() };
+        let r = stogradmp(&p, &opts, &mut Rng::seed_from(9));
+        assert!(r.converged);
+        assert!(p.recovery_error(&r.x) < 1e-7);
+        let nnz = r.x.iter().filter(|&&v| v != 0.0).count();
+        assert!(nnz <= p.spec.s);
+    }
+
+    #[test]
+    fn tally_estimate_accelerates_first_step() {
+        // One kernel step seeded with the planted support as T̃ must land
+        // the LS fit exactly, mirroring `extra_support_is_respected`.
+        let p = easy(52);
+        let mut kernel = StoGradMpKernel::new(&p);
+        let mut x = SparseIterate::zeros(p.spec.n);
+        let mut gamma = Vec::new();
+        kernel.tally_step(&mut x, 0, &p.support, &mut gamma);
+        assert!(gamma.len() <= p.spec.s);
+        assert!(p.recovery_error(x.values()) < 1e-7);
+    }
+
+    #[test]
+    #[should_panic(expected = "sum to 1")]
+    fn bad_probs_rejected() {
+        let p = easy(53);
+        let mb = p.spec.num_blocks();
+        let _ = StoGradMpKernel::with_probs(&p, vec![0.3 / mb as f64; mb]);
     }
 }

@@ -5,7 +5,7 @@
 //! real-thread runtime execute *exactly* the arithmetic validated here
 //! (and, via the test-vector suite, against the JAX oracle).
 
-use super::{GreedyOpts, RunResult};
+use super::{GreedyOpts, RunResult, SupportKernel};
 use crate::linalg::{nrm2, SparseIterate};
 use crate::metrics::Trace;
 use crate::problem::Problem;
@@ -153,6 +153,55 @@ impl<'p> StoihtKernel<'p> {
     /// Problem dimension.
     pub fn n(&self) -> usize {
         self.problem.spec.n
+    }
+}
+
+/// The tally protocol over StoIHT: [`SupportKernel::tally_step`] is the
+/// sparse fast path [`StoihtKernel::step_sparse`] verbatim (bit-identical
+/// iterates — see `rust/tests/kernel_parity.rs`), with the empty estimate
+/// degrading to Algorithm 1.
+impl<'p> SupportKernel for StoihtKernel<'p> {
+    fn problem(&self) -> &Problem {
+        self.problem
+    }
+
+    fn sample_block(&self, rng: &mut Rng) -> usize {
+        rng.categorical(&self.probs)
+    }
+
+    fn tally_step(
+        &mut self,
+        x: &mut SparseIterate<f64>,
+        block: usize,
+        estimate: &[usize],
+        gamma_out: &mut Vec<usize>,
+    ) {
+        let extra = if estimate.is_empty() { None } else { Some(estimate) };
+        let gamma = self.step_sparse(x, block, extra);
+        gamma_out.clear();
+        gamma_out.extend_from_slice(gamma);
+    }
+
+    fn dense_step(&mut self, x: &mut [f64], block: usize, gamma_out: &mut Vec<usize>) {
+        let gamma = self.step(x, block, None);
+        gamma_out.clear();
+        gamma_out.extend_from_slice(gamma);
+    }
+
+    fn burn(&mut self, x: &SparseIterate<f64>, block: usize) {
+        let (blk, yb) = self.problem.block(block);
+        let row0 = block * self.problem.spec.b;
+        blk.proxy_step_sparse_into(
+            &self.problem.a_t,
+            row0,
+            yb,
+            x.values(),
+            x.support(),
+            self.alphas[block],
+            &mut self.resid,
+            &mut self.proxy,
+        );
+        std::hint::black_box(&self.proxy);
     }
 }
 

@@ -1,4 +1,5 @@
-//! Real-thread asynchronous StoIHT — the deployment the paper *simulates*.
+//! Real-thread asynchronous sparse recovery — the deployment the paper
+//! *simulates*.
 //!
 //! `c` OS threads run Algorithm 2 concurrently against a lock-free
 //! [`crate::tally::AtomicTally`]; there are no barriers, no locks on the
@@ -7,23 +8,29 @@
 //! iterate passes `||y − A x||_2 < tol` raises a stop flag; everyone else
 //! drains out. This module turns the paper's simulated claim ("a speedup
 //! in total time is expected") into a measured wallclock number (see
-//! README.md and the `hot_path` bench).
+//! README.md and the `hot_path` / `stogradmp_async` benches).
+//!
+//! The runtime is **generic over the algorithm**: [`run_async_with`]
+//! drives any [`SupportKernel`] — StoIHT ([`run_async`], the default),
+//! StoGradMP (`StoGradMpKernel`), or the PJRT-backed [`BackendStep`] —
+//! through the identical read/vote/commit/exit protocol.
 //!
 //! The worker inner loop is allocation-free after warmup: iterates are
-//! [`SparseIterate`]s driven through the sparse proxy kernel, `Γ^t` is
-//! written into reused buffers (no per-iteration `to_vec`), and the tally
-//! estimate and the sparse exit check run in caller-owned scratch.
+//! [`SparseIterate`]s driven through each kernel's sparse fast path, `Γ^t`
+//! is written into reused buffers (no per-iteration `to_vec`), and the
+//! tally estimate and the sparse exit check run in caller-owned scratch.
 //!
 //! Slow cores are emulated by *work*, not sleep: a worker with period `k`
-//! recomputes its proxy `k − 1` extra times per iteration, so the
-//! time-dilation is made of the same memory traffic the fast cores issue —
-//! closer to a genuinely contended machine than `thread::sleep`.
+//! burns its kernel's identify-phase compute `k − 1` extra times per
+//! iteration, so the time-dilation is made of the same memory traffic the
+//! fast cores issue — closer to a genuinely contended machine than
+//! `thread::sleep`.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-use crate::algorithms::StoihtKernel;
+use crate::algorithms::{StoihtKernel, SupportKernel};
 use crate::backend::Backend;
 use crate::linalg::SparseIterate;
 use crate::problem::Problem;
@@ -35,6 +42,11 @@ use crate::tally::{AtomicTally, TallyWeighting};
 /// Options for the real-thread runtime.
 #[derive(Clone, Debug)]
 pub struct AsyncOpts {
+    /// Step size used by the default StoIHT factory ([`run_async`]).
+    /// Kernels bake their step size at construction, so a custom
+    /// [`run_async_with`] factory must thread it itself (e.g.
+    /// `BackendStep::new(p, backend).with_gamma(opts.gamma)`) — the
+    /// runtime cannot inject it after the fact.
     pub gamma: f64,
     pub tolerance: f64,
     /// Per-worker local iteration cap.
@@ -89,12 +101,15 @@ struct ExitInfo {
 
 /// Run asynchronous StoIHT on `cores` OS threads (native compute).
 pub fn run_async(problem: &Problem, cores: usize, opts: &AsyncOpts, seed: u64) -> AsyncOutcome {
-    run_async_with(problem, cores, opts, seed, |p| Box::new(NativeStep::new(p)))
+    run_async_with(problem, cores, opts, seed, |p| StoihtKernel::new(p, opts.gamma))
 }
 
-/// As [`run_async`] but with a custom per-worker step factory, used to run
-/// the same protocol over the PJRT backend (`examples/e2e_pjrt.rs`).
-pub fn run_async_with<'p, F>(
+/// As [`run_async`] but generic over the per-worker [`SupportKernel`]
+/// factory: asynchronous StoGradMP (`|p| StoGradMpKernel::new(p)`), the
+/// PJRT-backed step (`examples/e2e_pjrt.rs`), or any future kernel. The
+/// factory crosses the thread boundary (it must be `Sync`), never the
+/// kernel — each worker constructs its step inside its own thread.
+pub fn run_async_with<'p, K, F>(
     problem: &'p Problem,
     cores: usize,
     opts: &AsyncOpts,
@@ -102,7 +117,8 @@ pub fn run_async_with<'p, F>(
     make_step: F,
 ) -> AsyncOutcome
 where
-    F: Fn(&'p Problem) -> Box<dyn WorkerStep + 'p> + Sync,
+    K: SupportKernel + 'p,
+    F: Fn(&'p Problem) -> K + Sync,
 {
     assert!(cores >= 1);
     let spec = &problem.spec;
@@ -141,22 +157,19 @@ where
                     // read: T̃ = supp_s(φ) — racy by design.
                     tally.estimate_into(spec.s, &mut tally_scratch, &mut estimate);
                     let block = step.sample_block(&mut rng);
-                    // slow-core emulation: burn (period-1) extra proxies.
+                    // slow-core emulation: burn (period-1) identify phases.
                     for _ in 1..period {
                         step.burn(&x, block);
                     }
-                    step.step(&mut x, block, &estimate, opts.gamma, &mut gamma);
+                    step.tally_step(&mut x, block, &estimate, &mut gamma);
                     // update tally: φ_Γt += t, φ_Γ(t-1) -= t-1 (atomic RMWs).
                     tally.commit(&gamma, &prev_gamma, t);
                     std::mem::swap(&mut prev_gamma, &mut gamma);
                     counter.store(t, Ordering::Relaxed);
                     if t as usize % opts.check_every == 0 {
-                        // x.support() is exactly Γ^t ∪ T̃ after the step.
-                        let r = problem.residual_norm_sparse_with(
-                            x.values(),
-                            x.support(),
-                            &mut resid_scratch,
-                        );
+                        // The kernel's sparse exit check over x's support
+                        // (Γ^t ∪ T̃ for StoIHT, the pruned Γ^t for GradMP).
+                        let r = step.residual(&x, &mut resid_scratch);
                         if r < opts.tolerance {
                             let mut guard = exit_info.lock().unwrap();
                             if guard.is_none() {
@@ -201,91 +214,14 @@ where
     }
 }
 
-/// One worker's per-iteration compute, abstracted so native Rust kernels
-/// and the PJRT-executed AOT artifacts are interchangeable under the same
-/// coordination protocol.
-///
-/// Deliberately **not** `Send`: each worker constructs its step inside its
-/// own thread (the PJRT client is not thread-safe in the 0.1.6 crate), so
-/// the factory crosses the thread boundary, never the step object.
-pub trait WorkerStep {
-    /// Sample a measurement block.
-    fn sample_block(&mut self, rng: &mut Rng) -> usize;
-    /// Full Alg.-2 iteration body. Updates `x` in place (its support
-    /// becomes `Γ^t ∪ estimate`) and writes the sorted `Γ^t` into
-    /// `gamma_out` (cleared first) — a caller scratch buffer, so no
-    /// per-iteration vector is allocated.
-    fn step(
-        &mut self,
-        x: &mut SparseIterate<f64>,
-        block: usize,
-        estimate: &[usize],
-        gamma: f64,
-        gamma_out: &mut Vec<usize>,
-    );
-    /// Throwaway proxy computation (slow-core work emulation).
-    fn burn(&mut self, x: &SparseIterate<f64>, block: usize);
-}
-
-/// Native worker step backed by [`StoihtKernel`]'s sparse fast path.
-pub struct NativeStep<'p> {
-    kernel: StoihtKernel<'p>,
-    burn_out: Vec<f64>,
-    burn_scratch: Vec<f64>,
-    problem: &'p Problem,
-}
-
-impl<'p> NativeStep<'p> {
-    pub fn new(problem: &'p Problem) -> Self {
-        NativeStep {
-            kernel: StoihtKernel::new(problem, 1.0),
-            burn_out: vec![0.0; problem.spec.n],
-            burn_scratch: vec![0.0; problem.spec.b],
-            problem,
-        }
-    }
-}
-
-impl<'p> WorkerStep for NativeStep<'p> {
-    fn sample_block(&mut self, rng: &mut Rng) -> usize {
-        self.kernel.sample_block(rng)
-    }
-
-    fn step(
-        &mut self,
-        x: &mut SparseIterate<f64>,
-        block: usize,
-        estimate: &[usize],
-        _gamma: f64,
-        gamma_out: &mut Vec<usize>,
-    ) {
-        let extra = if estimate.is_empty() { None } else { Some(estimate) };
-        let gamma = self.kernel.step_sparse(x, block, extra);
-        gamma_out.clear();
-        gamma_out.extend_from_slice(gamma);
-    }
-
-    fn burn(&mut self, x: &SparseIterate<f64>, block: usize) {
-        let (blk, yb) = self.problem.block(block);
-        let row0 = block * self.problem.spec.b;
-        blk.proxy_step_sparse_into(
-            &self.problem.a_t,
-            row0,
-            yb,
-            x.values(),
-            x.support(),
-            1.0,
-            &mut self.burn_scratch,
-            &mut self.burn_out,
-        );
-        std::hint::black_box(&self.burn_out);
-    }
-}
-
-/// Backend-driven worker step (PJRT or any [`Backend`] impl).
+/// Backend-driven worker step (PJRT or any [`Backend`] impl), running the
+/// StoIHT arithmetic inside the backend while speaking the same
+/// [`SupportKernel`] protocol as the native kernels.
 pub struct BackendStep<'p, B: Backend> {
     backend: B,
     problem: &'p Problem,
+    /// Step size `gamma` (the native kernels bake it at construction too).
+    gamma: f64,
     mask: Vec<f64>,
     /// Per-block selection probabilities `p(i)`.
     probs: Vec<f64>,
@@ -296,7 +232,7 @@ pub struct BackendStep<'p, B: Backend> {
 }
 
 impl<'p, B: Backend> BackendStep<'p, B> {
-    /// Uniform block sampling (the paper's experiments).
+    /// Uniform block sampling (the paper's experiments), `gamma = 1`.
     pub fn new(problem: &'p Problem, backend: B) -> Self {
         let mb = problem.spec.num_blocks();
         Self::with_probs(problem, backend, vec![1.0 / mb as f64; mb])
@@ -318,32 +254,42 @@ impl<'p, B: Backend> BackendStep<'p, B> {
         BackendStep {
             backend,
             problem,
+            gamma: 1.0,
             mask: vec![0.0; problem.spec.n],
             probs,
             inv_mp,
             support_scratch: Vec::new(),
         }
     }
+
+    /// Override the step size `gamma` (builder style).
+    pub fn with_gamma(mut self, gamma: f64) -> Self {
+        self.gamma = gamma;
+        self
+    }
 }
 
-impl<'p, B: Backend> WorkerStep for BackendStep<'p, B> {
-    fn sample_block(&mut self, rng: &mut Rng) -> usize {
+impl<'p, B: Backend> SupportKernel for BackendStep<'p, B> {
+    fn problem(&self) -> &Problem {
+        self.problem
+    }
+
+    fn sample_block(&self, rng: &mut Rng) -> usize {
         rng.categorical(&self.probs)
     }
 
-    fn step(
+    fn tally_step(
         &mut self,
         x: &mut SparseIterate<f64>,
         block: usize,
         estimate: &[usize],
-        gamma: f64,
         gamma_out: &mut Vec<usize>,
     ) {
         self.mask.fill(0.0);
         for &i in estimate {
             self.mask[i] = 1.0;
         }
-        let alpha = gamma * self.inv_mp[block];
+        let alpha = self.gamma * self.inv_mp[block];
         let (x_next, gamma_set) = self
             .backend
             .stoiht_step(self.problem, block, x.values(), alpha, &self.mask)
@@ -352,6 +298,18 @@ impl<'p, B: Backend> WorkerStep for BackendStep<'p, B> {
         // the estimate's indicator), so that union is its support.
         union_into(&gamma_set, estimate, &mut self.support_scratch);
         x.assign_from(&x_next, &self.support_scratch);
+        gamma_out.clear();
+        gamma_out.extend_from_slice(&gamma_set);
+    }
+
+    fn dense_step(&mut self, x: &mut [f64], block: usize, gamma_out: &mut Vec<usize>) {
+        self.mask.fill(0.0);
+        let alpha = self.gamma * self.inv_mp[block];
+        let (x_next, gamma_set) = self
+            .backend
+            .stoiht_step(self.problem, block, x, alpha, &self.mask)
+            .expect("backend step failed");
+        x.copy_from_slice(&x_next);
         gamma_out.clear();
         gamma_out.extend_from_slice(&gamma_set);
     }
@@ -436,11 +394,47 @@ mod tests {
     #[test]
     fn backend_step_converges_through_native_backend() {
         // The Backend-driven worker (the PJRT protocol path) over the
-        // native backend: exercises the mask/union/assign plumbing.
+        // native backend: exercises the mask/union/assign plumbing. Boxed
+        // on purpose — the Box<dyn SupportKernel> forwarding path is the
+        // one heterogeneous callers use.
         let p = easy(7);
         let out = run_async_with(&p, 2, &AsyncOpts::default(), 23, |prob| {
             Box::new(BackendStep::new(prob, NativeBackend::new()))
         });
+        assert!(out.converged);
+        assert!(p.residual_norm(&out.x) < 1e-6);
+    }
+
+    #[test]
+    fn async_stogradmp_converges_multithreaded() {
+        // The tentpole deliverable: asynchronous StoGradMP end-to-end on
+        // real threads, sharing the same lock-free tally protocol.
+        use crate::algorithms::StoGradMpKernel;
+        let p = easy(10);
+        for cores in [1usize, 4] {
+            let opts = AsyncOpts { max_local_iters: 200, ..Default::default() };
+            let out = run_async_with(&p, cores, &opts, 37 + cores as u64, StoGradMpKernel::new);
+            assert!(out.converged, "cores {cores}");
+            assert!(p.residual_norm(&out.x) < 1e-6, "cores {cores}");
+            // GradMP prunes to s: the winner iterate is s-sparse.
+            let nnz = out.x.iter().filter(|&&v| v != 0.0).count();
+            assert!(nnz <= p.spec.s, "cores {cores}: nnz {nnz}");
+            // and converges in far fewer local iterations than StoIHT needs
+            let winner = out.exit_core.unwrap();
+            assert!(out.local_iters[winner] < 100, "{:?}", out.local_iters);
+        }
+    }
+
+    #[test]
+    fn async_stogradmp_slow_schedule_converges() {
+        use crate::algorithms::StoGradMpKernel;
+        let p = easy(11);
+        let opts = AsyncOpts {
+            schedule: SpeedSchedule::HalfSlow { period: 4 },
+            max_local_iters: 300,
+            ..Default::default()
+        };
+        let out = run_async_with(&p, 4, &opts, 53, StoGradMpKernel::new);
         assert!(out.converged);
         assert!(p.residual_norm(&out.x) < 1e-6);
     }
@@ -456,11 +450,10 @@ mod tests {
         let step = BackendStep::with_probs(&p, NativeBackend::new(), probs.clone());
         let gamma = 0.8;
         assert!((gamma * step.inv_mp[0] - gamma / (mb as f64 * 0.5)).abs() < 1e-12);
-        assert!(
-            (gamma * step.inv_mp[1] - gamma / (mb as f64 * probs[1])).abs() < 1e-12
-        );
+        assert!((gamma * step.inv_mp[1] - gamma / (mb as f64 * probs[1])).abs() < 1e-12);
+        assert!((step.with_gamma(0.8).gamma - 0.8).abs() < 1e-15);
         // sampling respects the distribution
-        let mut step = step;
+        let step = BackendStep::with_probs(&p, NativeBackend::new(), probs);
         let mut rng = Rng::seed_from(11);
         let hits = (0..4000).filter(|_| step.sample_block(&mut rng) == 0).count();
         assert!((1700..2300).contains(&hits), "{hits}");

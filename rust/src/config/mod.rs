@@ -11,6 +11,7 @@ mod toml;
 
 pub use toml::{parse_toml, TomlDoc, TomlError, Value};
 
+use crate::algorithms::Alg;
 use crate::problem::{Ensemble, ProblemSpec, SignalModel};
 
 /// Typed experiment configuration (see `configs/*.toml` for examples).
@@ -18,6 +19,9 @@ use crate::problem::{Ensemble, ProblemSpec, SignalModel};
 pub struct ExperimentConfig {
     /// Problem distribution.
     pub problem: ProblemSpec,
+    /// Which [`crate::algorithms::SupportKernel`] the solvers and the
+    /// asynchronous runtimes drive (paper default: StoIHT).
+    pub alg: Alg,
     /// Step size `gamma` (paper: 1.0).
     pub gamma: f64,
     /// Exit tolerance on `||y - A x||_2` (paper: 1e-7).
@@ -39,6 +43,7 @@ impl Default for ExperimentConfig {
     fn default() -> Self {
         ExperimentConfig {
             problem: ProblemSpec::paper(),
+            alg: Alg::Stoiht,
             gamma: 1.0,
             tolerance: 1e-7,
             max_iters: 1500,
@@ -63,6 +68,11 @@ impl ExperimentConfig {
 
         for (key, value) in doc.section("") {
             match key.as_str() {
+                "alg" => {
+                    let s = value.as_str().ok_or("alg must be a string")?;
+                    cfg.alg = Alg::parse(s)
+                        .ok_or_else(|| format!("unknown alg `{s}` (stoiht|stogradmp)"))?;
+                }
                 "gamma" => cfg.gamma = value.as_f64().ok_or("gamma must be a number")?,
                 "tolerance" => cfg.tolerance = value.as_f64().ok_or("tolerance must be a number")?,
                 "max_iters" => {
@@ -203,6 +213,15 @@ noise_std = 0.01
     fn rejects_unknown_keys() {
         assert!(ExperimentConfig::from_toml("gamam = 1.0").is_err());
         assert!(ExperimentConfig::from_toml("[problem]\nq = 3").is_err());
+    }
+
+    #[test]
+    fn alg_selector_parses() {
+        assert_eq!(ExperimentConfig::default().alg, Alg::Stoiht);
+        let c = ExperimentConfig::from_toml("alg = \"stogradmp\"").unwrap();
+        assert_eq!(c.alg, Alg::StoGradMp);
+        assert!(ExperimentConfig::from_toml("alg = \"htp\"").is_err());
+        assert!(ExperimentConfig::from_toml("alg = 3").is_err());
     }
 
     #[test]

@@ -15,12 +15,12 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::algorithms::{self, GreedyOpts, RunResult};
+use crate::algorithms::{self, Alg, GreedyOpts, RunResult, StoGradMpKernel};
 use crate::config::ExperimentConfig;
 use crate::metrics::{stats, Stats};
 use crate::problem::Problem;
 use crate::rng::Rng;
-use crate::sim::{simulate, SimOpts, SimOutcome, SpeedSchedule};
+use crate::sim::{simulate, simulate_with, SimOpts, SimOutcome, SpeedSchedule};
 
 /// Run `trials` independent jobs on `threads` OS threads.
 ///
@@ -112,17 +112,41 @@ impl Leader {
         })
     }
 
-    /// Monte-Carlo over the discrete-time simulator at a fixed core count.
+    /// Monte-Carlo over the configured sequential algorithm
+    /// ([`ExperimentConfig::alg`]) — the generalized horizontal line. The
+    /// StoIHT arm delegates so the trial body (and its RNG derivation)
+    /// exists exactly once.
+    pub fn monte_carlo_seq(&self, opts: &GreedyOpts) -> Vec<RunResult> {
+        match self.cfg.alg {
+            Alg::Stoiht => self.monte_carlo_stoiht(opts),
+            Alg::StoGradMp => {
+                run_trials(self.cfg.trials, self.cfg.trial_threads, self.cfg.seed, |_i, rng| {
+                    let p = self.problem_for_trial(rng);
+                    let mut solver_rng = rng.split(0xA160);
+                    algorithms::stogradmp(&p, opts, &mut solver_rng)
+                })
+            }
+        }
+    }
+
+    /// Monte-Carlo over the discrete-time simulator at a fixed core count,
+    /// driving the configured algorithm's kernel.
     pub fn monte_carlo_sim(
         &self,
         cores: usize,
         schedule: &SpeedSchedule,
         sim_opts: &SimOpts,
     ) -> Vec<SimOutcome> {
-        run_trials(self.cfg.trials, self.cfg.trial_threads, self.cfg.seed, |_i, rng| {
+        let alg = self.cfg.alg;
+        run_trials(self.cfg.trials, self.cfg.trial_threads, self.cfg.seed, move |_i, rng| {
             let p = self.problem_for_trial(rng);
             let mut sim_rng = rng.split(0x519);
-            simulate(&p, cores, schedule, sim_opts, &mut sim_rng)
+            match alg {
+                Alg::Stoiht => simulate(&p, cores, schedule, sim_opts, &mut sim_rng),
+                Alg::StoGradMp => {
+                    simulate_with(&p, cores, schedule, sim_opts, &mut sim_rng, StoGradMpKernel::new)
+                }
+            }
         })
     }
 
@@ -197,6 +221,38 @@ mod tests {
         for p in &pts {
             assert!(p.convergence_rate > 0.5);
             assert!(p.steps.mean > 0.0);
+        }
+    }
+
+    #[test]
+    fn leader_dispatches_stogradmp() {
+        let mut cfg = small_cfg();
+        cfg.alg = Alg::StoGradMp;
+        cfg.trials = 4;
+        cfg.max_iters = 150;
+        let leader = Leader::new(cfg);
+        let seq = leader.monte_carlo_seq(&leader.greedy_opts());
+        assert!(seq.iter().all(|r| r.converged), "sequential StoGradMP trials");
+        // GradMP converges in tens of iterations where StoIHT needs hundreds.
+        assert!(seq.iter().all(|r| r.iters < 100));
+        let sims = leader.monte_carlo_sim(
+            2,
+            &SpeedSchedule::AllFast,
+            &SimOpts { max_steps: 150, ..Default::default() },
+        );
+        assert!(sims.iter().filter(|o| o.converged).count() >= 3, "async StoGradMP sim trials");
+    }
+
+    #[test]
+    fn monte_carlo_seq_matches_stoiht_under_default_alg() {
+        let mut cfg = small_cfg();
+        cfg.trials = 3;
+        let leader = Leader::new(cfg);
+        let a = leader.monte_carlo_stoiht(&leader.greedy_opts());
+        let b = leader.monte_carlo_seq(&leader.greedy_opts());
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.x, rb.x);
+            assert_eq!(ra.iters, rb.iters);
         }
     }
 

@@ -124,6 +124,27 @@ impl<S: Scalar> Mat<S> {
         out
     }
 
+    /// Allocation-free twin of [`Mat::select_cols`]: gather the selected
+    /// columns (row-major, same element order) into a reused buffer,
+    /// cleared first. [`Mat::from_vec`] turns the buffer into the submatrix
+    /// and [`Mat::into_data`] reclaims it — the StoGradMP kernel's re-fit
+    /// cycles one buffer this way instead of allocating per iteration.
+    pub fn select_cols_into(&self, cols: &[usize], out: &mut Vec<S>) {
+        out.clear();
+        out.reserve(self.rows * cols.len());
+        for i in 0..self.rows {
+            let src = self.row(i);
+            for &j in cols {
+                out.push(src[j]);
+            }
+        }
+    }
+
+    /// Consume, returning the row-major data vector.
+    pub fn into_data(self) -> Vec<S> {
+        self.data
+    }
+
     /// `y = A x` (allocating convenience wrapper over the view kernel).
     pub fn gemv(&self, x: &[S]) -> Vec<S> {
         self.as_block().gemv(x)
@@ -284,41 +305,9 @@ impl<'a, S: Scalar> RowBlock<'a, S> {
     ) {
         let b = self.rows;
         let n = self.cols;
-        assert_eq!(y.len(), b, "proxy_step_sparse: y length");
-        assert_eq!(x.len(), n, "proxy_step_sparse: x length");
-        assert_eq!(scratch.len(), b, "proxy_step_sparse: scratch length");
         assert_eq!(out.len(), n, "proxy_step_sparse: out length");
-        assert_eq!(a_t.rows(), n, "proxy_step_sparse: a_t must be the n x m transpose");
-        assert!(row0 + b <= a_t.cols(), "proxy_step_sparse: row window out of range");
-        debug_assert!(
-            support.windows(2).all(|w| w[0] < w[1]),
-            "proxy_step_sparse: support must be strictly ascending"
-        );
-        let m = a_t.cols();
-        let at = a_t.data();
-        // pass 1: scratch = y - A_b x over the supported columns only,
-        // in dot()'s exact lane order (lane = column index mod 4, with the
-        // tail past 4*(n/4) folded in sequentially after the lane merge).
-        let split = 4 * (n / 4);
-        let tail_start = support.partition_point(|&j| j < split);
-        for i in 0..b {
-            let base = row0 + i;
-            let (mut s0, mut s1, mut s2, mut s3) = (S::ZERO, S::ZERO, S::ZERO, S::ZERO);
-            for &j in &support[..tail_start] {
-                let t = at[j * m + base] * x[j];
-                match j & 3 {
-                    0 => s0 += t,
-                    1 => s1 += t,
-                    2 => s2 += t,
-                    _ => s3 += t,
-                }
-            }
-            let mut s = (s0 + s1) + (s2 + s3);
-            for &j in &support[tail_start..] {
-                s += at[j * m + base] * x[j];
-            }
-            scratch[i] = y[i] - s;
-        }
+        // pass 1: scratch = y - A_b x over the supported columns only.
+        self.residual_sparse_into(a_t, row0, y, x, support, scratch);
         // pass 2: out = x + alpha * A_b^T scratch. Same per-coordinate row
         // order as the dense kernel (axpy is elementwise, so the column
         // blocking below cannot change any result bit); `x` is scattered
@@ -339,6 +328,62 @@ impl<'a, S: Scalar> RowBlock<'a, S> {
                 axpy(w, &self.row(i)[c0..c1], &mut out[c0..c1]);
             }
             c0 = c1;
+        }
+    }
+
+    /// The sparse proxy kernel's residual pass on its own:
+    /// `scratch = y − A_b x` gathering only the supported columns of `A_b`
+    /// via the transposed copy `a_t` (see
+    /// [`RowBlock::proxy_step_sparse_into`] for the layout contract).
+    /// Shared by the StoIHT proxy and the StoGradMP identify phase.
+    ///
+    /// Bit-for-bit contract: under the `SparseIterate` invariant
+    /// (`x[j] == +0.0` off a strictly ascending `support`), `scratch` is
+    /// bit-identical to the dense `y[i] − dot(row_i, x)` — the gather
+    /// replicates [`dot`]'s 4-lane accumulation order over the surviving
+    /// terms (lane = column index mod 4, tail past `4*(n/4)` folded in
+    /// sequentially after the lane merge).
+    pub fn residual_sparse_into(
+        &self,
+        a_t: &Mat<S>,
+        row0: usize,
+        y: &[S],
+        x: &[S],
+        support: &[usize],
+        scratch: &mut [S],
+    ) {
+        let b = self.rows;
+        let n = self.cols;
+        assert_eq!(y.len(), b, "residual_sparse: y length");
+        assert_eq!(x.len(), n, "residual_sparse: x length");
+        assert_eq!(scratch.len(), b, "residual_sparse: scratch length");
+        assert_eq!(a_t.rows(), n, "residual_sparse: a_t must be the n x m transpose");
+        assert!(row0 + b <= a_t.cols(), "residual_sparse: row window out of range");
+        debug_assert!(
+            support.windows(2).all(|w| w[0] < w[1]),
+            "residual_sparse: support must be strictly ascending"
+        );
+        let m = a_t.cols();
+        let at = a_t.data();
+        let split = 4 * (n / 4);
+        let tail_start = support.partition_point(|&j| j < split);
+        for i in 0..b {
+            let base = row0 + i;
+            let (mut s0, mut s1, mut s2, mut s3) = (S::ZERO, S::ZERO, S::ZERO, S::ZERO);
+            for &j in &support[..tail_start] {
+                let t = at[j * m + base] * x[j];
+                match j & 3 {
+                    0 => s0 += t,
+                    1 => s1 += t,
+                    2 => s2 += t,
+                    _ => s3 += t,
+                }
+            }
+            let mut s = (s0 + s1) + (s2 + s3);
+            for &j in &support[tail_start..] {
+                s += at[j * m + base] * x[j];
+            }
+            scratch[i] = y[i] - s;
         }
     }
 }

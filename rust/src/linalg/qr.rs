@@ -110,18 +110,30 @@ impl<S: Scalar> Qr<S> {
     /// OMP can momentarily select nearly-dependent columns on noisy data and
     /// must not blow up.
     pub fn solve(&self, y: &[S]) -> Vec<S> {
+        let mut rhs = Vec::new();
+        let mut z = Vec::new();
+        self.solve_into(y, &mut rhs, &mut z);
+        z
+    }
+
+    /// Allocation-free form of [`Qr::solve`]: the `Q^T y` work happens in
+    /// `rhs` and the solution is written into `z` (both cleared and
+    /// resized) — identical arithmetic, reused buffers for hot loops.
+    pub fn solve_into(&self, y: &[S], rhs: &mut Vec<S>, z: &mut Vec<S>) {
         let m = self.a.rows();
         let k = self.a.cols();
         assert_eq!(y.len(), m, "rhs length");
-        let mut rhs = y.to_vec();
-        self.apply_qt(&mut rhs);
+        rhs.clear();
+        rhs.extend_from_slice(y);
+        self.apply_qt(rhs);
         // Back-substitute R z = rhs[0..k].
         let mut rmax = S::ZERO;
         for j in 0..k {
             rmax = rmax.max_s(self.a.get(j, j).abs());
         }
         let tol = rmax * S::EPS * S::from_f64(64.0);
-        let mut z = vec![S::ZERO; k];
+        z.clear();
+        z.resize(k, S::ZERO);
         for j in (0..k).rev() {
             let mut v = rhs[j];
             for c in (j + 1)..k {
@@ -130,7 +142,12 @@ impl<S: Scalar> Qr<S> {
             let d = self.a.get(j, j);
             z[j] = if d.abs() <= tol { S::ZERO } else { v / d };
         }
-        z
+    }
+
+    /// Consume the factorization, reclaiming the matrix storage (packed
+    /// `R` + Householder vectors) so callers can reuse the buffer.
+    pub fn into_matrix(self) -> Mat<S> {
+        self.a
     }
 }
 

@@ -94,6 +94,28 @@ impl<S: Scalar> SparseIterate<S> {
         }
     }
 
+    /// Replace the contents with the parallel `(support, values)` pairs
+    /// (`support` strictly ascending, `values[i]` the entry at
+    /// `support[i]`) — the scatter twin of [`SparseIterate::assign_from`]
+    /// for producers whose values live in a compact buffer (e.g. a
+    /// least-squares solution over a merged support) rather than a dense
+    /// source. Cost is `O(|old| + |new|)`, never `O(n)`.
+    pub fn assign_pairs(&mut self, support: &[usize], values: &[S]) {
+        debug_assert_eq!(support.len(), values.len(), "assign_pairs: parallel slices");
+        debug_assert!(
+            support.windows(2).all(|w| w[0] < w[1]),
+            "assign_pairs: support must be strictly ascending"
+        );
+        for &i in &self.support {
+            self.values[i] = S::ZERO;
+        }
+        self.support.clear();
+        self.support.extend_from_slice(support);
+        for (&i, &v) in support.iter().zip(values) {
+            self.values[i] = v;
+        }
+    }
+
     /// Copy out a dense clone of the values.
     pub fn to_dense(&self) -> Vec<S> {
         self.values.clone()
@@ -139,6 +161,20 @@ mod tests {
         assert_eq!(x.support(), &[1, 2]);
         assert_eq!(x.get(1), 0.0);
         assert_eq!(x.get(2), 3.0);
+    }
+
+    #[test]
+    fn assign_pairs_scatters_and_zeroes_old_support() {
+        let mut x = SparseIterate::<f64>::zeros(8);
+        x.assign_pairs(&[1, 4, 6], &[2.0, 5.0, 7.0]);
+        assert_eq!(x.values(), &[0.0, 2.0, 0.0, 0.0, 5.0, 0.0, 7.0, 0.0]);
+        assert_eq!(x.support(), &[1, 4, 6]);
+        x.assign_pairs(&[0, 4], &[-1.0, 9.0]);
+        assert_eq!(x.values(), &[-1.0, 0.0, 0.0, 0.0, 9.0, 0.0, 0.0, 0.0]);
+        assert_eq!(x.support(), &[0, 4]);
+        x.assign_pairs(&[], &[]);
+        assert_eq!(x.nnz(), 0);
+        assert!(x.values().iter().all(|&v| v == 0.0));
     }
 
     #[test]

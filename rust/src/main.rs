@@ -14,6 +14,8 @@
 //! astir run --alg stoiht             # one solve, native backend
 //! astir run --alg stoiht --backend pjrt
 //! astir async --cores 8              # real-thread asynchronous StoIHT
+//! astir async --alg stogradmp        # ... or any other SupportKernel
+//! astir fig2 --alg stogradmp --schedule half-slow --period 6
 //! astir info                         # artifact + config introspection
 //! ```
 //!
@@ -23,8 +25,8 @@
 
 use std::process::ExitCode;
 
-use astir::algorithms::{self, GreedyOpts};
-use astir::async_runtime::{run_async, AsyncOpts};
+use astir::algorithms::{self, Alg, GreedyOpts, StoGradMpKernel};
+use astir::async_runtime::{run_async, run_async_with, AsyncOpts};
 use astir::backend::{Backend, NativeBackend, PjrtBackend};
 use astir::bench_harness::{
     compare_reports, human_time, json as bench_json, suites, Mode, RunOpts,
@@ -77,18 +79,38 @@ fn run(args: Vec<String>) -> Result<(), String> {
             report::emit("fig1_summary", "per-variant convergence summary", &out.summary);
         }
         "fig2" => {
-            let schedule = flags.take("schedule")?.unwrap_or_else(|| "all-fast".into());
+            let mut cfg = cfg;
+            apply_alg_flag(&mut cfg, &mut flags)?;
+            let schedule = take_schedule(&mut flags)?;
             flags.finish()?;
-            let variant = match schedule.as_str() {
-                "all-fast" => Fig2Variant::Upper,
-                "half-slow" => Fig2Variant::Lower { period: 4 },
-                other => return Err(format!("unknown --schedule `{other}` (all-fast|half-slow)")),
+            let variant = match schedule {
+                SpeedSchedule::AllFast => Fig2Variant::Upper,
+                SpeedSchedule::HalfSlow { period } => Fig2Variant::Lower { period },
+                SpeedSchedule::Custom(_) => unreachable!("take_schedule never builds Custom"),
             };
-            println!("Fig. 2 — time steps to exit vs cores ({})", variant.label());
+            println!(
+                "Fig. 2 — time steps to exit vs cores ({}, alg {})",
+                variant.label(),
+                cfg.alg.as_str()
+            );
             let table = experiments::fig2(&cfg, variant);
-            let name =
-                if matches!(variant, Fig2Variant::Upper) { "fig2_upper" } else { "fig2_lower" };
-            report::emit(name, variant.label(), &table);
+            // Non-default alg/period runs get their own results names so
+            // they never clobber the paper's StoIHT figure data.
+            let mut name = if matches!(variant, Fig2Variant::Upper) {
+                "fig2_upper".to_string()
+            } else {
+                "fig2_lower".to_string()
+            };
+            if cfg.alg != Alg::Stoiht {
+                name.push('_');
+                name.push_str(cfg.alg.as_str());
+            }
+            if let Fig2Variant::Lower { period } = variant {
+                if period != 4 {
+                    name.push_str(&format!("_p{period}"));
+                }
+            }
+            report::emit(&name, variant.label(), &table);
         }
         "ablation" => {
             let mut which = flags.take("name")?;
@@ -129,18 +151,23 @@ fn run(args: Vec<String>) -> Result<(), String> {
             report::emit("baselines_phase_transition", "A5: success rate vs m", &t);
         }
         "run" => {
-            let alg = flags.take("alg")?.unwrap_or_else(|| "stoiht".into());
+            // `--alg` is a superset of the config selector here: the
+            // sequential baselines (iht|omp|cosamp) have no async story
+            // but remain runnable.
+            let alg = flags.take("alg")?.unwrap_or_else(|| cfg.alg.as_str().into());
             let backend = flags.take("backend")?.unwrap_or_else(|| "native".into());
             flags.finish()?;
             run_single(&cfg, &alg, &backend)?;
         }
         "async" => {
+            let mut cfg = cfg;
+            apply_alg_flag(&mut cfg, &mut flags)?;
             let cores: usize = flags
                 .take("cores")?
                 .unwrap_or_else(|| "4".into())
                 .parse()
                 .map_err(|e| format!("--cores: {e}"))?;
-            let schedule = flags.take("schedule")?.unwrap_or_else(|| "all-fast".into());
+            let schedule = take_schedule(&mut flags)?;
             flags.finish()?;
             run_async_cmd(&cfg, cores, &schedule)?;
         }
@@ -339,6 +366,44 @@ fn bench_cmd(flags: &mut Flags) -> Result<(), String> {
     Ok(())
 }
 
+/// The shared `--schedule`/`--period` flag pair (fig2 and async use the
+/// identical vocabulary — previously two hand-rolled copies with a
+/// hard-coded period).
+fn take_schedule(flags: &mut Flags) -> Result<SpeedSchedule, String> {
+    let name = flags.take("schedule")?.unwrap_or_else(|| "all-fast".into());
+    let period_flag = flags.take("period")?;
+    let period = match &period_flag {
+        Some(v) => {
+            let p: usize = v.parse().map_err(|e| format!("--period: {e}"))?;
+            if p < 1 {
+                return Err("--period must be >= 1".into());
+            }
+            p
+        }
+        None => 4, // the paper's Fig.-2 lower panel
+    };
+    match name.as_str() {
+        "all-fast" => {
+            if period_flag.is_some() {
+                // Swallowing the flag would run the wrong experiment.
+                return Err("--period only applies with --schedule half-slow".into());
+            }
+            Ok(SpeedSchedule::AllFast)
+        }
+        "half-slow" => Ok(SpeedSchedule::HalfSlow { period }),
+        other => Err(format!("unknown --schedule `{other}` (all-fast|half-slow)")),
+    }
+}
+
+/// Optional `--alg` override of the config's algorithm selector.
+fn apply_alg_flag(cfg: &mut ExperimentConfig, flags: &mut Flags) -> Result<(), String> {
+    if let Some(v) = flags.take("alg")? {
+        cfg.alg =
+            Alg::parse(&v).ok_or_else(|| format!("unknown --alg `{v}` (stoiht|stogradmp)"))?;
+    }
+    Ok(())
+}
+
 /// Load the config file (if any) and apply common overrides.
 fn load_config(flags: &mut Flags) -> Result<ExperimentConfig, String> {
     let mut cfg = match flags.take("config")? {
@@ -469,23 +534,29 @@ fn run_stoiht_on_backend<B: Backend>(
     })
 }
 
-fn run_async_cmd(cfg: &ExperimentConfig, cores: usize, schedule: &str) -> Result<(), String> {
-    let sched = match schedule {
-        "all-fast" => SpeedSchedule::AllFast,
-        "half-slow" => SpeedSchedule::HalfSlow { period: 4 },
-        other => return Err(format!("unknown --schedule `{other}`")),
-    };
+fn run_async_cmd(
+    cfg: &ExperimentConfig,
+    cores: usize,
+    schedule: &SpeedSchedule,
+) -> Result<(), String> {
     let mut rng = Rng::seed_from(cfg.seed);
     let problem = cfg.problem.generate(&mut rng);
     let opts = AsyncOpts {
         gamma: cfg.gamma,
         tolerance: cfg.tolerance,
         max_local_iters: cfg.max_iters,
-        schedule: sched,
+        schedule: schedule.clone(),
         ..Default::default()
     };
-    println!("real-thread asynchronous StoIHT: cores={cores} schedule={schedule}");
-    let out = run_async(&problem, cores, &opts, cfg.seed ^ 0xA5);
+    println!(
+        "real-thread asynchronous {}: cores={cores} schedule={schedule:?}",
+        cfg.alg.as_str()
+    );
+    let seed = cfg.seed ^ 0xA5;
+    let out = match cfg.alg {
+        Alg::Stoiht => run_async(&problem, cores, &opts, seed),
+        Alg::StoGradMp => run_async_with(&problem, cores, &opts, seed, StoGradMpKernel::new),
+    };
     println!(
         "converged={} exit_core={:?} wall={:.1?} residual={:.3e} error={:.3e}",
         out.converged, out.exit_core, out.wall, out.residual, out.final_error
@@ -540,7 +611,7 @@ COMMANDS
   bench                        run the bench suite registry (perf telemetry)
   run --alg X --backend Y      one solve (alg: stoiht|iht|omp|cosamp|stogradmp;
                                backend: native|pjrt)
-  async --cores N              real-thread asynchronous StoIHT
+  async --cores N              real-thread asynchronous solve (StoIHT default)
   info                         show config + discovered AOT artifacts
 
 COMMON FLAGS
@@ -550,6 +621,11 @@ COMMON FLAGS
   --threads N          worker threads for trial batching
   --cores-list a,b,c   core counts to sweep
   --max-iters N        iteration / time-step cap
+
+ASYNC / FIG2 FLAGS
+  --alg stoiht|stogradmp  which SupportKernel the async layers drive
+  --schedule NAME         all-fast | half-slow
+  --period K              slow-core period for half-slow (default 4)
 
 BENCH FLAGS (astir bench)
   --filter substr      run only benches whose suite/name contains substr

@@ -37,11 +37,18 @@
 //!   reproduction notes in README.md).
 //!
 //! Tally-mode cores keep their local iterates as [`SparseIterate`]s and
-//! step through the sparse proxy kernel — bit-identical to the dense step,
-//! but `O(b (s + |T̃|))` on the residual pass. The SharedX ablation keeps a
-//! dense shared vector (overwrites break the sparse invariant by design).
+//! step through their kernel's sparse fast path — bit-identical to the
+//! dense step, but `O(b (s + |T̃|))` on the residual pass. The SharedX
+//! ablation keeps a dense shared vector (overwrites break the sparse
+//! invariant by design).
+//!
+//! The simulator is **generic over the algorithm**: [`simulate_with`]
+//! drives any [`SupportKernel`] (StoIHT, StoGradMP, future kernels)
+//! through the identical read/commit semantics, and [`simulate`] is the
+//! StoIHT specialization the paper's figures use — bit-identical to the
+//! pre-trait hardwired loop (pinned by `rust/tests/kernel_parity.rs`).
 
-use crate::algorithms::StoihtKernel;
+use crate::algorithms::{StoihtKernel, SupportKernel};
 use crate::linalg::SparseIterate;
 use crate::problem::Problem;
 use crate::rng::Rng;
@@ -166,6 +173,21 @@ pub fn simulate(
     opts: &SimOpts,
     rng: &mut Rng,
 ) -> SimOutcome {
+    simulate_with(problem, cores, schedule, opts, rng, |p| StoihtKernel::new(p, opts.gamma))
+}
+
+/// Simulate `cores` asynchronous cores driving any [`SupportKernel`]
+/// (paper Alg. 2 + §IV-B semantics, algorithm-generic). `make_kernel`
+/// builds one per-core step object; every sharing mode, speed schedule,
+/// fault-injection knob, and weighting ablation composes with any kernel.
+pub fn simulate_with<'p, K: SupportKernel>(
+    problem: &'p Problem,
+    cores: usize,
+    schedule: &SpeedSchedule,
+    opts: &SimOpts,
+    rng: &mut Rng,
+    make_kernel: impl Fn(&'p Problem) -> K,
+) -> SimOutcome {
     assert!(cores >= 1);
     let spec = &problem.spec;
     let periods = schedule.periods(cores);
@@ -173,8 +195,7 @@ pub fn simulate(
     let s = spec.s;
 
     // Per-core state.
-    let mut kernels: Vec<StoihtKernel> =
-        (0..cores).map(|_| StoihtKernel::new(problem, opts.gamma)).collect();
+    let mut kernels: Vec<K> = (0..cores).map(|_| make_kernel(problem)).collect();
     let mut rngs: Vec<Rng> = (0..cores).map(|i| rng.split(i as u64 + 1)).collect();
     let mut xs: Vec<SparseIterate<f64>> = (0..cores).map(|_| SparseIterate::zeros(n)).collect();
     let mut t_local: Vec<u64> = vec![1; cores];
@@ -224,16 +245,17 @@ pub fn simulate(
                     } else {
                         shared_estimate.clone()
                     };
-                    let extra = if estimate.is_empty() { None } else { Some(estimate.as_slice()) };
                     let mut new_x = xs[c].clone();
-                    let gamma = kernels[c].step_sparse(&mut new_x, block, extra).to_vec();
+                    let mut gamma = Vec::new();
+                    kernels[c].tally_step(&mut new_x, block, &estimate, &mut gamma);
                     let support = union(&gamma, &estimate);
                     Pending { commit_at, new_x: PendingX::Sparse(new_x), gamma, support }
                 }
                 SharingMode::SharedX => {
-                    // HOGWILD!-style: read the shared iterate, Alg.-1 step.
+                    // HOGWILD!-style: read the shared iterate, no-tally step.
                     let mut new_x = shared_x.clone();
-                    let gamma = kernels[c].step(&mut new_x, block, None).to_vec();
+                    let mut gamma = Vec::new();
+                    kernels[c].dense_step(&mut new_x, block, &mut gamma);
                     let support = gamma.clone();
                     Pending { commit_at, new_x: PendingX::Dense(new_x), gamma, support }
                 }
@@ -501,6 +523,40 @@ mod tests {
         assert_eq!(out.error_trace.len(), out.steps);
         // errors are finite and eventually decrease
         assert!(out.error_trace.iter().all(|e| e.is_finite()));
+    }
+
+    #[test]
+    fn generic_sim_drives_stogradmp_through_every_mode() {
+        // The tentpole guarantee: every existing mode composes with the
+        // StoGradMP kernel through the same generic loop.
+        use crate::algorithms::StoGradMpKernel;
+        let p = easy(9);
+        let sched = SpeedSchedule::AllFast;
+        let variants = [
+            SimOpts { max_steps: 200, ..Default::default() },
+            SimOpts { max_steps: 200, self_exclude: true, ..Default::default() },
+            SimOpts { max_steps: 200, stale_read_prob: 0.3, ..Default::default() },
+            SimOpts { max_steps: 200, weighting: TallyWeighting::Unit, ..Default::default() },
+            SimOpts { max_steps: 200, mode: SharingMode::SharedX, ..Default::default() },
+        ];
+        for (k, opts) in variants.iter().enumerate() {
+            let mut rng = Rng::seed_from(30 + k as u64);
+            let out = simulate_with(&p, 4, &sched, opts, &mut rng, StoGradMpKernel::new);
+            assert!(out.converged, "variant {k} did not converge in {} steps", out.steps);
+            assert!(out.final_error < 1e-5, "variant {k} error {}", out.final_error);
+            // GradMP-family needs far fewer steps than StoIHT.
+            assert!(out.steps < 100, "variant {k} steps {}", out.steps);
+        }
+        // Half-slow schedule composes too.
+        let out = simulate_with(
+            &p,
+            4,
+            &SpeedSchedule::HalfSlow { period: 4 },
+            &SimOpts { max_steps: 300, ..Default::default() },
+            &mut Rng::seed_from(77),
+            StoGradMpKernel::new,
+        );
+        assert!(out.converged);
     }
 
     #[test]

@@ -1,0 +1,423 @@
+//! Kernel-parity guarantees for the `SupportKernel` refactor.
+//!
+//! 1. **Golden StoIHT parity** — `reference_simulate` below is a faithful
+//!    copy of the PRE-refactor `sim::simulate` loop (hardwired to
+//!    `StoihtKernel::step_sparse` / `::step`, with the read/commit helpers
+//!    inlined). The post-refactor generic `simulate` must produce
+//!    bit-identical outcomes across seeds, core counts, sharing modes,
+//!    fault-injection knobs, weightings, and schedules.
+//! 2. **Real-thread parity** — a single-worker `run_async` is
+//!    deterministic (no races), so its published iterate must replay
+//!    bit-for-bit from a hand-rolled worker loop over the same RNG stream.
+//! 3. **Async StoGradMP cross-check** — at `c = 1` with `self_exclude`
+//!    the tally estimate is always empty, so the simulated asynchronous
+//!    StoGradMP must match sequential `stogradmp` *exactly*
+//!    (stream-for-stream, bit-for-bit).
+
+use astir::algorithms::{stogradmp, GreedyOpts, StoGradMpKernel, StoihtKernel, SupportKernel};
+use astir::async_runtime::{run_async, AsyncOpts};
+use astir::linalg::SparseIterate;
+use astir::problem::{Problem, ProblemSpec};
+use astir::rng::Rng;
+use astir::sim::{simulate, simulate_with, SharingMode, SimOpts, SimOutcome, SpeedSchedule};
+use astir::support::{support_of, union};
+use astir::tally::{positive_top_s, AtomicTally, LocalTally};
+
+fn easy(seed: u64) -> Problem {
+    ProblemSpec { n: 96, m: 48, b: 8, s: 4, ..ProblemSpec::tiny() }
+        .generate(&mut Rng::seed_from(seed))
+}
+
+// ---------------------------------------------------------------------
+// A faithful reimplementation of the pre-refactor simulate() loop.
+// ---------------------------------------------------------------------
+
+enum RefPendingX {
+    Sparse(SparseIterate<f64>),
+    Dense(Vec<f64>),
+}
+
+struct RefPending {
+    commit_at: usize,
+    new_x: RefPendingX,
+    gamma: Vec<usize>,
+    support: Vec<usize>,
+}
+
+fn ref_read_estimate(
+    tally: &LocalTally,
+    prev_votes: &[i64],
+    s: usize,
+    stale_prob: f64,
+    fault_rng: &mut Rng,
+) -> Vec<usize> {
+    if stale_prob <= 0.0 {
+        return tally.estimate(s);
+    }
+    let cur = tally.votes();
+    let mixed: Vec<i64> = (0..cur.len())
+        .map(|i| if fault_rng.bernoulli(stale_prob) { prev_votes[i] } else { cur[i] })
+        .collect();
+    positive_top_s(&mixed, s)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn ref_read_estimate_excluding(
+    tally: &LocalTally,
+    prev_votes: &[i64],
+    s: usize,
+    stale_prob: f64,
+    fault_rng: &mut Rng,
+    own_gamma: &[usize],
+    own_weight: i64,
+) -> Vec<usize> {
+    let cur = tally.votes();
+    let mut mixed: Vec<i64> = if stale_prob <= 0.0 {
+        cur.to_vec()
+    } else {
+        (0..cur.len())
+            .map(|i| if fault_rng.bernoulli(stale_prob) { prev_votes[i] } else { cur[i] })
+            .collect()
+    };
+    for &i in own_gamma {
+        mixed[i] -= own_weight;
+    }
+    positive_top_s(&mixed, s)
+}
+
+fn ref_shuffle<T>(items: &mut [T], rng: &mut Rng) {
+    for i in (1..items.len()).rev() {
+        let j = rng.below(i + 1);
+        items.swap(i, j);
+    }
+}
+
+/// The pre-refactor `sim::simulate`, verbatim modulo private-helper
+/// inlining: hardwired StoIHT kernels, `step_sparse` in Tally mode, dense
+/// `step` in SharedX mode.
+fn reference_simulate(
+    problem: &Problem,
+    cores: usize,
+    schedule: &SpeedSchedule,
+    opts: &SimOpts,
+    rng: &mut Rng,
+) -> SimOutcome {
+    assert!(cores >= 1);
+    let spec = &problem.spec;
+    let periods = schedule.periods(cores);
+    let n = spec.n;
+    let s = spec.s;
+
+    let mut kernels: Vec<StoihtKernel> =
+        (0..cores).map(|_| StoihtKernel::new(problem, opts.gamma)).collect();
+    let mut rngs: Vec<Rng> = (0..cores).map(|i| rng.split(i as u64 + 1)).collect();
+    let mut xs: Vec<SparseIterate<f64>> = (0..cores).map(|_| SparseIterate::zeros(n)).collect();
+    let mut t_local: Vec<u64> = vec![1; cores];
+    let mut prev_gamma: Vec<Vec<usize>> = vec![Vec::new(); cores];
+    let mut pending: Vec<Option<RefPending>> = (0..cores).map(|_| None).collect();
+
+    let mut tally = LocalTally::new(n, opts.weighting);
+    let mut prev_votes: Vec<i64> = vec![0; n];
+    let mut shared_x: Vec<f64> = vec![0.0; n];
+    let mut commit_order_rng = rng.split(0x5EED);
+    let mut fault_rng = rng.split(0xFA17);
+
+    let mut error_trace = Vec::new();
+
+    for step in 1..=opts.max_steps {
+        let shared_estimate: Vec<usize> = if opts.mode == SharingMode::Tally && !opts.self_exclude
+        {
+            ref_read_estimate(&tally, &prev_votes, s, opts.stale_read_prob, &mut fault_rng)
+        } else {
+            Vec::new()
+        };
+        for c in 0..cores {
+            if pending[c].is_some() {
+                continue;
+            }
+            if (step - 1) % periods[c] != 0 {
+                continue;
+            }
+            let commit_at = step + periods[c] - 1;
+            let block = kernels[c].sample_block(&mut rngs[c]);
+            let p = match opts.mode {
+                SharingMode::Tally => {
+                    let estimate: Vec<usize> = if opts.self_exclude {
+                        ref_read_estimate_excluding(
+                            &tally,
+                            &prev_votes,
+                            s,
+                            opts.stale_read_prob,
+                            &mut fault_rng,
+                            &prev_gamma[c],
+                            opts.weighting.add_weight(t_local[c].saturating_sub(1)),
+                        )
+                    } else {
+                        shared_estimate.clone()
+                    };
+                    let extra = if estimate.is_empty() { None } else { Some(estimate.as_slice()) };
+                    let mut new_x = xs[c].clone();
+                    let gamma = kernels[c].step_sparse(&mut new_x, block, extra).to_vec();
+                    let support = union(&gamma, &estimate);
+                    RefPending { commit_at, new_x: RefPendingX::Sparse(new_x), gamma, support }
+                }
+                SharingMode::SharedX => {
+                    let mut new_x = shared_x.clone();
+                    let gamma = kernels[c].step(&mut new_x, block, None).to_vec();
+                    let support = gamma.clone();
+                    RefPending { commit_at, new_x: RefPendingX::Dense(new_x), gamma, support }
+                }
+            };
+            pending[c] = Some(p);
+        }
+
+        prev_votes.copy_from_slice(tally.votes());
+        let mut committers: Vec<usize> = (0..cores)
+            .filter(|&c| pending[c].as_ref().is_some_and(|p| p.commit_at == step))
+            .collect();
+        ref_shuffle(&mut committers, &mut commit_order_rng);
+
+        let mut exited: Option<(usize, f64)> = None;
+        for &c in &committers {
+            let p = pending[c].take().unwrap();
+            match p.new_x {
+                RefPendingX::Sparse(nx) => {
+                    xs[c] = nx;
+                    tally.commit(&p.gamma, &prev_gamma[c], t_local[c]);
+                    prev_gamma[c] = p.gamma;
+                    t_local[c] += 1;
+                    if exited.is_none() {
+                        let r = problem.residual_norm_sparse(xs[c].values(), &p.support);
+                        if r < opts.tolerance {
+                            exited = Some((c, problem.recovery_error(xs[c].values())));
+                        }
+                    }
+                }
+                RefPendingX::Dense(nx) => {
+                    for &i in &prev_gamma[c] {
+                        shared_x[i] = 0.0;
+                    }
+                    for &i in &p.gamma {
+                        shared_x[i] = nx[i];
+                    }
+                    prev_gamma[c] = p.gamma;
+                    t_local[c] += 1;
+                }
+            }
+        }
+        if opts.mode == SharingMode::SharedX && !committers.is_empty() && exited.is_none() {
+            let supp = support_of(&shared_x);
+            let r = problem.residual_norm_sparse(&shared_x, &supp);
+            if r < opts.tolerance {
+                exited = Some((usize::MAX, problem.recovery_error(&shared_x)));
+            }
+        }
+
+        if opts.record_error {
+            let err = match opts.mode {
+                SharingMode::Tally => xs
+                    .iter()
+                    .map(|x| problem.recovery_error(x.values()))
+                    .fold(f64::INFINITY, f64::min),
+                SharingMode::SharedX => problem.recovery_error(&shared_x),
+            };
+            error_trace.push(err);
+        }
+
+        if let Some((core, err)) = exited {
+            return SimOutcome {
+                steps: step,
+                converged: true,
+                exit_core: if core == usize::MAX { None } else { Some(core) },
+                local_iters: t_local.iter().map(|&t| t - 1).collect(),
+                final_error: err,
+                error_trace,
+            };
+        }
+    }
+
+    let final_error = match opts.mode {
+        SharingMode::Tally => xs
+            .iter()
+            .map(|x| problem.recovery_error(x.values()))
+            .fold(f64::INFINITY, f64::min),
+        SharingMode::SharedX => problem.recovery_error(&shared_x),
+    };
+    SimOutcome {
+        steps: opts.max_steps,
+        converged: false,
+        exit_core: None,
+        local_iters: t_local.iter().map(|&t| t - 1).collect(),
+        final_error,
+        error_trace,
+    }
+}
+
+fn assert_outcomes_identical(a: &SimOutcome, b: &SimOutcome, ctx: &str) {
+    assert_eq!(a.steps, b.steps, "{ctx}: steps");
+    assert_eq!(a.converged, b.converged, "{ctx}: converged");
+    assert_eq!(a.exit_core, b.exit_core, "{ctx}: exit core");
+    assert_eq!(a.local_iters, b.local_iters, "{ctx}: local iterations");
+    assert_eq!(
+        a.final_error.to_bits(),
+        b.final_error.to_bits(),
+        "{ctx}: final error {} vs {}",
+        a.final_error,
+        b.final_error
+    );
+    assert_eq!(a.error_trace.len(), b.error_trace.len(), "{ctx}: trace length");
+    for (i, (ea, eb)) in a.error_trace.iter().zip(&b.error_trace).enumerate() {
+        assert_eq!(ea.to_bits(), eb.to_bits(), "{ctx}: trace[{i}]");
+    }
+}
+
+#[test]
+fn generic_simulate_is_bit_identical_to_prerefactor_stoiht() {
+    use astir::tally::TallyWeighting;
+    let variants: [(SimOpts, &str); 8] = [
+        (SimOpts { max_steps: 400, ..Default::default() }, "default"),
+        (SimOpts { max_steps: 400, self_exclude: true, ..Default::default() }, "self_exclude"),
+        (SimOpts { max_steps: 400, stale_read_prob: 0.25, ..Default::default() }, "stale_reads"),
+        (
+            SimOpts { max_steps: 400, mode: SharingMode::SharedX, ..Default::default() },
+            "shared_x",
+        ),
+        (
+            SimOpts { max_steps: 400, weighting: TallyWeighting::Unit, ..Default::default() },
+            "unit_weighting",
+        ),
+        (
+            SimOpts {
+                max_steps: 400,
+                weighting: TallyWeighting::NoDecrement,
+                ..Default::default()
+            },
+            "no_decrement",
+        ),
+        (SimOpts { max_steps: 50, record_error: true, ..Default::default() }, "error_trace"),
+        (SimOpts { max_steps: 400, gamma: 0.8, ..Default::default() }, "gamma_0_8"),
+    ];
+    for seed in 0..3u64 {
+        let p = easy(200 + seed);
+        for (opts, label) in &variants {
+            for (cores, schedule) in [
+                (1usize, SpeedSchedule::AllFast),
+                (4, SpeedSchedule::AllFast),
+                (4, SpeedSchedule::HalfSlow { period: 3 }),
+            ] {
+                let ctx = format!("seed {seed} {label} c={cores} {schedule:?}");
+                let mut rng_new = Rng::seed_from(900 + seed);
+                let mut rng_ref = Rng::seed_from(900 + seed);
+                let new = simulate(&p, cores, &schedule, opts, &mut rng_new);
+                let reference = reference_simulate(&p, cores, &schedule, opts, &mut rng_ref);
+                assert_outcomes_identical(&new, &reference, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn single_worker_run_async_replays_bit_for_bit() {
+    // c = 1 has no races: the worker's iterate sequence is a deterministic
+    // function of its RNG stream, so the published winner must replay from
+    // a hand-rolled copy of the worker loop.
+    for seed in [7u64, 41, 2024] {
+        let p = easy(300 + seed);
+        let opts = AsyncOpts::default();
+        let out = run_async(&p, 1, &opts, seed);
+        assert!(out.converged, "seed {seed}");
+
+        let mut root = Rng::seed_from(seed);
+        let mut rng = root.split(0); // worker 0's stream
+        let tally = AtomicTally::new(p.spec.n, opts.weighting);
+        let mut kernel = StoihtKernel::new(&p, opts.gamma);
+        let mut x = SparseIterate::zeros(p.spec.n);
+        let mut gamma: Vec<usize> = Vec::new();
+        let mut prev_gamma: Vec<usize> = Vec::new();
+        let mut estimate: Vec<usize> = Vec::new();
+        let mut tally_scratch: Vec<i64> = Vec::new();
+        let mut resid_scratch: Vec<f64> = Vec::new();
+        let mut iters = 0u64;
+        let mut residual = f64::NAN;
+        for t in 1..=opts.max_local_iters as u64 {
+            tally.estimate_into(p.spec.s, &mut tally_scratch, &mut estimate);
+            let block = kernel.sample_block(&mut rng);
+            kernel.tally_step(&mut x, block, &estimate, &mut gamma);
+            tally.commit(&gamma, &prev_gamma, t);
+            std::mem::swap(&mut prev_gamma, &mut gamma);
+            iters = t;
+            let r = kernel.residual(&x, &mut resid_scratch);
+            if r < opts.tolerance {
+                residual = r;
+                break;
+            }
+        }
+        assert_eq!(out.local_iters[0], iters, "seed {seed}: iteration count");
+        assert_eq!(out.residual.to_bits(), residual.to_bits(), "seed {seed}: residual");
+        for i in 0..p.spec.n {
+            assert_eq!(
+                out.x[i].to_bits(),
+                x.values()[i].to_bits(),
+                "seed {seed} coord {i}: {} vs {}",
+                out.x[i],
+                x.values()[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn async_stogradmp_c1_self_exclude_matches_sequential_exactly() {
+    // The acceptance cross-check: with one core and self-excluding tally
+    // reads the estimate is always empty, so the asynchronous loop is
+    // sequential StoGradMP on the sim's core-0 RNG stream. `simulate`
+    // derives that stream as `rng.split(1)`, and the sequential solver
+    // rides the identical kernel + sparse exit check, so the match is
+    // exact: same step count, bit-identical final error.
+    for seed in [11u64, 99, 1234] {
+        let p = easy(400 + seed);
+        let sim_opts = SimOpts { max_steps: 200, self_exclude: true, ..Default::default() };
+        let mut sim_rng = Rng::seed_from(seed);
+        let sched = SpeedSchedule::AllFast;
+        let out = simulate_with(&p, 1, &sched, &sim_opts, &mut sim_rng, StoGradMpKernel::new);
+        assert!(out.converged, "seed {seed}: sim did not converge");
+
+        let mut seq_rng = Rng::seed_from(seed).split(1); // sim core 0's stream
+        let opts = GreedyOpts { max_iters: 200, ..Default::default() };
+        let r = stogradmp(&p, &opts, &mut seq_rng);
+        assert!(r.converged, "seed {seed}: sequential did not converge");
+        assert_eq!(out.steps, r.iters, "seed {seed}: step count");
+        assert_eq!(out.exit_core, Some(0));
+        let seq_err = p.recovery_error(&r.x);
+        assert_eq!(
+            out.final_error.to_bits(),
+            seq_err.to_bits(),
+            "seed {seed}: final error {} vs {}",
+            out.final_error,
+            seq_err
+        );
+    }
+}
+
+#[test]
+fn async_stoiht_c1_self_exclude_degenerates_to_algorithm_1() {
+    // The README's A6 claim, pinned through the generic path: c = 1 with
+    // self-exclusion is exactly Algorithm 1 on the core-0 stream.
+    for seed in [3u64, 17] {
+        let p = easy(500 + seed);
+        let sim_opts = SimOpts { max_steps: 1500, self_exclude: true, ..Default::default() };
+        let out =
+            simulate(&p, 1, &SpeedSchedule::AllFast, &sim_opts, &mut Rng::seed_from(seed));
+        assert!(out.converged, "seed {seed}");
+
+        let mut seq_rng = Rng::seed_from(seed).split(1);
+        let mut kernel = StoihtKernel::new(&p, 1.0);
+        let mut x = SparseIterate::zeros(p.spec.n);
+        for _ in 0..out.steps {
+            let block = kernel.sample_block(&mut seq_rng);
+            kernel.step_sparse(&mut x, block, None);
+        }
+        let err = p.recovery_error(x.values());
+        assert_eq!(out.final_error.to_bits(), err.to_bits(), "seed {seed}");
+    }
+}

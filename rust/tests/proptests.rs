@@ -8,7 +8,7 @@ use astir::coordinator::run_trials;
 use astir::linalg::{dist2, dot, lstsq, nrm2, Mat};
 use astir::problem::{Problem, ProblemSpec};
 use astir::sim::{simulate, SimOpts, SpeedSchedule};
-use astir::support::{accuracy, intersection_size, top_s, union};
+use astir::support::{accuracy, intersection_size, top_s, union, union_into};
 use astir::tally::{positive_top_s, LocalTally, TallyWeighting};
 use astir::testutil::{property, Gen, OrFail};
 
@@ -54,6 +54,33 @@ fn prop_union_is_sorted_superset() {
             .or_fail("missing member")?;
         (intersection_size(&a, &b) + u.len() == a.len() + b.len())
             .or_fail("inclusion-exclusion violated")
+    });
+}
+
+#[test]
+fn prop_union_into_agrees_with_union() {
+    // The allocation-free form and the allocating wrapper must be the same
+    // function: identical output, sorted, deduplicated, with stale buffer
+    // contents discarded, and the empty set as the identity element.
+    property("union_into == union", 150, |g| {
+        let n = 100;
+        let ka = g.usize_in(0, 25);
+        let a = g.sorted_subset(n, ka);
+        let kb = g.usize_in(0, 25);
+        let b = g.sorted_subset(n, kb);
+        let u = union(&a, &b);
+        // reuse a dirty buffer: stale contents must not leak through
+        let stale = g.usize_in(0, 8);
+        let mut buf: Vec<usize> = vec![usize::MAX; stale];
+        union_into(&a, &b, &mut buf);
+        (buf == u).or_fail("union_into disagrees with union")?;
+        u.windows(2).all(|w| w[0] < w[1]).or_fail("not sorted/deduplicated")?;
+        // commutativity and the empty identity
+        (union(&b, &a) == u).or_fail("union not commutative")?;
+        (union(&a, &[]) == a).or_fail("union(a, []) != a")?;
+        let mut buf2 = Vec::new();
+        union_into(&a, &[], &mut buf2);
+        (buf2 == a).or_fail("union_into(a, []) != a")
     });
 }
 
