@@ -1,0 +1,18 @@
+//! PERF — matrix-free large-n benches (`cargo bench --bench large_n`).
+//!
+//! Thin wrapper over the `large_n` suite in
+//! `astir::bench_harness::suites`: the matrix-free subsampled-DCT operator
+//! (`SubsampledDctOp`) at `n = 2^17` (apply / adjoint / sparse-proxy, one
+//! fast transform each) and `n = 2^20, m = 3·10^5` (full-transform apply +
+//! a 4-worker asynchronous StoIHT recovery run). The dense matrix pair for
+//! the big shape would need ~2.4 TB — these shapes exist **only** through
+//! the operator, so nothing here is jumbo-gated and every point runs in
+//! smoke mode under the committed `baseline_smoke.json` regression gate.
+//!
+//! Telemetry: `results/BENCH_large_n.json`.
+
+mod common;
+
+fn main() {
+    common::bench_binary_main("large_n");
+}

@@ -12,7 +12,7 @@ use crate::support::{support_of, top_s, union};
 /// iteration counts are small — tens, not the paper's 1500).
 pub fn cosamp(problem: &Problem, opts: &GreedyOpts) -> RunResult {
     let spec = &problem.spec;
-    let a = &problem.a;
+    let a = problem.a();
     let mut x = vec![0.0f64; spec.n];
     let mut r = problem.y.clone();
     let mut error_trace = Trace::new();

@@ -15,7 +15,7 @@ use crate::support::{hard_threshold_in_place, top_s_into};
 /// ignored.
 pub fn iht(problem: &Problem, opts: &GreedyOpts) -> RunResult {
     let spec = &problem.spec;
-    let blk = problem.a.as_block();
+    let blk = problem.a().as_block();
     let mut x = vec![0.0f64; spec.n];
     let mut proxy = vec![0.0f64; spec.n];
     let mut resid = vec![0.0f64; spec.m];
@@ -60,7 +60,7 @@ pub fn iht(problem: &Problem, opts: &GreedyOpts) -> RunResult {
 /// One IHT step in isolation (used by tests and the PJRT cross-check).
 pub fn iht_step(problem: &Problem, x: &[f64], gamma: f64) -> Vec<f64> {
     let spec = &problem.spec;
-    let blk = problem.a.as_block();
+    let blk = problem.a().as_block();
     let mut proxy = vec![0.0f64; spec.n];
     let mut resid = vec![0.0f64; spec.m];
     blk.proxy_step_into(&problem.y, x, gamma, &mut resid, &mut proxy);

@@ -20,7 +20,7 @@
 //! `tally_step` writes into caller-owned buffers and reuses internal
 //! scratch, because the runtimes call it once per core per iteration.
 
-use crate::linalg::SparseIterate;
+use crate::linalg::{MeasureOp, SparseIterate};
 use crate::problem::Problem;
 use crate::rng::Rng;
 
@@ -64,9 +64,18 @@ pub trait SupportKernel {
     fn burn(&mut self, x: &SparseIterate<f64>, block: usize);
 
     /// The halting statistic `‖y − A x‖₂`, evaluated sparsely over `x`'s
-    /// support in caller-owned scratch.
-    fn residual(&self, x: &SparseIterate<f64>, r_scratch: &mut Vec<f64>) -> f64 {
-        self.problem().residual_norm_sparse_with(x.values(), x.support(), r_scratch)
+    /// support in caller-owned scratch. Takes `&mut self` so kernels can
+    /// route through their own [`crate::linalg::OpScratch`] (the matrix-free
+    /// operator's check is one fast transform in reused workspace); the
+    /// default allocates a fresh operator scratch per call.
+    fn residual(&mut self, x: &SparseIterate<f64>, r_scratch: &mut Vec<f64>) -> f64 {
+        let mut op_scratch = self.problem().op.make_scratch();
+        self.problem().residual_norm_sparse_with(
+            x.values(),
+            x.support(),
+            r_scratch,
+            &mut op_scratch,
+        )
     }
 
     /// Ambient problem dimension `n`.
@@ -105,7 +114,7 @@ impl<K: SupportKernel + ?Sized> SupportKernel for Box<K> {
         (**self).burn(x, block)
     }
 
-    fn residual(&self, x: &SparseIterate<f64>, r_scratch: &mut Vec<f64>) -> f64 {
+    fn residual(&mut self, x: &SparseIterate<f64>, r_scratch: &mut Vec<f64>) -> f64 {
         (**self).residual(x, r_scratch)
     }
 

@@ -12,7 +12,7 @@ use crate::problem::Problem;
 /// iteration count in the result equals the number of selected atoms.
 pub fn omp(problem: &Problem, opts: &GreedyOpts) -> RunResult {
     let spec = &problem.spec;
-    let a = &problem.a;
+    let a = problem.a();
     let mut support: Vec<usize> = Vec::with_capacity(spec.s);
     let mut r = problem.y.clone();
     let mut error_trace = Trace::new();

@@ -18,14 +18,17 @@
 //!   iterations perform no heap allocation on the overdetermined path.
 
 use super::{GreedyOpts, RunResult, SupportKernel};
-use crate::linalg::{lstsq, nrm2, Mat, Qr, SparseIterate};
+use crate::linalg::{lstsq, nrm2, Mat, MeasureOp, OpScratch, Qr, SparseIterate};
 use crate::metrics::Trace;
 use crate::problem::Problem;
 use crate::rng::Rng;
 use crate::support::{support_of, top_s, top_s_into, union, union_into};
 
 /// One StoGradMP iteration body — the allocating reference implementation
-/// (see [`StoGradMpKernel`] for the hot-path form).
+/// (see [`StoGradMpKernel`] for the hot-path form). Works on raw matrices,
+/// so it requires a dense problem — it is the oracle the operator-driven
+/// kernel is pinned against, deliberately *not* routed through
+/// [`MeasureOp`].
 ///
 /// * `x` — current iterate (overwritten with the new estimate)
 /// * `block` — sampled measurement block
@@ -54,7 +57,7 @@ pub fn stogradmp_step(
     }
     // estimate: least squares over the merged support on the FULL system
     // (GradMP's estimation uses the global objective).
-    let sub = problem.a.select_cols(&merged);
+    let sub = problem.a().select_cols(&merged);
     let z = lstsq(&sub, &problem.y);
     // prune to top-s.
     let keep = top_s(&z, spec.s);
@@ -92,6 +95,7 @@ pub struct StoGradMpKernel<'p> {
     pruned_vals: Vec<f64>,
     nz_supp: Vec<usize>,
     nz_vals: Vec<f64>,
+    op_scratch: OpScratch,
 }
 
 impl<'p> StoGradMpKernel<'p> {
@@ -128,6 +132,7 @@ impl<'p> StoGradMpKernel<'p> {
             pruned_vals: Vec::with_capacity(spec.s),
             nz_supp: Vec::with_capacity(spec.s),
             nz_vals: Vec::with_capacity(spec.s),
+            op_scratch: problem.op.make_scratch(),
         }
     }
 
@@ -142,15 +147,19 @@ impl<'p> StoGradMpKernel<'p> {
         let m = spec.m;
         let k = self.merged.len();
         if k <= m {
-            self.problem.a.select_cols_into(&self.merged, &mut self.sub_data);
+            self.problem.op.select_cols_into(&self.merged, &mut self.sub_data);
             let sub = Mat::from_vec(m, k, std::mem::take(&mut self.sub_data));
             let qr = Qr::factor(sub);
             qr.solve_into(&self.problem.y, &mut self.rhs, &mut self.z);
             self.sub_data = qr.into_matrix().into_data();
         } else {
             // Underdetermined merged support (only reachable at very low
-            // sampling rates): cold CGLS fallback, allocating.
-            let sub = self.problem.a.select_cols(&self.merged);
+            // sampling rates): cold CGLS fallback, allocating. The column
+            // panel is gathered through the operator, so the path works
+            // matrix-free too.
+            let mut panel = Vec::new();
+            self.problem.op.select_cols_into(&self.merged, &mut panel);
+            let sub = Mat::from_vec(m, k, panel);
             let z = lstsq(&sub, &self.problem.y);
             self.z.clear();
             self.z.extend_from_slice(&z);
@@ -191,20 +200,14 @@ impl<'p> SupportKernel for StoGradMpKernel<'p> {
         estimate: &[usize],
         gamma_out: &mut Vec<usize>,
     ) {
-        let spec = &self.problem.spec;
+        let problem = self.problem;
+        let spec = &problem.spec;
         debug_assert_eq!(x.n(), spec.n, "iterate dimension");
-        let (blk, yb) = self.problem.block(block);
+        let yb = problem.y_block(block);
         let row0 = block * spec.b;
         // identify: r = y_b - A_b x (sparse gather), g = A_b^T r.
-        blk.residual_sparse_into(
-            &self.problem.a_t,
-            row0,
-            yb,
-            x.values(),
-            x.support(),
-            &mut self.resid,
-        );
-        blk.gemv_t_acc(&self.resid, 0.0, &mut self.grad);
+        problem.op.block_residual_sparse(row0, yb, x.values(), x.support(), &mut self.resid);
+        problem.op.block_apply_t_acc(row0, &self.resid, 0.0, &mut self.op_scratch, &mut self.grad);
         top_s_into(&self.grad, 2 * spec.s, &mut self.idx_scratch, &mut self.omega);
         // merge: Ω ∪ supp(x^t) ∪ T̃ (the support carried by the iterate is
         // the previous prune — GradMP's "current support").
@@ -235,15 +238,17 @@ impl<'p> SupportKernel for StoGradMpKernel<'p> {
     }
 
     fn dense_step(&mut self, x: &mut [f64], block: usize, gamma_out: &mut Vec<usize>) {
-        let spec = &self.problem.spec;
-        let (blk, yb) = self.problem.block(block);
+        let problem = self.problem;
+        let spec = &problem.spec;
+        let yb = problem.y_block(block);
+        let row0 = block * spec.b;
         // identify on the dense iterate (the SharedX ablation is O(n) by
         // design — concurrent overwrites break the sparse invariant).
-        blk.gemv_into(x, &mut self.resid);
+        problem.op.block_apply_into(row0, x, &mut self.op_scratch, &mut self.resid);
         for (r, &y) in self.resid.iter_mut().zip(yb) {
             *r = y - *r;
         }
-        blk.gemv_t_acc(&self.resid, 0.0, &mut self.grad);
+        problem.op.block_apply_t_acc(row0, &self.resid, 0.0, &mut self.op_scratch, &mut self.grad);
         top_s_into(&self.grad, 2 * spec.s, &mut self.idx_scratch, &mut self.omega);
         self.supp_scratch.clear();
         self.supp_scratch.extend((0..spec.n).filter(|&i| x[i] != 0.0));
@@ -261,18 +266,22 @@ impl<'p> SupportKernel for StoGradMpKernel<'p> {
         // Throwaway identify phase: the gradient pass is the stream-heavy
         // part of a GradMP iteration (the LS re-fit is compute over a
         // k ≤ 3s column panel).
-        let (blk, yb) = self.problem.block(block);
-        let row0 = block * self.problem.spec.b;
-        blk.residual_sparse_into(
-            &self.problem.a_t,
-            row0,
-            yb,
+        let problem = self.problem;
+        let yb = problem.y_block(block);
+        let row0 = block * problem.spec.b;
+        problem.op.block_residual_sparse(row0, yb, x.values(), x.support(), &mut self.resid);
+        problem.op.block_apply_t_acc(row0, &self.resid, 0.0, &mut self.op_scratch, &mut self.grad);
+        std::hint::black_box(&self.grad);
+    }
+
+    fn residual(&mut self, x: &SparseIterate<f64>, r_scratch: &mut Vec<f64>) -> f64 {
+        // Through the kernel's own operator scratch (see StoihtKernel).
+        self.problem.residual_norm_sparse_with(
             x.values(),
             x.support(),
-            &mut self.resid,
-        );
-        blk.gemv_t_acc(&self.resid, 0.0, &mut self.grad);
-        std::hint::black_box(&self.grad);
+            r_scratch,
+            &mut self.op_scratch,
+        )
     }
 }
 
@@ -455,5 +464,18 @@ mod tests {
         let p = easy(53);
         let mb = p.spec.num_blocks();
         let _ = StoGradMpKernel::with_probs(&p, vec![0.3 / mb as f64; mb]);
+    }
+
+    #[test]
+    fn matrix_free_sequential_solver_converges() {
+        // Identify (sparse gather + transform adjoint) and the QR re-fit's
+        // column panel all route through the matrix-free operator.
+        let p = ProblemSpec::tiny_matrix_free().generate(&mut Rng::seed_from(60));
+        let opts = GreedyOpts { max_iters: 100, ..Default::default() };
+        let r = stogradmp(&p, &opts, &mut Rng::seed_from(61));
+        assert!(r.converged, "residual {}", r.residual);
+        assert!(p.recovery_error(&r.x) < 1e-6);
+        let nnz = r.x.iter().filter(|&&v| v != 0.0).count();
+        assert!(nnz <= p.spec.s);
     }
 }

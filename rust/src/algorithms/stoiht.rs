@@ -6,14 +6,17 @@
 //! (and, via the test-vector suite, against the JAX oracle).
 
 use super::{GreedyOpts, RunResult, SupportKernel};
-use crate::linalg::{nrm2, SparseIterate};
+use crate::linalg::{nrm2, MeasureOp, OpScratch, SparseIterate};
 use crate::metrics::Trace;
 use crate::problem::Problem;
 use crate::rng::Rng;
 use crate::support::{self, top_s_into, union_into};
 
 /// Reusable StoIHT step state: scratch buffers plus the sampling
-/// distribution. One kernel per (simulated or real) core.
+/// distribution. One kernel per (simulated or real) core. All measurement
+/// arithmetic routes through the problem's [`MeasureOp`], so the kernel
+/// runs unchanged on the materialized matrix or the matrix-free
+/// subsampled-DCT operator.
 pub struct StoihtKernel<'p> {
     problem: &'p Problem,
     /// Per-block selection probabilities `p(i)` (uniform by default).
@@ -26,6 +29,10 @@ pub struct StoihtKernel<'p> {
     idx_scratch: Vec<usize>,
     gamma_set: Vec<usize>,
     union_scratch: Vec<usize>,
+    op_scratch: OpScratch,
+    /// `A x` buffer for the dense halting statistic (sequential solver);
+    /// sized lazily — the async runtimes use the sparse check instead.
+    ax_scratch: Vec<f64>,
 }
 
 impl<'p> StoihtKernel<'p> {
@@ -58,6 +65,8 @@ impl<'p> StoihtKernel<'p> {
             idx_scratch: Vec::with_capacity(problem.spec.n),
             gamma_set: vec![0; problem.spec.s.min(problem.spec.n)],
             union_scratch: Vec::with_capacity(2 * problem.spec.s),
+            op_scratch: problem.op.make_scratch(),
+            ax_scratch: Vec::new(),
         }
     }
 
@@ -82,9 +91,19 @@ impl<'p> StoihtKernel<'p> {
         block: usize,
         extra_support: Option<&[usize]>,
     ) -> &[usize] {
-        let spec = &self.problem.spec;
-        let (blk, yb) = self.problem.block(block);
-        blk.proxy_step_into(yb, x, self.alphas[block], &mut self.resid, &mut self.proxy);
+        let problem = self.problem;
+        let spec = &problem.spec;
+        let yb = problem.y_block(block);
+        let alpha = self.alphas[block];
+        problem.op.block_proxy_step(
+            block * spec.b,
+            yb,
+            x,
+            alpha,
+            &mut self.resid,
+            &mut self.op_scratch,
+            &mut self.proxy,
+        );
         top_s_into(&self.proxy, spec.s, &mut self.idx_scratch, &mut self.gamma_set);
         // estimate: copy proxy restricted to the union onto x.
         match extra_support {
@@ -120,18 +139,20 @@ impl<'p> StoihtKernel<'p> {
         block: usize,
         extra_support: Option<&[usize]>,
     ) -> &[usize] {
-        let spec = &self.problem.spec;
+        let problem = self.problem;
+        let spec = &problem.spec;
         debug_assert_eq!(x.n(), spec.n, "iterate dimension");
-        let (blk, yb) = self.problem.block(block);
+        let yb = problem.y_block(block);
         let row0 = block * spec.b;
-        blk.proxy_step_sparse_into(
-            &self.problem.a_t,
+        let alpha = self.alphas[block];
+        problem.op.block_proxy_step_sparse(
             row0,
             yb,
             x.values(),
             x.support(),
-            self.alphas[block],
+            alpha,
             &mut self.resid,
+            &mut self.op_scratch,
             &mut self.proxy,
         );
         top_s_into(&self.proxy, spec.s, &mut self.idx_scratch, &mut self.gamma_set);
@@ -148,6 +169,14 @@ impl<'p> StoihtKernel<'p> {
     /// The halting statistic `||y - A x||_2`.
     pub fn residual_norm(&self, x: &[f64]) -> f64 {
         self.problem.residual_norm(x)
+    }
+
+    /// As [`StoihtKernel::residual_norm`] but through the kernel's own
+    /// scratch (no per-check allocation — the matrix-free transform
+    /// workspace is ~4n floats). Same arithmetic, same result bits.
+    pub fn residual_norm_reusing_scratch(&mut self, x: &[f64]) -> f64 {
+        let problem = self.problem;
+        problem.residual_norm_with(x, &mut self.ax_scratch, &mut self.op_scratch)
     }
 
     /// Problem dimension.
@@ -189,19 +218,32 @@ impl<'p> SupportKernel for StoihtKernel<'p> {
     }
 
     fn burn(&mut self, x: &SparseIterate<f64>, block: usize) {
-        let (blk, yb) = self.problem.block(block);
-        let row0 = block * self.problem.spec.b;
-        blk.proxy_step_sparse_into(
-            &self.problem.a_t,
+        let problem = self.problem;
+        let yb = problem.y_block(block);
+        let row0 = block * problem.spec.b;
+        let alpha = self.alphas[block];
+        problem.op.block_proxy_step_sparse(
             row0,
             yb,
             x.values(),
             x.support(),
-            self.alphas[block],
+            alpha,
             &mut self.resid,
+            &mut self.op_scratch,
             &mut self.proxy,
         );
         std::hint::black_box(&self.proxy);
+    }
+
+    fn residual(&mut self, x: &SparseIterate<f64>, r_scratch: &mut Vec<f64>) -> f64 {
+        // Through the kernel's own operator scratch — allocation-free for
+        // the matrix-free operator too.
+        self.problem.residual_norm_sparse_with(
+            x.values(),
+            x.support(),
+            r_scratch,
+            &mut self.op_scratch,
+        )
     }
 }
 
@@ -248,7 +290,7 @@ fn stoiht_impl(
             error_trace.push(problem.recovery_error(x.values()));
         }
         if t % opts.check_every == 0 {
-            residual = kernel.residual_norm(x.values());
+            residual = kernel.residual_norm_reusing_scratch(x.values());
             if opts.record_resid {
                 resid_trace.push(residual);
             }
@@ -259,7 +301,7 @@ fn stoiht_impl(
         }
     }
     if !converged {
-        residual = kernel.residual_norm(x.values());
+        residual = kernel.residual_norm_reusing_scratch(x.values());
     }
     RunResult { x: x.into_values(), iters, converged, residual, error_trace, resid_trace }
 }
@@ -461,6 +503,16 @@ mod tests {
         assert!(p.recovery_error(&r.x) < 1e-6);
         let nnz = r.x.iter().filter(|&&v| v != 0.0).count();
         assert!(nnz <= p.spec.s);
+    }
+
+    #[test]
+    fn matrix_free_sequential_solver_converges() {
+        // The kernel runs unchanged on the matrix-free subsampled-DCT
+        // operator — no m x n matrix is ever materialized.
+        let p = ProblemSpec::tiny_matrix_free().generate(&mut Rng::seed_from(30));
+        let r = stoiht(&p, &GreedyOpts::default(), &mut Rng::seed_from(31));
+        assert!(r.converged, "residual {}", r.residual);
+        assert!(p.recovery_error(&r.x) < 1e-6);
     }
 
     #[test]

@@ -13,7 +13,12 @@
 //! The runtime is **generic over the algorithm**: [`run_async_with`]
 //! drives any [`SupportKernel`] — StoIHT ([`run_async`], the default),
 //! StoGradMP (`StoGradMpKernel`), or the PJRT-backed [`BackendStep`] —
-//! through the identical read/vote/commit/exit protocol.
+//! through the identical read/vote/commit/exit protocol. It is also
+//! agnostic to the **measurement representation**: the native kernels
+//! speak [`crate::linalg::MeasureOp`], so the same threads run against the
+//! materialized matrix or the matrix-free subsampled-DCT operator
+//! (`dense_a = false`), which is how `n = 10^6` recoveries fit in memory
+//! (see the `large_n` bench suite).
 //!
 //! The worker inner loop is allocation-free after warmup: iterates are
 //! [`SparseIterate`]s driven through each kernel's sparse fast path, `Γ^t`
@@ -32,7 +37,7 @@ use std::time::{Duration, Instant};
 
 use crate::algorithms::{StoihtKernel, SupportKernel};
 use crate::backend::Backend;
-use crate::linalg::SparseIterate;
+use crate::linalg::{MeasureOp, SparseIterate};
 use crate::problem::Problem;
 use crate::rng::Rng;
 use crate::sim::SpeedSchedule;
@@ -240,6 +245,11 @@ impl<'p, B: Backend> BackendStep<'p, B> {
 
     /// Arbitrary block distribution `p(i)` (must sum to 1).
     pub fn with_probs(problem: &'p Problem, backend: B, probs: Vec<f64>) -> Self {
+        assert!(
+            problem.op.dense().is_some(),
+            "BackendStep requires a dense problem: the Backend protocol (PJRT artifacts) \
+             consumes the materialized matrix"
+        );
         let mb = problem.spec.num_blocks();
         assert_eq!(probs.len(), mb, "probs length != number of blocks");
         let total: f64 = probs.iter().sum();
@@ -465,5 +475,41 @@ mod tests {
         let p = easy(9);
         let mb = p.spec.num_blocks();
         let _ = BackendStep::with_probs(&p, NativeBackend::new(), vec![0.3 / mb as f64; mb]);
+    }
+
+    fn matrix_free_problem(seed: u64) -> Problem {
+        ProblemSpec::tiny_matrix_free().generate(&mut Rng::seed_from(seed))
+    }
+
+    #[test]
+    fn matrix_free_async_stoiht_converges() {
+        // The tentpole composition: real threads + lock-free tally + the
+        // matrix-free subsampled-DCT operator, no m x n matrix anywhere.
+        let p = matrix_free_problem(12);
+        for cores in [1usize, 4] {
+            let out = run_async(&p, cores, &AsyncOpts::default(), 91 + cores as u64);
+            assert!(out.converged, "cores {cores}");
+            assert!(p.residual_norm(&out.x) < 1e-6, "cores {cores}");
+            assert!(p.recovery_error(&out.x) < 1e-5, "cores {cores}");
+        }
+    }
+
+    #[test]
+    fn matrix_free_async_stogradmp_converges() {
+        use crate::algorithms::StoGradMpKernel;
+        let p = matrix_free_problem(13);
+        let opts = AsyncOpts { max_local_iters: 200, ..Default::default() };
+        let out = run_async_with(&p, 2, &opts, 17, StoGradMpKernel::new);
+        assert!(out.converged);
+        assert!(p.residual_norm(&out.x) < 1e-6);
+        let nnz = out.x.iter().filter(|&&v| v != 0.0).count();
+        assert!(nnz <= p.spec.s);
+    }
+
+    #[test]
+    #[should_panic(expected = "dense problem")]
+    fn backend_step_rejects_matrix_free_problems() {
+        let p = matrix_free_problem(14);
+        let _ = BackendStep::new(&p, NativeBackend::new());
     }
 }

@@ -168,7 +168,7 @@ impl Backend for PjrtBackend {
     ) -> Result<(Vec<f64>, Vec<usize>)> {
         let spec = &problem.spec;
         let b = spec.b;
-        let a_blk = &problem.a.data()[block * b * spec.n..(block + 1) * b * spec.n];
+        let a_blk = &problem.a().data()[block * b * spec.n..(block + 1) * b * spec.n];
         let y_blk = &problem.y[block * b..(block + 1) * b];
         self.runtime
             .stoiht_step(spec.n, b, spec.s, a_blk, y_blk, x, alpha, tally_mask)
@@ -177,7 +177,7 @@ impl Backend for PjrtBackend {
     fn residual_norm(&mut self, problem: &Problem, x: &[f64]) -> Result<f64> {
         let spec = &problem.spec;
         self.runtime
-            .residual_norm(spec.n, spec.m, problem.a.data(), &problem.y, x)
+            .residual_norm(spec.n, spec.m, problem.a().data(), &problem.y, x)
     }
 }
 

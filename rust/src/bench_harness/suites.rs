@@ -4,7 +4,7 @@
 //! registers [`BenchSpec`]s into a [`Suite`]; the `cargo bench` binaries
 //! (`rust/benches/*.rs`) and the `astir bench` CLI both execute suites
 //! from this registry, so a perf number means the same thing however it
-//! was produced. Seven suites, one per bench binary:
+//! was produced. Eight suites, one per bench binary:
 //!
 //! * `hot_path` — kernel microbenches: roofline triad, gemv/proxy
 //!   primitives, top-s + tally ops, full Alg.-2 steps, dense-vs-sparse at
@@ -15,6 +15,11 @@
 //!   supply the averaging) that still emit their `results/` tables.
 //! * `stogradmp_async` — the §V extension: sequential StoGradMP vs the
 //!   discrete-time sweep vs real-thread async wallclock per core count.
+//! * `large_n` — the matrix-free subsampled-DCT operator at
+//!   `n = 2^17 … 2^20`: transform-backed apply/adjoint/proxy microbenches
+//!   plus an `n = 2^20, m = 3·10^5` asynchronous StoIHT run — shapes whose
+//!   dense matrix (up to 2.4 TB) could never be materialized. Smoke-budgeted:
+//!   every point runs in CI and is gated by the committed baseline.
 //!
 //! Smoke mode shrinks the Monte-Carlo budgets to CI size; full mode keeps
 //! the paper-ish defaults (`ASTIR_BENCH_TRIALS` raises them further).
@@ -29,9 +34,9 @@ use crate::backend::{Backend, PjrtBackend};
 use crate::config::ExperimentConfig;
 use crate::coordinator::Leader;
 use crate::experiments::{self, Fig2Variant};
-use crate::linalg::{dot, Mat, SparseIterate};
+use crate::linalg::{dot, Mat, MeasureOp, SparseIterate};
 use crate::metrics::{stats, Table};
-use crate::problem::{Problem, ProblemSpec};
+use crate::problem::{Ensemble, Problem, ProblemSpec};
 use crate::report;
 use crate::rng::Rng;
 use crate::sim::{SimOpts, SimOutcome, SpeedSchedule};
@@ -87,6 +92,11 @@ pub fn registry() -> Vec<SuiteDef> {
             name: "stogradmp_async",
             about: "asynchronous StoGradMP — sequential vs async at the paper scale",
             register: stogradmp_async_suite,
+        },
+        SuiteDef {
+            name: "large_n",
+            about: "matrix-free subsampled DCT at n = 10^5…10^6 (no m x n matrix exists)",
+            register: large_n_suite,
         },
     ]
 }
@@ -252,7 +262,7 @@ fn sparse_vs_dense_at(suite: &mut Suite, label: &str, spec: &ProblemSpec, seed: 
     let supp = x_sparse.support().to_vec();
     let sparse_proxy = suite.bench(ps_spec, || {
         blk.proxy_step_sparse_into(
-            &p.a_t,
+            p.a_t(),
             0,
             yb,
             x_sparse.values(),
@@ -819,6 +829,127 @@ fn stogradmp_async_suite(suite: &mut Suite) {
     }
 }
 
+/// The `large_n` suite — million-dimension recovery through the
+/// matrix-free [`crate::linalg::SubsampledDctOp`]. Two shapes:
+///
+/// * `n = 2^17 (131k), m = 30 000` — apply/adjoint/sparse-proxy
+///   microbenches (one fast transform each; the dense pair would need
+///   63 GB).
+/// * `n = 2^20 (1.05M), m = 300 000` — a full-transform apply microbench
+///   plus a 4-worker asynchronous StoIHT recovery run, fixed local
+///   iteration budget (StoIHT needs hundreds of iterations to converge at
+///   this shape; the bench measures async solve throughput, and the dense
+///   pair would need 2.4 TB — this shape *only exists* matrix-free).
+///
+/// Nothing here is jumbo-gated: the operator stores `O(m + n)` floats, so
+/// even the `n = 2^20` point runs inside the CI smoke budget and under the
+/// committed `baseline_smoke.json` regression gate.
+fn large_n_suite(suite: &mut Suite) {
+    let shape = |name: &str, n: usize, m: usize, seed: u64| {
+        BenchSpec::micro(name).dims(n, m, 15, 50).seed(seed)
+    };
+    let (n_s, m_s) = (1usize << 17, 30_000usize);
+    let (n_l, m_l) = (1usize << 20, 300_000usize);
+    let apply_s = shape("dct_apply_n131k", n_s, m_s, 40);
+    let adjoint_s = shape("dct_adjoint_n131k", n_s, m_s, 40);
+    let proxy_s = shape("proxy_sparse_n131k", n_s, m_s, 40);
+    let apply_l = shape("dct_apply_n1m", n_l, m_l, 44);
+    let async_l = BenchSpec::experiment("stoiht_async_n1m").dims(n_l, m_l, 15, 50).seed(44);
+    if suite.is_dry_run() {
+        for s in [apply_s, adjoint_s, proxy_s, apply_l, async_l] {
+            suite.bench(s, || {});
+        }
+        return;
+    }
+    let mf_spec = |n: usize, m: usize| ProblemSpec {
+        n,
+        m,
+        b: 15,
+        s: 50,
+        ensemble: Ensemble::PartialDct,
+        dense_a: false,
+        ..ProblemSpec::paper()
+    };
+
+    // --- n = 2^17: operator primitives -------------------------------
+    if [&apply_s, &adjoint_s, &proxy_s].iter().any(|s| suite.wants(s)) {
+        bench_header(&format!("matrix-free operator — n = {n_s}, m = {m_s}"));
+        let p = mf_spec(n_s, m_s).generate(&mut Rng::seed_from(40));
+        let mut scratch = p.op.make_scratch();
+        let x: Vec<f64> = (0..n_s).map(|i| (i as f64 * 0.37).sin()).collect();
+        let mut out_m = vec![0.0; m_s];
+        suite.bench(apply_s, || {
+            p.op.apply_into(&x, &mut scratch, &mut out_m);
+            std::hint::black_box(&out_m);
+        });
+        let r: Vec<f64> = (0..m_s).map(|i| (i as f64 * 0.73).cos()).collect();
+        let mut out_n = vec![0.0; n_s];
+        suite.bench(adjoint_s, || {
+            p.op.apply_t_into(&r, &mut scratch, &mut out_n);
+            std::hint::black_box(&out_n);
+        });
+        // The async hot path: sparse proxy on one block with a 2s-support
+        // iterate (Γ ∪ T̃).
+        let mut supp = Rng::seed_from(41).subset(n_s, 100);
+        supp.sort_unstable();
+        let mut xs = vec![0.0; n_s];
+        for (q, &j) in supp.iter().enumerate() {
+            xs[j] = 0.1 + q as f64 * 0.01;
+        }
+        let mut resid = vec![0.0; p.spec.b];
+        let yb: Vec<f64> = p.y_block(0).to_vec();
+        suite.bench(proxy_s, || {
+            p.op.block_proxy_step_sparse(
+                0,
+                &yb,
+                &xs,
+                &supp,
+                1.0,
+                &mut resid,
+                &mut scratch,
+                &mut out_n,
+            );
+            std::hint::black_box(&out_n);
+        });
+    }
+
+    // --- n = 2^20: the shape that only exists matrix-free -------------
+    if !(suite.wants(&apply_l) || suite.wants(&async_l)) {
+        return;
+    }
+    bench_header(&format!("matrix-free operator — n = {n_l}, m = {m_l} (dense pair: 2.4 TB)"));
+    let p = mf_spec(n_l, m_l).generate(&mut Rng::seed_from(44));
+    if suite.wants(&apply_l) {
+        let mut scratch = p.op.make_scratch();
+        let x: Vec<f64> = (0..n_l).map(|i| (i as f64 * 0.37).sin()).collect();
+        let mut out_m = vec![0.0; m_l];
+        suite.bench(apply_l, || {
+            p.op.apply_into(&x, &mut scratch, &mut out_m);
+            std::hint::black_box(&out_m);
+        });
+    }
+    if suite.wants(&async_l) {
+        let iters = if suite.mode() == Mode::Smoke { 30 } else { 150 };
+        let mut outcome = None;
+        suite.bench(async_l, || {
+            let opts = AsyncOpts {
+                max_local_iters: iters,
+                check_every: 8,
+                ..Default::default()
+            };
+            outcome = Some(run_async_with(&p, 4, &opts, 77, |prob| StoihtKernel::new(prob, 1.0)));
+        });
+        if let Some(out) = outcome {
+            let done: u64 = out.local_iters.iter().sum();
+            println!(
+                "  => 4 workers, {done} local iterations total (cap {iters}/worker), \
+                 converged={} — no m x n matrix was ever allocated",
+                out.converged
+            );
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -835,7 +966,8 @@ mod tests {
                 "fig2_lower",
                 "ablations",
                 "baselines",
-                "stogradmp_async"
+                "stogradmp_async",
+                "large_n"
             ]
         );
         for n in &names {
@@ -845,11 +977,43 @@ mod tests {
     }
 
     #[test]
+    fn large_n_suite_registers_the_acceptance_point() {
+        // `astir bench --filter large_n` must reach the n = 2^20 async
+        // recovery point (the acceptance-criteria invocation), and every
+        // point must be standard scale (never jumbo-gated: the operator is
+        // O(m + n) memory, so smoke CI runs all of it).
+        let opts = RunOpts {
+            mode: Mode::Smoke,
+            filter: Some("large_n".to_string()),
+            skip_jumbo: true,
+            dry_run: true,
+        };
+        let report = run_all(&opts);
+        let ln = report.suites.iter().find(|s| s.name == "large_n").unwrap();
+        let names: Vec<&str> = ln.benches.iter().map(|b| b.name.as_str()).collect();
+        let expected = [
+            "dct_apply_n131k",
+            "dct_adjoint_n131k",
+            "proxy_sparse_n131k",
+            "dct_apply_n1m",
+            "stoiht_async_n1m",
+        ];
+        for e in expected {
+            assert!(names.contains(&e), "missing {e} in {names:?}");
+        }
+        assert!(ln.benches.iter().all(|b| b.scale == Scale::Standard));
+        let big = ln.benches.iter().find(|b| b.name == "stoiht_async_n1m").unwrap();
+        let dims = big.dims.unwrap();
+        assert!(dims.n >= 1_000_000, "n = {} is not million-dimension", dims.n);
+        assert_eq!(dims.m, 300_000);
+    }
+
+    #[test]
     fn dry_run_registers_specs_for_every_suite() {
         let opts = RunOpts { mode: Mode::Smoke, filter: None, skip_jumbo: true, dry_run: true };
         let report = run_all(&opts);
         assert_eq!(report.schema, SCHEMA);
-        assert_eq!(report.suites.len(), 7);
+        assert_eq!(report.suites.len(), 8);
         for s in &report.suites {
             assert!(
                 !s.benches.is_empty() || !s.skipped.is_empty(),

@@ -109,6 +109,9 @@ impl ExperimentConfig {
                 "noise_std" => {
                     p.noise_std = value.as_f64().ok_or("problem.noise_std must be a number")?
                 }
+                "dense_a" => {
+                    p.dense_a = value.as_bool().ok_or("problem.dense_a must be a boolean")?
+                }
                 "ensemble" => {
                     let s = value.as_str().ok_or("problem.ensemble must be a string")?;
                     p.ensemble =
@@ -207,6 +210,30 @@ noise_std = 0.01
         assert_eq!(c.problem.ensemble, Ensemble::Bernoulli);
         assert_eq!(c.problem.signal, SignalModel::FlatSpikes);
         assert_eq!(c.problem.noise_std, 0.01);
+    }
+
+    #[test]
+    fn dense_a_knob_parses_and_validates() {
+        let toml = r#"
+[problem]
+n = 64
+m = 32
+b = 8
+s = 4
+ensemble = "partial_dct"
+dense_a = false
+"#;
+        let c = ExperimentConfig::from_toml(toml).unwrap();
+        assert!(!c.problem.dense_a);
+        assert_eq!(c.problem.ensemble, Ensemble::PartialDct);
+        // Default stays dense.
+        assert!(ExperimentConfig::default().problem.dense_a);
+        // Matrix-free with a non-partial_dct ensemble fails validation.
+        assert!(ExperimentConfig::from_toml("[problem]\ndense_a = false").is_err());
+        // ... as does a non-power-of-two n.
+        let bad = "[problem]\nn = 96\nm = 48\nb = 8\nensemble = \"partial_dct\"\ndense_a = false";
+        assert!(ExperimentConfig::from_toml(bad).is_err());
+        assert!(ExperimentConfig::from_toml("[problem]\ndense_a = 3").is_err());
     }
 
     #[test]

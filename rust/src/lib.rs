@@ -22,7 +22,7 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`linalg`] | dense BLAS-like substrate (gemv/gemm, QR, CGLS) |
+//! | [`linalg`] | BLAS-like substrate (gemv, QR, CGLS) + the `MeasureOp` operator layer (dense / matrix-free subsampled DCT, in-crate FFT) |
 //! | [`rng`] | deterministic xoshiro256++ RNG, Gaussian sampling |
 //! | [`problem`] | compressed-sensing problem generation (matrix ensembles, sparse signals, block partitions) |
 //! | [`support`] | top-`s` support identification, unions, accuracy metrics |

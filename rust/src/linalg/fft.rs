@@ -1,0 +1,345 @@
+//! In-crate O(n log n) orthogonal transforms: a radix-2 complex FFT and the
+//! DCT-II / DCT-III pair built on it.
+//!
+//! This is the compute core of the matrix-free subsampled-DCT measurement
+//! operator ([`super::measure::SubsampledDctOp`]): a row of the `n x n`
+//! DCT-II matrix never needs to exist — `A x` is one fast DCT-II followed by
+//! an `m`-row gather, and `A^T r` is a scatter followed by one fast DCT-III
+//! (the exact transpose). Zero dependencies, like the hand-rolled TOML/JSON
+//! layers; the plan precomputes twiddle and phase tables once so the
+//! per-transform passes are pure streaming arithmetic.
+//!
+//! Conventions (unnormalized, matching the direct sums the dense
+//! `PartialDct` ensemble evaluates):
+//!
+//! * DCT-II:  `X_k = Σ_{j<n} x_j · cos(π k (2j+1) / (2n))`
+//! * DCT-III: `x_j = Σ_{k<n} X_k · cos(π k (2j+1) / (2n))` — the *transpose*
+//!   of DCT-II (not its scaled inverse; the `c0` orthonormalization lives in
+//!   the operator's per-row scales).
+//!
+//! Sizes are restricted to powers of two (radix-2 only — the recursion that
+//! would cover arbitrary `n` buys nothing for the generated benchmarks, which
+//! choose `n = 2^17 … 2^20`). The DCT-II is computed via Makhoul's N-point
+//! FFT mapping (no 2n zero-padding): reorder the input as
+//! `v_j = x_{2j}`, `v_{n-1-j} = x_{2j+1}`, run one complex FFT, and take
+//! `X_k = Re(e^{-iπk/(2n)} V_k)`. The DCT-III is the algebraic transpose of
+//! that pipeline (diagonal multiply → FFT → inverse reorder), which is what
+//! makes the operator's adjoint property hold to rounding error.
+
+/// Precomputed tables for size-`n` transforms (`n` a power of two).
+///
+/// Memory: `1.5 n` complex entries (24 bytes/row-equivalent) — at
+/// `n = 2^20` about 24 MB, against the 2.4 TB an `m x n` dense matrix
+/// would need at the `large_n` bench shape.
+#[derive(Clone, Debug)]
+pub struct DctPlan {
+    n: usize,
+    /// FFT twiddles `e^{-2πi j / n}`, `j < n/2`.
+    tw_re: Vec<f64>,
+    tw_im: Vec<f64>,
+    /// DCT phase factors `e^{-iπ k / (2n)}`, `k < n`.
+    ph_re: Vec<f64>,
+    ph_im: Vec<f64>,
+}
+
+/// Reusable complex workspace for one plan (two `n`-length lanes). One per
+/// caller (kernels hold their own), so concurrent workers never contend.
+#[derive(Clone, Debug, Default)]
+pub struct DctScratch {
+    re: Vec<f64>,
+    im: Vec<f64>,
+}
+
+impl DctPlan {
+    /// Build tables for size `n`. Panics unless `n` is a power of two.
+    pub fn new(n: usize) -> Self {
+        assert!(n.is_power_of_two(), "DctPlan: n = {n} must be a power of two");
+        let half = n / 2;
+        let mut tw_re = Vec::with_capacity(half);
+        let mut tw_im = Vec::with_capacity(half);
+        for j in 0..half {
+            let theta = -2.0 * std::f64::consts::PI * j as f64 / n as f64;
+            tw_re.push(theta.cos());
+            tw_im.push(theta.sin());
+        }
+        let mut ph_re = Vec::with_capacity(n);
+        let mut ph_im = Vec::with_capacity(n);
+        for k in 0..n {
+            let theta = -std::f64::consts::PI * k as f64 / (2.0 * n as f64);
+            ph_re.push(theta.cos());
+            ph_im.push(theta.sin());
+        }
+        DctPlan { n, tw_re, tw_im, ph_re, ph_im }
+    }
+
+    /// Transform size.
+    #[inline(always)]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Fresh workspace sized for this plan.
+    pub fn scratch(&self) -> DctScratch {
+        DctScratch { re: vec![0.0; self.n], im: vec![0.0; self.n] }
+    }
+
+    fn check_scratch<'a>(&self, s: &'a mut DctScratch) -> (&'a mut [f64], &'a mut [f64]) {
+        s.re.resize(self.n, 0.0);
+        s.im.resize(self.n, 0.0);
+        (&mut s.re, &mut s.im)
+    }
+
+    /// In-place iterative radix-2 FFT with the `e^{-2πi jk/n}` sign
+    /// convention (bit-reversal permutation + Cooley–Tukey butterflies).
+    fn fft(&self, re: &mut [f64], im: &mut [f64]) {
+        let n = self.n;
+        debug_assert_eq!(re.len(), n);
+        debug_assert_eq!(im.len(), n);
+        // Bit-reversal permutation.
+        let mut j = 0usize;
+        for i in 1..n {
+            let mut bit = n >> 1;
+            while j & bit != 0 {
+                j ^= bit;
+                bit >>= 1;
+            }
+            j |= bit;
+            if i < j {
+                re.swap(i, j);
+                im.swap(i, j);
+            }
+        }
+        // Butterfly passes. Twiddle for stage `len` at offset `k` is
+        // e^{-2πi k/len} = tw[k * (n/len)].
+        let mut len = 2usize;
+        while len <= n {
+            let half = len / 2;
+            let step = n / len;
+            let mut base = 0usize;
+            while base < n {
+                for k in 0..half {
+                    let wr = self.tw_re[k * step];
+                    let wi = self.tw_im[k * step];
+                    let (ur, ui) = (re[base + k], im[base + k]);
+                    let (xr, xi) = (re[base + k + half], im[base + k + half]);
+                    let vr = xr * wr - xi * wi;
+                    let vi = xr * wi + xi * wr;
+                    re[base + k] = ur + vr;
+                    im[base + k] = ui + vi;
+                    re[base + k + half] = ur - vr;
+                    im[base + k + half] = ui - vi;
+                }
+                base += len;
+            }
+            len <<= 1;
+        }
+    }
+
+    /// Unnormalized DCT-II: `out[k] = Σ_j x[j] cos(π k (2j+1) / (2n))`.
+    pub fn dct2_into(&self, x: &[f64], scratch: &mut DctScratch, out: &mut [f64]) {
+        let n = self.n;
+        assert_eq!(x.len(), n, "dct2: input length");
+        assert_eq!(out.len(), n, "dct2: output length");
+        if n == 1 {
+            out[0] = x[0];
+            return;
+        }
+        let (re, im) = self.check_scratch(scratch);
+        // Makhoul reorder: v_j = x_{2j}, v_{n-1-j} = x_{2j+1}.
+        for j in 0..n / 2 {
+            re[j] = x[2 * j];
+            re[n - 1 - j] = x[2 * j + 1];
+        }
+        im.fill(0.0);
+        self.fft(re, im);
+        // X_k = Re(e^{-iπk/(2n)} V_k).
+        for k in 0..n {
+            out[k] = self.ph_re[k] * re[k] - self.ph_im[k] * im[k];
+        }
+    }
+
+    /// Unnormalized DCT-III — the exact transpose of [`DctPlan::dct2_into`]:
+    /// `out[j] = Σ_k r[k] cos(π k (2j+1) / (2n))`. Implemented as the
+    /// reversed pipeline (phase multiply → FFT → inverse reorder), so
+    /// `⟨dct2(x), r⟩ = ⟨x, dct3(r)⟩` holds to rounding error.
+    pub fn dct3_into(&self, r: &[f64], scratch: &mut DctScratch, out: &mut [f64]) {
+        let n = self.n;
+        assert_eq!(r.len(), n, "dct3: input length");
+        assert_eq!(out.len(), n, "dct3: output length");
+        if n == 1 {
+            out[0] = r[0];
+            return;
+        }
+        let (re, im) = self.check_scratch(scratch);
+        for k in 0..n {
+            re[k] = self.ph_re[k] * r[k];
+            im[k] = self.ph_im[k] * r[k];
+        }
+        self.fft(re, im);
+        // Inverse of the Makhoul reorder (the permutation's transpose).
+        for j in 0..n / 2 {
+            out[2 * j] = re[j];
+            out[2 * j + 1] = re[n - 1 - j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn direct_dct2(x: &[f64]) -> Vec<f64> {
+        let n = x.len();
+        let nf = n as f64;
+        (0..n)
+            .map(|k| {
+                (0..n)
+                    .map(|j| {
+                        x[j] * (std::f64::consts::PI * k as f64 * (j as f64 + 0.5) / nf).cos()
+                    })
+                    .sum()
+            })
+            .collect()
+    }
+
+    fn direct_dct3(r: &[f64]) -> Vec<f64> {
+        let n = r.len();
+        let nf = n as f64;
+        (0..n)
+            .map(|j| {
+                (0..n)
+                    .map(|k| {
+                        r[k] * (std::f64::consts::PI * k as f64 * (j as f64 + 0.5) / nf).cos()
+                    })
+                    .sum()
+            })
+            .collect()
+    }
+
+    fn wave(n: usize, seed: u64) -> Vec<f64> {
+        (0..n).map(|i| ((i as f64 + 1.3 * seed as f64) * 0.7129).sin()).collect()
+    }
+
+    #[test]
+    fn dct2_matches_direct_sum_across_sizes() {
+        for n in [1usize, 2, 4, 8, 16, 32, 128, 512] {
+            let plan = DctPlan::new(n);
+            let mut scratch = plan.scratch();
+            let x = wave(n, 1);
+            let mut out = vec![0.0; n];
+            plan.dct2_into(&x, &mut scratch, &mut out);
+            let want = direct_dct2(&x);
+            for k in 0..n {
+                assert!(
+                    (out[k] - want[k]).abs() <= 1e-10 * (1.0 + want[k].abs()),
+                    "n={n} k={k}: {} vs {}",
+                    out[k],
+                    want[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dct3_matches_direct_sum_across_sizes() {
+        for n in [1usize, 2, 4, 8, 64, 256] {
+            let plan = DctPlan::new(n);
+            let mut scratch = plan.scratch();
+            let r = wave(n, 2);
+            let mut out = vec![0.0; n];
+            plan.dct3_into(&r, &mut scratch, &mut out);
+            let want = direct_dct3(&r);
+            for j in 0..n {
+                assert!(
+                    (out[j] - want[j]).abs() <= 1e-10 * (1.0 + want[j].abs()),
+                    "n={n} j={j}: {} vs {}",
+                    out[j],
+                    want[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dct3_is_the_transpose_of_dct2() {
+        for n in [2usize, 8, 32, 256] {
+            let plan = DctPlan::new(n);
+            let mut scratch = plan.scratch();
+            let x = wave(n, 3);
+            let r = wave(n, 4);
+            let mut fx = vec![0.0; n];
+            plan.dct2_into(&x, &mut scratch, &mut fx);
+            let mut ftr = vec![0.0; n];
+            plan.dct3_into(&r, &mut scratch, &mut ftr);
+            let lhs: f64 = fx.iter().zip(&r).map(|(&a, &b)| a * b).sum();
+            let rhs: f64 = x.iter().zip(&ftr).map(|(&a, &b)| a * b).sum();
+            assert!(
+                (lhs - rhs).abs() <= 1e-10 * (1.0 + lhs.abs()),
+                "n={n}: ⟨Fx,r⟩={lhs} vs ⟨x,Fᵀr⟩={rhs}"
+            );
+        }
+    }
+
+    #[test]
+    fn dct2_of_delta_is_a_cosine_row() {
+        // x = e_j ⇒ X_k = cos(πk(2j+1)/(2n)) — the j-th column of the
+        // DCT-II matrix, which is how the operator's column gather and the
+        // transform must agree.
+        let n = 16;
+        let plan = DctPlan::new(n);
+        let mut scratch = plan.scratch();
+        for j in [0usize, 1, 7, 15] {
+            let mut x = vec![0.0; n];
+            x[j] = 1.0;
+            let mut out = vec![0.0; n];
+            plan.dct2_into(&x, &mut scratch, &mut out);
+            for k in 0..n {
+                let want =
+                    (std::f64::consts::PI * k as f64 * (j as f64 + 0.5) / n as f64).cos();
+                assert!((out[k] - want).abs() < 1e-12, "j={j} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn orthogonality_roundtrip() {
+        // DCT-III ∘ DCT-II = diag(n, n/2, ..., n/2) in the unnormalized
+        // convention: x^T round-trips up to those known factors.
+        let n = 64;
+        let plan = DctPlan::new(n);
+        let mut scratch = plan.scratch();
+        let x = wave(n, 5);
+        let mut fx = vec![0.0; n];
+        plan.dct2_into(&x, &mut scratch, &mut fx);
+        // Scale coefficient k by its inverse weight, transform back.
+        let mut scaled = fx.clone();
+        scaled[0] /= n as f64;
+        for v in scaled.iter_mut().skip(1) {
+            *v /= n as f64 / 2.0;
+        }
+        let mut back = vec![0.0; n];
+        plan.dct3_into(&scaled, &mut scratch, &mut back);
+        for j in 0..n {
+            assert!((back[j] - x[j]).abs() < 1e-10, "j={j}: {} vs {}", back[j], x[j]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn non_power_of_two_rejected() {
+        let _ = DctPlan::new(12);
+    }
+
+    #[test]
+    fn scratch_resizes_on_demand() {
+        let plan = DctPlan::new(8);
+        let mut scratch = DctScratch::default(); // empty — must self-size
+        let x = wave(8, 6);
+        let mut out = vec![0.0; 8];
+        plan.dct2_into(&x, &mut scratch, &mut out);
+        let want = direct_dct2(&x);
+        for k in 0..8 {
+            assert!((out[k] - want[k]).abs() < 1e-10);
+        }
+    }
+}

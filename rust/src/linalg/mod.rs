@@ -1,9 +1,6 @@
-//! Dense linear-algebra substrate.
-//!
-//! The paper's cost function is *dense* in `x` (Gaussian `A`), so unlike the
-//! HOGWILD!-style literature there is no sparse-matrix machinery here — the
-//! substrate is a small, cache-conscious dense BLAS subset plus the two
-//! least-squares solvers the greedy baselines need:
+//! Linear-algebra substrate: a cache-conscious dense BLAS subset, the two
+//! least-squares solvers the greedy baselines need, and the matrix-free
+//! measurement-operator layer the solve stack is written against.
 //!
 //! * [`dense::Mat`] / [`dense::RowBlock`] — row-major storage with zero-copy
 //!   measurement-block views and the fused [`dense::RowBlock::proxy_step_into`]
@@ -11,17 +8,27 @@
 //! * [`sparse::SparseIterate`] — iterate values plus an incrementally
 //!   maintained sorted support, feeding the sparse fast path
 //!   [`dense::RowBlock::proxy_step_sparse_into`] that honors `s ≪ n`.
+//! * [`measure::MeasureOp`] — operator access to the ensemble (`A_b x`,
+//!   `A_bᵀ r`, fused proxy, sparse gathers, column panels): [`DenseOp`]
+//!   wraps a materialized matrix bit-identically, [`SubsampledDctOp`]
+//!   evaluates DCT-II rows on the fly via [`fft::DctPlan`] and stores only
+//!   `m` row indices — the `n = 10^6` path.
+//! * [`fft::DctPlan`] — in-crate O(n log n) radix-2 FFT + DCT-II/III pair.
 //! * [`qr::Qr`] — Householder least squares for OMP/CoSaMP/StoGradMP.
 //! * [`cgls::cgls`] — iterative least squares (cross-check + large supports).
 
 pub mod cgls;
 pub mod dense;
+pub mod fft;
+pub mod measure;
 pub mod qr;
 pub mod scalar;
 pub mod sparse;
 
 pub use cgls::{cgls, CglsResult};
 pub use dense::{axpy, dist2, dot, nrm2, scale, sub, Mat, RowBlock};
+pub use fft::{DctPlan, DctScratch};
+pub use measure::{DenseOp, MeasureOp, OpScratch, Operator, SubsampledDctOp};
 pub use qr::{lstsq, Qr};
 pub use scalar::Scalar;
 pub use sparse::SparseIterate;

@@ -15,6 +15,7 @@
 //! astir run --alg stoiht --backend pjrt
 //! astir async --cores 8              # real-thread asynchronous StoIHT
 //! astir async --alg stogradmp        # ... or any other SupportKernel
+//! astir run --alg stoiht --ensemble partial_dct --no-dense-a --n 1048576 --m 327680 --b 16
 //! astir fig2 --alg stogradmp --schedule half-slow --period 6
 //! astir info                         # artifact + config introspection
 //! ```
@@ -145,6 +146,14 @@ fn run(args: Vec<String>) -> Result<(), String> {
         }
         "baselines" => {
             flags.finish()?;
+            if !cfg.problem.dense_a {
+                // The A5 sweep runs the classical full-gradient solvers,
+                // which consume the materialized matrix; fail up front
+                // instead of panicking mid-sweep.
+                return Err(
+                    "baselines needs dense matrices (IHT/OMP/CoSaMP); drop --no-dense-a".into()
+                );
+            }
             let ms = baseline_ms(&cfg);
             println!("A5 — phase transition over m = {ms:?}");
             let t = experiments::phase_transition(&cfg, &ms);
@@ -428,6 +437,28 @@ fn load_config(flags: &mut Flags) -> Result<ExperimentConfig, String> {
     if let Some(v) = flags.take("max-iters")? {
         cfg.max_iters = v.parse().map_err(|e| format!("--max-iters: {e}"))?;
     }
+    // Problem-shape overrides — the large-n quickstart path (see README,
+    // "Matrix-free operators") sizes problems straight from the CLI.
+    if let Some(v) = flags.take("n")? {
+        cfg.problem.n = v.parse().map_err(|e| format!("--n: {e}"))?;
+    }
+    if let Some(v) = flags.take("m")? {
+        cfg.problem.m = v.parse().map_err(|e| format!("--m: {e}"))?;
+    }
+    if let Some(v) = flags.take("b")? {
+        cfg.problem.b = v.parse().map_err(|e| format!("--b: {e}"))?;
+    }
+    if let Some(v) = flags.take("s")? {
+        cfg.problem.s = v.parse().map_err(|e| format!("--s: {e}"))?;
+    }
+    if let Some(v) = flags.take("ensemble")? {
+        let known = "gaussian|gaussian_unnormalized|bernoulli|partial_dct";
+        cfg.problem.ensemble = astir::problem::Ensemble::parse(&v)
+            .ok_or_else(|| format!("unknown --ensemble `{v}` ({known})"))?;
+    }
+    if flags.take_bool("no-dense-a") {
+        cfg.problem.dense_a = false;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -457,6 +488,19 @@ fn baseline_ms(cfg: &ExperimentConfig) -> Vec<usize> {
 }
 
 fn run_single(cfg: &ExperimentConfig, alg: &str, backend_name: &str) -> Result<(), String> {
+    if !cfg.problem.dense_a {
+        // Fail with guidance instead of a deep panic: only the operator-
+        // driven kernels run matrix-free.
+        if !matches!(alg, "stoiht" | "stogradmp") {
+            return Err(format!(
+                "alg `{alg}` needs the materialized matrix; with --no-dense-a use \
+                 --alg stoiht or --alg stogradmp"
+            ));
+        }
+        if backend_name != "native" {
+            return Err("--no-dense-a requires --backend native (PJRT consumes the matrix)".into());
+        }
+    }
     let mut rng = Rng::seed_from(cfg.seed);
     let problem = cfg.problem.generate(&mut rng);
     let opts = GreedyOpts {
@@ -569,9 +613,9 @@ fn print_info(cfg: &ExperimentConfig) {
     println!("astir {} — asynchronous sparse recovery (Needell & Woolf 2017)", astir::VERSION);
     println!("\n[config]");
     println!(
-        "problem: n={} m={} b={} s={} ensemble={:?} signal={:?} noise={}",
+        "problem: n={} m={} b={} s={} ensemble={:?} signal={:?} noise={} dense_a={}",
         cfg.problem.n, cfg.problem.m, cfg.problem.b, cfg.problem.s,
-        cfg.problem.ensemble, cfg.problem.signal, cfg.problem.noise_std
+        cfg.problem.ensemble, cfg.problem.signal, cfg.problem.noise_std, cfg.problem.dense_a
     );
     println!(
         "gamma={} tol={} max_iters={} trials={} seed={} cores={:?} trial_threads={}",
@@ -621,6 +665,14 @@ COMMON FLAGS
   --threads N          worker threads for trial batching
   --cores-list a,b,c   core counts to sweep
   --max-iters N        iteration / time-step cap
+  --n/--m/--b/--s N    override the problem shape
+  --ensemble NAME      gaussian | gaussian_unnormalized | bernoulli | partial_dct
+  --no-dense-a         matrix-free operator (partial_dct, power-of-two n):
+                       never materializes the m x n matrix — the large-n path.
+                       e.g.  astir run --alg stoiht --ensemble partial_dct \
+                             --no-dense-a --n 1048576 --m 327680 --b 16 --s 50
+                       (stogradmp runs matrix-free too, but its per-iteration
+                       m x 3s panel re-fit wants m in the 10^4-10^5 range)
 
 ASYNC / FIG2 FLAGS
   --alg stoiht|stogradmp  which SupportKernel the async layers drive

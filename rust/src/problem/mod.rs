@@ -5,12 +5,22 @@
 //! coefficient model, optional Gaussian noise, and the block partition
 //! `M = m / b` that StoIHT samples from.
 //!
+//! The measurement ensemble is held as a [`crate::linalg::Operator`] — by
+//! default a materialized matrix plus its transposed copy ([`DenseOp`]:
+//! the sparse proxy kernel and the asynchronous runtimes' exit check walk
+//! *columns* of `A`, which the transpose makes contiguous), and for the
+//! `partial_dct` ensemble optionally the **matrix-free**
+//! [`crate::linalg::SubsampledDctOp`] (`dense_a = false`), which stores
+//! only the `m` sampled row indices and evaluates every operator action
+//! through an O(n log n) fast transform. That is the `n = 10^6` path: at
+//! the `large_n` bench shape the dense pair would need terabytes.
+//!
 //! The paper does not state its matrix normalization; the default here is
 //! i.i.d. `N(0, 1/m)` entries (columns have unit expected norm), the
 //! standard choice under which `gamma = 1` StoIHT converges as in Fig. 1.
 //! Alternatives are exposed for ablations.
 
-use crate::linalg::{nrm2, Mat, RowBlock};
+use crate::linalg::{nrm2, DenseOp, Mat, MeasureOp, OpScratch, Operator, RowBlock, SubsampledDctOp};
 use crate::rng::Rng;
 
 /// Measurement-matrix ensembles.
@@ -24,7 +34,8 @@ pub enum Ensemble {
     Bernoulli,
     /// `m` distinct rows of the `n x n` DCT-II matrix, chosen uniformly,
     /// scaled by `√(n/m)` so columns have unit norm in expectation —
-    /// a deterministic-row structured ensemble (subsampled DCT).
+    /// a deterministic-row structured ensemble (subsampled DCT). The only
+    /// ensemble with a matrix-free operator form (`dense_a = false`).
     PartialDct,
 }
 
@@ -80,6 +91,12 @@ pub struct ProblemSpec {
     pub signal: SignalModel,
     /// Standard deviation of additive measurement noise `z`.
     pub noise_std: f64,
+    /// Materialize the `m x n` matrix (and its transpose)? `true` (default)
+    /// gives the bit-exact dense path; `false` — `partial_dct` with a
+    /// power-of-two `n` only — builds the matrix-free
+    /// [`crate::linalg::SubsampledDctOp`] instead, unlocking problem sizes
+    /// the dense representation cannot hold.
+    pub dense_a: bool,
 }
 
 impl ProblemSpec {
@@ -93,6 +110,7 @@ impl ProblemSpec {
             ensemble: Ensemble::Gaussian,
             signal: SignalModel::GaussianSpikes,
             noise_std: 0.0,
+            dense_a: true,
         }
     }
 
@@ -106,6 +124,21 @@ impl ProblemSpec {
             ensemble: Ensemble::Gaussian,
             signal: SignalModel::GaussianSpikes,
             noise_std: 0.0,
+            dense_a: true,
+        }
+    }
+
+    /// A small **matrix-free** configuration (subsampled DCT, power-of-two
+    /// `n`) — the canonical fixture the operator-path tests share.
+    pub fn tiny_matrix_free() -> Self {
+        ProblemSpec {
+            n: 256,
+            m: 128,
+            b: 8,
+            s: 4,
+            ensemble: Ensemble::PartialDct,
+            dense_a: false,
+            ..ProblemSpec::tiny()
         }
     }
 
@@ -131,22 +164,49 @@ impl ProblemSpec {
         if self.noise_std < 0.0 {
             return Err("noise_std must be nonnegative".into());
         }
+        if !self.dense_a {
+            if self.ensemble != Ensemble::PartialDct {
+                return Err(
+                    "dense_a = false (matrix-free) is only available for the partial_dct ensemble"
+                        .into(),
+                );
+            }
+            if !self.n.is_power_of_two() {
+                return Err(format!(
+                    "dense_a = false requires a power-of-two n (radix-2 fast transform), got n={}",
+                    self.n
+                ));
+            }
+        }
         Ok(())
     }
 
     /// Draw a problem instance.
     pub fn generate(&self, rng: &mut Rng) -> Problem {
         self.validate().expect("invalid ProblemSpec");
-        let a = self.gen_matrix(rng);
+        let op = self.gen_operator(rng);
         let (x_true, supp) = self.gen_signal(rng);
-        let mut y = a.gemv(&x_true);
+        let mut y = op.apply(&x_true);
         if self.noise_std > 0.0 {
             for v in y.iter_mut() {
                 *v += self.noise_std * rng.gauss();
             }
         }
-        let a_t = transpose(&a);
-        Problem { spec: self.clone(), a, a_t, x_true, support: supp, y }
+        Problem { spec: self.clone(), op, x_true, support: supp, y }
+    }
+
+    /// Draw the measurement operator, consuming the identical RNG stream in
+    /// dense and matrix-free form: the `partial_dct` row draw is one
+    /// `subset(n, m)` call either way, so the same seed yields the same
+    /// ensemble (and the same downstream signal/noise draws) under both
+    /// representations.
+    fn gen_operator(&self, rng: &mut Rng) -> Operator {
+        if !self.dense_a {
+            debug_assert_eq!(self.ensemble, Ensemble::PartialDct);
+            let rows = rng.subset(self.n, self.m);
+            return Operator::SubsampledDct(SubsampledDctOp::new(self.n, rows));
+        }
+        Operator::Dense(DenseOp::new(self.gen_matrix(rng)))
     }
 
     fn gen_matrix(&self, rng: &mut Rng) -> Mat<f64> {
@@ -190,23 +250,15 @@ impl ProblemSpec {
     }
 }
 
-/// Transposed copy of a matrix (row-major `n x m` = column-major `m x n`).
-fn transpose(a: &Mat<f64>) -> Mat<f64> {
-    Mat::from_fn(a.cols(), a.rows(), |i, j| a.get(j, i))
-}
-
 /// A concrete compressed-sensing instance.
 #[derive(Clone, Debug)]
 pub struct Problem {
     pub spec: ProblemSpec,
-    /// Measurement matrix, row-major `m x n`.
-    pub a: Mat<f64>,
-    /// Transposed copy (`n x m`, i.e. column-major view of `A`): the sparse
-    /// proxy kernel and the asynchronous runtimes' sparse exit check walk
-    /// *columns* of `A` (one per support index), which in row-major storage
-    /// touches one cache line per row; the transpose makes each column a
-    /// contiguous `m`-length stream (see README.md, "sparse fast path").
-    pub a_t: Mat<f64>,
+    /// The measurement operator: materialized matrix + transpose (dense) or
+    /// matrix-free subsampled DCT. All solver arithmetic routes through
+    /// this; dense-only consumers reach the matrices via [`Problem::a`] /
+    /// [`Problem::a_t`].
+    pub op: Operator,
     /// Planted `s`-sparse signal.
     pub x_true: Vec<f64>,
     /// Sorted support of `x_true`.
@@ -217,62 +269,102 @@ pub struct Problem {
 
 impl Problem {
     /// Assemble an instance from raw parts (test vectors, custom data).
-    /// Derives the support and the transposed copy.
+    /// Derives the support and the transposed copy (dense operator).
     pub fn from_parts(spec: ProblemSpec, a: Mat<f64>, x_true: Vec<f64>, y: Vec<f64>) -> Problem {
         let support = crate::support::support_of(&x_true);
-        let a_t = transpose(&a);
-        Problem { spec, a, a_t, x_true, support, y }
+        let op = Operator::Dense(DenseOp::new(a));
+        Problem { spec, op, x_true, support, y }
     }
 
-    /// Measurement block `A_{b_i}` as a zero-copy view, with its `y` slice.
+    /// The dense operator, for code paths that genuinely need materialized
+    /// matrices (PJRT artifact protocol, classical full-gradient baselines).
+    /// Panics on a matrix-free problem with a pointed message.
+    fn dense_op(&self) -> &DenseOp {
+        self.op.dense().expect(
+            "this code path needs the materialized matrix, but the problem was generated \
+             matrix-free (dense_a = false); regenerate with dense_a = true",
+        )
+    }
+
+    /// Measurement matrix, row-major `m x n` (dense problems only).
+    pub fn a(&self) -> &Mat<f64> {
+        self.dense_op().a()
+    }
+
+    /// Transposed copy `n x m` (dense problems only; row `j` holds column
+    /// `j` of `A` contiguously — see README.md, "sparse fast path").
+    pub fn a_t(&self) -> &Mat<f64> {
+        self.dense_op().a_t()
+    }
+
+    /// Measurement block `A_{b_i}` as a zero-copy view, with its `y` slice
+    /// (dense problems only — matrix-free callers use the operator's block
+    /// methods plus [`Problem::y_block`]).
     pub fn block(&self, i: usize) -> (RowBlock<'_, f64>, &[f64]) {
         let b = self.spec.b;
         assert!(i < self.spec.num_blocks(), "block index {i} out of range");
-        (self.a.row_block(i * b, (i + 1) * b), &self.y[i * b..(i + 1) * b])
+        (self.a().row_block(i * b, (i + 1) * b), &self.y[i * b..(i + 1) * b])
     }
 
-    /// `||y - A x||_2` — the paper's halting statistic.
+    /// The `y` slice of measurement block `i` (any operator).
+    pub fn y_block(&self, i: usize) -> &[f64] {
+        let b = self.spec.b;
+        assert!(i < self.spec.num_blocks(), "block index {i} out of range");
+        &self.y[i * b..(i + 1) * b]
+    }
+
+    /// `||y - A x||_2` — the paper's halting statistic (allocating
+    /// convenience form of [`Problem::residual_norm_with`]).
     pub fn residual_norm(&self, x: &[f64]) -> f64 {
-        let ax = self.a.gemv(x);
+        let mut ax = Vec::new();
+        let mut scratch = self.op.make_scratch();
+        self.residual_norm_with(x, &mut ax, &mut scratch)
+    }
+
+    /// `||y - A x||_2` in caller-owned scratch: `ax_scratch` holds `A x`
+    /// (resized to `m`) and `op_scratch` the operator workspace — the
+    /// sequential solvers check this once per `check_every` iterations, so
+    /// the matrix-free transform must not pay a fresh allocation each time.
+    pub fn residual_norm_with(
+        &self,
+        x: &[f64],
+        ax_scratch: &mut Vec<f64>,
+        op_scratch: &mut OpScratch,
+    ) -> f64 {
+        ax_scratch.clear();
+        ax_scratch.resize(self.spec.m, 0.0);
+        self.op.apply_into(x, op_scratch, ax_scratch);
         let mut s = 0.0;
         for i in 0..self.spec.m {
-            let d = self.y[i] - ax[i];
+            let d = self.y[i] - ax_scratch[i];
             s += d * d;
         }
         s.sqrt()
     }
 
-    /// `||y - A x||_2` exploiting a known (sorted) support of `x`:
-    /// `A x` touches only the supported columns, so the check costs
-    /// `O(m |supp|)` instead of `O(m n)` — the asynchronous runtimes call
-    /// this once per core per time step. Uses the transposed copy so each
-    /// supported column is one contiguous stream (see [`Problem::a_t`]).
-    /// The residual is accumulated in `r_scratch` (resized as needed), so
-    /// the per-check `y.clone()` allocation of the naive form disappears
-    /// from the hot loop.
+    /// `||y - A x||_2` exploiting a known (sorted) support of `x`: on the
+    /// dense operator `A x` touches only the supported columns
+    /// (`O(m |supp|)` via the transposed copy, accumulated in `r_scratch`
+    /// so no per-check allocation survives in the hot loop); the
+    /// matrix-free operator runs one O(n log n) transform in `op_scratch`.
+    /// The asynchronous runtimes call this once per core per time step
+    /// through each kernel's scratch.
     pub fn residual_norm_sparse_with(
         &self,
         x: &[f64],
         support: &[usize],
         r_scratch: &mut Vec<f64>,
+        op_scratch: &mut OpScratch,
     ) -> f64 {
-        debug_assert!(support.windows(2).all(|w| w[0] < w[1]));
-        let m = self.spec.m;
-        r_scratch.clear();
-        r_scratch.extend_from_slice(&self.y);
-        for &j in support {
-            let xj = x[j];
-            if xj != 0.0 {
-                crate::linalg::axpy(-xj, &self.a_t.row(j)[..m], r_scratch);
-            }
-        }
-        crate::linalg::nrm2(r_scratch)
+        self.op.residual_norm_sparse(&self.y, x, support, r_scratch, op_scratch)
     }
 
-    /// Allocating convenience wrapper over [`Problem::residual_norm_sparse_with`].
+    /// Allocating convenience wrapper over
+    /// [`Problem::residual_norm_sparse_with`].
     pub fn residual_norm_sparse(&self, x: &[f64], support: &[usize]) -> f64 {
         let mut r = Vec::new();
-        self.residual_norm_sparse_with(x, support, &mut r)
+        let mut scratch = self.op.make_scratch();
+        self.residual_norm_sparse_with(x, support, &mut r, &mut scratch)
     }
 
     /// Recovery error `||x - x_true||_2` (Fig. 1's y-axis).
@@ -326,6 +418,23 @@ mod tests {
     }
 
     #[test]
+    fn matrix_free_validation() {
+        // Matrix-free is partial_dct + power-of-two n only.
+        let ok = ProblemSpec { dense_a: false, ..spec(Ensemble::PartialDct) };
+        ok.validate().unwrap();
+        let wrong_ensemble = ProblemSpec { dense_a: false, ..ProblemSpec::tiny() };
+        assert!(wrong_ensemble.validate().unwrap_err().contains("partial_dct"));
+        let bad_n = ProblemSpec {
+            n: 24,
+            m: 16,
+            ensemble: Ensemble::PartialDct,
+            dense_a: false,
+            ..ProblemSpec::tiny()
+        };
+        assert!(bad_n.validate().unwrap_err().contains("power-of-two"));
+    }
+
+    #[test]
     fn generated_signal_is_exactly_s_sparse() {
         let mut rng = Rng::seed_from(1);
         let models =
@@ -367,7 +476,7 @@ mod tests {
         let p = sp.generate(&mut rng);
         let mut mean = 0.0;
         for j in 0..sp.n {
-            let c = p.a.col_copy(j);
+            let c = p.a().col_copy(j);
             mean += dot(&c, &c);
         }
         mean /= sp.n as f64;
@@ -379,7 +488,7 @@ mod tests {
         let mut rng = Rng::seed_from(5);
         let p = spec(Ensemble::Bernoulli).generate(&mut rng);
         let v = 1.0 / (p.spec.m as f64).sqrt();
-        assert!(p.a.data().iter().all(|&x| (x.abs() - v).abs() < 1e-15));
+        assert!(p.a().data().iter().all(|&x| (x.abs() - v).abs() < 1e-15));
     }
 
     #[test]
@@ -390,12 +499,52 @@ mod tests {
         let sc2 = sp.n as f64 / sp.m as f64;
         // Rows of the scaled matrix: ||row||^2 = n/m; distinct rows orthogonal.
         for i in 0..sp.m {
-            let ri = p.a.row(i);
+            let ri = p.a().row(i);
             assert!((dot(ri, ri) - sc2).abs() < 1e-10, "row norm");
             for j in (i + 1)..sp.m {
-                assert!(dot(ri, p.a.row(j)).abs() < 1e-10, "orthogonality");
+                assert!(dot(ri, p.a().row(j)).abs() < 1e-10, "orthogonality");
             }
         }
+    }
+
+    #[test]
+    fn matrix_free_draw_matches_dense_draw_bitwise() {
+        // Same seed, same spec modulo dense_a: identical row indices,
+        // entrywise bit-identical operator, identical planted signal, and
+        // measurements equal to transform accuracy.
+        let dense_spec = ProblemSpec { ensemble: Ensemble::PartialDct, ..ProblemSpec::tiny() };
+        let free_spec = ProblemSpec { dense_a: false, ..dense_spec.clone() };
+        let pd = dense_spec.generate(&mut Rng::seed_from(42));
+        let pf = free_spec.generate(&mut Rng::seed_from(42));
+        assert_eq!(pd.x_true, pf.x_true);
+        assert_eq!(pd.support, pf.support);
+        let Operator::SubsampledDct(op) = &pf.op else { panic!("expected matrix-free operator") };
+        for i in 0..pd.spec.m {
+            for j in 0..pd.spec.n {
+                assert_eq!(
+                    pd.a().get(i, j).to_bits(),
+                    op.entry(i, j).to_bits(),
+                    "entry ({i}, {j})"
+                );
+            }
+        }
+        for i in 0..pd.spec.m {
+            assert!((pd.y[i] - pf.y[i]).abs() <= 1e-12 * (1.0 + pd.y[i].abs()), "y[{i}]");
+        }
+        // Matrix-free instances satisfy their own measurements.
+        assert!(pf.residual_norm(&pf.x_true) < 1e-10);
+    }
+
+    #[test]
+    #[should_panic(expected = "matrix-free")]
+    fn dense_accessor_panics_on_matrix_free_problem() {
+        let sp = ProblemSpec {
+            ensemble: Ensemble::PartialDct,
+            dense_a: false,
+            ..ProblemSpec::tiny()
+        };
+        let p = sp.generate(&mut Rng::seed_from(7));
+        let _ = p.a();
     }
 
     #[test]
@@ -403,11 +552,12 @@ mod tests {
         let mut rng = Rng::seed_from(7);
         let p = ProblemSpec::tiny().generate(&mut rng);
         let x: Vec<f64> = (0..p.spec.n).map(|i| (i as f64 * 0.1).sin()).collect();
-        let full = p.a.gemv(&x);
+        let full = p.a().gemv(&x);
         for i in 0..p.spec.num_blocks() {
             let (blk, yb) = p.block(i);
             assert_eq!(blk.gemv(&x), &full[i * p.spec.b..(i + 1) * p.spec.b]);
             assert_eq!(yb, &p.y[i * p.spec.b..(i + 1) * p.spec.b]);
+            assert_eq!(yb, p.y_block(i));
         }
     }
 
@@ -417,7 +567,7 @@ mod tests {
         let p = ProblemSpec::tiny().generate(&mut rng);
         for i in 0..p.spec.m {
             for j in 0..p.spec.n {
-                assert_eq!(p.a.get(i, j), p.a_t.get(j, i));
+                assert_eq!(p.a().get(i, j), p.a_t().get(j, i));
             }
         }
     }
@@ -443,7 +593,7 @@ mod tests {
     fn deterministic_generation() {
         let p1 = ProblemSpec::paper().generate(&mut Rng::seed_from(42));
         let p2 = ProblemSpec::paper().generate(&mut Rng::seed_from(42));
-        assert_eq!(p1.a.data(), p2.a.data());
+        assert_eq!(p1.a().data(), p2.a().data());
         assert_eq!(p1.x_true, p2.x_true);
         assert_eq!(p1.y, p2.y);
     }

@@ -49,7 +49,7 @@
 //! pre-trait hardwired loop (pinned by `rust/tests/kernel_parity.rs`).
 
 use crate::algorithms::{StoihtKernel, SupportKernel};
-use crate::linalg::SparseIterate;
+use crate::linalg::{MeasureOp, SparseIterate};
 use crate::problem::Problem;
 use crate::rng::Rng;
 use crate::support::{support_of, union};
@@ -209,6 +209,11 @@ pub fn simulate_with<'p, K: SupportKernel>(
     let mut commit_order_rng = rng.split(0x5EED);
     let mut fault_rng = rng.split(0xFA17);
 
+    // Exit-check scratch, shared across steps (the matrix-free operator's
+    // workspace is ~4n floats — not a per-commit allocation).
+    let mut exit_r_scratch: Vec<f64> = Vec::new();
+    let mut exit_op_scratch = problem.op.make_scratch();
+
     let mut error_trace = Vec::new();
 
     for step in 1..=opts.max_steps {
@@ -282,7 +287,12 @@ pub fn simulate_with<'p, K: SupportKernel>(
                     prev_gamma[c] = p.gamma;
                     t_local[c] += 1;
                     if exited.is_none() {
-                        let r = problem.residual_norm_sparse(xs[c].values(), &p.support);
+                        let r = problem.residual_norm_sparse_with(
+                            xs[c].values(),
+                            &p.support,
+                            &mut exit_r_scratch,
+                            &mut exit_op_scratch,
+                        );
                         if r < opts.tolerance {
                             exited = Some((c, problem.recovery_error(xs[c].values())));
                         }
@@ -305,7 +315,12 @@ pub fn simulate_with<'p, K: SupportKernel>(
         if opts.mode == SharingMode::SharedX && !committers.is_empty() && exited.is_none() {
             // Exit is judged on the shared iterate after all writes land.
             let supp = support_of(&shared_x);
-            let r = problem.residual_norm_sparse(&shared_x, &supp);
+            let r = problem.residual_norm_sparse_with(
+                &shared_x,
+                &supp,
+                &mut exit_r_scratch,
+                &mut exit_op_scratch,
+            );
             if r < opts.tolerance {
                 exited = Some((usize::MAX, problem.recovery_error(&shared_x)));
             }
@@ -557,6 +572,33 @@ mod tests {
             StoGradMpKernel::new,
         );
         assert!(out.converged);
+    }
+
+    #[test]
+    fn matrix_free_problems_drive_the_simulator() {
+        // The simulator is representation-agnostic: kernels route through
+        // the problem's MeasureOp, so a matrix-free subsampled-DCT problem
+        // runs every mode without an m x n matrix existing anywhere.
+        use crate::algorithms::StoGradMpKernel;
+        let p = ProblemSpec::tiny_matrix_free().generate(&mut Rng::seed_from(31));
+        let out = simulate(
+            &p,
+            4,
+            &SpeedSchedule::AllFast,
+            &SimOpts::default(),
+            &mut Rng::seed_from(32),
+        );
+        assert!(out.converged, "steps {}", out.steps);
+        assert!(out.final_error < 1e-5);
+        let out = simulate_with(
+            &p,
+            2,
+            &SpeedSchedule::AllFast,
+            &SimOpts { max_steps: 200, ..Default::default() },
+            &mut Rng::seed_from(33),
+            StoGradMpKernel::new,
+        );
+        assert!(out.converged, "stogradmp steps {}", out.steps);
     }
 
     #[test]

@@ -107,3 +107,49 @@ fn slow_schedule_real_threads() {
     assert!(out.converged);
     assert!(p.residual_norm(&out.x) < 1e-6);
 }
+
+#[test]
+fn noisy_recovery_support_rate_is_pinned() {
+    // Regression pin for the `noise_std` knob, which no test exercised
+    // end-to-end: with ±1 spikes well above a 0.02 noise floor, both
+    // algorithms must keep identifying the planted support. The exit
+    // tolerance sits just above the expected noise energy
+    // ‖z‖ ≈ 0.02·√m ≈ 0.23, so runs terminate at the noise floor instead
+    // of the (unreachable) noiseless 1e-7.
+    use astir::algorithms::stogradmp;
+    use astir::problem::SignalModel;
+    use astir::support::intersection_size;
+    let spec = ProblemSpec {
+        n: 256,
+        m: 128,
+        b: 8,
+        s: 8,
+        signal: SignalModel::FlatSpikes,
+        noise_std: 0.02,
+        ..ProblemSpec::tiny()
+    };
+    let trials = 12usize;
+    let mut rate = [0.0f64; 2]; // [stoiht, stogradmp]
+    for t in 0..trials {
+        let p = spec.generate(&mut Rng::seed_from(700 + t as u64));
+        let noise_floor_opts = GreedyOpts { tolerance: 0.3, ..Default::default() };
+        let r1 = stoiht(&p, &noise_floor_opts, &mut Rng::seed_from(800 + t as u64));
+        let opts2 = GreedyOpts { tolerance: 0.3, max_iters: 100, ..Default::default() };
+        let r2 = stogradmp(&p, &opts2, &mut Rng::seed_from(900 + t as u64));
+        for (k, r) in [r1, r2].into_iter().enumerate() {
+            let supp = astir::support::support_of(&r.x);
+            rate[k] += intersection_size(&supp, &p.support) as f64 / p.spec.s as f64;
+            // Noise keeps the residual off zero: the halting statistic
+            // can't do better than ‖z‖.
+            assert!(p.residual_norm(&r.x) > 0.05, "trial {t} alg {k} implausibly clean");
+            // ... but the estimate still tracks the signal (the ±1 spikes
+            // dominate the ≈0.3-residual stopping point comfortably).
+            let rel = p.relative_error(&r.x);
+            assert!(rel < 0.2, "trial {t} alg {k}: relative error {rel}");
+        }
+    }
+    for (k, name) in ["stoiht", "stogradmp"].iter().enumerate() {
+        let mean = rate[k] / trials as f64;
+        assert!(mean >= 0.95, "{name}: mean support-recovery rate {mean} under noise");
+    }
+}

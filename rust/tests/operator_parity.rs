@@ -1,0 +1,238 @@
+//! Operator-representation parity — the contracts of the `MeasureOp`
+//! refactor:
+//!
+//! 1. **DenseOp is bit-exact vs the pre-refactor arithmetic.** An in-test
+//!    verbatim copy of the old raw-`Mat` StoIHT step (fused proxy on a
+//!    `RowBlock`, top-s, estimate-onto-union) must reproduce the
+//!    operator-driven kernel bit for bit, and the sparse halting statistic
+//!    must equal the old transposed-copy axpy loop bit for bit.
+//! 2. **SubsampledDctOp matches the dense `partial_dct` ensemble.** The
+//!    same seed draws the same ensemble under both representations
+//!    (entrywise bit-identical); full StoIHT and StoGradMP trajectories
+//!    through the matrix-free operator track the dense ones to ≤ 1e-12 per
+//!    iterate — sequentially, through the discrete-time simulator, and
+//!    through a single-worker `run_async` replay.
+
+use astir::algorithms::{StoGradMpKernel, StoihtKernel, SupportKernel};
+use astir::async_runtime::{run_async, run_async_with, AsyncOpts};
+use astir::linalg::SparseIterate;
+use astir::problem::{Ensemble, Problem, ProblemSpec};
+use astir::rng::Rng;
+use astir::sim::{simulate, simulate_with, SimOpts, SpeedSchedule};
+use astir::support::top_s;
+
+fn dct_spec() -> ProblemSpec {
+    ProblemSpec {
+        n: 64,
+        m: 32,
+        b: 8,
+        s: 4,
+        ensemble: Ensemble::PartialDct,
+        ..ProblemSpec::tiny()
+    }
+}
+
+/// The dense and matrix-free draws of one `partial_dct` ensemble.
+fn twin_problems(seed: u64) -> (Problem, Problem) {
+    let dense = dct_spec().generate(&mut Rng::seed_from(seed));
+    let free =
+        ProblemSpec { dense_a: false, ..dct_spec() }.generate(&mut Rng::seed_from(seed));
+    (dense, free)
+}
+
+// ------------------------------------------------------- 1. dense bitwise
+
+/// Verbatim pre-refactor StoIHT dense step: raw `RowBlock` fused proxy,
+/// `top_s`, estimate onto `Γ ∪ extra` — including the exact `alpha`
+/// expression `gamma / (M · p)` with uniform `p = 1/M`.
+fn reference_stoiht_step(
+    p: &Problem,
+    x: &mut [f64],
+    block: usize,
+    gamma: f64,
+    extra: Option<&[usize]>,
+) -> Vec<usize> {
+    let spec = &p.spec;
+    let mb = spec.num_blocks() as f64;
+    let alpha = gamma / (mb * (1.0 / mb));
+    let (blk, yb) = p.block(block);
+    let mut resid = vec![0.0; spec.b];
+    let mut proxy = vec![0.0; spec.n];
+    blk.proxy_step_into(yb, x, alpha, &mut resid, &mut proxy);
+    let gamma_set = top_s(&proxy, spec.s);
+    x.fill(0.0);
+    for &i in &gamma_set {
+        x[i] = proxy[i];
+    }
+    if let Some(extra) = extra {
+        for &i in extra {
+            x[i] = proxy[i];
+        }
+    }
+    gamma_set
+}
+
+#[test]
+fn dense_op_stoiht_step_is_bit_exact_vs_raw_mat_arithmetic() {
+    for ensemble in [Ensemble::Gaussian, Ensemble::Bernoulli, Ensemble::PartialDct] {
+        let spec = ProblemSpec { ensemble, ..dct_spec() };
+        let p = spec.generate(&mut Rng::seed_from(3));
+        let mut rng = Rng::seed_from(4);
+        let mut oracle = rng.subset(p.spec.n, p.spec.s);
+        oracle.sort_unstable();
+        let mut kernel = StoihtKernel::new(&p, 1.0);
+        let mut xk = vec![0.0f64; p.spec.n];
+        let mut xr = vec![0.0f64; p.spec.n];
+        for it in 0..40 {
+            let block = rng.below(p.spec.num_blocks());
+            let extra = if it % 2 == 1 { Some(oracle.as_slice()) } else { None };
+            let gk = kernel.step(&mut xk, block, extra).to_vec();
+            let gr = reference_stoiht_step(&p, &mut xr, block, 1.0, extra);
+            assert_eq!(gk, gr, "{ensemble:?} iter {it}: gamma sets differ");
+            for i in 0..p.spec.n {
+                assert_eq!(
+                    xk[i].to_bits(),
+                    xr[i].to_bits(),
+                    "{ensemble:?} iter {it} coord {i}: {} vs {}",
+                    xk[i],
+                    xr[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dense_op_sparse_residual_is_bit_exact_vs_transposed_axpy_loop() {
+    let p = dct_spec().generate(&mut Rng::seed_from(5));
+    let mut rng = Rng::seed_from(6);
+    let mut supp = rng.subset(p.spec.n, 7);
+    supp.sort_unstable();
+    let mut x = vec![0.0; p.spec.n];
+    for &j in &supp {
+        x[j] = rng.gauss();
+    }
+    // Pre-refactor loop: r = y; axpy(-x_j, a_t.row(j), r); ||r|| — using
+    // the crate's own axpy so the operation order is identical.
+    let m = p.spec.m;
+    let mut r = p.y.clone();
+    for &j in &supp {
+        let xj = x[j];
+        if xj != 0.0 {
+            astir::linalg::axpy(-xj, &p.a_t().row(j)[..m], &mut r);
+        }
+    }
+    let want = astir::linalg::nrm2(&r);
+    let got = p.residual_norm_sparse(&x, &supp);
+    assert_eq!(got.to_bits(), want.to_bits());
+}
+
+// ------------------------------------------- 2. matrix-free vs dense DCT
+
+#[test]
+fn twin_draws_are_entrywise_bit_identical() {
+    let (pd, pf) = twin_problems(11);
+    assert_eq!(pd.x_true, pf.x_true);
+    assert_eq!(pd.support, pf.support);
+    let astir::linalg::Operator::SubsampledDct(op) = &pf.op else {
+        panic!("expected the matrix-free operator");
+    };
+    for i in 0..pd.spec.m {
+        for j in 0..pd.spec.n {
+            assert_eq!(pd.a().get(i, j).to_bits(), op.entry(i, j).to_bits(), "({i}, {j})");
+        }
+    }
+}
+
+/// `max_i |a_i − b_i|` with the ≤ 1e-12 per-iterate contract.
+fn assert_iterates_close(a: &[f64], b: &[f64], what: &str) {
+    for i in 0..a.len() {
+        let d = (a[i] - b[i]).abs();
+        assert!(d <= 1e-12, "{what} coord {i}: {} vs {} (|Δ| = {d:.3e})", a[i], b[i]);
+    }
+}
+
+#[test]
+fn stoiht_trajectories_match_across_representations() {
+    let (pd, pf) = twin_problems(21);
+    let mut kd = StoihtKernel::new(&pd, 1.0);
+    let mut kf = StoihtKernel::new(&pf, 1.0);
+    let mut xd = SparseIterate::zeros(pd.spec.n);
+    let mut xf = SparseIterate::zeros(pf.spec.n);
+    let mut rng = Rng::seed_from(22);
+    let oracle = pd.support.clone(); // == pf.support
+    let (mut gd, mut gf) = (Vec::new(), Vec::new());
+    for it in 0..30 {
+        let block = rng.below(pd.spec.num_blocks());
+        let est: &[usize] = if it % 3 == 1 { &oracle } else { &[] };
+        kd.tally_step(&mut xd, block, est, &mut gd);
+        kf.tally_step(&mut xf, block, est, &mut gf);
+        assert_eq!(gd, gf, "iter {it}: voted supports diverged");
+        assert_iterates_close(xd.values(), xf.values(), &format!("stoiht iter {it}"));
+    }
+    // The halting statistic agrees across representations too.
+    let (mut ra, mut rb) = (Vec::new(), Vec::new());
+    let rd = kd.residual(&xd, &mut ra);
+    let rf = kf.residual(&xf, &mut rb);
+    assert!((rd - rf).abs() <= 1e-12 * (1.0 + rd.abs()), "{rd} vs {rf}");
+}
+
+#[test]
+fn stogradmp_trajectories_match_across_representations() {
+    let (pd, pf) = twin_problems(31);
+    let mut kd = StoGradMpKernel::new(&pd);
+    let mut kf = StoGradMpKernel::new(&pf);
+    let mut xd = SparseIterate::zeros(pd.spec.n);
+    let mut xf = SparseIterate::zeros(pf.spec.n);
+    let mut rng = Rng::seed_from(32);
+    let (mut gd, mut gf) = (Vec::new(), Vec::new());
+    for it in 0..12 {
+        let block = rng.below(pd.spec.num_blocks());
+        let est: &[usize] = if it % 4 == 2 { &pd.support } else { &[] };
+        kd.tally_step(&mut xd, block, est, &mut gd);
+        kf.tally_step(&mut xf, block, est, &mut gf);
+        assert_eq!(gd, gf, "iter {it}: pruned supports diverged");
+        assert_iterates_close(xd.values(), xf.values(), &format!("stogradmp iter {it}"));
+    }
+}
+
+#[test]
+fn simulated_async_agrees_across_representations() {
+    let (pd, pf) = twin_problems(41);
+    let opts = SimOpts::default();
+    let sched = SpeedSchedule::AllFast;
+    let od = simulate(&pd, 4, &sched, &opts, &mut Rng::seed_from(42));
+    let of = simulate(&pf, 4, &sched, &opts, &mut Rng::seed_from(42));
+    assert!(od.converged && of.converged, "{} / {}", od.steps, of.steps);
+    assert_eq!(od.steps, of.steps, "exit step diverged");
+    assert_eq!(od.exit_core, of.exit_core);
+    assert_eq!(od.local_iters, of.local_iters);
+    assert!((od.final_error - of.final_error).abs() <= 1e-10, "final error diverged");
+    // StoGradMP through the generic simulator.
+    let og =
+        simulate_with(&pd, 2, &sched, &opts, &mut Rng::seed_from(43), StoGradMpKernel::new);
+    let oh =
+        simulate_with(&pf, 2, &sched, &opts, &mut Rng::seed_from(43), StoGradMpKernel::new);
+    assert!(og.converged && oh.converged);
+    assert_eq!(og.steps, oh.steps);
+    assert_eq!(og.exit_core, oh.exit_core);
+}
+
+#[test]
+fn single_worker_run_async_agrees_across_representations() {
+    let (pd, pf) = twin_problems(51);
+    let opts = AsyncOpts::default();
+    // One worker: the real-thread runtime is deterministic given the seed.
+    let od = run_async(&pd, 1, &opts, 99);
+    let of = run_async(&pf, 1, &opts, 99);
+    assert!(od.converged && of.converged);
+    assert_eq!(od.local_iters, of.local_iters, "local iteration counts diverged");
+    assert_eq!(od.exit_core, of.exit_core);
+    assert_iterates_close(&od.x, &of.x, "winner iterate");
+    // ... and for StoGradMP.
+    let og = run_async_with(&pd, 1, &opts, 100, StoGradMpKernel::new);
+    let oh = run_async_with(&pf, 1, &opts, 100, StoGradMpKernel::new);
+    assert!(og.converged && oh.converged);
+    assert_eq!(og.local_iters, oh.local_iters);
+    assert_iterates_close(&og.x, &oh.x, "stogradmp winner iterate");
+}

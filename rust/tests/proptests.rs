@@ -5,8 +5,8 @@
 
 use astir::algorithms::StoihtKernel;
 use astir::coordinator::run_trials;
-use astir::linalg::{dist2, dot, lstsq, nrm2, Mat};
-use astir::problem::{Problem, ProblemSpec};
+use astir::linalg::{dist2, dot, lstsq, nrm2, Mat, MeasureOp, Operator};
+use astir::problem::{Ensemble, Problem, ProblemSpec};
 use astir::sim::{simulate, SimOpts, SpeedSchedule};
 use astir::support::{accuracy, intersection_size, top_s, union, union_into};
 use astir::tally::{positive_top_s, LocalTally, TallyWeighting};
@@ -215,11 +215,73 @@ fn prop_accuracy_bounds() {
 }
 
 #[test]
+fn prop_measure_op_adjoint_consistency() {
+    // ⟨A_b x, r⟩ == ⟨x, A_bᵀ r⟩ within 1e-10, for every ensemble × both
+    // MeasureOp implementations, over random blocks and shapes. The
+    // matrix-free operator exists only for partial_dct (power-of-two n),
+    // so it is exercised on that ensemble; DenseOp covers all four.
+    property("measure-op adjoint identity", 40, |g| {
+        let n = 1usize << g.usize_in(4, 7); // 16, 32, 64, 128
+        let b = [2usize, 4, 8][g.usize_in(0, 2)];
+        let blocks = g.usize_in(1, (n / b).min(4));
+        let m = b * blocks;
+        let s = g.usize_in(1, 4);
+        let dense_ensembles = [
+            Ensemble::Gaussian,
+            Ensemble::GaussianUnnormalized,
+            Ensemble::Bernoulli,
+            Ensemble::PartialDct,
+        ];
+        let mut ops: Vec<(Operator, String)> = Vec::new();
+        for e in dense_ensembles {
+            let spec = ProblemSpec { n, m, b, s, ensemble: e, ..ProblemSpec::tiny() };
+            ops.push((spec.generate(g.rng()).op, format!("dense/{e:?}")));
+        }
+        let free = ProblemSpec {
+            n,
+            m,
+            b,
+            s,
+            ensemble: Ensemble::PartialDct,
+            dense_a: false,
+            ..ProblemSpec::tiny()
+        };
+        ops.push((free.generate(g.rng()).op, "subsampled_dct".to_string()));
+        for (op, label) in &ops {
+            let block = g.usize_in(0, blocks - 1);
+            let row0 = block * b;
+            let x = g.vec_gauss(n);
+            let r = g.vec_gauss(b);
+            let mut scratch = op.make_scratch();
+            let mut ax = vec![0.0; b];
+            op.block_apply_into(row0, &x, &mut scratch, &mut ax);
+            let mut atr = vec![0.0; n];
+            op.block_apply_t_acc(row0, &r, 0.0, &mut scratch, &mut atr);
+            let lhs = dot(&ax, &r);
+            let rhs = dot(&x, &atr);
+            ((lhs - rhs).abs() <= 1e-10 * (1.0 + lhs.abs() + rhs.abs()))
+                .or_fail(format!("{label} block {block}: {lhs} vs {rhs}"))?;
+            // Full-operator identity rides the same contract.
+            let rm = g.vec_gauss(m);
+            let mut axm = vec![0.0; m];
+            op.apply_into(&x, &mut scratch, &mut axm);
+            let mut atrm = vec![0.0; n];
+            op.apply_t_into(&rm, &mut scratch, &mut atrm);
+            let l2 = dot(&axm, &rm);
+            let r2 = dot(&x, &atrm);
+            ((l2 - r2).abs() <= 1e-10 * (1.0 + l2.abs() + r2.abs()))
+                .or_fail(format!("{label} full operator: {l2} vs {r2}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_problem_blocks_partition() {
     property("blocks partition measurements", 40, |g| {
         let p = random_problem(g);
         let x = g.vec_gauss(p.spec.n);
-        let full = p.a.gemv(&x);
+        let full = p.a().gemv(&x);
         let mut reassembled = Vec::new();
         for i in 0..p.spec.num_blocks() {
             let (blk, _) = p.block(i);
