@@ -1,0 +1,19 @@
+//! PERF — recovery-service throughput benches
+//! (`cargo bench --bench throughput`).
+//!
+//! Thin wrapper over the `throughput` suite in
+//! `astir::bench_harness::suites`: jobs/sec at `n = 2^17` (matrix-free
+//! subsampled DCT, one operator shared by `Arc` across all jobs) for the
+//! persistent `RecoveryPool` vs today's spawn-per-call runtime, and for
+//! lockstep batched MMV recovery (shared tally + one multi-RHS fused
+//! proxy per time step) vs a sequential per-signal loop. Single-pass
+//! experiment budgets; everything runs in CI smoke under the committed
+//! `baseline_smoke.json` regression gate.
+//!
+//! Telemetry: `results/BENCH_throughput.json`.
+
+mod common;
+
+fn main() {
+    common::bench_binary_main("throughput");
+}

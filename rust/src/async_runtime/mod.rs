@@ -104,6 +104,64 @@ struct ExitInfo {
     at: Instant,
 }
 
+/// The per-worker Algorithm-2 loop body, shared verbatim by the scoped
+/// real-thread runtime ([`run_async_with`]) and the persistent
+/// [`crate::service::RecoveryPool`] (which runs it inline on a long-lived
+/// worker for single-signal jobs — that sharing is what makes pool results
+/// **bit-identical** to a spawn-per-call `cores = 1` run).
+///
+/// Runs read/vote/commit/exit iterations until the tolerance is met
+/// (returns `Some(residual)` — the caller publishes `x` and raises the
+/// stop flag), another worker raises `stop`, or the local iteration cap is
+/// reached (both `None`). `counter` observes the worker's local iteration
+/// count throughout.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn drive_worker<K: SupportKernel>(
+    step: &mut K,
+    x: &mut SparseIterate<f64>,
+    s: usize,
+    opts: &AsyncOpts,
+    period: usize,
+    rng: &mut Rng,
+    tally: &AtomicTally,
+    stop: &AtomicBool,
+    counter: &AtomicU64,
+) -> Option<f64> {
+    // Reused per-iteration buffers — the loop below does no heap
+    // allocation once these reach steady-state capacity.
+    let mut gamma: Vec<usize> = Vec::new();
+    let mut prev_gamma: Vec<usize> = Vec::new();
+    let mut estimate: Vec<usize> = Vec::new();
+    let mut tally_scratch: Vec<i64> = Vec::new();
+    let mut resid_scratch: Vec<f64> = Vec::new();
+    for t in 1..=opts.max_local_iters as u64 {
+        if stop.load(Ordering::Acquire) {
+            break;
+        }
+        // read: T̃ = supp_s(φ) — racy by design.
+        tally.estimate_into(s, &mut tally_scratch, &mut estimate);
+        let block = step.sample_block(rng);
+        // slow-core emulation: burn (period-1) identify phases.
+        for _ in 1..period {
+            step.burn(x, block);
+        }
+        step.tally_step(x, block, &estimate, &mut gamma);
+        // update tally: φ_Γt += t, φ_Γ(t-1) -= t-1 (atomic RMWs).
+        tally.commit(&gamma, &prev_gamma, t);
+        std::mem::swap(&mut prev_gamma, &mut gamma);
+        counter.store(t, Ordering::Relaxed);
+        if t as usize % opts.check_every == 0 {
+            // The kernel's sparse exit check over x's support
+            // (Γ^t ∪ T̃ for StoIHT, the pruned Γ^t for GradMP).
+            let r = step.residual(x, &mut resid_scratch);
+            if r < opts.tolerance {
+                return Some(r);
+            }
+        }
+    }
+    None
+}
+
 /// Run asynchronous StoIHT on `cores` OS threads (native compute).
 pub fn run_async(problem: &Problem, cores: usize, opts: &AsyncOpts, seed: u64) -> AsyncOutcome {
     run_async_with(problem, cores, opts, seed, |p| StoihtKernel::new(p, opts.gamma))
@@ -148,48 +206,21 @@ where
             scope.spawn(move || {
                 let mut step = make_step(problem);
                 let mut x = SparseIterate::zeros(spec.n);
-                // Reused per-iteration buffers — the loop below does no
-                // heap allocation once these reach steady-state capacity.
-                let mut gamma: Vec<usize> = Vec::new();
-                let mut prev_gamma: Vec<usize> = Vec::new();
-                let mut estimate: Vec<usize> = Vec::new();
-                let mut tally_scratch: Vec<i64> = Vec::new();
-                let mut resid_scratch: Vec<f64> = Vec::new();
-                for t in 1..=opts.max_local_iters as u64 {
-                    if stop.load(Ordering::Acquire) {
-                        break;
+                let won = drive_worker(
+                    &mut step, &mut x, spec.s, opts, period, &mut rng, tally, stop, counter,
+                );
+                if let Some(r) = won {
+                    let mut guard = exit_info.lock().unwrap();
+                    if guard.is_none() {
+                        *guard = Some(ExitInfo {
+                            core: w,
+                            residual: r,
+                            x: x.values().to_vec(),
+                            at: Instant::now(),
+                        });
                     }
-                    // read: T̃ = supp_s(φ) — racy by design.
-                    tally.estimate_into(spec.s, &mut tally_scratch, &mut estimate);
-                    let block = step.sample_block(&mut rng);
-                    // slow-core emulation: burn (period-1) identify phases.
-                    for _ in 1..period {
-                        step.burn(&x, block);
-                    }
-                    step.tally_step(&mut x, block, &estimate, &mut gamma);
-                    // update tally: φ_Γt += t, φ_Γ(t-1) -= t-1 (atomic RMWs).
-                    tally.commit(&gamma, &prev_gamma, t);
-                    std::mem::swap(&mut prev_gamma, &mut gamma);
-                    counter.store(t, Ordering::Relaxed);
-                    if t as usize % opts.check_every == 0 {
-                        // The kernel's sparse exit check over x's support
-                        // (Γ^t ∪ T̃ for StoIHT, the pruned Γ^t for GradMP).
-                        let r = step.residual(&x, &mut resid_scratch);
-                        if r < opts.tolerance {
-                            let mut guard = exit_info.lock().unwrap();
-                            if guard.is_none() {
-                                *guard = Some(ExitInfo {
-                                    core: w,
-                                    residual: r,
-                                    x: x.values().to_vec(),
-                                    at: Instant::now(),
-                                });
-                            }
-                            drop(guard);
-                            stop.store(true, Ordering::Release);
-                            break;
-                        }
-                    }
+                    drop(guard);
+                    stop.store(true, Ordering::Release);
                 }
             });
         }

@@ -9,7 +9,7 @@
 //!   min over batch means.
 //! * **Registry** — every benchmark is declared as a [`BenchSpec`] (name,
 //!   scale tag, problem dims, seed, smoke/full [`Budget`]s) and registered
-//!   into a named [`Suite`]; the seven suites live in [`suites`] and are
+//!   into a named [`Suite`]; the nine suites live in [`suites`] and are
 //!   shared by the `cargo bench` binaries and the `astir bench` CLI.
 //! * **Telemetry** — a finished run serializes to a schema-stable JSON
 //!   document ([`json`], hand-rolled — no serde offline) that CI uploads

@@ -4,7 +4,7 @@
 //! registers [`BenchSpec`]s into a [`Suite`]; the `cargo bench` binaries
 //! (`rust/benches/*.rs`) and the `astir bench` CLI both execute suites
 //! from this registry, so a perf number means the same thing however it
-//! was produced. Eight suites, one per bench binary:
+//! was produced. Nine suites, one per bench binary:
 //!
 //! * `hot_path` — kernel microbenches: roofline triad, gemv/proxy
 //!   primitives, top-s + tally ops, full Alg.-2 steps, dense-vs-sparse at
@@ -20,6 +20,9 @@
 //!   plus an `n = 2^20, m = 3·10^5` asynchronous StoIHT run — shapes whose
 //!   dense matrix (up to 2.4 TB) could never be materialized. Smoke-budgeted:
 //!   every point runs in CI and is gated by the committed baseline.
+//! * `throughput` — the recovery **service** measured as a service at
+//!   `n = 2^17`: jobs/sec through the persistent pool vs spawn-per-call,
+//!   and batched MMV lockstep recovery vs a sequential per-signal loop.
 //!
 //! Smoke mode shrinks the Monte-Carlo budgets to CI size; full mode keeps
 //! the paper-ish defaults (`ASTIR_BENCH_TRIALS` raises them further).
@@ -29,16 +32,17 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use crate::algorithms::{Alg, StoGradMpKernel, StoihtKernel};
-use crate::async_runtime::{run_async_with, AsyncOpts};
+use crate::async_runtime::{run_async, run_async_with, AsyncOpts};
 use crate::backend::{Backend, PjrtBackend};
 use crate::config::ExperimentConfig;
-use crate::coordinator::Leader;
+use crate::coordinator::{run_trials, Leader};
 use crate::experiments::{self, Fig2Variant};
 use crate::linalg::{dot, Mat, MeasureOp, SparseIterate};
 use crate::metrics::{stats, Table};
 use crate::problem::{Ensemble, Problem, ProblemSpec};
 use crate::report;
 use crate::rng::Rng;
+use crate::service::{recover_batch_stoiht, solve_job, RecoveryPool};
 use crate::sim::{SimOpts, SimOutcome, SpeedSchedule};
 use crate::support::{top_s_into, union};
 use crate::tally::{AtomicTally, TallyWeighting};
@@ -97,6 +101,11 @@ pub fn registry() -> Vec<SuiteDef> {
             name: "large_n",
             about: "matrix-free subsampled DCT at n = 10^5…10^6 (no m x n matrix exists)",
             register: large_n_suite,
+        },
+        SuiteDef {
+            name: "throughput",
+            about: "recovery service jobs/sec — persistent pool vs spawn, batched vs sequential",
+            register: throughput_suite,
         },
     ]
 }
@@ -950,6 +959,128 @@ fn large_n_suite(suite: &mut Suite) {
     }
 }
 
+/// The `throughput` suite — the recovery service measured **as a
+/// service** at `n = 2^17`, matrix-free subsampled DCT (one operator
+/// drawn once and shared by `Arc` across every job):
+///
+/// * `pool_jobs_c4` vs `spawn_jobs_c4` — 8 independent single-signal jobs
+///   on 4 workers. Both arms run the identical per-job solve with
+///   identical seeds (the pool's RNG splitting is `run_trials`'); the
+///   pool amortizes thread spawn and queue setup across calls.
+/// * `sequential_b8` vs `batched_b8` — 8 MMV signals sharing one operator
+///   and one planted support, both arms single-threaded: a per-signal
+///   loop of independent solves vs the lockstep batched path (one
+///   multi-RHS fused proxy per time step + a tally **shared across the
+///   batch**). The shared tally concentrates votes `B`x faster, so
+///   per-signal iterations drop the way Fig. 2's steps-to-exit drop with
+///   cores — the batched arm's jobs/sec win is structural (fewer
+///   iterations), not a constant-factor trick.
+///
+/// Everything is standard scale and single-pass (experiment budgets), so
+/// the whole suite runs in CI smoke under the committed baseline gate.
+fn throughput_suite(suite: &mut Suite) {
+    // M = m/b = 8 blocks: StoIHT's iteration count scales with the block
+    // count (~M·ln(1/tol) — the expected update contracts by (1 − 1/M)),
+    // so a small M keeps each job at a few hundred O(n log n) transforms
+    // and the whole suite inside the CI smoke budget.
+    let (n, m, b, s) = (1usize << 17, 4096usize, 512usize, 16usize);
+    let jobs = 8usize;
+    let shape = |name: &str, seed: u64| BenchSpec::experiment(name).dims(n, m, b, s).seed(seed);
+    let pool_spec = shape("pool_jobs_c4", 60);
+    let spawn_spec = shape("spawn_jobs_c4", 60);
+    let seq_spec = shape("sequential_b8", 61);
+    let bat_spec = shape("batched_b8", 61);
+    if suite.is_dry_run() {
+        for sp in [pool_spec, spawn_spec, seq_spec, bat_spec] {
+            suite.bench(sp, || {});
+        }
+        return;
+    }
+    let mf = ProblemSpec {
+        n,
+        m,
+        b,
+        s,
+        ensemble: Ensemble::PartialDct,
+        dense_a: false,
+        ..ProblemSpec::paper()
+    };
+    // Tolerance-based exit with a generous cap: the comparisons below are
+    // about how FAST each serving architecture reaches the same tolerance.
+    // check_every = 5 amortizes the exit transform (one dct2 per check,
+    // comparable to an iteration) identically across all four arms.
+    let opts = AsyncOpts { max_local_iters: 2000, check_every: 5, ..Default::default() };
+
+    // --- persistent pool vs spawn-per-call ---------------------------
+    if suite.wants(&pool_spec) || suite.wants(&spawn_spec) {
+        bench_header(&format!("recovery service — {jobs} jobs at n = {n}, pool vs spawn"));
+        let mut rng = Rng::seed_from(60);
+        let op = mf.draw_operator(&mut rng);
+        let ps: Arc<Vec<Problem>> =
+            Arc::new((0..jobs).map(|_| mf.generate_with_op(&op, &mut rng)).collect());
+        // Spawned once, OUTSIDE the timed region — that is the point.
+        let pool = RecoveryPool::new(4);
+        let pool_rec = suite.bench(pool_spec, || {
+            let jp = Arc::clone(&ps);
+            let jo = opts.clone();
+            let outs = pool.run_jobs(jobs, 123, move |i, r| {
+                let seed = r.next_u64();
+                solve_job(&jp[i], Alg::Stoiht, &jo, seed)
+            });
+            assert!(outs.iter().all(|o| o.converged), "pool jobs must converge");
+            std::hint::black_box(&outs);
+        });
+        let spawn_rec = suite.bench(spawn_spec, || {
+            // Today's architecture: scoped trial threads + one fresh OS
+            // thread per job inside run_async (cores = 1). Same seeds,
+            // same solves — run_trials and the pool split RNGs alike.
+            let outs = run_trials(jobs, 4, 123, |i, r| {
+                let seed = r.next_u64();
+                run_async(&ps[i], 1, &opts, seed)
+            });
+            assert!(outs.iter().all(|o| o.converged), "spawned jobs must converge");
+            std::hint::black_box(&outs);
+        });
+        if let (Some(p), Some(sp)) = (&pool_rec, &spawn_rec) {
+            println!(
+                "  => pool {:.2} jobs/s vs spawn-per-call {:.2} jobs/s ({:.2}x)",
+                jobs as f64 / p.time.mean,
+                jobs as f64 / sp.time.mean,
+                sp.time.mean / p.time.mean
+            );
+        }
+    }
+
+    // --- batched MMV lockstep vs sequential per-signal loop ----------
+    if !(suite.wants(&seq_spec) || suite.wants(&bat_spec)) {
+        return;
+    }
+    bench_header(&format!("batched MMV recovery — {jobs} signals, one operator, n = {n}"));
+    let mut rng = Rng::seed_from(61);
+    let op = mf.draw_operator(&mut rng);
+    let mmv = mf.generate_mmv_with_op(&op, &mut rng, jobs);
+    let seq_rec = suite.bench(seq_spec, || {
+        for (c, p) in mmv.iter().enumerate() {
+            let out = solve_job(p, Alg::Stoiht, &opts, 500 + c as u64);
+            assert!(out.converged, "sequential signal {c} must converge");
+            std::hint::black_box(&out);
+        }
+    });
+    let bat_rec = suite.bench(bat_spec, || {
+        let out = recover_batch_stoiht(&mmv, &opts, 500);
+        assert!(out.all_converged(), "batched signals must converge");
+        std::hint::black_box(&out);
+    });
+    if let (Some(sq), Some(bt)) = (&seq_rec, &bat_rec) {
+        println!(
+            "  => batched {:.2} signals/s vs sequential {:.2} signals/s ({:.2}x jobs/sec)",
+            jobs as f64 / bt.time.mean,
+            jobs as f64 / sq.time.mean,
+            sq.time.mean / bt.time.mean
+        );
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -967,7 +1098,8 @@ mod tests {
                 "ablations",
                 "baselines",
                 "stogradmp_async",
-                "large_n"
+                "large_n",
+                "throughput"
             ]
         );
         for n in &names {
@@ -1009,11 +1141,41 @@ mod tests {
     }
 
     #[test]
+    fn throughput_suite_registers_the_service_comparisons() {
+        // `astir bench --filter throughput` must reach both jobs/sec
+        // comparisons (the acceptance-criteria invocation), at n = 2^17.
+        let opts = RunOpts {
+            mode: Mode::Smoke,
+            filter: Some("throughput".to_string()),
+            skip_jumbo: true,
+            dry_run: true,
+        };
+        let report = run_all(&opts);
+        let tp = report.suites.iter().find(|s| s.name == "throughput").unwrap();
+        let names: Vec<&str> = tp.benches.iter().map(|b| b.name.as_str()).collect();
+        for e in ["pool_jobs_c4", "spawn_jobs_c4", "sequential_b8", "batched_b8"] {
+            assert!(names.contains(&e), "missing {e} in {names:?}");
+        }
+        assert!(tp.benches.iter().all(|b| b.scale == Scale::Standard));
+        for bench in &tp.benches {
+            assert_eq!(bench.dims.unwrap().n, 1 << 17, "{}: wrong n", bench.name);
+        }
+        // nothing outside the new suite matches the filter
+        let elsewhere: usize = report
+            .suites
+            .iter()
+            .filter(|s| s.name != "throughput")
+            .map(|s| s.benches.len())
+            .sum();
+        assert_eq!(elsewhere, 0);
+    }
+
+    #[test]
     fn dry_run_registers_specs_for_every_suite() {
         let opts = RunOpts { mode: Mode::Smoke, filter: None, skip_jumbo: true, dry_run: true };
         let report = run_all(&opts);
         assert_eq!(report.schema, SCHEMA);
-        assert_eq!(report.suites.len(), 8);
+        assert_eq!(report.suites.len(), 9);
         for s in &report.suites {
             assert!(
                 !s.benches.is_empty() || !s.skipped.is_empty(),

@@ -14,6 +14,25 @@ pub use toml::{parse_toml, TomlDoc, TomlError, Value};
 use crate::algorithms::Alg;
 use crate::problem::{Ensemble, ProblemSpec, SignalModel};
 
+/// Recovery-service settings (`astir batch`, the persistent
+/// [`crate::service::RecoveryPool`]): TOML `[service]` section, CLI
+/// `--workers/--jobs/--batch` overrides.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServiceConfig {
+    /// Persistent pool size (worker threads spawned once per service).
+    pub workers: usize,
+    /// Recovery jobs a batch run submits.
+    pub jobs: usize,
+    /// Signals per job recovered in MMV lockstep (1 = single-signal jobs).
+    pub batch: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { workers: default_trial_threads(), jobs: 16, batch: 1 }
+    }
+}
+
 /// Typed experiment configuration (see `configs/*.toml` for examples).
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -36,6 +55,8 @@ pub struct ExperimentConfig {
     pub cores: Vec<usize>,
     /// Worker threads used to parallelize *trials* (not the simulated cores).
     pub trial_threads: usize,
+    /// Recovery-service settings (`astir batch`).
+    pub service: ServiceConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -51,6 +72,7 @@ impl Default for ExperimentConfig {
             seed: 20170301,
             cores: vec![1, 2, 4, 8, 16],
             trial_threads: default_trial_threads(),
+            service: ServiceConfig::default(),
         }
     }
 }
@@ -61,9 +83,16 @@ pub fn default_trial_threads() -> usize {
 }
 
 impl ExperimentConfig {
-    /// Parse from TOML text. Unknown keys are errors.
+    /// Parse from TOML text. Unknown keys and unknown sections are errors.
     pub fn from_toml(text: &str) -> Result<Self, String> {
         let doc = parse_toml(text).map_err(|e| e.to_string())?;
+        // A misspelled section ("[services]") must not silently yield
+        // defaults; the per-key strictness below only sees known sections.
+        for name in doc.section_names() {
+            if !matches!(name, "" | "problem" | "service") {
+                return Err(format!("unknown section `[{name}]` (problem|service)"));
+            }
+        }
         let mut cfg = ExperimentConfig::default();
 
         for (key, value) in doc.section("") {
@@ -126,6 +155,23 @@ impl ExperimentConfig {
             }
         }
 
+        for (key, value) in doc.section("service") {
+            let s = &mut cfg.service;
+            match key.as_str() {
+                "workers" => {
+                    s.workers =
+                        value.as_usize().ok_or("service.workers must be a positive integer")?
+                }
+                "jobs" => {
+                    s.jobs = value.as_usize().ok_or("service.jobs must be a positive integer")?
+                }
+                "batch" => {
+                    s.batch = value.as_usize().ok_or("service.batch must be a positive integer")?
+                }
+                other => return Err(format!("unknown service key `{other}`")),
+            }
+        }
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -156,6 +202,15 @@ impl ExperimentConfig {
         }
         if self.trial_threads == 0 {
             return Err("trial_threads must be positive".into());
+        }
+        if self.service.workers == 0 {
+            return Err("service.workers must be positive".into());
+        }
+        if self.service.jobs == 0 {
+            return Err("service.jobs must be positive".into());
+        }
+        if self.service.batch == 0 {
+            return Err("service.batch must be positive".into());
         }
         Ok(())
     }
@@ -240,6 +295,26 @@ dense_a = false
     fn rejects_unknown_keys() {
         assert!(ExperimentConfig::from_toml("gamam = 1.0").is_err());
         assert!(ExperimentConfig::from_toml("[problem]\nq = 3").is_err());
+        assert!(ExperimentConfig::from_toml("[service]\nthreads = 2").is_err());
+        // Misspelled sections fail loudly instead of yielding defaults.
+        assert!(ExperimentConfig::from_toml("[services]\nworkers = 2").is_err());
+        assert!(ExperimentConfig::from_toml("[problems]\nn = 64").is_err());
+    }
+
+    #[test]
+    fn service_section_parses_and_validates() {
+        let c = ExperimentConfig::from_toml("[service]\nworkers = 3\njobs = 40\nbatch = 8")
+            .unwrap();
+        assert_eq!(c.service, ServiceConfig { workers: 3, jobs: 40, batch: 8 });
+        // Defaults: single-signal jobs, auto-sized pool.
+        let d = ExperimentConfig::default();
+        assert_eq!(d.service.batch, 1);
+        assert_eq!(d.service.jobs, 16);
+        assert!(d.service.workers >= 1);
+        assert!(ExperimentConfig::from_toml("[service]\nworkers = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[service]\njobs = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[service]\nbatch = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[service]\nbatch = true").is_err());
     }
 
     #[test]

@@ -7,26 +7,90 @@
 //! * [`run_trials`] — a deterministic work-stealing trial pool: trial `i`
 //!   always receives the same RNG stream regardless of which OS thread
 //!   executes it, so results are bit-identical at any `threads` setting.
+//! * [`ResultSlots`] — preallocated one-writer-per-slot output storage, so
+//!   the trial loop commits results without touching a lock (the seed took
+//!   the results `Mutex` once per trial); the persistent
+//!   [`crate::service::RecoveryPool`] reuses the same scheme.
 //! * [`Leader`] — the config-driven facade the CLI and benches use:
 //!   generate per-trial problems, dispatch to the sequential solvers, the
 //!   discrete-time simulator, or the real-thread runtime, and aggregate
-//!   [`crate::metrics::Stats`].
+//!   [`crate::metrics::Stats`]. Its Monte-Carlo sweeps ride a persistent
+//!   [`crate::service::RecoveryPool`] (spawned once per leader) with the
+//!   identical per-trial RNG derivation, so results are bit-for-bit what
+//!   the spawn-per-call [`run_trials`] produces.
 
+use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 
 use crate::algorithms::{self, Alg, GreedyOpts, RunResult, StoGradMpKernel};
 use crate::config::ExperimentConfig;
 use crate::metrics::{stats, Stats};
 use crate::problem::Problem;
 use crate::rng::Rng;
+use crate::service::RecoveryPool;
 use crate::sim::{simulate, simulate_with, SimOpts, SimOutcome, SpeedSchedule};
+
+/// Preallocated per-trial output slots written without locks.
+///
+/// The work-queue protocol (an atomic ticket in [`run_trials`] and in the
+/// recovery pool) hands each slot index to exactly one worker, so a slot
+/// write needs no synchronization of its own; publication to the reader
+/// happens through the queue's existing synchronization (thread join, or
+/// the pool's release/acquire completion counter + mutex hand-off).
+pub(crate) struct ResultSlots<T> {
+    slots: Vec<UnsafeCell<Option<T>>>,
+}
+
+// SAFETY: slots are only written through `put` under the one-writer-per-
+// index contract below, and only read after a happens-before edge from
+// every writer; `T: Send` is all that crossing threads then requires.
+unsafe impl<T: Send> Sync for ResultSlots<T> {}
+
+impl<T> ResultSlots<T> {
+    pub(crate) fn new(len: usize) -> Self {
+        ResultSlots { slots: (0..len).map(|_| UnsafeCell::new(None)).collect() }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Write slot `i`.
+    ///
+    /// SAFETY: the caller must guarantee `i` was claimed exclusively (e.g.
+    /// via an atomic `fetch_add` ticket), so no other `put`/`take` touches
+    /// slot `i` concurrently.
+    pub(crate) unsafe fn put(&self, i: usize, v: T) {
+        *self.slots[i].get() = Some(v);
+    }
+
+    /// Take slot `i` back out.
+    ///
+    /// SAFETY: the caller must guarantee all writers are finished and
+    /// synchronized-with (happens-before) this call, and that no other
+    /// `take` targets slot `i` concurrently.
+    pub(crate) unsafe fn take(&self, i: usize) -> Option<T> {
+        (*self.slots[i].get()).take()
+    }
+
+    /// Consume into the ordered results; panics if any slot was never
+    /// written (a worker died before finishing its claim).
+    pub(crate) fn into_vec(self) -> Vec<T> {
+        self.slots
+            .into_iter()
+            .map(|c| c.into_inner().expect("every claimed slot must produce a result"))
+            .collect()
+    }
+}
 
 /// Run `trials` independent jobs on `threads` OS threads.
 ///
 /// Job `i` gets an RNG derived from `master_seed` and `i` only — results
 /// are independent of the thread count and of scheduling order. Outputs
-/// are returned in trial order.
+/// are returned in trial order. The loop body is lock-free: trials are
+/// claimed by an atomic ticket and committed into [`ResultSlots`]
+/// (one exclusive writer per slot), with the scope join supplying the
+/// final happens-before edge.
 pub fn run_trials<T, F>(trials: usize, threads: usize, master_seed: u64, f: F) -> Vec<T>
 where
     T: Send,
@@ -35,11 +99,10 @@ where
     assert!(threads >= 1);
     // Pre-derive one RNG per trial from the master stream (serially, so
     // the assignment is scheduling-independent).
-    let mut root = Rng::seed_from(master_seed);
-    let trial_rngs: Vec<Rng> = (0..trials).map(|i| root.split(i as u64)).collect();
+    let trial_rngs = split_rngs(master_seed, trials);
 
     let next = AtomicUsize::new(0);
-    let results: Mutex<Vec<Option<T>>> = Mutex::new((0..trials).map(|_| None).collect());
+    let slots: ResultSlots<T> = ResultSlots::new(trials);
 
     std::thread::scope(|scope| {
         for _ in 0..threads.min(trials.max(1)) {
@@ -50,17 +113,22 @@ where
                 }
                 let mut rng = trial_rngs[i].clone();
                 let out = f(i, &mut rng);
-                results.lock().unwrap()[i] = Some(out);
+                // SAFETY: the ticket above hands index i to this thread
+                // alone; reads happen after the scope joins every worker.
+                unsafe { slots.put(i, out) };
             });
         }
     });
 
-    results
-        .into_inner()
-        .unwrap()
-        .into_iter()
-        .map(|o| o.expect("every trial must produce a result"))
-        .collect()
+    slots.into_vec()
+}
+
+/// One independent RNG per job, derived from the master seed and the job
+/// index only — the scheduling-independent splitting scheme shared by
+/// [`run_trials`] and the persistent recovery pool.
+pub fn split_rngs(master_seed: u64, jobs: usize) -> Vec<Rng> {
+    let mut root = Rng::seed_from(master_seed);
+    (0..jobs).map(|i| root.split(i as u64)).collect()
 }
 
 /// Aggregated sweep point: a configuration value and the sample statistics
@@ -75,19 +143,35 @@ pub struct SweepPoint {
     pub convergence_rate: f64,
 }
 
-/// Config-driven experiment facade.
+/// Config-driven experiment facade. Owns a persistent
+/// [`RecoveryPool`] (sized by `trial_threads`, spawned lazily on the
+/// first sweep so constructing a `Leader` stays free): every Monte-Carlo
+/// sweep below is a batch of pool jobs, so repeated sweeps — a core-count
+/// sweep, the bench suites, the CLI — reuse the same worker threads
+/// instead of re-spawning a scoped team per call.
 pub struct Leader {
     pub cfg: ExperimentConfig,
+    pool: std::sync::OnceLock<RecoveryPool>,
 }
 
 impl Leader {
     pub fn new(cfg: ExperimentConfig) -> Self {
         cfg.validate().expect("invalid experiment config");
-        Leader { cfg }
+        Leader { cfg, pool: std::sync::OnceLock::new() }
+    }
+
+    /// The leader's persistent worker pool (spawned on first use).
+    pub fn pool(&self) -> &RecoveryPool {
+        self.pool.get_or_init(|| RecoveryPool::new(self.cfg.trial_threads))
     }
 
     /// Fresh problem instance for trial `i` (deterministic in the config
     /// seed; shared by all solvers compared within the trial).
+    ///
+    /// Contract: this is exactly `cfg.problem.generate(rng)` — the pooled
+    /// sweeps below inline that same call (their `'static` closures cannot
+    /// borrow `self`), so any change to the per-trial draw must happen in
+    /// `ProblemSpec::generate`, never here.
     pub fn problem_for_trial(&self, rng: &mut Rng) -> Problem {
         self.cfg.problem.generate(rng)
     }
@@ -103,12 +187,16 @@ impl Leader {
     }
 
     /// Monte-Carlo over sequential StoIHT (the paper's horizontal line in
-    /// Fig. 2): returns per-trial results.
+    /// Fig. 2): returns per-trial results. Rides the persistent pool with
+    /// the [`run_trials`] RNG derivation, so the results are bit-for-bit
+    /// what the scoped-thread path produced.
     pub fn monte_carlo_stoiht(&self, opts: &GreedyOpts) -> Vec<RunResult> {
-        run_trials(self.cfg.trials, self.cfg.trial_threads, self.cfg.seed, |_i, rng| {
-            let p = self.problem_for_trial(rng);
+        let problem = self.cfg.problem.clone();
+        let opts = opts.clone();
+        self.pool().run_jobs(self.cfg.trials, self.cfg.seed, move |_i, rng| {
+            let p = problem.generate(rng);
             let mut solver_rng = rng.split(0xA160);
-            algorithms::stoiht(&p, opts, &mut solver_rng)
+            algorithms::stoiht(&p, &opts, &mut solver_rng)
         })
     }
 
@@ -120,10 +208,12 @@ impl Leader {
         match self.cfg.alg {
             Alg::Stoiht => self.monte_carlo_stoiht(opts),
             Alg::StoGradMp => {
-                run_trials(self.cfg.trials, self.cfg.trial_threads, self.cfg.seed, |_i, rng| {
-                    let p = self.problem_for_trial(rng);
+                let problem = self.cfg.problem.clone();
+                let opts = opts.clone();
+                self.pool().run_jobs(self.cfg.trials, self.cfg.seed, move |_i, rng| {
+                    let p = problem.generate(rng);
                     let mut solver_rng = rng.split(0xA160);
-                    algorithms::stogradmp(&p, opts, &mut solver_rng)
+                    algorithms::stogradmp(&p, &opts, &mut solver_rng)
                 })
             }
         }
@@ -138,14 +228,22 @@ impl Leader {
         sim_opts: &SimOpts,
     ) -> Vec<SimOutcome> {
         let alg = self.cfg.alg;
-        run_trials(self.cfg.trials, self.cfg.trial_threads, self.cfg.seed, move |_i, rng| {
-            let p = self.problem_for_trial(rng);
+        let problem = self.cfg.problem.clone();
+        let schedule = schedule.clone();
+        let sim_opts = sim_opts.clone();
+        self.pool().run_jobs(self.cfg.trials, self.cfg.seed, move |_i, rng| {
+            let p = problem.generate(rng);
             let mut sim_rng = rng.split(0x519);
             match alg {
-                Alg::Stoiht => simulate(&p, cores, schedule, sim_opts, &mut sim_rng),
-                Alg::StoGradMp => {
-                    simulate_with(&p, cores, schedule, sim_opts, &mut sim_rng, StoGradMpKernel::new)
-                }
+                Alg::Stoiht => simulate(&p, cores, &schedule, &sim_opts, &mut sim_rng),
+                Alg::StoGradMp => simulate_with(
+                    &p,
+                    cores,
+                    &schedule,
+                    &sim_opts,
+                    &mut sim_rng,
+                    StoGradMpKernel::new,
+                ),
             }
         })
     }
@@ -253,6 +351,27 @@ mod tests {
         for (ra, rb) in a.iter().zip(&b) {
             assert_eq!(ra.x, rb.x);
             assert_eq!(ra.iters, rb.iters);
+        }
+    }
+
+    #[test]
+    fn pooled_monte_carlo_matches_scoped_run_trials_bitwise() {
+        // The Leader rides the persistent pool; its per-trial RNG scheme
+        // must remain exactly run_trials', so the rewiring is invisible.
+        let mut cfg = small_cfg();
+        cfg.trials = 4;
+        let leader = Leader::new(cfg.clone());
+        let pooled = leader.monte_carlo_stoiht(&leader.greedy_opts());
+        let opts = leader.greedy_opts();
+        let scoped = run_trials(cfg.trials, cfg.trial_threads, cfg.seed, |_i, rng| {
+            let p = cfg.problem.generate(rng);
+            let mut solver_rng = rng.split(0xA160);
+            algorithms::stoiht(&p, &opts, &mut solver_rng)
+        });
+        for (a, b) in pooled.iter().zip(&scoped) {
+            assert_eq!(a.x, b.x);
+            assert_eq!(a.iters, b.iters);
+            assert_eq!(a.residual.to_bits(), b.residual.to_bits());
         }
     }
 

@@ -31,6 +31,7 @@
 //! | [`sim`] | discrete-time multicore simulator (paper §IV-B semantics) |
 //! | [`async_runtime`] | real-thread asynchronous execution with shared tally |
 //! | [`coordinator`] | leader/worker orchestration, trial batching, halting |
+//! | [`service`] | persistent recovery pool + batched MMV recovery (the serving layer) |
 //! | [`runtime`] | PJRT client wrapper: load + execute AOT HLO artifacts |
 //! | [`backend`] | compute-backend abstraction (native vs PJRT) |
 //! | [`config`] | TOML-subset config parser + experiment configs |
@@ -55,6 +56,7 @@ pub mod problem;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod support;
 pub mod tally;

@@ -47,12 +47,16 @@ pub enum OpScratch {
     Dct(DctState),
 }
 
-/// The [`SubsampledDctOp`] workspace: FFT lanes + scatter/output buffers.
+/// The [`SubsampledDctOp`] workspace: FFT lanes + scatter/output buffers,
+/// plus the support-union / cosine-table scratch the multi-RHS proxy
+/// amortizes across a batch (empty until a batched call needs them).
 #[derive(Clone, Debug)]
 pub struct DctState {
     fft: DctScratch,
     buf_a: Vec<f64>,
     buf_b: Vec<f64>,
+    union: Vec<usize>,
+    cos_tab: Vec<f64>,
 }
 
 impl DctState {
@@ -61,6 +65,8 @@ impl DctState {
             fft: plan.scratch(),
             buf_a: vec![0.0; plan.n()],
             buf_b: vec![0.0; plan.n()],
+            union: Vec::new(),
+            cos_tab: Vec::new(),
         }
     }
 }
@@ -80,6 +86,25 @@ impl OpScratch {
             OpScratch::None => unreachable!("just installed"),
         }
     }
+}
+
+/// Per-signal views for one **multi-RHS** fused sparse proxy step
+/// ([`MeasureOp::block_proxy_step_sparse_multi`]): the batched recovery
+/// path steps `B` signals against the same sampled block in lockstep, and
+/// each column carries its own measurements, iterate, support, and output
+/// buffers. All slices obey the single-signal method's contracts
+/// (`x[j] == +0.0` off the strictly ascending `support`).
+pub struct ProxyCol<'a> {
+    /// This signal's `y` slice for the sampled block (`b` entries).
+    pub y_b: &'a [f64],
+    /// Dense view of this signal's sparse iterate (`n` entries).
+    pub x: &'a [f64],
+    /// The iterate's strictly ascending support.
+    pub support: &'a [usize],
+    /// Residual output `y_b − A_b x` (`b` entries).
+    pub resid: &'a mut [f64],
+    /// Proxy output `x + alpha · A_bᵀ resid` (`n` entries).
+    pub out: &'a mut [f64],
 }
 
 /// Operator access to the measurement ensemble `A ∈ R^{m x n}`: everything
@@ -161,6 +186,44 @@ pub trait MeasureOp: Sync {
         support: &[usize],
         resid: &mut [f64],
     );
+
+    /// Multi-RHS apply `OUT = A X` over column-major panels: `x_panel`
+    /// holds `B = x_panel.len() / n` signals of length `n` back to back,
+    /// `out_panel` the corresponding `B` measurement vectors of length `m`.
+    /// Each column is **bit-identical** to [`MeasureOp::apply_into`] on
+    /// that signal alone — the batching shares setup (scratch, plan,
+    /// streamed matrix panels), never arithmetic.
+    fn apply_multi_into(&self, x_panel: &[f64], scratch: &mut OpScratch, out_panel: &mut [f64]) {
+        let (n, m) = (self.cols(), self.rows());
+        assert!(n > 0 && x_panel.len() % n == 0, "apply_multi: x panel length");
+        let ncols = x_panel.len() / n;
+        assert_eq!(out_panel.len(), ncols * m, "apply_multi: out panel length");
+        for (xc, oc) in x_panel.chunks_exact(n).zip(out_panel.chunks_exact_mut(m)) {
+            self.apply_into(xc, scratch, oc);
+        }
+    }
+
+    /// Multi-RHS twin of [`MeasureOp::block_proxy_step_sparse`]: one fused
+    /// proxy step for every column against the same row window, blocking
+    /// the apply/adjoint over the multi-vector right-hand side. The default
+    /// loops the single-signal kernel; implementations may amortize shared
+    /// work (the dense operator streams each `A_b` row once per batch, the
+    /// DCT operator evaluates each residual-pass cosine once per batch) but
+    /// every column's result must stay **bit-identical** to the
+    /// single-signal call — pinned by `rust/tests/service_pool.rs`.
+    fn block_proxy_step_sparse_multi(
+        &self,
+        row0: usize,
+        cols: &mut [ProxyCol<'_>],
+        alpha: f64,
+        scratch: &mut OpScratch,
+    ) {
+        for c in cols.iter_mut() {
+            self.block_proxy_step_sparse(
+                row0, c.y_b, c.x, c.support, alpha, c.resid, scratch, c.out,
+            );
+        }
+    }
 
     /// The halting statistic `‖y − A x‖₂` for a sparse iterate.
     fn residual_norm_sparse(
@@ -304,6 +367,52 @@ impl MeasureOp for DenseOp {
             .residual_sparse_into(&self.a_t, row0, y_b, x, support, resid);
     }
 
+    fn block_proxy_step_sparse_multi(
+        &self,
+        row0: usize,
+        cols: &mut [ProxyCol<'_>],
+        alpha: f64,
+        _scratch: &mut OpScratch,
+    ) {
+        let Some(first) = cols.first() else { return };
+        let b = first.y_b.len();
+        let n = self.a.cols();
+        let blk = self.a.row_block(row0, row0 + b);
+        // pass 1 per column: the sparse residual gather is O(b·|supp|) and
+        // column-specific — batching it would share nothing.
+        for c in cols.iter_mut() {
+            assert_eq!(c.y_b.len(), b, "proxy_multi: ragged block");
+            assert_eq!(c.out.len(), n, "proxy_multi: out length");
+            blk.residual_sparse_into(&self.a_t, row0, c.y_b, c.x, c.support, c.resid);
+            c.out.fill(0.0);
+            for &j in c.support {
+                c.out[j] = c.x[j];
+            }
+        }
+        // pass 2 fused: `out_c += alpha·resid_c[i] · A_b[i, chunk]` with the
+        // row chunk loaded ONCE per batch instead of once per signal — the
+        // B-fold matrix-traffic reduction that makes the dense batched path
+        // beat B sequential proxies. Per column the (chunk asc, row asc)
+        // axpy sequence is exactly `proxy_step_sparse_into`'s, so each
+        // column's bits are unchanged.
+        const CHUNK: usize = 1024;
+        let mut c0 = 0usize;
+        while c0 < n {
+            let c1 = (c0 + CHUNK).min(n);
+            for i in 0..b {
+                let row = &blk.row(i)[c0..c1];
+                for c in cols.iter_mut() {
+                    let w = alpha * c.resid[i];
+                    if w == 0.0 {
+                        continue;
+                    }
+                    axpy(w, row, &mut c.out[c0..c1]);
+                }
+            }
+            c0 = c1;
+        }
+    }
+
     fn residual_norm_sparse(
         &self,
         y: &[f64],
@@ -433,6 +542,24 @@ impl MeasureOp for SubsampledDctOp {
         self.plan.dct3_into(buf_a, fft, out);
     }
 
+    fn apply_multi_into(&self, x_panel: &[f64], scratch: &mut OpScratch, out_panel: &mut [f64]) {
+        // The batched DCT apply: one plan + one workspace borrow for the
+        // whole panel, a fresh forward transform per column (transforms are
+        // column-local, so the per-column bits equal `apply_into`'s).
+        let n = self.n;
+        let m = self.rows.len();
+        assert!(x_panel.len() % n == 0, "apply_multi: x panel length");
+        let ncols = x_panel.len() / n;
+        assert_eq!(out_panel.len(), ncols * m, "apply_multi: out panel length");
+        let DctState { fft, buf_a, .. } = scratch.dct(&self.plan);
+        for (xc, oc) in x_panel.chunks_exact(n).zip(out_panel.chunks_exact_mut(m)) {
+            self.plan.dct2_into(xc, fft, buf_a);
+            for (i, o) in oc.iter_mut().enumerate() {
+                *o = self.row_scale[i] * buf_a[self.rows[i]];
+            }
+        }
+    }
+
     fn block_apply_into(&self, row0: usize, x: &[f64], scratch: &mut OpScratch, out: &mut [f64]) {
         assert!(row0 + out.len() <= self.rows.len(), "block_apply: row window");
         let DctState { fft, buf_a, .. } = scratch.dct(&self.plan);
@@ -453,7 +580,7 @@ impl MeasureOp for SubsampledDctOp {
     ) {
         assert!(row0 + r.len() <= self.rows.len(), "block_apply_t: row window");
         assert_eq!(out.len(), self.n, "block_apply_t: out length");
-        let DctState { fft, buf_a, buf_b } = scratch.dct(&self.plan);
+        let DctState { fft, buf_a, buf_b, .. } = scratch.dct(&self.plan);
         buf_a.fill(0.0);
         for (i, &ri) in r.iter().enumerate() {
             let g = row0 + i;
@@ -487,7 +614,7 @@ impl MeasureOp for SubsampledDctOp {
         let b = y_b.len();
         assert_eq!(resid.len(), b, "proxy: resid length");
         assert_eq!(out.len(), self.n, "proxy: out length");
-        let DctState { fft, buf_a, buf_b } = scratch.dct(&self.plan);
+        let DctState { fft, buf_a, buf_b, .. } = scratch.dct(&self.plan);
         // pass 1: resid = y_b − A_b x (one forward transform + gather).
         self.plan.dct2_into(x, fft, buf_a);
         for i in 0..b {
@@ -525,7 +652,7 @@ impl MeasureOp for SubsampledDctOp {
         self.block_residual_sparse(row0, y_b, x, support, resid);
         // pass 2: out = x + alpha · A_bᵀ resid; x is zero off `support`, so
         // the sparse scatter replaces the dense add.
-        let DctState { fft, buf_a, buf_b } = scratch.dct(&self.plan);
+        let DctState { fft, buf_a, buf_b, .. } = scratch.dct(&self.plan);
         buf_a.fill(0.0);
         for i in 0..b {
             let g = row0 + i;
@@ -537,6 +664,76 @@ impl MeasureOp for SubsampledDctOp {
         }
         for &j in support {
             out[j] += x[j];
+        }
+    }
+
+    fn block_proxy_step_sparse_multi(
+        &self,
+        row0: usize,
+        cols: &mut [ProxyCol<'_>],
+        alpha: f64,
+        scratch: &mut OpScratch,
+    ) {
+        let Some(first) = cols.first() else { return };
+        let b = first.y_b.len();
+        assert!(row0 + b <= self.rows.len(), "proxy_multi: row window");
+        let nf = self.n as f64;
+        let DctState { fft, buf_a, buf_b, union, cos_tab } = scratch.dct(&self.plan);
+        // Support union across the batch (ascending): each residual-pass
+        // cosine is a pure function of (row, column), so it is evaluated
+        // once per batch here instead of once per signal.
+        union.clear();
+        for c in cols.iter() {
+            assert_eq!(c.y_b.len(), b, "proxy_multi: ragged block");
+            assert_eq!(c.resid.len(), b, "proxy_multi: resid length");
+            assert_eq!(c.out.len(), self.n, "proxy_multi: out length");
+            union.extend_from_slice(c.support);
+        }
+        union.sort_unstable();
+        union.dedup();
+        let u = union.len();
+        cos_tab.clear();
+        cos_tab.reserve(b * u);
+        for i in 0..b {
+            let k = self.rows[row0 + i] as f64;
+            for &j in union.iter() {
+                // The exact expression `block_residual_sparse` evaluates.
+                cos_tab.push((std::f64::consts::PI * k * (j as f64 + 0.5) / nf).cos());
+            }
+        }
+        for c in cols.iter_mut() {
+            // pass 1: the direct cosine gather through the shared table —
+            // per column the accumulation walks its own support ascending
+            // with the identical multiply, so the bits match the
+            // single-signal gather.
+            for i in 0..b {
+                let g = row0 + i;
+                let row_tab = &cos_tab[i * u..(i + 1) * u];
+                let mut s = 0.0;
+                let mut ui = 0usize;
+                for &j in c.support {
+                    while union[ui] < j {
+                        ui += 1;
+                    }
+                    s += row_tab[ui] * c.x[j];
+                }
+                c.resid[i] = c.y_b[i] - self.row_scale[g] * s;
+            }
+            // pass 2: scatter + one DCT-III per column, verbatim from
+            // `block_proxy_step_sparse` (the transform is column-local —
+            // nothing to amortize but the workspace borrow).
+            buf_a.fill(0.0);
+            for i in 0..b {
+                let g = row0 + i;
+                buf_a[self.rows[g]] = self.row_scale[g] * c.resid[i];
+            }
+            self.plan.dct3_into(buf_a, fft, buf_b);
+            for j in 0..self.n {
+                c.out[j] = alpha * buf_b[j];
+            }
+            for &j in c.support {
+                c.out[j] += c.x[j];
+            }
         }
     }
 
@@ -662,6 +859,10 @@ impl MeasureOp for Operator {
         dispatch!(self, op => op.apply_t_into(r, scratch, out))
     }
 
+    fn apply_multi_into(&self, x_panel: &[f64], scratch: &mut OpScratch, out_panel: &mut [f64]) {
+        dispatch!(self, op => op.apply_multi_into(x_panel, scratch, out_panel))
+    }
+
     fn block_apply_into(&self, row0: usize, x: &[f64], scratch: &mut OpScratch, out: &mut [f64]) {
         dispatch!(self, op => op.block_apply_into(row0, x, scratch, out))
     }
@@ -705,6 +906,16 @@ impl MeasureOp for Operator {
             self,
             op => op.block_proxy_step_sparse(row0, y_b, x, support, alpha, resid, scratch, out)
         )
+    }
+
+    fn block_proxy_step_sparse_multi(
+        &self,
+        row0: usize,
+        cols: &mut [ProxyCol<'_>],
+        alpha: f64,
+        scratch: &mut OpScratch,
+    ) {
+        dispatch!(self, op => op.block_proxy_step_sparse_multi(row0, cols, alpha, scratch))
     }
 
     fn block_residual_sparse(
@@ -891,6 +1102,141 @@ mod tests {
             op.block_proxy_step(row0, yb, &x, 0.8, &mut rd, &mut sd, &mut got_dense_form);
             for j in 0..n {
                 assert!((got[j] - got_dense_form[j]).abs() < 1e-12, "form mismatch coord {j}");
+            }
+        }
+    }
+
+    /// Batched-vs-single bitwise parity for the multi-RHS fused proxy on
+    /// one operator: every column of `block_proxy_step_sparse_multi` must
+    /// reproduce `block_proxy_step_sparse` exactly (overlapping, disjoint,
+    /// and empty supports included).
+    fn check_proxy_multi_matches_single(op: &Operator, n: usize, b: usize, seed: u64) {
+        let mut rng = Rng::seed_from(seed);
+        let supports: Vec<Vec<usize>> = vec![
+            {
+                let mut s = rng.subset(n, 5);
+                s.sort_unstable();
+                s
+            },
+            {
+                let mut s = rng.subset(n, 3);
+                s.sort_unstable();
+                s
+            },
+            Vec::new(),
+            (0..n).step_by(7).collect(),
+        ];
+        let xs: Vec<Vec<f64>> = supports
+            .iter()
+            .map(|supp| {
+                let mut x = vec![0.0; n];
+                for (q, &j) in supp.iter().enumerate() {
+                    x[j] = 0.2 + q as f64 * 0.3 + rng.gauss() * 0.1;
+                }
+                x
+            })
+            .collect();
+        let ys: Vec<Vec<f64>> = (0..supports.len())
+            .map(|k| (0..b).map(|i| ((i + k) as f64 * 0.53).sin()).collect())
+            .collect();
+        let alpha = 0.8;
+        let row0 = b; // second block
+        // singles
+        let mut scratch = op.make_scratch();
+        let mut want_out: Vec<Vec<f64>> = vec![vec![0.0; n]; supports.len()];
+        let mut want_resid: Vec<Vec<f64>> = vec![vec![0.0; b]; supports.len()];
+        for k in 0..supports.len() {
+            op.block_proxy_step_sparse(
+                row0,
+                &ys[k],
+                &xs[k],
+                &supports[k],
+                alpha,
+                &mut want_resid[k],
+                &mut scratch,
+                &mut want_out[k],
+            );
+        }
+        // batched
+        let mut got_out: Vec<Vec<f64>> = vec![vec![0.0; n]; supports.len()];
+        let mut got_resid: Vec<Vec<f64>> = vec![vec![0.0; b]; supports.len()];
+        {
+            let mut cols: Vec<ProxyCol<'_>> = Vec::new();
+            for (((y, x), (supp, resid)), out) in ys
+                .iter()
+                .zip(&xs)
+                .zip(supports.iter().zip(got_resid.iter_mut()))
+                .zip(got_out.iter_mut())
+            {
+                cols.push(ProxyCol {
+                    y_b: y,
+                    x,
+                    support: supp,
+                    resid: &mut resid[..],
+                    out: &mut out[..],
+                });
+            }
+            op.block_proxy_step_sparse_multi(row0, &mut cols, alpha, &mut scratch);
+        }
+        for k in 0..supports.len() {
+            for i in 0..b {
+                assert_eq!(
+                    got_resid[k][i].to_bits(),
+                    want_resid[k][i].to_bits(),
+                    "{}: col {k} resid row {i}",
+                    op.name()
+                );
+            }
+            for j in 0..n {
+                assert_eq!(
+                    got_out[k][j].to_bits(),
+                    want_out[k][j].to_bits(),
+                    "{}: col {k} out coord {j}",
+                    op.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn proxy_multi_bitwise_parity_both_impls() {
+        let (n, b) = (64usize, 8usize);
+        let op = dct_op(n, 32, 21);
+        let dense = densify(&op);
+        check_proxy_multi_matches_single(&Operator::SubsampledDct(op), n, b, 91);
+        check_proxy_multi_matches_single(&Operator::Dense(dense), n, b, 91);
+    }
+
+    #[test]
+    fn proxy_multi_empty_batch_is_a_noop() {
+        let op = Operator::SubsampledDct(dct_op(32, 16, 22));
+        let mut scratch = op.make_scratch();
+        let mut cols: Vec<ProxyCol<'_>> = Vec::new();
+        op.block_proxy_step_sparse_multi(0, &mut cols, 1.0, &mut scratch);
+    }
+
+    #[test]
+    fn apply_multi_matches_per_column_apply() {
+        let (n, m) = (64usize, 24usize);
+        let op = dct_op(n, m, 23);
+        let dense = densify(&op);
+        for wrapped in [Operator::SubsampledDct(op), Operator::Dense(dense)] {
+            let ncols = 3usize;
+            let x_panel: Vec<f64> = (0..ncols * n).map(|i| (i as f64 * 0.17).sin()).collect();
+            let mut scratch = wrapped.make_scratch();
+            let mut out_panel = vec![0.0; ncols * m];
+            wrapped.apply_multi_into(&x_panel, &mut scratch, &mut out_panel);
+            for c in 0..ncols {
+                let mut want = vec![0.0; m];
+                wrapped.apply_into(&x_panel[c * n..(c + 1) * n], &mut scratch, &mut want);
+                for i in 0..m {
+                    assert_eq!(
+                        out_panel[c * m + i].to_bits(),
+                        want[i].to_bits(),
+                        "{}: col {c} row {i}",
+                        wrapped.name()
+                    );
+                }
             }
         }
     }

@@ -28,7 +28,7 @@ pub mod sparse;
 pub use cgls::{cgls, CglsResult};
 pub use dense::{axpy, dist2, dot, nrm2, scale, sub, Mat, RowBlock};
 pub use fft::{DctPlan, DctScratch};
-pub use measure::{DenseOp, MeasureOp, OpScratch, Operator, SubsampledDctOp};
+pub use measure::{DenseOp, MeasureOp, OpScratch, Operator, ProxyCol, SubsampledDctOp};
 pub use qr::{lstsq, Qr};
 pub use scalar::Scalar;
 pub use sparse::SparseIterate;

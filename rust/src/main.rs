@@ -15,6 +15,8 @@
 //! astir run --alg stoiht --backend pjrt
 //! astir async --cores 8              # real-thread asynchronous StoIHT
 //! astir async --alg stogradmp        # ... or any other SupportKernel
+//! astir batch --jobs 32 --workers 8  # persistent recovery pool, shared operator
+//! astir batch --batch 8              # MMV lockstep: 8 signals/job, shared tally
 //! astir run --alg stoiht --ensemble partial_dct --no-dense-a --n 1048576 --m 327680 --b 16
 //! astir fig2 --alg stogradmp --schedule half-slow --period 6
 //! astir info                         # artifact + config introspection
@@ -38,6 +40,7 @@ use astir::experiments::{self, Fig2Variant};
 use astir::report;
 use astir::rng::Rng;
 use astir::runtime::ArtifactStore;
+use astir::service::{recover_batch_stoiht, solve_job, RecoveryPool};
 use astir::sim::SpeedSchedule;
 
 fn main() -> ExitCode {
@@ -179,6 +182,22 @@ fn run(args: Vec<String>) -> Result<(), String> {
             let schedule = take_schedule(&mut flags)?;
             flags.finish()?;
             run_async_cmd(&cfg, cores, &schedule)?;
+        }
+        "batch" => {
+            let mut cfg = cfg;
+            apply_alg_flag(&mut cfg, &mut flags)?;
+            if let Some(v) = flags.take("jobs")? {
+                cfg.service.jobs = v.parse().map_err(|e| format!("--jobs: {e}"))?;
+            }
+            if let Some(v) = flags.take("workers")? {
+                cfg.service.workers = v.parse().map_err(|e| format!("--workers: {e}"))?;
+            }
+            if let Some(v) = flags.take("batch")? {
+                cfg.service.batch = v.parse().map_err(|e| format!("--batch: {e}"))?;
+            }
+            cfg.validate()?;
+            flags.finish()?;
+            run_batch_cmd(&cfg)?;
         }
         "info" => {
             flags.finish()?;
@@ -609,6 +628,102 @@ fn run_async_cmd(
     Ok(())
 }
 
+/// `astir batch` — the recovery service: one shared operator, a persistent
+/// worker pool, many single-signal or MMV-batched recovery jobs.
+fn run_batch_cmd(cfg: &ExperimentConfig) -> Result<(), String> {
+    let svc = &cfg.service;
+    if svc.batch > 1 && cfg.alg != Alg::Stoiht {
+        return Err(
+            "--batch > 1 drives the lockstep batched StoIHT path; use --alg stoiht \
+             (or --batch 1 for per-signal stogradmp jobs)"
+                .into(),
+        );
+    }
+    let (jobs, batch) = (svc.jobs, svc.batch);
+    println!(
+        "recovery service: {jobs} job(s) x {batch} signal(s), {} pool worker(s), alg {}",
+        svc.workers,
+        cfg.alg.as_str()
+    );
+    println!(
+        "problem: n={} m={} b={} s={} ensemble={:?} dense_a={}",
+        cfg.problem.n, cfg.problem.m, cfg.problem.b, cfg.problem.s,
+        cfg.problem.ensemble, cfg.problem.dense_a
+    );
+
+    // One operator for the whole run — the expensive, shareable part of
+    // every job's setup (matrix materialization / transform planning).
+    let mut rng = Rng::seed_from(cfg.seed);
+    let t_setup = std::time::Instant::now();
+    let op = cfg.problem.draw_operator(&mut rng);
+    let problems: Vec<Vec<astir::problem::Problem>> = (0..jobs)
+        .map(|_| {
+            if batch == 1 {
+                vec![cfg.problem.generate_with_op(&op, &mut rng)]
+            } else {
+                cfg.problem.generate_mmv_with_op(&op, &mut rng, batch)
+            }
+        })
+        .collect();
+    println!(
+        "setup: operator drawn once + {} signal(s) generated in {:.1?} (operator shared by Arc)",
+        jobs * batch,
+        t_setup.elapsed()
+    );
+
+    let pool = RecoveryPool::new(svc.workers);
+    let opts = AsyncOpts {
+        gamma: cfg.gamma,
+        tolerance: cfg.tolerance,
+        max_local_iters: cfg.max_iters,
+        ..Default::default()
+    };
+    let alg = cfg.alg;
+    let problems = std::sync::Arc::new(problems);
+    let job_problems = std::sync::Arc::clone(&problems);
+    let job_opts = opts.clone();
+    let t0 = std::time::Instant::now();
+    // (converged signals, lockstep steps / iters, worst residual) per job.
+    let per_job: Vec<(usize, u64, f64)> =
+        pool.run_jobs(jobs, cfg.seed ^ 0xBA7C4, move |i, rng| {
+            let seed = rng.next_u64();
+            let job = &job_problems[i];
+            if job.len() == 1 {
+                let out = solve_job(&job[0], alg, &job_opts, seed);
+                (out.converged as usize, out.iters, out.residual)
+            } else {
+                let out = recover_batch_stoiht(job, &job_opts, seed);
+                let conv = out.signals.iter().filter(|s| s.converged).count();
+                let worst =
+                    out.signals.iter().map(|s| s.residual).fold(f64::NEG_INFINITY, f64::max);
+                (conv, out.steps, worst)
+            }
+        });
+    let wall = t0.elapsed();
+    let signals = jobs * batch;
+    let converged: usize = per_job.iter().map(|j| j.0).sum();
+    let mean_steps =
+        per_job.iter().map(|j| j.1 as f64).sum::<f64>() / per_job.len().max(1) as f64;
+    let worst = per_job.iter().map(|j| j.2).fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "served {signals} signal(s) in {:.1?}: {converged}/{signals} converged, \
+         {:.1} signals/s, mean {:.0} steps/job, worst residual {:.3e}",
+        wall,
+        signals as f64 / wall.as_secs_f64().max(1e-9),
+        mean_steps,
+        worst
+    );
+    if converged < signals {
+        return Err(format!(
+            "{} signal(s) did not reach tolerance {:.0e} within {} iterations",
+            signals - converged,
+            cfg.tolerance,
+            cfg.max_iters
+        ));
+    }
+    Ok(())
+}
+
 fn print_info(cfg: &ExperimentConfig) {
     println!("astir {} — asynchronous sparse recovery (Needell & Woolf 2017)", astir::VERSION);
     println!("\n[config]");
@@ -620,6 +735,10 @@ fn print_info(cfg: &ExperimentConfig) {
     println!(
         "gamma={} tol={} max_iters={} trials={} seed={} cores={:?} trial_threads={}",
         cfg.gamma, cfg.tolerance, cfg.max_iters, cfg.trials, cfg.seed, cfg.cores, cfg.trial_threads
+    );
+    println!(
+        "service: workers={} jobs={} batch={}",
+        cfg.service.workers, cfg.service.jobs, cfg.service.batch
     );
     println!("\n[artifacts] ({})", ArtifactStore::default_dir().display());
     match ArtifactStore::discover(&ArtifactStore::default_dir()) {
@@ -656,6 +775,8 @@ COMMANDS
   run --alg X --backend Y      one solve (alg: stoiht|iht|omp|cosamp|stogradmp;
                                backend: native|pjrt)
   async --cores N              real-thread asynchronous solve (StoIHT default)
+  batch                        recovery service: persistent worker pool serving
+                               many jobs against ONE shared operator
   info                         show config + discovered AOT artifacts
 
 COMMON FLAGS
@@ -678,6 +799,17 @@ ASYNC / FIG2 FLAGS
   --alg stoiht|stogradmp  which SupportKernel the async layers drive
   --schedule NAME         all-fast | half-slow
   --period K              slow-core period for half-slow (default 4)
+
+BATCH FLAGS (astir batch; TOML [service] section: workers/jobs/batch)
+  --jobs N             recovery jobs to serve (default 16)
+  --workers N          persistent pool threads, spawned once (default: cores)
+  --batch B            signals per job, recovered in MMV lockstep through one
+                       multi-RHS proxy + a tally SHARED across the batch
+                       (B > 1 is StoIHT-only; signals share the operator and,
+                       per job, the planted support)
+                       e.g.  astir batch --jobs 16 --workers 8 --batch 8 \
+                             --ensemble partial_dct --no-dense-a --n 131072 \
+                             --m 4096 --b 512 --s 16
 
 BENCH FLAGS (astir bench)
   --filter substr      run only benches whose suite/name contains substr

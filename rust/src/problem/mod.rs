@@ -20,6 +20,8 @@
 //! standard choice under which `gamma = 1` StoIHT converges as in Fig. 1.
 //! Alternatives are exposed for ablations.
 
+use std::sync::Arc;
+
 use crate::linalg::{nrm2, DenseOp, Mat, MeasureOp, OpScratch, Operator, RowBlock, SubsampledDctOp};
 use crate::rng::Rng;
 
@@ -183,16 +185,88 @@ impl ProblemSpec {
 
     /// Draw a problem instance.
     pub fn generate(&self, rng: &mut Rng) -> Problem {
+        let op = self.draw_operator(rng);
+        self.generate_with_op(&op, rng)
+    }
+
+    /// Draw only the measurement operator (shared-`Arc` form) — the
+    /// expensive, **shareable** part of problem setup. The recovery service
+    /// draws one operator and serves many signals against it
+    /// ([`ProblemSpec::generate_with_op`] /
+    /// [`ProblemSpec::generate_mmv_with_op`]) without re-materializing the
+    /// matrix or re-planning the transform per job.
+    pub fn draw_operator(&self, rng: &mut Rng) -> Arc<Operator> {
         self.validate().expect("invalid ProblemSpec");
-        let op = self.gen_operator(rng);
+        Arc::new(self.gen_operator(rng))
+    }
+
+    /// Draw one signal + measurements against an existing operator (shared
+    /// by reference count, never copied). `generate` is exactly
+    /// `draw_operator` followed by this, so the combined RNG stream is
+    /// unchanged.
+    pub fn generate_with_op(&self, op: &Arc<Operator>, rng: &mut Rng) -> Problem {
+        self.validate().expect("invalid ProblemSpec");
+        assert_eq!(op.rows(), self.m, "operator rows != spec.m");
+        assert_eq!(op.cols(), self.n, "operator cols != spec.n");
         let (x_true, supp) = self.gen_signal(rng);
-        let mut y = op.apply(&x_true);
+        let y = self.measure(op, &x_true, rng);
+        Problem { spec: self.clone(), op: Arc::clone(op), x_true, support: supp, y }
+    }
+
+    /// Draw `batch` MMV-style signals sharing one operator **and one
+    /// support** (the classic multiple-measurement-vector model): the
+    /// support is drawn once, then all per-signal coefficients, then all
+    /// per-signal noise. Measurement is ONE multi-RHS panel apply
+    /// ([`MeasureOp::apply_multi_into`] — per column bit-identical to the
+    /// single apply), so the whole batch shares one operator workspace.
+    /// The batched recovery path exploits the shared support through the
+    /// shared tally (every signal's votes sharpen every other's estimate).
+    pub fn generate_mmv_with_op(
+        &self,
+        op: &Arc<Operator>,
+        rng: &mut Rng,
+        batch: usize,
+    ) -> Vec<Problem> {
+        self.validate().expect("invalid ProblemSpec");
+        assert!(batch >= 1, "batch must be positive");
+        assert_eq!(op.rows(), self.m, "operator rows != spec.m");
+        assert_eq!(op.cols(), self.n, "operator cols != spec.n");
+        let mut supp = rng.subset(self.n, self.s);
+        supp.sort_unstable();
+        let xs: Vec<Vec<f64>> = (0..batch).map(|_| self.gen_coeffs(&supp, rng)).collect();
+        let x_panel: Vec<f64> = xs.concat();
+        let mut y_panel = vec![0.0; batch * self.m];
+        let mut scratch = op.make_scratch();
+        op.apply_multi_into(&x_panel, &mut scratch, &mut y_panel);
+        xs.into_iter()
+            .enumerate()
+            .map(|(c, x_true)| {
+                let mut y = y_panel[c * self.m..(c + 1) * self.m].to_vec();
+                if self.noise_std > 0.0 {
+                    for v in y.iter_mut() {
+                        *v += self.noise_std * rng.gauss();
+                    }
+                }
+                Problem {
+                    spec: self.clone(),
+                    op: Arc::clone(op),
+                    x_true,
+                    support: supp.clone(),
+                    y,
+                }
+            })
+            .collect()
+    }
+
+    /// `y = A x (+ z)` for a freshly drawn signal.
+    fn measure(&self, op: &Operator, x_true: &[f64], rng: &mut Rng) -> Vec<f64> {
+        let mut y = op.apply(x_true);
         if self.noise_std > 0.0 {
             for v in y.iter_mut() {
                 *v += self.noise_std * rng.gauss();
             }
         }
-        Problem { spec: self.clone(), op, x_true, support: supp, y }
+        y
     }
 
     /// Draw the measurement operator, consuming the identical RNG stream in
@@ -238,6 +312,13 @@ impl ProblemSpec {
     fn gen_signal(&self, rng: &mut Rng) -> (Vec<f64>, Vec<usize>) {
         let mut supp = rng.subset(self.n, self.s);
         supp.sort_unstable();
+        let x = self.gen_coeffs(&supp, rng);
+        (x, supp)
+    }
+
+    /// Coefficients on a fixed (sorted) support — shared by the
+    /// single-signal and MMV draws.
+    fn gen_coeffs(&self, supp: &[usize], rng: &mut Rng) -> Vec<f64> {
         let mut x = vec![0.0f64; self.n];
         for (k, &i) in supp.iter().enumerate() {
             x[i] = match self.signal {
@@ -246,7 +327,7 @@ impl ProblemSpec {
                 SignalModel::LinearDecay => rng.sign() * (self.s - k) as f64 / self.s as f64,
             };
         }
-        (x, supp)
+        x
     }
 }
 
@@ -257,8 +338,11 @@ pub struct Problem {
     /// The measurement operator: materialized matrix + transpose (dense) or
     /// matrix-free subsampled DCT. All solver arithmetic routes through
     /// this; dense-only consumers reach the matrices via [`Problem::a`] /
-    /// [`Problem::a_t`].
-    pub op: Operator,
+    /// [`Problem::a_t`]. Held behind an `Arc` so many problems (a batch of
+    /// MMV signals, a queue of service jobs) share **one** operator — the
+    /// recovery pool never re-materializes the matrix or re-plans the
+    /// transform per job.
+    pub op: Arc<Operator>,
     /// Planted `s`-sparse signal.
     pub x_true: Vec<f64>,
     /// Sorted support of `x_true`.
@@ -272,8 +356,14 @@ impl Problem {
     /// Derives the support and the transposed copy (dense operator).
     pub fn from_parts(spec: ProblemSpec, a: Mat<f64>, x_true: Vec<f64>, y: Vec<f64>) -> Problem {
         let support = crate::support::support_of(&x_true);
-        let op = Operator::Dense(DenseOp::new(a));
+        let op = Arc::new(Operator::Dense(DenseOp::new(a)));
         Problem { spec, op, x_true, support, y }
+    }
+
+    /// Does this problem share its operator with `other` (same allocation,
+    /// not merely equal entries)? Batched recovery requires it.
+    pub fn shares_operator_with(&self, other: &Problem) -> bool {
+        Arc::ptr_eq(&self.op, &other.op)
     }
 
     /// The dense operator, for code paths that genuinely need materialized
@@ -518,7 +608,7 @@ mod tests {
         let pf = free_spec.generate(&mut Rng::seed_from(42));
         assert_eq!(pd.x_true, pf.x_true);
         assert_eq!(pd.support, pf.support);
-        let Operator::SubsampledDct(op) = &pf.op else { panic!("expected matrix-free operator") };
+        let Operator::SubsampledDct(op) = &*pf.op else { panic!("expected matrix-free operator") };
         for i in 0..pd.spec.m {
             for j in 0..pd.spec.n {
                 assert_eq!(
@@ -545,6 +635,56 @@ mod tests {
         };
         let p = sp.generate(&mut Rng::seed_from(7));
         let _ = p.a();
+    }
+
+    #[test]
+    fn generate_equals_draw_operator_then_generate_with_op() {
+        // `generate` is draw_operator + generate_with_op on one RNG stream.
+        let spec = ProblemSpec::tiny();
+        let whole = spec.generate(&mut Rng::seed_from(77));
+        let mut rng = Rng::seed_from(77);
+        let op = spec.draw_operator(&mut rng);
+        let split = spec.generate_with_op(&op, &mut rng);
+        assert_eq!(whole.x_true, split.x_true);
+        assert_eq!(whole.support, split.support);
+        assert_eq!(whole.y, split.y);
+        assert_eq!(whole.a().data(), split.a().data());
+    }
+
+    #[test]
+    fn signals_on_one_operator_share_the_allocation() {
+        let spec = ProblemSpec::tiny();
+        let mut rng = Rng::seed_from(78);
+        let op = spec.draw_operator(&mut rng);
+        let a = spec.generate_with_op(&op, &mut rng);
+        let b = spec.generate_with_op(&op, &mut rng);
+        assert!(a.shares_operator_with(&b));
+        assert_ne!(a.x_true, b.x_true, "independent signal draws");
+        // Each signal satisfies its own measurements.
+        assert!(a.residual_norm(&a.x_true) < 1e-10);
+        assert!(b.residual_norm(&b.x_true) < 1e-10);
+        // Fresh generation does not share.
+        let c = spec.generate(&mut rng);
+        assert!(!a.shares_operator_with(&c));
+    }
+
+    #[test]
+    fn mmv_batch_shares_support_and_operator() {
+        let spec = ProblemSpec { noise_std: 0.01, ..ProblemSpec::tiny() };
+        let mut rng = Rng::seed_from(79);
+        let op = spec.draw_operator(&mut rng);
+        let batch = spec.generate_mmv_with_op(&op, &mut rng, 4);
+        assert_eq!(batch.len(), 4);
+        for p in &batch {
+            assert!(p.shares_operator_with(&batch[0]));
+            assert_eq!(p.support, batch[0].support, "MMV signals share one support");
+            let nnz = p.x_true.iter().filter(|&&v| v != 0.0).count();
+            assert_eq!(nnz, spec.s);
+            // Noisy measurements still close to consistent.
+            assert!(p.residual_norm(&p.x_true) < 1.0);
+        }
+        assert_ne!(batch[0].x_true, batch[1].x_true, "coefficients differ per signal");
+        assert_ne!(batch[0].y, batch[1].y);
     }
 
     #[test]

@@ -1,0 +1,633 @@
+//! Persistent recovery service: a long-lived worker pool plus batched
+//! multi-signal (MMV-style) recovery.
+//!
+//! The paper's asynchronous architecture amortizes one shared-memory
+//! support tally across many cheap worker updates; the asynchronous
+//! shared-memory literature it builds on (Liu & Wright's async coordinate
+//! descent, Duchi et al.'s async stochastic optimization — see PAPERS.md)
+//! gets its speedups precisely because **workers persist** and the per-job
+//! cost is dominated by arithmetic, not setup. This module applies the
+//! same discipline to serving recovery traffic:
+//!
+//! * [`RecoveryPool`] — OS threads spawned **once** and fed through a
+//!   lock-light job queue (one mutex/condvar pair for sleeping and batch
+//!   hand-off; job claims are an atomic ticket, results commit into
+//!   preallocated [`crate::coordinator`] slots without a lock). Per-job
+//!   RNG splitting is deterministic exactly like `coordinator::run_trials`
+//!   — job `i` derives from the master seed and `i` only — so pool output
+//!   is bit-identical at any worker count.
+//! * [`solve_job`] / [`solve_job_with`] — one single-signal recovery run
+//!   inline on the calling (pool) thread, through the **same**
+//!   `drive_worker` loop body as the real-thread runtime: a pool job's
+//!   result is bit-for-bit what `run_async_with(problem, 1, …)` returns,
+//!   minus the thread spawn (pinned by `rust/tests/service_pool.rs`).
+//! * [`recover_batch_stoiht`] — lockstep batched recovery of `B` signals
+//!   sharing one operator (`Problem::shares_operator_with`): each time
+//!   step samples **one** block and performs **one** multi-RHS fused
+//!   proxy call ([`crate::linalg::MeasureOp::block_proxy_step_sparse_multi`]),
+//!   and every signal votes its `Γ` into a **shared** tally whose estimate
+//!   feeds back into all of them — the paper's Algorithm 2 with "cores"
+//!   played by signals. For MMV batches (shared true support, see
+//!   [`crate::problem::ProblemSpec::generate_mmv_with_op`]) the tally
+//!   concentrates `B`× faster, so per-signal iterations drop just as
+//!   Fig. 2's steps-to-exit drop with cores — which is why the batched
+//!   path beats a sequential per-signal loop on jobs/sec (measured by the
+//!   `throughput` bench suite).
+//!
+//! Operator setup is the expensive, shareable part of a job (a
+//! materialized matrix, or the subsampled-DCT plan at `n = 2^17+`):
+//! problems carry `Arc<Operator>`, so a pool full of jobs and a batch full
+//! of signals all run against one allocation.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::algorithms::{Alg, StoGradMpKernel, StoihtKernel, SupportKernel};
+use crate::async_runtime::{drive_worker, AsyncOpts};
+use crate::coordinator::{split_rngs, ResultSlots};
+use crate::linalg::{MeasureOp, ProxyCol, SparseIterate};
+use crate::problem::Problem;
+use crate::rng::Rng;
+use crate::support::{top_s_into, union_into};
+use crate::tally::{positive_top_s_into, AtomicTally, LocalTally};
+
+// ------------------------------------------------------------------- pool
+
+/// A batch of queued jobs, type-erased so the long-lived workers need no
+/// knowledge of the result type. Indices are claimed by an atomic ticket;
+/// the last completion (release/acquire counter) retires the batch.
+trait JobSet: Send + Sync {
+    fn len(&self) -> usize;
+    /// Claim the next unclaimed job index, if any.
+    fn claim(&self) -> Option<usize>;
+    /// Execute job `i` (the exclusive owner of slot `i`).
+    fn run(&self, i: usize);
+    /// Mark one job finished; `true` when it was the last of the batch.
+    fn finish_one(&self) -> bool;
+}
+
+/// The typed job batch: a shared closure, pre-split per-job RNGs, and
+/// lock-free result slots.
+struct TypedJobs<T, F> {
+    f: F,
+    rngs: Vec<Rng>,
+    slots: ResultSlots<T>,
+    next: AtomicUsize,
+    pending: AtomicUsize,
+    /// First job panic, kept whole (index + original payload) so the
+    /// submitter can re-raise it with the diagnostics the scoped-thread
+    /// path used to propagate.
+    panic: Mutex<Option<(usize, Box<dyn std::any::Any + Send>)>>,
+}
+
+impl<T, F> JobSet for TypedJobs<T, F>
+where
+    T: Send + 'static,
+    F: Fn(usize, &mut Rng) -> T + Send + Sync + 'static,
+{
+    fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn claim(&self) -> Option<usize> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed);
+        (i < self.len()).then_some(i)
+    }
+
+    fn run(&self, i: usize) {
+        // A panicking job must not strand the submitter: catch the unwind
+        // here, keep the payload, and let run_jobs re-raise it.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = self.rngs[i].clone();
+            (self.f)(i, &mut rng)
+        }));
+        match result {
+            // SAFETY: index i was claimed exclusively by the atomic ticket
+            // in `claim`; the submitter reads only after the completion
+            // hand-off below.
+            Ok(v) => unsafe { self.slots.put(i, v) },
+            Err(payload) => {
+                let mut guard = self.panic.lock().unwrap();
+                if guard.is_none() {
+                    *guard = Some((i, payload));
+                }
+            }
+        }
+    }
+
+    fn finish_one(&self) -> bool {
+        // AcqRel: the last decrement acquires every earlier worker's slot
+        // writes, so the mutex hand-off to the submitter publishes them.
+        self.pending.fetch_sub(1, Ordering::AcqRel) == 1
+    }
+}
+
+/// Queue state guarded by the pool mutex (held only to sleep, install a
+/// batch, or retire one — never while running a job).
+struct PoolState {
+    batch: Option<Arc<dyn JobSet>>,
+    /// Monotone count of installed batches.
+    epoch: u64,
+    /// Highest epoch whose batch has fully completed.
+    completed: u64,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers sleep here between batches.
+    work_cv: Condvar,
+    /// Submitters sleep here until their batch completes (or the queue
+    /// frees up for the next batch).
+    done_cv: Condvar,
+}
+
+/// A persistent recovery worker pool: threads are spawned once at
+/// construction and serve every subsequent [`RecoveryPool::run_jobs`]
+/// batch, so steady-state job cost is solver arithmetic — no thread
+/// spawn, no operator re-materialization (jobs share `Arc`ed problems),
+/// no per-trial result lock.
+pub struct RecoveryPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl RecoveryPool {
+    /// Spawn `workers` persistent threads (>= 1).
+    pub fn new(workers: usize) -> Self {
+        assert!(workers >= 1, "RecoveryPool needs at least one worker");
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                batch: None,
+                epoch: 0,
+                completed: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("astir-pool-{w}"))
+                    .spawn(move || worker_main(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        RecoveryPool { shared, handles }
+    }
+
+    /// Number of persistent workers.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run `jobs` independent jobs on the pool and return their results in
+    /// job order. Job `i` receives an RNG derived from `master_seed` and
+    /// `i` only (the `run_trials` scheme), so the output is bit-identical
+    /// at any worker count. Blocks until the batch completes; concurrent
+    /// submitters queue up FIFO-ish behind the pool mutex.
+    pub fn run_jobs<T, F>(&self, jobs: usize, master_seed: u64, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize, &mut Rng) -> T + Send + Sync + 'static,
+    {
+        if jobs == 0 {
+            return Vec::new();
+        }
+        let set = Arc::new(TypedJobs {
+            f,
+            rngs: split_rngs(master_seed, jobs),
+            slots: ResultSlots::new(jobs),
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(jobs),
+            panic: Mutex::new(None),
+        });
+        let my_epoch;
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.batch.is_some() {
+                // Another submitter's batch is in flight; wait for retire.
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.epoch += 1;
+            my_epoch = st.epoch;
+            st.batch = Some(Arc::clone(&set) as Arc<dyn JobSet>);
+            self.shared.work_cv.notify_all();
+        }
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.completed < my_epoch {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+        }
+        if let Some((i, payload)) = set.panic.lock().unwrap().take() {
+            // Re-raise the original payload so the caller sees the real
+            // assertion message, with the job index on stderr for context.
+            eprintln!("recovery pool job {i} panicked; re-raising its payload");
+            std::panic::resume_unwind(payload);
+        }
+        // SAFETY: batch completion was observed under the mutex after the
+        // last worker's AcqRel decrement, so every slot write
+        // happens-before these takes, and this submitter is the only
+        // reader of this batch's slots.
+        (0..jobs)
+            .map(|i| unsafe { set.slots.take(i) }.expect("pool job produced no result"))
+            .collect()
+    }
+}
+
+impl Drop for RecoveryPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The persistent worker loop: sleep until a fresh batch epoch appears,
+/// drain claims from it, retire the batch on the last completion.
+fn worker_main(shared: &PoolShared) {
+    let mut last_epoch = 0u64;
+    loop {
+        let set: Arc<dyn JobSet> = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch > last_epoch {
+                    // A batch was installed since we last looked; it may
+                    // already be gone (retired by faster workers).
+                    last_epoch = st.epoch;
+                    if let Some(b) = &st.batch {
+                        break Arc::clone(b);
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        while let Some(i) = set.claim() {
+            set.run(i);
+            if set.finish_one() {
+                let mut st = shared.state.lock().unwrap();
+                st.batch = None;
+                st.completed = st.completed.max(last_epoch);
+                shared.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------- single-signal job
+
+/// Outcome of one pool recovery job (or one signal of a batch).
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    /// Whether the tolerance was met within the iteration cap.
+    pub converged: bool,
+    /// Local iterations completed.
+    pub iters: u64,
+    /// Final `‖y − A x‖₂` (the winning check's value when converged, the
+    /// final iterate's residual otherwise).
+    pub residual: f64,
+    /// `‖x − x_true‖₂`.
+    pub final_error: f64,
+    /// The recovered iterate.
+    pub x: Vec<f64>,
+    /// Wallclock for this job's solve loop.
+    pub wall: Duration,
+}
+
+/// Solve one problem inline on the calling thread through the identical
+/// worker loop as `run_async_with(problem, 1, opts, seed, make_step)` —
+/// same RNG derivation (`Rng::seed_from(seed).split(0)`), same tally
+/// protocol, same exit check — so a converged pool job is bit-for-bit the
+/// spawn-per-call single-worker result. (Non-converged runs additionally
+/// report the final iterate's actual residual/error where the runtime
+/// reports NaN.)
+pub fn solve_job_with<'p, K, F>(
+    problem: &'p Problem,
+    opts: &AsyncOpts,
+    seed: u64,
+    make_step: F,
+) -> JobOutcome
+where
+    K: SupportKernel + 'p,
+    F: FnOnce(&'p Problem) -> K,
+{
+    let spec = &problem.spec;
+    let period = opts.schedule.periods(1)[0];
+    let tally = AtomicTally::new(spec.n, opts.weighting);
+    let stop = AtomicBool::new(false);
+    let counter = AtomicU64::new(0);
+    let mut seed_root = Rng::seed_from(seed);
+    let mut rng = seed_root.split(0);
+    let start = Instant::now();
+    let mut step = make_step(problem);
+    let mut x = SparseIterate::zeros(spec.n);
+    let won = drive_worker(
+        &mut step, &mut x, spec.s, opts, period, &mut rng, &tally, &stop, &counter,
+    );
+    let wall = start.elapsed();
+    let iters = counter.load(Ordering::Relaxed);
+    let (converged, residual) = match won {
+        Some(r) => (true, r),
+        None => (false, problem.residual_norm(x.values())),
+    };
+    let final_error = problem.recovery_error(x.values());
+    JobOutcome { converged, iters, residual, final_error, x: x.into_values(), wall }
+}
+
+/// [`solve_job_with`] dispatched over the config-level algorithm selector,
+/// matching the CLI's `astir async` kernel factories.
+pub fn solve_job(problem: &Problem, alg: Alg, opts: &AsyncOpts, seed: u64) -> JobOutcome {
+    match alg {
+        Alg::Stoiht => solve_job_with(problem, opts, seed, |p| StoihtKernel::new(p, opts.gamma)),
+        Alg::StoGradMp => solve_job_with(problem, opts, seed, StoGradMpKernel::new),
+    }
+}
+
+// ---------------------------------------------------------- batched (MMV)
+
+/// Outcome of one lockstep batched recovery.
+#[derive(Clone, Debug)]
+pub struct BatchOutcome {
+    /// Per-signal outcomes (`iters` = the lockstep time step the signal
+    /// exited at; `wall` = the whole batch's wallclock, shared).
+    pub signals: Vec<JobOutcome>,
+    /// Lockstep time steps executed (max over signals).
+    pub steps: u64,
+    /// Wallclock for the whole batch.
+    pub wall: Duration,
+}
+
+impl BatchOutcome {
+    /// Did every signal meet the tolerance?
+    pub fn all_converged(&self) -> bool {
+        self.signals.iter().all(|s| s.converged)
+    }
+}
+
+/// Lockstep batched StoIHT over `B` signals sharing one operator.
+///
+/// Each time step samples **one** measurement block and performs **one**
+/// multi-RHS fused proxy call for all still-active signals; each signal
+/// then identifies its own `Γ` (per-column arithmetic bit-identical to
+/// `StoihtKernel::step_sparse`, given the same iterate/estimate/block) and
+/// votes it into a tally **shared across the batch**, whose `supp_s`
+/// estimate feeds every signal's next estimate phase — Algorithm 2 with
+/// signals in the role of cores. Converged signals drop out of the
+/// lockstep (their standing votes remain: for MMV batches they are
+/// correct information about the shared support).
+pub fn recover_batch_stoiht(problems: &[Problem], opts: &AsyncOpts, seed: u64) -> BatchOutcome {
+    assert!(!problems.is_empty(), "recover_batch_stoiht: empty batch");
+    let base = &problems[0];
+    let spec = &base.spec;
+    for p in problems {
+        assert!(
+            p.shares_operator_with(base),
+            "recover_batch_stoiht: all signals must share one operator (Arc)"
+        );
+        assert_eq!(p.spec.n, spec.n, "batch dimension mismatch");
+        assert_eq!(p.spec.m, spec.m, "batch measurement-count mismatch");
+        assert_eq!(p.spec.b, spec.b, "batch block size mismatch");
+        assert_eq!(p.spec.s, spec.s, "batch sparsity mismatch");
+    }
+    let batch = problems.len();
+    let mb = spec.num_blocks();
+    // Exactly StoihtKernel::with_probs' uniform alpha, so per-column bits
+    // match a solo kernel's step.
+    let probs = vec![1.0 / mb as f64; mb];
+    let alpha = opts.gamma / (mb as f64 * probs[0]);
+    let mut seed_root = Rng::seed_from(seed);
+    let mut rng = seed_root.split(0);
+    let start = Instant::now();
+
+    // Per-signal state (parallel vectors so the lockstep borrow splits).
+    let mut xs: Vec<SparseIterate<f64>> =
+        (0..batch).map(|_| SparseIterate::zeros(spec.n)).collect();
+    let mut outs: Vec<Vec<f64>> = vec![vec![0.0; spec.n]; batch];
+    let mut resids: Vec<Vec<f64>> = vec![vec![0.0; spec.b]; batch];
+    let mut prevs: Vec<Vec<usize>> = vec![Vec::new(); batch];
+    let mut done: Vec<bool> = vec![false; batch];
+    let mut iters: Vec<u64> = vec![0; batch];
+    let mut residuals: Vec<f64> = vec![f64::NAN; batch];
+    // Shared state + scratch.
+    let mut tally = LocalTally::new(spec.n, opts.weighting);
+    let mut op_scratch = base.op.make_scratch();
+    let mut estimate: Vec<usize> = Vec::new();
+    let mut idx_scratch: Vec<usize> = Vec::new();
+    let mut gamma_set: Vec<usize> = vec![0; spec.s.min(spec.n)];
+    let mut union_scratch: Vec<usize> = Vec::new();
+    let mut r_scratch: Vec<f64> = Vec::new();
+    let mut active_idx: Vec<usize> = Vec::with_capacity(batch);
+    let mut steps = 0u64;
+
+    for t in 1..=opts.max_local_iters as u64 {
+        if done.iter().all(|&d| d) {
+            break;
+        }
+        steps = t;
+        // read: the shared estimate T̃ = supp_s(φ).
+        positive_top_s_into(tally.votes(), spec.s, &mut estimate);
+        let block = rng.categorical(&probs);
+        let row0 = block * spec.b;
+        // One fused multi-RHS proxy over the active columns.
+        active_idx.clear();
+        {
+            let mut cols: Vec<ProxyCol<'_>> = Vec::with_capacity(batch);
+            for (((c, out), resid), x) in
+                outs.iter_mut().enumerate().zip(resids.iter_mut()).zip(xs.iter())
+            {
+                if done[c] {
+                    continue;
+                }
+                active_idx.push(c);
+                cols.push(ProxyCol {
+                    y_b: problems[c].y_block(block),
+                    x: x.values(),
+                    support: x.support(),
+                    resid: &mut resid[..],
+                    out: &mut out[..],
+                });
+            }
+            base.op.block_proxy_step_sparse_multi(row0, &mut cols, alpha, &mut op_scratch);
+        }
+        // Per-signal identify / estimate / vote.
+        for &c in &active_idx {
+            top_s_into(&outs[c], spec.s, &mut idx_scratch, &mut gamma_set);
+            if estimate.is_empty() {
+                xs[c].assign_from(&outs[c], &gamma_set);
+            } else {
+                union_into(&gamma_set, &estimate, &mut union_scratch);
+                xs[c].assign_from(&outs[c], &union_scratch);
+            }
+            tally.commit(&gamma_set, &prevs[c], t);
+            prevs[c].clear();
+            prevs[c].extend_from_slice(&gamma_set);
+            iters[c] = t;
+        }
+        // Exit checks (per signal, same halting statistic as the solo run).
+        if t as usize % opts.check_every == 0 {
+            for &c in &active_idx {
+                let r = problems[c].residual_norm_sparse_with(
+                    xs[c].values(),
+                    xs[c].support(),
+                    &mut r_scratch,
+                    &mut op_scratch,
+                );
+                if r < opts.tolerance {
+                    done[c] = true;
+                    residuals[c] = r;
+                }
+            }
+        }
+    }
+    let wall = start.elapsed();
+    let signals = (0..batch)
+        .map(|c| {
+            let residual = if done[c] {
+                residuals[c]
+            } else {
+                problems[c].residual_norm(xs[c].values())
+            };
+            JobOutcome {
+                converged: done[c],
+                iters: iters[c],
+                residual,
+                final_error: problems[c].recovery_error(xs[c].values()),
+                x: xs[c].to_dense(),
+                wall,
+            }
+        })
+        .collect();
+    BatchOutcome { signals, steps, wall }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problem::ProblemSpec;
+
+    fn easy(seed: u64) -> Problem {
+        ProblemSpec { n: 128, m: 64, b: 8, s: 4, ..ProblemSpec::tiny() }
+            .generate(&mut Rng::seed_from(seed))
+    }
+
+    #[test]
+    fn pool_runs_jobs_in_order_and_reuses_threads() {
+        let pool = RecoveryPool::new(3);
+        assert_eq!(pool.workers(), 3);
+        for round in 0..4u64 {
+            let out = pool.run_jobs(10, round, move |i, _rng| i * 2 + round as usize);
+            assert_eq!(out, (0..10).map(|i| i * 2 + round as usize).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn pool_matches_run_trials_bitwise() {
+        // The pool's RNG splitting is the run_trials scheme exactly.
+        let pool = RecoveryPool::new(4);
+        let from_pool: Vec<u64> = pool.run_jobs(12, 99, |_i, rng| rng.next_u64());
+        let from_trials: Vec<u64> =
+            crate::coordinator::run_trials(12, 5, 99, |_i, rng| rng.next_u64());
+        assert_eq!(from_pool, from_trials);
+    }
+
+    #[test]
+    fn pool_zero_and_one_job_edges() {
+        let pool = RecoveryPool::new(2);
+        let none: Vec<u32> = pool.run_jobs(0, 1, |_, _| 7);
+        assert!(none.is_empty());
+        let one: Vec<u32> = pool.run_jobs(1, 1, |i, _| i as u32 + 41);
+        assert_eq!(one, vec![41]);
+    }
+
+    #[test]
+    fn solve_job_converges_and_is_sparse() {
+        let p = easy(1);
+        let out = solve_job(&p, Alg::Stoiht, &AsyncOpts::default(), 42);
+        assert!(out.converged);
+        assert!(out.residual < 1e-7);
+        assert!(out.final_error < 1e-5);
+        assert!(out.iters > 0);
+        assert!(p.residual_norm(&out.x) < 1e-6);
+    }
+
+    #[test]
+    fn solve_job_reports_honest_nonconvergence() {
+        let p = easy(2);
+        let opts = AsyncOpts { max_local_iters: 2, ..Default::default() };
+        let out = solve_job(&p, Alg::Stoiht, &opts, 7);
+        assert!(!out.converged);
+        assert_eq!(out.iters, 2);
+        // Unlike the runtime's NaN, the service reports the actual state.
+        assert!(out.residual.is_finite() && out.residual > 0.0);
+    }
+
+    #[test]
+    fn batch_recovers_mmv_signals() {
+        let spec = ProblemSpec { n: 128, m: 64, b: 8, s: 4, ..ProblemSpec::tiny() };
+        let mut rng = Rng::seed_from(5);
+        let op = spec.draw_operator(&mut rng);
+        let batch = spec.generate_mmv_with_op(&op, &mut rng, 4);
+        let out = recover_batch_stoiht(&batch, &AsyncOpts::default(), 31);
+        let iters: Vec<u64> = out.signals.iter().map(|s| s.iters).collect();
+        assert!(out.all_converged(), "iters {iters:?}");
+        for (p, s) in batch.iter().zip(&out.signals) {
+            assert!(s.residual < 1e-7);
+            assert!(p.residual_norm(&s.x) < 1e-6);
+            assert!(p.recovery_error(&s.x) < 1e-5);
+        }
+        assert!(out.steps >= out.signals.iter().map(|s| s.iters).max().unwrap());
+    }
+
+    #[test]
+    fn batch_of_one_converges() {
+        let spec = ProblemSpec { n: 128, m: 64, b: 8, s: 4, ..ProblemSpec::tiny() };
+        let mut rng = Rng::seed_from(6);
+        let op = spec.draw_operator(&mut rng);
+        let batch = spec.generate_mmv_with_op(&op, &mut rng, 1);
+        let out = recover_batch_stoiht(&batch, &AsyncOpts::default(), 32);
+        assert!(out.all_converged());
+    }
+
+    #[test]
+    #[should_panic(expected = "share one operator")]
+    fn batch_rejects_foreign_operators() {
+        let a = easy(7);
+        let b = easy(8);
+        let _ = recover_batch_stoiht(
+            &[a, b],
+            &AsyncOpts { max_local_iters: 1, ..Default::default() },
+            1,
+        );
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_job_batch() {
+        let pool = RecoveryPool::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_jobs(4, 1, |i, _rng| {
+                if i == 2 {
+                    panic!("boom");
+                }
+                i
+            })
+        }));
+        let err = result.expect_err("submitter must observe the job panic");
+        // The ORIGINAL payload is re-raised, not a generic wrapper.
+        assert_eq!(err.downcast_ref::<&str>().copied(), Some("boom"));
+        // The pool still serves subsequent batches.
+        let ok: Vec<usize> = pool.run_jobs(3, 2, |i, _| i + 1);
+        assert_eq!(ok, vec![1, 2, 3]);
+    }
+}

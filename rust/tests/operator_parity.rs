@@ -134,7 +134,7 @@ fn twin_draws_are_entrywise_bit_identical() {
     let (pd, pf) = twin_problems(11);
     assert_eq!(pd.x_true, pf.x_true);
     assert_eq!(pd.support, pf.support);
-    let astir::linalg::Operator::SubsampledDct(op) = &pf.op else {
+    let astir::linalg::Operator::SubsampledDct(op) = &*pf.op else {
         panic!("expected the matrix-free operator");
     };
     for i in 0..pd.spec.m {

@@ -1,0 +1,309 @@
+//! Recovery-service contract tests: the persistent pool is deterministic
+//! at any worker count and saturates cleanly; a pool job is bit-identical
+//! to the spawn-per-call runtime's single-worker run; the batched
+//! multi-RHS operator entry points are bitwise per-column equal to the
+//! single-signal kernels on both operator implementations; and the
+//! lockstep batched recovery degenerates to the solo algorithm exactly at
+//! batch size one.
+
+use std::sync::Arc;
+
+use astir::algorithms::Alg;
+use astir::async_runtime::{run_async, run_async_with, AsyncOpts};
+use astir::linalg::{MeasureOp, Operator, ProxyCol};
+use astir::problem::{Ensemble, Problem, ProblemSpec};
+use astir::rng::Rng;
+use astir::service::{recover_batch_stoiht, solve_job, solve_job_with, RecoveryPool};
+
+fn easy_spec() -> ProblemSpec {
+    ProblemSpec { n: 128, m: 64, b: 8, s: 4, ..ProblemSpec::tiny() }
+}
+
+/// One operator, `count` signals sharing it.
+fn shared_problems(spec: &ProblemSpec, count: usize, seed: u64) -> Arc<Vec<Problem>> {
+    let mut rng = Rng::seed_from(seed);
+    let op = spec.draw_operator(&mut rng);
+    Arc::new((0..count).map(|_| spec.generate_with_op(&op, &mut rng)).collect())
+}
+
+#[test]
+fn pool_results_bit_identical_across_worker_counts() {
+    // The satellite guarantee: same jobs, same seeds, ANY worker count —
+    // identical bits. 24 jobs over 1/4/8 workers (jobs >> workers for the
+    // larger counts, workers partially idle for the smaller).
+    let problems = shared_problems(&easy_spec(), 24, 11);
+    let opts = AsyncOpts::default();
+    let run = |workers: usize| {
+        let pool = RecoveryPool::new(workers);
+        let ps = Arc::clone(&problems);
+        let opts = opts.clone();
+        pool.run_jobs(24, 77, move |i, rng| {
+            let seed = rng.next_u64();
+            solve_job(&ps[i], Alg::Stoiht, &opts, seed)
+        })
+    };
+    let base = run(1);
+    assert!(base.iter().all(|o| o.converged), "baseline jobs must converge");
+    for workers in [4usize, 8] {
+        let out = run(workers);
+        assert_eq!(out.len(), base.len());
+        for (i, (a, b)) in base.iter().zip(&out).enumerate() {
+            assert_eq!(a.iters, b.iters, "workers {workers} job {i}: iters");
+            assert_eq!(
+                a.residual.to_bits(),
+                b.residual.to_bits(),
+                "workers {workers} job {i}: residual"
+            );
+            assert_eq!(a.x.len(), b.x.len());
+            for (j, (&va, &vb)) in a.x.iter().zip(&b.x).enumerate() {
+                assert_eq!(
+                    va.to_bits(),
+                    vb.to_bits(),
+                    "workers {workers} job {i} coord {j}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pool_saturates_with_many_more_jobs_than_workers() {
+    // 64 jobs on 4 workers: every job runs exactly once, results land in
+    // job order, and the pool survives repeated saturated batches.
+    let pool = RecoveryPool::new(4);
+    for round in 0..3u64 {
+        let out: Vec<u64> = pool.run_jobs(64, round, |i, rng| {
+            // A nontrivial body so claims interleave across workers.
+            let mut acc = rng.next_u64();
+            for _ in 0..100 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i as u64);
+            }
+            acc
+        });
+        assert_eq!(out.len(), 64);
+        let again: Vec<u64> = pool.run_jobs(64, round, |i, rng| {
+            let mut acc = rng.next_u64();
+            for _ in 0..100 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i as u64);
+            }
+            acc
+        });
+        assert_eq!(out, again, "round {round} must be reproducible");
+    }
+}
+
+#[test]
+fn pool_zero_and_one_job_edge_cases() {
+    let pool = RecoveryPool::new(3);
+    let none: Vec<u8> = pool.run_jobs(0, 9, |_, _| 1);
+    assert!(none.is_empty());
+    let problems = shared_problems(&easy_spec(), 1, 12);
+    let ps = Arc::clone(&problems);
+    let one = pool.run_jobs(1, 13, move |i, rng| {
+        let seed = rng.next_u64();
+        solve_job(&ps[i], Alg::Stoiht, &AsyncOpts::default(), seed)
+    });
+    assert_eq!(one.len(), 1);
+    assert!(one[0].converged);
+}
+
+#[test]
+fn pool_single_job_bitwise_matches_spawn_per_call_runtime() {
+    // The tentpole identity: solve_job (the pool's inline per-job solve)
+    // is bit-for-bit run_async_with(problem, 1, ...) — same drive_worker
+    // body, same RNG derivation, same tally protocol — for both kernels.
+    let spec = easy_spec();
+    let problems = shared_problems(&spec, 2, 21);
+    let opts = AsyncOpts { max_local_iters: 400, ..Default::default() };
+    for (p, alg, seed) in
+        [(&problems[0], Alg::Stoiht, 42u64), (&problems[1], Alg::StoGradMp, 43u64)]
+    {
+        let pooled = solve_job(p, alg, &opts, seed);
+        let spawned = match alg {
+            Alg::Stoiht => run_async(p, 1, &opts, seed),
+            Alg::StoGradMp => {
+                run_async_with(p, 1, &opts, seed, astir::algorithms::StoGradMpKernel::new)
+            }
+        };
+        assert!(pooled.converged && spawned.converged, "{alg:?} must converge");
+        assert_eq!(pooled.iters, spawned.local_iters[0], "{alg:?}: iteration count");
+        assert_eq!(
+            pooled.residual.to_bits(),
+            spawned.residual.to_bits(),
+            "{alg:?}: residual bits"
+        );
+        for (j, (&a, &b)) in pooled.x.iter().zip(&spawned.x).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{alg:?}: coord {j}");
+        }
+    }
+}
+
+#[test]
+fn batch_of_one_degenerates_to_the_single_job_exactly() {
+    // The lockstep batched step must be the solo Algorithm 2 verbatim
+    // when the batch holds one signal: same RNG stream, same estimate,
+    // same proxy/identify arithmetic, same exit check.
+    let problems = shared_problems(&easy_spec(), 1, 31);
+    let opts = AsyncOpts::default();
+    let solo = solve_job(&problems[0], Alg::Stoiht, &opts, 99);
+    let batched = recover_batch_stoiht(&problems[..1], &opts, 99);
+    assert!(solo.converged && batched.all_converged());
+    let b0 = &batched.signals[0];
+    assert_eq!(solo.iters, b0.iters, "iteration counts");
+    assert_eq!(solo.residual.to_bits(), b0.residual.to_bits(), "residual bits");
+    for (j, (&a, &b)) in solo.x.iter().zip(&b0.x).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "coord {j}");
+    }
+}
+
+#[test]
+fn batched_mmv_recovery_converges_and_is_no_slower_than_sequential() {
+    // 6 MMV signals sharing one operator and one support: the shared
+    // tally must not hurt — per-signal lockstep iterations stay within a
+    // whisker of the independent solves (and in practice drop well below,
+    // which is the throughput suite's jobs/sec win).
+    let spec = ProblemSpec { n: 256, m: 96, b: 8, s: 10, ..ProblemSpec::tiny() };
+    let mut rng = Rng::seed_from(41);
+    let op = spec.draw_operator(&mut rng);
+    let batch = spec.generate_mmv_with_op(&op, &mut rng, 6);
+    let opts = AsyncOpts::default();
+    let out = recover_batch_stoiht(&batch, &opts, 71);
+    assert!(out.all_converged(), "batched MMV signals must converge");
+    let seq: Vec<_> = (0..batch.len())
+        .map(|c| solve_job(&batch[c], Alg::Stoiht, &opts, 500 + c as u64))
+        .collect();
+    assert!(seq.iter().all(|s| s.converged), "sequential signals must converge");
+    let mean = |iters: &[u64]| iters.iter().sum::<u64>() as f64 / iters.len() as f64;
+    let batched_iters: Vec<u64> = out.signals.iter().map(|s| s.iters).collect();
+    let seq_iters: Vec<u64> = seq.iter().map(|s| s.iters).collect();
+    assert!(
+        mean(&batched_iters) <= 1.1 * mean(&seq_iters),
+        "batched {batched_iters:?} vs sequential {seq_iters:?}"
+    );
+    for (p, s) in batch.iter().zip(&out.signals) {
+        assert!(p.residual_norm(&s.x) < 1e-6);
+        assert!(p.recovery_error(&s.x) < 1e-5);
+    }
+}
+
+/// Batched-vs-single per-column bitwise parity of the multi-RHS operator
+/// entry points, exercised through the public API on both operator
+/// implementations (the satellite's coverage requirement; the in-crate
+/// unit tests cover more support shapes).
+#[test]
+fn multi_rhs_operator_entry_points_are_bitwise_per_column() {
+    let dense_spec = ProblemSpec {
+        n: 64,
+        m: 32,
+        b: 8,
+        s: 4,
+        ensemble: Ensemble::PartialDct,
+        ..ProblemSpec::tiny()
+    };
+    let free_spec = ProblemSpec { dense_a: false, ..dense_spec.clone() };
+    for (spec, label) in [(dense_spec, "dense"), (free_spec, "subsampled_dct")] {
+        let mut rng = Rng::seed_from(51);
+        let op = spec.draw_operator(&mut rng);
+        let batch = spec.generate_mmv_with_op(&op, &mut rng, 3);
+        let op: &Operator = &batch[0].op;
+        let n = spec.n;
+        let b = spec.b;
+        let row0 = b * 2;
+        // Per-signal iterate-like inputs on distinct supports.
+        let supports: Vec<Vec<usize>> = (0..3)
+            .map(|k| {
+                let mut s = Rng::seed_from(60 + k).subset(n, 4 + k as usize);
+                s.sort_unstable();
+                s
+            })
+            .collect();
+        let xs: Vec<Vec<f64>> = supports
+            .iter()
+            .map(|supp| {
+                let mut x = vec![0.0; n];
+                for (q, &j) in supp.iter().enumerate() {
+                    x[j] = 0.4 + 0.2 * q as f64;
+                }
+                x
+            })
+            .collect();
+        let mut scratch = op.make_scratch();
+        // Singles.
+        let mut want_out = vec![vec![0.0; n]; 3];
+        let mut want_resid = vec![vec![0.0; b]; 3];
+        for k in 0..3 {
+            op.block_proxy_step_sparse(
+                row0,
+                batch[k].y_block(2),
+                &xs[k],
+                &supports[k],
+                1.0,
+                &mut want_resid[k],
+                &mut scratch,
+                &mut want_out[k],
+            );
+        }
+        // Batched.
+        let mut got_out = vec![vec![0.0; n]; 3];
+        let mut got_resid = vec![vec![0.0; b]; 3];
+        {
+            let mut cols: Vec<ProxyCol<'_>> = Vec::new();
+            for (((k, out), resid), x) in
+                got_out.iter_mut().enumerate().zip(got_resid.iter_mut()).zip(xs.iter())
+            {
+                cols.push(ProxyCol {
+                    y_b: batch[k].y_block(2),
+                    x,
+                    support: &supports[k],
+                    resid: &mut resid[..],
+                    out: &mut out[..],
+                });
+            }
+            op.block_proxy_step_sparse_multi(row0, &mut cols, 1.0, &mut scratch);
+        }
+        for k in 0..3 {
+            for i in 0..b {
+                assert_eq!(
+                    got_resid[k][i].to_bits(),
+                    want_resid[k][i].to_bits(),
+                    "{label}: col {k} resid row {i}"
+                );
+            }
+            for j in 0..n {
+                assert_eq!(
+                    got_out[k][j].to_bits(),
+                    want_out[k][j].to_bits(),
+                    "{label}: col {k} out coord {j}"
+                );
+            }
+        }
+        // Multi-apply parity on the same operator.
+        let x_panel: Vec<f64> = xs.concat();
+        let mut out_panel = vec![0.0; 3 * spec.m];
+        op.apply_multi_into(&x_panel, &mut scratch, &mut out_panel);
+        for k in 0..3 {
+            let mut want = vec![0.0; spec.m];
+            op.apply_into(&xs[k], &mut scratch, &mut want);
+            for i in 0..spec.m {
+                assert_eq!(
+                    out_panel[k * spec.m + i].to_bits(),
+                    want[i].to_bits(),
+                    "{label}: apply col {k} row {i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn custom_kernel_jobs_ride_the_pool() {
+    // solve_job_with accepts any SupportKernel factory, so service users
+    // can pool custom kernels exactly like the built-ins.
+    let problems = shared_problems(&easy_spec(), 1, 61);
+    let opts = AsyncOpts::default();
+    let out = solve_job_with(&problems[0], &opts, 5, |p| {
+        astir::algorithms::StoihtKernel::new(p, opts.gamma)
+    });
+    assert!(out.converged);
+    assert!(problems[0].residual_norm(&out.x) < 1e-6);
+}
