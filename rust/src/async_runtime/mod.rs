@@ -31,8 +31,6 @@
 //! fast cores issue — closer to a genuinely contended machine than
 //! `thread::sleep`.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::algorithms::{StoihtKernel, SupportKernel};
@@ -42,6 +40,8 @@ use crate::problem::Problem;
 use crate::rng::Rng;
 use crate::sim::SpeedSchedule;
 use crate::support::union_into;
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::{thread, Mutex};
 use crate::tally::{AtomicTally, TallyWeighting};
 
 /// Options for the real-thread runtime.
@@ -135,6 +135,9 @@ pub(crate) fn drive_worker<K: SupportKernel>(
     let mut tally_scratch: Vec<i64> = Vec::new();
     let mut resid_scratch: Vec<f64> = Vec::new();
     for t in 1..=opts.max_local_iters as u64 {
+        // Acquire: pairs with the winner's Release store so the drain
+        // observes the published ExitInfo (the mutex would suffice, but
+        // the flag is also the cheap fast-path check).
         if stop.load(Ordering::Acquire) {
             break;
         }
@@ -149,6 +152,8 @@ pub(crate) fn drive_worker<K: SupportKernel>(
         // update tally: φ_Γt += t, φ_Γ(t-1) -= t-1 (atomic RMWs).
         tally.commit(&gamma, &prev_gamma, t);
         std::mem::swap(&mut prev_gamma, &mut gamma);
+        // Relaxed: progress telemetry only; readers join (or quiesce)
+        // before trusting the final value.
         counter.store(t, Ordering::Relaxed);
         if t as usize % opts.check_every == 0 {
             // The kernel's sparse exit check over x's support
@@ -194,7 +199,7 @@ where
     let worker_rngs: Vec<Rng> = (0..cores).map(|i| seed_root.split(i as u64)).collect();
     let start = Instant::now();
 
-    std::thread::scope(|scope| {
+    thread::scope(|scope| {
         for w in 0..cores {
             let mut rng = worker_rngs[w].clone();
             let tally = &tally;
@@ -220,6 +225,8 @@ where
                         });
                     }
                     drop(guard);
+                    // Release: pairs with the workers' Acquire load above,
+                    // publishing ExitInfo before the drain begins.
                     stop.store(true, Ordering::Release);
                 }
             });
@@ -227,6 +234,7 @@ where
     });
 
     let info = exit_info.into_inner().unwrap();
+    // Relaxed: post-join reads — the scope already synchronized workers.
     let local_iters: Vec<u64> = iter_counters.iter().map(|c| c.load(Ordering::Relaxed)).collect();
     match info {
         Some(info) => AsyncOutcome {

@@ -598,7 +598,7 @@ mod tests {
             "sleepy",
             Duration::from_millis(1),
             Duration::from_millis(30),
-            || std::thread::sleep(Duration::from_millis(2)),
+            || crate::sync::thread::sleep(Duration::from_millis(2)),
         );
         assert!(r.time.mean >= 1.5e-3, "{}", r.time.mean);
     }

@@ -28,8 +28,8 @@
 //! the paper-ish defaults (`ASTIR_BENCH_TRIALS` raises them further).
 //! Jumbo-tagged points are env-gated, see [`Suite::jumbo_gated`].
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::{thread, Arc};
 
 use crate::algorithms::{Alg, StoGradMpKernel, StoihtKernel};
 use crate::async_runtime::{run_async, run_async_with, AsyncOpts};
@@ -447,10 +447,11 @@ fn hot_path_suite(suite: &mut Suite) {
         for w in 0..7 {
             let shared = Arc::clone(&shared);
             let stop = Arc::clone(&stop);
-            handles.push(std::thread::spawn(move || {
+            handles.push(thread::spawn(move || {
                 let mut r = Rng::seed_from(w);
                 let mut prev: Vec<usize> = Vec::new();
                 let mut t = 1u64;
+                // Relaxed: a shutdown flag with no payload to publish.
                 while !stop.load(Ordering::Relaxed) {
                     let mut g = r.subset(1000, 20);
                     g.sort_unstable();
@@ -463,6 +464,7 @@ fn hot_path_suite(suite: &mut Suite) {
         let res = suite.bench(contended_spec, || {
             shared.commit(&sorted_gamma, &sorted_gamma, 9);
         });
+        // Relaxed: same shutdown flag; the join below synchronizes.
         stop.store(true, Ordering::Relaxed);
         for h in handles {
             h.join().unwrap();

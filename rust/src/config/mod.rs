@@ -79,7 +79,7 @@ impl Default for ExperimentConfig {
 
 /// Default parallelism for Monte-Carlo trials: available cores, capped.
 pub fn default_trial_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+    crate::sync::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
 }
 
 impl ExperimentConfig {

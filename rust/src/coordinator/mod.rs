@@ -19,9 +19,6 @@
 //!   identical per-trial RNG derivation, so results are bit-for-bit what
 //!   the spawn-per-call [`run_trials`] produces.
 
-use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicUsize, Ordering};
-
 use crate::algorithms::{self, Alg, GreedyOpts, RunResult, StoGradMpKernel};
 use crate::config::ExperimentConfig;
 use crate::metrics::{stats, Stats};
@@ -29,6 +26,8 @@ use crate::problem::Problem;
 use crate::rng::Rng;
 use crate::service::RecoveryPool;
 use crate::sim::{simulate, simulate_with, SimOpts, SimOutcome, SpeedSchedule};
+use crate::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::{thread, OnceLock, RaceCell};
 
 /// Preallocated per-trial output slots written without locks.
 ///
@@ -37,18 +36,27 @@ use crate::sim::{simulate, simulate_with, SimOpts, SimOutcome, SpeedSchedule};
 /// write needs no synchronization of its own; publication to the reader
 /// happens through the queue's existing synchronization (thread join, or
 /// the pool's release/acquire completion counter + mutex hand-off).
+///
+/// This type is the **only** place in the crate allowed to contain
+/// `unsafe` (`#![deny(unsafe_code)]` everywhere else). The storage is one
+/// [`RaceCell`] per slot, so under `--features model` every access below
+/// is race-checked against the happens-before edges the protocol claims
+/// to provide, and the Miri CI job checks the raw pointer accesses
+/// themselves for undefined behavior.
 pub(crate) struct ResultSlots<T> {
-    slots: Vec<UnsafeCell<Option<T>>>,
+    slots: Vec<RaceCell<Option<T>>>,
 }
 
 // SAFETY: slots are only written through `put` under the one-writer-per-
-// index contract below, and only read after a happens-before edge from
-// every writer; `T: Send` is all that crossing threads then requires.
+// index protocol documented there, and only read after a happens-before
+// edge from every writer; `T: Send` is all that crossing threads then
+// requires.
+#[allow(unsafe_code)]
 unsafe impl<T: Send> Sync for ResultSlots<T> {}
 
 impl<T> ResultSlots<T> {
     pub(crate) fn new(len: usize) -> Self {
-        ResultSlots { slots: (0..len).map(|_| UnsafeCell::new(None)).collect() }
+        ResultSlots { slots: (0..len).map(|_| RaceCell::new(None)).collect() }
     }
 
     pub(crate) fn len(&self) -> usize {
@@ -57,28 +65,50 @@ impl<T> ResultSlots<T> {
 
     /// Write slot `i`.
     ///
-    /// SAFETY: the caller must guarantee `i` was claimed exclusively (e.g.
-    /// via an atomic `fetch_add` ticket), so no other `put`/`take` touches
-    /// slot `i` concurrently.
-    pub(crate) unsafe fn put(&self, i: usize, v: T) {
-        *self.slots[i].get() = Some(v);
+    /// Protocol: the caller must have claimed `i` exclusively (e.g. via an
+    /// atomic `fetch_add` ticket), so no other `put`/`take` touches slot
+    /// `i` concurrently. Violating this is undefined behavior in normal
+    /// builds — and a reported data race under the model checker.
+    #[allow(unsafe_code)]
+    pub(crate) fn put(&self, i: usize, v: T) {
+        self.slots[i].with_mut(|p| {
+            // SAFETY: `p` points into live storage owned by `self`, and
+            // the claim protocol above makes this thread the only user of
+            // slot `i` until the publication edge to the reader.
+            unsafe { *p = Some(v) }
+        });
     }
 
     /// Take slot `i` back out.
     ///
-    /// SAFETY: the caller must guarantee all writers are finished and
-    /// synchronized-with (happens-before) this call, and that no other
-    /// `take` targets slot `i` concurrently.
-    pub(crate) unsafe fn take(&self, i: usize) -> Option<T> {
-        (*self.slots[i].get()).take()
+    /// Protocol: all writers must be finished and synchronized-with
+    /// (happens-before) this call, and no other `put`/`take` may target
+    /// slot `i` concurrently.
+    #[allow(unsafe_code)]
+    pub(crate) fn take(&self, i: usize) -> Option<T> {
+        self.slots[i].with_mut(|p| {
+            // SAFETY: `p` points into live storage owned by `self`, and
+            // the protocol above guarantees exclusive access here.
+            unsafe { (*p).take() }
+        })
     }
 
-    /// Consume into the ordered results; panics if any slot was never
-    /// written (a worker died before finishing its claim).
-    pub(crate) fn into_vec(self) -> Vec<T> {
+    /// Consume into the ordered results, given that every index below
+    /// `claimed` was handed to some worker by the ticket. Panics with a
+    /// diagnosis that distinguishes a slot the ticket **never reached**
+    /// (a queue bug — e.g. a worker loop exiting early) from one that was
+    /// **claimed but never produced** (its worker died mid-job).
+    pub(crate) fn into_vec(self, claimed: usize) -> Vec<T> {
         self.slots
             .into_iter()
-            .map(|c| c.into_inner().expect("every claimed slot must produce a result"))
+            .enumerate()
+            .map(|(i, c)| match c.into_inner() {
+                Some(v) => v,
+                None if i >= claimed => {
+                    panic!("slot {i} was never claimed by any worker (ticket stopped early)")
+                }
+                None => panic!("slot {i} was claimed but produced no result (worker died)"),
+            })
             .collect()
     }
 }
@@ -104,23 +134,27 @@ where
     let next = AtomicUsize::new(0);
     let slots: ResultSlots<T> = ResultSlots::new(trials);
 
-    std::thread::scope(|scope| {
+    thread::scope(|scope| {
         for _ in 0..threads.min(trials.max(1)) {
             scope.spawn(|| loop {
+                // Relaxed: the ticket only needs uniqueness of `i`, not
+                // publication — the scope join below is the visibility edge.
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= trials {
                     break;
                 }
                 let mut rng = trial_rngs[i].clone();
                 let out = f(i, &mut rng);
-                // SAFETY: the ticket above hands index i to this thread
-                // alone; reads happen after the scope joins every worker.
-                unsafe { slots.put(i, out) };
+                // Slot protocol: the ticket above hands index i to this
+                // thread alone; reads happen after the scope joins workers.
+                slots.put(i, out);
             });
         }
     });
 
-    slots.into_vec()
+    // Relaxed: post-join read — the scope already synchronized everything.
+    let claimed = next.load(Ordering::Relaxed).min(trials);
+    slots.into_vec(claimed)
 }
 
 /// One independent RNG per job, derived from the master seed and the job
@@ -151,13 +185,13 @@ pub struct SweepPoint {
 /// instead of re-spawning a scoped team per call.
 pub struct Leader {
     pub cfg: ExperimentConfig,
-    pool: std::sync::OnceLock<RecoveryPool>,
+    pool: OnceLock<RecoveryPool>,
 }
 
 impl Leader {
     pub fn new(cfg: ExperimentConfig) -> Self {
         cfg.validate().expect("invalid experiment config");
-        Leader { cfg, pool: std::sync::OnceLock::new() }
+        Leader { cfg, pool: OnceLock::new() }
     }
 
     /// The leader's persistent worker pool (spawned on first use).
@@ -299,6 +333,41 @@ mod tests {
     }
 
     #[test]
+    fn result_slots_zero_length_drains_empty() {
+        let slots: ResultSlots<u8> = ResultSlots::new(0);
+        assert_eq!(slots.len(), 0);
+        assert!(slots.into_vec(0).is_empty());
+    }
+
+    #[test]
+    fn result_slots_put_take_round_trip() {
+        let slots: ResultSlots<u8> = ResultSlots::new(2);
+        slots.put(1, 42);
+        assert_eq!(slots.take(1), Some(42));
+        assert_eq!(slots.take(1), None);
+        assert_eq!(slots.take(0), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "never claimed by any worker")]
+    fn result_slots_diagnose_unclaimed_slot() {
+        let slots: ResultSlots<u8> = ResultSlots::new(2);
+        slots.put(0, 7);
+        // The ticket only reached index 1, so slot 1 was never handed out.
+        let _ = slots.into_vec(1);
+    }
+
+    #[test]
+    #[should_panic(expected = "claimed slot 1 produced no result")]
+    fn result_slots_diagnose_dead_worker() {
+        let slots: ResultSlots<u8> = ResultSlots::new(2);
+        slots.put(0, 7);
+        // Both slots were claimed, but slot 1's worker never committed.
+        let _ = slots.into_vec(2);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "full Monte-Carlo sweep is too slow under Miri")]
     fn leader_monte_carlo_stoiht_converges() {
         let leader = Leader::new(small_cfg());
         let results = leader.monte_carlo_stoiht(&leader.greedy_opts());
@@ -308,6 +377,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "full Monte-Carlo sweep is too slow under Miri")]
     fn leader_sweep_has_configured_points() {
         let mut cfg = small_cfg();
         cfg.trials = 5;
@@ -323,6 +393,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "full Monte-Carlo sweep is too slow under Miri")]
     fn leader_dispatches_stogradmp() {
         let mut cfg = small_cfg();
         cfg.alg = Alg::StoGradMp;
@@ -342,6 +413,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "full Monte-Carlo sweep is too slow under Miri")]
     fn monte_carlo_seq_matches_stoiht_under_default_alg() {
         let mut cfg = small_cfg();
         cfg.trials = 3;
@@ -355,6 +427,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "full Monte-Carlo sweep is too slow under Miri")]
     fn pooled_monte_carlo_matches_scoped_run_trials_bitwise() {
         // The Leader rides the persistent pool; its per-trial RNG scheme
         // must remain exactly run_trials', so the rewiring is invisible.
@@ -376,6 +449,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "full Monte-Carlo sweep is too slow under Miri")]
     fn trial_problems_differ_but_are_reproducible() {
         let leader = Leader::new(small_cfg());
         let probs: Vec<Vec<f64>> = run_trials(3, 2, leader.cfg.seed, |_i, rng| {

@@ -39,8 +39,16 @@
 //! | [`experiments`] | drivers regenerating every figure in the paper |
 //! | [`report`] | text/CSV/JSON rendering of experiment outputs |
 //! | [`bench_harness`] | bench suite registry, timing harness, JSON perf telemetry |
+//! | [`sync`] | the crate's single doorway to concurrency primitives (std re-exports, or a model-checked shim under `--features model`) |
+//! | [`lint`] | in-crate static analysis behind `astir lint` (atomic-ordering justifications, `sync` doorway enforcement, SAFETY comments) |
 //! | [`error`] | zero-dependency error type (`anyhow` stand-in) |
 //! | [`testutil`] | mini property-testing framework used by unit tests |
+
+// Unsafe code is confined to one audited type: every other module must
+// stay safe (the single `#[allow(unsafe_code)]` lives on
+// `coordinator::ResultSlots`, whose protocol the model checker and Miri
+// both exercise; see README "Concurrency correctness").
+#![deny(unsafe_code)]
 
 pub mod algorithms;
 pub mod async_runtime;
@@ -49,6 +57,7 @@ pub mod bench_harness;
 pub mod config;
 pub mod coordinator;
 pub mod error;
+pub mod lint;
 pub mod experiments;
 pub mod linalg;
 pub mod metrics;
@@ -59,6 +68,7 @@ pub mod runtime;
 pub mod service;
 pub mod sim;
 pub mod support;
+pub mod sync;
 pub mod tally;
 pub mod testutil;
 

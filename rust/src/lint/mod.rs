@@ -1,0 +1,516 @@
+//! In-crate static analysis behind `astir lint` — the concurrency-hygiene
+//! hard gate (zero dependencies, same spirit as [`crate::testutil`]).
+//!
+//! Four rules, each encoding an invariant the rest of this PR's tooling
+//! relies on:
+//!
+//! * **L1 `ordering-justification`** — every atomic call site naming an
+//!   `Ordering::` variant (`Relaxed`, `Acquire`, `Release`, `AcqRel`,
+//!   `SeqCst`) must carry a comment mentioning that variant on the same
+//!   line or within the 4 preceding lines. The model checker can only
+//!   falsify a *stated* intent; this rule makes the intent exist.
+//!   `src/sync/` is exempt (it *implements* the primitives).
+//! * **L2 `sync-doorway`** — `std::sync` / `std::thread` paths may appear
+//!   only under `src/sync/`: every other module must import from
+//!   [`crate::sync`], otherwise the `--features model` build silently
+//!   loses instrumentation for that call site.
+//! * **L3 `safety-comment`** — every `unsafe` token (block, fn, or impl)
+//!   needs a `SAFETY` comment on the same line or within the 5 preceding
+//!   lines (attributes and doc lines in between are fine).
+//! * **L4 `hygiene`** — no `dbg!` / `todo!` / `unimplemented!` in code,
+//!   and no *code* extending past column 100 (string literals and
+//!   comments may overflow — rustfmt cannot break those either).
+//!
+//! The analysis is source-level and deliberately simple: a byte classifier
+//! ([`classify`]) splits each file into code / comment / string regions
+//! (handling nested block comments, raw strings, and char literals), and
+//! the rules pattern-match on the code region only — so rule names inside
+//! string literals (this file!) or docs never trip the gate.
+//!
+//! Run as `astir lint [--root DIR]`; CI treats any finding as a hard
+//! failure, and `tests/lint_gate.rs` enforces the same on `cargo test`.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Byte classes produced by [`classify`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// Executable source (incl. attributes and whitespace).
+    Code,
+    /// `//`, `///`, `//!`, or (nested) `/* ... */` contents.
+    Comment,
+    /// String / raw-string / char-literal contents *and* delimiters.
+    Str,
+}
+
+/// One rule violation at a source location.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Stable rule id (`L1`..`L4`).
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Classify every byte of `src` as code, comment, or string.
+///
+/// Handles line comments, nested block comments, plain and raw strings
+/// (any `#` depth, with `b`/`r`/`br` prefixes), and char literals —
+/// including the `'"'` case that would otherwise desynchronize string
+/// state. Lifetimes (`'a`) are code.
+pub fn classify(src: &str) -> Vec<Kind> {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut kinds = vec![Kind::Code; n];
+    let mut i = 0;
+    let is_ident = |c: u8| c == b'_' || c.is_ascii_alphanumeric();
+    while i < n {
+        let c = b[i];
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            while i < n && b[i] != b'\n' {
+                kinds[i] = Kind::Comment;
+                i += 1;
+            }
+        } else if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 0usize;
+            while i < n {
+                if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    kinds[i] = Kind::Comment;
+                    kinds[i + 1] = Kind::Comment;
+                    i += 2;
+                    depth += 1;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    kinds[i] = Kind::Comment;
+                    kinds[i + 1] = Kind::Comment;
+                    i += 2;
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    kinds[i] = Kind::Comment;
+                    i += 1;
+                }
+            }
+        } else if c == b'r' || c == b'b' {
+            // Possible raw-string / byte-string prefix: r" r#" br" b" ...
+            let prev_ident = i > 0 && is_ident(b[i - 1]);
+            let mut j = i + 1;
+            let mut had_r = c == b'r';
+            if c == b'b' && j < n && b[j] == b'r' {
+                had_r = true;
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while j < n && b[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            if !prev_ident && j < n && b[j] == b'"' && (had_r || hashes == 0) {
+                for k in i..=j {
+                    kinds[k] = Kind::Str;
+                }
+                i = j + 1;
+                if !had_r {
+                    // b"..." — ordinary escapes apply.
+                    i = scan_plain_str(b, &mut kinds, i);
+                } else {
+                    // Raw: ends at `"` followed by `hashes` `#`s.
+                    while i < n {
+                        kinds[i] = Kind::Str;
+                        if b[i] == b'"' && i + hashes < n {
+                            let close = (1..=hashes).all(|h| b[i + h] == b'#');
+                            if close {
+                                for h in 1..=hashes {
+                                    kinds[i + h] = Kind::Str;
+                                }
+                                i += hashes + 1;
+                                break;
+                            }
+                        }
+                        i += 1;
+                    }
+                }
+            } else {
+                i += 1;
+            }
+        } else if c == b'"' {
+            kinds[i] = Kind::Str;
+            i = scan_plain_str(b, &mut kinds, i + 1);
+        } else if c == b'\'' {
+            // Char literal or lifetime. Escapes (`'\n'`) are literals;
+            // `'x'` is a literal iff a closing quote follows the char.
+            if i + 1 < n && b[i + 1] == b'\\' {
+                kinds[i] = Kind::Str;
+                let mut j = i + 1;
+                while j < n && b[j] != b'\'' {
+                    kinds[j] = Kind::Str;
+                    j += 1;
+                }
+                if j < n {
+                    kinds[j] = Kind::Str;
+                }
+                i = j + 1;
+            } else {
+                // Find the char boundary after the single content char.
+                let start = i + 1;
+                let mut j = start + 1;
+                while j < n && (b[j] & 0xC0) == 0x80 {
+                    j += 1; // skip UTF-8 continuation bytes
+                }
+                if start < n && j < n && b[j] == b'\'' {
+                    for k in i..=j {
+                        kinds[k] = Kind::Str;
+                    }
+                    i = j + 1;
+                } else {
+                    i += 1; // lifetime
+                }
+            }
+        } else {
+            i += 1;
+        }
+    }
+    kinds
+}
+
+/// Continue a plain `"` string at byte `i` (opening quote already
+/// classified); returns the index past the closing quote.
+fn scan_plain_str(b: &[u8], kinds: &mut [Kind], mut i: usize) -> usize {
+    while i < b.len() {
+        kinds[i] = Kind::Str;
+        match b[i] {
+            b'\\' if i + 1 < b.len() => {
+                kinds[i + 1] = Kind::Str;
+                i += 2;
+            }
+            b'"' => return i + 1,
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// A source line split by byte class: `code` keeps code bytes (comments
+/// and strings blanked to spaces, so columns are preserved), `comment`
+/// keeps only comment bytes.
+struct MaskedLine {
+    code: String,
+    comment: String,
+}
+
+fn masked_lines(src: &str, kinds: &[Kind]) -> Vec<MaskedLine> {
+    let mut out = Vec::new();
+    let mut offset = 0;
+    for line in src.split_inclusive('\n') {
+        let mut code = String::with_capacity(line.len());
+        let mut comment = String::with_capacity(line.len());
+        for (j, ch) in line.char_indices() {
+            match kinds[offset + j] {
+                Kind::Code => {
+                    code.push(ch);
+                    comment.push(' ');
+                }
+                Kind::Comment => {
+                    code.push(' ');
+                    comment.push(ch);
+                }
+                Kind::Str => {
+                    code.push(' ');
+                    comment.push(' ');
+                }
+            }
+        }
+        out.push(MaskedLine { code, comment });
+        offset += line.len();
+    }
+    out
+}
+
+const ORDERINGS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+/// How many preceding lines may hold the L1 justification comment.
+const L1_WINDOW: usize = 4;
+/// How many preceding lines may hold the L3 `SAFETY` comment.
+const L3_WINDOW: usize = 5;
+
+fn is_ident_char(c: char) -> bool {
+    c == '_' || c.is_ascii_alphanumeric()
+}
+
+/// All positions where `needle` occurs in `hay` as a standalone token
+/// (neither neighbor is an identifier character).
+fn token_positions(hay: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(rel) = hay[from..].find(needle) {
+        let at = from + rel;
+        let before_ok = at == 0 || !hay[..at].chars().next_back().is_some_and(is_ident_char);
+        let after = at + needle.len();
+        let after_ok = !hay[after..].chars().next().is_some_and(is_ident_char);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = at + needle.len();
+    }
+    out
+}
+
+/// True if any comment within the `window` lines ending at `idx`
+/// (inclusive) contains `needle`.
+fn comment_window_contains(lines: &[MaskedLine], idx: usize, window: usize, needle: &str) -> bool {
+    let lo = idx.saturating_sub(window);
+    lines[lo..=idx].iter().any(|l| l.comment.contains(needle))
+}
+
+/// Lint one file's source text. `file` is the display path; rule
+/// exemptions key off it (`src/sync/` prefix after normalization).
+pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
+    let norm = file.replace('\\', "/");
+    let in_sync = norm.contains("src/sync/") || norm.ends_with("src/sync");
+    let kinds = classify(src);
+    let lines = masked_lines(src, &kinds);
+    let mut findings = Vec::new();
+    let mut push = |line: usize, rule: &'static str, message: String| {
+        findings.push(Finding { file: file.to_string(), line: line + 1, rule, message });
+    };
+
+    for (idx, line) in lines.iter().enumerate() {
+        let code = line.code.as_str();
+
+        // L1: Ordering:: variants need a nearby justification comment.
+        if !in_sync {
+            for at in code.match_indices("Ordering::").map(|(a, _)| a) {
+                let rest = &code[at + "Ordering::".len()..];
+                let variant = ORDERINGS
+                    .iter()
+                    .find(|v| rest.starts_with(**v) && token_positions(rest, v).contains(&0));
+                if let Some(v) = variant {
+                    if !comment_window_contains(&lines, idx, L1_WINDOW, v) {
+                        push(
+                            idx,
+                            "L1",
+                            format!(
+                                "atomic uses Ordering::{v} without a comment mentioning \
+                                 `{v}` on this line or the {L1_WINDOW} above"
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+
+        // L2: std::sync / std::thread only inside src/sync/.
+        if !in_sync {
+            for pat in ["std::sync", "std::thread"] {
+                if !token_positions(code, pat).is_empty() {
+                    push(
+                        idx,
+                        "L2",
+                        format!("`{pat}` outside src/sync/ — import via crate::sync instead"),
+                    );
+                }
+            }
+        }
+
+        // L3: `unsafe` needs a nearby SAFETY comment.
+        if !token_positions(code, "unsafe").is_empty()
+            && !comment_window_contains(&lines, idx, L3_WINDOW, "SAFETY")
+        {
+            push(
+                idx,
+                "L3",
+                format!("`unsafe` without a SAFETY comment on this line or the {L3_WINDOW} above"),
+            );
+        }
+
+        // L4: banned macros; code past column 100.
+        for mac in ["dbg!", "todo!", "unimplemented!"] {
+            if !token_positions(code, &mac[..mac.len() - 1]).is_empty() && code.contains(mac) {
+                push(idx, "L4", format!("`{mac}` must not be committed"));
+            }
+        }
+        let last_code_col =
+            code.chars().enumerate().filter(|(_, c)| !c.is_whitespace()).map(|(i, _)| i + 1);
+        if let Some(col) = last_code_col.last() {
+            if col > 100 {
+                push(idx, "L4", format!("code extends to column {col} (limit 100)"));
+            }
+        }
+    }
+    findings
+}
+
+/// Recursively collect `.rs` files under `dir` (sorted for stable output).
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(dir)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root`'s `src/`, `tests/`, `benches/`, and
+/// `examples/` trees (whichever exist), plus a root `build.rs`.
+pub fn lint_tree(root: &Path) -> std::io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    for sub in ["src", "tests", "benches", "examples"] {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut files)?;
+        }
+    }
+    let build = root.join("build.rs");
+    if build.is_file() {
+        files.push(build);
+    }
+    let mut findings = Vec::new();
+    for path in files {
+        let src = std::fs::read_to_string(&path)?;
+        let rel = path.strip_prefix(root).unwrap_or(&path);
+        findings.extend(lint_source(&rel.to_string_lossy(), &src));
+    }
+    Ok(findings)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds_at(src: &str) -> Vec<(char, Kind)> {
+        src.chars().zip(classify(src)).collect()
+    }
+
+    #[test]
+    fn classifier_masks_comments_and_strings() {
+        let src = "let a = 1; // trailing\nlet s = \"std::sync\"; /* b /* nest */ c */ let t = 2;";
+        let k = classify(src);
+        let code: String = src
+            .char_indices()
+            .map(|(i, c)| if k[i] == Kind::Code { c } else { ' ' })
+            .collect();
+        assert!(code.contains("let a = 1;"));
+        assert!(code.contains("let t = 2;"));
+        assert!(!code.contains("trailing"));
+        assert!(!code.contains("std::sync"));
+        assert!(!code.contains("nest"));
+    }
+
+    #[test]
+    fn classifier_handles_char_literals_and_lifetimes() {
+        // The '"' char literal must not open a string.
+        let src = "let q = '\"'; let l: &'static str = x; let n = '\\n';";
+        let k = kinds_at(src);
+        let code: String =
+            k.iter().map(|&(c, kind)| if kind == Kind::Code { c } else { ' ' }).collect();
+        assert!(code.contains("&'static str"));
+        assert!(!code.contains('"'));
+    }
+
+    #[test]
+    fn classifier_handles_raw_strings() {
+        let src = "let r = r#\"std::thread \"inner\" \"#; let after = 1;";
+        let k = classify(src);
+        let code: String = src
+            .char_indices()
+            .map(|(i, c)| if k[i] == Kind::Code { c } else { ' ' })
+            .collect();
+        assert!(!code.contains("std::thread"));
+        assert!(code.contains("let after = 1;"));
+    }
+
+    #[test]
+    fn l1_requires_justification() {
+        let bad = "fn f(a: &AtomicUsize) { a.load(Ordering::Relaxed); }";
+        let f = lint_source("src/x.rs", bad);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "L1");
+        assert_eq!(f[0].line, 1);
+
+        let good = "// Relaxed: test-only counter.\nfn f(a: &AtomicUsize) {\n    \
+                    a.load(Ordering::Relaxed);\n}";
+        assert!(lint_source("src/x.rs", good).is_empty());
+
+        let trailing = "a.load(Ordering::Acquire); // Acquire: pairs with release store";
+        assert!(lint_source("src/x.rs", trailing).is_empty());
+
+        // A comment naming the *wrong* ordering does not justify.
+        let wrong = "// Relaxed: wrong note.\na.store(1, Ordering::Release);";
+        assert_eq!(lint_source("src/x.rs", wrong).len(), 1);
+
+        // The comment must be within the window.
+        let far = format!("// Relaxed: too far.\n{}a.load(Ordering::Relaxed);", "\n".repeat(5));
+        assert_eq!(lint_source("src/x.rs", &far).len(), 1);
+    }
+
+    #[test]
+    fn l1_ignores_cmp_ordering_and_sync_module() {
+        let cmp = "match x.cmp(&y) { std::cmp::Ordering::Less => 1, _ => 0 }";
+        assert!(lint_source("src/x.rs", cmp).is_empty());
+        let sync = "a.load(Ordering::SeqCst);";
+        assert!(lint_source("src/sync/model/mod.rs", sync).is_empty());
+    }
+
+    #[test]
+    fn l2_fences_the_doorway() {
+        let bad = "use std::sync::Mutex;\nlet t = std::thread::spawn(f);";
+        let f = lint_source("src/coordinator/mod.rs", bad);
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f.iter().all(|x| x.rule == "L2"));
+        // Allowed inside the doorway, and in strings/comments anywhere.
+        assert!(lint_source("src/sync/mod.rs", bad).is_empty());
+        let masked = "// std::sync is discussed here\nlet s = \"std::thread\";";
+        assert!(lint_source("src/x.rs", masked).is_empty());
+    }
+
+    #[test]
+    fn l3_requires_safety_comment() {
+        let bad = "fn f(p: *mut u8) { unsafe { *p = 0 } }";
+        let f = lint_source("src/x.rs", bad);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "L3");
+        let good = "fn f(p: *mut u8) {\n    // SAFETY: p is valid per the contract above.\n    \
+                    unsafe { *p = 0 }\n}";
+        assert!(lint_source("src/x.rs", good).is_empty());
+        // `unsafe_code` in attributes is not the `unsafe` token.
+        assert!(lint_source("src/x.rs", "#![deny(unsafe_code)]").is_empty());
+    }
+
+    #[test]
+    fn l4_bans_debug_macros_and_wide_code() {
+        assert_eq!(lint_source("src/x.rs", "dbg!(x);").len(), 1);
+        assert_eq!(lint_source("src/x.rs", "todo!()").len(), 1);
+        let wide_code = format!("let x = {};", "1 + ".repeat(30) + "1");
+        assert!(wide_code.len() > 100);
+        let f = lint_source("src/x.rs", &wide_code);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "L4");
+        // Overflow inside a string or comment is fine (rustfmt can't break
+        // those either).
+        let wide_str = format!("let s = \"{}\";", "x".repeat(120));
+        assert!(lint_source("src/x.rs", &wide_str).is_empty());
+        let wide_comment = format!("// {}", "y".repeat(120));
+        assert!(lint_source("src/x.rs", &wide_comment).is_empty());
+    }
+
+    #[test]
+    fn findings_render_with_location() {
+        let f = lint_source("src/x.rs", "dbg!(1);");
+        assert_eq!(format!("{}", f[0]), "src/x.rs:1: [L4] `dbg!` must not be committed");
+    }
+}

@@ -65,6 +65,10 @@ fn run(args: Vec<String>) -> Result<(), String> {
         // common experiment flags below do not apply.
         return bench_cmd(&mut flags);
     }
+    if cmd == "lint" {
+        // Source-level analysis: no experiment config involved.
+        return lint_cmd(&mut flags);
+    }
     let cfg = load_config(&mut flags)?;
 
     match cmd.as_str() {
@@ -679,8 +683,8 @@ fn run_batch_cmd(cfg: &ExperimentConfig) -> Result<(), String> {
         ..Default::default()
     };
     let alg = cfg.alg;
-    let problems = std::sync::Arc::new(problems);
-    let job_problems = std::sync::Arc::clone(&problems);
+    let problems = astir::sync::Arc::new(problems);
+    let job_problems = astir::sync::Arc::clone(&problems);
     let job_opts = opts.clone();
     let t0 = std::time::Instant::now();
     // (converged signals, lockstep steps / iters, worst residual) per job.
@@ -758,6 +762,36 @@ fn print_info(cfg: &ExperimentConfig) {
     );
 }
 
+/// `astir lint`: run the in-crate static analysis over the source tree
+/// and fail (nonzero exit) on any finding — the CI hard gate.
+fn lint_cmd(flags: &mut Flags) -> Result<(), String> {
+    let root = match flags.take("root")? {
+        Some(dir) => std::path::PathBuf::from(dir),
+        None => {
+            // Work from a checkout root (`rust/src`) or the crate dir.
+            let cwd = std::path::PathBuf::from(".");
+            if cwd.join("src").is_dir() {
+                cwd
+            } else {
+                std::path::PathBuf::from("rust")
+            }
+        }
+    };
+    flags.finish()?;
+    if !root.join("src").is_dir() {
+        return Err(format!("lint: no src/ under {} (use --root)", root.display()));
+    }
+    let findings = astir::lint::lint_tree(&root).map_err(|e| format!("lint: {e}"))?;
+    if findings.is_empty() {
+        println!("lint: clean ({} rules over {})", 4, root.display());
+        return Ok(());
+    }
+    for f in &findings {
+        eprintln!("{f}");
+    }
+    Err(format!("lint: {} finding(s)", findings.len()))
+}
+
 fn print_usage() {
     println!(
         "astir — asynchronous parallel sparse recovery (Needell & Woolf 2017)
@@ -777,6 +811,9 @@ COMMANDS
   async --cores N              real-thread asynchronous solve (StoIHT default)
   batch                        recovery service: persistent worker pool serving
                                many jobs against ONE shared operator
+  lint                         concurrency-hygiene static analysis (hard CI
+                               gate: atomic-ordering justifications, the
+                               crate::sync doorway, SAFETY comments, hygiene)
   info                         show config + discovered AOT artifacts
 
 COMMON FLAGS
@@ -810,6 +847,10 @@ BATCH FLAGS (astir batch; TOML [service] section: workers/jobs/batch)
                        e.g.  astir batch --jobs 16 --workers 8 --batch 8 \
                              --ensemble partial_dct --no-dense-a --n 131072 \
                              --m 4096 --b 512 --s 16
+
+LINT FLAGS (astir lint)
+  --root DIR           crate root to lint (default: ./ or ./rust, whichever
+                       has a src/ tree)
 
 BENCH FLAGS (astir bench)
   --filter substr      run only benches whose suite/name contains substr

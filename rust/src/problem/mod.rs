@@ -20,7 +20,7 @@
 //! standard choice under which `gamma = 1` StoIHT converges as in Fig. 1.
 //! Alternatives are exposed for ablations.
 
-use std::sync::Arc;
+use crate::sync::Arc;
 
 use crate::linalg::{nrm2, DenseOp, Mat, MeasureOp, OpScratch, Operator, RowBlock, SubsampledDctOp};
 use crate::rng::Rng;

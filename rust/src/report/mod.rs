@@ -4,9 +4,9 @@
 //! be re-plotted or machine-diffed.
 
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, Ordering};
 
 use crate::metrics::Table;
+use crate::sync::atomic::{AtomicBool, Ordering};
 
 /// Directory for CSV/JSON outputs: `$ASTIR_RESULTS` or `./results`.
 pub fn results_dir() -> PathBuf {
@@ -28,6 +28,7 @@ pub struct Emitted {
 static WRITE_WARNED: AtomicBool = AtomicBool::new(false);
 
 fn warn_once(path: &Path, e: &std::io::Error) {
+    // Relaxed: a once-flag guarding a warning line; no data is published.
     if !WRITE_WARNED.swap(true, Ordering::Relaxed) {
         eprintln!(
             "[warn] could not write {} ({e}); further results-dir write warnings suppressed",
@@ -77,7 +78,7 @@ mod tests {
 
     // Both tests rebind ASTIR_RESULTS; serialize them so the parallel test
     // runner cannot interleave the set/remove pairs.
-    static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    static ENV_LOCK: crate::sync::Mutex<()> = crate::sync::Mutex::new(());
 
     #[test]
     fn emit_writes_csv_and_json() {

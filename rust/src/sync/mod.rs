@@ -1,0 +1,162 @@
+//! The crate's **single doorway to concurrency primitives**.
+//!
+//! Every module that synchronizes — [`crate::tally`]'s atomic vote
+//! counters, [`crate::async_runtime`]'s stop flag and scoped workers,
+//! [`crate::coordinator`]'s one-writer-per-slot result storage,
+//! [`crate::service`]'s persistent pool queue — imports its primitives
+//! from here, never from `std::sync`/`std::thread` directly (`astir lint`
+//! enforces this tree-wide). The doorway has two personalities:
+//!
+//! * **Normal builds** (no `model` feature): zero-cost re-exports of the
+//!   `std` primitives. [`RaceCell`] is a `#[repr(transparent)]` wrapper
+//!   over [`std::cell::UnsafeCell`]; everything else is literally the
+//!   `std` type.
+//! * **`--features model` builds**: the same names resolve to
+//!   *instrumented* implementations in [`model`], driven by an in-crate
+//!   deterministic model checker (a zero-dependency "loom-lite"). Inside
+//!   a [`model::check`] run, every lock, condvar wait, atomic access, and
+//!   [`RaceCell`] access becomes a scheduling point of a
+//!   bounded-preemption DFS over thread interleavings, with vector-clock
+//!   happens-before tracking that detects data races, deadlocks (which is
+//!   how lost condvar wakeups surface — the model injects no spurious
+//!   wakeups), and double-takes. Outside a `check` run the instrumented
+//!   types fall back to plain `std` behavior, so the crate still works
+//!   end-to-end when compiled with the feature on.
+//!
+//! What the model checker **proves**: for the explored schedules of a
+//! small closed program, no `RaceCell` access races under the C++11-style
+//! happens-before induced by mutexes, thread spawn/join/scope, and
+//! release/acquire atomics; no reachable all-threads-blocked state; no
+//! assertion failure in any interleaving. What it **cannot** prove:
+//! anything about schedules beyond the preemption bound, weak-memory
+//! *value* visibility (execution is sequentially consistent; only the
+//! happens-before bookkeeping honors the chosen `Ordering`s), or
+//! undefined behavior inside unsafe code — that is what the Miri CI job
+//! is for, and TSan re-checks the real compiled protocol under load (see
+//! README, "Concurrency correctness").
+//!
+//! [`RaceCell`] is the doorway's one non-`std` name: unsynchronized
+//! interior-mutable storage whose *caller* guarantees exclusion (the
+//! atomic-ticket protocol of [`crate::coordinator::run_trials`] and the
+//! recovery pool). The real implementation hands out raw pointers with no
+//! overhead; the model implementation race-checks every access, which is
+//! exactly the machine-checked version of the `SAFETY:` contracts written
+//! on its call sites.
+
+#[cfg(feature = "model")]
+pub mod model;
+
+// `Arc` and `OnceLock` carry no schedule-relevant semantics the checker
+// needs to interpose on (no blocking, no unsynchronized data), so both
+// personalities share the `std` types. `mpsc` and friends are
+// deliberately absent: if a module needs a new primitive, it gets added
+// here, instrumented, or not at all.
+pub use std::sync::{Arc, OnceLock};
+
+#[cfg(not(feature = "model"))]
+pub use real::{atomic, thread, Condvar, Mutex, MutexGuard, RaceCell};
+
+#[cfg(feature = "model")]
+pub use model::shim::{atomic, thread, Condvar, Mutex, MutexGuard, RaceCell};
+
+/// The zero-cost personality: `std` re-exports plus the transparent
+/// [`RaceCell`]. (Private — consumers name `crate::sync::…` only.)
+#[cfg(not(feature = "model"))]
+mod real {
+    pub use std::sync::{Condvar, Mutex, MutexGuard};
+
+    /// Atomic integer/bool types and the `Ordering` enum.
+    pub mod atomic {
+        pub use std::sync::atomic::{
+            AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Ordering,
+        };
+    }
+
+    /// Thread spawning, scoped threads, and runtime introspection.
+    pub mod thread {
+        pub use std::thread::{
+            available_parallelism, scope, sleep, spawn, Builder, JoinHandle, Scope,
+            ScopedJoinHandle,
+        };
+    }
+
+    /// Unsynchronized interior-mutable storage with caller-guaranteed
+    /// exclusion — the crate-visible face of [`std::cell::UnsafeCell`].
+    ///
+    /// `with` passes a read pointer, `with_mut` a write pointer; the model
+    /// personality uses that read/write distinction for race detection, so
+    /// call the one that matches the access. Dereferencing the pointer is
+    /// the caller's `unsafe`, under the protocol documented at the call
+    /// site (see [`crate::coordinator::ResultSlots`]). Closures must not
+    /// touch other `sync` primitives: accesses are modeled as atomic
+    /// scheduling steps.
+    ///
+    /// `RaceCell` is deliberately `!Sync` (it contains an `UnsafeCell`);
+    /// a container proving a cross-thread exclusion protocol opts in with
+    /// its own `unsafe impl Sync`, keeping the obligation visible where
+    /// the protocol lives.
+    #[derive(Debug)]
+    #[repr(transparent)]
+    pub struct RaceCell<T>(std::cell::UnsafeCell<T>);
+
+    impl<T> RaceCell<T> {
+        pub const fn new(v: T) -> Self {
+            RaceCell(std::cell::UnsafeCell::new(v))
+        }
+
+        /// Run `f` with a read pointer to the contents.
+        #[inline]
+        pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+            f(self.0.get())
+        }
+
+        /// Run `f` with a write pointer to the contents.
+        #[inline]
+        pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+            f(self.0.get())
+        }
+
+        /// Exclusive access through a unique borrow (safe: `&mut self`
+        /// proves no other accessor exists).
+        #[inline]
+        pub fn get_mut(&mut self) -> &mut T {
+            self.0.get_mut()
+        }
+
+        /// Consume the cell (exclusive by ownership; never racy).
+        #[inline]
+        pub fn into_inner(self) -> T {
+            self.0.into_inner()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn race_cell_round_trips() {
+        let mut c = RaceCell::new(7usize);
+        *c.get_mut() = 9;
+        // The two access paths hand out the same storage (no unsafe needed
+        // to check identity: raw pointers compare safely).
+        let (pr, pw) = (c.with(|p| p as usize), c.with_mut(|p| p as usize));
+        assert_eq!(pr, pw);
+        assert_eq!(c.into_inner(), 9);
+    }
+
+    #[test]
+    fn doorway_types_behave_like_std() {
+        let m = Mutex::new(3);
+        *m.lock().unwrap() += 1;
+        assert_eq!(*m.lock().unwrap(), 4);
+        let a = atomic::AtomicUsize::new(1);
+        // Relaxed: single-threaded test, no cross-thread publication.
+        assert_eq!(a.fetch_add(2, atomic::Ordering::Relaxed), 1);
+        let h = thread::spawn(|| 5usize);
+        assert_eq!(h.join().unwrap(), 5);
+        let out = thread::scope(|s| s.spawn(|| 6usize).join().unwrap());
+        assert_eq!(out, 6);
+    }
+}

@@ -1,0 +1,906 @@
+//! The in-crate deterministic model checker behind the `model` feature —
+//! a zero-dependency "loom-lite".
+//!
+//! [`check`] takes a closed concurrent program (a closure that creates its
+//! own threads and shared state through [`crate::sync`]) and re-executes
+//! it under **every thread schedule up to a preemption bound**. Real OS
+//! threads run the program, but a controller grants exactly one thread the
+//! right to run at a time; each grant covers one synchronization operation
+//! (lock, unlock, condvar wait/notify, atomic access, [`shim::RaceCell`]
+//! access, spawn, join) plus the pure computation after it. The controller
+//! records every choice point and drives a depth-first search over the
+//! alternatives: schedules are replayed decision-for-decision, so the
+//! explored program must be deterministic apart from thread timing.
+//!
+//! Along every schedule the checker maintains **vector clocks**:
+//!
+//! * thread spawn/join and scoped-thread exit edges,
+//! * mutex release → next acquire edges,
+//! * atomic release-store/RMW → acquire-load/RMW edges (a `Relaxed` RMW
+//!   continues an existing release sequence but never *synchronizes*;
+//!   a `Relaxed` store breaks the sequence — matching the C++11 rules
+//!   the crate's `Ordering` choices rely on).
+//!
+//! Every [`shim::RaceCell`] access is checked FastTrack-style against the
+//! last write epoch and read clock; two accesses not ordered by
+//! happens-before (at least one a write) abort the search with a
+//! [`ViolationKind::DataRace`]. An all-threads-blocked state is a
+//! [`ViolationKind::Deadlock`] — which is also how a *lost condvar
+//! wakeup* surfaces, because the model injects no spurious wakeups: a
+//! `wait` that nobody will ever notify blocks forever in some schedule.
+//!
+//! Limits, so nobody over-trusts a green run: values are read/written
+//! sequentially consistently (only the happens-before bookkeeping honors
+//! the weaker `Ordering`s), schedules beyond the preemption bound are not
+//! explored, and unsafe-code UB is out of scope (Miri's job). See the
+//! README's "Concurrency correctness" section for the division of labor.
+
+pub mod shim;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex, MutexGuard as StdGuard};
+
+/// Thread index inside one model execution (0 = the program's root).
+pub(crate) type Tid = usize;
+
+/// Trace marker for ops that touch no registered object.
+const NO_OBJ: usize = usize::MAX;
+
+/// Trace entries retained for violation reports.
+const TRACE_KEEP: usize = 48;
+
+// ---------------------------------------------------------------------------
+// Vector clocks
+// ---------------------------------------------------------------------------
+
+/// A vector clock: component `t` counts the synchronization steps of
+/// thread `t` that happen-before the clock's owner.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub(crate) struct VClock(Vec<u32>);
+
+impl VClock {
+    fn get(&self, t: Tid) -> u32 {
+        self.0.get(t).copied().unwrap_or(0)
+    }
+
+    fn set(&mut self, t: Tid, v: u32) {
+        if self.0.len() <= t {
+            self.0.resize(t + 1, 0);
+        }
+        self.0[t] = v;
+    }
+
+    fn tick(&mut self, t: Tid) {
+        let v = self.get(t);
+        self.set(t, v + 1);
+    }
+
+    fn join(&mut self, other: &VClock) {
+        for (t, &v) in other.0.iter().enumerate() {
+            if v > self.get(t) {
+                self.set(t, v);
+            }
+        }
+    }
+
+    /// `true` iff `other` ≤ `self` pointwise (everything `other` saw
+    /// happens-before the owner of `self`).
+    fn dominates(&self, other: &VClock) -> bool {
+        other.0.iter().enumerate().all(|(t, &v)| v <= self.get(t))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-execution state
+// ---------------------------------------------------------------------------
+
+/// What a parked thread wants to do next (the controller grants it only
+/// when the op can complete).
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum Intent {
+    /// First grant after spawn, before any user code runs.
+    Start,
+    /// Non-blocking op (atomic, cell, unlock, notify, spawn, …).
+    Plain,
+    /// Blocking `Mutex::lock`: runnable only while the mutex is free.
+    Lock(usize),
+    /// Re-acquire after a condvar notification: same enabling rule.
+    Reacquire(usize),
+}
+
+/// Why a thread cannot currently be scheduled at all.
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum WaitOn {
+    /// Parked in `Condvar::wait`; only a notify makes it runnable.
+    Cv { cv: usize, mutex: usize },
+    /// Waiting in `join` for the target thread to finish.
+    Join(Tid),
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum TState {
+    Ready(Intent),
+    Waiting(WaitOn),
+    Running,
+    Finished,
+}
+
+struct ThreadSt {
+    state: TState,
+    clock: VClock,
+    name: String,
+}
+
+#[derive(Default)]
+struct MutexSt {
+    owner: Option<Tid>,
+    /// Clock released by the last unlocker; joined by the next acquirer.
+    clock: VClock,
+}
+
+#[derive(Default)]
+struct AtomicSt {
+    /// Release-sequence clock: what an acquire access synchronizes with.
+    release: VClock,
+}
+
+#[derive(Default)]
+struct CellSt {
+    /// Epoch of the last write (`w_time == 0` means "never written": the
+    /// initializing construction happens-before the sharing that follows).
+    w_tid: Tid,
+    w_time: u32,
+    /// Join of all read epochs since the last write.
+    reads: VClock,
+}
+
+struct ExecState {
+    threads: Vec<ThreadSt>,
+    mutexes: Vec<MutexSt>,
+    atomics: Vec<AtomicSt>,
+    cells: Vec<CellSt>,
+    condvars: usize,
+    /// The one thread currently allowed to run; `None` = controller's turn.
+    active: Option<Tid>,
+    violation: Option<Violation>,
+    /// Tear-down flag: every parked thread unwinds with [`ModelAbort`].
+    abort: bool,
+    /// Recent granted ops, `(tid, op, object-id)`, for violation reports.
+    trace: Vec<(Tid, &'static str, usize)>,
+}
+
+struct ExecShared {
+    st: StdMutex<ExecState>,
+    cv: StdCondvar,
+    /// Generation tag: shim objects registered under an older generation
+    /// re-register, so state never leaks across executions.
+    gen: u64,
+}
+
+/// Lock that shrugs off poisoning: the model tears down via panics by
+/// design, and its own bookkeeping must stay reachable while doing so.
+fn lock_st(e: &ExecShared) -> StdGuard<'_, ExecState> {
+    e.st.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Panic payload used to unwind controlled threads during tear-down.
+pub(crate) struct ModelAbort;
+
+fn abort_unwind() -> ! {
+    std::panic::panic_any(ModelAbort)
+}
+
+// ---------------------------------------------------------------------------
+// Thread-local context: "am I a controlled thread, and of which execution?"
+// ---------------------------------------------------------------------------
+
+#[derive(Clone)]
+pub(crate) struct Ctx {
+    exec: Arc<ExecShared>,
+    tid: Tid,
+}
+
+thread_local! {
+    static CTX: std::cell::RefCell<Option<Ctx>> = const { std::cell::RefCell::new(None) };
+}
+
+/// The calling thread's model context, or `None` when it should fall
+/// through to plain `std` behavior (outside any `check` run, or while
+/// unwinding — tear-down must not re-enter the scheduler).
+pub(crate) fn cur() -> Option<Ctx> {
+    if std::thread::panicking() {
+        return None;
+    }
+    CTX.with(|c| c.borrow().clone())
+}
+
+/// Object classes a shim can register.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum Class {
+    Mutex,
+    Condvar,
+    Atomic,
+    Cell,
+}
+
+impl Ctx {
+    /// Resolve a shim object's per-execution id, registering it on first
+    /// contact. The packed tag is `(gen << 24) | (id + 1)`; a stale
+    /// generation simply re-registers, giving the object fresh state.
+    pub(crate) fn register(&self, reg: &AtomicU64, class: Class) -> usize {
+        // Relaxed: the tag is only ever written by the single active model
+        // thread and re-validated against `gen` on every read.
+        let packed = reg.load(Ordering::Relaxed);
+        if packed != 0 && packed >> 24 == self.exec.gen {
+            return (packed & 0x00FF_FFFF) as usize - 1;
+        }
+        let mut st = lock_st(&self.exec);
+        let id = match class {
+            Class::Mutex => {
+                st.mutexes.push(MutexSt::default());
+                st.mutexes.len() - 1
+            }
+            Class::Condvar => {
+                st.condvars += 1;
+                st.condvars - 1
+            }
+            Class::Atomic => {
+                st.atomics.push(AtomicSt::default());
+                st.atomics.len() - 1
+            }
+            Class::Cell => {
+                st.cells.push(CellSt::default());
+                st.cells.len() - 1
+            }
+        };
+        assert!(id < 0x00FF_FFFF, "model: too many objects of one class");
+        // Relaxed: same single-writer argument as the load above.
+        reg.store((self.exec.gen << 24) | (id as u64 + 1), Ordering::Relaxed);
+        id
+    }
+
+    /// Announce the next op and park until the controller grants it.
+    /// Returns with the state lock held and this thread marked `Running`;
+    /// the caller performs the op's state transition, then drops the guard
+    /// and runs free until its next op.
+    fn park(&self, intent: Intent, op: &'static str, obj: usize) -> StdGuard<'_, ExecState> {
+        let mut st = lock_st(&self.exec);
+        st.threads[self.tid].state = TState::Ready(intent);
+        st.active = None;
+        self.exec.cv.notify_all();
+        loop {
+            if st.abort {
+                drop(st);
+                abort_unwind();
+            }
+            if st.active == Some(self.tid) {
+                st.threads[self.tid].state = TState::Running;
+                push_trace(&mut st, self.tid, op, obj);
+                return st;
+            }
+            st = self.exec.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Re-park mid-op (state already set by the caller) and wait for the
+    /// next grant. Used by blocking loops: cv wait, join, lock retry.
+    fn repark<'a>(&'a self, mut st: StdGuard<'a, ExecState>) -> StdGuard<'a, ExecState> {
+        st.active = None;
+        self.exec.cv.notify_all();
+        loop {
+            if st.abort {
+                drop(st);
+                abort_unwind();
+            }
+            if st.active == Some(self.tid) {
+                st.threads[self.tid].state = TState::Running;
+                return st;
+            }
+            st = self.exec.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Raise a violation from a running thread and unwind it.
+    fn violate(&self, mut st: StdGuard<'_, ExecState>, kind: ViolationKind, detail: String) -> ! {
+        if st.violation.is_none() {
+            let v = build_violation(&st, kind, detail);
+            st.violation = Some(v);
+        }
+        st.abort = true;
+        self.exec.cv.notify_all();
+        drop(st);
+        abort_unwind()
+    }
+
+    // -- the op vocabulary (called by shims) --------------------------------
+
+    /// An atomic access: `acq`/`rel` describe the happens-before effect of
+    /// the chosen `Ordering`, `store` distinguishes a plain store (which
+    /// replaces the release sequence) from an RMW (which continues it).
+    /// `f` performs the real value operation while the grant is held.
+    pub(crate) fn atomic_op<R>(
+        &self,
+        id: usize,
+        op: &'static str,
+        acq: bool,
+        rel: bool,
+        store: bool,
+        f: impl FnOnce() -> R,
+    ) -> R {
+        let mut st = self.park(Intent::Plain, op, id);
+        if acq {
+            let c = std::mem::take(&mut st.atomics[id].release);
+            st.threads[self.tid].clock.join(&c);
+            st.atomics[id].release = c;
+        }
+        let tid = self.tid;
+        st.threads[tid].clock.tick(tid);
+        if store {
+            // A store replaces the release-sequence head: acquirers of the
+            // new value synchronize with this store only.
+            st.atomics[id].release =
+                if rel { st.threads[tid].clock.clone() } else { VClock::default() };
+        } else if rel {
+            // A release RMW joins into the existing release sequence.
+            let c = st.threads[tid].clock.clone();
+            st.atomics[id].release.join(&c);
+        }
+        // A relaxed RMW continues the release sequence untouched.
+        f()
+    }
+
+    /// A `RaceCell` access: FastTrack-style race check, then run `f` (the
+    /// actual data access) while the grant is held, so the model itself
+    /// never lets checked accesses overlap in real time.
+    pub(crate) fn cell_op<R>(&self, id: usize, write: bool, f: impl FnOnce() -> R) -> R {
+        let op = if write { "cell-write" } else { "cell-read" };
+        let mut st = self.park(Intent::Plain, op, id);
+        let tid = self.tid;
+        let (w_tid, w_time) = (st.cells[id].w_tid, st.cells[id].w_time);
+        if w_time > 0 && st.threads[tid].clock.get(w_tid) < w_time {
+            let detail = format!(
+                "{} of cell c{id} by {} races with the write by {}",
+                if write { "write" } else { "read" },
+                tname(&st, tid),
+                tname(&st, w_tid),
+            );
+            self.violate(st, ViolationKind::DataRace, detail);
+        }
+        if write {
+            let reads = std::mem::take(&mut st.cells[id].reads);
+            if !st.threads[tid].clock.dominates(&reads) {
+                let detail =
+                    format!("write of cell c{id} by {} races with a prior read", tname(&st, tid));
+                self.violate(st, ViolationKind::DataRace, detail);
+            }
+        }
+        st.threads[tid].clock.tick(tid);
+        let now = st.threads[tid].clock.get(tid);
+        if write {
+            st.cells[id].w_tid = tid;
+            st.cells[id].w_time = now;
+        } else {
+            st.cells[id].reads.set(tid, now);
+        }
+        f()
+    }
+
+    /// Blocking `Mutex::lock`.
+    pub(crate) fn mutex_lock(&self, id: usize) {
+        let mut st = self.park(Intent::Lock(id), "lock", id);
+        loop {
+            if st.mutexes[id].owner.is_none() {
+                st.mutexes[id].owner = Some(self.tid);
+                let c = st.mutexes[id].clock.clone();
+                st.threads[self.tid].clock.join(&c);
+                return;
+            }
+            // The controller only grants `Lock` while the mutex is free,
+            // so this retry is defensive; keep it for robustness.
+            st.threads[self.tid].state = TState::Ready(Intent::Lock(id));
+            st = self.repark(st);
+        }
+    }
+
+    /// `Mutex` release (runs from the guard's `Drop`).
+    pub(crate) fn mutex_unlock(&self, id: usize) {
+        let mut st = self.park(Intent::Plain, "unlock", id);
+        let tid = self.tid;
+        st.threads[tid].clock.tick(tid);
+        st.mutexes[id].clock = st.threads[tid].clock.clone();
+        st.mutexes[id].owner = None;
+    }
+
+    /// `Condvar::wait`: atomically release the mutex and park until some
+    /// notify re-readies this thread, then re-acquire.
+    pub(crate) fn condvar_wait(&self, cv: usize, mutex: usize) {
+        let mut st = self.park(Intent::Plain, "cv-wait", cv);
+        let tid = self.tid;
+        st.threads[tid].clock.tick(tid);
+        st.mutexes[mutex].clock = st.threads[tid].clock.clone();
+        st.mutexes[mutex].owner = None;
+        st.threads[tid].state = TState::Waiting(WaitOn::Cv { cv, mutex });
+        st = self.repark(st);
+        loop {
+            if st.mutexes[mutex].owner.is_none() {
+                st.mutexes[mutex].owner = Some(tid);
+                let c = st.mutexes[mutex].clock.clone();
+                st.threads[tid].clock.join(&c);
+                return;
+            }
+            st.threads[tid].state = TState::Ready(Intent::Reacquire(mutex));
+            st = self.repark(st);
+        }
+    }
+
+    /// `Condvar::notify_one` / `notify_all`. Waiters move to "re-acquire
+    /// the mutex"; a notify with no waiters is lost, exactly like the real
+    /// primitive — which is what makes lost-wakeup bugs findable.
+    pub(crate) fn condvar_notify(&self, cv: usize, all: bool) {
+        let op = if all { "notify-all" } else { "notify-one" };
+        let mut st = self.park(Intent::Plain, op, cv);
+        for th in st.threads.iter_mut() {
+            if let TState::Waiting(WaitOn::Cv { cv: c, mutex }) = th.state {
+                if c == cv {
+                    th.state = TState::Ready(Intent::Reacquire(mutex));
+                    if !all {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Register a child thread (the spawn edge). Returns its tid; the
+    /// caller then really spawns it with [`enter_thread`] at its top.
+    pub(crate) fn spawn_register(&self, name: String) -> Tid {
+        let mut st = self.park(Intent::Plain, "spawn", NO_OBJ);
+        let tid = self.tid;
+        st.threads[tid].clock.tick(tid);
+        let clock = st.threads[tid].clock.clone();
+        st.threads.push(ThreadSt { state: TState::Ready(Intent::Start), clock, name });
+        st.threads.len() - 1
+    }
+
+    /// Block until `target` finishes, then absorb its clock (join edge).
+    pub(crate) fn join_thread(&self, target: Tid) {
+        let mut st = self.park(Intent::Plain, "join", target);
+        loop {
+            if st.threads[target].state == TState::Finished {
+                let c = st.threads[target].clock.clone();
+                st.threads[self.tid].clock.join(&c);
+                return;
+            }
+            st.threads[self.tid].state = TState::Waiting(WaitOn::Join(target));
+            st = self.repark(st);
+        }
+    }
+}
+
+/// Abort an execution from *outside* the normal op protocol — used when a
+/// panic unwind is about to perform a real join on threads that are still
+/// parked in the scheduler. Records the panic as a violation (if nothing
+/// was recorded yet), raises the abort flag, and wakes everyone so parked
+/// threads unwind and real joins complete.
+pub(crate) fn abort_execution(exec: &Arc<ExecShared>, why: &str) {
+    let mut st = lock_st(exec);
+    if st.violation.is_none() {
+        let v = build_violation(&st, ViolationKind::Panic, why.to_string());
+        st.violation = Some(v);
+    }
+    st.abort = true;
+    exec.cv.notify_all();
+}
+
+/// Body wrapper for every controlled thread: installs the context, waits
+/// for its start grant, runs `f`, and performs finish bookkeeping (wake
+/// joiners, record panics as violations, re-raise the payload).
+pub(crate) fn enter_thread<T>(exec: Arc<ExecShared>, tid: Tid, f: impl FnOnce() -> T) -> T {
+    let ctx = Ctx { exec, tid };
+    CTX.with(|c| *c.borrow_mut() = Some(ctx.clone()));
+    // Start grant: the spawn edge already seeded our clock.
+    {
+        let mut st = lock_st(&ctx.exec);
+        loop {
+            if st.abort {
+                drop(st);
+                CTX.with(|c| *c.borrow_mut() = None);
+                abort_unwind();
+            }
+            if st.active == Some(tid) {
+                st.threads[tid].state = TState::Running;
+                push_trace(&mut st, tid, "start", NO_OBJ);
+                break;
+            }
+            st = ctx.exec.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+    let mut st = lock_st(&ctx.exec);
+    if let Err(p) = &out {
+        if !p.is::<ModelAbort>() && st.violation.is_none() {
+            let detail = format!("{} panicked: {}", tname(&st, tid), payload_msg(p));
+            let v = build_violation(&st, ViolationKind::Panic, detail);
+            st.violation = Some(v);
+            st.abort = true;
+        }
+    }
+    st.threads[tid].clock.tick(tid);
+    st.threads[tid].state = TState::Finished;
+    for th in st.threads.iter_mut() {
+        if th.state == TState::Waiting(WaitOn::Join(tid)) {
+            th.state = TState::Ready(Intent::Plain);
+        }
+    }
+    st.active = None;
+    ctx.exec.cv.notify_all();
+    drop(st);
+    CTX.with(|c| *c.borrow_mut() = None);
+    match out {
+        Ok(v) => v,
+        Err(p) => std::panic::resume_unwind(p),
+    }
+}
+
+fn payload_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+fn tname(st: &ExecState, tid: Tid) -> String {
+    format!("t{tid}({})", st.threads[tid].name)
+}
+
+fn push_trace(st: &mut ExecState, tid: Tid, op: &'static str, obj: usize) {
+    if st.trace.len() >= 2 * TRACE_KEEP {
+        st.trace.drain(..TRACE_KEEP);
+    }
+    st.trace.push((tid, op, obj));
+}
+
+// ---------------------------------------------------------------------------
+// Violations and reports
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ViolationKind {
+    /// Two `RaceCell` accesses, at least one a write, with no
+    /// happens-before edge between them.
+    DataRace,
+    /// Every live thread blocked (includes lost condvar wakeups).
+    Deadlock,
+    /// User code panicked (an assertion failed in some schedule).
+    Panic,
+    /// A single schedule exceeded the step cap (livelock guard).
+    Livelock,
+    /// The schedule cap was hit before the search completed.
+    SchedulesExhausted,
+}
+
+/// A counterexample: what went wrong, and the schedule's recent op trace.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub kind: ViolationKind,
+    pub message: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:?}: {}", self.kind, self.message)
+    }
+}
+
+fn build_violation(st: &ExecState, kind: ViolationKind, detail: String) -> Violation {
+    let mut msg = detail;
+    msg.push_str("\n  threads:");
+    for (t, th) in st.threads.iter().enumerate() {
+        let state = match &th.state {
+            TState::Ready(i) => format!("ready {i:?}"),
+            TState::Waiting(w) => format!("waiting {w:?}"),
+            TState::Running => "running".to_string(),
+            TState::Finished => "finished".to_string(),
+        };
+        msg.push_str(&format!("\n    t{t}({}): {state}", th.name));
+    }
+    msg.push_str("\n  recent ops (oldest first):");
+    let tail = st.trace.len().saturating_sub(TRACE_KEEP);
+    for &(t, op, obj) in &st.trace[tail..] {
+        if obj == NO_OBJ {
+            msg.push_str(&format!("\n    t{t} {op}"));
+        } else {
+            msg.push_str(&format!("\n    t{t} {op} #{obj}"));
+        }
+    }
+    Violation { kind, message: msg }
+}
+
+/// Statistics from a completed (violation-free) search.
+#[derive(Clone, Copy, Debug)]
+pub struct Report {
+    /// Schedules fully executed.
+    pub schedules: u64,
+    /// Longest schedule, in scheduler grants.
+    pub max_steps: u64,
+}
+
+/// Search configuration. `Default` reads the `ASTIR_MODEL_*` env knobs so
+/// CI can bound runtime without touching test code.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelOpts {
+    /// Maximum involuntary context switches per schedule
+    /// (`ASTIR_MODEL_PREEMPTIONS`, default 2).
+    pub preemption_bound: usize,
+    /// Abort the search after this many schedules
+    /// (`ASTIR_MODEL_MAX_SCHEDULES`, default 2,000,000).
+    pub max_schedules: u64,
+    /// Per-schedule grant cap — a livelock guard
+    /// (`ASTIR_MODEL_MAX_STEPS`, default 100,000).
+    pub max_steps: u64,
+}
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+impl Default for ModelOpts {
+    fn default() -> Self {
+        ModelOpts {
+            preemption_bound: env_u64("ASTIR_MODEL_PREEMPTIONS", 2) as usize,
+            max_schedules: env_u64("ASTIR_MODEL_MAX_SCHEDULES", 2_000_000),
+            max_steps: env_u64("ASTIR_MODEL_MAX_STEPS", 100_000),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mutation hooks (the "does the checker have teeth" witness)
+// ---------------------------------------------------------------------------
+
+// Process-global because the weakened ordering must be visible on pool
+// worker threads, not just the test thread. Tests that flip it serialize
+// themselves (see tests/model_check.rs).
+static WEAKEN_POOL_PENDING: AtomicBool = AtomicBool::new(false);
+
+/// Make [`crate::service`]'s `pending` countdown use `Relaxed` instead of
+/// `AcqRel` inside the model — the mutation-witness tests prove the
+/// checker reports the resulting race. No effect outside `model` builds.
+pub fn set_weaken_pool_pending(on: bool) {
+    // SeqCst: a test knob flipped around whole model runs; cost is nil and
+    // the strongest ordering keeps the flip unambiguous.
+    WEAKEN_POOL_PENDING.store(on, Ordering::SeqCst);
+}
+
+/// Read the mutation knob (see [`set_weaken_pool_pending`]).
+pub fn weaken_pool_pending() -> bool {
+    // SeqCst: see `set_weaken_pool_pending`.
+    WEAKEN_POOL_PENDING.load(Ordering::SeqCst)
+}
+
+// ---------------------------------------------------------------------------
+// The controller: DFS over schedules
+// ---------------------------------------------------------------------------
+
+/// One choice point: the candidate threads (first = "continue the current
+/// thread" when possible) and which one this schedule took.
+struct Decision {
+    cands: Vec<Tid>,
+    idx: usize,
+}
+
+static GEN: AtomicU64 = AtomicU64::new(1);
+
+/// Explore `f` under all schedules up to the preemption bound; panic with
+/// the counterexample on any violation. See [`check_with`].
+pub fn check(f: impl Fn() + Send + Sync + 'static) -> Report {
+    match check_with(&ModelOpts::default(), f) {
+        Ok(r) => r,
+        Err(v) => panic!("model check failed\n{v}"),
+    }
+}
+
+/// Explore `f` under all thread schedules with at most
+/// `opts.preemption_bound` involuntary switches, re-running it once per
+/// schedule. Returns search statistics, or the first violation found.
+///
+/// `f` must be a *closed, deterministic* program: it creates its own
+/// threads and shared state (through [`crate::sync`]) and leaves nothing
+/// running. State created outside `f` and mutated inside it breaks replay
+/// determinism and is reported as such.
+pub fn check_with(
+    opts: &ModelOpts,
+    f: impl Fn() + Send + Sync + 'static,
+) -> Result<Report, Violation> {
+    assert!(cur().is_none(), "model::check may not be nested inside a model run");
+    let f = Arc::new(f);
+    let mut trail: Vec<Decision> = Vec::new();
+    let mut report = Report { schedules: 0, max_steps: 0 };
+    loop {
+        if report.schedules >= opts.max_schedules {
+            return Err(Violation {
+                kind: ViolationKind::SchedulesExhausted,
+                message: format!(
+                    "search stopped after {} schedules (ASTIR_MODEL_MAX_SCHEDULES); \
+                     shrink the program or raise the cap",
+                    report.schedules
+                ),
+            });
+        }
+        report.schedules += 1;
+        let (violation, steps) = run_one_schedule(opts, &f, &mut trail);
+        report.max_steps = report.max_steps.max(steps);
+        if let Some(mut v) = violation {
+            v.message.push_str(&format!("\n  (schedule #{})", report.schedules));
+            return Err(v);
+        }
+        // Backtrack: advance the deepest decision with an untried
+        // candidate; drop everything below it.
+        loop {
+            match trail.last_mut() {
+                None => return Ok(report),
+                Some(d) if d.idx + 1 < d.cands.len() => {
+                    d.idx += 1;
+                    break;
+                }
+                Some(_) => {
+                    trail.pop();
+                }
+            }
+        }
+    }
+}
+
+/// Execute one schedule: replay the decisions already in `trail`, then
+/// extend it greedily (always preferring to continue the running thread).
+fn run_one_schedule(
+    opts: &ModelOpts,
+    f: &Arc<impl Fn() + Send + Sync + 'static>,
+    trail: &mut Vec<Decision>,
+) -> (Option<Violation>, u64) {
+    let exec = Arc::new(ExecShared {
+        st: StdMutex::new(ExecState {
+            threads: vec![ThreadSt {
+                state: TState::Ready(Intent::Start),
+                clock: VClock::default(),
+                name: "root".to_string(),
+            }],
+            mutexes: Vec::new(),
+            atomics: Vec::new(),
+            cells: Vec::new(),
+            condvars: 0,
+            active: None,
+            violation: None,
+            abort: false,
+            trace: Vec::new(),
+        }),
+        cv: StdCondvar::new(),
+        // SeqCst: one increment per schedule; uniqueness is all that matters.
+        gen: GEN.fetch_add(1, Ordering::SeqCst),
+    });
+    let root = {
+        let exec = Arc::clone(&exec);
+        let f = Arc::clone(f);
+        std::thread::Builder::new()
+            .name("astir-model-root".into())
+            .spawn(move || enter_thread(exec, 0, move || f()))
+            .expect("spawn model root thread")
+    };
+    let mut steps: u64 = 0;
+    let mut depth = 0usize; // next index into `trail`
+    let mut prev: Option<Tid> = None;
+    let mut preemptions = 0usize;
+    loop {
+        let mut st = lock_st(&exec);
+        while st.active.is_some() && !st.abort {
+            st = exec.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+        if st.violation.is_some() || st.abort {
+            drain(&exec, st);
+            break;
+        }
+        if st.threads.iter().all(|t| t.state == TState::Finished) {
+            drop(st);
+            break;
+        }
+        let enabled: Vec<Tid> = st
+            .threads
+            .iter()
+            .enumerate()
+            .filter_map(|(t, th)| match &th.state {
+                TState::Ready(Intent::Start) | TState::Ready(Intent::Plain) => Some(t),
+                TState::Ready(Intent::Lock(m)) | TState::Ready(Intent::Reacquire(m)) => {
+                    st.mutexes[*m].owner.is_none().then_some(t)
+                }
+                TState::Waiting(_) | TState::Finished => None,
+                TState::Running => unreachable!("a thread is running while the controller decides"),
+            })
+            .collect();
+        if enabled.is_empty() {
+            let v = build_violation(
+                &st,
+                ViolationKind::Deadlock,
+                "all live threads are blocked (deadlock or lost wakeup)".to_string(),
+            );
+            st.violation = Some(v);
+            drain(&exec, st);
+            break;
+        }
+        steps += 1;
+        if steps > opts.max_steps {
+            let v = build_violation(
+                &st,
+                ViolationKind::Livelock,
+                format!("schedule exceeded {} grants (ASTIR_MODEL_MAX_STEPS)", opts.max_steps),
+            );
+            st.violation = Some(v);
+            drain(&exec, st);
+            break;
+        }
+        // Candidate order: continue `prev` first; alternatives only while
+        // the preemption budget lasts. A blocked/finished `prev` makes the
+        // switch involuntary, which costs nothing.
+        let mut cands: Vec<Tid>;
+        let has_prev = prev.is_some_and(|p| enabled.contains(&p));
+        if has_prev {
+            let p = prev.expect("has_prev");
+            cands = vec![p];
+            if preemptions < opts.preemption_bound {
+                cands.extend(enabled.iter().copied().filter(|&t| t != p));
+            }
+        } else {
+            cands = enabled;
+        }
+        let choice = if depth < trail.len() {
+            let d = &trail[depth];
+            assert!(
+                d.cands == cands,
+                "model program is nondeterministic: replay diverged at step {steps} \
+                 (expected candidates {:?}, recomputed {:?})",
+                d.cands,
+                cands
+            );
+            d.cands[d.idx]
+        } else {
+            trail.push(Decision { cands: cands.clone(), idx: 0 });
+            cands[0]
+        };
+        if has_prev && Some(choice) != prev {
+            preemptions += 1;
+        }
+        depth += 1;
+        prev = Some(choice);
+        st.active = Some(choice);
+        exec.cv.notify_all();
+        drop(st);
+    }
+    // All controlled threads have finished or are unwinding; the root
+    // OS thread (which transitively owns the others) is ready to join.
+    let joined = root.join();
+    let violation = {
+        let mut st = lock_st(&exec);
+        if st.violation.is_none() {
+            if let Err(p) = &joined {
+                if !p.is::<ModelAbort>() {
+                    st.violation = Some(Violation {
+                        kind: ViolationKind::Panic,
+                        message: format!("root thread panicked: {}", payload_msg(p.as_ref())),
+                    });
+                }
+            }
+        }
+        st.violation.take()
+    };
+    (violation, steps)
+}
+
+/// Tear down a schedule: set the abort flag and wake every parked thread
+/// so it unwinds with [`ModelAbort`].
+fn drain(exec: &ExecShared, mut st: StdGuard<'_, ExecState>) {
+    st.abort = true;
+    exec.cv.notify_all();
+    drop(st);
+}

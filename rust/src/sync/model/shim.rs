@@ -1,0 +1,504 @@
+//! Instrumented drop-in replacements for the doorway's primitives.
+//!
+//! Same names and signatures as the `std` re-exports in
+//! [`crate::sync`]'s normal personality, so the rest of the crate
+//! compiles unchanged under `--features model`. Each operation asks
+//! [`super::cur`] whether the calling thread belongs to an active
+//! [`super::check`] run: if yes, the op goes through the scheduler (park,
+//! grant, vector-clock bookkeeping) before touching the real primitive;
+//! if no — outside any model run, or while unwinding during tear-down —
+//! it falls straight through to `std`, so `model`-feature builds still
+//! behave normally end-to-end.
+//!
+//! Two deliberate asymmetries with `std`:
+//!
+//! * Poisoning is mirrored structurally ([`PoisonError::into_inner`]
+//!   exists so `.unwrap_or_else(|e| e.into_inner())` call sites compile
+//!   against both personalities) but model-held mutexes never poison —
+//!   a panic inside a model run aborts the whole schedule instead.
+//! * [`thread::scope`]'s closure takes `&Scope<'scope, 'env>` with a free
+//!   outer lifetime rather than `std`'s `&'scope Scope<'scope, 'env>`;
+//!   every call site that works with `std`'s signature also works with
+//!   this one, and it lets the wrapper stay safe code.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::AtomicU64 as StdAtomicU64;
+use std::sync::atomic::Ordering as StdOrdering;
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex};
+
+use super::{cur, Class, Ctx};
+
+fn is_acquire(ord: StdOrdering) -> bool {
+    matches!(ord, StdOrdering::Acquire | StdOrdering::AcqRel | StdOrdering::SeqCst)
+}
+
+fn is_release(ord: StdOrdering) -> bool {
+    matches!(ord, StdOrdering::Release | StdOrdering::AcqRel | StdOrdering::SeqCst)
+}
+
+/// Resolve the calling thread's model context and the object's
+/// per-execution id in one step (`None` = passthrough).
+fn registered(reg: &StdAtomicU64, class: Class) -> Option<(Ctx, usize)> {
+    cur().map(|ctx| {
+        let id = ctx.register(reg, class);
+        (ctx, id)
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Atomics
+// ---------------------------------------------------------------------------
+
+/// Instrumented atomics; `Ordering` itself is the `std` enum (the model
+/// interprets it rather than redefining it).
+pub mod atomic {
+    pub use std::sync::atomic::Ordering;
+
+    use super::{is_acquire, is_release, registered, Class, StdAtomicU64};
+
+    macro_rules! model_atomic {
+        ($name:ident, $std:ty, $val:ty) => {
+            /// Instrumented stand-in for the `std` atomic of the same name.
+            #[derive(Debug)]
+            pub struct $name {
+                inner: $std,
+                reg: StdAtomicU64,
+            }
+
+            impl $name {
+                pub const fn new(v: $val) -> Self {
+                    Self { inner: <$std>::new(v), reg: StdAtomicU64::new(0) }
+                }
+
+                /// Run one value operation, routed through the scheduler
+                /// when a model run is active. `acq`/`rel` describe the
+                /// happens-before effect of the chosen ordering; `store`
+                /// marks a plain store (replaces the release sequence).
+                fn op<R>(
+                    &self,
+                    name: &'static str,
+                    acq: bool,
+                    rel: bool,
+                    store: bool,
+                    f: impl FnOnce() -> R,
+                ) -> R {
+                    match registered(&self.reg, Class::Atomic) {
+                        Some((ctx, id)) => ctx.atomic_op(id, name, acq, rel, store, f),
+                        None => f(),
+                    }
+                }
+
+                pub fn load(&self, ord: Ordering) -> $val {
+                    self.op("load", is_acquire(ord), false, false, || self.inner.load(ord))
+                }
+
+                pub fn store(&self, v: $val, ord: Ordering) {
+                    self.op("store", false, is_release(ord), true, || self.inner.store(v, ord))
+                }
+
+                pub fn swap(&self, v: $val, ord: Ordering) -> $val {
+                    let (acq, rel) = (is_acquire(ord), is_release(ord));
+                    self.op("swap", acq, rel, false, || self.inner.swap(v, ord))
+                }
+            }
+        };
+    }
+
+    macro_rules! model_atomic_int {
+        ($name:ident, $val:ty) => {
+            impl $name {
+                pub fn fetch_add(&self, v: $val, ord: Ordering) -> $val {
+                    let (acq, rel) = (is_acquire(ord), is_release(ord));
+                    self.op("fetch_add", acq, rel, false, || self.inner.fetch_add(v, ord))
+                }
+
+                pub fn fetch_sub(&self, v: $val, ord: Ordering) -> $val {
+                    let (acq, rel) = (is_acquire(ord), is_release(ord));
+                    self.op("fetch_sub", acq, rel, false, || self.inner.fetch_sub(v, ord))
+                }
+            }
+        };
+    }
+
+    model_atomic!(AtomicBool, std::sync::atomic::AtomicBool, bool);
+    model_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+    model_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+    model_atomic!(AtomicI64, std::sync::atomic::AtomicI64, i64);
+    model_atomic_int!(AtomicUsize, usize);
+    model_atomic_int!(AtomicU64, u64);
+    model_atomic_int!(AtomicI64, i64);
+}
+
+// ---------------------------------------------------------------------------
+// Mutex + Condvar
+// ---------------------------------------------------------------------------
+
+/// Structural stand-in for [`std::sync::PoisonError`], so call sites can
+/// `.unwrap_or_else(|e| e.into_inner())` against either personality.
+pub struct PoisonError<G>(G);
+
+impl<G> PoisonError<G> {
+    pub fn into_inner(self) -> G {
+        self.0
+    }
+}
+
+impl<G> std::fmt::Debug for PoisonError<G> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("PoisonError { .. }")
+    }
+}
+
+pub type LockResult<G> = Result<G, PoisonError<G>>;
+
+/// Instrumented mutex: logical ownership lives in the scheduler, the data
+/// still sits in a real `std` mutex (whose `try_lock` must succeed by the
+/// time the scheduler grants the acquisition).
+#[derive(Debug)]
+pub struct Mutex<T> {
+    reg: StdAtomicU64,
+    data: StdMutex<T>,
+}
+
+impl<T> Mutex<T> {
+    pub const fn new(t: T) -> Self {
+        Mutex { reg: StdAtomicU64::new(0), data: StdMutex::new(t) }
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        match registered(&self.reg, Class::Mutex) {
+            Some((ctx, id)) => {
+                ctx.mutex_lock(id);
+                let real = self
+                    .data
+                    .try_lock()
+                    .unwrap_or_else(|_| panic!("model mutex m{id}: real lock held at grant"));
+                Ok(MutexGuard { model: Some((self, id)), real: Some(real) })
+            }
+            None => match self.data.lock() {
+                Ok(g) => Ok(MutexGuard { model: None, real: Some(g) }),
+                Err(p) => Err(PoisonError(MutexGuard { model: None, real: Some(p.into_inner()) })),
+            },
+        }
+    }
+}
+
+/// Guard for [`Mutex`]; dropping it performs the model's release edge
+/// (after releasing the real lock — no other model thread can attempt the
+/// real lock until the scheduler sees the release anyway).
+pub struct MutexGuard<'a, T> {
+    model: Option<(&'a Mutex<T>, usize)>,
+    real: Option<std::sync::MutexGuard<'a, T>>,
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.real.as_ref().expect("guard holds the real lock")
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.real.as_mut().expect("guard holds the real lock")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        drop(self.real.take());
+        if let Some((_, id)) = self.model {
+            if let Some(ctx) = cur() {
+                ctx.mutex_unlock(id);
+            }
+        }
+    }
+}
+
+/// Instrumented condvar. Inside a model run, waiting and notifying go
+/// through the scheduler (no real blocking, no spurious wakeups — which
+/// is what makes lost-wakeup bugs reproducible); outside one, it is the
+/// real primitive.
+#[derive(Debug, Default)]
+pub struct Condvar {
+    reg: StdAtomicU64,
+    inner: StdCondvar,
+}
+
+impl Condvar {
+    pub const fn new() -> Self {
+        Condvar { reg: StdAtomicU64::new(0), inner: StdCondvar::new() }
+    }
+
+    pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        let model = guard.model;
+        match (cur(), model) {
+            (Some(ctx), Some((mx, mid))) => {
+                let cv = ctx.register(&self.reg, Class::Condvar);
+                // Dismantle the guard by hand: the model wait performs the
+                // release edge itself, so the guard's Drop must not.
+                drop(guard.real.take());
+                guard.model = None;
+                drop(guard);
+                ctx.condvar_wait(cv, mid);
+                let real = mx.data.try_lock().unwrap_or_else(|_| {
+                    panic!("model mutex m{mid}: real lock held at cv re-acquire")
+                });
+                Ok(MutexGuard { model: Some((mx, mid)), real: Some(real) })
+            }
+            _ => {
+                let real = guard.real.take().expect("guard holds the real lock");
+                guard.model = None;
+                drop(guard);
+                match self.inner.wait(real) {
+                    Ok(g) => Ok(MutexGuard { model, real: Some(g) }),
+                    Err(p) => Err(PoisonError(MutexGuard { model, real: Some(p.into_inner()) })),
+                }
+            }
+        }
+    }
+
+    pub fn notify_one(&self) {
+        match registered(&self.reg, Class::Condvar) {
+            Some((ctx, cv)) => ctx.condvar_notify(cv, false),
+            None => self.inner.notify_one(),
+        }
+    }
+
+    pub fn notify_all(&self) {
+        match registered(&self.reg, Class::Condvar) {
+            Some((ctx, cv)) => ctx.condvar_notify(cv, true),
+            None => self.inner.notify_all(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RaceCell
+// ---------------------------------------------------------------------------
+
+/// The instrumented face of [`crate::sync`]'s `RaceCell`: every access is
+/// race-checked against the model's happens-before relation before the
+/// pointer is handed to the closure. The scheduler's grants exclude real
+/// overlap, so checked accesses are well-defined even when they *would*
+/// race — the violation is reported instead of executed.
+#[derive(Debug)]
+pub struct RaceCell<T> {
+    reg: StdAtomicU64,
+    cell: UnsafeCell<T>,
+}
+
+impl<T> RaceCell<T> {
+    pub const fn new(v: T) -> Self {
+        RaceCell { reg: StdAtomicU64::new(0), cell: UnsafeCell::new(v) }
+    }
+
+    /// Run `f` with a read pointer to the contents (modeled as a read).
+    pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+        match registered(&self.reg, Class::Cell) {
+            Some((ctx, id)) => ctx.cell_op(id, false, || f(self.cell.get())),
+            None => f(self.cell.get()),
+        }
+    }
+
+    /// Run `f` with a write pointer to the contents (modeled as a write).
+    pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+        match registered(&self.reg, Class::Cell) {
+            Some((ctx, id)) => ctx.cell_op(id, true, || f(self.cell.get())),
+            None => f(self.cell.get()),
+        }
+    }
+
+    /// Exclusive access through a unique borrow (never racy).
+    pub fn get_mut(&mut self) -> &mut T {
+        self.cell.get_mut()
+    }
+
+    /// Consume the cell (exclusive by ownership; never racy).
+    pub fn into_inner(self) -> T {
+        self.cell.into_inner()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threads
+// ---------------------------------------------------------------------------
+
+/// Instrumented thread spawning. Inside a model run, spawn/join become
+/// scheduler edges; outside one, everything delegates to `std`.
+pub mod thread {
+    pub use std::thread::{available_parallelism, sleep};
+
+    use super::super::{abort_execution, cur, enter_thread, ExecShared, Tid};
+    use super::Arc;
+
+    /// Mirror of [`std::thread::Builder`] (only `name` + `spawn`, which is
+    /// all the crate uses).
+    #[derive(Debug)]
+    pub struct Builder {
+        inner: std::thread::Builder,
+        name: Option<String>,
+    }
+
+    impl Builder {
+        #[allow(clippy::new_without_default)]
+        pub fn new() -> Builder {
+            Builder { inner: std::thread::Builder::new(), name: None }
+        }
+
+        pub fn name(self, name: String) -> Builder {
+            Builder { inner: self.inner.name(name.clone()), name: Some(name) }
+        }
+
+        pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+        where
+            F: FnOnce() -> T + Send + 'static,
+            T: Send + 'static,
+        {
+            match cur() {
+                Some(ctx) => {
+                    let name = self.name.unwrap_or_else(|| "child".to_string());
+                    let tid = ctx.spawn_register(name);
+                    let exec = Arc::clone(&ctx.exec);
+                    let body_exec = Arc::clone(&exec);
+                    let real = self.inner.spawn(move || enter_thread(body_exec, tid, f))?;
+                    Ok(JoinHandle { real, model: Some((exec, tid)) })
+                }
+                None => Ok(JoinHandle { real: self.inner.spawn(f)?, model: None }),
+            }
+        }
+    }
+
+    /// Join a model child. During a normal run this is the scheduler's
+    /// join edge. During a *panic unwind* (destructors joining worker
+    /// threads while the stack burns down) the owning execution is
+    /// aborted first, so parked children wake and the subsequent real
+    /// join cannot hang the scheduler.
+    fn model_join(model: &Option<(Arc<ExecShared>, Tid)>) {
+        let Some((exec, tid)) = model else { return };
+        if std::thread::panicking() {
+            abort_execution(exec, "panic unwound into a join of a live model thread");
+            return;
+        }
+        if let Some(ctx) = cur() {
+            if Arc::ptr_eq(&ctx.exec, exec) {
+                ctx.join_thread(*tid);
+            }
+        }
+    }
+
+    /// Mirror of [`std::thread::JoinHandle`].
+    pub struct JoinHandle<T> {
+        real: std::thread::JoinHandle<T>,
+        model: Option<(Arc<ExecShared>, Tid)>,
+    }
+
+    impl<T> JoinHandle<T> {
+        pub fn join(self) -> std::thread::Result<T> {
+            model_join(&self.model);
+            self.real.join()
+        }
+    }
+
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        Builder::new().spawn(f).expect("failed to spawn thread")
+    }
+
+    /// Mirror of [`std::thread::Scope`]. Children spawned here are
+    /// model-joined before the underlying real scope joins them, so the
+    /// implicit join at scope exit can never block the scheduler.
+    pub struct Scope<'scope, 'env: 'scope> {
+        inner: &'scope std::thread::Scope<'scope, 'env>,
+        model: Option<ScopeModel>,
+    }
+
+    struct ScopeModel {
+        exec: Arc<ExecShared>,
+        children: std::sync::Mutex<Vec<Tid>>,
+    }
+
+    impl<'scope, 'env> Scope<'scope, 'env> {
+        pub fn spawn<F, T>(&self, f: F) -> ScopedJoinHandle<'scope, T>
+        where
+            F: FnOnce() -> T + Send + 'scope,
+            T: Send + 'scope,
+        {
+            if let (Some(m), Some(ctx)) = (&self.model, cur()) {
+                if Arc::ptr_eq(&ctx.exec, &m.exec) {
+                    let tid = ctx.spawn_register("scoped".to_string());
+                    m.children.lock().unwrap_or_else(|p| p.into_inner()).push(tid);
+                    let exec = Arc::clone(&m.exec);
+                    let real = self.inner.spawn(move || enter_thread(exec, tid, f));
+                    let model = Some((Arc::clone(&m.exec), tid));
+                    return ScopedJoinHandle { real, model };
+                }
+            }
+            ScopedJoinHandle { real: self.inner.spawn(f), model: None }
+        }
+    }
+
+    /// Mirror of [`std::thread::ScopedJoinHandle`].
+    pub struct ScopedJoinHandle<'scope, T> {
+        real: std::thread::ScopedJoinHandle<'scope, T>,
+        model: Option<(Arc<ExecShared>, Tid)>,
+    }
+
+    impl<T> ScopedJoinHandle<'_, T> {
+        pub fn join(self) -> std::thread::Result<T> {
+            model_join(&self.model);
+            self.real.join()
+        }
+    }
+
+    /// Mirror of [`std::thread::scope`]. The closure's argument type is
+    /// `&Scope<'scope, 'env>` with a free outer lifetime (slightly looser
+    /// than `std`'s `&'scope Scope<'scope, 'env>`); call sites written
+    /// against `std`'s signature work unchanged.
+    ///
+    /// A panic inside the closure aborts the owning model execution
+    /// *before* the real scope's implicit join runs, so parked children
+    /// unwind instead of deadlocking the scheduler.
+    pub fn scope<'env, F, T>(f: F) -> T
+    where
+        F: for<'scope> FnOnce(&Scope<'scope, 'env>) -> T,
+    {
+        let model = cur().map(|ctx| ScopeModel {
+            exec: Arc::clone(&ctx.exec),
+            children: std::sync::Mutex::new(Vec::new()),
+        });
+        std::thread::scope(|s| {
+            let wrap = Scope { inner: s, model };
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&wrap)));
+            if let Some(m) = &wrap.model {
+                match &out {
+                    Ok(_) => {
+                        if let Some(ctx) = cur() {
+                            if Arc::ptr_eq(&ctx.exec, &m.exec) {
+                                let kids = m
+                                    .children
+                                    .lock()
+                                    .unwrap_or_else(|p| p.into_inner())
+                                    .clone();
+                                for tid in kids {
+                                    ctx.join_thread(tid);
+                                }
+                            }
+                        }
+                    }
+                    Err(_) => {
+                        abort_execution(&m.exec, "panic inside a scoped model region");
+                    }
+                }
+            }
+            match out {
+                Ok(v) => v,
+                Err(p) => std::panic::resume_unwind(p),
+            }
+        })
+    }
+}

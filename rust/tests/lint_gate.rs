@@ -1,0 +1,16 @@
+//! The `astir lint` rules, enforced on this very source tree as an
+//! ordinary test: `cargo test` fails the moment an atomic loses its
+//! ordering justification, a module bypasses the `crate::sync` doorway,
+//! or an `unsafe` block sheds its SAFETY comment. CI additionally runs
+//! the `astir lint` subcommand, which prints per-finding locations.
+
+use std::path::Path;
+
+#[test]
+#[cfg_attr(miri, ignore = "reads the source tree from disk; no UB to find")]
+fn source_tree_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let findings = astir::lint::lint_tree(root).expect("lint walk failed");
+    let rendered: Vec<String> = findings.iter().map(|f| f.to_string()).collect();
+    assert!(rendered.is_empty(), "lint findings:\n{}", rendered.join("\n"));
+}

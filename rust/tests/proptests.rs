@@ -232,7 +232,7 @@ fn prop_measure_op_adjoint_consistency() {
             Ensemble::Bernoulli,
             Ensemble::PartialDct,
         ];
-        let mut ops: Vec<(std::sync::Arc<Operator>, String)> = Vec::new();
+        let mut ops: Vec<(astir::sync::Arc<Operator>, String)> = Vec::new();
         for e in dense_ensembles {
             let spec = ProblemSpec { n, m, b, s, ensemble: e, ..ProblemSpec::tiny() };
             ops.push((spec.generate(g.rng()).op, format!("dense/{e:?}")));

@@ -6,7 +6,7 @@
 //! lockstep batched recovery degenerates to the solo algorithm exactly at
 //! batch size one.
 
-use std::sync::Arc;
+use astir::sync::Arc;
 
 use astir::algorithms::Alg;
 use astir::async_runtime::{run_async, run_async_with, AsyncOpts};
@@ -27,6 +27,7 @@ fn shared_problems(spec: &ProblemSpec, count: usize, seed: u64) -> Arc<Vec<Probl
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "full solve loops are too slow under Miri; see the cheap-jobs variant")]
 fn pool_results_bit_identical_across_worker_counts() {
     // The satellite guarantee: same jobs, same seeds, ANY worker count —
     // identical bits. 24 jobs over 1/4/8 workers (jobs >> workers for the
@@ -68,22 +69,26 @@ fn pool_results_bit_identical_across_worker_counts() {
 
 #[test]
 fn pool_saturates_with_many_more_jobs_than_workers() {
-    // 64 jobs on 4 workers: every job runs exactly once, results land in
-    // job order, and the pool survives repeated saturated batches.
+    // Jobs >> workers: every job runs exactly once, results land in job
+    // order, and the pool survives repeated saturated batches. Miri runs
+    // a shrunk instance (same protocol, fewer interpreter steps).
+    let jobs = if cfg!(miri) { 12 } else { 64 };
+    let spins = if cfg!(miri) { 8 } else { 100 };
+    let rounds = if cfg!(miri) { 2 } else { 3 };
     let pool = RecoveryPool::new(4);
-    for round in 0..3u64 {
-        let out: Vec<u64> = pool.run_jobs(64, round, |i, rng| {
+    for round in 0..rounds {
+        let out: Vec<u64> = pool.run_jobs(jobs, round, move |i, rng| {
             // A nontrivial body so claims interleave across workers.
             let mut acc = rng.next_u64();
-            for _ in 0..100 {
+            for _ in 0..spins {
                 acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i as u64);
             }
             acc
         });
-        assert_eq!(out.len(), 64);
-        let again: Vec<u64> = pool.run_jobs(64, round, |i, rng| {
+        assert_eq!(out.len(), jobs);
+        let again: Vec<u64> = pool.run_jobs(jobs, round, move |i, rng| {
             let mut acc = rng.next_u64();
-            for _ in 0..100 {
+            for _ in 0..spins {
                 acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i as u64);
             }
             acc
@@ -93,10 +98,32 @@ fn pool_saturates_with_many_more_jobs_than_workers() {
 }
 
 #[test]
+fn pool_results_bit_identical_across_worker_counts_with_cheap_jobs() {
+    // The Miri-sized face of the bit-identity guarantee: any worker count,
+    // identical bits — with arithmetic jobs, so the run is all protocol
+    // (claim ticket, slot writes, batch retire) and no solver time.
+    let jobs = if cfg!(miri) { 8 } else { 24 };
+    let run = |workers: usize| {
+        let pool = RecoveryPool::new(workers);
+        pool.run_jobs(jobs, 77, |i, rng| rng.next_u64().wrapping_add(i as u64))
+    };
+    let base = run(1);
+    for workers in [2usize, 3] {
+        assert_eq!(run(workers), base, "worker count {workers} changed the bits");
+    }
+}
+
+#[test]
 fn pool_zero_and_one_job_edge_cases() {
     let pool = RecoveryPool::new(3);
     let none: Vec<u8> = pool.run_jobs(0, 9, |_, _| 1);
     assert!(none.is_empty());
+    if cfg!(miri) {
+        // Same one-job hand-off, interpreter-sized body.
+        let one = pool.run_jobs(1, 13, |i, rng| rng.next_u64() ^ i as u64);
+        assert_eq!(one.len(), 1);
+        return;
+    }
     let problems = shared_problems(&easy_spec(), 1, 12);
     let ps = Arc::clone(&problems);
     let one = pool.run_jobs(1, 13, move |i, rng| {
@@ -108,6 +135,7 @@ fn pool_zero_and_one_job_edge_cases() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "full solve loops are too slow under Miri")]
 fn pool_single_job_bitwise_matches_spawn_per_call_runtime() {
     // The tentpole identity: solve_job (the pool's inline per-job solve)
     // is bit-for-bit run_async_with(problem, 1, ...) — same drive_worker
@@ -139,6 +167,7 @@ fn pool_single_job_bitwise_matches_spawn_per_call_runtime() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "full solve loops are too slow under Miri")]
 fn batch_of_one_degenerates_to_the_single_job_exactly() {
     // The lockstep batched step must be the solo Algorithm 2 verbatim
     // when the batch holds one signal: same RNG stream, same estimate,
@@ -157,6 +186,7 @@ fn batch_of_one_degenerates_to_the_single_job_exactly() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "full solve loops are too slow under Miri")]
 fn batched_mmv_recovery_converges_and_is_no_slower_than_sequential() {
     // 6 MMV signals sharing one operator and one support: the shared
     // tally must not hurt — per-signal lockstep iterations stay within a
@@ -191,6 +221,7 @@ fn batched_mmv_recovery_converges_and_is_no_slower_than_sequential() {
 /// implementations (the satellite's coverage requirement; the in-crate
 /// unit tests cover more support shapes).
 #[test]
+#[cfg_attr(miri, ignore = "pure f64 kernels with no sync code under test; slow under Miri")]
 fn multi_rhs_operator_entry_points_are_bitwise_per_column() {
     let dense_spec = ProblemSpec {
         n: 64,
@@ -296,6 +327,7 @@ fn multi_rhs_operator_entry_points_are_bitwise_per_column() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "full solve loop on the calling thread; slow under Miri")]
 fn custom_kernel_jobs_ride_the_pool() {
     // solve_job_with accepts any SupportKernel factory, so service users
     // can pool custom kernels exactly like the built-ins.
