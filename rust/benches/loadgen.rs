@@ -1,0 +1,20 @@
+//! PERF — `astir serve` load-generator benches
+//! (`cargo bench --bench loadgen`).
+//!
+//! Thin wrapper over the `loadgen` suite in
+//! `astir::bench_harness::suites`: an in-process server on a loopback
+//! ephemeral port is driven by open-loop Poisson arrivals (precomputed
+//! exponential inter-arrivals, so the offered load never adapts to
+//! server backpressure) at two rates. Each rate records the window wall
+//! time plus the server's own p50/p99 request latency, and asserts the
+//! operator cache serves the tail warm (hit ratio >= 0.5). Single-pass
+//! experiment budgets; everything runs in CI smoke under the committed
+//! `baseline_smoke.json` regression gate.
+//!
+//! Telemetry: `results/BENCH_loadgen.json`.
+
+mod common;
+
+fn main() {
+    common::bench_binary_main("loadgen");
+}

@@ -9,7 +9,7 @@
 //!   min over batch means.
 //! * **Registry** — every benchmark is declared as a [`BenchSpec`] (name,
 //!   scale tag, problem dims, seed, smoke/full [`Budget`]s) and registered
-//!   into a named [`Suite`]; the nine suites live in [`suites`] and are
+//!   into a named [`Suite`]; the ten suites live in [`suites`] and are
 //!   shared by the `cargo bench` binaries and the `astir bench` CLI.
 //! * **Telemetry** — a finished run serializes to a schema-stable JSON
 //!   document ([`json`], hand-rolled — no serde offline) that CI uploads
@@ -412,6 +412,43 @@ impl Suite {
         Some(rec)
     }
 
+    /// Record a metric measured *outside* the timing harness (a latency
+    /// percentile from a server's telemetry, say) as a benchmark record
+    /// whose mean is `seconds`. Obeys the same filter / jumbo / dry-run
+    /// gates as [`Suite::bench`], so derived metrics stay schema-stable
+    /// across `--list`, `--filter`, and smoke runs.
+    pub fn record_metric(&mut self, spec: BenchSpec, seconds: f64) -> Option<BenchRecord> {
+        if self.filtered_out(&spec.name) {
+            return None;
+        }
+        if spec.scale == Scale::Jumbo && self.jumbo_gated() {
+            self.skip(&spec.name, "jumbo scale gated (smoke mode / ASTIR_BENCH_SKIP_JUMBO)");
+            return None;
+        }
+        if self.opts.dry_run {
+            self.benches.push(BenchRecord {
+                name: spec.name.clone(),
+                scale: spec.scale,
+                dims: spec.dims,
+                seed: spec.seed,
+                iters: 0,
+                time: stats(&[]),
+            });
+            return None;
+        }
+        let rec = BenchRecord {
+            name: spec.name,
+            scale: spec.scale,
+            dims: spec.dims,
+            seed: spec.seed,
+            iters: 1,
+            time: stats(&[seconds]),
+        };
+        println!("{}", rec.summary());
+        self.benches.push(rec.clone());
+        Some(rec)
+    }
+
     /// Finish the suite, yielding its report.
     pub fn into_report(self) -> SuiteReport {
         SuiteReport { name: self.name, benches: self.benches, skipped: self.skipped }
@@ -676,6 +713,35 @@ mod tests {
         assert_eq!(report.benches.len(), 1);
         assert_eq!(report.benches[0].iters, 0);
         assert_eq!(report.benches[0].dims, Some(BenchDims { n: 5, m: 4, b: 2, s: 1 }));
+    }
+
+    #[test]
+    fn record_metric_obeys_suite_gates() {
+        let opts = RunOpts { mode: Mode::Smoke, filter: None, skip_jumbo: false, dry_run: false };
+        let mut suite = Suite::new("demo", &opts);
+        let rec = suite.record_metric(BenchSpec::experiment("p99").seed(11), 0.25).unwrap();
+        assert_eq!(rec.seed, 11);
+        assert_eq!(rec.iters, 1);
+        assert!((rec.time.mean - 0.25).abs() < 1e-15);
+
+        // Dry runs register the spec as a zero-iteration placeholder.
+        let dry = RunOpts { mode: Mode::Smoke, filter: None, skip_jumbo: false, dry_run: true };
+        let mut listing = Suite::new("demo", &dry);
+        assert!(listing.record_metric(BenchSpec::experiment("p99"), 0.25).is_none());
+        let report = listing.into_report();
+        assert_eq!(report.benches.len(), 1);
+        assert_eq!(report.benches[0].iters, 0);
+
+        // Filtered-out metrics are dropped entirely.
+        let filt = RunOpts {
+            mode: Mode::Smoke,
+            filter: Some("demo/other".to_string()),
+            skip_jumbo: false,
+            dry_run: false,
+        };
+        let mut filtered = Suite::new("demo", &filt);
+        assert!(filtered.record_metric(BenchSpec::experiment("p99"), 0.25).is_none());
+        assert!(filtered.into_report().benches.is_empty());
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! registers [`BenchSpec`]s into a [`Suite`]; the `cargo bench` binaries
 //! (`rust/benches/*.rs`) and the `astir bench` CLI both execute suites
 //! from this registry, so a perf number means the same thing however it
-//! was produced. Nine suites, one per bench binary:
+//! was produced. Ten suites, one per bench binary:
 //!
 //! * `hot_path` — kernel microbenches: roofline triad, gemv/proxy
 //!   primitives, top-s + tally ops, full Alg.-2 steps, dense-vs-sparse at
@@ -23,10 +23,16 @@
 //! * `throughput` — the recovery **service** measured as a service at
 //!   `n = 2^17`: jobs/sec through the persistent pool vs spawn-per-call,
 //!   and batched MMV lockstep recovery vs a sequential per-signal loop.
+//! * `loadgen` — `astir serve` end-to-end over loopback TCP: open-loop
+//!   Poisson arrivals at two offered rates, recording the window wall
+//!   time plus the server's own p50/p99 request latency, with a warm
+//!   operator-cache hit-ratio assertion.
 //!
 //! Smoke mode shrinks the Monte-Carlo budgets to CI size; full mode keeps
 //! the paper-ish defaults (`ASTIR_BENCH_TRIALS` raises them further).
 //! Jumbo-tagged points are env-gated, see [`Suite::jumbo_gated`].
+
+use std::time::{Duration, Instant};
 
 use crate::sync::atomic::{AtomicBool, Ordering};
 use crate::sync::{thread, Arc};
@@ -42,6 +48,9 @@ use crate::metrics::{stats, Table};
 use crate::problem::{Ensemble, Problem, ProblemSpec};
 use crate::report;
 use crate::rng::Rng;
+use crate::service::api::JobRequest;
+use crate::service::server::{ServeOpts, Server};
+use crate::service::wire::Client;
 use crate::service::{recover_batch_stoiht, solve_job, RecoveryPool};
 use crate::sim::{SimOpts, SimOutcome, SpeedSchedule};
 use crate::support::{top_s_into, union};
@@ -106,6 +115,11 @@ pub fn registry() -> Vec<SuiteDef> {
             name: "throughput",
             about: "recovery service jobs/sec — persistent pool vs spawn, batched vs sequential",
             register: throughput_suite,
+        },
+        SuiteDef {
+            name: "loadgen",
+            about: "astir serve over loopback — open-loop Poisson latency + operator cache",
+            register: loadgen_suite,
         },
     ]
 }
@@ -1083,6 +1097,137 @@ fn throughput_suite(suite: &mut Suite) {
     }
 }
 
+/// One offered rate of the `loadgen` suite: bind a fresh in-process
+/// [`Server`] on a loopback ephemeral port, fire `reqs` at Poisson
+/// arrival times (exponential inter-arrivals precomputed from a seeded
+/// [`Rng`], so the offered load never adapts to server backpressure the
+/// way closed-loop clients do), then pull the server's own telemetry.
+///
+/// Three records ride on one window: the timed `window_spec` bench (wall
+/// time until every reply landed) and the p50/p99 request latencies via
+/// [`Suite::record_metric`]. Filtering out the window spec drops the
+/// whole trio — the percentiles only exist once the window has run.
+fn loadgen_run_rate(
+    suite: &mut Suite,
+    reqs: &[JobRequest],
+    rate_hz: f64,
+    window_spec: BenchSpec,
+    p50_spec: BenchSpec,
+    p99_spec: BenchSpec,
+) {
+    if !suite.wants(&window_spec) {
+        return;
+    }
+    let mut arr = Rng::seed_from(window_spec.seed ^ 0xA55A);
+    let mut t = 0.0f64;
+    let offsets: Vec<f64> = reqs
+        .iter()
+        .map(|_| {
+            t += -(1.0 - arr.next_f64()).ln() / rate_hz;
+            t
+        })
+        .collect();
+    let opts = ServeOpts {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 4,
+        batch_window_ms: 2,
+        max_inflight: reqs.len().max(64),
+    };
+    let server = Server::bind(opts).expect("bind loopback").spawn().expect("spawn serve thread");
+    let addr = server.addr().to_string();
+    suite.bench(window_spec, || {
+        let start = Instant::now();
+        let mut handles = Vec::new();
+        for (i, req) in reqs.iter().enumerate() {
+            let req = req.clone();
+            let addr = addr.clone();
+            let off = Duration::from_secs_f64(offsets[i]);
+            let h = thread::Builder::new()
+                .name(format!("loadgen-{i}"))
+                .spawn(move || {
+                    let now = start.elapsed();
+                    if off > now {
+                        thread::sleep(off - now);
+                    }
+                    let mut client = Client::connect(&addr).expect("connect loopback");
+                    let resp = client.job(&req).expect("transport").expect("typed reply");
+                    assert!(resp.converged, "open-loop job must converge");
+                })
+                .expect("spawn client thread");
+            handles.push(h);
+        }
+        for h in handles {
+            h.join().expect("client thread");
+        }
+    });
+    let snap = server.stats();
+    server.stop();
+    assert_eq!(snap.served, reqs.len() as u64, "every offered job must be served");
+    assert_eq!(snap.rejected, 0, "open-loop window must not hit admission control");
+    let ratio = snap.cache_hit_ratio();
+    assert!(ratio >= 0.5, "operator cache too cold: hit ratio {ratio:.2}");
+    println!(
+        "  => rate {rate_hz:.0}/s: cache {}/{} hits (ratio {:.2}), p50 {} p99 {}",
+        snap.cache_hits,
+        snap.cache_hits + snap.cache_misses,
+        ratio,
+        super::human_time(snap.p50_s),
+        super::human_time(snap.p99_s)
+    );
+    suite.record_metric(p50_spec, snap.p50_s);
+    suite.record_metric(p99_spec, snap.p99_s);
+}
+
+/// The `loadgen` suite — `astir serve` measured end-to-end over loopback
+/// TCP. Jobs cycle over three operator seeds with client-generated `y`
+/// measurements (same seed ⇒ warm-cache hit, fresh signal — exactly how
+/// an MMV client drives the server), at two offered Poisson rates. Each
+/// rate contributes a timed window bench plus the server's own p50/p99
+/// request latency through the `astir-bench-v1` schema, so CI's baseline
+/// gate covers tail latency, not just throughput.
+fn loadgen_suite(suite: &mut Suite) {
+    let (n, m, b, s) = (4096usize, 1024usize, 128usize, 16usize);
+    let shape = |name: &str, seed: u64| BenchSpec::experiment(name).dims(n, m, b, s).seed(seed);
+    let lo = shape("open_loop_lo", 80);
+    let lo_p50 = shape("p50_lo", 80);
+    let lo_p99 = shape("p99_lo", 80);
+    let hi = shape("open_loop_hi", 81);
+    let hi_p50 = shape("p50_hi", 81);
+    let hi_p99 = shape("p99_hi", 81);
+    if suite.is_dry_run() {
+        for sp in [lo, lo_p50, lo_p99, hi, hi_p50, hi_p99] {
+            suite.bench(sp, || {});
+        }
+        return;
+    }
+    if ![&lo, &lo_p50, &lo_p99, &hi, &hi_p50, &hi_p99].iter().any(|sp| suite.wants(sp)) {
+        return;
+    }
+    let jobs = if suite.mode() == Mode::Smoke { 24 } else { 96 };
+    bench_header(&format!("astir serve load generator — {jobs} jobs per offered rate, n = {n}"));
+    let mf = ProblemSpec {
+        n,
+        m,
+        b,
+        s,
+        ensemble: Ensemble::PartialDct,
+        dense_a: false,
+        ..ProblemSpec::paper()
+    };
+    let op_seeds = [70u64, 71, 72];
+    let mut sig_rng = Rng::seed_from(83);
+    let reqs: Vec<JobRequest> = (0..jobs)
+        .map(|i| {
+            let base = JobRequest::from_spec(&mf, op_seeds[i % op_seeds.len()]);
+            let op = base.draw_operator();
+            let p = mf.generate_with_op(&op, &mut sig_rng);
+            JobRequest { y: Some(p.y.clone()), ..base }
+        })
+        .collect();
+    loadgen_run_rate(suite, &reqs, 20.0, lo, lo_p50, lo_p99);
+    loadgen_run_rate(suite, &reqs, 80.0, hi, hi_p50, hi_p99);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1101,7 +1246,8 @@ mod tests {
                 "baselines",
                 "stogradmp_async",
                 "large_n",
-                "throughput"
+                "throughput",
+                "loadgen"
             ]
         );
         for n in &names {
@@ -1173,11 +1319,39 @@ mod tests {
     }
 
     #[test]
+    fn loadgen_suite_registers_latency_records() {
+        // `astir bench --filter loadgen` must reach the two offered-rate
+        // windows AND their derived p50/p99 latency records — the CI
+        // baseline gate covers tail latency only if the specs register
+        // identically under --list, --filter, and smoke runs.
+        let opts = RunOpts {
+            mode: Mode::Smoke,
+            filter: Some("loadgen".to_string()),
+            skip_jumbo: true,
+            dry_run: true,
+        };
+        let report = run_all(&opts);
+        let lg = report.suites.iter().find(|s| s.name == "loadgen").unwrap();
+        let names: Vec<&str> = lg.benches.iter().map(|b| b.name.as_str()).collect();
+        for e in ["open_loop_lo", "p50_lo", "p99_lo", "open_loop_hi", "p50_hi", "p99_hi"] {
+            assert!(names.contains(&e), "missing {e} in {names:?}");
+        }
+        assert!(lg.benches.iter().all(|b| b.scale == Scale::Standard));
+        for bench in &lg.benches {
+            assert_eq!(bench.dims.unwrap().n, 4096, "{}: wrong n", bench.name);
+        }
+        // nothing outside the new suite matches the filter
+        let elsewhere: usize =
+            report.suites.iter().filter(|s| s.name != "loadgen").map(|s| s.benches.len()).sum();
+        assert_eq!(elsewhere, 0);
+    }
+
+    #[test]
     fn dry_run_registers_specs_for_every_suite() {
         let opts = RunOpts { mode: Mode::Smoke, filter: None, skip_jumbo: true, dry_run: true };
         let report = run_all(&opts);
         assert_eq!(report.schema, SCHEMA);
-        assert_eq!(report.suites.len(), 9);
+        assert_eq!(report.suites.len(), 10);
         for s in &report.suites {
             assert!(
                 !s.benches.is_empty() || !s.skipped.is_empty(),

@@ -33,6 +33,33 @@ impl Default for ServiceConfig {
     }
 }
 
+/// Network front-end settings (`astir serve`, [`crate::service::server`]):
+/// TOML `[serve]` section, CLI `--addr/--workers/--batch-window-ms/
+/// --max-inflight` overrides.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// Bind address (`host:port`; port 0 picks an ephemeral port).
+    pub addr: String,
+    /// Connection-handler threads.
+    pub workers: usize,
+    /// Micro-batch window in milliseconds (0 = solo solves, bit-identical
+    /// to in-process `solve_job`).
+    pub batch_window_ms: u64,
+    /// Admission cap on concurrently admitted jobs.
+    pub max_inflight: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            workers: default_trial_threads(),
+            batch_window_ms: 2,
+            max_inflight: 64,
+        }
+    }
+}
+
 /// Typed experiment configuration (see `configs/*.toml` for examples).
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -57,6 +84,8 @@ pub struct ExperimentConfig {
     pub trial_threads: usize,
     /// Recovery-service settings (`astir batch`).
     pub service: ServiceConfig,
+    /// Network front-end settings (`astir serve`).
+    pub serve: ServeConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -73,6 +102,7 @@ impl Default for ExperimentConfig {
             cores: vec![1, 2, 4, 8, 16],
             trial_threads: default_trial_threads(),
             service: ServiceConfig::default(),
+            serve: ServeConfig::default(),
         }
     }
 }
@@ -89,8 +119,8 @@ impl ExperimentConfig {
         // A misspelled section ("[services]") must not silently yield
         // defaults; the per-key strictness below only sees known sections.
         for name in doc.section_names() {
-            if !matches!(name, "" | "problem" | "service") {
-                return Err(format!("unknown section `[{name}]` (problem|service)"));
+            if !matches!(name, "" | "problem" | "service" | "serve") {
+                return Err(format!("unknown section `[{name}]` (problem|service|serve)"));
             }
         }
         let mut cfg = ExperimentConfig::default();
@@ -172,6 +202,29 @@ impl ExperimentConfig {
             }
         }
 
+        for (key, value) in doc.section("serve") {
+            let s = &mut cfg.serve;
+            match key.as_str() {
+                "addr" => {
+                    s.addr = value.as_str().ok_or("serve.addr must be a string")?.to_string()
+                }
+                "workers" => {
+                    s.workers =
+                        value.as_usize().ok_or("serve.workers must be a positive integer")?
+                }
+                "batch_window_ms" => {
+                    s.batch_window_ms = value
+                        .as_u64()
+                        .ok_or("serve.batch_window_ms must be a nonnegative integer")?
+                }
+                "max_inflight" => {
+                    s.max_inflight =
+                        value.as_usize().ok_or("serve.max_inflight must be a positive integer")?
+                }
+                other => return Err(format!("unknown serve key `{other}`")),
+            }
+        }
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -211,6 +264,15 @@ impl ExperimentConfig {
         }
         if self.service.batch == 0 {
             return Err("service.batch must be positive".into());
+        }
+        if self.serve.addr.is_empty() {
+            return Err("serve.addr must be nonempty".into());
+        }
+        if self.serve.workers == 0 {
+            return Err("serve.workers must be positive".into());
+        }
+        if self.serve.max_inflight == 0 {
+            return Err("serve.max_inflight must be positive".into());
         }
         Ok(())
     }
@@ -315,6 +377,33 @@ dense_a = false
         assert!(ExperimentConfig::from_toml("[service]\njobs = 0").is_err());
         assert!(ExperimentConfig::from_toml("[service]\nbatch = 0").is_err());
         assert!(ExperimentConfig::from_toml("[service]\nbatch = true").is_err());
+    }
+
+    #[test]
+    fn serve_section_parses_and_validates() {
+        let text = "[serve]\naddr = \"0.0.0.0:9000\"\nworkers = 2\nbatch_window_ms = 0\n\
+                    max_inflight = 4";
+        let c = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(
+            c.serve,
+            ServeConfig {
+                addr: "0.0.0.0:9000".to_string(),
+                workers: 2,
+                batch_window_ms: 0,
+                max_inflight: 4,
+            }
+        );
+        // Defaults: loopback, small window, generous admission.
+        let d = ExperimentConfig::default();
+        assert_eq!(d.serve.addr, "127.0.0.1:7878");
+        assert_eq!(d.serve.batch_window_ms, 2);
+        assert_eq!(d.serve.max_inflight, 64);
+        assert!(d.serve.workers >= 1);
+        assert!(ExperimentConfig::from_toml("[serve]\nworkers = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[serve]\nmax_inflight = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[serve]\naddr = \"\"").is_err());
+        assert!(ExperimentConfig::from_toml("[serve]\nbatch_window_ms = \"fast\"").is_err());
+        assert!(ExperimentConfig::from_toml("[serve]\nport = 80").is_err());
     }
 
     #[test]

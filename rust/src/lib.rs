@@ -32,6 +32,9 @@
 //! | [`async_runtime`] | real-thread asynchronous execution with shared tally |
 //! | [`coordinator`] | leader/worker orchestration, trial batching, halting |
 //! | [`service`] | persistent recovery pool + batched MMV recovery (the serving layer) |
+//! | [`service::api`] | versioned typed job API (`JobRequest`/`JobResponse`/`ServeError`, `api_version: 1`) |
+//! | [`service::wire`] | length-prefixed JSON framing + the blocking TCP [`service::wire::Client`] |
+//! | [`service::server`] | `astir serve` — TCP front-end with operator cache, deadline micro-batching, admission control |
 //! | [`runtime`] | PJRT client wrapper: load + execute AOT HLO artifacts |
 //! | [`backend`] | compute-backend abstraction (native vs PJRT) |
 //! | [`config`] | TOML-subset config parser + experiment configs |
@@ -40,7 +43,7 @@
 //! | [`report`] | text/CSV/JSON rendering of experiment outputs |
 //! | [`bench_harness`] | bench suite registry, timing harness, JSON perf telemetry |
 //! | [`sync`] | the crate's single doorway to concurrency primitives (std re-exports, or a model-checked shim under `--features model`) |
-//! | [`lint`] | in-crate static analysis behind `astir lint` (atomic-ordering justifications, `sync` doorway enforcement, SAFETY comments) |
+//! | [`lint`] | in-crate static analysis behind `astir lint` (atomic-ordering justifications, `sync` + `std::net` doorway enforcement, SAFETY comments) |
 //! | [`error`] | zero-dependency error type (`anyhow` stand-in) |
 //! | [`testutil`] | mini property-testing framework used by unit tests |
 

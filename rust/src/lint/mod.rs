@@ -1,7 +1,7 @@
 //! In-crate static analysis behind `astir lint` — the concurrency-hygiene
 //! hard gate (zero dependencies, same spirit as [`crate::testutil`]).
 //!
-//! Four rules, each encoding an invariant the rest of this PR's tooling
+//! Five rules, each encoding an invariant the rest of this PR's tooling
 //! relies on:
 //!
 //! * **L1 `ordering-justification`** — every atomic call site naming an
@@ -20,6 +20,10 @@
 //! * **L4 `hygiene`** — no `dbg!` / `todo!` / `unimplemented!` in code,
 //!   and no *code* extending past column 100 (string literals and
 //!   comments may overflow — rustfmt cannot break those either).
+//! * **L5 `net-doorway`** — `std::net` paths may appear only under
+//!   `src/service/` (the serve front-end and its wire codec): tests and
+//!   benches exercise the network through [`crate::service::wire`], so
+//!   socket setup, timeouts, and shutdown live behind one audited seam.
 //!
 //! The analysis is source-level and deliberately simple: a byte classifier
 //! ([`classify`]) splits each file into code / comment / string regions
@@ -50,7 +54,7 @@ pub struct Finding {
     pub file: String,
     /// 1-based line number.
     pub line: usize,
-    /// Stable rule id (`L1`..`L4`).
+    /// Stable rule id (`L1`..`L5`).
     pub rule: &'static str,
     pub message: String,
 }
@@ -277,6 +281,7 @@ fn comment_window_contains(lines: &[MaskedLine], idx: usize, window: usize, need
 pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
     let norm = file.replace('\\', "/");
     let in_sync = norm.contains("src/sync/") || norm.ends_with("src/sync");
+    let in_service = norm.contains("src/service/") || norm.ends_with("src/service");
     let kinds = classify(src);
     let lines = masked_lines(src, &kinds);
     let mut findings = Vec::new();
@@ -320,6 +325,16 @@ pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
                     );
                 }
             }
+        }
+
+        // L5: std::net only inside src/service/.
+        if !in_service && !token_positions(code, "std::net").is_empty() {
+            push(
+                idx,
+                "L5",
+                "`std::net` outside src/service/ — go through crate::service::wire instead"
+                    .to_string(),
+            );
         }
 
         // L3: `unsafe` needs a nearby SAFETY comment.
@@ -475,6 +490,19 @@ mod tests {
         // Allowed inside the doorway, and in strings/comments anywhere.
         assert!(lint_source("src/sync/mod.rs", bad).is_empty());
         let masked = "// std::sync is discussed here\nlet s = \"std::thread\";";
+        assert!(lint_source("src/x.rs", masked).is_empty());
+    }
+
+    #[test]
+    fn l5_fences_the_net_doorway() {
+        let bad = "use std::net::TcpStream;\nlet l = std::net::TcpListener::bind(a);";
+        let f = lint_source("tests/serve_e2e.rs", bad);
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f.iter().all(|x| x.rule == "L5"));
+        // Allowed inside the service doorway, and in strings/comments anywhere.
+        assert!(lint_source("src/service/wire.rs", bad).is_empty());
+        assert!(lint_source("src/service/server.rs", bad).is_empty());
+        let masked = "// std::net is discussed here\nlet s = \"std::net\";";
         assert!(lint_source("src/x.rs", masked).is_empty());
     }
 

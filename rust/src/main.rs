@@ -17,6 +17,7 @@
 //! astir async --alg stogradmp        # ... or any other SupportKernel
 //! astir batch --jobs 32 --workers 8  # persistent recovery pool, shared operator
 //! astir batch --batch 8              # MMV lockstep: 8 signals/job, shared tally
+//! astir serve --addr 127.0.0.1:7878  # zero-dep TCP front-end (typed v1 job API)
 //! astir run --alg stoiht --ensemble partial_dct --no-dense-a --n 1048576 --m 327680 --b 16
 //! astir fig2 --alg stogradmp --schedule half-slow --period 6
 //! astir info                         # artifact + config introspection
@@ -40,6 +41,8 @@ use astir::experiments::{self, Fig2Variant};
 use astir::report;
 use astir::rng::Rng;
 use astir::runtime::ArtifactStore;
+use astir::service::api::{JobRequest, JobResponse};
+use astir::service::server::{ServeOpts, Server};
 use astir::service::{recover_batch_stoiht, solve_job, RecoveryPool};
 use astir::sim::SpeedSchedule;
 
@@ -202,6 +205,26 @@ fn run(args: Vec<String>) -> Result<(), String> {
             cfg.validate()?;
             flags.finish()?;
             run_batch_cmd(&cfg)?;
+        }
+        "serve" => {
+            let mut cfg = cfg;
+            if let Some(v) = flags.take("addr")? {
+                cfg.serve.addr = v;
+            }
+            if let Some(v) = flags.take("workers")? {
+                cfg.serve.workers = v.parse().map_err(|e| format!("--workers: {e}"))?;
+            }
+            if let Some(v) = flags.take("batch-window-ms")? {
+                cfg.serve.batch_window_ms =
+                    v.parse().map_err(|e| format!("--batch-window-ms: {e}"))?;
+            }
+            if let Some(v) = flags.take("max-inflight")? {
+                cfg.serve.max_inflight =
+                    v.parse().map_err(|e| format!("--max-inflight: {e}"))?;
+            }
+            cfg.validate()?;
+            flags.finish()?;
+            run_serve_cmd(&cfg)?;
         }
         "info" => {
             flags.finish()?;
@@ -684,31 +707,60 @@ fn run_batch_cmd(cfg: &ExperimentConfig) -> Result<(), String> {
     };
     let alg = cfg.alg;
     let problems = astir::sync::Arc::new(problems);
-    let job_problems = astir::sync::Arc::clone(&problems);
-    let job_opts = opts.clone();
     let t0 = std::time::Instant::now();
-    // (converged signals, lockstep steps / iters, worst residual) per job.
-    let per_job: Vec<(usize, u64, f64)> =
+    // Per-job typed responses — the same v1 vocabulary `astir serve`
+    // speaks on the wire (service::api).
+    let per_job: Vec<Vec<JobResponse>> = if batch == 1 {
+        // Single-signal jobs travel as JobRequests carrying their raw
+        // measurements; a panicking job poisons only its own slot.
+        let job_problems = astir::sync::Arc::clone(&problems);
+        let job_opts = opts.clone();
+        let job_op = astir::sync::Arc::clone(&op);
+        let spec = cfg.problem.clone();
+        let results = pool.try_run_jobs(jobs, cfg.seed ^ 0xBA7C4, move |i, rng| {
+            let seed = rng.next_u64();
+            let req = JobRequest {
+                y: Some(job_problems[i][0].y.clone()),
+                ..JobRequest::from_spec(&spec, seed)
+            };
+            // Resolve through the typed request (raw-y path). The one
+            // config corner the v1 spec cannot express — dense partial_dct
+            // with a non-power-of-two n — solves the generated problem
+            // directly.
+            let p = match req.problem(&job_op) {
+                Ok(p) => p,
+                Err(_) => job_problems[i][0].clone(),
+            };
+            JobResponse::from_outcome(solve_job(&p, alg, &job_opts, seed), false)
+        });
+        let mut out = Vec::with_capacity(results.len());
+        for (i, r) in results.into_iter().enumerate() {
+            match r {
+                Ok(resp) => out.push(vec![resp]),
+                Err(e) => return Err(format!("job {i} failed: {e}")),
+            }
+        }
+        out
+    } else {
+        let job_problems = astir::sync::Arc::clone(&problems);
+        let job_opts = opts.clone();
         pool.run_jobs(jobs, cfg.seed ^ 0xBA7C4, move |i, rng| {
             let seed = rng.next_u64();
-            let job = &job_problems[i];
-            if job.len() == 1 {
-                let out = solve_job(&job[0], alg, &job_opts, seed);
-                (out.converged as usize, out.iters, out.residual)
-            } else {
-                let out = recover_batch_stoiht(job, &job_opts, seed);
-                let conv = out.signals.iter().filter(|s| s.converged).count();
-                let worst =
-                    out.signals.iter().map(|s| s.residual).fold(f64::NEG_INFINITY, f64::max);
-                (conv, out.steps, worst)
-            }
-        });
+            let out = recover_batch_stoiht(&job_problems[i], &job_opts, seed);
+            out.signals.into_iter().map(|s| JobResponse::from_outcome(s, true)).collect()
+        })
+    };
     let wall = t0.elapsed();
     let signals = jobs * batch;
-    let converged: usize = per_job.iter().map(|j| j.0).sum();
-    let mean_steps =
-        per_job.iter().map(|j| j.1 as f64).sum::<f64>() / per_job.len().max(1) as f64;
-    let worst = per_job.iter().map(|j| j.2).fold(f64::NEG_INFINITY, f64::max);
+    let converged: usize =
+        per_job.iter().flatten().filter(|r| r.converged).count();
+    let mean_steps = per_job
+        .iter()
+        .map(|job| job.iter().map(|r| r.iters).max().unwrap_or(0) as f64)
+        .sum::<f64>()
+        / per_job.len().max(1) as f64;
+    let worst =
+        per_job.iter().flatten().map(|r| r.residual).fold(f64::NEG_INFINITY, f64::max);
     println!(
         "served {signals} signal(s) in {:.1?}: {converged}/{signals} converged, \
          {:.1} signals/s, mean {:.0} steps/job, worst residual {:.3e}",
@@ -726,6 +778,28 @@ fn run_batch_cmd(cfg: &ExperimentConfig) -> Result<(), String> {
         ));
     }
     Ok(())
+}
+
+/// `astir serve` — the zero-dependency TCP front-end: typed v1 job API
+/// over length-prefixed JSON frames, warm operator cache, deadline
+/// micro-batching, admission control. Blocks until killed.
+fn run_serve_cmd(cfg: &ExperimentConfig) -> Result<(), String> {
+    let sc = &cfg.serve;
+    let opts = ServeOpts {
+        addr: sc.addr.clone(),
+        workers: sc.workers,
+        batch_window_ms: sc.batch_window_ms,
+        max_inflight: sc.max_inflight,
+    };
+    println!(
+        "astir serve (api v{}): {} handler(s), batch window {} ms, max inflight {}",
+        astir::service::api::API_VERSION,
+        opts.workers,
+        opts.batch_window_ms,
+        opts.max_inflight
+    );
+    let server = Server::bind(opts).map_err(|e| format!("bind {}: {e}", sc.addr))?;
+    server.run().map_err(|e| format!("serve: {e}"))
 }
 
 fn print_info(cfg: &ExperimentConfig) {
@@ -783,7 +857,7 @@ fn lint_cmd(flags: &mut Flags) -> Result<(), String> {
     }
     let findings = astir::lint::lint_tree(&root).map_err(|e| format!("lint: {e}"))?;
     if findings.is_empty() {
-        println!("lint: clean ({} rules over {})", 4, root.display());
+        println!("lint: clean ({} rules over {})", 5, root.display());
         return Ok(());
     }
     for f in &findings {
@@ -811,9 +885,12 @@ COMMANDS
   async --cores N              real-thread asynchronous solve (StoIHT default)
   batch                        recovery service: persistent worker pool serving
                                many jobs against ONE shared operator
+  serve                        TCP front-end for the recovery service: typed v1
+                               job API, operator cache, deadline micro-batching
   lint                         concurrency-hygiene static analysis (hard CI
                                gate: atomic-ordering justifications, the
-                               crate::sync doorway, SAFETY comments, hygiene)
+                               crate::sync doorway, SAFETY comments, hygiene,
+                               std::net confined to src/service/)
   info                         show config + discovered AOT artifacts
 
 COMMON FLAGS
@@ -847,6 +924,16 @@ BATCH FLAGS (astir batch; TOML [service] section: workers/jobs/batch)
                        e.g.  astir batch --jobs 16 --workers 8 --batch 8 \
                              --ensemble partial_dct --no-dense-a --n 131072 \
                              --m 4096 --b 512 --s 16
+
+SERVE FLAGS (astir serve; TOML [serve] section: addr/workers/batch_window_ms/
+             max_inflight)
+  --addr host:port     bind address (default 127.0.0.1:7878; port 0 = ephemeral)
+  --workers N          connection-handler threads (default: cores)
+  --batch-window-ms T  hold compatible jobs up to T ms and recover them in one
+                       lockstep window (0 = solo solves, bit-identical to an
+                       in-process solve_job with the same seed; default 2)
+  --max-inflight N     admission cap; excess jobs get a typed `busy` rejection
+                       instead of queueing (default 64)
 
 LINT FLAGS (astir lint)
   --root DIR           crate root to lint (default: ./ or ./rust, whichever

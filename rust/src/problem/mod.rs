@@ -52,6 +52,16 @@ impl Ensemble {
             _ => None,
         }
     }
+
+    /// The config/wire string [`Ensemble::parse`] inverts.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Ensemble::Gaussian => "gaussian",
+            Ensemble::GaussianUnnormalized => "gaussian_unnormalized",
+            Ensemble::Bernoulli => "bernoulli",
+            Ensemble::PartialDct => "partial_dct",
+        }
+    }
 }
 
 /// Distribution of the `s` nonzero signal coefficients.
@@ -337,8 +347,9 @@ pub struct Problem {
     pub spec: ProblemSpec,
     /// The measurement operator: materialized matrix + transpose (dense) or
     /// matrix-free subsampled DCT. All solver arithmetic routes through
-    /// this; dense-only consumers reach the matrices via [`Problem::a`] /
-    /// [`Problem::a_t`]. Held behind an `Arc` so many problems (a batch of
+    /// this; dense-only consumers reach the matrices via
+    /// [`Problem::try_dense`] / [`Problem::try_dense_t`]. Held behind an
+    /// `Arc` so many problems (a batch of
     /// MMV signals, a queue of service jobs) share **one** operator — the
     /// recovery pool never re-materializes the matrix or re-plans the
     /// transform per job.
@@ -360,6 +371,35 @@ impl Problem {
         Problem { spec, op, x_true, support, y }
     }
 
+    /// Assemble an instance from raw **measurements only** against an
+    /// existing (possibly cached/shared) operator — the served-API shape,
+    /// where `y` comes off the wire and no planted truth exists. The
+    /// ground-truth fields are placeholders (`x_true` all-zero, empty
+    /// support), so [`Problem::recovery_error`] against them is
+    /// meaningless; the serving layer reports `final_error` as unknown
+    /// for such problems. Errors (never panics) on dimension mismatches.
+    pub fn from_measurements(
+        spec: ProblemSpec,
+        op: &Arc<Operator>,
+        y: Vec<f64>,
+    ) -> Result<Problem, String> {
+        spec.validate()?;
+        if op.rows() != spec.m || op.cols() != spec.n {
+            return Err(format!(
+                "operator is {}x{}, spec wants {}x{}",
+                op.rows(),
+                op.cols(),
+                spec.m,
+                spec.n
+            ));
+        }
+        if y.len() != spec.m {
+            return Err(format!("y has {} entries, expected m = {}", y.len(), spec.m));
+        }
+        let x_true = vec![0.0; spec.n];
+        Ok(Problem { spec, op: Arc::clone(op), x_true, support: Vec::new(), y })
+    }
+
     /// Does this problem share its operator with `other` (same allocation,
     /// not merely equal entries)? Batched recovery requires it.
     pub fn shares_operator_with(&self, other: &Problem) -> bool {
@@ -376,14 +416,33 @@ impl Problem {
         )
     }
 
+    /// Measurement matrix, row-major `m x n`, when this problem holds a
+    /// materialized operator — `None` for matrix-free problems. This is
+    /// the **public** dense accessor: external callers (and anything fed
+    /// by the served job API, where the representation is user input)
+    /// must handle the `None` instead of relying on a panic.
+    pub fn try_dense(&self) -> Option<&Mat<f64>> {
+        self.op.dense().map(DenseOp::a)
+    }
+
+    /// Transposed copy `n x m` (row `j` holds column `j` of `A`
+    /// contiguously — see README.md, "sparse fast path"), when the
+    /// operator is materialized; `None` for matrix-free problems.
+    pub fn try_dense_t(&self) -> Option<&Mat<f64>> {
+        self.op.dense().map(DenseOp::a_t)
+    }
+
     /// Measurement matrix, row-major `m x n` (dense problems only).
-    pub fn a(&self) -> &Mat<f64> {
+    /// Crate-private panicking form for paths that structurally require
+    /// the matrix (PJRT artifact protocol, classical full-gradient
+    /// baselines); public callers use [`Problem::try_dense`].
+    pub(crate) fn a(&self) -> &Mat<f64> {
         self.dense_op().a()
     }
 
-    /// Transposed copy `n x m` (dense problems only; row `j` holds column
-    /// `j` of `A` contiguously — see README.md, "sparse fast path").
-    pub fn a_t(&self) -> &Mat<f64> {
+    /// Transposed copy `n x m` (dense problems only) — crate-private
+    /// panicking twin of [`Problem::try_dense_t`].
+    pub(crate) fn a_t(&self) -> &Mat<f64> {
         self.dense_op().a_t()
     }
 
@@ -623,6 +682,52 @@ mod tests {
         }
         // Matrix-free instances satisfy their own measurements.
         assert!(pf.residual_norm(&pf.x_true) < 1e-10);
+    }
+
+    #[test]
+    fn try_dense_reports_the_representation() {
+        let dense = ProblemSpec::tiny().generate(&mut Rng::seed_from(70));
+        let a = dense.try_dense().expect("dense problem has a matrix");
+        assert_eq!(a.data(), dense.a().data());
+        let a_t = dense.try_dense_t().expect("dense problem has a transpose");
+        assert_eq!(a_t.data(), dense.a_t().data());
+        let free = ProblemSpec::tiny_matrix_free().generate(&mut Rng::seed_from(71));
+        assert!(free.try_dense().is_none());
+        assert!(free.try_dense_t().is_none());
+    }
+
+    #[test]
+    fn from_measurements_takes_y_verbatim_and_validates() {
+        let spec = ProblemSpec::tiny();
+        let mut rng = Rng::seed_from(72);
+        let op = spec.draw_operator(&mut rng);
+        let donor = spec.generate_with_op(&op, &mut rng);
+        let p = Problem::from_measurements(spec.clone(), &op, donor.y.clone()).unwrap();
+        assert_eq!(p.y, donor.y);
+        assert!(p.shares_operator_with(&donor));
+        assert!(p.x_true.iter().all(|&v| v == 0.0));
+        assert!(p.support.is_empty());
+        // Wrong y length errors instead of panicking.
+        let short = Problem::from_measurements(spec.clone(), &op, vec![0.0; 3]);
+        assert!(short.unwrap_err().contains("expected m"));
+        // Operator/spec dimension mismatch errors too.
+        let mut other = spec;
+        other.n = 64;
+        other.m = 32;
+        let bad = Problem::from_measurements(other, &op, vec![0.0; 32]);
+        assert!(bad.unwrap_err().contains("operator"));
+    }
+
+    #[test]
+    fn ensemble_as_str_roundtrips() {
+        for e in [
+            Ensemble::Gaussian,
+            Ensemble::GaussianUnnormalized,
+            Ensemble::Bernoulli,
+            Ensemble::PartialDct,
+        ] {
+            assert_eq!(Ensemble::parse(e.as_str()), Some(e));
+        }
     }
 
     #[test]

@@ -1,0 +1,746 @@
+//! Versioned typed job API (`api_version` **1**) — the one vocabulary the
+//! serving stack speaks.
+//!
+//! Every layer that moves a recovery job around — the `astir batch` CLI,
+//! the TCP front-end ([`super::server`] / [`super::wire`]), and the
+//! in-process pool entry points — consumes [`JobRequest`] /
+//! [`BatchRequest`] and produces [`JobResponse`] / [`ServeError`] instead
+//! of ad-hoc per-call argument lists. The types serialize through the
+//! in-crate JSON writer/parser ([`crate::bench_harness::json::Json`] — no
+//! serde in the offline build), with `f64` payloads written in shortest
+//! round-trip form so a served iterate is **bit-identical** after a wire
+//! round trip.
+//!
+//! ## Compatibility rule (v1)
+//!
+//! Within `api_version: 1`, changes are **additive only**: new optional
+//! fields may appear, existing fields never change meaning, type, or
+//! disappear. Parsers MUST ignore unknown fields (the `get`-based
+//! decoding here does exactly that). Any breaking change bumps
+//! [`API_VERSION`], and a peer speaking an unknown version is rejected
+//! with [`ServeError::UnsupportedVersion`] instead of being misread.
+//!
+//! ## Determinism contract
+//!
+//! A request is resolved in two independently seeded steps so the
+//! operator cache cannot perturb results:
+//!
+//! * [`JobRequest::draw_operator`] draws from `Rng::seed_from(seed)` —
+//!   the stream a cache miss consumes;
+//! * [`JobRequest::problem`] draws the signal (when `y` is absent) from
+//!   `Rng::seed_from(seed).split(1)` — a stream independent of whether
+//!   the operator came fresh or from cache.
+//!
+//! Served results are therefore bit-identical to calling these two
+//! helpers plus [`super::solve_job`] in-process with the same seed — the
+//! contract `rust/tests/serve_e2e.rs` pins over a real socket.
+
+use std::fmt;
+use std::fmt::Write as _;
+
+use crate::sync::Arc;
+
+use crate::bench_harness::json::Json;
+use crate::linalg::Operator;
+use crate::problem::{Ensemble, Problem, ProblemSpec, SignalModel};
+use crate::rng::Rng;
+use crate::service::JobOutcome;
+
+/// The wire protocol version every frame carries.
+pub const API_VERSION: u64 = 1;
+
+/// Typed error half of every response — exhaustive, stable codes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeError {
+    /// Admission control: in-flight jobs already at `--max-inflight`;
+    /// the server rejects rather than queues. Retry later.
+    Busy,
+    /// The frame was not a well-formed v1 request (bad JSON, missing or
+    /// mistyped field).
+    Malformed(String),
+    /// The request parsed but describes an invalid problem
+    /// (`ProblemSpec::validate` failure, wrong `y` length, …).
+    Invalid(String),
+    /// A batch's jobs cannot share one lockstep window (mismatched
+    /// operator key or dimensions).
+    Incompatible(String),
+    /// The job (or its micro-batch window) panicked in a worker; only
+    /// this job's slot is poisoned, the server and the rest of the
+    /// window keep going.
+    WorkerPanic,
+    /// The peer requested an `api_version` this build does not speak.
+    UnsupportedVersion(u64),
+}
+
+impl ServeError {
+    /// Stable wire code (`snake_case`, never reused across meanings).
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServeError::Busy => "busy",
+            ServeError::Malformed(_) => "malformed",
+            ServeError::Invalid(_) => "invalid",
+            ServeError::Incompatible(_) => "incompatible",
+            ServeError::WorkerPanic => "worker_panic",
+            ServeError::UnsupportedVersion(_) => "unsupported_version",
+        }
+    }
+
+    /// Human-readable detail line.
+    pub fn message(&self) -> String {
+        match self {
+            ServeError::Busy => "server at max in-flight jobs; retry later".to_string(),
+            ServeError::Malformed(m) | ServeError::Invalid(m) | ServeError::Incompatible(m) => {
+                m.clone()
+            }
+            ServeError::WorkerPanic => "job panicked in a worker".to_string(),
+            ServeError::UnsupportedVersion(v) => {
+                format!("unsupported api_version {v} (this build speaks {API_VERSION})")
+            }
+        }
+    }
+
+    /// Serialize as the `{"code":…,"message":…}` error object.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        self.write_json(&mut out);
+        out
+    }
+
+    pub(crate) fn write_json(&self, out: &mut String) {
+        let _ = write!(
+            out,
+            "{{\"code\":\"{}\",\"message\":\"{}\"}}",
+            self.code(),
+            crate::metrics::json_escape(&self.message())
+        );
+    }
+
+    /// Decode an error object (inverse of [`ServeError::to_json`]).
+    pub fn from_json(j: &Json) -> Result<ServeError, ServeError> {
+        let code = req_str(j, "code")?;
+        let msg = req_str(j, "message").unwrap_or_default();
+        Ok(match code.as_str() {
+            "busy" => ServeError::Busy,
+            "malformed" => ServeError::Malformed(msg),
+            "invalid" => ServeError::Invalid(msg),
+            "incompatible" => ServeError::Incompatible(msg),
+            "worker_panic" => ServeError::WorkerPanic,
+            "unsupported_version" => {
+                // Best effort: the offending version is only in the text.
+                ServeError::UnsupportedVersion(0)
+            }
+            other => return Err(malformed(format!("unknown error code `{other}`"))),
+        })
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.code(), self.message())
+    }
+}
+
+/// Shorthand for a malformed-frame error.
+pub(crate) fn malformed(msg: impl Into<String>) -> ServeError {
+    ServeError::Malformed(msg.into())
+}
+
+/// One recovery job: the problem coordinates `(ensemble, n, m, b, s)`,
+/// the deterministic `seed`, and optionally the raw measurements `y`
+/// (length `m`). When `y` is absent the server plants a signal from the
+/// seed (the benchmarking/self-test mode); when present, the planted
+/// truth is unknown and [`JobResponse::final_error`] is `null`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobRequest {
+    pub ensemble: Ensemble,
+    pub n: usize,
+    pub m: usize,
+    pub b: usize,
+    pub s: usize,
+    pub seed: u64,
+    pub y: Option<Vec<f64>>,
+}
+
+/// Operator-cache key: everything that determines the drawn operator.
+/// Two requests with equal keys are served from ONE `Arc<Operator>`, so
+/// their problems satisfy `Problem::shares_operator_with` — the
+/// precondition for joining the same micro-batch window.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OpKey {
+    pub ensemble: Ensemble,
+    pub n: usize,
+    pub m: usize,
+    pub seed: u64,
+}
+
+impl JobRequest {
+    /// Lift CLI/TOML problem config into a typed request (no raw `y`).
+    pub fn from_spec(spec: &ProblemSpec, seed: u64) -> JobRequest {
+        JobRequest {
+            ensemble: spec.ensemble,
+            n: spec.n,
+            m: spec.m,
+            b: spec.b,
+            s: spec.s,
+            seed,
+            y: None,
+        }
+    }
+
+    /// The problem distribution this request describes. Served
+    /// `partial_dct` is always matrix-free (the dense pair at service
+    /// scale could be terabytes), so such requests need a power-of-two
+    /// `n`; every other ensemble materializes the matrix.
+    pub fn spec(&self) -> ProblemSpec {
+        ProblemSpec {
+            n: self.n,
+            m: self.m,
+            b: self.b,
+            s: self.s,
+            ensemble: self.ensemble,
+            signal: SignalModel::GaussianSpikes,
+            noise_std: 0.0,
+            dense_a: !matches!(self.ensemble, Ensemble::PartialDct),
+        }
+    }
+
+    /// Reject invalid problems *before* any generation code can panic on
+    /// them — the served API must never turn user input into a panic.
+    pub fn validate(&self) -> Result<(), ServeError> {
+        self.spec().validate().map_err(ServeError::Invalid)?;
+        if let Some(y) = &self.y {
+            if y.len() != self.m {
+                return Err(ServeError::Invalid(format!(
+                    "y has {} entries, expected m = {}",
+                    y.len(),
+                    self.m
+                )));
+            }
+            if y.iter().any(|v| !v.is_finite()) {
+                return Err(ServeError::Invalid("y contains non-finite entries".to_string()));
+            }
+        }
+        Ok(())
+    }
+
+    /// The operator-cache key (see [`OpKey`]).
+    pub fn op_key(&self) -> OpKey {
+        OpKey { ensemble: self.ensemble, n: self.n, m: self.m, seed: self.seed }
+    }
+
+    /// Draw this request's measurement operator from its dedicated RNG
+    /// stream (`Rng::seed_from(seed)`). The caller must have validated
+    /// the request. Cache misses run this; cache hits skip it entirely
+    /// without perturbing the signal stream below.
+    pub fn draw_operator(&self) -> Arc<Operator> {
+        self.spec().draw_operator(&mut Rng::seed_from(self.seed))
+    }
+
+    /// Resolve the request against an operator (fresh or cached) into a
+    /// concrete [`Problem`]. Signal draws use `Rng::seed_from(seed)
+    /// .split(1)` — independent of the operator stream, so a cache hit
+    /// yields bit-identical measurements to a cold draw.
+    pub fn problem(&self, op: &Arc<Operator>) -> Result<Problem, ServeError> {
+        self.validate()?;
+        let spec = self.spec();
+        match &self.y {
+            Some(y) => Problem::from_measurements(spec, op, y.clone())
+                .map_err(ServeError::Invalid),
+            None => {
+                let mut root = Rng::seed_from(self.seed);
+                let mut sig_rng = root.split(1);
+                Ok(spec.generate_with_op(op, &mut sig_rng))
+            }
+        }
+    }
+
+    /// Serialize (no envelope — [`super::wire`] adds `api_version`).
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        self.write_json(&mut out);
+        out
+    }
+
+    pub(crate) fn write_json(&self, out: &mut String) {
+        let _ = write!(
+            out,
+            "{{\"ensemble\":\"{}\",\"n\":{},\"m\":{},\"b\":{},\"s\":{},\"seed\":{}",
+            self.ensemble.as_str(),
+            self.n,
+            self.m,
+            self.b,
+            self.s,
+            self.seed
+        );
+        if let Some(y) = &self.y {
+            out.push_str(",\"y\":");
+            write_f64_array(out, y);
+        }
+        out.push('}');
+    }
+
+    /// Decode one job object. Unknown fields are ignored (v1 rule).
+    pub fn from_json(j: &Json) -> Result<JobRequest, ServeError> {
+        let ens = req_str(j, "ensemble")?;
+        let ensemble = Ensemble::parse(&ens)
+            .ok_or_else(|| malformed(format!("unknown ensemble `{ens}`")))?;
+        let y = match j.get("y") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(f64_array(v, "y")?),
+        };
+        Ok(JobRequest {
+            ensemble,
+            n: req_usize(j, "n")?,
+            m: req_usize(j, "m")?,
+            b: req_usize(j, "b")?,
+            s: req_usize(j, "s")?,
+            seed: req_u64(j, "seed")?,
+            y,
+        })
+    }
+}
+
+/// Several jobs submitted as one unit. Jobs that agree on the window key
+/// (operator key + `b` + `s`) can be recovered in one lockstep
+/// [`super::recover_batch_stoiht`] window; the server checks with
+/// [`BatchRequest::compatible`] and falls back to per-job solves
+/// otherwise.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchRequest {
+    pub jobs: Vec<JobRequest>,
+}
+
+impl BatchRequest {
+    /// Every job individually valid, batch non-empty.
+    pub fn validate(&self) -> Result<(), ServeError> {
+        if self.jobs.is_empty() {
+            return Err(ServeError::Invalid("empty batch".to_string()));
+        }
+        for job in &self.jobs {
+            job.validate()?;
+        }
+        Ok(())
+    }
+
+    /// Can all jobs share one lockstep window (one operator `Arc`, equal
+    /// dimensions)?
+    pub fn compatible(&self) -> bool {
+        let Some(first) = self.jobs.first() else { return false };
+        let key = (first.op_key(), first.b, first.s);
+        self.jobs.iter().all(|job| (job.op_key(), job.b, job.s) == key)
+    }
+
+    /// Serialize (no envelope).
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        self.write_json(&mut out);
+        out
+    }
+
+    pub(crate) fn write_json(&self, out: &mut String) {
+        out.push('[');
+        for (i, job) in self.jobs.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            job.write_json(out);
+        }
+        out.push(']');
+    }
+
+    /// Decode the `jobs` array.
+    pub fn from_json(j: &Json) -> Result<BatchRequest, ServeError> {
+        let arr = j.as_arr().ok_or_else(|| malformed("`jobs` must be an array"))?;
+        let jobs = arr.iter().map(JobRequest::from_json).collect::<Result<Vec<_>, _>>()?;
+        Ok(BatchRequest { jobs })
+    }
+}
+
+/// One job's result. `x` round-trips bit-exactly (shortest round-trip
+/// `f64` text both ways); `final_error` is `null` when the request
+/// supplied raw `y` (no planted truth to compare against).
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobResponse {
+    pub converged: bool,
+    pub iters: u64,
+    pub residual: f64,
+    pub final_error: Option<f64>,
+    pub x: Vec<f64>,
+    pub wall_s: f64,
+}
+
+impl JobResponse {
+    /// Lift a pool/batch outcome into the wire type. `known_truth` is
+    /// false for raw-`y` requests, whose `final_error` would otherwise
+    /// be distance to an arbitrary all-zero placeholder.
+    pub fn from_outcome(out: JobOutcome, known_truth: bool) -> JobResponse {
+        JobResponse {
+            converged: out.converged,
+            iters: out.iters,
+            residual: out.residual,
+            final_error: known_truth.then_some(out.final_error),
+            x: out.x,
+            wall_s: out.wall.as_secs_f64(),
+        }
+    }
+
+    /// Serialize (no envelope).
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        self.write_json(&mut out);
+        out
+    }
+
+    pub(crate) fn write_json(&self, out: &mut String) {
+        let _ = write!(out, "{{\"converged\":{},\"iters\":{},\"residual\":", self.converged,
+            self.iters);
+        push_f64(out, self.residual);
+        out.push_str(",\"final_error\":");
+        match self.final_error {
+            Some(e) => push_f64(out, e),
+            None => out.push_str("null"),
+        }
+        out.push_str(",\"x\":");
+        write_f64_array(out, &self.x);
+        out.push_str(",\"wall_s\":");
+        push_f64(out, self.wall_s);
+        out.push('}');
+    }
+
+    /// Decode one response object.
+    pub fn from_json(j: &Json) -> Result<JobResponse, ServeError> {
+        let converged = j
+            .get("converged")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| malformed("missing bool field `converged`"))?;
+        let final_error = match j.get("final_error") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.as_f64().ok_or_else(|| malformed("`final_error` must be a number"))?),
+        };
+        Ok(JobResponse {
+            converged,
+            iters: req_u64(j, "iters")?,
+            residual: req_f64(j, "residual")?,
+            final_error,
+            x: f64_array(j.get("x").ok_or_else(|| malformed("missing field `x`"))?, "x")?,
+            wall_s: req_f64(j, "wall_s")?,
+        })
+    }
+}
+
+/// Server counters + latency percentiles, queryable over the wire (a
+/// `stats` frame) and from the in-process handle. Percentiles are NaN
+/// (wire `null`) until the first job completes.
+#[derive(Clone, Debug)]
+pub struct StatsSnapshot {
+    /// Jobs completed (ok or worker-panic), excluding admission rejects.
+    pub served: u64,
+    /// Jobs rejected by admission control ([`ServeError::Busy`]).
+    pub rejected: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Jobs currently admitted and not yet answered.
+    pub inflight: u64,
+    pub p50_s: f64,
+    pub p90_s: f64,
+    pub p99_s: f64,
+}
+
+impl StatsSnapshot {
+    /// Operator-cache hit ratio in `[0, 1]` (NaN before any lookup).
+    pub fn cache_hit_ratio(&self) -> f64 {
+        self.cache_hits as f64 / (self.cache_hits + self.cache_misses) as f64
+    }
+
+    /// Serialize (no envelope).
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        self.write_json(&mut out);
+        out
+    }
+
+    pub(crate) fn write_json(&self, out: &mut String) {
+        let _ = write!(
+            out,
+            "{{\"served\":{},\"rejected\":{},\"cache_hits\":{},\"cache_misses\":{},\
+             \"inflight\":{}",
+            self.served, self.rejected, self.cache_hits, self.cache_misses, self.inflight
+        );
+        for (key, v) in [("p50_s", self.p50_s), ("p90_s", self.p90_s), ("p99_s", self.p99_s)] {
+            let _ = write!(out, ",\"{key}\":");
+            push_f64(out, v);
+        }
+        out.push('}');
+    }
+
+    /// Decode a stats object (`null` percentiles come back as NaN).
+    pub fn from_json(j: &Json) -> Result<StatsSnapshot, ServeError> {
+        Ok(StatsSnapshot {
+            served: req_u64(j, "served")?,
+            rejected: req_u64(j, "rejected")?,
+            cache_hits: req_u64(j, "cache_hits")?,
+            cache_misses: req_u64(j, "cache_misses")?,
+            inflight: req_u64(j, "inflight")?,
+            p50_s: opt_f64(j, "p50_s"),
+            p90_s: opt_f64(j, "p90_s"),
+            p99_s: opt_f64(j, "p99_s"),
+        })
+    }
+}
+
+// ------------------------------------------------ shared JSON primitives
+
+/// Shortest-round-trip `f64` (non-finite → `null`, like the bench
+/// telemetry). `f64::to_string` output re-parses to the identical bits,
+/// which is what makes served iterates bit-identical across the wire.
+pub(crate) fn push_f64(out: &mut String, v: f64) {
+    if v.is_finite() {
+        let _ = write!(out, "{v}");
+    } else {
+        out.push_str("null");
+    }
+}
+
+pub(crate) fn write_f64_array(out: &mut String, vals: &[f64]) {
+    out.push('[');
+    for (i, &v) in vals.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        push_f64(out, v);
+    }
+    out.push(']');
+}
+
+pub(crate) fn f64_array(j: &Json, key: &str) -> Result<Vec<f64>, ServeError> {
+    let arr = j.as_arr().ok_or_else(|| malformed(format!("`{key}` must be an array")))?;
+    arr.iter()
+        .map(|v| match v {
+            Json::Num(x) => Ok(*x),
+            Json::Null => Ok(f64::NAN),
+            _ => Err(malformed(format!("`{key}` entries must be numbers"))),
+        })
+        .collect()
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String, ServeError> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| malformed(format!("missing string field `{key}`")))
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64, ServeError> {
+    match j.get(key) {
+        Some(Json::Null) => Ok(f64::NAN),
+        Some(v) => v.as_f64().ok_or_else(|| malformed(format!("`{key}` must be a number"))),
+        None => Err(malformed(format!("missing numeric field `{key}`"))),
+    }
+}
+
+fn opt_f64(j: &Json, key: &str) -> f64 {
+    j.get(key).and_then(Json::as_f64).unwrap_or(f64::NAN)
+}
+
+/// Nonnegative integer field (the JSON interop 2^53 rule applies, same
+/// as the bench telemetry).
+pub(crate) fn req_u64(j: &Json, key: &str) -> Result<u64, ServeError> {
+    let v = j
+        .get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| malformed(format!("missing numeric field `{key}`")))?;
+    if v < 0.0 || v.fract() != 0.0 || v > 9.007_199_254_740_992e15 {
+        return Err(malformed(format!("`{key}` must be a nonnegative integer, got {v}")));
+    }
+    Ok(v as u64)
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize, ServeError> {
+    Ok(req_u64(j, key)? as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(seed: u64) -> JobRequest {
+        JobRequest { ensemble: Ensemble::Gaussian, n: 128, m: 64, b: 8, s: 4, seed, y: None }
+    }
+
+    #[test]
+    fn job_request_roundtrips() {
+        let req = job(7);
+        let parsed = JobRequest::from_json(&Json::parse(&req.to_json()).unwrap()).unwrap();
+        assert_eq!(parsed, req);
+        let with_y =
+            JobRequest { y: Some(vec![0.1 + 0.2, -0.0, 1e-300, 3.5]), m: 4, b: 2, ..job(9) };
+        let parsed = JobRequest::from_json(&Json::parse(&with_y.to_json()).unwrap()).unwrap();
+        assert_eq!(parsed, with_y);
+        // Bit-exact float round trip, including the -0.0 sign bit.
+        let y = parsed.y.unwrap();
+        for (a, b) in y.iter().zip(with_y.y.as_ref().unwrap()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn unknown_fields_are_ignored_v1_rule() {
+        let mut text = job(3).to_json();
+        text.insert_str(1, "\"future_field\":[1,2,3],");
+        let parsed = JobRequest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, job(3));
+    }
+
+    #[test]
+    fn malformed_requests_are_typed_errors() {
+        for bad in [
+            r#"{"ensemble":"nope","n":8,"m":4,"b":2,"s":1,"seed":0}"#,
+            r#"{"ensemble":"gaussian","n":8,"m":4,"b":2,"seed":0}"#,
+            r#"{"ensemble":"gaussian","n":8.5,"m":4,"b":2,"s":1,"seed":0}"#,
+            r#"{"ensemble":"gaussian","n":-8,"m":4,"b":2,"s":1,"seed":0}"#,
+            r#"{"ensemble":"gaussian","n":8,"m":4,"b":2,"s":1,"seed":0,"y":"zz"}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(
+                matches!(JobRequest::from_json(&j), Err(ServeError::Malformed(_))),
+                "should be malformed: {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_problems_without_panicking() {
+        let bad_blocks = JobRequest { b: 5, ..job(1) }; // 5 does not divide 64
+        assert!(matches!(bad_blocks.validate(), Err(ServeError::Invalid(_))));
+        let bad_y = JobRequest { y: Some(vec![1.0; 3]), ..job(1) };
+        assert!(matches!(bad_y.validate(), Err(ServeError::Invalid(_))));
+        let nan_y = JobRequest { y: Some(vec![f64::NAN; 64]), ..job(1) };
+        assert!(matches!(nan_y.validate(), Err(ServeError::Invalid(_))));
+        // partial_dct is served matrix-free => power-of-two n required.
+        let bad_dct = JobRequest { ensemble: Ensemble::PartialDct, n: 100, ..job(1) };
+        assert!(matches!(bad_dct.validate(), Err(ServeError::Invalid(_))));
+        job(1).validate().unwrap();
+    }
+
+    #[test]
+    fn problem_resolution_is_cache_stable() {
+        // Same request, one fresh operator vs one shared (cache-hit)
+        // operator: bit-identical signals and measurements.
+        let req = job(11);
+        let op = req.draw_operator();
+        let p1 = req.problem(&op).unwrap();
+        let p2 = req.problem(&op).unwrap();
+        assert_eq!(p1.x_true, p2.x_true);
+        assert_eq!(p1.y, p2.y);
+        assert!(p1.shares_operator_with(&p2));
+        // Provided-y mode: measurements taken verbatim, no planted truth.
+        let served = JobRequest { y: Some(p1.y.clone()), ..req.clone() };
+        let p3 = served.problem(&op).unwrap();
+        assert_eq!(p3.y, p1.y);
+        assert!(p3.x_true.iter().all(|&v| v == 0.0));
+        assert!(p3.support.is_empty());
+    }
+
+    #[test]
+    fn op_keys_and_window_compatibility() {
+        let a = job(1);
+        let b = job(1);
+        let c = job(2);
+        assert_eq!(a.op_key(), b.op_key());
+        assert_ne!(a.op_key(), c.op_key());
+        assert!(BatchRequest { jobs: vec![a.clone(), b] }.compatible());
+        assert!(!BatchRequest { jobs: vec![a.clone(), c] }.compatible());
+        let diff_s = JobRequest { s: 5, ..a.clone() };
+        assert!(!BatchRequest { jobs: vec![a, diff_s] }.compatible());
+        assert!(!BatchRequest { jobs: vec![] }.compatible());
+    }
+
+    #[test]
+    fn batch_request_roundtrips_and_validates() {
+        let batch = BatchRequest { jobs: vec![job(1), job(2)] };
+        let parsed = BatchRequest::from_json(&Json::parse(&batch.to_json()).unwrap()).unwrap();
+        assert_eq!(parsed, batch);
+        batch.validate().unwrap();
+        assert!(matches!(
+            BatchRequest { jobs: vec![] }.validate(),
+            Err(ServeError::Invalid(_))
+        ));
+    }
+
+    #[test]
+    fn job_response_roundtrips_bit_exactly() {
+        let resp = JobResponse {
+            converged: true,
+            iters: 321,
+            residual: 3.000000000000001e-8,
+            final_error: Some(1.25e-6),
+            x: vec![0.0, -0.0, 0.1 + 0.2, -17.25, 1e-300],
+            wall_s: 0.0125,
+        };
+        let parsed = JobResponse::from_json(&Json::parse(&resp.to_json()).unwrap()).unwrap();
+        assert_eq!(parsed, resp);
+        for (a, b) in parsed.x.iter().zip(&resp.x) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // No planted truth: final_error serializes as null.
+        let blind = JobResponse { final_error: None, ..resp };
+        let parsed = JobResponse::from_json(&Json::parse(&blind.to_json()).unwrap()).unwrap();
+        assert_eq!(parsed.final_error, None);
+    }
+
+    #[test]
+    fn serve_error_roundtrips_every_variant() {
+        let variants = [
+            ServeError::Busy,
+            ServeError::Malformed("bad frame".to_string()),
+            ServeError::Invalid("b must divide m".to_string()),
+            ServeError::Incompatible("mixed operator keys".to_string()),
+            ServeError::WorkerPanic,
+        ];
+        for e in variants {
+            let parsed = ServeError::from_json(&Json::parse(&e.to_json()).unwrap()).unwrap();
+            assert_eq!(parsed, e, "round trip of {e}");
+        }
+        let v = ServeError::UnsupportedVersion(9);
+        let parsed = ServeError::from_json(&Json::parse(&v.to_json()).unwrap()).unwrap();
+        assert_eq!(parsed.code(), "unsupported_version");
+    }
+
+    #[test]
+    fn stats_snapshot_roundtrips() {
+        let s = StatsSnapshot {
+            served: 10,
+            rejected: 2,
+            cache_hits: 8,
+            cache_misses: 2,
+            inflight: 1,
+            p50_s: 0.002,
+            p90_s: 0.004,
+            p99_s: f64::NAN,
+        };
+        assert!((s.cache_hit_ratio() - 0.8).abs() < 1e-12);
+        let parsed = StatsSnapshot::from_json(&Json::parse(&s.to_json()).unwrap()).unwrap();
+        assert_eq!(parsed.served, 10);
+        assert_eq!(parsed.cache_hits, 8);
+        assert_eq!(parsed.p50_s, 0.002);
+        assert!(parsed.p99_s.is_nan());
+    }
+
+    #[test]
+    fn from_outcome_maps_truth_knowledge() {
+        let out = JobOutcome {
+            converged: true,
+            iters: 5,
+            residual: 1e-8,
+            final_error: 2e-7,
+            x: vec![1.0, 0.0],
+            wall: std::time::Duration::from_millis(3),
+        };
+        let known = JobResponse::from_outcome(out.clone(), true);
+        assert_eq!(known.final_error, Some(2e-7));
+        assert_eq!(known.iters, 5);
+        let blind = JobResponse::from_outcome(out, false);
+        assert_eq!(blind.final_error, None);
+        assert!((blind.wall_s - 0.003).abs() < 1e-9);
+    }
+}

@@ -38,6 +38,16 @@
 //! materialized matrix, or the subsampled-DCT plan at `n = 2^17+`):
 //! problems carry `Arc<Operator>`, so a pool full of jobs and a batch full
 //! of signals all run against one allocation.
+//!
+//! The network face of the service lives in three submodules: [`api`]
+//! (the versioned typed job vocabulary), [`wire`] (length-prefixed JSON
+//! framing + the blocking client), and [`server`] (the `astir serve`
+//! front-end: operator cache, deadline micro-batching, admission
+//! control).
+
+pub mod api;
+pub mod server;
+pub mod wire;
 
 use std::time::{Duration, Instant};
 
@@ -257,6 +267,30 @@ impl RecoveryPool {
         (0..jobs)
             .map(|i| set.slots.take(i).expect("pool job produced no result"))
             .collect()
+    }
+
+    /// [`RecoveryPool::run_jobs`] with per-job panic isolation: a job that
+    /// panics yields `Err(ServeError::WorkerPanic)` in **its own slot**
+    /// instead of poisoning the whole window — the rest of the batch
+    /// completes and returns normally. This is the entry point the serve
+    /// path uses, so one hostile or buggy request cannot take down a
+    /// micro-batch (or the submitter) with it.
+    pub fn try_run_jobs<T, F>(
+        &self,
+        jobs: usize,
+        master_seed: u64,
+        f: F,
+    ) -> Vec<Result<T, api::ServeError>>
+    where
+        T: Send + 'static,
+        F: Fn(usize, &mut Rng) -> T + Send + Sync + 'static,
+    {
+        self.run_jobs(jobs, master_seed, move |i, rng| {
+            // AssertUnwindSafe: on Err the result value is dropped whole;
+            // no partially-mutated state outlives the catch.
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i, rng)))
+                .map_err(|_| api::ServeError::WorkerPanic)
+        })
     }
 }
 
@@ -656,5 +690,56 @@ mod tests {
         // The pool still serves subsequent batches.
         let ok: Vec<usize> = pool.run_jobs(3, 2, |i, _| i + 1);
         assert_eq!(ok, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn try_run_jobs_isolates_a_mid_batch_panic() {
+        // Satellite contract: a panicking job mid-window poisons ONLY its
+        // own slot; every other job's result comes back intact and the
+        // submitter never unwinds.
+        let pool = RecoveryPool::new(2);
+        let results = pool.try_run_jobs(5, 3, |i, _rng| {
+            if i == 2 {
+                panic!("hostile request");
+            }
+            i * 10
+        });
+        assert_eq!(results.len(), 5);
+        for (i, r) in results.iter().enumerate() {
+            if i == 2 {
+                assert_eq!(r.as_ref().unwrap_err(), &api::ServeError::WorkerPanic);
+            } else {
+                assert_eq!(r.as_ref().unwrap(), &(i * 10));
+            }
+        }
+        // The pool keeps serving — both the panic-isolated and the
+        // re-raising entry points — after the poisoned window retires.
+        let ok = pool.try_run_jobs(2, 4, |i, _| i + 7);
+        assert_eq!(ok.into_iter().map(Result::unwrap).collect::<Vec<_>>(), vec![7, 8]);
+        let plain: Vec<usize> = pool.run_jobs(2, 5, |i, _| i);
+        assert_eq!(plain, vec![0, 1]);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "full solve loop is too slow under Miri")]
+    fn try_run_jobs_matches_run_jobs_bitwise_on_clean_batches() {
+        // Panic isolation must not perturb results: same closure, same
+        // master seed => identical outputs job for job.
+        let pool = RecoveryPool::new(3);
+        let p = Arc::new(easy(9));
+        let q = Arc::clone(&p);
+        let direct: Vec<Vec<f64>> = pool.run_jobs(3, 17, move |i, _| {
+            solve_job(&p, Alg::Stoiht, &AsyncOpts::default(), i as u64).x
+        });
+        let guarded = pool.try_run_jobs(3, 17, move |i, _| {
+            solve_job(&q, Alg::Stoiht, &AsyncOpts::default(), i as u64).x
+        });
+        for (a, b) in direct.iter().zip(guarded) {
+            let b = b.unwrap();
+            assert_eq!(a.len(), b.len());
+            for (u, v) in a.iter().zip(&b) {
+                assert_eq!(u.to_bits(), v.to_bits());
+            }
+        }
     }
 }

@@ -1,0 +1,806 @@
+//! `astir serve` — a zero-dependency TCP front-end over the recovery
+//! service: warm operator cache, deadline micro-batching, typed admission
+//! control, and per-job latency accounting.
+//!
+//! ## Architecture
+//!
+//! One blocking accept loop ([`Server::run`]) feeds accepted connections
+//! through a mutex/condvar queue to a small set of persistent handler
+//! threads (`--workers`). A handler owns its connection for its lifetime:
+//! it reads length-prefixed JSON frames ([`super::wire`]), dispatches
+//! them, and writes replies in order. All threading goes through the
+//! [`crate::sync`] doorway, so the serving layer obeys the same
+//! discipline (and model-shim compatibility) as the solver runtime.
+//!
+//! * **Operator cache** — a bounded LRU keyed by [`OpKey`]. The draw
+//!   happens **under the cache lock** so concurrent misses on one key
+//!   yield a single `Arc<Operator>`; that identity is what lets their
+//!   problems share a lockstep window (`Problem::shares_operator_with`).
+//! * **Deadline micro-batcher** — with `--batch-window-ms T > 0`, the
+//!   first job of a window becomes *leader*: it holds the window open up
+//!   to `T` ms (or [`WINDOW_FILL`] jobs), then solves everything that
+//!   joined in one [`super::recover_batch_stoiht`] call. Compatible jobs
+//!   arriving meanwhile join as *followers* and sleep on the condvar;
+//!   incompatible jobs fall back to a solo [`super::solve_job`]. With
+//!   `T = 0` every job runs solo inline — the configuration whose
+//!   responses are **bit-identical** to an in-process `solve_job` with
+//!   the same seed (pinned by `rust/tests/serve_e2e.rs`).
+//! * **Admission control** — an atomic in-flight counter; a job frame
+//!   arriving when `--max-inflight` jobs are already admitted is rejected
+//!   with [`ServeError::Busy`] instead of queued. `stats` frames bypass
+//!   admission.
+//! * **Panic isolation** — every solve runs under `catch_unwind`; a
+//!   panicking job (or micro-batch window) answers
+//!   [`ServeError::WorkerPanic`] for the affected jobs only, and the
+//!   server keeps serving.
+//!
+//! The server solves StoIHT (`Alg::Stoiht`) with [`AsyncOpts::default`]
+//! in v1; the algorithm/options become request fields in a future
+//! additive revision.
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use crate::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::sync::{thread, Arc, Condvar, Mutex};
+
+use crate::algorithms::Alg;
+use crate::async_runtime::AsyncOpts;
+use crate::linalg::Operator;
+use crate::metrics::quantile;
+use crate::problem::Problem;
+use crate::service::api::{
+    BatchRequest, JobRequest, JobResponse, OpKey, ServeError, StatsSnapshot,
+};
+use crate::service::wire::{write_frame, Reply, Request, MAX_FRAME_LEN};
+use crate::service::{recover_batch_stoiht, solve_job};
+
+/// A micro-batch window closes early once this many jobs joined.
+pub const WINDOW_FILL: usize = 8;
+
+/// Operator-cache capacity (distinct `OpKey`s kept warm).
+pub const OP_CACHE_CAP: usize = 32;
+
+/// Leader poll interval while a window is open, and the per-read socket
+/// timeout handlers use to stay responsive to shutdown.
+const WINDOW_POLL: Duration = Duration::from_micros(200);
+const READ_POLL: Duration = Duration::from_millis(25);
+
+/// Front-end configuration (CLI `serve` flags / `[serve]` TOML section).
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// Bind address; port 0 picks an ephemeral port (tests).
+    pub addr: String,
+    /// Handler threads (each owns one connection at a time).
+    pub workers: usize,
+    /// Micro-batch window in milliseconds; 0 disables batching (every
+    /// job solves solo, bit-identical to in-process `solve_job`).
+    pub batch_window_ms: u64,
+    /// Admission cap on concurrently admitted jobs.
+    pub max_inflight: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            addr: "127.0.0.1:7878".to_string(),
+            workers: crate::config::default_trial_threads(),
+            batch_window_ms: 2,
+            max_inflight: 64,
+        }
+    }
+}
+
+// ------------------------------------------------------- operator cache
+
+/// Bounded LRU of drawn operators. Misses draw **under the lock**: two
+/// concurrent requests for one key must come away holding the same
+/// `Arc`, or their problems could never share a batch window.
+struct OpCache {
+    entries: Mutex<Vec<(OpKey, Arc<Operator>)>>,
+    cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl OpCache {
+    fn new(cap: usize) -> OpCache {
+        assert!(cap >= 1, "operator cache needs capacity >= 1");
+        let entries = Mutex::new(Vec::with_capacity(cap));
+        OpCache { entries, cap, hits: AtomicU64::new(0), misses: AtomicU64::new(0) }
+    }
+
+    fn get_or_draw(&self, req: &JobRequest) -> Arc<Operator> {
+        let key = req.op_key();
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(pos) = entries.iter().position(|(k, _)| *k == key) {
+            let entry = entries.remove(pos);
+            let op = Arc::clone(&entry.1);
+            entries.insert(0, entry);
+            // Relaxed: independent monotone counters, read only by stats.
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return op;
+        }
+        let op = req.draw_operator();
+        entries.insert(0, (key, Arc::clone(&op)));
+        entries.truncate(self.cap);
+        // Relaxed: as above.
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        op
+    }
+}
+
+// ---------------------------------------------------------------- stats
+
+struct Stats {
+    served: AtomicU64,
+    rejected: AtomicU64,
+    inflight: AtomicUsize,
+    latencies: Mutex<Vec<f64>>,
+}
+
+impl Stats {
+    fn new() -> Stats {
+        Stats {
+            served: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            inflight: AtomicUsize::new(0),
+            latencies: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn snapshot(&self, cache: &OpCache) -> StatsSnapshot {
+        let lat = self.latencies.lock().unwrap();
+        StatsSnapshot {
+            // Relaxed loads: monitoring counters; each is independently
+            // coherent and no cross-counter invariant is promised.
+            served: self.served.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            cache_hits: cache.hits.load(Ordering::Relaxed),
+            cache_misses: cache.misses.load(Ordering::Relaxed),
+            inflight: self.inflight.load(Ordering::Relaxed) as u64,
+            p50_s: quantile(&lat, 0.50),
+            p90_s: quantile(&lat, 0.90),
+            p99_s: quantile(&lat, 0.99),
+        }
+    }
+}
+
+// --------------------------------------------------------- micro-batcher
+
+struct PendingJob {
+    problem: Problem,
+    known_truth: bool,
+}
+
+struct BatcherState {
+    /// Monotone window counter; results are addressed by `(gen, index)`.
+    gen: u64,
+    /// A window is currently accepting followers.
+    open: bool,
+    /// The open window's compatibility key (operator key + `b` + `s`).
+    key: Option<(OpKey, usize, usize)>,
+    /// The open window's seed (its leader's request seed).
+    seed: u64,
+    deadline: Instant,
+    jobs: Vec<PendingJob>,
+    /// Follower results parked until their owner wakes and claims them.
+    results: Vec<(u64, usize, Result<JobResponse, ServeError>)>,
+}
+
+struct Batcher {
+    state: Mutex<BatcherState>,
+    cv: Condvar,
+}
+
+impl Batcher {
+    fn new() -> Batcher {
+        let state = Mutex::new(BatcherState {
+            gen: 0,
+            open: false,
+            key: None,
+            seed: 0,
+            deadline: Instant::now(),
+            jobs: Vec::new(),
+            results: Vec::new(),
+        });
+        Batcher { state, cv: Condvar::new() }
+    }
+}
+
+// --------------------------------------------------------------- server
+
+struct ServerShared {
+    opts: ServeOpts,
+    alg_opts: AsyncOpts,
+    cache: OpCache,
+    stats: Stats,
+    batcher: Batcher,
+    conns: Mutex<VecDeque<TcpStream>>,
+    conn_cv: Condvar,
+    stop: AtomicBool,
+}
+
+/// A bound-but-not-yet-running server. [`Server::run`] blocks the caller
+/// (the CLI path); [`Server::spawn`] runs it on a background thread and
+/// returns a [`ServerHandle`] (the in-process path for tests and the
+/// `loadgen` bench suite).
+pub struct Server {
+    listener: TcpListener,
+    shared: Arc<ServerShared>,
+}
+
+impl Server {
+    /// Bind the listen socket (fails fast on a bad/busy address).
+    pub fn bind(opts: ServeOpts) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(&opts.addr)?;
+        let shared = Arc::new(ServerShared {
+            alg_opts: AsyncOpts::default(),
+            cache: OpCache::new(OP_CACHE_CAP),
+            stats: Stats::new(),
+            batcher: Batcher::new(),
+            conns: Mutex::new(VecDeque::new()),
+            conn_cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            opts,
+        });
+        Ok(Server { listener, shared })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> std::io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Serve until [`ServerHandle::stop`] (or process exit). Prints one
+    /// `listening on <addr>` line so a parent process can scrape the
+    /// resolved address.
+    pub fn run(self) -> std::io::Result<()> {
+        let addr = self.listener.local_addr()?;
+        println!("listening on {addr}");
+        let workers = self.shared.opts.workers.max(1);
+        let handlers: Vec<thread::JoinHandle<()>> = (0..workers)
+            .map(|w| {
+                let shared = Arc::clone(&self.shared);
+                thread::Builder::new()
+                    .name(format!("astir-serve-{w}"))
+                    .spawn(move || handler_main(&shared))
+                    .expect("spawn serve handler")
+            })
+            .collect();
+        for conn in self.listener.incoming() {
+            // Acquire: pairs with the Release store in `shutdown`, making
+            // the stop request visible across the accept wake-up.
+            if self.shared.stop.load(Ordering::Acquire) {
+                break;
+            }
+            if let Ok(stream) = conn {
+                let mut q = self.shared.conns.lock().unwrap();
+                q.push_back(stream);
+                self.shared.conn_cv.notify_one();
+            }
+        }
+        self.shared.conn_cv.notify_all();
+        for h in handlers {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+
+    /// Run on a background thread; the returned handle can query stats
+    /// and stop the server (also done on drop).
+    pub fn spawn(self) -> std::io::Result<ServerHandle> {
+        let addr = self.listener.local_addr()?;
+        let shared = Arc::clone(&self.shared);
+        let thread = thread::Builder::new()
+            .name("astir-serve-accept".to_string())
+            .spawn(move || {
+                let _ = self.run();
+            })
+            .expect("spawn serve accept loop");
+        Ok(ServerHandle { addr, shared, thread: Some(thread) })
+    }
+}
+
+/// Owner handle for a spawned server. Dropping it stops the server.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shared: Arc<ServerShared>,
+    thread: Option<thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Counters + latency percentiles, identical to a wire `stats` frame.
+    pub fn stats(&self) -> StatsSnapshot {
+        self.shared.stats.snapshot(&self.shared.cache)
+    }
+
+    /// Stop accepting, drain handler threads, and join the accept loop.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        let Some(thread) = self.thread.take() else { return };
+        // Release: pairs with the Acquire loads in the accept loop and
+        // the handlers' polled reads.
+        self.shared.stop.store(true, Ordering::Release);
+        self.shared.conn_cv.notify_all();
+        // Unblock the accept call with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        let _ = thread.join();
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// -------------------------------------------------------------- handlers
+
+fn handler_main(shared: &ServerShared) {
+    loop {
+        let stream = {
+            let mut q = shared.conns.lock().unwrap();
+            loop {
+                if let Some(s) = q.pop_front() {
+                    break s;
+                }
+                // Acquire: see `ServerHandle::shutdown`.
+                if shared.stop.load(Ordering::Acquire) {
+                    return;
+                }
+                q = shared.conn_cv.wait(q).unwrap();
+            }
+        };
+        serve_connection(shared, stream);
+    }
+}
+
+fn serve_connection(shared: &ServerShared, mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    let _ = stream.set_nodelay(true);
+    loop {
+        let text = match read_frame_polled(&mut stream, &shared.stop) {
+            Ok(Some(text)) => text,
+            // Clean hang-up, shutdown, or an unrecoverable socket/frame
+            // error: either way this connection is done.
+            Ok(None) | Err(_) => return,
+        };
+        let reply = match Request::parse(&text) {
+            Ok(Request::Job(req)) => Reply::Job(handle_job(shared, &req)),
+            Ok(Request::Batch(batch)) => match handle_batch(shared, &batch) {
+                Ok(results) => Reply::Batch(results),
+                Err(e) => Reply::Job(Err(e)),
+            },
+            Ok(Request::Stats) => Reply::Stats(shared.stats.snapshot(&shared.cache)),
+            Err(e) => Reply::Job(Err(e)),
+        };
+        if write_frame(&mut stream, &reply.to_json()).is_err() {
+            return;
+        }
+    }
+}
+
+/// [`super::wire::read_frame`] adapted to a socket with a short read
+/// timeout: timeouts poll the stop flag instead of killing the
+/// connection, so handlers stay responsive to shutdown while blocked on
+/// an idle peer. `Ok(None)` means hang-up (at a frame boundary) or stop.
+fn read_frame_polled(
+    stream: &mut TcpStream,
+    stop: &AtomicBool,
+) -> std::io::Result<Option<String>> {
+    let mut header = [0u8; 4];
+    match read_full_polled(stream, stop, &mut header)? {
+        // Stop requested, or a clean hang-up before the first header
+        // byte: either way this connection is done.
+        ReadFull::Stopped | ReadFull::EofAtStart => return Ok(None),
+        ReadFull::Filled => {}
+    }
+    let len = u32::from_be_bytes(header) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(std::io::Error::new(
+            ErrorKind::InvalidData,
+            format!("frame length {len} exceeds MAX_FRAME_LEN"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    match read_full_polled(stream, stop, &mut payload)? {
+        ReadFull::Stopped => return Ok(None),
+        ReadFull::EofAtStart => {
+            return Err(std::io::Error::new(ErrorKind::UnexpectedEof, "eof inside a frame"));
+        }
+        ReadFull::Filled => {}
+    }
+    String::from_utf8(payload)
+        .map(Some)
+        .map_err(|_| std::io::Error::new(ErrorKind::InvalidData, "frame is not UTF-8"))
+}
+
+enum ReadFull {
+    Filled,
+    /// The stop flag went up mid-read; the buffer is abandoned.
+    Stopped,
+    /// The peer hung up before the first byte (empty buffers count as
+    /// trivially filled instead).
+    EofAtStart,
+}
+
+/// Fill `buf`, treating read timeouts as polls of the stop flag. EOF
+/// after the first byte is an error (a torn frame).
+fn read_full_polled(
+    stream: &mut TcpStream,
+    stop: &AtomicBool,
+    buf: &mut [u8],
+) -> std::io::Result<ReadFull> {
+    let mut have = 0usize;
+    while have < buf.len() {
+        // Acquire: see `ServerHandle::shutdown`.
+        if stop.load(Ordering::Acquire) {
+            return Ok(ReadFull::Stopped);
+        }
+        match stream.read(&mut buf[have..]) {
+            Ok(0) if have == 0 => return Ok(ReadFull::EofAtStart),
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    ErrorKind::UnexpectedEof,
+                    "peer hung up mid-frame",
+                ));
+            }
+            Ok(k) => have += k,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {}
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(ReadFull::Filled)
+}
+
+// ------------------------------------------------------------- dispatch
+
+fn handle_job(shared: &ServerShared, req: &JobRequest) -> Result<JobResponse, ServeError> {
+    req.validate()?;
+    if !admit(shared, 1) {
+        return Err(ServeError::Busy);
+    }
+    let start = Instant::now();
+    let result = solve_admitted(shared, req);
+    finish(shared, 1, start);
+    result
+}
+
+fn handle_batch(
+    shared: &ServerShared,
+    batch: &BatchRequest,
+) -> Result<Vec<Result<JobResponse, ServeError>>, ServeError> {
+    batch.validate()?;
+    let k = batch.jobs.len();
+    if !admit(shared, k) {
+        return Err(ServeError::Busy);
+    }
+    let start = Instant::now();
+    let results = if batch.compatible() {
+        let op = shared.cache.get_or_draw(&batch.jobs[0]);
+        match batch.jobs.iter().map(|j| j.problem(&op)).collect::<Result<Vec<_>, _>>() {
+            Ok(problems) => {
+                let known: Vec<bool> = batch.jobs.iter().map(|j| j.y.is_none()).collect();
+                solve_window(&problems, &known, &shared.alg_opts, batch.jobs[0].seed)
+            }
+            Err(e) => batch.jobs.iter().map(|_| Err(e.clone())).collect(),
+        }
+    } else {
+        // Mixed keys: no shared window possible, solve sequentially.
+        batch
+            .jobs
+            .iter()
+            .map(|j| {
+                let op = shared.cache.get_or_draw(j);
+                match j.problem(&op) {
+                    Ok(p) => solve_solo(&p, j.y.is_none(), &shared.alg_opts, j.seed),
+                    Err(e) => Err(e),
+                }
+            })
+            .collect()
+    };
+    finish(shared, k, start);
+    Ok(results)
+}
+
+/// Admission control: reserve `k` in-flight slots or refuse.
+fn admit(shared: &ServerShared, k: usize) -> bool {
+    // AcqRel RMWs: the counter is a capacity token passed between
+    // handler threads; a successful reservation must be visible to
+    // concurrent admits deciding against the cap.
+    let admitted = shared.stats.inflight.fetch_add(k, Ordering::AcqRel) + k;
+    if admitted > shared.opts.max_inflight {
+        shared.stats.inflight.fetch_sub(k, Ordering::AcqRel);
+        // Relaxed: monitoring counter.
+        shared.stats.rejected.fetch_add(k as u64, Ordering::Relaxed);
+        return false;
+    }
+    true
+}
+
+/// Release `k` slots and record their shared wall latency.
+fn finish(shared: &ServerShared, k: usize, start: Instant) {
+    // AcqRel: see `admit`.
+    shared.stats.inflight.fetch_sub(k, Ordering::AcqRel);
+    // Relaxed: monitoring counter.
+    shared.stats.served.fetch_add(k as u64, Ordering::Relaxed);
+    let elapsed = start.elapsed().as_secs_f64();
+    let mut lat = shared.stats.latencies.lock().unwrap();
+    for _ in 0..k {
+        lat.push(elapsed);
+    }
+}
+
+fn solve_admitted(shared: &ServerShared, req: &JobRequest) -> Result<JobResponse, ServeError> {
+    let op = shared.cache.get_or_draw(req);
+    let problem = req.problem(&op)?;
+    let known_truth = req.y.is_none();
+    if shared.opts.batch_window_ms == 0 {
+        solve_solo(&problem, known_truth, &shared.alg_opts, req.seed)
+    } else {
+        run_batched(shared, req, problem, known_truth)
+    }
+}
+
+/// One job through the deadline micro-batcher: lead a fresh window, join
+/// an open compatible one, or (incompatible / full window) solve solo.
+fn run_batched(
+    shared: &ServerShared,
+    req: &JobRequest,
+    problem: Problem,
+    known_truth: bool,
+) -> Result<JobResponse, ServeError> {
+    let window = Duration::from_millis(shared.opts.batch_window_ms);
+    let my_key = (req.op_key(), req.b, req.s);
+    let mut st = shared.batcher.state.lock().unwrap();
+    if st.open && st.key == Some(my_key) && st.jobs.len() < WINDOW_FILL {
+        // Follower: enqueue and sleep until the leader posts our result.
+        let gen = st.gen;
+        let idx = st.jobs.len();
+        st.jobs.push(PendingJob { problem, known_truth });
+        loop {
+            if let Some(pos) = st.results.iter().position(|(g, i, _)| *g == gen && *i == idx) {
+                return st.results.remove(pos).2;
+            }
+            st = shared.batcher.cv.wait(st).unwrap();
+        }
+    }
+    if st.open {
+        // A window is open but we cannot join it: solve solo rather than
+        // stall behind a foreign operator's deadline.
+        drop(st);
+        return solve_solo(&problem, known_truth, &shared.alg_opts, req.seed);
+    }
+    // Leader: open a window keyed and seeded by this request, hold it to
+    // the deadline (sleep-polling — the sync doorway's model shim has no
+    // timed condvar wait), then solve whatever joined in one call.
+    st.gen += 1;
+    let gen = st.gen;
+    st.open = true;
+    st.key = Some(my_key);
+    st.seed = req.seed;
+    st.deadline = Instant::now() + window;
+    st.jobs.push(PendingJob { problem, known_truth });
+    loop {
+        if st.jobs.len() >= WINDOW_FILL || Instant::now() >= st.deadline {
+            break;
+        }
+        drop(st);
+        thread::sleep(WINDOW_POLL);
+        st = shared.batcher.state.lock().unwrap();
+    }
+    st.open = false;
+    st.key = None;
+    let jobs = std::mem::take(&mut st.jobs);
+    let seed = st.seed;
+    drop(st);
+    let (problems, known): (Vec<Problem>, Vec<bool>) =
+        jobs.into_iter().map(|j| (j.problem, j.known_truth)).unzip();
+    let mut results = solve_window(&problems, &known, &shared.alg_opts, seed);
+    let mine = results.remove(0);
+    if !results.is_empty() {
+        let mut st = shared.batcher.state.lock().unwrap();
+        for (offset, r) in results.into_iter().enumerate() {
+            st.results.push((gen, offset + 1, r));
+        }
+        shared.batcher.cv.notify_all();
+    }
+    mine
+}
+
+/// One lockstep window under panic isolation: a panic anywhere in the
+/// batch answers `WorkerPanic` for every window member (their solves are
+/// interleaved — no per-job blame), and the server survives.
+fn solve_window(
+    problems: &[Problem],
+    known_truth: &[bool],
+    opts: &AsyncOpts,
+    seed: u64,
+) -> Vec<Result<JobResponse, ServeError>> {
+    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        recover_batch_stoiht(problems, opts, seed)
+    }));
+    match out {
+        Ok(batch) => batch
+            .signals
+            .into_iter()
+            .zip(known_truth)
+            .map(|(s, &k)| Ok(JobResponse::from_outcome(s, k)))
+            .collect(),
+        Err(_) => problems.iter().map(|_| Err(ServeError::WorkerPanic)).collect(),
+    }
+}
+
+/// One solo solve under panic isolation — the `--batch-window-ms 0` path,
+/// bit-identical to in-process [`super::solve_job`] with the same seed.
+fn solve_solo(
+    problem: &Problem,
+    known_truth: bool,
+    opts: &AsyncOpts,
+    seed: u64,
+) -> Result<JobResponse, ServeError> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        solve_job(problem, Alg::Stoiht, opts, seed)
+    }))
+    .map(|out| JobResponse::from_outcome(out, known_truth))
+    .map_err(|_| ServeError::WorkerPanic)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problem::Ensemble;
+    use crate::service::wire::Client;
+
+    fn req(seed: u64) -> JobRequest {
+        JobRequest { ensemble: Ensemble::Gaussian, n: 128, m: 64, b: 8, s: 4, seed, y: None }
+    }
+
+    fn serve(batch_window_ms: u64, max_inflight: usize) -> ServerHandle {
+        let opts = ServeOpts {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 3,
+            batch_window_ms,
+            max_inflight,
+        };
+        Server::bind(opts).unwrap().spawn().unwrap()
+    }
+
+    #[test]
+    fn op_cache_dedups_hits_and_evicts_lru() {
+        let cache = OpCache::new(2);
+        let a1 = cache.get_or_draw(&req(1));
+        let a2 = cache.get_or_draw(&req(1));
+        assert!(Arc::ptr_eq(&a1, &a2), "hit must return the cached Arc");
+        let _b = cache.get_or_draw(&req(2));
+        // Touch 1 (moves it to front), then insert 3: 2 is the LRU victim.
+        let a3 = cache.get_or_draw(&req(1));
+        assert!(Arc::ptr_eq(&a1, &a3));
+        let _c = cache.get_or_draw(&req(3));
+        let _b2 = cache.get_or_draw(&req(2)); // miss: was evicted
+        assert_eq!(cache.hits.load(Ordering::Relaxed), 2);
+        assert_eq!(cache.misses.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn op_cache_distinguishes_full_keys() {
+        let cache = OpCache::new(8);
+        let a = cache.get_or_draw(&req(1));
+        let b = cache.get_or_draw(&JobRequest { n: 64, m: 32, ..req(1) });
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.misses.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "opens real TCP sockets")]
+    fn served_job_is_bit_identical_to_solve_job() {
+        let handle = serve(0, 16);
+        let mut client = Client::connect(&handle.addr().to_string()).unwrap();
+        let request = req(7);
+        let resp = client.job(&request).unwrap().unwrap();
+        let op = request.draw_operator();
+        let problem = request.problem(&op).unwrap();
+        let want = solve_job(&problem, Alg::Stoiht, &AsyncOpts::default(), request.seed);
+        assert_eq!(resp.converged, want.converged);
+        assert_eq!(resp.iters, want.iters);
+        assert_eq!(resp.x.len(), want.x.len());
+        for (a, b) in resp.x.iter().zip(&want.x) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(resp.residual.to_bits(), want.residual.to_bits());
+        let stats = handle.stats();
+        assert_eq!(stats.served, 1);
+        assert_eq!(stats.cache_misses, 1);
+        assert!(stats.p50_s > 0.0);
+        // Same key again: a cache hit, same bits.
+        let again = client.job(&request).unwrap().unwrap();
+        assert_eq!(again.x, resp.x);
+        assert_eq!(handle.stats().cache_hits, 1);
+        handle.stop();
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "opens real TCP sockets")]
+    fn window_merges_compatible_concurrent_jobs() {
+        let handle = serve(40, 16);
+        let addr = handle.addr().to_string();
+        let clients: Vec<thread::JoinHandle<JobResponse>> = (0..2)
+            .map(|_| {
+                let addr = addr.clone();
+                thread::Builder::new()
+                    .name("serve-test-client".to_string())
+                    .spawn(move || {
+                        let mut c = Client::connect(&addr).unwrap();
+                        c.job(&req(5)).unwrap().unwrap()
+                    })
+                    .expect("spawn test client")
+            })
+            .collect();
+        for c in clients {
+            let resp = c.join().unwrap();
+            assert!(resp.converged, "windowed solve must still converge");
+            assert!(resp.residual < 1e-6);
+        }
+        let stats = handle.stats();
+        assert_eq!(stats.served, 2);
+        assert!(stats.cache_hits >= 1, "identical keys must share the cached operator");
+        handle.stop();
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "opens real TCP sockets")]
+    fn invalid_and_incompatible_frames_get_typed_errors() {
+        let handle = serve(0, 16);
+        let mut client = Client::connect(&handle.addr().to_string()).unwrap();
+        // Invalid problem: b does not divide m.
+        let bad = JobRequest { b: 7, ..req(1) };
+        assert!(matches!(client.job(&bad).unwrap(), Err(ServeError::Invalid(_))));
+        // Wrong version: speak v2 by hand.
+        let mut stream = TcpStream::connect(handle.addr()).unwrap();
+        write_frame(&mut stream, r#"{"api_version":2,"stats":true}"#).unwrap();
+        let text = crate::service::wire::read_frame(&mut stream).unwrap().unwrap();
+        let Reply::Job(Err(e)) = Reply::parse(&text).unwrap() else {
+            panic!("expected a typed error reply");
+        };
+        assert_eq!(e.code(), "unsupported_version");
+        // Garbage payload: malformed, connection survives for a retry.
+        write_frame(&mut stream, "not json").unwrap();
+        let text = crate::service::wire::read_frame(&mut stream).unwrap().unwrap();
+        let Reply::Job(Err(e)) = Reply::parse(&text).unwrap() else {
+            panic!("expected a typed error reply");
+        };
+        assert_eq!(e.code(), "malformed");
+        write_frame(&mut stream, &Request::Stats.to_json()).unwrap();
+        let text = crate::service::wire::read_frame(&mut stream).unwrap().unwrap();
+        assert!(matches!(Reply::parse(&text).unwrap(), Reply::Stats(_)));
+        handle.stop();
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "opens real TCP sockets")]
+    fn batch_frame_recovers_compatible_jobs_together() {
+        let handle = serve(0, 16);
+        let mut client = Client::connect(&handle.addr().to_string()).unwrap();
+        let batch = BatchRequest { jobs: vec![req(9), req(9)] };
+        let results = client.batch(&batch).unwrap();
+        assert_eq!(results.len(), 2);
+        for r in &results {
+            assert!(r.as_ref().unwrap().converged);
+        }
+        // One shared window: a single cache lookup for both jobs.
+        assert_eq!(handle.stats().cache_misses, 1);
+        assert_eq!(handle.stats().served, 2);
+        handle.stop();
+    }
+}

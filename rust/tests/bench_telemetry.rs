@@ -124,7 +124,7 @@ fn two_seeded_smoke_runs_register_identically() {
     let opts = RunOpts { mode: Mode::Smoke, filter: None, skip_jumbo: true, dry_run: true };
     let a = suites::run_all(&opts);
     let b = suites::run_all(&opts);
-    assert_eq!(a.suites.len(), 9);
+    assert_eq!(a.suites.len(), 10);
     assert_eq!(a.suites.len(), b.suites.len());
     for (sa, sb) in a.suites.iter().zip(&b.suites) {
         assert_eq!(sa.name, sb.name);

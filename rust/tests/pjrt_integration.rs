@@ -80,7 +80,7 @@ fn pjrt_iht_step_matches_native() {
     let mut rng = Rng::seed_from(5);
     let x: Vec<f64> = (0..p.spec.n).map(|_| 0.3 * rng.gauss()).collect();
     let got = rt
-        .iht_step(p.spec.n, p.spec.m, p.spec.s, p.a().data(), &p.y, &x, 0.8)
+        .iht_step(p.spec.n, p.spec.m, p.spec.s, p.try_dense().unwrap().data(), &p.y, &x, 0.8)
         .unwrap();
     let want = astir::algorithms::iht::iht_step(&p, &x, 0.8);
     for i in 0..p.spec.n {

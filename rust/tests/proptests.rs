@@ -281,7 +281,7 @@ fn prop_problem_blocks_partition() {
     property("blocks partition measurements", 40, |g| {
         let p = random_problem(g);
         let x = g.vec_gauss(p.spec.n);
-        let full = p.a().gemv(&x);
+        let full = p.try_dense().expect("random_problem draws dense").gemv(&x);
         let mut reassembled = Vec::new();
         for i in 0..p.spec.num_blocks() {
             let (blk, _) = p.block(i);

@@ -1,0 +1,148 @@
+//! End-to-end `astir serve` contract over localhost TCP: spawn the real
+//! binary (`CARGO_BIN_EXE_astir`), scrape the ephemeral port from its
+//! `listening on <addr>` line, and drive it with [`Client`] — the same
+//! wire codec production clients use.
+//!
+//! Two contracts are pinned:
+//!
+//! * **Bit-identity** — with `--batch-window-ms 0` every served reply
+//!   (iterates, residual, final error) is bit-for-bit the result of
+//!   resolving the same [`JobRequest`] and running [`solve_job`] in this
+//!   process: the network front-end adds transport, not arithmetic.
+//! * **Typed admission** — with `--max-inflight 1` a job parked in an
+//!   open batch window holds the only slot, so a concurrent job bounces
+//!   with the typed [`ServeError::Busy`] (never a hang or a dropped
+//!   connection), while stats frames bypass admission throughout.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use astir::algorithms::Alg;
+use astir::async_runtime::AsyncOpts;
+use astir::problem::Ensemble;
+use astir::service::api::{JobRequest, ServeError};
+use astir::service::solve_job;
+use astir::service::wire::Client;
+use astir::sync::thread;
+
+/// A spawned `astir serve` child, killed on drop (success or panic).
+struct Serve {
+    child: Child,
+    addr: String,
+}
+
+impl Serve {
+    /// Spawn `astir serve` on an ephemeral loopback port and scrape the
+    /// bound address from its `listening on <addr>` stdout line.
+    fn spawn(extra: &[&str]) -> Serve {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_astir"));
+        cmd.args(["serve", "--addr", "127.0.0.1:0", "--workers", "4"]);
+        cmd.args(extra);
+        cmd.stdout(Stdio::piped()).stderr(Stdio::null()).stdin(Stdio::null());
+        let mut child = cmd.spawn().expect("spawn astir serve");
+        let stdout = child.stdout.take().expect("piped stdout");
+        let mut lines = BufReader::new(stdout).lines();
+        let addr = loop {
+            match lines.next() {
+                Some(Ok(line)) => {
+                    if let Some(rest) = line.strip_prefix("listening on ") {
+                        break rest.trim().to_string();
+                    }
+                }
+                _ => panic!("server exited before printing its address"),
+            }
+        };
+        Serve { child, addr }
+    }
+
+    fn client(&self) -> Client {
+        Client::connect(&self.addr).expect("connect to served addr")
+    }
+}
+
+impl Drop for Serve {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn req(seed: u64) -> JobRequest {
+    JobRequest { ensemble: Ensemble::Gaussian, n: 128, m: 64, b: 8, s: 4, seed, y: None }
+}
+
+#[test]
+fn served_results_are_bit_identical_to_in_process_solves() {
+    let server = Serve::spawn(&["--batch-window-ms", "0"]);
+    // Six concurrent clients over three operator seeds: the second wave of
+    // each seed must hit the warm cache, and every reply must be
+    // bit-identical to the same JobRequest resolved and solved here.
+    let seeds = [5u64, 6, 7, 5, 6, 7];
+    let mut handles = Vec::new();
+    for &seed in &seeds {
+        let addr = server.addr.clone();
+        handles.push(thread::spawn(move || {
+            let mut client = Client::connect(&addr).expect("connect");
+            let resp = client.job(&req(seed)).expect("transport").expect("typed ok");
+            (seed, resp)
+        }));
+    }
+    for h in handles {
+        let (seed, resp) = h.join().expect("client thread");
+        let r = req(seed);
+        let op = r.draw_operator();
+        let p = r.problem(&op).expect("resolve problem");
+        let local = solve_job(&p, Alg::Stoiht, &AsyncOpts::default(), seed);
+        assert!(resp.converged && local.converged, "seed {seed} must converge");
+        assert_eq!(resp.iters, local.iters, "seed {seed}: iteration count drifted");
+        assert_eq!(resp.x.len(), local.x.len());
+        for (a, b) in resp.x.iter().zip(&local.x) {
+            assert_eq!(a.to_bits(), b.to_bits(), "seed {seed}: x drifted over the wire");
+        }
+        assert_eq!(resp.residual.to_bits(), local.residual.to_bits(), "seed {seed}: residual");
+        // y was generated server-side from the seed, so the truth is known
+        // and final_error comes back populated.
+        assert_eq!(resp.final_error.map(f64::to_bits), Some(local.final_error.to_bits()));
+    }
+    let mut client = server.client();
+    let stats = client.stats().expect("stats frame");
+    assert_eq!(stats.served, seeds.len() as u64);
+    assert_eq!(stats.rejected, 0);
+    assert_eq!(stats.cache_misses, 3, "three distinct operator keys");
+    assert_eq!(stats.cache_hits, 3, "repeat seeds must hit the warm cache");
+    assert_eq!(stats.inflight, 0);
+    assert!(stats.p50_s > 0.0 && stats.p99_s >= stats.p50_s);
+}
+
+#[test]
+fn admission_rejects_typed_busy_while_a_window_is_parked() {
+    let server = Serve::spawn(&["--batch-window-ms", "1500", "--max-inflight", "1"]);
+    // Client A's job is admitted and parks as the leader of a 1.5 s batch
+    // window; its admission slot is held for the whole window.
+    let addr = server.addr.clone();
+    let parked = thread::spawn(move || {
+        let mut client = Client::connect(&addr).expect("connect");
+        client.job(&req(40)).expect("transport").expect("parked job must succeed")
+    });
+    // Stats frames bypass admission: poll until A's slot is visible.
+    let mut stats_client = server.client();
+    let mut waited = 0;
+    while stats_client.stats().expect("stats frame").inflight == 0 {
+        waited += 1;
+        assert!(waited < 400, "parked job never became visible in stats");
+        thread::sleep(Duration::from_millis(5));
+    }
+    // Deterministic rejection: the only slot stays held for the rest of
+    // the window, so B bounces with the typed Busy error immediately.
+    let mut b = server.client();
+    let rejected = b.job(&req(41)).expect("transport");
+    assert_eq!(rejected, Err(ServeError::Busy));
+    // A still completes fine once the window deadline passes.
+    let resp = parked.join().expect("client thread");
+    assert!(resp.converged);
+    let stats = stats_client.stats().expect("stats frame");
+    assert_eq!(stats.served, 1);
+    assert_eq!(stats.rejected, 1);
+    assert_eq!(stats.inflight, 0);
+}
