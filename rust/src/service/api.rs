@@ -49,6 +49,17 @@ use crate::service::JobOutcome;
 /// The wire protocol version every frame carries.
 pub const API_VERSION: u64 = 1;
 
+/// Largest `n` or `m` a served request may ask for. Generous against the
+/// paper's scales (matrix-free DCT runs at `n = 2^17`+), but finite: a
+/// remote frame must never be able to drive the server into a capacity
+/// overflow or an allocation-failure abort.
+pub const MAX_DIM: usize = 1 << 22;
+
+/// Largest `n * m` for ensembles that materialize the dense operator
+/// (512 MiB of `f64`). `partial_dct` is served matrix-free and is bound
+/// only by [`MAX_DIM`].
+pub const MAX_DENSE_ELEMS: usize = 1 << 26;
+
 /// Typed error half of every response — exhaustive, stable codes.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ServeError {
@@ -206,8 +217,24 @@ impl JobRequest {
 
     /// Reject invalid problems *before* any generation code can panic on
     /// them — the served API must never turn user input into a panic.
+    /// That includes **size caps** ([`MAX_DIM`], [`MAX_DENSE_ELEMS`]):
+    /// they run first, so no downstream code ever sees dimensions whose
+    /// allocation could overflow or abort.
     pub fn validate(&self) -> Result<(), ServeError> {
-        self.spec().validate().map_err(ServeError::Invalid)?;
+        if self.n > MAX_DIM || self.m > MAX_DIM {
+            return Err(ServeError::Invalid(format!(
+                "n = {} / m = {} exceed the serving cap MAX_DIM = {MAX_DIM}",
+                self.n, self.m
+            )));
+        }
+        let spec = self.spec();
+        if spec.dense_a && self.n.saturating_mul(self.m) > MAX_DENSE_ELEMS {
+            return Err(ServeError::Invalid(format!(
+                "dense {} operator of {} x {} exceeds MAX_DENSE_ELEMS = {MAX_DENSE_ELEMS}",
+                self.ensemble.as_str(), self.m, self.n
+            )));
+        }
+        spec.validate().map_err(ServeError::Invalid)?;
         if let Some(y) = &self.y {
             if y.len() != self.m {
                 return Err(ServeError::Invalid(format!(
@@ -435,7 +462,8 @@ impl JobResponse {
 pub struct StatsSnapshot {
     /// Jobs completed (ok or worker-panic), excluding admission rejects.
     pub served: u64,
-    /// Jobs rejected by admission control ([`ServeError::Busy`]).
+    /// Jobs rejected by admission control, plus connections turned away
+    /// over the accept backlog (both answer [`ServeError::Busy`]).
     pub rejected: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
@@ -620,6 +648,29 @@ mod tests {
         let bad_dct = JobRequest { ensemble: Ensemble::PartialDct, n: 100, ..job(1) };
         assert!(matches!(bad_dct.validate(), Err(ServeError::Invalid(_))));
         job(1).validate().unwrap();
+    }
+
+    #[test]
+    fn validate_caps_hostile_dimensions_before_any_allocation() {
+        // Per-axis cap: applies to every ensemble, checked before the
+        // spec-level divisibility rules so absurd numbers short-circuit.
+        let huge_n = JobRequest { n: MAX_DIM + 1, ..job(1) };
+        assert!(matches!(huge_n.validate(), Err(ServeError::Invalid(_))));
+        let huge_m = JobRequest { m: MAX_DIM + 1, ..job(1) };
+        assert!(matches!(huge_m.validate(), Err(ServeError::Invalid(_))));
+        // Dense-element cap: n and m individually legal, product not.
+        let dense = JobRequest { n: 1 << 16, m: 1 << 16, b: 1 << 8, s: 4, ..job(1) };
+        assert!(matches!(dense.validate(), Err(ServeError::Invalid(_))));
+        // The same footprint served matrix-free (partial_dct) is fine.
+        let dct = JobRequest {
+            ensemble: Ensemble::PartialDct,
+            n: 1 << 17,
+            m: 1 << 10,
+            b: 1 << 7,
+            s: 16,
+            ..job(1)
+        };
+        dct.validate().unwrap();
     }
 
     #[test]

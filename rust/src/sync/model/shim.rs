@@ -116,6 +116,23 @@ pub mod atomic {
                     let (acq, rel) = (is_acquire(ord), is_release(ord));
                     self.op("fetch_sub", acq, rel, false, || self.inner.fetch_sub(v, ord))
                 }
+
+                pub fn compare_exchange(
+                    &self,
+                    current: $val,
+                    new: $val,
+                    success: Ordering,
+                    failure: Ordering,
+                ) -> Result<$val, $val> {
+                    // Happens-before bookkeeping is conservative: acquire
+                    // if either ordering acquires (a failed CAS is still a
+                    // load), release only per the success ordering.
+                    let acq = is_acquire(success) || is_acquire(failure);
+                    let rel = is_release(success);
+                    self.op("compare_exchange", acq, rel, false, || {
+                        self.inner.compare_exchange(current, new, success, failure)
+                    })
+                }
             }
         };
     }

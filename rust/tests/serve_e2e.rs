@@ -109,8 +109,14 @@ fn served_results_are_bit_identical_to_in_process_solves() {
     let stats = client.stats().expect("stats frame");
     assert_eq!(stats.served, seeds.len() as u64);
     assert_eq!(stats.rejected, 0);
-    assert_eq!(stats.cache_misses, 3, "three distinct operator keys");
-    assert_eq!(stats.cache_hits, 3, "repeat seeds must hit the warm cache");
+    // Every request is exactly one lookup outcome. Operator draws run
+    // outside the cache lock, so concurrent misses on one key may each
+    // draw (publication dedups the Arc, not the draw): the exact
+    // hit/miss split is racy, but each of the three distinct keys must
+    // miss at least once, and results stay bit-identical regardless
+    // (problem resolution is cache-stable by construction).
+    assert_eq!(stats.cache_hits + stats.cache_misses, seeds.len() as u64);
+    assert!(stats.cache_misses >= 3, "three distinct operator keys");
     assert_eq!(stats.inflight, 0);
     assert!(stats.p50_s > 0.0 && stats.p99_s >= stats.p50_s);
 }
