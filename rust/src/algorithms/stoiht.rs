@@ -3,7 +3,11 @@
 //! The per-iteration arithmetic lives in [`StoihtKernel`] — a reusable,
 //! allocation-free step object — so the discrete-time simulator and the
 //! real-thread runtime execute *exactly* the arithmetic validated here
-//! (and, via the test-vector suite, against the JAX oracle).
+//! (and, via the test-vector suite, against the JAX oracle). The heavy
+//! flops inherit the crate's fast paths transparently: dense dot/axpy
+//! streams dispatch through the [`crate::linalg::simd`] doorway and the
+//! matrix-free operator rides the cached pair-fused FFT plan — both
+//! bit-identical to the scalar references, so nothing here changes.
 
 use super::{GreedyOpts, RunResult, SupportKernel};
 use crate::linalg::{nrm2, MeasureOp, OpScratch, SparseIterate};

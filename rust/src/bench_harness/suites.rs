@@ -43,7 +43,7 @@ use crate::backend::{Backend, PjrtBackend};
 use crate::config::ExperimentConfig;
 use crate::coordinator::{run_trials, Leader};
 use crate::experiments::{self, Fig2Variant};
-use crate::linalg::{dot, Mat, MeasureOp, SparseIterate};
+use crate::linalg::{dot, plan_for, simd, DenseOp, Mat, MeasureOp, SparseIterate};
 use crate::metrics::{stats, Table};
 use crate::problem::{Ensemble, Problem, ProblemSpec};
 use crate::report;
@@ -396,6 +396,77 @@ fn hot_path_suite(suite: &mut Suite) {
             traffic / pr.time.mean / 1e9,
             100.0 * (traffic / pr.time.mean / 1e9) / bw
         );
+    }
+
+    // --- transform core: fused radix-4 FFT vs radix-2 reference -----
+    // One plan, one twiddle table, bit-identical output (pinned by
+    // rust/tests/simd_parity.rs); the pair measures what pair fusion and
+    // the bit-reversal table buy at a cache-resident size.
+    let nt = 4096usize;
+    let plan = plan_for(nt);
+    let mut dct_scratch = plan.scratch();
+    let xt: Vec<f64> = (0..nt).map(|i| (i as f64 * 0.41).sin()).collect();
+    let mut out_t = vec![0.0; nt];
+    let fused = suite.bench(BenchSpec::micro("transform_dct_fused_n4096").seed(1), || {
+        plan.dct2_into(&xt, &mut dct_scratch, &mut out_t);
+        std::hint::black_box(&out_t);
+    });
+    let radix2 = suite.bench(BenchSpec::micro("transform_dct_radix2_n4096").seed(1), || {
+        plan.dct2_reference_into(&xt, &mut dct_scratch, &mut out_t);
+        std::hint::black_box(&out_t);
+    });
+    if let (Some(f), Some(r)) = (&fused, &radix2) {
+        println!("  => fused FFT vs radix-2 reference: {:.2}x", r.time.mean / f.time.mean);
+    }
+
+    // --- dispatched vs pinned-scalar kernels on the fused proxy ------
+    // Both arms run the identical two-pass proxy over the same block; the
+    // only difference is the kernel entry point, so the ratio isolates
+    // what the `linalg::simd` doorway buys on the paper shape.
+    let proxy_simd = suite.bench(dims(BenchSpec::micro("proxy_simd_15x1000")), || {
+        for i in 0..blk_rows {
+            scratch[i] = yv[i] - simd::dot(a_blk.row(i), &x);
+        }
+        out.copy_from_slice(&x);
+        for i in 0..blk_rows {
+            if scratch[i] != 0.0 {
+                simd::axpy(scratch[i], a_blk.row(i), &mut out);
+            }
+        }
+        std::hint::black_box(&out);
+    });
+    let proxy_scalar = suite.bench(dims(BenchSpec::micro("proxy_scalar_15x1000")), || {
+        for i in 0..blk_rows {
+            scratch[i] = yv[i] - simd::dot_scalar(a_blk.row(i), &x);
+        }
+        out.copy_from_slice(&x);
+        for i in 0..blk_rows {
+            if scratch[i] != 0.0 {
+                simd::axpy_scalar(scratch[i], a_blk.row(i), &mut out);
+            }
+        }
+        std::hint::black_box(&out);
+    });
+    if let (Some(v), Some(s)) = (&proxy_simd, &proxy_scalar) {
+        println!(
+            "  => SIMD proxy vs pinned scalar: {:.2}x (level {})",
+            s.time.mean / v.time.mean,
+            simd::level().as_str()
+        );
+    }
+
+    // --- multi-RHS panel apply: the batch dim rides the SIMD lane ----
+    let panel_op = DenseOp::new(a_blk.clone());
+    let mut panel_scratch = panel_op.make_scratch();
+    for bcols in [1usize, 4, 8] {
+        let sp = dims(BenchSpec::micro(&format!("panel_apply_b{bcols}_15x1000")));
+        let x_panel: Vec<f64> =
+            (0..bcols * spec.n).map(|i| ((i * 13 % 101) as f64) * 0.01).collect();
+        let mut out_panel = vec![0.0; bcols * blk_rows];
+        suite.bench(sp, || {
+            panel_op.apply_multi_into(&x_panel, &mut panel_scratch, &mut out_panel);
+            std::hint::black_box(&out_panel);
+        });
     }
 
     // --- support + tally ops ----------------------------------------
@@ -859,7 +930,9 @@ fn stogradmp_async_suite(suite: &mut Suite) {
 ///
 /// * `n = 2^17 (131k), m = 30 000` — apply/adjoint/sparse-proxy
 ///   microbenches (one fast transform each; the dense pair would need
-///   63 GB).
+///   63 GB), plus two A/B pairs for the PR-8 kernel work: the pair-fused
+///   cache-blocked FFT vs the retained radix-2 reference, and the
+///   dispatched SIMD proxy vs the pinned scalar kernels.
 /// * `n = 2^20 (1.05M), m = 300 000` — a full-transform apply microbench
 ///   plus a 4-worker asynchronous StoIHT recovery run, fixed local
 ///   iteration budget (StoIHT needs hundreds of iterations to converge at
@@ -878,10 +951,16 @@ fn large_n_suite(suite: &mut Suite) {
     let apply_s = shape("dct_apply_n131k", n_s, m_s, 40);
     let adjoint_s = shape("dct_adjoint_n131k", n_s, m_s, 40);
     let proxy_s = shape("proxy_sparse_n131k", n_s, m_s, 40);
+    let fused_s = shape("dct_fused_n131k", n_s, m_s, 40);
+    let radix2_s = shape("dct_radix2_n131k", n_s, m_s, 40);
+    let simd_s = shape("proxy_simd_15x131k", n_s, m_s, 42);
+    let scalar_s = shape("proxy_scalar_15x131k", n_s, m_s, 42);
     let apply_l = shape("dct_apply_n1m", n_l, m_l, 44);
     let async_l = BenchSpec::experiment("stoiht_async_n1m").dims(n_l, m_l, 15, 50).seed(44);
     if suite.is_dry_run() {
-        for s in [apply_s, adjoint_s, proxy_s, apply_l, async_l] {
+        for s in [
+            apply_s, adjoint_s, proxy_s, fused_s, radix2_s, simd_s, scalar_s, apply_l, async_l,
+        ] {
             suite.bench(s, || {});
         }
         return;
@@ -936,6 +1015,74 @@ fn large_n_suite(suite: &mut Suite) {
             );
             std::hint::black_box(&out_n);
         });
+    }
+
+    // --- n = 2^17: fused radix-4 FFT vs the radix-2 reference ---------
+    // Same plan, bit-identical output; at this length (odd lg n → the
+    // 2^13 depth-first block) the cache-blocked schedule is engaged, so
+    // this pair is the headline transform-rewrite measurement.
+    if [&fused_s, &radix2_s].iter().any(|s| suite.wants(s)) {
+        bench_header(&format!("transform core — fused vs radix-2 at n = {n_s}"));
+        let plan = plan_for(n_s);
+        let mut ds = plan.scratch();
+        let x: Vec<f64> = (0..n_s).map(|i| (i as f64 * 0.29).sin()).collect();
+        let mut out = vec![0.0; n_s];
+        let f = suite.bench(fused_s, || {
+            plan.dct2_into(&x, &mut ds, &mut out);
+            std::hint::black_box(&out);
+        });
+        let r = suite.bench(radix2_s, || {
+            plan.dct2_reference_into(&x, &mut ds, &mut out);
+            std::hint::black_box(&out);
+        });
+        if let (Some(f), Some(r)) = (&f, &r) {
+            println!("  => fused/blocked FFT speedup: {:.2}x", r.time.mean / f.time.mean);
+        }
+    }
+
+    // --- n = 2^17: dispatched vs pinned-scalar proxy kernels ----------
+    // A 15-row dense block at this width streams ~16 MB per pass, so the
+    // A/B shows the doorway's effect where memory bandwidth, not issue
+    // width, is the roofline.
+    if [&simd_s, &scalar_s].iter().any(|s| suite.wants(s)) {
+        bench_header(&format!("dispatched vs scalar proxy — 15 x {n_s} dense block"));
+        let rows = 15usize;
+        let a = Mat::<f64>::from_fn(rows, n_s, |i, j| ((i * n_s + j) as f64 * 0.19).sin());
+        let yv: Vec<f64> = (0..rows).map(|i| i as f64 * 0.3).collect();
+        let x: Vec<f64> = (0..n_s).map(|i| (i as f64 * 0.53).cos() * 0.1).collect();
+        let mut resid = vec![0.0; rows];
+        let mut out = vec![0.0; n_s];
+        let vec_rec = suite.bench(simd_s, || {
+            for i in 0..rows {
+                resid[i] = yv[i] - simd::dot(a.row(i), &x);
+            }
+            out.copy_from_slice(&x);
+            for i in 0..rows {
+                if resid[i] != 0.0 {
+                    simd::axpy(resid[i], a.row(i), &mut out);
+                }
+            }
+            std::hint::black_box(&out);
+        });
+        let sc_rec = suite.bench(scalar_s, || {
+            for i in 0..rows {
+                resid[i] = yv[i] - simd::dot_scalar(a.row(i), &x);
+            }
+            out.copy_from_slice(&x);
+            for i in 0..rows {
+                if resid[i] != 0.0 {
+                    simd::axpy_scalar(resid[i], a.row(i), &mut out);
+                }
+            }
+            std::hint::black_box(&out);
+        });
+        if let (Some(v), Some(s)) = (&vec_rec, &sc_rec) {
+            println!(
+                "  => SIMD proxy vs pinned scalar: {:.2}x (level {})",
+                s.time.mean / v.time.mean,
+                simd::level().as_str()
+            );
+        }
     }
 
     // --- n = 2^20: the shape that only exists matrix-free -------------

@@ -22,7 +22,8 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`linalg`] | BLAS-like substrate (gemv, QR, CGLS) + the `MeasureOp` operator layer (dense / matrix-free subsampled DCT, in-crate FFT) |
+//! | [`linalg`] | BLAS-like substrate (gemv, QR, CGLS) + the `MeasureOp` operator layer (dense / matrix-free subsampled DCT, in-crate cache-blocked FFT with a shared plan cache) |
+//! | [`linalg::simd`] | explicit-width kernel doorway: runtime AVX2/NEON/scalar dispatch for dot/axpy/nrm2 + the 4-column panel dot, bit-identical across levels |
 //! | [`rng`] | deterministic xoshiro256++ RNG, Gaussian sampling |
 //! | [`problem`] | compressed-sensing problem generation (matrix ensembles, sparse signals, block partitions) |
 //! | [`support`] | top-`s` support identification, unions, accuracy metrics |
@@ -47,10 +48,13 @@
 //! | [`error`] | zero-dependency error type (`anyhow` stand-in) |
 //! | [`testutil`] | mini property-testing framework used by unit tests |
 
-// Unsafe code is confined to one audited type: every other module must
-// stay safe (the single `#[allow(unsafe_code)]` lives on
-// `coordinator::ResultSlots`, whose protocol the model checker and Miri
-// both exercise; see README "Concurrency correctness").
+// Unsafe code is confined to two audited places: every other module must
+// stay safe. The `#[allow(unsafe_code)]` exceptions are
+// `coordinator::ResultSlots` (whose protocol the model checker and Miri
+// both exercise) and `linalg::simd::avx2` (probe-gated AVX2 intrinsics,
+// every block SAFETY-commented and pinned bit-identical to the scalar
+// kernels by `rust/tests/simd_parity.rs`); see README "Concurrency
+// correctness" and "SIMD & transform core".
 #![deny(unsafe_code)]
 
 pub mod algorithms;

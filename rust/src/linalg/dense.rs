@@ -390,9 +390,18 @@ impl<'a, S: Scalar> RowBlock<'a, S> {
 
 /// Dot product, 4-way unrolled with independent accumulators so the adds
 /// pipeline (and the compiler can vectorize under `-C opt-level=3`).
+///
+/// `f64` calls route through the [`super::simd`] doorway
+/// ([`Scalar::simd_dot`]) — explicit-width AVX2/NEON kernels that preserve
+/// this loop's exact accumulation order (lane = index mod 4, lanes reduced
+/// `(s0+s1)+(s2+s3)`, sequential tail), so dispatch never changes a bit of
+/// the result. `f32` keeps the generic loop below.
 #[inline]
 pub fn dot<S: Scalar>(a: &[S], b: &[S]) -> S {
     debug_assert_eq!(a.len(), b.len());
+    if let Some(s) = S::simd_dot(a, b) {
+        return s;
+    }
     let n = a.len();
     let chunks = n / 4;
     let (mut s0, mut s1, mut s2, mut s3) = (S::ZERO, S::ZERO, S::ZERO, S::ZERO);
@@ -410,10 +419,15 @@ pub fn dot<S: Scalar>(a: &[S], b: &[S]) -> S {
     s
 }
 
-/// `y += a * x` (axpy), unrolled like [`dot`].
+/// `y += a * x` (axpy), unrolled like [`dot`]. `f64` routes through the
+/// [`super::simd`] doorway ([`Scalar::simd_axpy`]); elementwise, so every
+/// dispatch level is bit-identical by construction.
 #[inline]
 pub fn axpy<S: Scalar>(a: S, x: &[S], y: &mut [S]) {
     debug_assert_eq!(x.len(), y.len());
+    if S::simd_axpy(a, x, y) {
+        return;
+    }
     let n = x.len();
     let chunks = n / 4;
     for k in 0..chunks {

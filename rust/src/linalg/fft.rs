@@ -1,13 +1,41 @@
-//! In-crate O(n log n) orthogonal transforms: a radix-2 complex FFT and the
-//! DCT-II / DCT-III pair built on it.
+//! In-crate O(n log n) orthogonal transforms: an iterative, pair-fused
+//! radix-4 complex FFT and the DCT-II / DCT-III pair built on it.
 //!
 //! This is the compute core of the matrix-free subsampled-DCT measurement
 //! operator ([`super::measure::SubsampledDctOp`]): a row of the `n x n`
 //! DCT-II matrix never needs to exist — `A x` is one fast DCT-II followed by
 //! an `m`-row gather, and `A^T r` is a scatter followed by one fast DCT-III
 //! (the exact transpose). Zero dependencies, like the hand-rolled TOML/JSON
-//! layers; the plan precomputes twiddle and phase tables once so the
-//! per-transform passes are pure streaming arithmetic.
+//! layers; the plan precomputes twiddle, phase, and bit-reversal tables once
+//! so the per-transform passes are pure streaming arithmetic.
+//!
+//! ## The fast path, and its parity contract
+//!
+//! The FFT runs the classic radix-2 DIT stage schedule with **consecutive
+//! stage pairs fused into radix-4 passes**: one sweep over the array applies
+//! the span-`2h` and span-`4h` butterflies together, reading the *same*
+//! twiddle-table entries (`tw[k·n/(2h)]`, `tw[k·n/(4h)]`, `tw[(h+k)·n/(4h)]`)
+//! and evaluating the *same* per-output floating-point expressions as two
+//! separate radix-2 passes would. Fusion halves the number of memory sweeps
+//! — the actual bottleneck at `n = 2^17 … 2^20`, where one complex lane pair
+//! is 2–16 MB and every stage is a cache-cold pass — without touching any
+//! rounding. On top of that, the stages with span ≤ the L2-sized block run
+//! depth-first inside each block (pass order across disjoint blocks cannot
+//! affect arithmetic). The pre-fusion pipeline is retained as
+//! [`DctPlan::dct2_reference_into`] / [`DctPlan::dct3_reference_into`]: the
+//! measured baseline of the `transforms` benches, and the anchor of the
+//! **bit-for-bit** parity pin in `rust/tests/simd_parity.rs`. This is
+//! stronger than the crate-wide ≤ 1e-12 relative-tolerance allowance for
+//! documented reassociation — the fused path does not reassociate anything.
+//!
+//! ## Plan cache
+//!
+//! Plans are immutable after construction and ~28 bytes/point (`24n` bytes
+//! of twiddle + phase tables plus a `4n`-byte bit-reversal table — ~28 MiB
+//! at `n = 2^20`), so [`plan_for`] keeps a small process-wide LRU of
+//! `Arc<DctPlan>` keyed by `n`. Repeat traffic — the serve front-end's
+//! operator-cache misses, pool rebuilds, back-to-back trials — shares one
+//! table build per size instead of redoing O(n) trig per construction.
 //!
 //! Conventions (unnormalized, matching the direct sums the dense
 //! `PartialDct` ensemble evaluates):
@@ -17,20 +45,24 @@
 //!   of DCT-II (not its scaled inverse; the `c0` orthonormalization lives in
 //!   the operator's per-row scales).
 //!
-//! Sizes are restricted to powers of two (radix-2 only — the recursion that
-//! would cover arbitrary `n` buys nothing for the generated benchmarks, which
-//! choose `n = 2^17 … 2^20`). The DCT-II is computed via Makhoul's N-point
-//! FFT mapping (no 2n zero-padding): reorder the input as
-//! `v_j = x_{2j}`, `v_{n-1-j} = x_{2j+1}`, run one complex FFT, and take
-//! `X_k = Re(e^{-iπk/(2n)} V_k)`. The DCT-III is the algebraic transpose of
-//! that pipeline (diagonal multiply → FFT → inverse reorder), which is what
-//! makes the operator's adjoint property hold to rounding error.
+//! Sizes are restricted to powers of two (the generated benchmarks choose
+//! `n = 2^17 … 2^20`; a mixed-radix fallback would buy nothing here). The
+//! DCT-II is computed via Makhoul's N-point FFT mapping (no 2n
+//! zero-padding): reorder the input as `v_j = x_{2j}`, `v_{n-1-j} =
+//! x_{2j+1}`, run one complex FFT, and take `X_k = Re(e^{-iπk/(2n)} V_k)`.
+//! The DCT-III is the algebraic transpose of that pipeline (diagonal
+//! multiply → FFT → inverse reorder), which is what makes the operator's
+//! adjoint property hold to rounding error.
+
+use crate::sync::{Arc, Mutex};
 
 /// Precomputed tables for size-`n` transforms (`n` a power of two).
 ///
-/// Memory: `1.5 n` complex entries (24 bytes/row-equivalent) — at
-/// `n = 2^20` about 24 MB, against the 2.4 TB an `m x n` dense matrix
-/// would need at the `large_n` bench shape.
+/// Memory: `28 n` bytes — `1.5 n` complex table entries (twiddles + phases,
+/// `24 n` bytes) plus the `u32` bit-reversal permutation (`4 n` bytes). At
+/// `n = 2^20` about 28 MiB, against the 2.4 TB an `m x n` dense matrix
+/// would need at the `large_n` bench shape — and built once per size when
+/// obtained through [`plan_for`].
 #[derive(Clone, Debug)]
 pub struct DctPlan {
     n: usize,
@@ -40,6 +72,10 @@ pub struct DctPlan {
     /// DCT phase factors `e^{-iπ k / (2n)}`, `k < n`.
     ph_re: Vec<f64>,
     ph_im: Vec<f64>,
+    /// Bit-reversal permutation (`bitrev[i]` = `i` with its `lg n` low bits
+    /// reversed), precomputed so the permutation pass is a table walk
+    /// instead of per-index bit arithmetic.
+    bitrev: Vec<u32>,
 }
 
 /// Reusable complex workspace for one plan (two `n`-length lanes). One per
@@ -50,8 +86,42 @@ pub struct DctScratch {
     im: Vec<f64>,
 }
 
+/// Bounded process-wide cache of built plans, most-recently-used first.
+/// Four plans cover every size a serve process realistically alternates
+/// between (at the jumbo `n = 2^20` that is ~112 MiB worst case); the cap
+/// exists so a size sweep cannot grow the process without bound.
+const PLAN_CACHE_CAP: usize = 4;
+
+static PLAN_CACHE: Mutex<Vec<Arc<DctPlan>>> = Mutex::new(Vec::new());
+
+/// Shared plan for size `n` (a power of two — panics otherwise, like
+/// [`DctPlan::new`]): returns the cached `Arc<DctPlan>` when one exists,
+/// building and inserting it otherwise. The table build runs *outside* the
+/// cache lock, so a large first-time build never stalls other sizes; if two
+/// threads race on the same fresh `n`, the loser adopts the winner's plan.
+pub fn plan_for(n: usize) -> Arc<DctPlan> {
+    let mut cache = PLAN_CACHE.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(pos) = cache.iter().position(|p| p.n == n) {
+        let plan = cache.remove(pos);
+        cache.insert(0, Arc::clone(&plan));
+        return plan;
+    }
+    drop(cache);
+    let plan = Arc::new(DctPlan::new(n));
+    let mut cache = PLAN_CACHE.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(pos) = cache.iter().position(|p| p.n == n) {
+        let racer = cache.remove(pos);
+        cache.insert(0, Arc::clone(&racer));
+        return racer;
+    }
+    cache.insert(0, Arc::clone(&plan));
+    cache.truncate(PLAN_CACHE_CAP);
+    plan
+}
+
 impl DctPlan {
     /// Build tables for size `n`. Panics unless `n` is a power of two.
+    /// Prefer [`plan_for`] on any path that may rebuild sizes.
     pub fn new(n: usize) -> Self {
         assert!(n.is_power_of_two(), "DctPlan: n = {n} must be a power of two");
         let half = n / 2;
@@ -69,7 +139,11 @@ impl DctPlan {
             ph_re.push(theta.cos());
             ph_im.push(theta.sin());
         }
-        DctPlan { n, tw_re, tw_im, ph_re, ph_im }
+        let mut bitrev = vec![0u32; n];
+        for i in 1..n {
+            bitrev[i] = (bitrev[i >> 1] >> 1) | if i & 1 == 1 { (n as u32) >> 1 } else { 0 };
+        }
+        DctPlan { n, tw_re, tw_im, ph_re, ph_im, bitrev }
     }
 
     /// Transform size.
@@ -89,54 +163,169 @@ impl DctPlan {
         (&mut s.re, &mut s.im)
     }
 
-    /// In-place iterative radix-2 FFT with the `e^{-2πi jk/n}` sign
-    /// convention (bit-reversal permutation + Cooley–Tukey butterflies).
-    fn fft(&self, re: &mut [f64], im: &mut [f64]) {
-        let n = self.n;
-        debug_assert_eq!(re.len(), n);
-        debug_assert_eq!(im.len(), n);
-        // Bit-reversal permutation.
-        let mut j = 0usize;
-        for i in 1..n {
-            let mut bit = n >> 1;
-            while j & bit != 0 {
-                j ^= bit;
-                bit >>= 1;
-            }
-            j |= bit;
+    /// Table-driven bit-reversal permutation of both lanes.
+    fn bit_reverse(&self, re: &mut [f64], im: &mut [f64]) {
+        for (i, &jr) in self.bitrev.iter().enumerate() {
+            let j = jr as usize;
             if i < j {
                 re.swap(i, j);
                 im.swap(i, j);
             }
         }
-        // Butterfly passes. Twiddle for stage `len` at offset `k` is
-        // e^{-2πi k/len} = tw[k * (n/len)].
+    }
+
+    /// One classic radix-2 DIT stage of span `len` over the region
+    /// `[r0, r0 + rlen)` (the region is a whole number of `len`-blocks).
+    /// Twiddle for offset `k` is `e^{-2πi k/len} = tw[k·(n/len)]`.
+    fn radix2_stage(&self, re: &mut [f64], im: &mut [f64], r0: usize, rlen: usize, len: usize) {
+        let half = len / 2;
+        let step = self.n / len;
+        let end = r0 + rlen;
+        let mut base = r0;
+        while base < end {
+            for k in 0..half {
+                let wr = self.tw_re[k * step];
+                let wi = self.tw_im[k * step];
+                let (ur, ui) = (re[base + k], im[base + k]);
+                let (xr, xi) = (re[base + k + half], im[base + k + half]);
+                let vr = xr * wr - xi * wi;
+                let vi = xr * wi + xi * wr;
+                re[base + k] = ur + vr;
+                im[base + k] = ui + vi;
+                re[base + k + half] = ur - vr;
+                im[base + k + half] = ui - vi;
+            }
+            base += len;
+        }
+    }
+
+    /// The fused pair of radix-2 stages with spans `2h` and `4h` over
+    /// `[r0, r0 + rlen)`: per quarter-offset `k < h` this applies both
+    /// span-`2h` butterflies and the two span-`4h` butterflies (offsets `k`
+    /// and `h + k`) that consume their outputs, in one sweep. Same table
+    /// reads, same expressions, same values as the two separate stages —
+    /// only the number of memory passes changes, so the result is
+    /// bit-identical to [`DctPlan::radix2_stage`] run twice.
+    fn radix4_pair(&self, re: &mut [f64], im: &mut [f64], r0: usize, rlen: usize, h: usize) {
+        let step_a = self.n / (2 * h);
+        let step_b = self.n / (4 * h);
+        let end = r0 + rlen;
+        let mut q0 = r0;
+        while q0 < end {
+            let (q1, q2, q3) = (q0 + h, q0 + 2 * h, q0 + 3 * h);
+            for k in 0..h {
+                let (war, wai) = (self.tw_re[k * step_a], self.tw_im[k * step_a]);
+                // span-2h butterfly on quarters 0|1:
+                let (ur, ui) = (re[q0 + k], im[q0 + k]);
+                let (xr, xi) = (re[q1 + k], im[q1 + k]);
+                let vr = xr * war - xi * wai;
+                let vi = xr * wai + xi * war;
+                let (p0r, p0i) = (ur + vr, ui + vi);
+                let (p1r, p1i) = (ur - vr, ui - vi);
+                // span-2h butterfly on quarters 2|3 (same twiddle):
+                let (ur, ui) = (re[q2 + k], im[q2 + k]);
+                let (xr, xi) = (re[q3 + k], im[q3 + k]);
+                let vr = xr * war - xi * wai;
+                let vi = xr * wai + xi * war;
+                let (p2r, p2i) = (ur + vr, ui + vi);
+                let (p3r, p3i) = (ur - vr, ui - vi);
+                // span-4h butterfly at offset k (twiddle straight from the
+                // table — not a derived rotation, to keep bits identical):
+                let (wbr, wbi) = (self.tw_re[k * step_b], self.tw_im[k * step_b]);
+                let vr = p2r * wbr - p2i * wbi;
+                let vi = p2r * wbi + p2i * wbr;
+                re[q0 + k] = p0r + vr;
+                im[q0 + k] = p0i + vi;
+                re[q2 + k] = p0r - vr;
+                im[q2 + k] = p0i - vi;
+                // span-4h butterfly at offset h + k:
+                let (wcr, wci) = (self.tw_re[(h + k) * step_b], self.tw_im[(h + k) * step_b]);
+                let vr = p3r * wcr - p3i * wci;
+                let vi = p3r * wci + p3i * wcr;
+                re[q1 + k] = p1r + vr;
+                im[q1 + k] = p1i + vi;
+                re[q3 + k] = p1r - vr;
+                im[q3 + k] = p1i - vi;
+            }
+            q0 += 4 * h;
+        }
+    }
+
+    /// Run the stage schedule covering spans `(lo, hi]` over the region
+    /// `[r0, r0 + rlen)`, fusing stage pairs into radix-4 passes (one
+    /// leading radix-2 stage soaks up an odd stage count). Executes exactly
+    /// the butterflies of `radix2_stage` at spans `2·lo, 4·lo, …, hi`.
+    fn stages(&self, re: &mut [f64], im: &mut [f64], r0: usize, rlen: usize, lo: usize, hi: usize) {
+        let mut h = lo;
+        if (hi / lo).trailing_zeros() % 2 == 1 {
+            self.radix2_stage(re, im, r0, rlen, 2 * h);
+            h *= 2;
+        }
+        while 4 * h <= hi {
+            self.radix4_pair(re, im, r0, rlen, h);
+            h *= 4;
+        }
+    }
+
+    /// Chunk size for the depth-first phase of [`DctPlan::fft`]: 2^12 or
+    /// 2^13 complex points (64–128 KB per f64 lane pair) stays L2-resident;
+    /// the choice is parity-matched to `lg n` so the chunk-local stage
+    /// schedule is an exact prefix of the global one (the radix-4 pairing
+    /// lines up at the chunk boundary).
+    fn cache_block(&self) -> usize {
+        if self.n.trailing_zeros() % 2 == 0 {
+            1 << 12
+        } else {
+            1 << 13
+        }
+    }
+
+    /// In-place iterative FFT with the `e^{-2πi jk/n}` sign convention:
+    /// table-driven bit reversal, then the pair-fused radix-4 schedule —
+    /// depth-first inside L2-sized chunks for the short spans, then the
+    /// remaining global spans. Bit-identical to [`DctPlan::fft_reference`]
+    /// (stage order across disjoint chunks is arithmetic-neutral; fusion
+    /// changes pass count, not expressions).
+    fn fft(&self, re: &mut [f64], im: &mut [f64]) {
+        let n = self.n;
+        debug_assert_eq!(re.len(), n);
+        debug_assert_eq!(im.len(), n);
+        if n == 1 {
+            return;
+        }
+        self.bit_reverse(re, im);
+        let cb = self.cache_block();
+        if cb < n {
+            let mut c0 = 0;
+            while c0 < n {
+                self.stages(re, im, c0, cb, 1, cb);
+                c0 += cb;
+            }
+            self.stages(re, im, 0, n, cb, n);
+        } else {
+            self.stages(re, im, 0, n, 1, n);
+        }
+    }
+
+    /// The pre-fusion pipeline — one radix-2 pass per stage, no chunking —
+    /// retained as the measured baseline of the `transforms` benches and
+    /// the parity anchor: [`DctPlan::fft`] must reproduce it bit-for-bit.
+    fn fft_reference(&self, re: &mut [f64], im: &mut [f64]) {
+        let n = self.n;
+        debug_assert_eq!(re.len(), n);
+        debug_assert_eq!(im.len(), n);
+        if n == 1 {
+            return;
+        }
+        self.bit_reverse(re, im);
         let mut len = 2usize;
         while len <= n {
-            let half = len / 2;
-            let step = n / len;
-            let mut base = 0usize;
-            while base < n {
-                for k in 0..half {
-                    let wr = self.tw_re[k * step];
-                    let wi = self.tw_im[k * step];
-                    let (ur, ui) = (re[base + k], im[base + k]);
-                    let (xr, xi) = (re[base + k + half], im[base + k + half]);
-                    let vr = xr * wr - xi * wi;
-                    let vi = xr * wi + xi * wr;
-                    re[base + k] = ur + vr;
-                    im[base + k] = ui + vi;
-                    re[base + k + half] = ur - vr;
-                    im[base + k + half] = ui - vi;
-                }
-                base += len;
-            }
+            self.radix2_stage(re, im, 0, n, len);
             len <<= 1;
         }
     }
 
-    /// Unnormalized DCT-II: `out[k] = Σ_j x[j] cos(π k (2j+1) / (2n))`.
-    pub fn dct2_into(&self, x: &[f64], scratch: &mut DctScratch, out: &mut [f64]) {
+    fn dct2_core(&self, x: &[f64], scratch: &mut DctScratch, out: &mut [f64], reference: bool) {
         let n = self.n;
         assert_eq!(x.len(), n, "dct2: input length");
         assert_eq!(out.len(), n, "dct2: output length");
@@ -151,18 +340,18 @@ impl DctPlan {
             re[n - 1 - j] = x[2 * j + 1];
         }
         im.fill(0.0);
-        self.fft(re, im);
+        if reference {
+            self.fft_reference(re, im);
+        } else {
+            self.fft(re, im);
+        }
         // X_k = Re(e^{-iπk/(2n)} V_k).
         for k in 0..n {
             out[k] = self.ph_re[k] * re[k] - self.ph_im[k] * im[k];
         }
     }
 
-    /// Unnormalized DCT-III — the exact transpose of [`DctPlan::dct2_into`]:
-    /// `out[j] = Σ_k r[k] cos(π k (2j+1) / (2n))`. Implemented as the
-    /// reversed pipeline (phase multiply → FFT → inverse reorder), so
-    /// `⟨dct2(x), r⟩ = ⟨x, dct3(r)⟩` holds to rounding error.
-    pub fn dct3_into(&self, r: &[f64], scratch: &mut DctScratch, out: &mut [f64]) {
+    fn dct3_core(&self, r: &[f64], scratch: &mut DctScratch, out: &mut [f64], reference: bool) {
         let n = self.n;
         assert_eq!(r.len(), n, "dct3: input length");
         assert_eq!(out.len(), n, "dct3: output length");
@@ -175,12 +364,43 @@ impl DctPlan {
             re[k] = self.ph_re[k] * r[k];
             im[k] = self.ph_im[k] * r[k];
         }
-        self.fft(re, im);
+        if reference {
+            self.fft_reference(re, im);
+        } else {
+            self.fft(re, im);
+        }
         // Inverse of the Makhoul reorder (the permutation's transpose).
         for j in 0..n / 2 {
             out[2 * j] = re[j];
             out[2 * j + 1] = re[n - 1 - j];
         }
+    }
+
+    /// Unnormalized DCT-II: `out[k] = Σ_j x[j] cos(π k (2j+1) / (2n))`.
+    pub fn dct2_into(&self, x: &[f64], scratch: &mut DctScratch, out: &mut [f64]) {
+        self.dct2_core(x, scratch, out, false);
+    }
+
+    /// Unnormalized DCT-III — the exact transpose of [`DctPlan::dct2_into`]:
+    /// `out[j] = Σ_k r[k] cos(π k (2j+1) / (2n))`. Implemented as the
+    /// reversed pipeline (phase multiply → FFT → inverse reorder), so
+    /// `⟨dct2(x), r⟩ = ⟨x, dct3(r)⟩` holds to rounding error.
+    pub fn dct3_into(&self, r: &[f64], scratch: &mut DctScratch, out: &mut [f64]) {
+        self.dct3_core(r, scratch, out, false);
+    }
+
+    /// [`DctPlan::dct2_into`] on the retained radix-2 reference FFT —
+    /// bit-identical output by the fusion argument above; exists to be
+    /// measured against (old-vs-new `transforms` benches) and pinned
+    /// against (`rust/tests/simd_parity.rs`).
+    pub fn dct2_reference_into(&self, x: &[f64], scratch: &mut DctScratch, out: &mut [f64]) {
+        self.dct2_core(x, scratch, out, true);
+    }
+
+    /// [`DctPlan::dct3_into`] on the reference FFT (see
+    /// [`DctPlan::dct2_reference_into`]).
+    pub fn dct3_reference_into(&self, r: &[f64], scratch: &mut DctScratch, out: &mut [f64]) {
+        self.dct3_core(r, scratch, out, true);
     }
 }
 
@@ -256,6 +476,31 @@ mod tests {
                     out[j],
                     want[j]
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_fft_matches_radix2_reference_bitwise() {
+        // Sizes cover: odd and even lg n (the leading radix-2 stage vs pure
+        // pairs), both at and past the cache-block boundary (4096/8192 run
+        // unchunked, 16384/32768 exercise the depth-first phase split).
+        for n in [2usize, 4, 8, 64, 512, 4096, 8192, 16384, 32768] {
+            let plan = DctPlan::new(n);
+            let mut s_new = plan.scratch();
+            let mut s_ref = plan.scratch();
+            let x = wave(n, 9);
+            let mut out_new = vec![0.0; n];
+            let mut out_ref = vec![0.0; n];
+            plan.dct2_into(&x, &mut s_new, &mut out_new);
+            plan.dct2_reference_into(&x, &mut s_ref, &mut out_ref);
+            for k in 0..n {
+                assert_eq!(out_new[k].to_bits(), out_ref[k].to_bits(), "dct2 n={n} k={k}");
+            }
+            plan.dct3_into(&x, &mut s_new, &mut out_new);
+            plan.dct3_reference_into(&x, &mut s_ref, &mut out_ref);
+            for j in 0..n {
+                assert_eq!(out_new[j].to_bits(), out_ref[j].to_bits(), "dct3 n={n} j={j}");
             }
         }
     }
@@ -341,5 +586,40 @@ mod tests {
         for k in 0..8 {
             assert!((out[k] - want[k]).abs() < 1e-10);
         }
+    }
+
+    #[test]
+    fn plan_cache_shares_then_evicts() {
+        // Immediate repeat shares the same allocation. (The cache is
+        // process-global; concurrent tests can only *add* entries, and
+        // would need four distinct fresh sizes between these two calls to
+        // perturb this.)
+        let p1 = plan_for(64);
+        let p2 = plan_for(64);
+        assert!(Arc::ptr_eq(&p1, &p2), "repeat lookup must share the cached plan");
+        assert_eq!(p1.n(), 64);
+        // Evict: n = 2 is used by no other test through the cache; five
+        // fresh distinct sizes afterwards must push it out of a cap-4 LRU.
+        let first = plan_for(2);
+        for n in [4usize, 8, 16, 32, 64] {
+            let _ = plan_for(n);
+        }
+        let again = plan_for(2);
+        assert!(!Arc::ptr_eq(&first, &again), "cap-{PLAN_CACHE_CAP} LRU must have evicted n=2");
+        // The evicted-then-rebuilt plan still transforms identically.
+        let mut s1 = first.scratch();
+        let mut s2 = again.scratch();
+        let x = wave(2, 7);
+        let (mut o1, mut o2) = (vec![0.0; 2], vec![0.0; 2]);
+        first.dct2_into(&x, &mut s1, &mut o1);
+        again.dct2_into(&x, &mut s2, &mut o2);
+        assert_eq!(o1[0].to_bits(), o2[0].to_bits());
+        assert_eq!(o1[1].to_bits(), o2[1].to_bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn plan_for_rejects_non_power_of_two() {
+        let _ = plan_for(24);
     }
 }

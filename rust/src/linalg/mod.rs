@@ -13,7 +13,12 @@
 //!   wraps a materialized matrix bit-identically, [`SubsampledDctOp`]
 //!   evaluates DCT-II rows on the fly via [`fft::DctPlan`] and stores only
 //!   `m` row indices — the `n = 10^6` path.
-//! * [`fft::DctPlan`] — in-crate O(n log n) radix-2 FFT + DCT-II/III pair.
+//! * [`fft::DctPlan`] — in-crate O(n log n) FFT (iterative, pair-fused
+//!   radix-4, cache-blocked) + DCT-II/III pair, with a process-wide
+//!   [`fft::plan_for`] plan cache.
+//! * [`simd`] — the explicit-width kernel doorway: runtime
+//!   AVX2/NEON/scalar dispatch for dot/axpy/nrm2 and the 4-column panel
+//!   dot, bit-identical across levels (`ASTIR_SIMD` overrides the probe).
 //! * [`qr::Qr`] — Householder least squares for OMP/CoSaMP/StoGradMP.
 //! * [`cgls::cgls`] — iterative least squares (cross-check + large supports).
 
@@ -23,11 +28,12 @@ pub mod fft;
 pub mod measure;
 pub mod qr;
 pub mod scalar;
+pub mod simd;
 pub mod sparse;
 
 pub use cgls::{cgls, CglsResult};
 pub use dense::{axpy, dist2, dot, nrm2, scale, sub, Mat, RowBlock};
-pub use fft::{DctPlan, DctScratch};
+pub use fft::{plan_for, DctPlan, DctScratch};
 pub use measure::{DenseOp, MeasureOp, OpScratch, Operator, ProxyCol, SubsampledDctOp};
 pub use qr::{lstsq, Qr};
 pub use scalar::Scalar;

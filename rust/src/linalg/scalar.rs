@@ -39,6 +39,24 @@ pub trait Scalar:
     fn max_s(self, other: Self) -> Self;
     fn min_s(self, other: Self) -> Self;
     fn is_finite_s(self) -> bool;
+
+    /// Width-dispatch hook for [`super::dense::dot`]: `Some(result)` routes
+    /// the call through the [`crate::linalg::simd`] doorway (the `f64`
+    /// override — **bit-identical** to the generic 4-lane kernel at every
+    /// dispatch level, see that module's parity contract); `None` keeps the
+    /// generic loop (`f32`, the PJRT-artifact path).
+    #[inline(always)]
+    fn simd_dot(_a: &[Self], _b: &[Self]) -> Option<Self> {
+        None
+    }
+
+    /// Width-dispatch hook for [`super::dense::axpy`]; `true` means the
+    /// [`crate::linalg::simd`] doorway handled it (same parity contract as
+    /// [`Scalar::simd_dot`]).
+    #[inline(always)]
+    fn simd_axpy(_a: Self, _x: &[Self], _y: &mut [Self]) -> bool {
+        false
+    }
 }
 
 impl Scalar for f64 {
@@ -73,6 +91,15 @@ impl Scalar for f64 {
     #[inline(always)]
     fn is_finite_s(self) -> bool {
         f64::is_finite(self)
+    }
+    #[inline(always)]
+    fn simd_dot(a: &[Self], b: &[Self]) -> Option<Self> {
+        Some(crate::linalg::simd::dot(a, b))
+    }
+    #[inline(always)]
+    fn simd_axpy(a: Self, x: &[Self], y: &mut [Self]) -> bool {
+        crate::linalg::simd::axpy(a, x, y);
+        true
     }
 }
 

@@ -1,0 +1,142 @@
+//! AVX2 kernel bodies (x86_64 only) — the one place in the crate where
+//! explicit intrinsics live. Every function here assumes the runtime AVX2
+//! probe has passed: the module is private, and the only path in is
+//! `super::level()` returning [`super::Level::Avx2`].
+//!
+//! Parity: each kernel keeps the canonical 4-lane accumulation order (lane
+//! `l` of one 256-bit accumulator is exactly the scalar kernel's `s_l`),
+//! uses separate `mul`/`add` — never FMA, which would fuse the rounding —
+//! and reduces `(s0+s1)+(s2+s3)` with a sequential tail, so results are
+//! bit-identical to the `*_scalar` references at every input length.
+
+// The crate denies unsafe_code globally; this module and
+// `coordinator::ResultSlots` are the two audited exceptions (see the
+// inventory note in src/lib.rs). Every unsafe block below carries a
+// SAFETY comment naming the AVX2 precondition — enforced by lint L3/L6
+// and clippy::undocumented_unsafe_blocks.
+#![allow(unsafe_code)]
+
+use core::arch::x86_64::{
+    _mm256_add_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_set1_pd, _mm256_setzero_pd,
+    _mm256_storeu_pd,
+};
+
+/// 256-bit dot product, bit-identical to `super::dot_scalar`.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // SAFETY: this module is only reachable through `super::level()`
+    // returning `Level::Avx2`, i.e. after the runtime AVX2 probe passed.
+    unsafe { dot_avx2(a, b) }
+}
+
+/// 256-bit `y += a * x`, bit-identical to `super::axpy_scalar`.
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    // SAFETY: this module is only reachable through `super::level()`
+    // returning `Level::Avx2`, i.e. after the runtime AVX2 probe passed.
+    unsafe { axpy_avx2(a, x, y) }
+}
+
+/// 256-bit 4-column panel dot (shared row loaded once), each output
+/// bit-identical to `super::dot_scalar` on that column.
+pub fn dot4(a: &[f64], b: [&[f64]; 4]) -> [f64; 4] {
+    for bc in &b {
+        debug_assert_eq!(a.len(), bc.len());
+    }
+    // SAFETY: this module is only reachable through `super::level()`
+    // returning `Level::Avx2`, i.e. after the runtime AVX2 probe passed.
+    unsafe { dot4_avx2(a, b) }
+}
+
+/// SAFETY: callers must have verified AVX2 support at runtime (the
+/// `super::level()` probe) — `#[target_feature]` marks this fn unsafe.
+#[target_feature(enable = "avx2")]
+unsafe fn dot_avx2(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len();
+    let chunks = n / 4;
+    let mut lanes = [0.0f64; 4];
+    // SAFETY (AVX2): probe-verified by the caller; the pointer accesses
+    // below are bounds-argued per call site.
+    unsafe {
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc = _mm256_setzero_pd();
+        for k in 0..chunks {
+            let i = 4 * k;
+            // SAFETY (AVX2): reads 4 f64 at i = 4k ≤ n − 4, in bounds for
+            // both slices; separate mul+add (no FMA) keeps each lane on the
+            // scalar kernel's rounding sequence.
+            let prod = _mm256_mul_pd(_mm256_loadu_pd(pa.add(i)), _mm256_loadu_pd(pb.add(i)));
+            acc = _mm256_add_pd(acc, prod);
+        }
+        // SAFETY (AVX2): 4-lane store into the 4-element stack array.
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+    }
+    let mut s = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+    for i in 4 * chunks..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// SAFETY: callers must have verified AVX2 support at runtime (the
+/// `super::level()` probe) — `#[target_feature]` marks this fn unsafe.
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(a: f64, x: &[f64], y: &mut [f64]) {
+    let n = x.len();
+    let chunks = n / 4;
+    // SAFETY (AVX2): probe-verified by the caller; the pointer accesses
+    // below are bounds-argued per call site.
+    unsafe {
+        let va = _mm256_set1_pd(a);
+        let (px, py) = (x.as_ptr(), y.as_mut_ptr());
+        for k in 0..chunks {
+            let i = 4 * k;
+            // SAFETY (AVX2): loads/stores touch 4 f64 at i = 4k ≤ n − 4 —
+            // in bounds for `x` and `y` (equal lengths, caller-checked).
+            let prod = _mm256_mul_pd(va, _mm256_loadu_pd(px.add(i)));
+            _mm256_storeu_pd(py.add(i), _mm256_add_pd(_mm256_loadu_pd(py.add(i)), prod));
+        }
+    }
+    for i in 4 * chunks..n {
+        y[i] += a * x[i];
+    }
+}
+
+/// SAFETY: callers must have verified AVX2 support at runtime (the
+/// `super::level()` probe) — `#[target_feature]` marks this fn unsafe.
+#[target_feature(enable = "avx2")]
+unsafe fn dot4_avx2(a: &[f64], b: [&[f64]; 4]) -> [f64; 4] {
+    let n = a.len();
+    let chunks = n / 4;
+    let mut lanes = [[0.0f64; 4]; 4];
+    // SAFETY (AVX2): probe-verified by the caller; the pointer accesses
+    // below are bounds-argued per call site.
+    unsafe {
+        let pa = a.as_ptr();
+        let pb = [b[0].as_ptr(), b[1].as_ptr(), b[2].as_ptr(), b[3].as_ptr()];
+        let mut acc = [_mm256_setzero_pd(); 4];
+        for k in 0..chunks {
+            let i = 4 * k;
+            // SAFETY (AVX2): reads 4 f64 at i = 4k ≤ n − 4, in bounds for
+            // `a` and for every column (equal lengths, caller-checked); the
+            // shared row vector is loaded once for all four columns.
+            let va = _mm256_loadu_pd(pa.add(i));
+            for (ac, p) in acc.iter_mut().zip(pb.iter()) {
+                *ac = _mm256_add_pd(*ac, _mm256_mul_pd(va, _mm256_loadu_pd(p.add(i))));
+            }
+        }
+        for (lc, ac) in lanes.iter_mut().zip(acc.iter()) {
+            // SAFETY (AVX2): 4-lane store into each 4-element stack row.
+            _mm256_storeu_pd(lc.as_mut_ptr(), *ac);
+        }
+    }
+    let mut out = [0.0f64; 4];
+    for c in 0..4 {
+        let mut s = (lanes[c][0] + lanes[c][1]) + (lanes[c][2] + lanes[c][3]);
+        for i in 4 * chunks..n {
+            s += a[i] * b[c][i];
+        }
+        out[c] = s;
+    }
+    out
+}

@@ -1,0 +1,343 @@
+//! The crate's single SIMD doorway: explicit-width `f64` kernels behind a
+//! one-time runtime feature probe.
+//!
+//! ## Dispatch model
+//!
+//! Every entry point ([`dot`], [`axpy`], [`nrm2`], [`dot4`]) consults
+//! [`level`], a cached one-time probe that picks the widest supported
+//! implementation:
+//!
+//! * [`Level::Avx2`] — x86_64 whose CPUID reports AVX2: the guarded
+//!   intrinsic kernels in the private `avx2` submodule (guaranteed 256-bit
+//!   loads regardless of what the autovectorizer felt like doing).
+//! * [`Level::Neon`] — aarch64: the canonical loops below, which the
+//!   compiler lowers to NEON because the 4-lane shape *is* the 2×`f64x2`
+//!   vector shape and NEON is baseline-on for aarch64 (no intrinsics, no
+//!   `unsafe`, no runtime check needed), plus the register-blocked panel
+//!   kernel [`dot4_blocked`].
+//! * [`Level::Scalar`] — everything else, and the forced-override mode: the
+//!   canonical reference kernels ([`dot_scalar`] and friends).
+//!
+//! `ASTIR_SIMD=scalar|neon|avx2|auto` overrides the probe (first call wins;
+//! the decision is cached for the process). Requesting a level the host
+//! cannot run falls back to `scalar`, so `ASTIR_SIMD=scalar` is a total
+//! kill-switch and the only override CI exercises. Unrecognized values mean
+//! `auto`.
+//!
+//! ## Parity contract
+//!
+//! Dispatch **never changes results**: every level reproduces the canonical
+//! 4-lane accumulation order of [`super::dense::dot`] — lane `l` sums the
+//! terms at indices `≡ l (mod 4)`, lanes reduce as `(s0+s1)+(s2+s3)`, and
+//! the tail past `4·⌊n/4⌋` folds in sequentially — so results are
+//! **bit-identical** across `scalar`/`neon`/`avx2` (the AVX2 kernels use
+//! separate mul+add, never FMA, precisely to keep each lane's rounding
+//! sequence intact). This is deliberately stronger than the crate-wide
+//! tolerance contract (≤ 1e-12 relative where a kernel documents
+//! reassociation): no kernel in this module reassociates, and
+//! `rust/tests/simd_parity.rs` pins the bitwise claim on every entry point.
+//! A future level that does reassociate must document it here and downgrade
+//! those pins to the toleranced form.
+//!
+//! ## Doorway rule
+//!
+//! Lint rule L6 (`simd-doorway`, see [`crate::lint`]) confines
+//! `std::arch`/`core::arch` imports, `target_feature` gates, and
+//! `_mm*` intrinsics to `src/linalg/simd/`, and requires every intrinsic
+//! call site to sit under a `SAFETY:` comment naming the CPU-feature
+//! precondition. Outside this directory the crate is plain safe Rust.
+
+use crate::sync::OnceLock;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+
+/// Dispatch level selected by the one-time probe (or forced via
+/// `ASTIR_SIMD`). Ordering is widest-last so "best available" is the
+/// largest supported variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Level {
+    /// Canonical 4-lane unrolled loops — the reference semantics.
+    Scalar,
+    /// aarch64 baseline NEON: the canonical loops (autovectorized to
+    /// 2×`f64x2`) plus the register-blocked panel kernel.
+    Neon,
+    /// x86_64 with runtime-verified AVX2: guarded 256-bit intrinsic kernels.
+    Avx2,
+}
+
+impl Level {
+    /// Stable lowercase name (bench labels, logs, `ASTIR_SIMD` values).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Scalar => "scalar",
+            Level::Neon => "neon",
+            Level::Avx2 => "avx2",
+        }
+    }
+}
+
+/// The dispatch level every kernel in this module routes through, probed
+/// once per process and cached (the probe is a pure function of the CPU and
+/// the `ASTIR_SIMD` environment variable, so caching can never go stale).
+pub fn level() -> Level {
+    static LEVEL: OnceLock<Level> = OnceLock::new();
+    *LEVEL.get_or_init(probe)
+}
+
+/// Resolve `ASTIR_SIMD` (default `auto`) against what the host supports.
+fn probe() -> Level {
+    let requested = std::env::var("ASTIR_SIMD").unwrap_or_default();
+    match requested.as_str() {
+        "scalar" => Level::Scalar,
+        "neon" if cfg!(target_arch = "aarch64") => Level::Neon,
+        "neon" => Level::Scalar,
+        "avx2" if avx2_available() => Level::Avx2,
+        "avx2" => Level::Scalar,
+        _ => {
+            if avx2_available() {
+                Level::Avx2
+            } else if cfg!(target_arch = "aarch64") {
+                Level::Neon
+            } else {
+                Level::Scalar
+            }
+        }
+    }
+}
+
+/// Runtime AVX2 check. Under Miri the std feature probe reports whatever the
+/// compile target enabled statically, so interpreted runs are pinned to the
+/// portable path outright — Miri only supports a subset of the intrinsics.
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    !cfg!(miri) && is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+// ------------------------------------------------------------- dispatched
+
+/// Dispatched dot product. Bit-identical to [`dot_scalar`] at every level
+/// (see the module parity contract).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if level() == Level::Avx2 {
+            return avx2::dot(a, b);
+        }
+    }
+    dot_scalar(a, b)
+}
+
+/// Dispatched `y += a * x`. Elementwise, so bit-identical to [`axpy_scalar`]
+/// at every level by construction.
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if level() == Level::Avx2 {
+            avx2::axpy(a, x, y);
+            return;
+        }
+    }
+    axpy_scalar(a, x, y);
+}
+
+/// Dispatched Euclidean norm: `sqrt(dot(v, v))` through the dispatched dot.
+#[inline]
+pub fn nrm2(v: &[f64]) -> f64 {
+    dot(v, v).sqrt()
+}
+
+/// Dispatched 4-column panel dot: `out[c] = ⟨a, b[c]⟩` with the shared row
+/// `a` loaded **once** for all four columns — the MMV batch dimension as the
+/// SIMD lane. Each column keeps its own canonical 4-lane accumulator, so
+/// every output is bit-identical to `dot_scalar(a, b[c])` at every level.
+#[inline]
+pub fn dot4(a: &[f64], b: [&[f64]; 4]) -> [f64; 4] {
+    for bc in &b {
+        debug_assert_eq!(a.len(), bc.len());
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if level() == Level::Avx2 {
+            return avx2::dot4(a, b);
+        }
+    }
+    if level() == Level::Scalar {
+        dot4_scalar(a, b)
+    } else {
+        dot4_blocked(a, b)
+    }
+}
+
+// -------------------------------------------------------- reference paths
+
+/// Canonical reference dot: the exact 4-lane accumulation order of
+/// [`super::dense::dot`], restated here so the dispatched fast paths have a
+/// recursion-free baseline to be measured and pinned against.
+#[inline]
+pub fn dot_scalar(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for k in 0..chunks {
+        let i = 4 * k;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in 4 * chunks..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Canonical reference axpy (`y += a * x`), 4-way unrolled like
+/// [`super::dense::axpy`].
+#[inline]
+pub fn axpy_scalar(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4;
+    for k in 0..chunks {
+        let i = 4 * k;
+        y[i] += a * x[i];
+        y[i + 1] += a * x[i + 1];
+        y[i + 2] += a * x[i + 2];
+        y[i + 3] += a * x[i + 3];
+    }
+    for i in 4 * chunks..n {
+        y[i] += a * x[i];
+    }
+}
+
+/// Reference norm on the reference dot.
+#[inline]
+pub fn nrm2_scalar(v: &[f64]) -> f64 {
+    dot_scalar(v, v).sqrt()
+}
+
+/// Reference panel dot: four independent [`dot_scalar`] sweeps. This is the
+/// *semantic definition* of [`dot4`]; the blocked/AVX2 paths must reproduce
+/// it bit-for-bit.
+#[inline]
+pub fn dot4_scalar(a: &[f64], b: [&[f64]; 4]) -> [f64; 4] {
+    [dot_scalar(a, b[0]), dot_scalar(a, b[1]), dot_scalar(a, b[2]), dot_scalar(a, b[3])]
+}
+
+/// Row-reuse panel dot in safe Rust: one pass over `a`, interleaving the
+/// four columns so `a`'s chunk is register-resident across all of them
+/// (4× less traffic on the shared row than [`dot4_scalar`]). Column `c`
+/// still owns its private canonical 4-lane accumulator `s[c]`, and the
+/// interleaving only reorders *independent* accumulations, so every output
+/// is bit-identical to `dot_scalar(a, b[c])`.
+#[inline]
+pub fn dot4_blocked(a: &[f64], b: [&[f64]; 4]) -> [f64; 4] {
+    for bc in &b {
+        debug_assert_eq!(a.len(), bc.len());
+    }
+    let n = a.len();
+    let chunks = n / 4;
+    let mut s = [[0.0f64; 4]; 4];
+    for k in 0..chunks {
+        let i = 4 * k;
+        for (sc, bc) in s.iter_mut().zip(b.iter()) {
+            sc[0] += a[i] * bc[i];
+            sc[1] += a[i + 1] * bc[i + 1];
+            sc[2] += a[i + 2] * bc[i + 2];
+            sc[3] += a[i + 3] * bc[i + 3];
+        }
+    }
+    let mut out = [0.0f64; 4];
+    for c in 0..4 {
+        let mut t = (s[c][0] + s[c][1]) + (s[c][2] + s[c][3]);
+        for i in 4 * chunks..n {
+            t += a[i] * b[c][i];
+        }
+        out[c] = t;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vecs(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let f = |i: usize, s: u64| ((i as f64 + 0.31 * s as f64) * 0.7341).sin() * 1.7;
+        ((0..n).map(|i| f(i, seed)).collect(), (0..n).map(|i| f(i, seed + 9)).collect())
+    }
+
+    #[test]
+    fn level_is_stable_and_named() {
+        let l = level();
+        assert_eq!(l, level(), "probe must cache");
+        assert!(["scalar", "neon", "avx2"].contains(&l.as_str()));
+        if std::env::var("ASTIR_SIMD").as_deref() == Ok("scalar") {
+            assert_eq!(l, Level::Scalar, "ASTIR_SIMD=scalar must force the reference path");
+        }
+    }
+
+    #[test]
+    fn dispatched_dot_matches_scalar_bitwise() {
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 15, 64, 251, 1000] {
+            let (a, b) = vecs(n, 1);
+            assert_eq!(dot(&a, &b).to_bits(), dot_scalar(&a, &b).to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn dispatched_axpy_matches_scalar_bitwise() {
+        for n in [0usize, 1, 3, 4, 9, 64, 255, 1000] {
+            let (x, y0) = vecs(n, 2);
+            let mut y_d = y0.clone();
+            let mut y_s = y0.clone();
+            axpy(0.37, &x, &mut y_d);
+            axpy_scalar(0.37, &x, &mut y_s);
+            for i in 0..n {
+                assert_eq!(y_d[i].to_bits(), y_s[i].to_bits(), "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn panel_dot_all_paths_match_reference_bitwise() {
+        for n in [0usize, 1, 4, 6, 16, 63, 257, 1000] {
+            let (a, b0) = vecs(n, 3);
+            let (b1, b2) = vecs(n, 4);
+            let (b3, _) = vecs(n, 5);
+            let cols = [&b0[..], &b1[..], &b2[..], &b3[..]];
+            let want = dot4_scalar(&a, cols);
+            for (name, got) in [("dot4", dot4(&a, cols)), ("blocked", dot4_blocked(&a, cols))] {
+                for c in 0..4 {
+                    assert_eq!(got[c].to_bits(), want[c].to_bits(), "{name} n={n} col {c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nrm2_matches_scalar_bitwise() {
+        let (v, _) = vecs(333, 6);
+        assert_eq!(nrm2(&v).to_bits(), nrm2_scalar(&v).to_bits());
+    }
+
+    #[test]
+    fn dot_matches_dense_generic_kernel_bitwise() {
+        // The dispatch hooks in `dense::dot` rely on this: the module's
+        // reference kernel IS the generic kernel's accumulation order.
+        let (a, b) = vecs(1003, 7);
+        assert_eq!(dot_scalar(&a, &b).to_bits(), crate::linalg::dense::dot(&a, &b).to_bits());
+    }
+}

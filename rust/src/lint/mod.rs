@@ -1,7 +1,7 @@
 //! In-crate static analysis behind `astir lint` — the concurrency-hygiene
 //! hard gate (zero dependencies, same spirit as [`crate::testutil`]).
 //!
-//! Five rules, each encoding an invariant the rest of this PR's tooling
+//! Six rules, each encoding an invariant the rest of the crate's tooling
 //! relies on:
 //!
 //! * **L1 `ordering-justification`** — every atomic call site naming an
@@ -24,6 +24,13 @@
 //!   `src/service/` (the serve front-end and its wire codec): tests and
 //!   benches exercise the network through [`crate::service::wire`], so
 //!   socket setup, timeouts, and shutdown live behind one audited seam.
+//! * **L6 `simd-doorway`** — `std::arch` / `core::arch` paths, the
+//!   `target_feature` attribute/cfg, the CPU feature-probe macro, and
+//!   `_mm*` vector intrinsics may appear only under `src/linalg/simd/`
+//!   (see [`crate::linalg::simd`]); inside the doorway, every
+//!   intrinsic-bearing line must sit under a `SAFETY` comment naming the
+//!   CPU feature (`AVX2` / `NEON`) within the 6 preceding lines.
+//!   Everywhere else the crate is plain portable safe Rust.
 //!
 //! The analysis is source-level and deliberately simple: a byte classifier
 //! ([`classify`]) splits each file into code / comment / string regions
@@ -54,7 +61,7 @@ pub struct Finding {
     pub file: String,
     /// 1-based line number.
     pub line: usize,
-    /// Stable rule id (`L1`..`L5`).
+    /// Stable rule id (`L1`..`L6`).
     pub rule: &'static str,
     pub message: String,
 }
@@ -246,6 +253,8 @@ const ORDERINGS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst
 const L1_WINDOW: usize = 4;
 /// How many preceding lines may hold the L3 `SAFETY` comment.
 const L3_WINDOW: usize = 5;
+/// How many preceding lines may hold L6's feature-naming `SAFETY` comment.
+const L6_WINDOW: usize = 6;
 
 fn is_ident_char(c: char) -> bool {
     c == '_' || c.is_ascii_alphanumeric()
@@ -276,12 +285,30 @@ fn comment_window_contains(lines: &[MaskedLine], idx: usize, window: usize, need
     lines[lo..=idx].iter().any(|l| l.comment.contains(needle))
 }
 
+/// True if `hay` contains a token *starting with* `_mm` (an x86 vector
+/// intrinsic such as `_mm256_loadu_pd`): an occurrence of `_mm` whose
+/// preceding character is not an identifier character. A prefix scan, not
+/// [`token_positions`], because the intrinsic name continues with
+/// identifier characters after the prefix.
+fn has_mm_intrinsic(hay: &str) -> bool {
+    let mut from = 0;
+    while let Some(rel) = hay[from..].find("_mm") {
+        let at = from + rel;
+        if at == 0 || !hay[..at].chars().next_back().is_some_and(is_ident_char) {
+            return true;
+        }
+        from = at + 3;
+    }
+    false
+}
+
 /// Lint one file's source text. `file` is the display path; rule
 /// exemptions key off it (`src/sync/` prefix after normalization).
 pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
     let norm = file.replace('\\', "/");
     let in_sync = norm.contains("src/sync/") || norm.ends_with("src/sync");
     let in_service = norm.contains("src/service/") || norm.ends_with("src/service");
+    let in_simd = norm.contains("src/linalg/simd/") || norm.ends_with("src/linalg/simd");
     let kinds = classify(src);
     let lines = masked_lines(src, &kinds);
     let mut findings = Vec::new();
@@ -335,6 +362,46 @@ pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
                 "`std::net` outside src/service/ — go through crate::service::wire instead"
                     .to_string(),
             );
+        }
+
+        // L6: arch intrinsics only inside the SIMD doorway; intrinsic call
+        // sites there sit under a SAFETY comment naming the CPU feature.
+        if !in_simd {
+            for pat in ["std::arch", "core::arch", "target_feature", "is_x86_feature_detected"] {
+                if !token_positions(code, pat).is_empty() {
+                    push(
+                        idx,
+                        "L6",
+                        format!(
+                            "`{pat}` outside src/linalg/simd/ — SIMD dispatch goes through \
+                             crate::linalg::simd"
+                        ),
+                    );
+                }
+            }
+        }
+        if has_mm_intrinsic(code) {
+            if !in_simd {
+                push(
+                    idx,
+                    "L6",
+                    "`_mm*` intrinsic outside src/linalg/simd/ — SIMD dispatch goes through \
+                     crate::linalg::simd"
+                        .to_string(),
+                );
+            } else if !comment_window_contains(&lines, idx, L6_WINDOW, "SAFETY")
+                || !(comment_window_contains(&lines, idx, L6_WINDOW, "AVX2")
+                    || comment_window_contains(&lines, idx, L6_WINDOW, "NEON"))
+            {
+                push(
+                    idx,
+                    "L6",
+                    format!(
+                        "intrinsic without a SAFETY comment naming the CPU feature \
+                         (AVX2/NEON) on this line or the {L6_WINDOW} above"
+                    ),
+                );
+            }
         }
 
         // L3: `unsafe` needs a nearby SAFETY comment.
@@ -503,6 +570,42 @@ mod tests {
         assert!(lint_source("src/service/wire.rs", bad).is_empty());
         assert!(lint_source("src/service/server.rs", bad).is_empty());
         let masked = "// std::net is discussed here\nlet s = \"std::net\";";
+        assert!(lint_source("src/x.rs", masked).is_empty());
+    }
+
+    #[test]
+    fn l6_fences_the_simd_doorway() {
+        let bad = "use core::arch::x86_64::_mm256_add_pd;\n\
+                   #[target_feature(enable = \"avx2\")]\nfn f() {}";
+        let f = lint_source("src/linalg/dense.rs", bad);
+        // Line 1 trips twice (`core::arch` path + `_mm*` token), line 2 once.
+        assert_eq!(f.len(), 3, "{f:?}");
+        assert!(f.iter().all(|x| x.rule == "L6"));
+
+        // Inside the doorway: fine under a feature-naming SAFETY comment...
+        let good = "// SAFETY (AVX2): probe-verified by the caller.\n\
+                    let v = _mm256_setzero_pd();";
+        assert!(lint_source("src/linalg/simd/avx2.rs", good).is_empty());
+        // ...but a naked intrinsic, or SAFETY without the feature name,
+        // still trips.
+        let naked = "let v = _mm256_setzero_pd();";
+        let f = lint_source("src/linalg/simd/avx2.rs", naked);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "L6");
+        let vague = "// SAFETY: fine, trust me.\nlet v = _mm256_setzero_pd();";
+        assert_eq!(lint_source("src/linalg/simd/avx2.rs", vague).len(), 1);
+        // The comment must be within the window.
+        let far = format!(
+            "// SAFETY (AVX2): too far.\n{}let v = _mm256_setzero_pd();",
+            "\n".repeat(6)
+        );
+        assert_eq!(lint_source("src/linalg/simd/avx2.rs", &far).len(), 1);
+
+        // The probe macro is doorway-only too; strings/comments never trip.
+        let probe = "let ok = is_x86_feature_detected!(\"avx2\");";
+        assert!(lint_source("src/linalg/simd/mod.rs", probe).is_empty());
+        assert_eq!(lint_source("src/backend/mod.rs", probe).len(), 1);
+        let masked = "// std::arch is discussed here\nlet s = \"_mm256_add_pd\";";
         assert!(lint_source("src/x.rs", masked).is_empty());
     }
 

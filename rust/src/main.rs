@@ -857,7 +857,7 @@ fn lint_cmd(flags: &mut Flags) -> Result<(), String> {
     }
     let findings = astir::lint::lint_tree(&root).map_err(|e| format!("lint: {e}"))?;
     if findings.is_empty() {
-        println!("lint: clean ({} rules over {})", 5, root.display());
+        println!("lint: clean ({} rules over {})", 6, root.display());
         return Ok(());
     }
     for f in &findings {
@@ -890,7 +890,8 @@ COMMANDS
   lint                         concurrency-hygiene static analysis (hard CI
                                gate: atomic-ordering justifications, the
                                crate::sync doorway, SAFETY comments, hygiene,
-                               std::net confined to src/service/)
+                               std::net confined to src/service/, SIMD
+                               intrinsics confined to src/linalg/simd/)
   info                         show config + discovered AOT artifacts
 
 COMMON FLAGS

@@ -29,6 +29,9 @@
 //!   window's operator (`Arc::ptr_eq`), not merely an equal key: an
 //!   evict-and-redraw between two cache lookups yields distinct
 //!   operators under one key, and such a job solves solo instead.
+//!   Subsampled-DCT operators additionally share their twiddle/phase
+//!   tables through the process-wide [`crate::linalg::plan_for`] cache,
+//!   so even distinct cache entries at one `n` reuse one table build.
 //!   Incompatible jobs likewise fall back to a solo
 //!   [`super::solve_job`]. With `T = 0` every job runs solo inline — the
 //!   configuration whose responses are **bit-identical** to an

@@ -1,8 +1,9 @@
 //! The `astir lint` rules, enforced on this very source tree as an
 //! ordinary test: `cargo test` fails the moment an atomic loses its
 //! ordering justification, a module bypasses the `crate::sync` doorway,
-//! or an `unsafe` block sheds its SAFETY comment. CI additionally runs
-//! the `astir lint` subcommand, which prints per-finding locations.
+//! an `unsafe` block sheds its SAFETY comment, or an arch intrinsic
+//! escapes the `src/linalg/simd/` doorway. CI additionally runs the
+//! `astir lint` subcommand, which prints per-finding locations.
 
 use std::path::Path;
 
@@ -13,4 +14,21 @@ fn source_tree_is_lint_clean() {
     let findings = astir::lint::lint_tree(root).expect("lint walk failed");
     let rendered: Vec<String> = findings.iter().map(|f| f.to_string()).collect();
     assert!(rendered.is_empty(), "lint findings:\n{}", rendered.join("\n"));
+}
+
+/// L6 guards the SIMD doorway from *outside* the doorway: an intrinsic or
+/// `std::arch` path in an ordinary module is a finding even when it carries
+/// a SAFETY comment. (The in-crate unit tests cover the inside-the-doorway
+/// cases; this pins the rule at the integration surface the gate runs.)
+#[test]
+#[cfg_attr(miri, ignore = "string-level analysis; no UB to find")]
+fn l6_rejects_intrinsics_outside_the_simd_doorway() {
+    let src = "// SAFETY (AVX2): irrelevant — wrong module.\n\
+               let v = _mm256_setzero_pd();\nuse std::arch::x86_64::_mm256_add_pd;";
+    let findings = astir::lint::lint_source("src/algorithms/stoiht.rs", src);
+    assert!(
+        findings.iter().filter(|f| f.rule == "L6").count() >= 3,
+        "expected L6 findings, got: {findings:?}"
+    );
+    assert!(astir::lint::lint_source("src/linalg/simd/avx2.rs", src).is_empty());
 }

@@ -1,0 +1,252 @@
+//! SIMD & transform parity tier — the bit-level contracts of the
+//! [`astir::linalg::simd`] doorway and the pair-fused FFT, enforced at the
+//! integration surface:
+//!
+//! 1. **Dispatched kernels are bit-identical to the scalar references.**
+//!    Whatever level the host probe picks (CI additionally forces
+//!    `ASTIR_SIMD=scalar` in one job to pin the reference path itself),
+//!    `dot`/`axpy`/`nrm2`/`dot4` must reproduce the canonical 4-lane
+//!    accumulation exactly — no FMA, no reassociation.
+//! 2. **The kernels that *consume* the doorway inherit the guarantee.**
+//!    The fused dense proxy step and the multi-RHS panel apply must match
+//!    scalar-kernel chains / per-column applies bit for bit.
+//! 3. **The fused, cache-blocked FFT is bit-identical to the retained
+//!    radix-2 reference**, and both match the direct cosine sums to the
+//!    crate tolerance — at a small size and at the `large_n` bench size
+//!    `n = 2^17`, where the cache-blocked schedule actually engages.
+
+use astir::linalg::simd::{self, Level};
+use astir::linalg::{plan_for, DenseOp, Mat, MeasureOp, SubsampledDctOp};
+use astir::rng::Rng;
+
+fn wave(n: usize, seed: u64) -> Vec<f64> {
+    (0..n).map(|i| ((i as f64 + 1.7 * seed as f64) * 0.6143).sin() * 1.3).collect()
+}
+
+#[test]
+fn forced_scalar_override_pins_the_level() {
+    // CI's `ASTIR_SIMD: scalar` job makes this a hard pin; elsewhere the
+    // probe may legitimately pick any level.
+    if std::env::var("ASTIR_SIMD").as_deref() == Ok("scalar") {
+        assert_eq!(simd::level(), Level::Scalar);
+    }
+    assert_eq!(simd::level(), simd::level(), "probe must be cached");
+}
+
+#[test]
+fn dispatched_kernels_match_scalar_references_bitwise() {
+    for n in [0usize, 1, 2, 3, 4, 7, 8, 31, 100, 1000, 4093, 10000] {
+        let a = wave(n, 1);
+        let b = wave(n, 2);
+        assert_eq!(simd::dot(&a, &b).to_bits(), simd::dot_scalar(&a, &b).to_bits(), "dot n={n}");
+        assert_eq!(simd::nrm2(&a).to_bits(), simd::nrm2_scalar(&a).to_bits(), "nrm2 n={n}");
+        // The generic dense kernel routes f64 through the doorway — same bits.
+        assert_eq!(
+            astir::linalg::dot(&a, &b).to_bits(),
+            simd::dot_scalar(&a, &b).to_bits(),
+            "dense::dot n={n}"
+        );
+        let mut y_d = wave(n, 3);
+        let mut y_s = y_d.clone();
+        simd::axpy(-0.83, &a, &mut y_d);
+        simd::axpy_scalar(-0.83, &a, &mut y_s);
+        for i in 0..n {
+            assert_eq!(y_d[i].to_bits(), y_s[i].to_bits(), "axpy n={n} i={i}");
+        }
+        let (c0, c1, c2, c3) = (wave(n, 4), wave(n, 5), wave(n, 6), wave(n, 7));
+        let cols = [&c0[..], &c1[..], &c2[..], &c3[..]];
+        let got = simd::dot4(&a, cols);
+        let want = simd::dot4_scalar(&a, cols);
+        for c in 0..4 {
+            assert_eq!(got[c].to_bits(), want[c].to_bits(), "dot4 n={n} col {c}");
+        }
+    }
+}
+
+/// The fused dense proxy (`RowBlock::proxy_step_into` behind
+/// `DenseOp::block_proxy_step`) restated on the *scalar* kernels: same
+/// two-pass structure, same skip-zero-weight rule, `dot_scalar`/`axpy_scalar`
+/// in place of the dispatched kernels.
+fn proxy_reference(
+    a: &Mat<f64>,
+    row0: usize,
+    y_b: &[f64],
+    x: &[f64],
+    alpha: f64,
+) -> (Vec<f64>, Vec<f64>) {
+    let b = y_b.len();
+    let mut resid = vec![0.0; b];
+    for i in 0..b {
+        resid[i] = y_b[i] - simd::dot_scalar(a.row(row0 + i), x);
+    }
+    let mut out = x.to_vec();
+    for i in 0..b {
+        let w = alpha * resid[i];
+        if w != 0.0 {
+            simd::axpy_scalar(w, a.row(row0 + i), &mut out);
+        }
+    }
+    (resid, out)
+}
+
+#[test]
+fn fused_proxy_step_matches_scalar_kernel_chain_bitwise() {
+    let (m, n, b) = (48usize, 200usize, 12usize);
+    let mut rng = Rng::seed_from(8);
+    let mat = Mat::from_fn(m, n, |_, _| rng.gauss());
+    let op = DenseOp::new(mat.clone());
+    let y = wave(m, 9);
+    let x = wave(n, 10);
+    let mut scratch = op.make_scratch();
+    for block in 0..m / b {
+        let row0 = block * b;
+        let y_b = &y[row0..row0 + b];
+        let mut resid = vec![0.0; b];
+        let mut out = vec![0.0; n];
+        op.block_proxy_step(row0, y_b, &x, 0.67, &mut resid, &mut scratch, &mut out);
+        let (want_resid, want_out) = proxy_reference(&mat, row0, y_b, &x, 0.67);
+        for i in 0..b {
+            assert_eq!(resid[i].to_bits(), want_resid[i].to_bits(), "block {block} resid {i}");
+        }
+        for j in 0..n {
+            assert_eq!(out[j].to_bits(), want_out[j].to_bits(), "block {block} out {j}");
+        }
+    }
+}
+
+#[test]
+fn panel_apply_matches_per_column_apply_bitwise() {
+    // B = 1 and 3 exercise the remainder path alone, 4 one dot4 group,
+    // 8 two groups — on both operator implementations.
+    let (m, n) = (40usize, 128usize);
+    let mut rng = Rng::seed_from(11);
+    let dense = DenseOp::new(Mat::from_fn(m, n, |_, _| rng.gauss()));
+    let dct = SubsampledDctOp::new(n, Rng::seed_from(12).subset(n, m));
+    fn check<O: MeasureOp>(op: &O, name: &str) {
+        let (n, m) = (op.cols(), op.rows());
+        for ncols in [1usize, 3, 4, 8] {
+            let x_panel: Vec<f64> =
+                (0..ncols * n).map(|i| ((i as f64) * 0.271).sin() * 0.9).collect();
+            let mut scratch = op.make_scratch();
+            let mut out_panel = vec![0.0; ncols * m];
+            op.apply_multi_into(&x_panel, &mut scratch, &mut out_panel);
+            for c in 0..ncols {
+                let mut want = vec![0.0; m];
+                op.apply_into(&x_panel[c * n..(c + 1) * n], &mut scratch, &mut want);
+                for i in 0..m {
+                    assert_eq!(
+                        out_panel[c * m + i].to_bits(),
+                        want[i].to_bits(),
+                        "{name} B={ncols} col {c} row {i}"
+                    );
+                }
+            }
+        }
+    }
+    check(&dense, "dense");
+    check(&dct, "subsampled_dct");
+}
+
+#[test]
+fn fused_dct_matches_reference_pipeline_bitwise() {
+    // 2^10 runs unchunked; 2^17 engages the depth-first cache-blocked
+    // schedule (odd lg n → the 2^13 block) — both must reproduce the
+    // retained radix-2 pipeline exactly, forward and transpose.
+    for n in [1usize << 10, 1 << 17] {
+        let plan = plan_for(n);
+        let mut s_new = plan.scratch();
+        let mut s_ref = plan.scratch();
+        let x = wave(n, 13);
+        let (mut out_new, mut out_ref) = (vec![0.0; n], vec![0.0; n]);
+        plan.dct2_into(&x, &mut s_new, &mut out_new);
+        plan.dct2_reference_into(&x, &mut s_ref, &mut out_ref);
+        for k in 0..n {
+            assert_eq!(out_new[k].to_bits(), out_ref[k].to_bits(), "dct2 n={n} k={k}");
+        }
+        plan.dct3_into(&x, &mut s_new, &mut out_new);
+        plan.dct3_reference_into(&x, &mut s_ref, &mut out_ref);
+        for j in 0..n {
+            assert_eq!(out_new[j].to_bits(), out_ref[j].to_bits(), "dct3 n={n} j={j}");
+        }
+    }
+}
+
+/// Direct DCT-II coefficient `X_k = Σ_j x_j cos(π k (2j+1) / (2n))`,
+/// summed in index order — the O(n) ground truth per coefficient.
+fn direct_dct2_coeff(x: &[f64], k: usize) -> f64 {
+    let nf = x.len() as f64;
+    x.iter()
+        .enumerate()
+        .map(|(j, &xj)| xj * (std::f64::consts::PI * k as f64 * (j as f64 + 0.5) / nf).cos())
+        .sum()
+}
+
+#[test]
+fn fft_dct_matches_direct_cosine_sum() {
+    // Full cross-check at 2^10; spot-checked coefficients at 2^17 (the
+    // full direct sum would be O(n²) ≈ 1.7e10 flops there).
+    let n = 1usize << 10;
+    let plan = plan_for(n);
+    let mut scratch = plan.scratch();
+    let x = wave(n, 14);
+    let mut out = vec![0.0; n];
+    plan.dct2_into(&x, &mut scratch, &mut out);
+    for k in 0..n {
+        let want = direct_dct2_coeff(&x, k);
+        assert!(
+            (out[k] - want).abs() <= 1e-10 * (1.0 + want.abs()),
+            "n={n} k={k}: {} vs {want}",
+            out[k]
+        );
+    }
+    let n = 1usize << 17;
+    let plan = plan_for(n);
+    let mut scratch = plan.scratch();
+    let x = wave(n, 15);
+    let mut out = vec![0.0; n];
+    plan.dct2_into(&x, &mut scratch, &mut out);
+    for k in [0usize, 1, 2, 255, 4096, 65535, 65536, 131071] {
+        let want = direct_dct2_coeff(&x, k);
+        // Tolerance scaled by ‖x‖₁-ish magnitude: the direct sum itself
+        // carries O(n·eps) rounding at this length.
+        assert!(
+            (out[k] - want).abs() <= 1e-8 * (1.0 + want.abs()),
+            "n={n} k={k}: {} vs {want}",
+            out[k]
+        );
+    }
+}
+
+#[test]
+fn adjoint_identity_holds_at_large_n() {
+    // ⟨A x, r⟩ == ⟨x, Aᵀ r⟩ through the full fast-transform pipeline at
+    // the bench sizes the async runtimes actually use.
+    for (n, m) in [(1usize << 10, 256usize), (1 << 17, 2048)] {
+        let rows = Rng::seed_from(16).subset(n, m);
+        let op = SubsampledDctOp::new(n, rows);
+        let x = wave(n, 17);
+        let r = wave(m, 18);
+        let mut scratch = op.make_scratch();
+        let mut ax = vec![0.0; m];
+        op.apply_into(&x, &mut scratch, &mut ax);
+        let mut atr = vec![0.0; n];
+        op.apply_t_into(&r, &mut scratch, &mut atr);
+        let lhs = simd::dot(&ax, &r);
+        let rhs = simd::dot(&x, &atr);
+        assert!(
+            (lhs - rhs).abs() <= 1e-10 * (1.0 + lhs.abs()),
+            "n={n}: ⟨Ax,r⟩={lhs} vs ⟨x,Aᵀr⟩={rhs}"
+        );
+    }
+}
+
+#[test]
+fn plan_cache_shares_plans_across_lookups() {
+    let p1 = plan_for(1 << 10);
+    let p2 = plan_for(1 << 10);
+    assert!(
+        astir::sync::Arc::ptr_eq(&p1, &p2),
+        "repeated plan_for lookups must share one table build"
+    );
+    assert_eq!(p1.n(), 1 << 10);
+}
