@@ -1,0 +1,18 @@
+//! EXPERIMENT — sharded tally under bounded staleness
+//! (`cargo bench --bench sharded`).
+//!
+//! Thin wrapper over the `sharded` suite in
+//! `astir::bench_harness::suites`: time steps to converge over the
+//! S x E grid (shards in {1, 2, 4, 8}, exchange period in
+//! {1, 4, 16, 64}) under the unit-rate simulator, plus one real-thread
+//! `ShardedPool` point at S = 4, E = 16. The S = 1 column is
+//! bit-identical to the single-tally runtime by construction, so the
+//! grid isolates what bounded-staleness exchange costs.
+//!
+//! Telemetry: `results/BENCH_sharded_staleness.json`.
+
+mod common;
+
+fn main() {
+    common::bench_binary_main("sharded");
+}

@@ -123,6 +123,88 @@ impl<K: SupportKernel + ?Sized> SupportKernel for Box<K> {
     }
 }
 
+/// Contiguous measurement-block range owned by one shard of a sharded
+/// run: shard `shard` of `shards` over `num_blocks` blocks, balanced so
+/// range sizes differ by at most one and the ranges tile `[0,
+/// num_blocks)` exactly (pinned by a test).
+pub fn shard_block_range(shard: usize, shards: usize, num_blocks: usize) -> (usize, usize) {
+    assert!(shards >= 1 && shard < shards, "shard {shard} out of {shards}");
+    assert!(
+        shards <= num_blocks,
+        "cannot split {num_blocks} measurement blocks across {shards} shards"
+    );
+    let base = num_blocks / shards;
+    let extra = num_blocks % shards;
+    // The first `extra` shards take one extra block each.
+    let lo = shard * base + shard.min(extra);
+    let len = base + usize::from(shard < extra);
+    (lo, len)
+}
+
+/// Restrict any kernel to one shard's contiguous block range — the
+/// measurement-partitioning half of the sharded tally design (the other
+/// half, support exchange, lives in [`crate::tally::ExchangeBoard`]).
+/// Only [`sample_block`] changes: blocks are drawn uniformly from the
+/// owned range; stepping, voting, and the halting residual still see the
+/// full problem, so a shard's iterate can converge on the global signal
+/// from its slice of the measurements plus the exchanged support.
+///
+/// [`sample_block`]: SupportKernel::sample_block
+pub struct ShardedKernel<K> {
+    inner: K,
+    lo: usize,
+    len: usize,
+}
+
+impl<K: SupportKernel> ShardedKernel<K> {
+    pub fn new(inner: K, shard: usize, shards: usize) -> Self {
+        let nb = inner.problem().spec.num_blocks();
+        let (lo, len) = shard_block_range(shard, shards, nb);
+        ShardedKernel { inner, lo, len }
+    }
+
+    /// The owned `(first_block, block_count)` range.
+    pub fn block_range(&self) -> (usize, usize) {
+        (self.lo, self.len)
+    }
+}
+
+impl<K: SupportKernel> SupportKernel for ShardedKernel<K> {
+    fn problem(&self) -> &Problem {
+        self.inner.problem()
+    }
+
+    fn sample_block(&self, rng: &mut Rng) -> usize {
+        self.lo + rng.below(self.len)
+    }
+
+    fn tally_step(
+        &mut self,
+        x: &mut SparseIterate<f64>,
+        block: usize,
+        estimate: &[usize],
+        gamma_out: &mut Vec<usize>,
+    ) {
+        self.inner.tally_step(x, block, estimate, gamma_out)
+    }
+
+    fn dense_step(&mut self, x: &mut [f64], block: usize, gamma_out: &mut Vec<usize>) {
+        self.inner.dense_step(x, block, gamma_out)
+    }
+
+    fn burn(&mut self, x: &SparseIterate<f64>, block: usize) {
+        self.inner.burn(x, block)
+    }
+
+    fn residual(&mut self, x: &SparseIterate<f64>, r_scratch: &mut Vec<f64>) -> f64 {
+        self.inner.residual(x, r_scratch)
+    }
+
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+}
+
 /// Which [`SupportKernel`] the config-driven layers (CLI, `Leader`,
 /// bench registry) drive — the algorithms with an asynchronous story.
 /// The purely sequential baselines (IHT, OMP, CoSaMP) are not listed:
@@ -180,6 +262,53 @@ mod tests {
         assert_eq!(boxed.n(), p.spec.n);
         let mut scratch = Vec::new();
         assert!(boxed.residual(&x, &mut scratch).is_finite());
+    }
+
+    #[test]
+    fn shard_ranges_tile_the_blocks_exactly() {
+        for num_blocks in 1..=24 {
+            for shards in 1..=num_blocks {
+                let mut next = 0;
+                for k in 0..shards {
+                    let (lo, len) = shard_block_range(k, shards, num_blocks);
+                    assert_eq!(lo, next, "ranges must be contiguous");
+                    assert!(len >= 1, "every shard owns at least one block");
+                    next = lo + len;
+                }
+                assert_eq!(next, num_blocks, "ranges must cover every block");
+                let (lo0, len0) = shard_block_range(0, shards, num_blocks);
+                let (lol, lenl) = shard_block_range(shards - 1, shards, num_blocks);
+                assert!(len0 >= lenl && len0 - lenl <= 1, "balanced within one");
+                assert_eq!(lo0, 0);
+                assert_eq!(lol + lenl, num_blocks);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_kernel_samples_only_its_range_and_steps_like_inner() {
+        let p = ProblemSpec { n: 64, m: 32, b: 4, s: 3, ..ProblemSpec::tiny() }
+            .generate(&mut Rng::seed_from(9));
+        assert_eq!(p.spec.num_blocks(), 8);
+        let mut sharded = ShardedKernel::new(StoihtKernel::new(&p, 1.0), 1, 2);
+        assert_eq!(sharded.block_range(), (4, 4));
+        let mut rng = Rng::seed_from(11);
+        for _ in 0..64 {
+            let b = sharded.sample_block(&mut rng);
+            assert!((4..8).contains(&b), "sampled block {b} outside the owned range");
+        }
+        // Stepping is untouched: same block + estimate → same iterate as
+        // the unwrapped kernel, bit for bit.
+        let mut inner = StoihtKernel::new(&p, 1.0);
+        let (mut xa, mut xb) = (SparseIterate::zeros(p.spec.n), SparseIterate::zeros(p.spec.n));
+        let (mut ga, mut gb) = (Vec::new(), Vec::new());
+        sharded.tally_step(&mut xa, 5, &[], &mut ga);
+        inner.tally_step(&mut xb, 5, &[], &mut gb);
+        assert_eq!(ga, gb);
+        let bits = |x: &SparseIterate<f64>| {
+            x.values().iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        };
+        assert_eq!(bits(&xa), bits(&xb));
     }
 
     fn check_residual_contract<K: SupportKernel>(p: &Problem, kernel: &mut K, name: &str) {

@@ -21,7 +21,7 @@ pub mod stoiht;
 
 pub use cosamp::cosamp;
 pub use iht::iht;
-pub use kernel::{Alg, SupportKernel};
+pub use kernel::{shard_block_range, Alg, ShardedKernel, SupportKernel};
 pub use omp::omp;
 pub use stogradmp::{stogradmp, stogradmp_step, StoGradMpKernel};
 pub use stoiht::{make_oracle, stoiht, stoiht_with_oracle, StoihtKernel};

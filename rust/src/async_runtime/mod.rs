@@ -127,44 +127,101 @@ pub(crate) fn drive_worker<K: SupportKernel>(
     stop: &AtomicBool,
     counter: &AtomicU64,
 ) -> Option<f64> {
+    let mut driver = WorkerDriver::new();
+    let upto = opts.max_local_iters as u64;
+    driver.drive(step, x, s, opts, period, rng, tally, tally, stop, counter, upto)
+}
+
+/// The resumable form of [`drive_worker`]: per-worker scratch plus the
+/// local iteration cursor, so a caller can run the Algorithm-2 loop in
+/// segments — which is how [`crate::service::ShardedPool`] interleaves
+/// `E`-iteration chunks with exchange rounds without perturbing the
+/// single-tally loop (the `drive_worker` wrapper above runs one
+/// full-length segment and is bit-identical to the pre-refactor body).
+pub(crate) struct WorkerDriver {
     // Reused per-iteration buffers — the loop below does no heap
     // allocation once these reach steady-state capacity.
-    let mut gamma: Vec<usize> = Vec::new();
-    let mut prev_gamma: Vec<usize> = Vec::new();
-    let mut estimate: Vec<usize> = Vec::new();
-    let mut tally_scratch: Vec<i64> = Vec::new();
-    let mut resid_scratch: Vec<f64> = Vec::new();
-    for t in 1..=opts.max_local_iters as u64 {
-        // Acquire: pairs with the winner's Release store so the drain
-        // observes the published ExitInfo (the mutex would suffice, but
-        // the flag is also the cheap fast-path check).
-        if stop.load(Ordering::Acquire) {
-            break;
-        }
-        // read: T̃ = supp_s(φ) — racy by design.
-        tally.estimate_into(s, &mut tally_scratch, &mut estimate);
-        let block = step.sample_block(rng);
-        // slow-core emulation: burn (period-1) identify phases.
-        for _ in 1..period {
-            step.burn(x, block);
-        }
-        step.tally_step(x, block, &estimate, &mut gamma);
-        // update tally: φ_Γt += t, φ_Γ(t-1) -= t-1 (atomic RMWs).
-        tally.commit(&gamma, &prev_gamma, t);
-        std::mem::swap(&mut prev_gamma, &mut gamma);
-        // Relaxed: progress telemetry only; readers join (or quiesce)
-        // before trusting the final value.
-        counter.store(t, Ordering::Relaxed);
-        if t as usize % opts.check_every == 0 {
-            // The kernel's sparse exit check over x's support
-            // (Γ^t ∪ T̃ for StoIHT, the pruned Γ^t for GradMP).
-            let r = step.residual(x, &mut resid_scratch);
-            if r < opts.tolerance {
-                return Some(r);
-            }
+    gamma: Vec<usize>,
+    prev_gamma: Vec<usize>,
+    estimate: Vec<usize>,
+    tally_scratch: Vec<i64>,
+    resid_scratch: Vec<f64>,
+    /// Next local iteration to run (`t` starts at 1).
+    t: u64,
+}
+
+impl WorkerDriver {
+    pub(crate) fn new() -> WorkerDriver {
+        WorkerDriver {
+            gamma: Vec::new(),
+            prev_gamma: Vec::new(),
+            estimate: Vec::new(),
+            tally_scratch: Vec::new(),
+            resid_scratch: Vec::new(),
+            t: 1,
         }
     }
-    None
+
+    /// Local iterations completed so far.
+    pub(crate) fn local_iters(&self) -> u64 {
+        self.t - 1
+    }
+
+    /// Run local iterations up to and including `upto` (the caller also
+    /// caps at `opts.max_local_iters`). Estimates are read from `read`
+    /// and votes committed to `vote` — the same tally for the
+    /// single-tally runtimes; a shard splits them under leader-merge,
+    /// where the read side is a frozen merged view between exchanges.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn drive<K: SupportKernel>(
+        &mut self,
+        step: &mut K,
+        x: &mut SparseIterate<f64>,
+        s: usize,
+        opts: &AsyncOpts,
+        period: usize,
+        rng: &mut Rng,
+        read: &AtomicTally,
+        vote: &AtomicTally,
+        stop: &AtomicBool,
+        counter: &AtomicU64,
+        upto: u64,
+    ) -> Option<f64> {
+        let upto = upto.min(opts.max_local_iters as u64);
+        while self.t <= upto {
+            let t = self.t;
+            // Acquire: pairs with the winner's Release store so the drain
+            // observes the published ExitInfo (the mutex would suffice, but
+            // the flag is also the cheap fast-path check).
+            if stop.load(Ordering::Acquire) {
+                break;
+            }
+            // read: T̃ = supp_s(φ) — racy by design.
+            read.estimate_into(s, &mut self.tally_scratch, &mut self.estimate);
+            let block = step.sample_block(rng);
+            // slow-core emulation: burn (period-1) identify phases.
+            for _ in 1..period {
+                step.burn(x, block);
+            }
+            step.tally_step(x, block, &self.estimate, &mut self.gamma);
+            // update tally: φ_Γt += t, φ_Γ(t-1) -= t-1 (atomic RMWs).
+            vote.commit(&self.gamma, &self.prev_gamma, t);
+            std::mem::swap(&mut self.prev_gamma, &mut self.gamma);
+            // Relaxed: progress telemetry only; readers join (or quiesce)
+            // before trusting the final value.
+            counter.store(t, Ordering::Relaxed);
+            self.t += 1;
+            if t as usize % opts.check_every == 0 {
+                // The kernel's sparse exit check over x's support
+                // (Γ^t ∪ T̃ for StoIHT, the pruned Γ^t for GradMP).
+                let r = step.residual(x, &mut self.resid_scratch);
+                if r < opts.tolerance {
+                    return Some(r);
+                }
+            }
+        }
+        None
+    }
 }
 
 /// Run asynchronous StoIHT on `cores` OS threads (native compute).

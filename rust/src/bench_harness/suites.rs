@@ -4,7 +4,7 @@
 //! registers [`BenchSpec`]s into a [`Suite`]; the `cargo bench` binaries
 //! (`rust/benches/*.rs`) and the `astir bench` CLI both execute suites
 //! from this registry, so a perf number means the same thing however it
-//! was produced. Ten suites, one per bench binary:
+//! was produced. Eleven suites, one per bench binary:
 //!
 //! * `hot_path` — kernel microbenches: roofline triad, gemv/proxy
 //!   primitives, top-s + tally ops, full Alg.-2 steps, dense-vs-sparse at
@@ -27,6 +27,11 @@
 //!   Poisson arrivals at two offered rates, recording the window wall
 //!   time plus the server's own p50/p99 request latency, with a warm
 //!   operator-cache hit-ratio assertion.
+//! * `sharded` — the bounded-staleness sharded tally: Monte-Carlo
+//!   steps-to-converge over the `S × E` grid (`S ∈ {1,2,4,8}` shards,
+//!   exchange every `E ∈ {1,4,16,64}` steps; `S = 1` is the unsharded
+//!   reference), emitted as one recovery-vs-staleness table, plus a
+//!   real-thread [`crate::service::ShardedPool`] wallclock point.
 //!
 //! Smoke mode shrinks the Monte-Carlo budgets to CI size; full mode keeps
 //! the paper-ish defaults (`ASTIR_BENCH_TRIALS` raises them further).
@@ -51,8 +56,8 @@ use crate::rng::Rng;
 use crate::service::api::JobRequest;
 use crate::service::server::{ServeOpts, Server};
 use crate::service::wire::Client;
-use crate::service::{recover_batch_stoiht, solve_job, RecoveryPool};
-use crate::sim::{SimOpts, SimOutcome, SpeedSchedule};
+use crate::service::{recover_batch_stoiht, solve_job, RecoveryPool, ShardedPool};
+use crate::sim::{simulate_sharded, ShardOpts, SimOpts, SimOutcome, SpeedSchedule};
 use crate::support::{top_s_into, union};
 use crate::tally::{AtomicTally, TallyWeighting};
 
@@ -120,6 +125,11 @@ pub fn registry() -> Vec<SuiteDef> {
             name: "loadgen",
             about: "astir serve over loopback — open-loop Poisson latency + operator cache",
             register: loadgen_suite,
+        },
+        SuiteDef {
+            name: "sharded",
+            about: "sharded tally — steps to converge over the S x E staleness grid",
+            register: sharded_suite,
         },
     ]
 }
@@ -1375,6 +1385,105 @@ fn loadgen_suite(suite: &mut Suite) {
     loadgen_run_rate(suite, &reqs, 80.0, hi, hi_p50, hi_p99);
 }
 
+// ----------------------------------------------------------------- sharded
+
+/// The `sharded` suite — recovery vs staleness for the bounded-staleness
+/// sharded-tally design. One Monte-Carlo bench per shard count `S`, each
+/// sweeping the exchange period `E`; all 16 grid cells land in a single
+/// `sharded_staleness` results table through the standard report layer.
+/// The `S = 1` row is the unsharded single-tally simulator by construction
+/// (pinned bit-identical in `sim::tests`), so the table reads as "what
+/// does sharding + staleness cost relative to the paper's shared tally".
+/// A final real-thread point runs [`ShardedPool`] at `S = 4, E = 16`.
+fn sharded_suite(suite: &mut Suite) {
+    let cfg = experiment_cfg(suite.mode(), 20, 2);
+    let mode = suite.mode();
+    const SHARDS: [usize; 4] = [1, 2, 4, 8];
+    const PERIODS: [usize; 4] = [1, 4, 16, 64];
+    let grid_specs: Vec<(usize, BenchSpec)> =
+        SHARDS.iter().map(|&s| (s, expspec(&format!("staleness_s{s}"), &cfg))).collect();
+    let pool_spec = expspec("pool_s4", &cfg);
+    if suite.is_dry_run() {
+        for (_, spec) in grid_specs {
+            suite.bench(spec, || {});
+        }
+        suite.bench(pool_spec, || {});
+        return;
+    }
+    if grid_specs.iter().any(|(_, sp)| suite.wants(sp)) || suite.wants(&pool_spec) {
+        banner("sharded tally — steps to converge vs staleness bound E", &cfg);
+    }
+
+    let mut table = Table::new(&["shards", "exchange_period", "mean_steps", "std_steps", "conv"]);
+    for (s, spec) in grid_specs {
+        let mut rows = None;
+        suite.bench(spec, || {
+            let mut out_rows = Vec::new();
+            for &e in &PERIODS {
+                let so = ShardOpts { shards: s, exchange_period: e, ..Default::default() };
+                let sim_opts = SimOpts { max_steps: cfg.max_iters, ..Default::default() };
+                let outs: Vec<SimOutcome> =
+                    run_trials(cfg.trials, cfg.trial_threads, cfg.seed, |_i, rng| {
+                        // The Leader's monte_carlo_sim derivation: fresh
+                        // problem from the trial stream, solver RNG split.
+                        let p = cfg.problem.generate(rng);
+                        let mut sim_rng = rng.split(0x519);
+                        simulate_sharded(&p, &so, &SpeedSchedule::AllFast, &sim_opts, &mut sim_rng)
+                    });
+                let steps: Vec<f64> = outs.iter().map(|o| o.steps as f64).collect();
+                let st = stats(&steps);
+                let conv =
+                    outs.iter().filter(|o| o.converged).count() as f64 / outs.len().max(1) as f64;
+                out_rows.push(vec![s as f64, e as f64, st.mean, st.std, conv]);
+            }
+            rows = Some(out_rows);
+        });
+        if let Some(rows) = rows {
+            for r in rows {
+                println!(
+                    "  S={:.0} E={:<3.0} {:7.1} ± {:6.1} steps (conv {:.0}%)",
+                    r[0],
+                    r[1],
+                    r[2],
+                    r[3],
+                    100.0 * r[4]
+                );
+                table.push_row(r);
+            }
+        }
+    }
+    if !table.rows.is_empty() {
+        report::emit(
+            &results_name(mode, "sharded_staleness"),
+            "sharded tally — time steps to converge over the S x E grid (all fast)",
+            &table,
+        );
+    }
+
+    // Real-thread wallclock: the ShardedPool at a mid-grid point. The
+    // problem is generated OUTSIDE the timed closure — the CI-gated
+    // telemetry must hold solve time only.
+    if !suite.wants(&pool_spec) {
+        return;
+    }
+    let mut rng = Rng::seed_from(cfg.seed);
+    let p = cfg.problem.generate(&mut rng);
+    let mut outcome = None;
+    suite.bench(pool_spec, || {
+        let opts = AsyncOpts {
+            tolerance: cfg.tolerance,
+            max_local_iters: cfg.max_iters,
+            ..Default::default()
+        };
+        let so = ShardOpts { shards: 4, exchange_period: 16, ..Default::default() };
+        let out = ShardedPool::new(so).run(&p, Alg::Stoiht, &opts, cfg.seed ^ 4);
+        outcome = Some((out.converged(), out.rounds, out.wall));
+    });
+    if let Some((converged, rounds, wall)) = outcome {
+        println!("  => pool S=4 E=16: wall {wall:.1?}, {rounds} round(s), converged={converged}");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1394,7 +1503,8 @@ mod tests {
                 "stogradmp_async",
                 "large_n",
                 "throughput",
-                "loadgen"
+                "loadgen",
+                "sharded"
             ]
         );
         for n in &names {
@@ -1498,7 +1608,7 @@ mod tests {
         let opts = RunOpts { mode: Mode::Smoke, filter: None, skip_jumbo: true, dry_run: true };
         let report = run_all(&opts);
         assert_eq!(report.schema, SCHEMA);
-        assert_eq!(report.suites.len(), 10);
+        assert_eq!(report.suites.len(), 11);
         for s in &report.suites {
             assert!(
                 !s.benches.is_empty() || !s.skipped.is_empty(),
@@ -1537,6 +1647,31 @@ mod tests {
             .filter(|s| s.name != "stogradmp_async")
             .map(|s| s.benches.len())
             .sum();
+        assert_eq!(elsewhere, 0);
+    }
+
+    #[test]
+    fn sharded_suite_registers_the_staleness_grid() {
+        // `astir bench --filter sharded` must reach every shard count of
+        // the staleness grid plus the real-thread pool point — the CI
+        // baseline gate covers them only if the specs register identically
+        // under --list, --filter, and smoke runs.
+        let opts = RunOpts {
+            mode: Mode::Smoke,
+            filter: Some("sharded".to_string()),
+            skip_jumbo: true,
+            dry_run: true,
+        };
+        let report = run_all(&opts);
+        let sh = report.suites.iter().find(|s| s.name == "sharded").unwrap();
+        let names: Vec<&str> = sh.benches.iter().map(|b| b.name.as_str()).collect();
+        for e in ["staleness_s1", "staleness_s2", "staleness_s4", "staleness_s8", "pool_s4"] {
+            assert!(names.contains(&e), "missing {e} in {names:?}");
+        }
+        assert!(sh.benches.iter().all(|b| b.scale == Scale::Standard));
+        // nothing outside the new suite matches the filter
+        let elsewhere: usize =
+            report.suites.iter().filter(|s| s.name != "sharded").map(|s| s.benches.len()).sum();
         assert_eq!(elsewhere, 0);
     }
 

@@ -13,6 +13,8 @@ pub use toml::{parse_toml, TomlDoc, TomlError, Value};
 
 use crate::algorithms::Alg;
 use crate::problem::{Ensemble, ProblemSpec, SignalModel};
+use crate::sim::ShardOpts;
+use crate::tally::ExchangeProtocol;
 
 /// Recovery-service settings (`astir batch`, the persistent
 /// [`crate::service::RecoveryPool`]): TOML `[service]` section, CLI
@@ -60,6 +62,38 @@ impl Default for ServeConfig {
     }
 }
 
+/// Sharded-tally settings (`astir async --shards`, driving
+/// [`crate::service::ShardedPool`] and the sharded simulator): TOML
+/// `[shard]` section, CLI `--shards/--exchange-period/--exchange-protocol`
+/// overrides.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardConfig {
+    /// In-process shards `S` (1 = the unsharded single-tally path).
+    pub shards: usize,
+    /// Staleness bound `E`: exchange support votes every `E` local steps.
+    pub exchange_period: usize,
+    /// Exchange protocol (all-to-all gossip or leader merge).
+    pub protocol: ExchangeProtocol,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        let d = ShardOpts::default();
+        ShardConfig { shards: d.shards, exchange_period: d.exchange_period, protocol: d.protocol }
+    }
+}
+
+impl ShardConfig {
+    /// The runtime sharding axes this config denotes.
+    pub fn shard_opts(&self) -> ShardOpts {
+        ShardOpts {
+            shards: self.shards,
+            exchange_period: self.exchange_period,
+            protocol: self.protocol,
+        }
+    }
+}
+
 /// Typed experiment configuration (see `configs/*.toml` for examples).
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -86,6 +120,8 @@ pub struct ExperimentConfig {
     pub service: ServiceConfig,
     /// Network front-end settings (`astir serve`).
     pub serve: ServeConfig,
+    /// Sharded-tally settings (`astir async --shards`).
+    pub shard: ShardConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -103,6 +139,7 @@ impl Default for ExperimentConfig {
             trial_threads: default_trial_threads(),
             service: ServiceConfig::default(),
             serve: ServeConfig::default(),
+            shard: ShardConfig::default(),
         }
     }
 }
@@ -119,8 +156,8 @@ impl ExperimentConfig {
         // A misspelled section ("[services]") must not silently yield
         // defaults; the per-key strictness below only sees known sections.
         for name in doc.section_names() {
-            if !matches!(name, "" | "problem" | "service" | "serve") {
-                return Err(format!("unknown section `[{name}]` (problem|service|serve)"));
+            if !matches!(name, "" | "problem" | "service" | "serve" | "shard") {
+                return Err(format!("unknown section `[{name}]` (problem|service|serve|shard)"));
             }
         }
         let mut cfg = ExperimentConfig::default();
@@ -225,6 +262,26 @@ impl ExperimentConfig {
             }
         }
 
+        for (key, value) in doc.section("shard") {
+            let s = &mut cfg.shard;
+            match key.as_str() {
+                "shards" => {
+                    s.shards = value.as_usize().ok_or("shard.shards must be a positive integer")?
+                }
+                "exchange_period" => {
+                    s.exchange_period = value
+                        .as_usize()
+                        .ok_or("shard.exchange_period must be a positive integer")?
+                }
+                "protocol" => {
+                    let p = value.as_str().ok_or("shard.protocol must be a string")?;
+                    s.protocol = ExchangeProtocol::parse(p)
+                        .ok_or_else(|| format!("unknown shard protocol `{p}` (gossip|leader)"))?;
+                }
+                other => return Err(format!("unknown shard key `{other}`")),
+            }
+        }
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -274,6 +331,9 @@ impl ExperimentConfig {
         if self.serve.max_inflight == 0 {
             return Err("serve.max_inflight must be positive".into());
         }
+        // Reuse the runtime-side checks ("shards must be >= 1", …) with
+        // the section name prefixed, matching the other error strings.
+        self.shard.shard_opts().validate().map_err(|e| format!("shard.{e}"))?;
         Ok(())
     }
 }
@@ -404,6 +464,32 @@ dense_a = false
         assert!(ExperimentConfig::from_toml("[serve]\naddr = \"\"").is_err());
         assert!(ExperimentConfig::from_toml("[serve]\nbatch_window_ms = \"fast\"").is_err());
         assert!(ExperimentConfig::from_toml("[serve]\nport = 80").is_err());
+    }
+
+    #[test]
+    fn shard_section_parses_and_validates() {
+        let text = "[shard]\nshards = 4\nexchange_period = 8\nprotocol = \"leader\"";
+        let c = ExperimentConfig::from_toml(text).unwrap();
+        let expect = ShardConfig {
+            shards: 4,
+            exchange_period: 8,
+            protocol: ExchangeProtocol::LeaderMerge,
+        };
+        assert_eq!(c.shard, expect);
+        assert_eq!(c.shard.shard_opts().shards, 4);
+        // Defaults: unsharded, moderate staleness, gossip.
+        let d = ExperimentConfig::default();
+        assert_eq!(d.shard, ShardConfig::default());
+        assert_eq!(d.shard.shards, 1);
+        assert_eq!(d.shard.exchange_period, 16);
+        assert_eq!(d.shard.protocol, ExchangeProtocol::Gossip);
+        // "leader_merge" is accepted as a spelling of "leader".
+        let alias = ExperimentConfig::from_toml("[shard]\nprotocol = \"leader_merge\"").unwrap();
+        assert_eq!(alias.shard.protocol, ExchangeProtocol::LeaderMerge);
+        assert!(ExperimentConfig::from_toml("[shard]\nshards = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[shard]\nexchange_period = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[shard]\nprotocol = \"pigeon\"").is_err());
+        assert!(ExperimentConfig::from_toml("[shard]\nperiod = 2").is_err());
     }
 
     #[test]

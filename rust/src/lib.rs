@@ -28,11 +28,11 @@
 //! | [`problem`] | compressed-sensing problem generation (matrix ensembles, sparse signals, block partitions) |
 //! | [`support`] | top-`s` support identification, unions, accuracy metrics |
 //! | [`algorithms`] | IHT, StoIHT, OMP, CoSaMP, StoGradMP baselines |
-//! | [`tally`] | the shared atomic tally vector `φ` (the paper's §III) |
-//! | [`sim`] | discrete-time multicore simulator (paper §IV-B semantics) |
-//! | [`async_runtime`] | real-thread asynchronous execution with shared tally |
+//! | [`tally`] | the shared atomic tally vector `φ` (the paper's §III) + sharded exchange: canonical vote merges, `ExchangeBoard` rendezvous |
+//! | [`sim`] | discrete-time multicore simulator (paper §IV-B semantics), incl. sharded-tally axes (shards × exchange period) |
+//! | [`async_runtime`] | real-thread asynchronous execution with shared tally; resumable `WorkerDriver` loop |
 //! | [`coordinator`] | leader/worker orchestration, trial batching, halting |
-//! | [`service`] | persistent recovery pool + batched MMV recovery (the serving layer) |
+//! | [`service`] | persistent recovery pool + batched MMV recovery + bounded-staleness `ShardedPool` (the serving layer) |
 //! | [`service::api`] | versioned typed job API (`JobRequest`/`JobResponse`/`ServeError`, `api_version: 1`) |
 //! | [`service::wire`] | length-prefixed JSON framing + the blocking TCP [`service::wire::Client`] |
 //! | [`service::server`] | `astir serve` — TCP front-end with operator cache, deadline micro-batching, admission control |

@@ -15,6 +15,7 @@
 //! astir run --alg stoiht --backend pjrt
 //! astir async --cores 8              # real-thread asynchronous StoIHT
 //! astir async --alg stogradmp        # ... or any other SupportKernel
+//! astir async --shards 4 --exchange-period 16   # sharded tally, bounded staleness
 //! astir batch --jobs 32 --workers 8  # persistent recovery pool, shared operator
 //! astir batch --batch 8              # MMV lockstep: 8 signals/job, shared tally
 //! astir serve --addr 127.0.0.1:7878  # zero-dep TCP front-end (typed v1 job API)
@@ -43,8 +44,9 @@ use astir::rng::Rng;
 use astir::runtime::ArtifactStore;
 use astir::service::api::{JobRequest, JobResponse};
 use astir::service::server::{ServeOpts, Server};
-use astir::service::{recover_batch_stoiht, solve_job, RecoveryPool};
+use astir::service::{recover_batch_stoiht, solve_job, RecoveryPool, ShardedPool};
 use astir::sim::SpeedSchedule;
+use astir::tally::ExchangeProtocol;
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -186,6 +188,18 @@ fn run(args: Vec<String>) -> Result<(), String> {
                 .unwrap_or_else(|| "4".into())
                 .parse()
                 .map_err(|e| format!("--cores: {e}"))?;
+            if let Some(v) = flags.take("shards")? {
+                cfg.shard.shards = v.parse().map_err(|e| format!("--shards: {e}"))?;
+            }
+            if let Some(v) = flags.take("exchange-period")? {
+                cfg.shard.exchange_period =
+                    v.parse().map_err(|e| format!("--exchange-period: {e}"))?;
+            }
+            if let Some(v) = flags.take("exchange-protocol")? {
+                cfg.shard.protocol = ExchangeProtocol::parse(&v)
+                    .ok_or_else(|| format!("unknown --exchange-protocol `{v}` (gossip|leader)"))?;
+            }
+            cfg.validate()?;
             let schedule = take_schedule(&mut flags)?;
             flags.finish()?;
             run_async_cmd(&cfg, cores, &schedule)?;
@@ -638,11 +652,46 @@ fn run_async_cmd(
         schedule: schedule.clone(),
         ..Default::default()
     };
+    let seed = cfg.seed ^ 0xA5;
+    if cfg.shard.shards > 1 {
+        // Sharded-tally path: shards are the threads; --cores does not
+        // apply (each shard is one worker against its local tally).
+        let sh = cfg.shard.shard_opts();
+        let nb = problem.spec.num_blocks();
+        if sh.shards > nb {
+            return Err(format!(
+                "--shards {} exceeds the {} measurement blocks (m/b); lower --shards or --b",
+                sh.shards, nb
+            ));
+        }
+        println!(
+            "sharded asynchronous {}: shards={} exchange_period={} protocol={} schedule={:?}",
+            cfg.alg.as_str(),
+            sh.shards,
+            sh.exchange_period,
+            sh.protocol.as_str(),
+            schedule
+        );
+        let out = ShardedPool::new(sh).run(&problem, cfg.alg, &opts, seed);
+        println!(
+            "converged={} winner={:?} rounds={} wall={:.1?}",
+            out.converged(),
+            out.winner,
+            out.rounds,
+            out.wall
+        );
+        for (k, s) in out.shards.iter().enumerate() {
+            println!(
+                "  shard {k}: converged={} iters={} residual={:.3e} error={:.3e}",
+                s.converged, s.iters, s.residual, s.final_error
+            );
+        }
+        return Ok(());
+    }
     println!(
         "real-thread asynchronous {}: cores={cores} schedule={schedule:?}",
         cfg.alg.as_str()
     );
-    let seed = cfg.seed ^ 0xA5;
     let out = match cfg.alg {
         Alg::Stoiht => run_async(&problem, cores, &opts, seed),
         Alg::StoGradMp => run_async_with(&problem, cores, &opts, seed, StoGradMpKernel::new),
@@ -914,6 +963,15 @@ ASYNC / FIG2 FLAGS
   --alg stoiht|stogradmp  which SupportKernel the async layers drive
   --schedule NAME         all-fast | half-slow
   --period K              slow-core period for half-slow (default 4)
+
+SHARD FLAGS (astir async; TOML [shard] section: shards/exchange_period/protocol)
+  --shards S              partition the measurement blocks over S shard threads,
+                          each voting into its own LOCAL tally (1 = unsharded,
+                          bit-identical to the single-tally path; default 1)
+  --exchange-period E     staleness bound: shards exchange support votes every E
+                          local steps through a barrier (default 16)
+  --exchange-protocol P   gossip (live local votes + stale peer sums) | leader
+                          (all shards read one frozen merged view; default gossip)
 
 BATCH FLAGS (astir batch; TOML [service] section: workers/jobs/batch)
   --jobs N             recovery jobs to serve (default 16)

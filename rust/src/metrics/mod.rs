@@ -141,12 +141,17 @@ pub fn stats(sample: &[f64]) -> Stats {
 }
 
 /// Empirical quantile (linear interpolation between order statistics).
+///
+/// NaN policy: non-finite samples are ignored — a single poisoned latency
+/// measurement must not take down a stats endpoint (`partial_cmp().unwrap()`
+/// used to panic here). If no finite sample remains, returns NaN, which the
+/// JSON layer renders as `null` via [`json_f64`].
 pub fn quantile(sample: &[f64], q: f64) -> f64 {
-    if sample.is_empty() {
+    let mut v: Vec<f64> = sample.iter().copied().filter(|x| x.is_finite()).collect();
+    if v.is_empty() {
         return f64::NAN;
     }
-    let mut v = sample.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -182,7 +187,13 @@ impl Table {
         out.push_str(&self.columns.join(","));
         out.push('\n');
         for r in &self.rows {
-            let cells: Vec<String> = r.iter().map(|v| format!("{v}")).collect();
+            // Non-finite values have no portable CSV spelling (`NaN`/`inf`
+            // literals break downstream readers) — emit an empty cell, the
+            // CSV analogue of the JSON layer's `null`.
+            let cells: Vec<String> = r
+                .iter()
+                .map(|v| if v.is_finite() { format!("{v}") } else { String::new() })
+                .collect();
             out.push_str(&cells.join(","));
             out.push('\n');
         }
@@ -305,13 +316,15 @@ pub fn json_f64(v: f64) -> String {
 }
 
 /// Format with ~`sig` significant digits, avoiding exponent noise for
-/// mid-range values.
+/// mid-range values. Non-finite values render as an empty cell, consistent
+/// with [`Table::to_csv`] (and with `null` in JSON via [`json_f64`]) — the
+/// literal `NaN`/`inf` spellings used to leak into exported tables.
 pub fn format_sig(v: f64, sig: usize) -> String {
+    if !v.is_finite() {
+        return String::new();
+    }
     if v == 0.0 {
         return "0".to_string();
-    }
-    if !v.is_finite() {
-        return format!("{v}");
     }
     let a = v.abs();
     if (1e-4..1e7).contains(&a) {
@@ -403,7 +416,36 @@ mod tests {
         assert_eq!(format_sig(0.0, 4), "0");
         assert_eq!(format_sig(1.0, 3), "1.00");
         assert!(format_sig(1e-9, 3).contains('e'));
-        assert!(format_sig(f64::INFINITY, 3).contains("inf"));
+        // Non-finite values render as empty cells, never literal NaN/inf.
+        assert_eq!(format_sig(f64::INFINITY, 3), "");
+        assert_eq!(format_sig(f64::NEG_INFINITY, 3), "");
+        assert_eq!(format_sig(f64::NAN, 3), "");
+    }
+
+    #[test]
+    fn quantile_ignores_non_finite_samples() {
+        // Regression: a single NaN used to panic the sort's partial_cmp.
+        let poisoned = [2.0, f64::NAN, 1.0, 3.0, f64::INFINITY, 4.0];
+        assert_eq!(quantile(&poisoned, 0.5), 2.5);
+        assert_eq!(quantile(&poisoned, 0.0), 1.0);
+        assert_eq!(quantile(&poisoned, 1.0), 4.0);
+        // All-NaN (or otherwise non-finite) collapses to NaN, not a panic.
+        assert!(quantile(&[f64::NAN, f64::NAN], 0.9).is_nan());
+        assert!(quantile(&[f64::NEG_INFINITY], 0.5).is_nan());
+        // stats() routes its median through quantile — same resilience.
+        let s = stats(&[1.0, f64::NAN, 3.0]);
+        assert_eq!(s.median, 2.0);
+    }
+
+    #[test]
+    fn csv_renders_non_finite_as_empty_cell() {
+        let mut t = Table::new(&["a", "b", "c"]);
+        t.push_row(vec![1.0, f64::NAN, f64::INFINITY]);
+        let csv = t.to_csv();
+        assert!(csv.contains("1,,\n"), "expected empty cells, got: {csv}");
+        assert!(!csv.contains("NaN") && !csv.contains("inf"));
+        // JSON stays `null`, consistent with json_f64.
+        assert!(t.to_json().contains("[1.0,null,null]"));
     }
 
     #[test]

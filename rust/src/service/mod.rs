@@ -21,6 +21,14 @@
 //!   `drive_worker` loop body as the real-thread runtime: a pool job's
 //!   result is bit-for-bit what `run_async_with(problem, 1, …)` returns,
 //!   minus the thread spawn (pinned by `rust/tests/service_pool.rs`).
+//! * [`ShardedPool`] — bounded-staleness sharded recovery: `S` scoped
+//!   threads, each owning a contiguous slice of the measurement blocks and
+//!   a **local** tally, running the same `drive_worker` loop body in
+//!   `E`-iteration segments between barrier-synchronized support exchanges
+//!   (gossip or leader-merge, see [`crate::tally::ExchangeBoard`]). No
+//!   early-stop flag plus commutative canonical-order merges make the
+//!   results bit-identical at any thread interleaving; one shard delegates
+//!   to [`solve_job_with`], so `S = 1` is the single-tally result exactly.
 //! * [`recover_batch_stoiht`] — lockstep batched recovery of `B` signals
 //!   sharing one operator (`Problem::shares_operator_with`): each time
 //!   step samples **one** block and performs **one** multi-RHS fused
@@ -54,14 +62,17 @@ use std::time::{Duration, Instant};
 use crate::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use crate::sync::{thread, Arc, Condvar, Mutex};
 
-use crate::algorithms::{Alg, StoGradMpKernel, StoihtKernel, SupportKernel};
-use crate::async_runtime::{drive_worker, AsyncOpts};
+use crate::algorithms::{Alg, ShardedKernel, StoGradMpKernel, StoihtKernel, SupportKernel};
+use crate::async_runtime::{drive_worker, AsyncOpts, WorkerDriver};
 use crate::coordinator::{split_rngs, ResultSlots};
 use crate::linalg::{MeasureOp, ProxyCol, SparseIterate};
 use crate::problem::Problem;
 use crate::rng::Rng;
+use crate::sim::ShardOpts;
 use crate::support::{top_s_into, union_into};
-use crate::tally::{positive_top_s_into, AtomicTally, LocalTally};
+use crate::tally::{
+    positive_top_s_into, AtomicTally, ExchangeBoard, ExchangeProtocol, LocalTally,
+};
 
 // ------------------------------------------------------------------- pool
 
@@ -412,6 +423,239 @@ pub fn solve_job(problem: &Problem, alg: Alg, opts: &AsyncOpts, seed: u64) -> Jo
     }
 }
 
+// ------------------------------------------------------------ sharded pool
+
+/// Outcome of a [`ShardedPool`] run: one [`JobOutcome`] per shard plus the
+/// canonical winner and the number of exchange rounds executed.
+#[derive(Clone, Debug)]
+pub struct ShardedOutcome {
+    /// Per-shard outcomes, indexed by shard id.
+    pub shards: Vec<JobOutcome>,
+    /// First shard (by local iterations, ties to the lower id) to meet the
+    /// tolerance — a schedule-independent choice, unlike the real-thread
+    /// runtime's wall-clock race winner.
+    pub winner: Option<usize>,
+    /// Barrier-synchronized exchange rounds executed (0 for one shard,
+    /// which never exchanges).
+    pub rounds: u64,
+    /// Wallclock for the whole run.
+    pub wall: Duration,
+}
+
+impl ShardedOutcome {
+    /// Did any shard meet the tolerance?
+    pub fn converged(&self) -> bool {
+        self.winner.is_some()
+    }
+
+    /// The winning shard's outcome, when one converged.
+    pub fn winning(&self) -> Option<&JobOutcome> {
+        self.winner.map(|k| &self.shards[k])
+    }
+}
+
+/// Real-thread sharded-tally recovery: `S` shards, each a scoped OS thread
+/// owning a contiguous slice of the measurement blocks (via
+/// [`ShardedKernel`]) and a **local** tally, running the identical
+/// [`WorkerDriver`] loop body as the single-tally runtimes in
+/// `E`-iteration segments between barrier-synchronized support exchanges
+/// on a [`crate::tally::ExchangeBoard`].
+///
+/// Determinism: shard `k`'s RNG derives from the master seed and `k` only
+/// (`Rng::seed_from(seed).split(k)` — the `run_async_with` worker scheme);
+/// no shard ever interrupts another (there is no early-stop flag), so each
+/// shard's iteration sequence depends only on `(S, E, protocol, seed)`;
+/// and every exchange merge is a commutative `i64` sum applied in
+/// canonical shard order under the board's barriers. Results are therefore
+/// **bit-identical** at any thread interleaving, and the winner is chosen
+/// canonically (fewest local iterations, ties to the lower shard id)
+/// rather than by wall-clock race. With one shard the run delegates to
+/// [`solve_job_with`], so it is bit-for-bit the single-tally result.
+pub struct ShardedPool {
+    opts: ShardOpts,
+}
+
+impl ShardedPool {
+    /// Validate and capture the sharding axes.
+    pub fn new(opts: ShardOpts) -> Self {
+        opts.validate().expect("invalid shard options");
+        ShardedPool { opts }
+    }
+
+    /// The sharding axes this pool runs with.
+    pub fn shard_opts(&self) -> &ShardOpts {
+        &self.opts
+    }
+
+    /// [`ShardedPool::run_with`] dispatched over the config-level
+    /// algorithm selector, matching [`solve_job`].
+    pub fn run(&self, problem: &Problem, alg: Alg, opts: &AsyncOpts, seed: u64) -> ShardedOutcome {
+        match alg {
+            Alg::Stoiht => {
+                self.run_with(problem, opts, seed, |p| StoihtKernel::new(p, opts.gamma))
+            }
+            Alg::StoGradMp => self.run_with(problem, opts, seed, StoGradMpKernel::new),
+        }
+    }
+
+    /// Run one problem across the configured shards with a caller-built
+    /// kernel per shard (`make_step` is invoked once on each shard's own
+    /// thread, exactly like `run_async_with`'s per-worker factories).
+    pub fn run_with<'p, K, F>(
+        &self,
+        problem: &'p Problem,
+        opts: &AsyncOpts,
+        seed: u64,
+        make_step: F,
+    ) -> ShardedOutcome
+    where
+        K: SupportKernel + 'p,
+        F: Fn(&'p Problem) -> K + Sync,
+    {
+        let sh = &self.opts;
+        let shards = sh.shards;
+        if shards == 1 {
+            // The unsharded path IS the single-tally job — same RNG
+            // derivation, same loop body — so delegate for bit-identity.
+            let start = Instant::now();
+            let out = solve_job_with(problem, opts, seed, make_step);
+            let winner = out.converged.then_some(0);
+            return ShardedOutcome { shards: vec![out], winner, rounds: 0, wall: start.elapsed() };
+        }
+        let spec = &problem.spec;
+        let e = sh.exchange_period as u64;
+        let periods = opts.schedule.periods(shards);
+        let board = ExchangeBoard::new(shards, spec.n);
+        // Never raised: every shard runs to its own completion so that the
+        // outcome is independent of thread scheduling.
+        let stop = AtomicBool::new(false);
+        let slots: ResultSlots<(JobOutcome, u64)> = ResultSlots::new(shards);
+        let start = Instant::now();
+        thread::scope(|scope| {
+            for k in 0..shards {
+                let (board, stop, slots) = (&board, &stop, &slots);
+                let (make_step, periods) = (&make_step, &periods);
+                scope.spawn(move || {
+                    let mut rng = Rng::seed_from(seed).split(k as u64);
+                    let mut step = ShardedKernel::new(make_step(problem), k, shards);
+                    // Gossip reads and votes one live tally (peer sums
+                    // baked in); leader-merge votes `tally` but reads a
+                    // `frozen` merged view refreshed at each exchange.
+                    let tally = AtomicTally::new(spec.n, opts.weighting);
+                    let frozen = AtomicTally::new(spec.n, opts.weighting);
+                    let counter = AtomicU64::new(0);
+                    let mut driver = WorkerDriver::new();
+                    let mut x = SparseIterate::zeros(spec.n);
+                    let mut own_snap = vec![0i64; spec.n];
+                    // Peer votes currently baked into `tally` (gossip
+                    // only; stays zero under leader-merge).
+                    let mut peer = vec![0i64; spec.n];
+                    let mut new_peer: Vec<i64> = Vec::new();
+                    let mut merged: Vec<i64> = Vec::new();
+                    let mut delta = vec![0i64; spec.n];
+                    let mut finished = false;
+                    let mut won: Option<f64> = None;
+                    let mut wall = Duration::ZERO;
+                    let shard_start = Instant::now();
+                    let mut rounds = 0u64;
+                    loop {
+                        rounds += 1;
+                        // Own contribution = live tally minus the baked-in
+                        // peer base (a finished shard republishes the same
+                        // snapshot, keeping the merge deterministic).
+                        tally.snapshot_into(&mut own_snap);
+                        for (o, p) in own_snap.iter_mut().zip(&peer) {
+                            *o -= *p;
+                        }
+                        board.publish_and_wait(k, &own_snap, finished);
+                        // Latched at the barrier above: identical in every
+                        // shard this round, hence a deterministic exit.
+                        let done = board.finished_count();
+                        if !finished {
+                            match sh.protocol {
+                                ExchangeProtocol::Gossip => {
+                                    board.peer_sum_into(k, &mut new_peer);
+                                    for ((d, np), pb) in
+                                        delta.iter_mut().zip(&new_peer).zip(&peer)
+                                    {
+                                        *d = *np - *pb;
+                                    }
+                                    tally.add_votes(&delta);
+                                    std::mem::swap(&mut peer, &mut new_peer);
+                                }
+                                ExchangeProtocol::LeaderMerge => {
+                                    board.merged_into(&mut merged);
+                                    frozen.store_votes(&merged);
+                                }
+                            }
+                        }
+                        board.wait();
+                        if done == shards {
+                            break;
+                        }
+                        if finished {
+                            continue;
+                        }
+                        let (read, vote) = match sh.protocol {
+                            ExchangeProtocol::Gossip => (&tally, &tally),
+                            ExchangeProtocol::LeaderMerge => (&frozen, &tally),
+                        };
+                        won = driver.drive(
+                            &mut step,
+                            &mut x,
+                            spec.s,
+                            opts,
+                            periods[k],
+                            &mut rng,
+                            read,
+                            vote,
+                            stop,
+                            &counter,
+                            rounds * e,
+                        );
+                        if won.is_some() || driver.local_iters() >= opts.max_local_iters as u64 {
+                            finished = true;
+                            wall = shard_start.elapsed();
+                        }
+                    }
+                    let iters = driver.local_iters();
+                    let (converged, residual) = match won {
+                        Some(r) => (true, r),
+                        None => (false, problem.residual_norm(x.values())),
+                    };
+                    let final_error = problem.recovery_error(x.values());
+                    let out = JobOutcome {
+                        converged,
+                        iters,
+                        residual,
+                        final_error,
+                        x: x.into_values(),
+                        wall,
+                    };
+                    // Slot protocol: shard k is slot k's only writer; the
+                    // scope join below is the publication edge.
+                    slots.put(k, (out, rounds.saturating_sub(1)));
+                });
+            }
+        });
+        let mut rounds = 0u64;
+        let outs: Vec<JobOutcome> = (0..shards)
+            .map(|i| {
+                let (o, r) = slots.take(i).expect("shard produced no result");
+                rounds = r;
+                o
+            })
+            .collect();
+        let winner = outs
+            .iter()
+            .enumerate()
+            .filter(|(_, o)| o.converged)
+            .min_by_key(|&(i, o)| (o.iters, i))
+            .map(|(i, _)| i);
+        ShardedOutcome { shards: outs, winner, rounds, wall: start.elapsed() }
+    }
+}
+
 // ---------------------------------------------------------- batched (MMV)
 
 /// Outcome of one lockstep batched recovery.
@@ -572,6 +816,7 @@ pub fn recover_batch_stoiht(problems: &[Problem], opts: &AsyncOpts, seed: u64) -
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::async_runtime::{run_async, run_async_with};
     use crate::problem::ProblemSpec;
 
     fn easy(seed: u64) -> Problem {
@@ -718,6 +963,84 @@ mod tests {
         assert_eq!(ok.into_iter().map(Result::unwrap).collect::<Vec<_>>(), vec![7, 8]);
         let plain: Vec<usize> = pool.run_jobs(2, 5, |i, _| i);
         assert_eq!(plain, vec![0, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid shard options")]
+    fn sharded_pool_rejects_zero_shards() {
+        let _ = ShardedPool::new(ShardOpts { shards: 0, ..Default::default() });
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "full solve loop is too slow under Miri")]
+    fn sharded_pool_single_shard_matches_the_async_runtime_bitwise() {
+        // Acceptance pin: S = 1 sharded output is bit-identical to the
+        // single-tally path for BOTH kernels, at any exchange period.
+        let p = easy(11);
+        let opts = AsyncOpts::default();
+        for e in [1usize, 16] {
+            let so = ShardOpts { shards: 1, exchange_period: e, ..Default::default() };
+            let pool = ShardedPool::new(so);
+            for alg in [Alg::Stoiht, Alg::StoGradMp] {
+                let sharded = pool.run(&p, alg, &opts, 42);
+                let solo = match alg {
+                    Alg::Stoiht => run_async(&p, 1, &opts, 42),
+                    Alg::StoGradMp => run_async_with(&p, 1, &opts, 42, StoGradMpKernel::new),
+                };
+                assert!(solo.converged && sharded.converged(), "{alg:?} E={e}");
+                assert_eq!(sharded.rounds, 0);
+                let w = sharded.winning().unwrap();
+                assert_eq!(w.iters, solo.local_iters[0]);
+                assert_eq!(w.residual.to_bits(), solo.residual.to_bits());
+                assert_eq!(w.final_error.to_bits(), solo.final_error.to_bits());
+                assert_eq!(w.x.len(), solo.x.len());
+                for (a, b) in w.x.iter().zip(&solo.x) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "full solve loop is too slow under Miri")]
+    fn sharded_pool_runs_are_deterministic_and_converge() {
+        // Same (S, E, protocol, seed) => bitwise-identical results no
+        // matter how the OS interleaves the shard threads.
+        let p = easy(12);
+        let opts = AsyncOpts::default();
+        for protocol in [ExchangeProtocol::Gossip, ExchangeProtocol::LeaderMerge] {
+            for shards in [2usize, 4] {
+                let pool = ShardedPool::new(ShardOpts { shards, exchange_period: 4, protocol });
+                let a = pool.run(&p, Alg::Stoiht, &opts, 7);
+                let b = pool.run(&p, Alg::Stoiht, &opts, 7);
+                assert!(a.converged(), "{protocol:?} S={shards}");
+                assert!(a.winning().unwrap().final_error < 1e-5);
+                assert!(a.rounds >= 1);
+                assert_eq!(a.winner, b.winner);
+                assert_eq!(a.rounds, b.rounds);
+                for (sa, sb) in a.shards.iter().zip(&b.shards) {
+                    assert_eq!(sa.converged, sb.converged);
+                    assert_eq!(sa.iters, sb.iters);
+                    assert_eq!(sa.residual.to_bits(), sb.residual.to_bits());
+                    assert_eq!(sa.final_error.to_bits(), sb.final_error.to_bits());
+                    for (u, v) in sa.x.iter().zip(&sb.x) {
+                        assert_eq!(u.to_bits(), v.to_bits());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "full solve loop is too slow under Miri")]
+    fn sharded_pool_handles_stogradmp() {
+        let p = easy(13);
+        let opts = AsyncOpts::default();
+        let so = ShardOpts { shards: 2, exchange_period: 8, ..Default::default() };
+        let out = ShardedPool::new(so).run(&p, Alg::StoGradMp, &opts, 3);
+        assert!(out.converged());
+        assert!(out.rounds >= 1);
+        assert!(out.winning().unwrap().final_error < 1e-5);
     }
 
     #[test]

@@ -901,6 +901,38 @@ mod tests {
         assert_eq!(ring.buf[5], 5.0);
     }
 
+    #[test]
+    fn stats_snapshot_survives_a_poisoned_latency_sample() {
+        let sh = shared_for_test(0, 4);
+        {
+            let mut lat = lock_recover(&sh.stats.latencies);
+            lat.push(0.001);
+            lat.push(f64::NAN);
+            lat.push(0.003);
+        }
+        // Regression: the NaN used to panic quantile()'s partial_cmp sort;
+        // now the poisoned sample is ignored for percentile estimation.
+        let snap = sh.stats.snapshot(&sh.cache);
+        assert_eq!(snap.p50_s, 0.002);
+        // An all-poisoned ring degrades to NaN percentiles, not a panic,
+        // and the stats frame round-trips them as JSON `null`.
+        {
+            let mut lat = lock_recover(&sh.stats.latencies);
+            lat.buf.clear();
+            lat.push(f64::NAN);
+        }
+        let snap = sh.stats.snapshot(&sh.cache);
+        assert!(snap.p50_s.is_nan());
+        let frame = crate::service::wire::Reply::Stats(snap).to_json();
+        assert!(frame.contains("\"p50_s\":null"), "frame: {frame}");
+        let crate::service::wire::Reply::Stats(back) =
+            crate::service::wire::Reply::parse(&frame).unwrap()
+        else {
+            panic!("expected a stats reply");
+        };
+        assert!(back.p50_s.is_nan() && back.p99_s.is_nan());
+    }
+
     fn shared_for_test(batch_window_ms: u64, max_inflight: usize) -> ServerShared {
         ServerShared {
             opts: ServeOpts {

@@ -226,15 +226,49 @@ pub struct Client {
     stream: TcpStream,
 }
 
+/// Default bound on [`Client::connect`]: generous for a loaded CI loopback,
+/// finite for a blackholed address (the unbounded `TcpStream::connect` used
+/// to hang the `loadgen` suite and CLI clients forever).
+pub const DEFAULT_CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+
 impl Client {
-    /// Connect to a server address (`host:port`).
+    /// Connect to a server address (`host:port`), bounded by
+    /// [`DEFAULT_CONNECT_TIMEOUT`]. Use [`Client::connect_with_timeout`]
+    /// to pick the bound.
     pub fn connect(addr: &str) -> std::io::Result<Client> {
-        Ok(Client { stream: TcpStream::connect(addr)? })
+        Self::connect_with_timeout(addr, DEFAULT_CONNECT_TIMEOUT)
+    }
+
+    /// Connect with an explicit bound, tried against each resolved
+    /// candidate address in turn; the last failure is reported if none
+    /// accepts.
+    pub fn connect_with_timeout(addr: &str, timeout: Duration) -> std::io::Result<Client> {
+        use std::net::ToSocketAddrs;
+        let mut last_err = None;
+        for candidate in addr.to_socket_addrs()? {
+            match TcpStream::connect_timeout(&candidate, timeout) {
+                Ok(stream) => return Ok(Client { stream }),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.unwrap_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                "address resolved to no socket addresses",
+            )
+        }))
     }
 
     /// Optional read timeout (tests use this to bound a hang).
     pub fn set_read_timeout(&mut self, timeout: Option<Duration>) -> std::io::Result<()> {
         self.stream.set_read_timeout(timeout)
+    }
+
+    /// Optional write timeout, the sending-side twin of
+    /// [`Client::set_read_timeout`] (a peer that stops draining must not
+    /// wedge the client in `write_frame`).
+    pub fn set_write_timeout(&mut self, timeout: Option<Duration>) -> std::io::Result<()> {
+        self.stream.set_write_timeout(timeout)
     }
 
     fn round_trip(&mut self, request: &Request) -> crate::Result<Reply> {
@@ -380,6 +414,24 @@ mod tests {
             Reply::parse(r#"{"api_version":3,"ok":{}}"#),
             Err(ServeError::UnsupportedVersion(3))
         ));
+    }
+
+    #[test]
+    fn connect_timeout_bounds_an_unroutable_address() {
+        // 10.255.255.1 is a blackhole on any sane CI network: packets are
+        // dropped, so the old unbounded connect would hang until the OS
+        // gave up (minutes). With the bound the client must come back
+        // quickly — either a timeout or an immediate network error, never
+        // a hang. The generous elapsed ceiling keeps slow CI from flaking.
+        let bound = Duration::from_millis(250);
+        let start = std::time::Instant::now();
+        let result = Client::connect_with_timeout("10.255.255.1:9", bound);
+        assert!(result.is_err(), "blackholed address must not connect");
+        assert!(
+            start.elapsed() < Duration::from_secs(30),
+            "connect_with_timeout took {:?}, bound was {bound:?}",
+            start.elapsed()
+        );
     }
 
     #[test]

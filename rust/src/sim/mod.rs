@@ -48,12 +48,15 @@
 //! StoIHT specialization the paper's figures use — bit-identical to the
 //! pre-trait hardwired loop (pinned by `rust/tests/kernel_parity.rs`).
 
-use crate::algorithms::{StoihtKernel, SupportKernel};
+use crate::algorithms::{ShardedKernel, StoihtKernel, SupportKernel};
 use crate::linalg::{MeasureOp, SparseIterate};
 use crate::problem::Problem;
 use crate::rng::Rng;
 use crate::support::{support_of, union};
-use crate::tally::{positive_top_s, LocalTally, TallyWeighting};
+use crate::tally::{
+    add_votes_into, merge_votes_into, positive_top_s, positive_top_s_into, ExchangeProtocol,
+    LocalTally, TallyWeighting,
+};
 
 /// Per-core speed assignment.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -367,6 +370,218 @@ pub fn simulate_with<'p, K: SupportKernel>(
     }
 }
 
+/// Sharding axes for [`simulate_sharded_with`] and
+/// [`crate::service::ShardedPool`]: how many shards partition the
+/// measurement blocks, how often support estimates are exchanged, and
+/// through which protocol.
+#[derive(Clone, Debug)]
+pub struct ShardOpts {
+    /// Number of in-process shards `S` (1 = the unsharded single-tally
+    /// path, bit-identical to [`simulate_with`] / `run_async`).
+    pub shards: usize,
+    /// Staleness bound `E`: exchange every `E` local steps; between
+    /// exchanges a shard reads peer supports up to `E` steps stale.
+    pub exchange_period: usize,
+    /// How the per-shard tallies are merged at each exchange.
+    pub protocol: ExchangeProtocol,
+}
+
+impl Default for ShardOpts {
+    fn default() -> Self {
+        ShardOpts { shards: 1, exchange_period: 16, protocol: ExchangeProtocol::Gossip }
+    }
+}
+
+impl ShardOpts {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.shards == 0 {
+            return Err("shards must be >= 1".into());
+        }
+        if self.exchange_period == 0 {
+            return Err("exchange_period must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// Sharded-tally specialization of [`simulate_sharded_with`] for StoIHT.
+pub fn simulate_sharded(
+    problem: &Problem,
+    shard_opts: &ShardOpts,
+    schedule: &SpeedSchedule,
+    opts: &SimOpts,
+    rng: &mut Rng,
+) -> SimOutcome {
+    simulate_sharded_with(problem, shard_opts, schedule, opts, rng, |p| {
+        StoihtKernel::new(p, opts.gamma)
+    })
+}
+
+/// Simulate the **sharded tally** design: `S` shards, each owning a
+/// contiguous slice of the measurement blocks (via
+/// [`crate::algorithms::ShardedKernel`]) and voting into a **local**
+/// tally, with support estimates exchanged every `E` steps.
+///
+/// Semantics per global step `τ` (all shards lockstep; a shard with
+/// schedule period `k` iterates every `k`-th step):
+///
+/// 1. *Exchange phase*, on steps with `(τ − 1) % E == 0`: every shard
+///    publishes a snapshot of its local votes, and the stale views are
+///    rebuilt with the commutative order-canonicalized merge of
+///    [`merge_votes_into`]. Under [`ExchangeProtocol::Gossip`] shard `k`
+///    keeps `Σ_{j≠k} snap_j`; under [`ExchangeProtocol::LeaderMerge`]
+///    one merged view `Σ_j snap_j` is shared by all shards.
+/// 2. *Iterate phase*: each scheduled shard reads its estimate — gossip:
+///    `supp_s(own live votes + stale peer sum)`; leader-merge:
+///    `supp_s(merged)`, its own contribution equally stale — then
+///    samples a block **from its owned range**, steps, votes into its
+///    local tally, and checks the exit criterion. Shards never touch
+///    each other's tallies, so within-step ordering is immaterial and
+///    the run is a pure function of `(problem, S, E, protocol, seed)`.
+///
+/// At `E = 1` every peer view is one step old for both protocols and
+/// they coincide (pinned by a test); growing `E` is the staleness axis
+/// the `sharded` bench suite charts. `S = 1` delegates to
+/// [`simulate_with`] — one shard owns every block and reads only its own
+/// live tally, which *is* the single-tally path, so the delegation keeps
+/// it bit-identical by construction (also pinned).
+///
+/// The fault-injection ablations (`stale_read_prob`, `self_exclude`) are
+/// single-tally concepts and are not simulated here; sharded staleness
+/// is modeled by `E` alone. `SharedX` mode is rejected: sharding is
+/// defined by partitioned tallies.
+pub fn simulate_sharded_with<'p, K: SupportKernel>(
+    problem: &'p Problem,
+    shard_opts: &ShardOpts,
+    schedule: &SpeedSchedule,
+    opts: &SimOpts,
+    rng: &mut Rng,
+    make_kernel: impl Fn(&'p Problem) -> K,
+) -> SimOutcome {
+    let shards = shard_opts.shards;
+    let e = shard_opts.exchange_period;
+    assert!(shards >= 1 && e >= 1, "shards and exchange_period must be >= 1");
+    assert_eq!(
+        opts.mode,
+        SharingMode::Tally,
+        "sharded simulation shares tallies, not iterates (SharedX is a single-box ablation)"
+    );
+    if shards == 1 {
+        return simulate_with(problem, 1, schedule, opts, rng, make_kernel);
+    }
+
+    let spec = &problem.spec;
+    let n = spec.n;
+    let s = spec.s;
+    let periods = schedule.periods(shards);
+
+    // Per-shard state (RNG derivation mirrors `simulate_with`).
+    let mut kernels: Vec<ShardedKernel<K>> =
+        (0..shards).map(|k| ShardedKernel::new(make_kernel(problem), k, shards)).collect();
+    let mut rngs: Vec<Rng> = (0..shards).map(|i| rng.split(i as u64 + 1)).collect();
+    let mut xs: Vec<SparseIterate<f64>> = (0..shards).map(|_| SparseIterate::zeros(n)).collect();
+    let mut t_local: Vec<u64> = vec![1; shards];
+    let mut prev_gamma: Vec<Vec<usize>> = vec![Vec::new(); shards];
+    let mut tallies: Vec<LocalTally> =
+        (0..shards).map(|_| LocalTally::new(n, opts.weighting)).collect();
+
+    // Stale exchange views, rebuilt every `e` steps.
+    let mut peer_sums: Vec<Vec<i64>> = vec![vec![0; n]; shards]; // gossip
+    let mut merged: Vec<i64> = vec![0; n]; // leader-merge
+
+    // Reused scratch.
+    let mut combined: Vec<i64> = Vec::new();
+    let mut estimate: Vec<usize> = Vec::new();
+    let mut gamma: Vec<usize> = Vec::new();
+    let mut exit_r_scratch: Vec<f64> = Vec::new();
+    let mut exit_op_scratch = problem.op.make_scratch();
+    let mut error_trace = Vec::new();
+
+    for step in 1..=opts.max_steps {
+        // ---- exchange phase -------------------------------------------
+        if (step - 1) % e == 0 {
+            let snapshots: Vec<Vec<i64>> =
+                tallies.iter().map(|t| t.votes().to_vec()).collect();
+            match shard_opts.protocol {
+                ExchangeProtocol::Gossip => {
+                    for (k, sum) in peer_sums.iter_mut().enumerate() {
+                        merge_votes_into(&snapshots, Some(k), sum);
+                    }
+                }
+                ExchangeProtocol::LeaderMerge => {
+                    merge_votes_into(&snapshots, None, &mut merged);
+                }
+            }
+        }
+
+        // ---- iterate phase --------------------------------------------
+        let mut exited: Option<(usize, f64)> = None;
+        for k in 0..shards {
+            if (step - 1) % periods[k] != 0 {
+                continue; // not scheduled this step
+            }
+            match shard_opts.protocol {
+                ExchangeProtocol::Gossip => {
+                    combined.clear();
+                    combined.extend_from_slice(tallies[k].votes());
+                    add_votes_into(&mut combined, &peer_sums[k]);
+                    positive_top_s_into(&combined, s, &mut estimate);
+                }
+                ExchangeProtocol::LeaderMerge => {
+                    positive_top_s_into(&merged, s, &mut estimate);
+                }
+            }
+            let block = kernels[k].sample_block(&mut rngs[k]);
+            kernels[k].tally_step(&mut xs[k], block, &estimate, &mut gamma);
+            tallies[k].commit(&gamma, &prev_gamma[k], t_local[k]);
+            std::mem::swap(&mut prev_gamma[k], &mut gamma);
+            t_local[k] += 1;
+            if exited.is_none() {
+                let support = union(&prev_gamma[k], &estimate);
+                let r = problem.residual_norm_sparse_with(
+                    xs[k].values(),
+                    &support,
+                    &mut exit_r_scratch,
+                    &mut exit_op_scratch,
+                );
+                if r < opts.tolerance {
+                    exited = Some((k, problem.recovery_error(xs[k].values())));
+                }
+            }
+        }
+
+        if opts.record_error {
+            let err = xs
+                .iter()
+                .map(|x| problem.recovery_error(x.values()))
+                .fold(f64::INFINITY, f64::min);
+            error_trace.push(err);
+        }
+
+        if let Some((shard, err)) = exited {
+            return SimOutcome {
+                steps: step,
+                converged: true,
+                exit_core: Some(shard),
+                local_iters: t_local.iter().map(|&t| t - 1).collect(),
+                final_error: err,
+                error_trace,
+            };
+        }
+    }
+
+    let final_error =
+        xs.iter().map(|x| problem.recovery_error(x.values())).fold(f64::INFINITY, f64::min);
+    SimOutcome {
+        steps: opts.max_steps,
+        converged: false,
+        exit_core: None,
+        local_iters: t_local.iter().map(|&t| t - 1).collect(),
+        final_error,
+        error_trace,
+    }
+}
+
 /// Read `T̃` with staleness injection, minus the reading core's own
 /// standing vote (`own_weight` on `own_gamma`) — A6 self-exclusion.
 fn read_estimate_excluding(
@@ -599,6 +814,107 @@ mod tests {
             StoGradMpKernel::new,
         );
         assert!(out.converged, "stogradmp steps {}", out.steps);
+    }
+
+    #[test]
+    fn sharded_s1_is_bit_identical_to_the_single_tally_path() {
+        // Acceptance pin: at S = 1 the sharded entry point IS the
+        // single-tally simulator, for both kernels, to the bit.
+        use crate::algorithms::StoGradMpKernel;
+        let p = easy(21);
+        let opts = SimOpts { max_steps: 400, ..Default::default() };
+        let sched = SpeedSchedule::AllFast;
+        for e in [1usize, 16, 64] {
+            let sharded = ShardOpts { shards: 1, exchange_period: e, ..Default::default() };
+            let a = simulate_sharded(&p, &sharded, &sched, &opts, &mut Rng::seed_from(13));
+            let b = simulate(&p, 1, &sched, &opts, &mut Rng::seed_from(13));
+            assert_eq!(a.steps, b.steps);
+            assert_eq!(a.exit_core, b.exit_core);
+            assert_eq!(a.local_iters, b.local_iters);
+            assert_eq!(a.final_error.to_bits(), b.final_error.to_bits(), "E={e}");
+            let a = simulate_sharded_with(
+                &p,
+                &sharded,
+                &sched,
+                &opts,
+                &mut Rng::seed_from(14),
+                StoGradMpKernel::new,
+            );
+            let b =
+                simulate_with(&p, 1, &sched, &opts, &mut Rng::seed_from(14), StoGradMpKernel::new);
+            assert_eq!(a.steps, b.steps);
+            assert_eq!(a.final_error.to_bits(), b.final_error.to_bits(), "stogradmp E={e}");
+        }
+    }
+
+    #[test]
+    fn sharded_converges_and_is_deterministic_for_both_protocols() {
+        let p = easy(22);
+        let sched = SpeedSchedule::AllFast;
+        for protocol in [ExchangeProtocol::Gossip, ExchangeProtocol::LeaderMerge] {
+            for shards in [2usize, 4] {
+                let so = ShardOpts { shards, exchange_period: 4, protocol };
+                let opts = SimOpts { max_steps: 800, ..Default::default() };
+                let a = simulate_sharded(&p, &so, &sched, &opts, &mut Rng::seed_from(17));
+                let b = simulate_sharded(&p, &so, &sched, &opts, &mut Rng::seed_from(17));
+                assert!(a.converged, "{protocol:?} S={shards} steps {}", a.steps);
+                assert!(a.final_error < 1e-5);
+                assert_eq!(a.steps, b.steps);
+                assert_eq!(a.exit_core, b.exit_core);
+                assert_eq!(a.local_iters, b.local_iters);
+                assert_eq!(a.final_error.to_bits(), b.final_error.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn protocols_coincide_at_exchange_period_one() {
+        // With E = 1, a gossip shard's "own live" votes equal its own
+        // just-published snapshot, so gossip's view (own + peer snaps)
+        // equals leader-merge's view (all snaps) — the two protocols are
+        // the same algorithm at staleness zero.
+        let p = easy(23);
+        let opts = SimOpts { max_steps: 800, ..Default::default() };
+        for shards in [2usize, 3] {
+            let mk = |protocol| ShardOpts { shards, exchange_period: 1, protocol };
+            let g = simulate_sharded(
+                &p,
+                &mk(ExchangeProtocol::Gossip),
+                &SpeedSchedule::AllFast,
+                &opts,
+                &mut Rng::seed_from(19),
+            );
+            let l = simulate_sharded(
+                &p,
+                &mk(ExchangeProtocol::LeaderMerge),
+                &SpeedSchedule::AllFast,
+                &opts,
+                &mut Rng::seed_from(19),
+            );
+            assert_eq!(g.steps, l.steps, "S={shards}");
+            assert_eq!(g.exit_core, l.exit_core);
+            assert_eq!(g.final_error.to_bits(), l.final_error.to_bits());
+        }
+    }
+
+    #[test]
+    fn bounded_staleness_slows_but_does_not_break_recovery() {
+        let p = easy(24);
+        let sched = SpeedSchedule::AllFast;
+        let opts = SimOpts { max_steps: 1500, ..Default::default() };
+        let fresh = ShardOpts { shards: 4, exchange_period: 1, ..Default::default() };
+        let stale = ShardOpts { shards: 4, exchange_period: 64, ..Default::default() };
+        let a = simulate_sharded(&p, &fresh, &sched, &opts, &mut Rng::seed_from(25));
+        let b = simulate_sharded(&p, &stale, &sched, &opts, &mut Rng::seed_from(25));
+        assert!(a.converged && b.converged, "E=1: {} steps, E=64: {} steps", a.steps, b.steps);
+        assert!(b.final_error < 1e-5);
+    }
+
+    #[test]
+    fn shard_opts_validate_rejects_zeros() {
+        assert!(ShardOpts::default().validate().is_ok());
+        assert!(ShardOpts { shards: 0, ..Default::default() }.validate().is_err());
+        assert!(ShardOpts { exchange_period: 0, ..Default::default() }.validate().is_err());
     }
 
     #[test]

@@ -24,6 +24,7 @@
 //! cold-start tie; see the design notes in README.md).
 
 use crate::sync::atomic::{AtomicI64, Ordering};
+use crate::sync::{Condvar, Mutex};
 
 /// Tally weighting schemes (ablation A3; the paper uses [`Progress`]).
 ///
@@ -172,6 +173,34 @@ impl AtomicTally {
         // Relaxed: diagnostic sum; callers quiesce writers (join) first.
         self.votes.iter().map(|v| v.load(Ordering::Relaxed)).sum()
     }
+
+    /// Add a signed per-coordinate delta — how a gossip shard bakes the
+    /// freshly merged peer contribution into its live tally at an
+    /// exchange point.
+    pub fn add_votes(&self, delta: &[i64]) {
+        assert_eq!(delta.len(), self.votes.len());
+        for (v, &d) in self.votes.iter().zip(delta) {
+            if d != 0 {
+                // Relaxed: exchange points are barrier-quiesced — only the
+                // owning shard touches its tally here, and the exchange
+                // board's mutex/condvar handshake publishes the result;
+                // the RMW keeps concurrent monitoring reads tearless.
+                v.fetch_add(d, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Overwrite every coordinate — how a leader-merge shard refreshes
+    /// its frozen read-side view of the merged tally at an exchange
+    /// point.
+    pub fn store_votes(&self, votes: &[i64]) {
+        assert_eq!(votes.len(), self.votes.len());
+        for (v, &w) in self.votes.iter().zip(votes) {
+            // Relaxed: same barrier-quiesced single-writer argument as
+            // `add_votes`; the board handshake orders the publication.
+            v.store(w, Ordering::Relaxed);
+        }
+    }
 }
 
 /// Plain (single-threaded) tally for the discrete-time simulator.
@@ -209,6 +238,195 @@ impl LocalTally {
 
     pub fn total(&self) -> i64 {
         self.votes.iter().sum()
+    }
+}
+
+// ------------------------------------------------- sharded exchange layer
+
+/// How sharded tallies exchange support information (see
+/// [`crate::sim::simulate_sharded_with`] and
+/// [`crate::service::ShardedPool`]).
+///
+/// Both protocols move the same payload — per-shard vote snapshots — and
+/// both merge with the commutative, order-canonicalized sum of
+/// [`merge_votes_into`]; they differ in *whose* votes a shard sees fresh:
+///
+/// * [`Gossip`]: all-to-all. Between exchanges a shard reads its **own
+///   live** votes plus peer snapshots up to E steps stale.
+/// * [`LeaderMerge`]: parameter-server shape. A single merged view is
+///   formed at each exchange and every shard — including the
+///   contributor — reads that frozen view until the next exchange.
+///
+/// [`Gossip`]: ExchangeProtocol::Gossip
+/// [`LeaderMerge`]: ExchangeProtocol::LeaderMerge
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExchangeProtocol {
+    Gossip,
+    LeaderMerge,
+}
+
+impl ExchangeProtocol {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "gossip" => Some(ExchangeProtocol::Gossip),
+            "leader" | "leader_merge" => Some(ExchangeProtocol::LeaderMerge),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ExchangeProtocol::Gossip => "gossip",
+            ExchangeProtocol::LeaderMerge => "leader",
+        }
+    }
+}
+
+/// Accumulate one published vote snapshot into a merge buffer.
+pub fn add_votes_into(acc: &mut [i64], snap: &[i64]) {
+    assert_eq!(acc.len(), snap.len());
+    for (a, &v) in acc.iter_mut().zip(snap) {
+        *a += v;
+    }
+}
+
+/// The canonical sharded merge: coordinate-wise sum of the snapshots,
+/// optionally excluding one shard (a gossip shard excludes itself — its
+/// own votes stay live in its local tally).
+///
+/// `i64` addition is commutative and associative, so **any** accumulation
+/// order produces the identical vector; that order-independence is what
+/// makes sharded runs bit-identical at any thread interleaving of the
+/// merge (pinned by a proptest).
+pub fn merge_votes_into(snapshots: &[Vec<i64>], exclude: Option<usize>, out: &mut Vec<i64>) {
+    let n = snapshots.first().map_or(0, Vec::len);
+    out.clear();
+    out.resize(n, 0);
+    for (j, snap) in snapshots.iter().enumerate() {
+        if Some(j) != exclude {
+            add_votes_into(out, snap);
+        }
+    }
+}
+
+/// Rendezvous point for the real-thread exchange: per-shard snapshot
+/// slots plus a generation-counted barrier built on the `crate::sync`
+/// doorway (so `--features model` can model-check the protocol).
+///
+/// One exchange is two barrier crossings:
+///
+/// 1. every shard calls [`publish_and_wait`] — all snapshots for this
+///    round are in once it returns;
+/// 2. shards read merged views ([`peer_sum_into`] / [`merged_into`]) and
+///    apply them to their tallies;
+/// 3. every shard calls [`wait`] — no shard may republish (next round)
+///    while a peer is still reading this round's slots.
+///
+/// [`publish_and_wait`]: ExchangeBoard::publish_and_wait
+/// [`peer_sum_into`]: ExchangeBoard::peer_sum_into
+/// [`merged_into`]: ExchangeBoard::merged_into
+/// [`wait`]: ExchangeBoard::wait
+pub struct ExchangeBoard {
+    slots: Vec<Mutex<Vec<i64>>>,
+    n: usize,
+    round: Mutex<RoundState>,
+    all_in: Condvar,
+}
+
+struct RoundState {
+    arrived: usize,
+    generation: u64,
+    /// Shards that reported `finished = true` at the barrier in progress.
+    finished_now: usize,
+    /// The `finished_now` count latched when the last barrier released —
+    /// every shard of that round reads the same value, which is how the
+    /// fleet agrees (deterministically) on when to stop exchanging.
+    finished_latch: usize,
+}
+
+impl ExchangeBoard {
+    pub fn new(shards: usize, n: usize) -> Self {
+        assert!(shards >= 1, "an exchange needs at least one shard");
+        ExchangeBoard {
+            slots: (0..shards).map(|_| Mutex::new(vec![0i64; n])).collect(),
+            n,
+            round: Mutex::new(RoundState {
+                arrived: 0,
+                generation: 0,
+                finished_now: 0,
+                finished_latch: 0,
+            }),
+            all_in: Condvar::new(),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Publish shard `k`'s local vote snapshot and block until every
+    /// shard has published for this round. `finished` reports whether
+    /// this shard is done iterating (converged or at its cap); the
+    /// per-round count is readable via [`finished_count`] until the next
+    /// barrier crossing.
+    ///
+    /// [`finished_count`]: ExchangeBoard::finished_count
+    pub fn publish_and_wait(&self, k: usize, votes: &[i64], finished: bool) {
+        assert_eq!(votes.len(), self.n);
+        self.slots[k].lock().unwrap().copy_from_slice(votes);
+        self.barrier(finished);
+    }
+
+    /// Plain barrier crossing (phase 3 above).
+    pub fn wait(&self) {
+        self.barrier(false);
+    }
+
+    /// How many shards reported `finished` at the last released barrier.
+    pub fn finished_count(&self) -> usize {
+        self.round.lock().unwrap().finished_latch
+    }
+
+    /// Sum every published snapshot except shard `k`'s (the gossip view).
+    pub fn peer_sum_into(&self, k: usize, out: &mut Vec<i64>) {
+        self.sum_into(Some(k), out);
+    }
+
+    /// Sum every published snapshot (the leader-merge view).
+    pub fn merged_into(&self, out: &mut Vec<i64>) {
+        self.sum_into(None, out);
+    }
+
+    fn sum_into(&self, exclude: Option<usize>, out: &mut Vec<i64>) {
+        out.clear();
+        out.resize(self.n, 0);
+        for (j, slot) in self.slots.iter().enumerate() {
+            if Some(j) != exclude {
+                add_votes_into(out, &slot.lock().unwrap());
+            }
+        }
+    }
+
+    /// Generation-counted barrier: the last arrival flips the generation
+    /// and wakes everyone; earlier arrivals sleep until the flip. The
+    /// mutex/condvar pair orders every slot write before every
+    /// post-barrier slot read.
+    fn barrier(&self, finished: bool) {
+        let mut st = self.round.lock().unwrap();
+        st.arrived += 1;
+        st.finished_now += finished as usize;
+        if st.arrived == self.slots.len() {
+            st.arrived = 0;
+            st.finished_latch = st.finished_now;
+            st.finished_now = 0;
+            st.generation += 1;
+            self.all_in.notify_all();
+        } else {
+            let gen = st.generation;
+            while st.generation == gen {
+                st = self.all_in.wait(st).unwrap();
+            }
+        }
     }
 }
 
@@ -373,6 +591,78 @@ mod tests {
         // Each thread's surviving weight is its final t times s entries.
         let expected = threads as i64 * iters as i64 * s as i64;
         assert_eq!(tally.total(), expected);
+    }
+
+    #[test]
+    fn exchange_protocol_parses_and_round_trips() {
+        assert_eq!(ExchangeProtocol::parse("gossip"), Some(ExchangeProtocol::Gossip));
+        assert_eq!(ExchangeProtocol::parse("leader"), Some(ExchangeProtocol::LeaderMerge));
+        assert_eq!(ExchangeProtocol::parse("leader_merge"), Some(ExchangeProtocol::LeaderMerge));
+        assert_eq!(ExchangeProtocol::parse("bogus"), None);
+        for p in [ExchangeProtocol::Gossip, ExchangeProtocol::LeaderMerge] {
+            assert_eq!(ExchangeProtocol::parse(p.as_str()), Some(p));
+        }
+    }
+
+    #[test]
+    fn merge_votes_sums_and_excludes() {
+        let snaps = vec![vec![1i64, 0, -2], vec![0, 3, 1], vec![5, 5, 5]];
+        let mut out = Vec::new();
+        merge_votes_into(&snaps, None, &mut out);
+        assert_eq!(out, vec![6, 8, 4]);
+        merge_votes_into(&snaps, Some(2), &mut out);
+        assert_eq!(out, vec![1, 3, -1]);
+        merge_votes_into(&[], None, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn tally_vote_overlays_for_both_protocols() {
+        // Gossip shard: bake a peer delta into a live tally.
+        let at = AtomicTally::new(4, TallyWeighting::Progress);
+        at.commit(&[0, 1], &[], 2);
+        at.add_votes(&[0, 3, -1, 0]);
+        let mut snap = vec![0i64; 4];
+        at.snapshot_into(&mut snap);
+        assert_eq!(snap, vec![2, 5, -1, 0]);
+        // Leader shard: refresh a frozen read-side view wholesale.
+        let frozen = AtomicTally::new(4, TallyWeighting::Progress);
+        frozen.store_votes(&[7, 0, 1, -2]);
+        frozen.snapshot_into(&mut snap);
+        assert_eq!(snap, vec![7, 0, 1, -2]);
+        let mut scratch = Vec::new();
+        assert_eq!(frozen.estimate(2, &mut scratch), vec![0, 2]);
+    }
+
+    #[test]
+    fn exchange_board_round_trips_snapshots() {
+        // Two shards run one full exchange (publish → read → release) on
+        // real threads; each must see exactly the other's snapshot in its
+        // peer sum, and the merged view is the total.
+        let board = Arc::new(ExchangeBoard::new(2, 3));
+        let snaps = [vec![1i64, 2, 0], vec![0i64, 5, -1]];
+        let handles: Vec<_> = (0..2)
+            .map(|k| {
+                let board = Arc::clone(&board);
+                let mine = snaps[k].clone();
+                let other = snaps[1 - k].clone();
+                thread::spawn(move || {
+                    board.publish_and_wait(k, &mine, k == 1);
+                    let mut peers = Vec::new();
+                    board.peer_sum_into(k, &mut peers);
+                    assert_eq!(peers, other);
+                    let mut merged = Vec::new();
+                    board.merged_into(&mut merged);
+                    assert_eq!(merged, vec![1, 7, -1]);
+                    // Exactly one shard declared itself finished.
+                    assert_eq!(board.finished_count(), 1);
+                    board.wait();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 
     #[test]

@@ -21,7 +21,7 @@ use astir::service::RecoveryPool;
 use astir::sync::atomic::{AtomicBool, Ordering};
 use astir::sync::model::{check, check_with, set_weaken_pool_pending, ModelOpts, ViolationKind};
 use astir::sync::{thread, Arc, Condvar, Mutex, RaceCell};
-use astir::tally::{AtomicTally, TallyWeighting};
+use astir::tally::{AtomicTally, ExchangeBoard, TallyWeighting};
 
 /// Pool programs have long op sequences; one involuntary switch already
 /// covers the witness race and keeps the schedule count CI-sized.
@@ -265,6 +265,43 @@ fn tally_concurrent_unit_commits_preserve_the_total() {
         assert_eq!(tally.total(), 4);
     });
     assert!(report.schedules > 1, "interleaved commits must branch the schedule space");
+}
+
+#[test]
+fn exchange_board_round_is_race_free_and_deterministic() {
+    // One full sharded-exchange round (publish -> read -> release) for two
+    // shards: in EVERY interleaving the peer sum each shard reads must be
+    // exactly the other shard's snapshot, the merged view must be their
+    // canonical coordinate-wise sum, and the barrier-latched finished
+    // count must agree across shards (shard 1 publishes `finished`).
+    let report = check_with(&bound1(), || {
+        let board = Arc::new(ExchangeBoard::new(2, 3));
+        let mut handles = Vec::new();
+        for k in 0..2usize {
+            let board = Arc::clone(&board);
+            handles.push(thread::spawn(move || {
+                let votes: Vec<i64> = (0..3).map(|i| (k as i64 + 1) * 10 + i as i64).collect();
+                board.publish_and_wait(k, &votes, k == 1);
+                let done = board.finished_count();
+                let mut peers = Vec::new();
+                board.peer_sum_into(k, &mut peers);
+                let other = 1 - k;
+                let expect: Vec<i64> = (0..3).map(|i| (other as i64 + 1) * 10 + i as i64).collect();
+                assert_eq!(peers, expect, "peer sum must be exactly the other shard's snapshot");
+                let mut merged = Vec::new();
+                board.merged_into(&mut merged);
+                let want: Vec<i64> = (0..3).map(|i| 30 + 2 * i as i64).collect();
+                assert_eq!(merged, want, "merged view must be the canonical sum");
+                board.wait();
+                done
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 1, "both shards must see the latched finished count");
+        }
+    })
+    .unwrap_or_else(|v| panic!("model check failed\n{v}"));
+    assert!(report.schedules > 1, "a two-shard exchange must branch the schedule space");
 }
 
 #[test]

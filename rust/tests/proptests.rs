@@ -7,9 +7,12 @@ use astir::algorithms::StoihtKernel;
 use astir::coordinator::run_trials;
 use astir::linalg::{dist2, dot, lstsq, nrm2, Mat, MeasureOp, Operator};
 use astir::problem::{Ensemble, Problem, ProblemSpec};
-use astir::sim::{simulate, SimOpts, SpeedSchedule};
+use astir::rng::Rng;
+use astir::sim::{simulate, simulate_sharded, ShardOpts, SimOpts, SpeedSchedule};
 use astir::support::{accuracy, intersection_size, top_s, union, union_into};
-use astir::tally::{positive_top_s, LocalTally, TallyWeighting};
+use astir::tally::{
+    merge_votes_into, positive_top_s, ExchangeProtocol, LocalTally, TallyWeighting,
+};
 use astir::testutil::{property, Gen, OrFail};
 
 fn random_problem(g: &mut Gen) -> Problem {
@@ -177,6 +180,71 @@ fn prop_sim_exit_implies_tolerance() {
         // recovery error should be small when the residual is < 1e-7 on a
         // noiseless instance (allowing loose slack for conditioning).
         (out.final_error < 1e-3).or_fail(format!("error {}", out.final_error))
+    });
+}
+
+#[test]
+fn prop_merge_votes_is_permutation_invariant() {
+    // The sharded support exchange sums snapshots coordinate-wise; the
+    // merged votes (and hence the support estimate cut from them) must not
+    // depend on which order the shard snapshots arrived in.
+    property("merge_votes_into permutation invariant", 100, |g| {
+        let n = g.usize_in(1, 60);
+        let shards = g.usize_in(1, 6);
+        let snaps: Vec<Vec<i64>> = (0..shards)
+            .map(|_| (0..n).map(|_| g.usize_in(0, 12) as i64 - 6).collect())
+            .collect();
+        let mut base = Vec::new();
+        merge_votes_into(&snaps, None, &mut base);
+        // Fisher–Yates over the snapshot list
+        let mut order: Vec<usize> = (0..shards).collect();
+        for i in (1..shards).rev() {
+            order.swap(i, g.usize_in(0, i));
+        }
+        let shuffled: Vec<Vec<i64>> = order.iter().map(|&i| snaps[i].clone()).collect();
+        let mut permuted = Vec::new();
+        merge_votes_into(&shuffled, None, &mut permuted);
+        (permuted == base).or_fail("merged votes depend on arrival order")?;
+        let s = g.usize_in(0, n);
+        (positive_top_s(&permuted, s) == positive_top_s(&base, s))
+            .or_fail("support estimate depends on arrival order")?;
+        // excluding shard k must equal merging the list with k removed
+        let k = g.usize_in(0, shards - 1);
+        let mut without = Vec::new();
+        merge_votes_into(&snaps, Some(k), &mut without);
+        let rest: Vec<Vec<i64>> =
+            (0..shards).filter(|&i| i != k).map(|i| snaps[i].clone()).collect();
+        let mut expect = Vec::new();
+        merge_votes_into(&rest, None, &mut expect);
+        (without == expect).or_fail("self-exclusion disagrees with removal")
+    });
+}
+
+#[test]
+fn prop_sharded_sim_is_deterministic() {
+    // Fixed (shards, exchange period, protocol, seed) must reproduce the
+    // sharded run bit-for-bit: the merge is canonical, so nothing
+    // schedule-shaped can leak into the trajectory.
+    property("sharded sim determinism", 15, |g| {
+        let p = random_problem(g);
+        let so = ShardOpts {
+            shards: g.usize_in(1, p.spec.num_blocks().min(3)),
+            exchange_period: g.usize_in(1, 8),
+            protocol: if g.usize_in(0, 1) == 0 {
+                ExchangeProtocol::Gossip
+            } else {
+                ExchangeProtocol::LeaderMerge
+            },
+        };
+        let opts = SimOpts { max_steps: 600, ..Default::default() };
+        let seed = g.rng().next_u64();
+        let sched = SpeedSchedule::AllFast;
+        let a = simulate_sharded(&p, &so, &sched, &opts, &mut Rng::seed_from(seed));
+        let b = simulate_sharded(&p, &so, &sched, &opts, &mut Rng::seed_from(seed));
+        (a.steps == b.steps && a.converged == b.converged).or_fail("trajectory diverged")?;
+        (a.final_error.to_bits() == b.final_error.to_bits())
+            .or_fail("final error not bitwise equal")?;
+        (a.local_iters == b.local_iters).or_fail("local iteration counts diverged")
     });
 }
 
