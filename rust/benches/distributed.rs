@@ -1,0 +1,21 @@
+//! EXPERIMENT — distributed sharded recovery over loopback
+//! (`cargo bench --bench distributed`).
+//!
+//! Thin wrapper over the `distributed` suite in
+//! `astir::bench_harness::suites`: each `(S, E)` cell of the staleness
+//! grid (shards in {2, 4}, exchange period in {1, 16}) runs as a fleet
+//! of `S` `astir shard-worker` processes exchanging vote snapshots
+//! through an `astir exchange-hub` on loopback TCP, plus the in-process
+//! `ShardedPool` at S = 4, E = 16 — the per-cell delta against that
+//! reference is the socket-transport tax. Under this `cargo bench`
+//! harness the CLI binary is not reachable, so cells fall back to an
+//! in-process fleet over real loopback sockets unless `ASTIR_BIN`
+//! points at an `astir` build.
+//!
+//! Telemetry: `results/BENCH_distributed_fleet.json`.
+
+mod common;
+
+fn main() {
+    common::bench_binary_main("distributed");
+}

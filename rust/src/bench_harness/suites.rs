@@ -4,7 +4,7 @@
 //! registers [`BenchSpec`]s into a [`Suite`]; the `cargo bench` binaries
 //! (`rust/benches/*.rs`) and the `astir bench` CLI both execute suites
 //! from this registry, so a perf number means the same thing however it
-//! was produced. Eleven suites, one per bench binary:
+//! was produced. Twelve suites, one per bench binary:
 //!
 //! * `hot_path` — kernel microbenches: roofline triad, gemv/proxy
 //!   primitives, top-s + tally ops, full Alg.-2 steps, dense-vs-sparse at
@@ -32,6 +32,13 @@
 //!   exchange every `E ∈ {1,4,16,64}` steps; `S = 1` is the unsharded
 //!   reference), emitted as one recovery-vs-staleness table, plus a
 //!   real-thread [`crate::service::ShardedPool`] wallclock point.
+//! * `distributed` — the staleness grid again, but each `(S, E)` cell is
+//!   a **multi-process fleet**: `S` `astir shard-worker` processes
+//!   exchanging through an `astir exchange-hub` on loopback (when the
+//!   CLI binary is reachable — `ASTIR_BIN` or running under
+//!   `astir bench`; otherwise an in-process fleet over real loopback
+//!   sockets), plus the in-process [`crate::service::ShardedPool`]
+//!   reference at the same axes for the socket tax.
 //!
 //! Smoke mode shrinks the Monte-Carlo budgets to CI size; full mode keeps
 //! the paper-ish defaults (`ASTIR_BENCH_TRIALS` raises them further).
@@ -55,6 +62,7 @@ use crate::report;
 use crate::rng::Rng;
 use crate::service::api::JobRequest;
 use crate::service::server::{ServeOpts, Server};
+use crate::service::transport::{run_worker, ExchangeHub, HubOpts, HubReport};
 use crate::service::wire::Client;
 use crate::service::{recover_batch_stoiht, solve_job, RecoveryPool, ShardedPool};
 use crate::sim::{simulate_sharded, ShardOpts, SimOpts, SimOutcome, SpeedSchedule};
@@ -130,6 +138,11 @@ pub fn registry() -> Vec<SuiteDef> {
             name: "sharded",
             about: "sharded tally — steps to converge over the S x E staleness grid",
             register: sharded_suite,
+        },
+        SuiteDef {
+            name: "distributed",
+            about: "multi-process sharded fleet over loopback — S x E grid through the hub",
+            register: distributed_suite,
         },
     ]
 }
@@ -1484,6 +1497,213 @@ fn sharded_suite(suite: &mut Suite) {
     }
 }
 
+/// Resolve the `astir` CLI binary for process-fleet benches: `ASTIR_BIN`
+/// wins, else the current executable when it *is* the CLI (i.e. the suite
+/// runs under `astir bench`). `None` under `cargo bench` harness binaries
+/// — those fall back to an in-process fleet over real loopback sockets.
+fn astir_bin() -> Option<std::path::PathBuf> {
+    if let Ok(p) = std::env::var("ASTIR_BIN") {
+        let p = std::path::PathBuf::from(p);
+        if p.is_file() {
+            return Some(p);
+        }
+    }
+    let exe = std::env::current_exe().ok()?;
+    match exe.file_stem().and_then(|s| s.to_str()) {
+        Some("astir") => Some(exe),
+        _ => None,
+    }
+}
+
+/// Child processes killed on drop, so a failed fleet cell cannot leak
+/// hubs/workers into later benches.
+struct FleetGuard(Vec<std::process::Child>);
+
+impl Drop for FleetGuard {
+    fn drop(&mut self) {
+        for c in &mut self.0 {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+/// One `(S, E)` fleet over real processes: spawn `astir exchange-hub` on
+/// an ephemeral loopback port, scrape its address, launch `S`
+/// `astir shard-worker` processes with the suite's problem flags, and
+/// wait the whole fleet out. Returns `(rounds, clean)` scraped from the
+/// hub's `hub-report` line.
+fn run_process_fleet(
+    bin: &std::path::Path,
+    cfg: &ExperimentConfig,
+    s: usize,
+    e: usize,
+) -> (u64, bool) {
+    use std::io::BufRead;
+    use std::process::{Command, Stdio};
+    let mut hub = Command::new(bin)
+        .args(["exchange-hub", "--addr", "127.0.0.1:0", "--shards", &s.to_string()])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .stdin(Stdio::null())
+        .spawn()
+        .expect("spawn astir exchange-hub");
+    let hub_out = hub.stdout.take().expect("piped hub stdout");
+    let mut guard = FleetGuard(vec![hub]);
+    let mut lines = std::io::BufReader::new(hub_out).lines();
+    let addr = loop {
+        match lines.next() {
+            Some(Ok(line)) => {
+                if let Some(rest) = line.strip_prefix("listening on ") {
+                    break rest.trim().to_string();
+                }
+            }
+            _ => panic!("exchange-hub exited before printing its address"),
+        }
+    };
+    let p = &cfg.problem;
+    for k in 0..s {
+        let worker = Command::new(bin)
+            .args(["shard-worker", "--hub", &addr, "--shard", &k.to_string()])
+            .args(["--shards", &s.to_string(), "--exchange-period", &e.to_string()])
+            .args(["--n", &p.n.to_string(), "--m", &p.m.to_string()])
+            .args(["--b", &p.b.to_string(), "--s", &p.s.to_string()])
+            .args(["--seed", &cfg.seed.to_string(), "--max-iters", &cfg.max_iters.to_string()])
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit())
+            .stdin(Stdio::null())
+            .spawn()
+            .expect("spawn astir shard-worker");
+        guard.0.push(worker);
+    }
+    for w in &mut guard.0[1..] {
+        let status = w.wait().expect("wait shard-worker");
+        assert!(status.success(), "shard-worker failed: {status}");
+    }
+    let status = guard.0[0].wait().expect("wait exchange-hub");
+    assert!(status.success(), "exchange-hub failed: {status}");
+    let mut report = (0u64, false);
+    for line in lines.map_while(Result::ok) {
+        if let Some(rest) = line.strip_prefix("hub-report rounds=") {
+            let mut it = rest.splitn(2, ' ');
+            let rounds = it.next().and_then(|t| t.parse().ok()).unwrap_or(0);
+            let clean = it.next() == Some("degraded=[]");
+            report = (rounds, clean);
+        }
+    }
+    report
+}
+
+/// The same fleet with in-process workers: real loopback sockets and the
+/// full wire protocol, no process spawn — the fallback when the CLI
+/// binary is not reachable from the running bench harness.
+fn run_loopback_fleet(
+    problem: &Problem,
+    opts: &AsyncOpts,
+    s: usize,
+    e: usize,
+    seed: u64,
+) -> (u64, bool) {
+    let sh = ShardOpts { shards: s, exchange_period: e, ..Default::default() };
+    let hub = ExchangeHub::bind(HubOpts::new("127.0.0.1:0", s)).expect("bind exchange hub");
+    let addr = hub.addr().expect("hub addr").to_string();
+    let hub = hub.spawn();
+    thread::scope(|scope| {
+        let handles: Vec<_> = (0..s)
+            .map(|k| {
+                let (addr, sh) = (&addr, &sh);
+                scope.spawn(move || {
+                    run_worker(problem, addr, k, sh, Alg::Stoiht, opts, seed)
+                        .expect("fleet worker")
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("join fleet worker");
+        }
+    });
+    let report: HubReport = hub.join().expect("join hub thread").expect("hub run");
+    (report.rounds, report.degraded.is_empty())
+}
+
+/// `distributed` — the `S × E` staleness grid as multi-process fleets
+/// over loopback (see the module doc), plus the in-process pool at the
+/// same axes: the per-cell delta is the socket transport tax.
+fn distributed_suite(suite: &mut Suite) {
+    let cfg = experiment_cfg(suite.mode(), 2, 1);
+    let mode = suite.mode();
+    const CELLS: [(usize, usize); 4] = [(2, 1), (2, 16), (4, 1), (4, 16)];
+    let grid: Vec<((usize, usize), BenchSpec)> = CELLS
+        .iter()
+        .map(|&(s, e)| ((s, e), expspec(&format!("fleet_s{s}_e{e}"), &cfg)))
+        .collect();
+    let inproc_spec = expspec("inproc_s4_e16", &cfg);
+    if suite.is_dry_run() {
+        for (_, spec) in grid {
+            suite.bench(spec, || {});
+        }
+        suite.bench(inproc_spec, || {});
+        return;
+    }
+    if grid.iter().any(|(_, sp)| suite.wants(sp)) || suite.wants(&inproc_spec) {
+        banner("distributed sharded recovery — process fleets over loopback", &cfg);
+    }
+    let opts = AsyncOpts {
+        tolerance: cfg.tolerance,
+        max_local_iters: cfg.max_iters,
+        ..Default::default()
+    };
+    // The CLI's sharded run-seed derivation, so every cell (process or
+    // loopback fallback) computes the identical recovery.
+    let seed = cfg.seed ^ 0xA5;
+    let bin = astir_bin();
+    match &bin {
+        Some(p) => println!("  fleet mode: real processes ({})", p.display()),
+        None => println!(
+            "  fleet mode: in-process loopback sockets (set ASTIR_BIN or run via \
+             `astir bench` for real process fleets)"
+        ),
+    }
+    let mut rng = Rng::seed_from(cfg.seed);
+    let problem = cfg.problem.generate(&mut rng);
+    let mut table = Table::new(&["shards", "exchange_period", "rounds", "clean"]);
+    for ((s, e), spec) in grid {
+        if !suite.wants(&spec) {
+            continue;
+        }
+        let mut fleet = None;
+        suite.bench(spec, || {
+            fleet = Some(match &bin {
+                Some(bin) => run_process_fleet(bin, &cfg, s, e),
+                None => run_loopback_fleet(&problem, &opts, s, e, seed),
+            });
+        });
+        if let Some((rounds, clean)) = fleet {
+            println!("  => fleet S={s} E={e}: rounds={rounds} clean={clean}");
+            table.push_row(vec![s as f64, e as f64, rounds as f64, f64::from(u8::from(clean))]);
+        }
+    }
+    if !table.rows.is_empty() {
+        report::emit(
+            &results_name(mode, "distributed_fleet"),
+            "distributed sharded recovery — exchange rounds per S x E fleet on loopback",
+            &table,
+        );
+    }
+    if !suite.wants(&inproc_spec) {
+        return;
+    }
+    let mut outcome = None;
+    suite.bench(inproc_spec, || {
+        let so = ShardOpts { shards: 4, exchange_period: 16, ..Default::default() };
+        let out = ShardedPool::new(so).run(&problem, Alg::Stoiht, &opts, seed);
+        outcome = Some((out.converged(), out.rounds));
+    });
+    if let Some((converged, rounds)) = outcome {
+        println!("  => in-process S=4 E=16 reference: rounds={rounds} converged={converged}");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1504,7 +1724,8 @@ mod tests {
                 "large_n",
                 "throughput",
                 "loadgen",
-                "sharded"
+                "sharded",
+                "distributed"
             ]
         );
         for n in &names {

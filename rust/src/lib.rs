@@ -36,6 +36,7 @@
 //! | [`service::api`] | versioned typed job API (`JobRequest`/`JobResponse`/`ServeError`, `api_version: 1`) |
 //! | [`service::wire`] | length-prefixed JSON framing + the blocking TCP [`service::wire::Client`] |
 //! | [`service::server`] | `astir serve` — TCP front-end with operator cache, deadline micro-batching, admission control |
+//! | [`service::transport`] | socket-backed exchange rendezvous: `astir exchange-hub` + `shard-worker` fleets, bit-identical to the in-process board |
 //! | [`runtime`] | PJRT client wrapper: load + execute AOT HLO artifacts |
 //! | [`backend`] | compute-backend abstraction (native vs PJRT) |
 //! | [`config`] | TOML-subset config parser + experiment configs |

@@ -19,6 +19,9 @@
 //! astir batch --jobs 32 --workers 8  # persistent recovery pool, shared operator
 //! astir batch --batch 8              # MMV lockstep: 8 signals/job, shared tally
 //! astir serve --addr 127.0.0.1:7878  # zero-dep TCP front-end (typed v1 job API)
+//! astir exchange-hub --shards 4      # rendezvous for a multi-process fleet
+//! astir shard-worker --hub H --shard K --shards 4   # one shard process
+
 //! astir run --alg stoiht --ensemble partial_dct --no-dense-a --n 1048576 --m 327680 --b 16
 //! astir fig2 --alg stogradmp --schedule half-slow --period 6
 //! astir info                         # artifact + config introspection
@@ -44,6 +47,7 @@ use astir::rng::Rng;
 use astir::runtime::ArtifactStore;
 use astir::service::api::{JobRequest, JobResponse};
 use astir::service::server::{ServeOpts, Server};
+use astir::service::transport::{join_fleet, run_joined, x_digest, ExchangeHub, HubOpts};
 use astir::service::{recover_batch_stoiht, solve_job, RecoveryPool, ShardedPool};
 use astir::sim::SpeedSchedule;
 use astir::tally::ExchangeProtocol;
@@ -239,6 +243,49 @@ fn run(args: Vec<String>) -> Result<(), String> {
             cfg.validate()?;
             flags.finish()?;
             run_serve_cmd(&cfg)?;
+        }
+        "exchange-hub" => {
+            let mut cfg = cfg;
+            if let Some(v) = flags.take("shards")? {
+                cfg.shard.shards = v.parse().map_err(|e| format!("--shards: {e}"))?;
+            }
+            let addr = flags.take("addr")?.unwrap_or_else(|| "127.0.0.1:7879".into());
+            let join_ms = match flags.take("join-timeout-ms")? {
+                Some(v) => Some(v.parse().map_err(|e| format!("--join-timeout-ms: {e}"))?),
+                None => None,
+            };
+            let round_ms = match flags.take("round-timeout-ms")? {
+                Some(v) => Some(v.parse().map_err(|e| format!("--round-timeout-ms: {e}"))?),
+                None => None,
+            };
+            cfg.validate()?;
+            flags.finish()?;
+            run_exchange_hub_cmd(&addr, cfg.shard.shards, join_ms, round_ms)?;
+        }
+        "shard-worker" => {
+            let mut cfg = cfg;
+            apply_alg_flag(&mut cfg, &mut flags)?;
+            let hub = flags.take("hub")?.unwrap_or_else(|| "127.0.0.1:7879".into());
+            let shard: usize = flags
+                .take("shard")?
+                .ok_or_else(|| "shard-worker requires --shard <k>".to_string())?
+                .parse()
+                .map_err(|e| format!("--shard: {e}"))?;
+            if let Some(v) = flags.take("shards")? {
+                cfg.shard.shards = v.parse().map_err(|e| format!("--shards: {e}"))?;
+            }
+            if let Some(v) = flags.take("exchange-period")? {
+                cfg.shard.exchange_period =
+                    v.parse().map_err(|e| format!("--exchange-period: {e}"))?;
+            }
+            if let Some(v) = flags.take("exchange-protocol")? {
+                cfg.shard.protocol = ExchangeProtocol::parse(&v)
+                    .ok_or_else(|| format!("unknown --exchange-protocol `{v}` (gossip|leader)"))?;
+            }
+            cfg.validate()?;
+            let schedule = take_schedule(&mut flags)?;
+            flags.finish()?;
+            run_shard_worker_cmd(&cfg, &hub, shard, &schedule)?;
         }
         "info" => {
             flags.finish()?;
@@ -851,6 +898,91 @@ fn run_serve_cmd(cfg: &ExperimentConfig) -> Result<(), String> {
     server.run().map_err(|e| format!("serve: {e}"))
 }
 
+/// `astir exchange-hub`: the socket rendezvous one multi-process sharded
+/// fleet runs its support exchanges through (workers: `astir
+/// shard-worker`). Serves exactly one fleet session, then exits.
+fn run_exchange_hub_cmd(
+    addr: &str,
+    shards: usize,
+    join_timeout_ms: Option<u64>,
+    round_timeout_ms: Option<u64>,
+) -> Result<(), String> {
+    let mut opts = HubOpts::new(addr, shards);
+    if let Some(ms) = join_timeout_ms {
+        opts.join_timeout = std::time::Duration::from_millis(ms);
+    }
+    opts.round_timeout = round_timeout_ms.map(std::time::Duration::from_millis);
+    let hub = ExchangeHub::bind(opts).map_err(|e| format!("bind {addr}: {e}"))?;
+    let bound = hub.addr().map_err(|e| format!("hub addr: {e}"))?;
+    // Same scrape contract as `astir serve`: a parent process reads the
+    // resolved address (port 0 = ephemeral) from this stdout line.
+    println!("listening on {bound}");
+    println!("exchange hub: one S={shards} fleet session");
+    let report = hub.run().map_err(|e| format!("exchange hub: {e}"))?;
+    println!("hub-report rounds={} degraded={:?}", report.rounds, report.degraded);
+    Ok(())
+}
+
+/// `astir shard-worker`: one shard of a multi-process sharded recovery,
+/// exchanging support votes through an `astir exchange-hub`. Every
+/// worker of a fleet must be launched with the same problem flags,
+/// `--seed`, and shard axes; the run is then bit-identical to
+/// `astir async --shards S` in one process.
+fn run_shard_worker_cmd(
+    cfg: &ExperimentConfig,
+    hub: &str,
+    shard: usize,
+    schedule: &SpeedSchedule,
+) -> Result<(), String> {
+    let mut rng = Rng::seed_from(cfg.seed);
+    let problem = cfg.problem.generate(&mut rng);
+    let opts = AsyncOpts {
+        gamma: cfg.gamma,
+        tolerance: cfg.tolerance,
+        max_local_iters: cfg.max_iters,
+        schedule: schedule.clone(),
+        ..Default::default()
+    };
+    // Same run-seed derivation as `run_async_cmd`'s sharded path — that
+    // is what makes the fleet bit-identical to the in-process pool.
+    let seed = cfg.seed ^ 0xA5;
+    let sh = cfg.shard.shard_opts();
+    let nb = problem.spec.num_blocks();
+    if sh.shards > nb {
+        return Err(format!(
+            "--shards {} exceeds the {} measurement blocks (m/b); lower --shards or --b",
+            sh.shards, nb
+        ));
+    }
+    println!(
+        "joining {hub} as shard {shard}/{}: alg={} E={} protocol={}",
+        sh.shards,
+        cfg.alg.as_str(),
+        sh.exchange_period,
+        sh.protocol.as_str()
+    );
+    let transport =
+        join_fleet(&problem, hub, shard, &sh).map_err(|e| format!("shard {shard}: {e}"))?;
+    // Scrape line for drivers/tests: the fleet is assembled and the
+    // session has started once this prints.
+    println!("joined hub as shard {shard}");
+    let run = run_joined(&problem, transport, shard, &sh, cfg.alg, &opts, seed)
+        .map_err(|e| format!("shard {shard}: {e}"))?;
+    let o = &run.outcome;
+    println!(
+        "shard-result shard={shard} converged={} iters={} rounds={} stale_rounds={} \
+         residual_bits={:016x} error_bits={:016x} x_fnv={:016x}",
+        o.converged,
+        o.iters,
+        run.rounds,
+        run.stale_rounds,
+        o.residual.to_bits(),
+        o.final_error.to_bits(),
+        x_digest(&o.x)
+    );
+    Ok(())
+}
+
 fn print_info(cfg: &ExperimentConfig) {
     println!("astir {} — asynchronous sparse recovery (Needell & Woolf 2017)", astir::VERSION);
     println!("\n[config]");
@@ -936,6 +1068,12 @@ COMMANDS
                                many jobs against ONE shared operator
   serve                        TCP front-end for the recovery service: typed v1
                                job API, operator cache, deadline micro-batching
+  exchange-hub                 rendezvous for a multi-process sharded fleet: S
+                               shard processes swap vote snapshots through it
+                               (one fleet session per run; wire v1 framing)
+  shard-worker                 one shard of a distributed sharded recovery;
+                               bit-identical to `async --shards S` in-process
+                               when every worker shares flags and --seed
   lint                         concurrency-hygiene static analysis (hard CI
                                gate: atomic-ordering justifications, the
                                crate::sync doorway, SAFETY comments, hygiene,
@@ -993,6 +1131,21 @@ SERVE FLAGS (astir serve; TOML [serve] section: addr/workers/batch_window_ms/
                        in-process solve_job with the same seed; default 2)
   --max-inflight N     admission cap; excess jobs get a typed `busy` rejection
                        instead of queueing (default 64)
+
+DISTRIBUTED FLAGS (astir exchange-hub / shard-worker)
+  --addr host:port     hub bind address (default 127.0.0.1:7879; port 0 =
+                       ephemeral, scraped from the `listening on` line)
+  --hub host:port      hub address a worker joins (default 127.0.0.1:7879)
+  --shard K            this worker's shard id in 0..S
+  --shards S           fleet size (hub and every worker must agree)
+  --join-timeout-ms T  hub: fleet-assembly window before starting degraded
+                       (default 30000)
+  --round-timeout-ms T hub: per-peer round deadline; a worker that misses it
+                       is retired and its last snapshot merged stale
+                       (default: derived from the staleness bound E)
+  plus, for workers, the SHARD FLAGS above and the same problem flags /
+  --seed as `astir async` — identical flags across the fleet give a run
+  bit-identical to the in-process `astir async --shards S`
 
 LINT FLAGS (astir lint)
   --root DIR           crate root to lint (default: ./ or ./rust, whichever

@@ -516,6 +516,169 @@ impl StatsSnapshot {
     }
 }
 
+// --------------------------------------------------- exchange frames (v1)
+
+/// A shard process announcing itself to `astir exchange-hub`. The reply
+/// ([`ExchangeJoined`]) is withheld until the whole fleet has joined (or
+/// the join window closes), so it doubles as the session start barrier.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ExchangeJoin {
+    /// This worker's shard id in `0..shards`.
+    pub shard: usize,
+    /// Fleet size `S` the worker was configured with; every joiner must
+    /// agree or the hub rejects with [`ServeError::Incompatible`].
+    pub shards: usize,
+    /// Tally dimension `n` — the length of every vote snapshot.
+    pub n: usize,
+    /// Local steps between exchanges (`E`). The hub derives its per-peer
+    /// round deadline from the largest `E` in the fleet.
+    pub exchange_period: usize,
+}
+
+/// Hub → worker: the fleet is assembled, rounds may begin.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ExchangeJoined {
+    /// Fleet size the hub is running (echoed for sanity).
+    pub shards: usize,
+    /// The per-peer round deadline the hub will enforce, so the worker
+    /// can bound its own reply reads a margin above it.
+    pub round_timeout_ms: u64,
+}
+
+/// One shard's vote snapshot for one exchange round. `votes` is the
+/// shard's **own contribution** (live tally minus previously folded peer
+/// votes) — exactly what `ExchangeBoard::publish_and_wait` receives.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ExchangePublish {
+    pub shard: usize,
+    /// 1-based round number; must match the round the hub is assembling
+    /// (a stale or future round is [`ServeError::Incompatible`]).
+    pub round: u64,
+    /// Sticky convergence flag, the `finished` bit of the in-process
+    /// barrier: once raised the shard keeps republishing until the whole
+    /// fleet is done.
+    pub finished: bool,
+    pub votes: Vec<i64>,
+}
+
+/// Hub → worker: the completed round's merged view. `merged` includes the
+/// receiving shard's own snapshot (its peer sum is `merged - own`, exact
+/// in `i64`), so one payload serves the whole fleet.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ExchangeView {
+    /// Echo of the completed round number.
+    pub round: u64,
+    /// How many shards are done — the worker exits when this reaches
+    /// `S`. Dead peers count as finished (they can never un-finish).
+    pub finished_shards: usize,
+    /// How many peers missed this round (dead or never joined) and were
+    /// merged from their last snapshot — the `Degraded` signal.
+    pub stale_peers: usize,
+    pub merged: Vec<i64>,
+}
+
+/// Clean goodbye after the worker has seen `finished_shards == S`. Not
+/// acknowledged; the hub records the shard as cleanly finished rather
+/// than degraded.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ExchangeLeave {
+    pub shard: usize,
+}
+
+impl ExchangeJoin {
+    pub(crate) fn write_json(&self, out: &mut String) {
+        let _ = write!(
+            out,
+            "{{\"shard\":{},\"shards\":{},\"n\":{},\"exchange_period\":{}}}",
+            self.shard, self.shards, self.n, self.exchange_period
+        );
+    }
+
+    pub fn from_json(j: &Json) -> Result<ExchangeJoin, ServeError> {
+        Ok(ExchangeJoin {
+            shard: req_usize(j, "shard")?,
+            shards: req_usize(j, "shards")?,
+            n: req_usize(j, "n")?,
+            exchange_period: req_usize(j, "exchange_period")?,
+        })
+    }
+}
+
+impl ExchangeJoined {
+    pub(crate) fn write_json(&self, out: &mut String) {
+        let _ = write!(
+            out,
+            "{{\"shards\":{},\"round_timeout_ms\":{}}}",
+            self.shards, self.round_timeout_ms
+        );
+    }
+
+    pub fn from_json(j: &Json) -> Result<ExchangeJoined, ServeError> {
+        Ok(ExchangeJoined {
+            shards: req_usize(j, "shards")?,
+            round_timeout_ms: req_u64(j, "round_timeout_ms")?,
+        })
+    }
+}
+
+impl ExchangePublish {
+    pub(crate) fn write_json(&self, out: &mut String) {
+        let _ = write!(
+            out,
+            "{{\"shard\":{},\"round\":{},\"finished\":{},\"votes\":",
+            self.shard, self.round, self.finished
+        );
+        write_i64_array(out, &self.votes);
+        out.push('}');
+    }
+
+    pub fn from_json(j: &Json) -> Result<ExchangePublish, ServeError> {
+        Ok(ExchangePublish {
+            shard: req_usize(j, "shard")?,
+            round: req_u64(j, "round")?,
+            finished: req_bool(j, "finished")?,
+            votes: i64_array(
+                j.get("votes").ok_or_else(|| malformed("missing array field `votes`"))?,
+                "votes",
+            )?,
+        })
+    }
+}
+
+impl ExchangeView {
+    pub(crate) fn write_json(&self, out: &mut String) {
+        let _ = write!(
+            out,
+            "{{\"round\":{},\"finished_shards\":{},\"stale_peers\":{},\"merged\":",
+            self.round, self.finished_shards, self.stale_peers
+        );
+        write_i64_array(out, &self.merged);
+        out.push('}');
+    }
+
+    pub fn from_json(j: &Json) -> Result<ExchangeView, ServeError> {
+        Ok(ExchangeView {
+            round: req_u64(j, "round")?,
+            finished_shards: req_usize(j, "finished_shards")?,
+            stale_peers: req_usize(j, "stale_peers")?,
+            merged: i64_array(
+                j.get("merged").ok_or_else(|| malformed("missing array field `merged`"))?,
+                "merged",
+            )?,
+        })
+    }
+}
+
+impl ExchangeLeave {
+    pub(crate) fn write_json(&self, out: &mut String) {
+        let _ = write!(out, "{{\"shard\":{}}}", self.shard);
+    }
+
+    pub fn from_json(j: &Json) -> Result<ExchangeLeave, ServeError> {
+        Ok(ExchangeLeave { shard: req_usize(j, "shard")? })
+    }
+}
+
 // ------------------------------------------------ shared JSON primitives
 
 /// Shortest-round-trip `f64` (non-finite → `null`, like the bench
@@ -549,6 +712,55 @@ pub(crate) fn f64_array(j: &Json, key: &str) -> Result<Vec<f64>, ServeError> {
             _ => Err(malformed(format!("`{key}` entries must be numbers"))),
         })
         .collect()
+}
+
+/// Exact `i64` over a JSON layer whose numbers are `f64`-backed: values
+/// within the exact-integer window `±2^53` travel as plain numbers;
+/// anything beyond travels as a decimal **string** so no bits are lost.
+/// [`i64_array`] accepts both forms per entry.
+pub(crate) fn push_i64(out: &mut String, v: i64) {
+    const EXACT: i64 = 1 << 53;
+    if (-EXACT..=EXACT).contains(&v) {
+        let _ = write!(out, "{v}");
+    } else {
+        let _ = write!(out, "\"{v}\"");
+    }
+}
+
+pub(crate) fn write_i64_array(out: &mut String, vals: &[i64]) {
+    out.push('[');
+    for (i, &v) in vals.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        push_i64(out, v);
+    }
+    out.push(']');
+}
+
+/// Decode a vote vector written by [`write_i64_array`]. Numbers outside
+/// the exact window are rejected rather than silently rounded.
+pub(crate) fn i64_array(j: &Json, key: &str) -> Result<Vec<i64>, ServeError> {
+    const EXACT: f64 = 9_007_199_254_740_992.0;
+    let arr = j.as_arr().ok_or_else(|| malformed(format!("`{key}` must be an array")))?;
+    arr.iter()
+        .map(|v| match v {
+            Json::Num(x) if x.fract() == 0.0 && x.abs() <= EXACT => Ok(*x as i64),
+            Json::Num(x) => {
+                Err(malformed(format!("`{key}` entry {x} is not an exact integer")))
+            }
+            Json::Str(s) => s
+                .parse::<i64>()
+                .map_err(|_| malformed(format!("`{key}` entry `{s}` is not an i64"))),
+            _ => Err(malformed(format!("`{key}` entries must be integers"))),
+        })
+        .collect()
+}
+
+fn req_bool(j: &Json, key: &str) -> Result<bool, ServeError> {
+    j.get(key)
+        .and_then(Json::as_bool)
+        .ok_or_else(|| malformed(format!("missing boolean field `{key}`")))
 }
 
 fn req_str(j: &Json, key: &str) -> Result<String, ServeError> {
@@ -775,6 +987,83 @@ mod tests {
         assert_eq!(parsed.cache_hits, 8);
         assert_eq!(parsed.p50_s, 0.002);
         assert!(parsed.p99_s.is_nan());
+    }
+
+    #[test]
+    fn i64_votes_roundtrip_across_the_exact_window() {
+        let votes = vec![
+            0,
+            -1,
+            42,
+            i64::MAX,
+            i64::MIN,
+            (1 << 53),
+            -(1 << 53),
+            (1 << 53) + 1,
+            -(1 << 53) - 1,
+        ];
+        let mut out = String::new();
+        write_i64_array(&mut out, &votes);
+        // In-window values are plain numbers; out-of-window are strings.
+        assert!(out.contains("9007199254740992"));
+        assert!(out.contains("\"9007199254740993\""));
+        assert!(out.contains(&format!("\"{}\"", i64::MIN)));
+        let parsed = i64_array(&Json::parse(&out).unwrap(), "votes").unwrap();
+        assert_eq!(parsed, votes);
+        // Non-exact numbers are typed errors, not silent rounding.
+        let frac = Json::parse("[1.5]").unwrap();
+        assert!(matches!(i64_array(&frac, "v"), Err(ServeError::Malformed(_))));
+        let big = Json::parse("[1e300]").unwrap();
+        assert!(matches!(i64_array(&big, "v"), Err(ServeError::Malformed(_))));
+    }
+
+    #[test]
+    fn exchange_frames_roundtrip() {
+        let join = ExchangeJoin { shard: 2, shards: 4, n: 16, exchange_period: 8 };
+        let j = Json::parse(&{
+            let mut s = String::new();
+            join.write_json(&mut s);
+            s
+        })
+        .unwrap();
+        assert_eq!(ExchangeJoin::from_json(&j).unwrap(), join);
+
+        let publish = ExchangePublish {
+            shard: 1,
+            round: 3,
+            finished: true,
+            votes: vec![-5, 0, i64::MAX, i64::MIN],
+        };
+        let j = Json::parse(&{
+            let mut s = String::new();
+            publish.write_json(&mut s);
+            s
+        })
+        .unwrap();
+        assert_eq!(ExchangePublish::from_json(&j).unwrap(), publish);
+
+        let view = ExchangeView {
+            round: 3,
+            finished_shards: 2,
+            stale_peers: 1,
+            merged: vec![7, -9, 1 << 60],
+        };
+        let j = Json::parse(&{
+            let mut s = String::new();
+            view.write_json(&mut s);
+            s
+        })
+        .unwrap();
+        assert_eq!(ExchangeView::from_json(&j).unwrap(), view);
+
+        let leave = ExchangeLeave { shard: 3 };
+        let j = Json::parse(&{
+            let mut s = String::new();
+            leave.write_json(&mut s);
+            s
+        })
+        .unwrap();
+        assert_eq!(ExchangeLeave::from_json(&j).unwrap(), leave);
     }
 
     #[test]

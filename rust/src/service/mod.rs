@@ -55,6 +55,7 @@
 
 pub mod api;
 pub mod server;
+pub mod transport;
 pub mod wire;
 
 use std::time::{Duration, Instant};
@@ -62,8 +63,8 @@ use std::time::{Duration, Instant};
 use crate::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use crate::sync::{thread, Arc, Condvar, Mutex};
 
-use crate::algorithms::{Alg, ShardedKernel, StoGradMpKernel, StoihtKernel, SupportKernel};
-use crate::async_runtime::{drive_worker, AsyncOpts, WorkerDriver};
+use crate::algorithms::{Alg, StoGradMpKernel, StoihtKernel, SupportKernel};
+use crate::async_runtime::{drive_worker, AsyncOpts};
 use crate::coordinator::{split_rngs, ResultSlots};
 use crate::linalg::{MeasureOp, ProxyCol, SparseIterate};
 use crate::problem::Problem;
@@ -456,8 +457,8 @@ impl ShardedOutcome {
 
 /// Real-thread sharded-tally recovery: `S` shards, each a scoped OS thread
 /// owning a contiguous slice of the measurement blocks (via
-/// [`ShardedKernel`]) and a **local** tally, running the identical
-/// [`WorkerDriver`] loop body as the single-tally runtimes in
+/// [`crate::algorithms::ShardedKernel`]) and a **local** tally, running
+/// the identical `WorkerDriver` loop body as the single-tally runtimes in
 /// `E`-iteration segments between barrier-synchronized support exchanges
 /// on a [`crate::tally::ExchangeBoard`].
 ///
@@ -522,119 +523,37 @@ impl ShardedPool {
             let winner = out.converged.then_some(0);
             return ShardedOutcome { shards: vec![out], winner, rounds: 0, wall: start.elapsed() };
         }
-        let spec = &problem.spec;
         let e = sh.exchange_period as u64;
         let periods = opts.schedule.periods(shards);
-        let board = ExchangeBoard::new(shards, spec.n);
-        // Never raised: every shard runs to its own completion so that the
-        // outcome is independent of thread scheduling.
-        let stop = AtomicBool::new(false);
+        let board = ExchangeBoard::new(shards, problem.spec.n);
         let slots: ResultSlots<(JobOutcome, u64)> = ResultSlots::new(shards);
         let start = Instant::now();
         thread::scope(|scope| {
             for k in 0..shards {
-                let (board, stop, slots) = (&board, &stop, &slots);
+                let (board, slots) = (&board, &slots);
                 let (make_step, periods) = (&make_step, &periods);
                 scope.spawn(move || {
-                    let mut rng = Rng::seed_from(seed).split(k as u64);
-                    let mut step = ShardedKernel::new(make_step(problem), k, shards);
-                    // Gossip reads and votes one live tally (peer sums
-                    // baked in); leader-merge votes `tally` but reads a
-                    // `frozen` merged view refreshed at each exchange.
-                    let tally = AtomicTally::new(spec.n, opts.weighting);
-                    let frozen = AtomicTally::new(spec.n, opts.weighting);
-                    let counter = AtomicU64::new(0);
-                    let mut driver = WorkerDriver::new();
-                    let mut x = SparseIterate::zeros(spec.n);
-                    let mut own_snap = vec![0i64; spec.n];
-                    // Peer votes currently baked into `tally` (gossip
-                    // only; stays zero under leader-merge).
-                    let mut peer = vec![0i64; spec.n];
-                    let mut new_peer: Vec<i64> = Vec::new();
-                    let mut merged: Vec<i64> = Vec::new();
-                    let mut delta = vec![0i64; spec.n];
-                    let mut finished = false;
-                    let mut won: Option<f64> = None;
-                    let mut wall = Duration::ZERO;
-                    let shard_start = Instant::now();
-                    let mut rounds = 0u64;
-                    loop {
-                        rounds += 1;
-                        // Own contribution = live tally minus the baked-in
-                        // peer base (a finished shard republishes the same
-                        // snapshot, keeping the merge deterministic).
-                        tally.snapshot_into(&mut own_snap);
-                        for (o, p) in own_snap.iter_mut().zip(&peer) {
-                            *o -= *p;
-                        }
-                        board.publish_and_wait(k, &own_snap, finished);
-                        // Latched at the barrier above: identical in every
-                        // shard this round, hence a deterministic exit.
-                        let done = board.finished_count();
-                        if !finished {
-                            match sh.protocol {
-                                ExchangeProtocol::Gossip => {
-                                    board.peer_sum_into(k, &mut new_peer);
-                                    for ((d, np), pb) in
-                                        delta.iter_mut().zip(&new_peer).zip(&peer)
-                                    {
-                                        *d = *np - *pb;
-                                    }
-                                    tally.add_votes(&delta);
-                                    std::mem::swap(&mut peer, &mut new_peer);
-                                }
-                                ExchangeProtocol::LeaderMerge => {
-                                    board.merged_into(&mut merged);
-                                    frozen.store_votes(&merged);
-                                }
-                            }
-                        }
-                        board.wait();
-                        if done == shards {
-                            break;
-                        }
-                        if finished {
-                            continue;
-                        }
-                        let (read, vote) = match sh.protocol {
-                            ExchangeProtocol::Gossip => (&tally, &tally),
-                            ExchangeProtocol::LeaderMerge => (&frozen, &tally),
-                        };
-                        won = driver.drive(
-                            &mut step,
-                            &mut x,
-                            spec.s,
-                            opts,
-                            periods[k],
-                            &mut rng,
-                            read,
-                            vote,
-                            stop,
-                            &counter,
-                            rounds * e,
-                        );
-                        if won.is_some() || driver.local_iters() >= opts.max_local_iters as u64 {
-                            finished = true;
-                            wall = shard_start.elapsed();
-                        }
-                    }
-                    let iters = driver.local_iters();
-                    let (converged, residual) = match won {
-                        Some(r) => (true, r),
-                        None => (false, problem.residual_norm(x.values())),
-                    };
-                    let final_error = problem.recovery_error(x.values());
-                    let out = JobOutcome {
-                        converged,
-                        iters,
-                        residual,
-                        final_error,
-                        x: x.into_values(),
-                        wall,
-                    };
+                    // The in-process board behind the same transport
+                    // doorway the socket hub uses: `run_shard` is the
+                    // pre-transport per-shard loop body verbatim, so the
+                    // pool stays bit-identical across the refactor (and
+                    // to a multi-process fleet at the same axes).
+                    let mut transport = transport::BoardTransport::new(board, k);
+                    let run = transport::run_shard(
+                        problem,
+                        &mut transport,
+                        k,
+                        sh.protocol,
+                        e,
+                        opts,
+                        periods[k],
+                        seed,
+                        |p| make_step(p),
+                    )
+                    .expect("the in-process exchange cannot fail");
                     // Slot protocol: shard k is slot k's only writer; the
                     // scope join below is the publication edge.
-                    slots.put(k, (out, rounds.saturating_sub(1)));
+                    slots.put(k, (run.outcome, run.rounds));
                 });
             }
         });

@@ -50,7 +50,7 @@
 //!   (or micro-batch window) answers [`ServeError::WorkerPanic`] for the
 //!   affected jobs only, releases its admission slots, and the server
 //!   keeps serving. Server-side locks recover from poisoning
-//!   ([`lock_recover`]) — the guarded state (cache entries, counters,
+//!   (`lock_recover`) — the guarded state (cache entries, counters,
 //!   batcher queue) stays structurally valid across an unwind, so one
 //!   hostile frame can never wedge every later handler at
 //!   `.lock().unwrap()`.
@@ -102,12 +102,12 @@ pub const CONN_BACKLOG: usize = 256;
 /// critical section in this module leaves its state structurally valid
 /// at any unwind point (plain `Vec`/counter edits; the batcher's
 /// open-window flag is only toggled with no panic source in between).
-fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|p| p.into_inner())
 }
 
 /// [`Condvar::wait`] with the same poison recovery as [`lock_recover`].
-fn wait_recover<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+pub(crate) fn wait_recover<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
     cv.wait(guard).unwrap_or_else(|p| p.into_inner())
 }
 

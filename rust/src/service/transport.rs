@@ -1,0 +1,1204 @@
+//! Socket-backed exchange transport: the [`crate::tally::ExchangeBoard`]
+//! rendezvous behind an [`ExchangeTransport`] trait, so `S` shard
+//! **processes** — not just threads — run the unmodified
+//! [`ShardedKernel`] loop and swap `i64` vote snapshots through a
+//! lightweight exchange hub (`astir exchange-hub`).
+//!
+//! ## Architecture
+//!
+//! * [`ExchangeTransport`] — one exchange round abstracted over where the
+//!   peers live: publish a snapshot, receive the round's **merged view**
+//!   (which includes the caller's own snapshot — the gossip peer sum is
+//!   `merged − own`, exact in `i64`), then release the round.
+//! * [`BoardTransport`] — the in-process board as a transport.
+//!   [`super::ShardedPool`] runs on this, and `run_shard` is a verbatim
+//!   port of its PR 9 loop body, so the refactor is pinned bit-identical
+//!   by the existing sharded test/bench tiers.
+//! * [`ExchangeHub`] — a TCP rendezvous speaking the [`super::wire`]
+//!   length-prefixed JSON framing with the versioned frame types of
+//!   [`super::api`] (`join` / `publish` / `leave` requests, `joined` /
+//!   `view` / `error` replies). One fleet per hub run: `S` workers join
+//!   (the `joined` reply is the fleet-assembly barrier), publish once per
+//!   round, and each receives the round's merged view.
+//! * [`HubTransport`] — the worker-side client; [`run_worker`] wires it
+//!   under `run_shard` for the `astir shard-worker` CLI.
+//!
+//! ## Determinism
+//!
+//! The merged view is a commutative exact `i64` sum of every shard's
+//! latest snapshot, and the worker derives its gossip peer sum as
+//! `merged − own` — bit-identical to the board's `peer_sum_into`. With
+//! every peer healthy, a hub fleet at `(S, E, protocol, seed)` therefore
+//! reproduces the in-process [`super::ShardedPool`] result **bit for
+//! bit** (pinned in-crate below and end-to-end over real processes by
+//! `rust/tests/distributed_e2e.rs`).
+//!
+//! ## Failure semantics (the `Degraded` path)
+//!
+//! The bounded-staleness math is exactly the slack a lossy fleet needs:
+//! a shard that misses a round is not waited for forever. Per-peer
+//! deadlines derive from the staleness bound `E` (base grace + time
+//! proportional to the largest `E` in the fleet, unless pinned by
+//! `--round-timeout-ms`): a worker that does not publish within the
+//! deadline of its previous reply — or whose connection breaks — is
+//! **retired**. Its last snapshot keeps being merged (stale), it counts
+//! as finished so the fleet can still drain, and every subsequent
+//! [`ExchangeView`] reports it in `stale_peers` so the survivors know
+//! they are running degraded. Nothing ever blocks unboundedly: every hub
+//! read and write carries a deadline, the worker bounds its reply reads
+//! a margin above the hub's round deadline, and a round closes either by
+//! its last publish or by the deadline of the straggler holding it open.
+//!
+//! Version or shape mismatches (wrong `api_version`, `S` or `n`
+//! disagreement, duplicate shard ids, stale round numbers) are rejected
+//! with typed [`ServeError`]s surfaced as [`TransportError::Rejected`] —
+//! a misconfigured worker fails loudly instead of corrupting a merge.
+
+use std::io;
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use crate::sync::atomic::{AtomicBool, AtomicU64};
+use crate::sync::{thread, Arc, Condvar, Mutex};
+
+use crate::algorithms::{Alg, ShardedKernel, StoGradMpKernel, StoihtKernel, SupportKernel};
+use crate::async_runtime::{AsyncOpts, WorkerDriver};
+use crate::linalg::SparseIterate;
+use crate::problem::Problem;
+use crate::rng::Rng;
+use crate::service::api::{
+    ExchangeJoin, ExchangeJoined, ExchangeLeave, ExchangePublish, ExchangeView, ServeError,
+};
+use crate::service::server::{lock_recover, wait_recover};
+use crate::service::wire::{
+    connect_stream, read_frame, write_frame, HubReply, HubRequest, DEFAULT_CONNECT_TIMEOUT,
+};
+use crate::service::JobOutcome;
+use crate::sim::ShardOpts;
+use crate::tally::{AtomicTally, ExchangeBoard, ExchangeProtocol};
+
+/// Accept/session-start poll interval for the hub's main loop.
+const ACCEPT_POLL: Duration = Duration::from_millis(10);
+
+/// Socket write deadline on both ends (a peer that stops draining must
+/// not wedge a round).
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Worker-side bound on the `joined` reply — it doubles as the
+/// fleet-assembly barrier, so it is bounded by the hub's join window
+/// (default 30 s) rather than a round deadline.
+const JOIN_REPLY_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Worker-side slack above the hub's per-peer round deadline: the hub,
+/// not the worker's own read, is the round's timekeeper.
+const READ_MARGIN: Duration = Duration::from_secs(10);
+
+/// Per-peer round deadline derived from the staleness bound: a base
+/// grace plus an allowance proportional to the largest `E` in the fleet
+/// (a shard computes `E` local steps between publishes).
+fn derived_round_timeout(max_period: usize) -> Duration {
+    Duration::from_millis(2_000 + 25 * max_period as u64)
+}
+
+// ------------------------------------------------------------ the trait
+
+/// What a shard learns from one completed exchange round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RoundInfo {
+    /// Shards done iterating (converged or at their cap) as latched at
+    /// this round — identical in every shard, hence a deterministic
+    /// fleet exit at `finished_shards == S`. Dead peers count as
+    /// finished (they can never un-finish).
+    pub finished_shards: usize,
+    /// Peers that missed this round (dead or never joined) and were
+    /// merged from their last snapshot — `> 0` means the fleet is
+    /// degraded. Always `0` in-process.
+    pub stale_peers: usize,
+}
+
+/// Errors a socket-backed exchange can surface. The in-process board
+/// never fails.
+#[derive(Debug)]
+pub enum TransportError {
+    /// Socket-level failure: connect, read, write, or a missed deadline.
+    Io(io::Error),
+    /// The peer spoke, but not the protocol we expect (undecodable
+    /// frame, wrong round echo, wrong view dimensions).
+    Protocol(String),
+    /// The hub rejected this worker with a typed error (version/shape
+    /// mismatch, duplicate shard id, closed join window).
+    Rejected(ServeError),
+    /// The hub hung up where a reply was expected.
+    HubClosed,
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Io(e) => write!(f, "transport i/o: {e}"),
+            TransportError::Protocol(m) => write!(f, "transport protocol: {m}"),
+            TransportError::Rejected(e) => write!(f, "rejected by hub: {e}"),
+            TransportError::HubClosed => write!(f, "hub closed the connection"),
+        }
+    }
+}
+
+impl From<io::Error> for TransportError {
+    fn from(e: io::Error) -> TransportError {
+        TransportError::Io(e)
+    }
+}
+
+/// One round of the two-crossing exchange rendezvous, abstracted over
+/// where the peers live (in-process [`ExchangeBoard`] or a TCP
+/// [`ExchangeHub`]).
+pub trait ExchangeTransport {
+    /// Fleet size `S`.
+    fn shards(&self) -> usize;
+
+    /// First crossing: publish this shard's snapshot (plus its sticky
+    /// `finished` flag), block until every live peer has published, and
+    /// fill `merged_out` with the round's merged view. The view includes
+    /// the caller's own snapshot: its peer sum is `merged − own`, exact
+    /// in `i64`.
+    fn exchange(
+        &mut self,
+        own: &[i64],
+        finished: bool,
+        merged_out: &mut Vec<i64>,
+    ) -> Result<RoundInfo, TransportError>;
+
+    /// Second crossing: release the round, so no shard can overwrite
+    /// state a peer is still reading. A no-op over sockets — the hub
+    /// snapshots each round's view into an immutable payload, so there
+    /// is nothing a later publish could race with.
+    fn complete_round(&mut self) -> Result<(), TransportError>;
+}
+
+// ---------------------------------------------------- in-process board
+
+/// The in-process [`ExchangeBoard`] as a transport — PR 9's rendezvous
+/// semantics verbatim, which is what pins [`super::ShardedPool`] (and
+/// through it this refactor) bit-identical to the pre-transport loop.
+pub struct BoardTransport<'a> {
+    board: &'a ExchangeBoard,
+    shard: usize,
+}
+
+impl<'a> BoardTransport<'a> {
+    /// Wrap one shard's view of a shared board.
+    pub fn new(board: &'a ExchangeBoard, shard: usize) -> BoardTransport<'a> {
+        assert!(shard < board.shards(), "shard id out of range");
+        BoardTransport { board, shard }
+    }
+}
+
+impl ExchangeTransport for BoardTransport<'_> {
+    fn shards(&self) -> usize {
+        self.board.shards()
+    }
+
+    fn exchange(
+        &mut self,
+        own: &[i64],
+        finished: bool,
+        merged_out: &mut Vec<i64>,
+    ) -> Result<RoundInfo, TransportError> {
+        self.board.publish_and_wait(self.shard, own, finished);
+        // Latched at the barrier above: identical in every shard this
+        // round, hence a deterministic exit.
+        let finished_shards = self.board.finished_count();
+        self.board.merged_into(merged_out);
+        Ok(RoundInfo { finished_shards, stale_peers: 0 })
+    }
+
+    fn complete_round(&mut self) -> Result<(), TransportError> {
+        self.board.wait();
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------ the shard loop
+
+/// Result of one shard's run against a transport.
+#[derive(Clone, Debug)]
+pub struct ShardRun {
+    /// The shard's recovery outcome (same shape as a pool job's).
+    pub outcome: JobOutcome,
+    /// Exchange rounds completed before the fleet drained (matches
+    /// [`super::ShardedOutcome::rounds`]).
+    pub rounds: u64,
+    /// Rounds this shard saw `stale_peers > 0` — how long it ran
+    /// degraded. Always `0` in-process.
+    pub stale_rounds: u64,
+}
+
+/// The sharded-recovery loop body, generic over the transport: PR 9's
+/// [`super::ShardedPool`] per-shard thread, lifted verbatim with the
+/// board calls routed through [`ExchangeTransport`]. Both the in-process
+/// pool and the `shard-worker` CLI run **this** function, which is what
+/// makes a multi-process fleet bit-identical to the threaded pool.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_shard<'p, K, T, F>(
+    problem: &'p Problem,
+    transport: &mut T,
+    shard: usize,
+    protocol: ExchangeProtocol,
+    exchange_period: u64,
+    opts: &AsyncOpts,
+    period: usize,
+    seed: u64,
+    make_step: F,
+) -> Result<ShardRun, TransportError>
+where
+    K: SupportKernel + 'p,
+    T: ExchangeTransport,
+    F: FnOnce(&'p Problem) -> K,
+{
+    let spec = &problem.spec;
+    let shards = transport.shards();
+    let e = exchange_period;
+    let mut rng = Rng::seed_from(seed).split(shard as u64);
+    let mut step = ShardedKernel::new(make_step(problem), shard, shards);
+    // Gossip reads and votes one live tally (peer sums baked in);
+    // leader-merge votes `tally` but reads a `frozen` merged view
+    // refreshed at each exchange.
+    let tally = AtomicTally::new(spec.n, opts.weighting);
+    let frozen = AtomicTally::new(spec.n, opts.weighting);
+    let counter = AtomicU64::new(0);
+    // Never raised: every shard runs to its own completion so that the
+    // outcome is independent of scheduling (thread or process).
+    let stop = AtomicBool::new(false);
+    let mut driver = WorkerDriver::new();
+    let mut x = SparseIterate::zeros(spec.n);
+    let mut own_snap = vec![0i64; spec.n];
+    // Peer votes currently baked into `tally` (gossip only; stays zero
+    // under leader-merge).
+    let mut peer = vec![0i64; spec.n];
+    let mut new_peer: Vec<i64> = Vec::new();
+    let mut merged: Vec<i64> = Vec::new();
+    let mut delta = vec![0i64; spec.n];
+    let mut finished = false;
+    let mut won: Option<f64> = None;
+    let mut wall = Duration::ZERO;
+    let shard_start = Instant::now();
+    let mut rounds = 0u64;
+    let mut stale_rounds = 0u64;
+    loop {
+        rounds += 1;
+        // Own contribution = live tally minus the baked-in peer base (a
+        // finished shard republishes the same snapshot, keeping the
+        // merge deterministic).
+        tally.snapshot_into(&mut own_snap);
+        for (o, p) in own_snap.iter_mut().zip(&peer) {
+            *o -= *p;
+        }
+        let info = transport.exchange(&own_snap, finished, &mut merged)?;
+        let done = info.finished_shards;
+        if info.stale_peers > 0 {
+            stale_rounds += 1;
+        }
+        if !finished {
+            match protocol {
+                ExchangeProtocol::Gossip => {
+                    // Peer sum = merged view minus our own snapshot —
+                    // exact i64 arithmetic, bit-identical to the board's
+                    // `peer_sum_into`.
+                    new_peer.clear();
+                    new_peer.extend(merged.iter().zip(&own_snap).map(|(m, o)| m - o));
+                    for ((d, np), pb) in delta.iter_mut().zip(&new_peer).zip(&peer) {
+                        *d = *np - *pb;
+                    }
+                    tally.add_votes(&delta);
+                    std::mem::swap(&mut peer, &mut new_peer);
+                }
+                ExchangeProtocol::LeaderMerge => {
+                    frozen.store_votes(&merged);
+                }
+            }
+        }
+        transport.complete_round()?;
+        if done == shards {
+            break;
+        }
+        if finished {
+            continue;
+        }
+        let (read, vote) = match protocol {
+            ExchangeProtocol::Gossip => (&tally, &tally),
+            ExchangeProtocol::LeaderMerge => (&frozen, &tally),
+        };
+        won = driver.drive(
+            &mut step,
+            &mut x,
+            spec.s,
+            opts,
+            period,
+            &mut rng,
+            read,
+            vote,
+            &stop,
+            &counter,
+            rounds * e,
+        );
+        if won.is_some() || driver.local_iters() >= opts.max_local_iters as u64 {
+            finished = true;
+            wall = shard_start.elapsed();
+        }
+    }
+    let iters = driver.local_iters();
+    let (converged, residual) = match won {
+        Some(r) => (true, r),
+        None => (false, problem.residual_norm(x.values())),
+    };
+    let final_error = problem.recovery_error(x.values());
+    let outcome =
+        JobOutcome { converged, iters, residual, final_error, x: x.into_values(), wall };
+    Ok(ShardRun { outcome, rounds: rounds.saturating_sub(1), stale_rounds })
+}
+
+/// One distributed shard worker, end to end: [`join_fleet`], then
+/// [`run_joined`]. This is the library body of `astir shard-worker`
+/// (which calls the two halves itself, to report fleet assembly in
+/// between).
+pub fn run_worker(
+    problem: &Problem,
+    hub: &str,
+    shard: usize,
+    sh: &ShardOpts,
+    alg: Alg,
+    opts: &AsyncOpts,
+    seed: u64,
+) -> Result<ShardRun, TransportError> {
+    let transport = join_fleet(problem, hub, shard, sh)?;
+    run_joined(problem, transport, shard, sh, alg, opts, seed)
+}
+
+/// Validate the shard axes and join the fleet at `hub`. Returns once the
+/// whole fleet has assembled (or the hub's join window lapsed).
+pub fn join_fleet(
+    problem: &Problem,
+    hub: &str,
+    shard: usize,
+    sh: &ShardOpts,
+) -> Result<HubTransport, TransportError> {
+    sh.validate().map_err(TransportError::Protocol)?;
+    if shard >= sh.shards {
+        return Err(TransportError::Protocol(format!(
+            "shard id {shard} out of range for S={}",
+            sh.shards
+        )));
+    }
+    let join = ExchangeJoin {
+        shard,
+        shards: sh.shards,
+        n: problem.spec.n,
+        exchange_period: sh.exchange_period,
+    };
+    HubTransport::connect(hub, join)
+}
+
+/// Run an already-joined worker to completion and leave cleanly.
+pub fn run_joined(
+    problem: &Problem,
+    mut transport: HubTransport,
+    shard: usize,
+    sh: &ShardOpts,
+    alg: Alg,
+    opts: &AsyncOpts,
+    seed: u64,
+) -> Result<ShardRun, TransportError> {
+    let period = opts.schedule.periods(sh.shards)[shard];
+    let e = sh.exchange_period as u64;
+    let run = match alg {
+        Alg::Stoiht => {
+            run_shard(problem, &mut transport, shard, sh.protocol, e, opts, period, seed, |p| {
+                StoihtKernel::new(p, opts.gamma)
+            })
+        }
+        Alg::StoGradMp => run_shard(
+            problem,
+            &mut transport,
+            shard,
+            sh.protocol,
+            e,
+            opts,
+            period,
+            seed,
+            StoGradMpKernel::new,
+        ),
+    }?;
+    transport.leave();
+    Ok(run)
+}
+
+/// FNV-1a over the IEEE-754 bit patterns of `xs` — a cheap cross-process
+/// bit-identity digest. `astir shard-worker` prints it per shard and the
+/// distributed end-to-end test compares it against the in-process pool's
+/// iterate, without shipping whole vectors through stdout.
+pub fn x_digest(xs: &[f64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in xs {
+        for byte in v.to_bits().to_le_bytes() {
+            h ^= u64::from(byte);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+// --------------------------------------------------- worker-side client
+
+/// Worker-side socket transport: one connection to an [`ExchangeHub`],
+/// one request/reply round trip per exchange.
+pub struct HubTransport {
+    stream: TcpStream,
+    shard: usize,
+    shards: usize,
+    n: usize,
+    round: u64,
+}
+
+impl HubTransport {
+    /// Connect and join a fleet. Blocks until the whole fleet has joined
+    /// (the hub withholds the `joined` reply until the session starts),
+    /// bounded by a 60 s join-reply deadline.
+    pub fn connect(addr: &str, join: ExchangeJoin) -> Result<HubTransport, TransportError> {
+        let mut stream = connect_stream(addr, DEFAULT_CONNECT_TIMEOUT)?;
+        // Round frames are small and strictly request/reply: waiting out
+        // Nagle/delayed-ACK would tax every exchange round.
+        let _ = stream.set_nodelay(true);
+        stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
+        stream.set_read_timeout(Some(JOIN_REPLY_TIMEOUT))?;
+        write_frame(&mut stream, &HubRequest::Join(join.clone()).to_json())?;
+        let joined = match read_reply(&mut stream)? {
+            HubReply::Joined(j) => j,
+            HubReply::Error(e) => return Err(TransportError::Rejected(e)),
+            HubReply::View(_) => {
+                return Err(TransportError::Protocol("expected a joined reply".to_string()))
+            }
+        };
+        if joined.shards != join.shards {
+            return Err(TransportError::Protocol(format!(
+                "hub runs S={}, worker configured for S={}",
+                joined.shards, join.shards
+            )));
+        }
+        // A view reply arrives within one hub round deadline of our
+        // publish (stragglers are degraded at that deadline); pad it so
+        // the hub, not this read, is the round's timekeeper.
+        let read = Duration::from_millis(joined.round_timeout_ms).saturating_add(READ_MARGIN);
+        stream.set_read_timeout(Some(read))?;
+        Ok(HubTransport {
+            stream,
+            shard: join.shard,
+            shards: join.shards,
+            n: join.n,
+            round: 0,
+        })
+    }
+
+    /// Exchange rounds completed so far.
+    pub fn rounds(&self) -> u64 {
+        self.round
+    }
+
+    /// Best-effort clean goodbye: after a leave the hub records this
+    /// shard as cleanly finished instead of degraded.
+    pub fn leave(mut self) {
+        let leave = HubRequest::Leave(ExchangeLeave { shard: self.shard });
+        let _ = write_frame(&mut self.stream, &leave.to_json());
+    }
+}
+
+impl ExchangeTransport for HubTransport {
+    fn shards(&self) -> usize {
+        self.shards
+    }
+
+    fn exchange(
+        &mut self,
+        own: &[i64],
+        finished: bool,
+        merged_out: &mut Vec<i64>,
+    ) -> Result<RoundInfo, TransportError> {
+        let publish = ExchangePublish {
+            shard: self.shard,
+            round: self.round + 1,
+            finished,
+            votes: own.to_vec(),
+        };
+        write_frame(&mut self.stream, &HubRequest::Publish(publish).to_json())?;
+        match read_reply(&mut self.stream)? {
+            HubReply::View(view) => {
+                if view.round != self.round + 1 {
+                    return Err(TransportError::Protocol(format!(
+                        "view for round {} while publishing round {}",
+                        view.round,
+                        self.round + 1
+                    )));
+                }
+                if view.merged.len() != self.n {
+                    return Err(TransportError::Protocol(format!(
+                        "merged view has {} entries, fleet runs n={}",
+                        view.merged.len(),
+                        self.n
+                    )));
+                }
+                self.round += 1;
+                merged_out.clear();
+                merged_out.extend_from_slice(&view.merged);
+                Ok(RoundInfo {
+                    finished_shards: view.finished_shards,
+                    stale_peers: view.stale_peers,
+                })
+            }
+            HubReply::Error(e) => Err(TransportError::Rejected(e)),
+            HubReply::Joined(_) => {
+                Err(TransportError::Protocol("unexpected joined reply mid-session".to_string()))
+            }
+        }
+    }
+
+    fn complete_round(&mut self) -> Result<(), TransportError> {
+        // The board needs a second crossing so no shard republishes into
+        // a slot a peer is still reading; the hub snapshots each round's
+        // view into an immutable payload at completion, so the crossing
+        // is subsumed by the publish round trip.
+        Ok(())
+    }
+}
+
+fn read_reply(stream: &mut TcpStream) -> Result<HubReply, TransportError> {
+    match read_frame(stream) {
+        Ok(Some(text)) => {
+            HubReply::parse(&text).map_err(|e| TransportError::Protocol(format!("bad reply: {e}")))
+        }
+        Ok(None) => Err(TransportError::HubClosed),
+        Err(e) => Err(TransportError::Io(e)),
+    }
+}
+
+// --------------------------------------------------------------- the hub
+
+/// Hub configuration (CLI `exchange-hub` flags).
+#[derive(Clone, Debug)]
+pub struct HubOpts {
+    /// Bind address; port 0 picks an ephemeral port (tests, benches).
+    pub addr: String,
+    /// Fleet size `S` — the hub serves exactly one fleet, then returns.
+    pub shards: usize,
+    /// How long to wait for the fleet to assemble before starting
+    /// without the missing shards (they are degraded from round 1).
+    pub join_timeout: Duration,
+    /// Per-peer round deadline; `None` derives it from the largest
+    /// staleness bound `E` in the fleet (see [`ExchangeHub`]).
+    pub round_timeout: Option<Duration>,
+}
+
+impl HubOpts {
+    /// Defaults: 30 s join window, round deadline derived from `E`.
+    pub fn new(addr: impl Into<String>, shards: usize) -> HubOpts {
+        HubOpts {
+            addr: addr.into(),
+            shards,
+            join_timeout: Duration::from_secs(30),
+            round_timeout: None,
+        }
+    }
+}
+
+/// What a hub run observed — enough for a driver to decide whether the
+/// fleet ran clean or degraded.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HubReport {
+    /// Exchange rounds completed.
+    pub rounds: u64,
+    /// Shards that never joined, missed a round deadline, or broke their
+    /// connection before finishing — their last snapshots were merged as
+    /// stale. Sorted, empty for a clean run.
+    pub degraded: Vec<usize>,
+}
+
+/// The exchange rendezvous as a one-fleet TCP server. Bind, read the
+/// address (ephemeral ports supported), then [`run`] (or [`spawn`]) to
+/// serve: accept up to `S` connections, hold the `joined` replies until
+/// the fleet is assembled, then relay publish/view rounds until every
+/// shard has finished and left.
+///
+/// [`run`]: ExchangeHub::run
+/// [`spawn`]: ExchangeHub::spawn
+pub struct ExchangeHub {
+    listener: TcpListener,
+    opts: HubOpts,
+}
+
+impl ExchangeHub {
+    /// Bind the rendezvous socket (the fleet can connect from the moment
+    /// this returns; frames are only consumed once [`ExchangeHub::run`]
+    /// starts).
+    pub fn bind(opts: HubOpts) -> io::Result<ExchangeHub> {
+        assert!(opts.shards >= 1, "a fleet needs at least one shard");
+        let listener = TcpListener::bind(&opts.addr)?;
+        Ok(ExchangeHub { listener, opts })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> io::Result<std::net::SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Serve one fleet to completion on the calling thread.
+    pub fn run(self) -> io::Result<HubReport> {
+        let shards = self.opts.shards;
+        let shared = Arc::new(HubShared::new(&self.opts));
+        let join_deadline = Instant::now() + self.opts.join_timeout;
+        self.listener.set_nonblocking(true)?;
+        let mut handlers = Vec::new();
+        let mut accepted = 0usize;
+        // Accept until the fleet is full, polling the session-start
+        // condition either way: this loop — not the handlers — is the
+        // join window's timekeeper, so no condvar timeout is needed.
+        loop {
+            if accepted < shards {
+                match self.listener.accept() {
+                    Ok((stream, _)) => {
+                        accepted += 1;
+                        let shared = Arc::clone(&shared);
+                        handlers.push(thread::spawn(move || {
+                            serve_shard(stream, &shared, join_deadline)
+                        }));
+                        continue;
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {}
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(e),
+                }
+            }
+            let started = {
+                let mut st = lock_recover(&shared.st);
+                if !st.started && (st.joined == shards || Instant::now() >= join_deadline) {
+                    st.start();
+                    shared.cv.notify_all();
+                }
+                st.started
+            };
+            if started {
+                break;
+            }
+            thread::sleep(ACCEPT_POLL);
+        }
+        // Late connects get refused fast instead of joining a dead queue.
+        drop(self.listener);
+        for h in handlers {
+            let _ = h.join();
+        }
+        let st = lock_recover(&shared.st);
+        let mut degraded = st.degraded.clone();
+        degraded.sort_unstable();
+        degraded.dedup();
+        Ok(HubReport { rounds: st.round, degraded })
+    }
+
+    /// [`ExchangeHub::run`] on a background thread (tests, benches).
+    pub fn spawn(self) -> thread::JoinHandle<io::Result<HubReport>> {
+        thread::spawn(move || self.run())
+    }
+}
+
+struct HubShared {
+    st: Mutex<HubState>,
+    cv: Condvar,
+}
+
+struct HubState {
+    shards: usize,
+    /// Tally dimension, fixed by the first join; later joiners must
+    /// match.
+    n: Option<usize>,
+    /// Pinned round deadline from the CLI, if any.
+    pinned_timeout: Option<Duration>,
+    /// The deadline in force once the session starts.
+    timeout: Duration,
+    started: bool,
+    joined: usize,
+    /// Ever joined.
+    present: Vec<bool>,
+    /// Joined and not retired.
+    alive: Vec<bool>,
+    /// Sticky per-shard finished flags (meaningful while alive).
+    finished: Vec<bool>,
+    /// Published in the round currently assembling.
+    published: Vec<bool>,
+    /// Last snapshot per shard (empty = never published = zeros).
+    last: Vec<Vec<i64>>,
+    /// Completed rounds.
+    round: u64,
+    /// The latest completed round's `view` reply, shared by every
+    /// handler of that round (the view is shard-independent because it
+    /// includes each shard's own snapshot).
+    view: Arc<String>,
+    degraded: Vec<usize>,
+    /// Largest staleness bound `E` seen at join time.
+    max_period: usize,
+}
+
+impl HubShared {
+    fn new(opts: &HubOpts) -> HubShared {
+        let s = opts.shards;
+        HubShared {
+            st: Mutex::new(HubState {
+                shards: s,
+                n: None,
+                pinned_timeout: opts.round_timeout,
+                timeout: Duration::ZERO,
+                started: false,
+                joined: 0,
+                present: vec![false; s],
+                alive: vec![false; s],
+                finished: vec![false; s],
+                published: vec![false; s],
+                last: vec![Vec::new(); s],
+                round: 0,
+                view: Arc::new(String::new()),
+                degraded: Vec::new(),
+                max_period: 0,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Record one shard's publish for the assembling round, close the
+    /// round if it is now complete, and block until it closes (either by
+    /// the last peer's publish or by a straggler's read deadline retiring
+    /// it — every non-published peer's handler sits in a bounded read,
+    /// so this wait always terminates). Returns the round's view payload.
+    fn publish(&self, shard: usize, p: ExchangePublish) -> Result<Arc<String>, ServeError> {
+        let mut st = lock_recover(&self.st);
+        if !st.alive[shard] {
+            return Err(ServeError::Invalid(format!("shard {shard} already retired")));
+        }
+        let assembling = st.round + 1;
+        if p.round != assembling {
+            return Err(ServeError::Incompatible(format!(
+                "publish for round {} but the hub is assembling round {assembling}",
+                p.round
+            )));
+        }
+        let n = st.n.unwrap_or(0);
+        if p.votes.len() != n {
+            return Err(ServeError::Incompatible(format!(
+                "vote snapshot has {} entries, fleet runs n={n}",
+                p.votes.len()
+            )));
+        }
+        st.last[shard] = p.votes;
+        if p.finished {
+            st.finished[shard] = true;
+        }
+        st.published[shard] = true;
+        if st.round_complete() {
+            st.complete_round();
+            self.cv.notify_all();
+        }
+        while st.round < assembling {
+            st = wait_recover(&self.cv, st);
+        }
+        Ok(Arc::clone(&st.view))
+    }
+
+    /// Remove a shard from the fleet: cleanly (post-finish leave) or
+    /// degraded (deadline, EOF, protocol violation). Its last snapshot
+    /// keeps being merged; if it was the last straggler of the
+    /// assembling round, the round closes so waiting peers proceed.
+    fn retire(&self, shard: usize, clean: bool) {
+        let mut st = lock_recover(&self.st);
+        if !st.alive[shard] {
+            return;
+        }
+        st.alive[shard] = false;
+        st.published[shard] = false;
+        if !(clean && st.finished[shard]) {
+            st.degraded.push(shard);
+        }
+        if st.started && st.round_complete() {
+            st.complete_round();
+        }
+        self.cv.notify_all();
+    }
+}
+
+impl HubState {
+    fn register(&mut self, join: &ExchangeJoin) -> Result<(), ServeError> {
+        if self.started {
+            return Err(ServeError::Invalid("join window closed".to_string()));
+        }
+        if join.shards != self.shards {
+            return Err(ServeError::Incompatible(format!(
+                "worker configured for S={} but hub runs S={}",
+                join.shards, self.shards
+            )));
+        }
+        if join.shard >= self.shards {
+            return Err(ServeError::Invalid(format!(
+                "shard id {} out of range for S={}",
+                join.shard, self.shards
+            )));
+        }
+        if self.present[join.shard] {
+            return Err(ServeError::Invalid(format!("shard {} already joined", join.shard)));
+        }
+        match self.n {
+            None => self.n = Some(join.n),
+            Some(n) if n != join.n => {
+                return Err(ServeError::Incompatible(format!(
+                    "tally dimension mismatch: fleet runs n={n}, joiner has n={}",
+                    join.n
+                )));
+            }
+            Some(_) => {}
+        }
+        self.present[join.shard] = true;
+        self.alive[join.shard] = true;
+        self.joined += 1;
+        self.max_period = self.max_period.max(join.exchange_period);
+        Ok(())
+    }
+
+    /// Start the session: shards that never joined are degraded from
+    /// round 1, and the round deadline is resolved.
+    fn start(&mut self) {
+        self.started = true;
+        for k in 0..self.shards {
+            if !self.present[k] {
+                self.degraded.push(k);
+            }
+        }
+        self.timeout =
+            self.pinned_timeout.unwrap_or_else(|| derived_round_timeout(self.max_period));
+    }
+
+    /// Every live shard has published the assembling round (and there is
+    /// at least one live shard — an empty fleet has no round to close).
+    fn round_complete(&self) -> bool {
+        let mut any = false;
+        for k in 0..self.shards {
+            if self.alive[k] {
+                if !self.published[k] {
+                    return false;
+                }
+                any = true;
+            }
+        }
+        any
+    }
+
+    /// Close the assembling round: merge every shard's latest snapshot
+    /// (dead and absent peers contribute their stale last — zeros if
+    /// they never published), latch the finished count, and freeze the
+    /// view payload every handler of this round replies with.
+    fn complete_round(&mut self) {
+        self.round += 1;
+        let n = self.n.unwrap_or(0);
+        let mut merged = vec![0i64; n];
+        for last in &self.last {
+            for (m, v) in merged.iter_mut().zip(last) {
+                *m += *v;
+            }
+        }
+        let alive_count = self.alive.iter().filter(|a| **a).count();
+        let finished_shards = (0..self.shards)
+            .filter(|&k| if self.alive[k] { self.finished[k] } else { true })
+            .count();
+        let view = HubReply::View(ExchangeView {
+            round: self.round,
+            finished_shards,
+            stale_peers: self.shards - alive_count,
+            merged,
+        });
+        self.view = Arc::new(view.to_json());
+        for p in &mut self.published {
+            *p = false;
+        }
+    }
+}
+
+/// One connection's handler: join, fleet barrier, then publish/view
+/// rounds until the worker leaves or fails.
+fn serve_shard(mut stream: TcpStream, shared: &HubShared, join_deadline: Instant) {
+    let _ = stream.set_nodelay(true);
+    // Bound the join read by the remaining join window plus slack; a
+    // connection that never sends a join cannot hold the hub open.
+    let join_window = join_deadline
+        .saturating_duration_since(Instant::now())
+        .saturating_add(Duration::from_secs(5));
+    if stream.set_read_timeout(Some(join_window)).is_err()
+        || stream.set_write_timeout(Some(WRITE_TIMEOUT)).is_err()
+    {
+        return;
+    }
+    let text = match read_frame(&mut stream) {
+        Ok(Some(t)) => t,
+        _ => return,
+    };
+    let join = match HubRequest::parse(&text) {
+        Ok(HubRequest::Join(j)) => j,
+        Ok(_) => {
+            reject(&mut stream, ServeError::Malformed("expected a join frame".to_string()));
+            return;
+        }
+        Err(e) => {
+            reject(&mut stream, e);
+            return;
+        }
+    };
+    let shard = join.shard;
+    let timeout = {
+        let mut st = lock_recover(&shared.st);
+        if let Err(e) = st.register(&join) {
+            drop(st);
+            reject(&mut stream, e);
+            return;
+        }
+        // Fleet-assembly barrier: the joined reply is withheld until the
+        // session starts (all S present, or the join window closes — the
+        // hub's accept loop is the timekeeper that forces a start).
+        while !st.started {
+            st = wait_recover(&shared.cv, st);
+        }
+        st.timeout
+    };
+    let joined = HubReply::Joined(ExchangeJoined {
+        shards: join.shards,
+        round_timeout_ms: timeout.as_millis() as u64,
+    });
+    if write_frame(&mut stream, &joined.to_json()).is_err() {
+        shared.retire(shard, false);
+        return;
+    }
+    // The per-peer deadline: a worker that does not publish within the
+    // round deadline of its previous reply is retired and the fleet
+    // proceeds on its stale snapshot.
+    if stream.set_read_timeout(Some(timeout)).is_err() {
+        shared.retire(shard, false);
+        return;
+    }
+    loop {
+        let text = match read_frame(&mut stream) {
+            Ok(Some(t)) => t,
+            // Clean EOF, timeout, or reset: the worker is gone mid-round.
+            _ => {
+                shared.retire(shard, false);
+                return;
+            }
+        };
+        match HubRequest::parse(&text) {
+            Ok(HubRequest::Publish(p)) if p.shard == shard => {
+                let view = match shared.publish(shard, p) {
+                    Ok(v) => v,
+                    Err(e) => {
+                        reject(&mut stream, e);
+                        shared.retire(shard, false);
+                        return;
+                    }
+                };
+                if write_frame(&mut stream, &view).is_err() {
+                    shared.retire(shard, false);
+                    return;
+                }
+            }
+            Ok(HubRequest::Leave(l)) if l.shard == shard => {
+                shared.retire(shard, true);
+                return;
+            }
+            Ok(_) => {
+                reject(&mut stream, ServeError::Invalid("unexpected frame".to_string()));
+                shared.retire(shard, false);
+                return;
+            }
+            Err(e) => {
+                reject(&mut stream, e);
+                shared.retire(shard, false);
+                return;
+            }
+        }
+    }
+}
+
+/// Best-effort typed rejection before dropping a connection.
+fn reject(stream: &mut TcpStream, e: ServeError) {
+    let _ = write_frame(stream, &HubReply::Error(e).to_json());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problem::Ensemble;
+    use crate::service::api::JobRequest;
+    use crate::service::ShardedPool;
+
+    fn make_problem(seed: u64) -> Problem {
+        let req = JobRequest {
+            ensemble: Ensemble::Gaussian,
+            n: 128,
+            m: 64,
+            b: 8,
+            s: 4,
+            seed,
+            y: None,
+        };
+        let op = req.draw_operator();
+        req.problem(&op).unwrap()
+    }
+
+    fn assert_outcomes_bit_identical(a: &JobOutcome, b: &JobOutcome) {
+        assert_eq!(a.converged, b.converged);
+        assert_eq!(a.iters, b.iters);
+        assert_eq!(a.residual.to_bits(), b.residual.to_bits());
+        assert_eq!(a.final_error.to_bits(), b.final_error.to_bits());
+        assert_eq!(a.x.len(), b.x.len());
+        for (u, v) in a.x.iter().zip(&b.x) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn hub_fleet_matches_the_in_process_pool_bit_for_bit() {
+        let problem = make_problem(11);
+        let opts = AsyncOpts::default();
+        for protocol in [ExchangeProtocol::Gossip, ExchangeProtocol::LeaderMerge] {
+            let sh = ShardOpts { shards: 3, exchange_period: 8, protocol };
+            let pool = ShardedPool::new(sh.clone()).run(&problem, Alg::Stoiht, &opts, 7);
+            let hub = ExchangeHub::bind(HubOpts::new("127.0.0.1:0", 3)).unwrap();
+            let addr = hub.addr().unwrap().to_string();
+            let hub = hub.spawn();
+            let mut runs: Vec<Option<ShardRun>> = vec![None, None, None];
+            thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for k in 0..3 {
+                    let (addr, sh, problem, opts) = (&addr, &sh, &problem, &opts);
+                    handles.push(scope.spawn(move || {
+                        run_worker(problem, addr, k, sh, Alg::Stoiht, opts, 7).unwrap()
+                    }));
+                }
+                for (k, h) in handles.into_iter().enumerate() {
+                    runs[k] = Some(h.join().unwrap());
+                }
+            });
+            let report = hub.join().unwrap().unwrap();
+            assert!(report.degraded.is_empty(), "clean fleet must not degrade");
+            assert_eq!(report.rounds, pool.rounds + 1, "hub counts the final drain round");
+            for (k, run) in runs.iter().enumerate() {
+                let run = run.as_ref().unwrap();
+                assert_eq!(run.stale_rounds, 0);
+                assert_eq!(run.rounds, pool.rounds, "protocol {protocol:?} shard {k}");
+                assert_outcomes_bit_identical(&run.outcome, &pool.shards[k]);
+            }
+        }
+    }
+
+    #[test]
+    fn dead_peer_degrades_the_fleet_instead_of_deadlocking() {
+        let problem = make_problem(5);
+        let opts = AsyncOpts::default();
+        let sh = ShardOpts { shards: 3, exchange_period: 4, protocol: ExchangeProtocol::Gossip };
+        let mut hub_opts = HubOpts::new("127.0.0.1:0", 3);
+        // Tight deadline so a vanished peer is detected quickly even if
+        // the EOF is swallowed by the platform.
+        hub_opts.round_timeout = Some(Duration::from_millis(500));
+        let hub = ExchangeHub::bind(hub_opts).unwrap();
+        let addr = hub.addr().unwrap().to_string();
+        let hub = hub.spawn();
+        thread::scope(|scope| {
+            // Shard 2 joins the fleet, then its process "dies": the
+            // dropped connection is the kill. Connect concurrently with
+            // the workers — the join reply is the fleet barrier.
+            let doomed = scope.spawn(|| {
+                HubTransport::connect(
+                    &addr,
+                    ExchangeJoin { shard: 2, shards: 3, n: 128, exchange_period: 4 },
+                )
+            });
+            let mut handles = Vec::new();
+            for k in 0..2 {
+                let (addr, sh, problem, opts) = (&addr, &sh, &problem, &opts);
+                handles.push(scope.spawn(move || {
+                    run_worker(problem, addr, k, sh, Alg::Stoiht, opts, 7)
+                }));
+            }
+            // The fleet is assembled once connect returns; now kill the
+            // peer mid-round.
+            drop(doomed.join().unwrap().unwrap());
+            for h in handles {
+                let run = h.join().unwrap().expect("survivors must finish, not deadlock");
+                assert!(run.rounds > 0);
+                assert!(run.stale_rounds > 0, "survivors must observe the degraded rounds");
+            }
+        });
+        let report = hub.join().unwrap().unwrap();
+        assert_eq!(report.degraded, vec![2]);
+    }
+
+    #[test]
+    fn hub_rejects_mismatched_joins_with_typed_errors() {
+        // Fleet-size mismatch.
+        let mut opts = HubOpts::new("127.0.0.1:0", 1);
+        opts.join_timeout = Duration::from_millis(300);
+        let hub = ExchangeHub::bind(opts).unwrap();
+        let addr = hub.addr().unwrap().to_string();
+        let hub = hub.spawn();
+        let err = HubTransport::connect(
+            &addr,
+            ExchangeJoin { shard: 0, shards: 2, n: 16, exchange_period: 1 },
+        )
+        .unwrap_err();
+        assert!(
+            matches!(err, TransportError::Rejected(ServeError::Incompatible(_))),
+            "got {err}"
+        );
+        let report = hub.join().unwrap().unwrap();
+        assert_eq!(report.rounds, 0);
+        assert_eq!(report.degraded, vec![0], "the slot never joined");
+
+        // Duplicate shard id: the second join is rejected, the first
+        // keeps the slot (and is degraded when we drop it).
+        let mut opts = HubOpts::new("127.0.0.1:0", 2);
+        opts.join_timeout = Duration::from_millis(600);
+        let hub = ExchangeHub::bind(opts).unwrap();
+        let addr = hub.addr().unwrap().to_string();
+        let hub = hub.spawn();
+        let join = ExchangeJoin { shard: 0, shards: 2, n: 16, exchange_period: 1 };
+        // Neither join reply arrives before the window closes (the fleet
+        // never completes), so connect on a thread and harvest after.
+        let (a, b) = thread::scope(|scope| {
+            let first = scope.spawn(|| HubTransport::connect(&addr, join.clone()));
+            thread::sleep(Duration::from_millis(150));
+            let second = scope.spawn(|| HubTransport::connect(&addr, join.clone()));
+            (first.join().unwrap(), second.join().unwrap())
+        });
+        assert!(a.is_ok(), "first join holds the slot");
+        let err = b.unwrap_err();
+        assert!(
+            matches!(err, TransportError::Rejected(ServeError::Invalid(_))),
+            "duplicate join must be Invalid, got {err}"
+        );
+        drop(a);
+        let report = hub.join().unwrap().unwrap();
+        assert!(report.degraded.contains(&1), "slot 1 never joined");
+    }
+
+    #[test]
+    fn single_shard_fleet_completes() {
+        let problem = make_problem(3);
+        let opts = AsyncOpts::default();
+        let sh = ShardOpts { shards: 1, exchange_period: 16, ..ShardOpts::default() };
+        let hub = ExchangeHub::bind(HubOpts::new("127.0.0.1:0", 1)).unwrap();
+        let addr = hub.addr().unwrap().to_string();
+        let hub = hub.spawn();
+        let run = run_worker(&problem, &addr, 0, &sh, Alg::Stoiht, &opts, 9).unwrap();
+        assert!(run.rounds >= 1);
+        assert_eq!(run.stale_rounds, 0);
+        let report = hub.join().unwrap().unwrap();
+        assert!(report.degraded.is_empty());
+    }
+}

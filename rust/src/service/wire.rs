@@ -27,6 +27,11 @@
 //! `{"api_version":1,"batch":[{"ok":…}|{"error":…},…]}`, and
 //! `{"api_version":1,"stats":{…}}`.
 //!
+//! The exchange-hub protocol ([`super::transport`]) rides the same
+//! framing and envelope, with frame bodies under `join` / `publish` /
+//! `leave` (worker → hub) and `joined` / `view` / `error` (hub →
+//! worker) — see [`HubRequest`] / [`HubReply`].
+//!
 //! This module is the crate's **only** home for `std::net` outside
 //! [`super::server`] — lint rule `net-doorway` (L5) confines raw socket
 //! use to `src/service/`, so tests and benches drive the server through
@@ -39,7 +44,8 @@ use std::time::Duration;
 
 use crate::bench_harness::json::Json;
 use crate::service::api::{
-    malformed, BatchRequest, JobRequest, JobResponse, ServeError, StatsSnapshot, API_VERSION,
+    malformed, BatchRequest, ExchangeJoin, ExchangeJoined, ExchangeLeave, ExchangePublish,
+    ExchangeView, JobRequest, JobResponse, ServeError, StatsSnapshot, API_VERSION,
 };
 
 /// Hard cap on a frame payload (64 MiB — a million-dimension iterate in
@@ -207,6 +213,109 @@ fn parse_result(j: &Json) -> Result<Result<JobResponse, ServeError>, ServeError>
     Err(malformed("reply carries neither `ok` nor `error`"))
 }
 
+// ------------------------------------------------------- hub envelopes
+
+/// A decoded exchange-hub request frame (shard worker → hub). Same
+/// framing and `api_version` envelope as the serve protocol, with the
+/// frame body under `join` / `publish` / `leave`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum HubRequest {
+    Join(ExchangeJoin),
+    Publish(ExchangePublish),
+    Leave(ExchangeLeave),
+}
+
+impl HubRequest {
+    /// Serialize with the `api_version` envelope.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        let _ = write!(out, "{{\"api_version\":{API_VERSION},");
+        match self {
+            HubRequest::Join(f) => {
+                out.push_str("\"join\":");
+                f.write_json(&mut out);
+            }
+            HubRequest::Publish(f) => {
+                out.push_str("\"publish\":");
+                f.write_json(&mut out);
+            }
+            HubRequest::Leave(f) => {
+                out.push_str("\"leave\":");
+                f.write_json(&mut out);
+            }
+        }
+        out.push('}');
+        out
+    }
+
+    /// Parse a hub request frame, enforcing the version handshake.
+    pub fn parse(text: &str) -> Result<HubRequest, ServeError> {
+        let j = Json::parse(text).map_err(malformed)?;
+        check_version(&j)?;
+        if let Some(f) = j.get("join") {
+            return Ok(HubRequest::Join(ExchangeJoin::from_json(f)?));
+        }
+        if let Some(f) = j.get("publish") {
+            return Ok(HubRequest::Publish(ExchangePublish::from_json(f)?));
+        }
+        if let Some(f) = j.get("leave") {
+            return Ok(HubRequest::Leave(ExchangeLeave::from_json(f)?));
+        }
+        Err(malformed("request carries none of `join`, `publish`, `leave`"))
+    }
+}
+
+/// A decoded exchange-hub reply frame (hub → shard worker).
+#[derive(Clone, Debug, PartialEq)]
+pub enum HubReply {
+    /// The fleet assembled; rounds may begin.
+    Joined(ExchangeJoined),
+    /// A completed round's merged view.
+    View(ExchangeView),
+    /// Typed rejection (version/shape mismatch, bad shard id, …).
+    Error(ServeError),
+}
+
+impl HubReply {
+    /// Serialize with the `api_version` envelope.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        let _ = write!(out, "{{\"api_version\":{API_VERSION},");
+        match self {
+            HubReply::Joined(f) => {
+                out.push_str("\"joined\":");
+                f.write_json(&mut out);
+            }
+            HubReply::View(f) => {
+                out.push_str("\"view\":");
+                f.write_json(&mut out);
+            }
+            HubReply::Error(e) => {
+                out.push_str("\"error\":");
+                e.write_json(&mut out);
+            }
+        }
+        out.push('}');
+        out
+    }
+
+    /// Parse a hub reply frame, enforcing the version handshake.
+    pub fn parse(text: &str) -> Result<HubReply, ServeError> {
+        let j = Json::parse(text).map_err(malformed)?;
+        check_version(&j)?;
+        if let Some(f) = j.get("joined") {
+            return Ok(HubReply::Joined(ExchangeJoined::from_json(f)?));
+        }
+        if let Some(f) = j.get("view") {
+            return Ok(HubReply::View(ExchangeView::from_json(f)?));
+        }
+        if let Some(e) = j.get("error") {
+            return Ok(HubReply::Error(ServeError::from_json(e)?));
+        }
+        Err(malformed("reply carries none of `joined`, `view`, `error`"))
+    }
+}
+
 fn check_version(j: &Json) -> Result<(), ServeError> {
     let v = super::api::req_u64(j, "api_version")?;
     if v != API_VERSION {
@@ -231,32 +340,50 @@ pub struct Client {
 /// to hang the `loadgen` suite and CLI clients forever).
 pub const DEFAULT_CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
 
+/// Default read deadline installed by [`Client::connect`]: a connected
+/// server that stalls mid-reply (wedged worker, half-dead peer) used to
+/// block the client in `read_frame` forever — the receiving-side hole the
+/// connect/write bounds left open. Generous against real solve times
+/// (heaviest served jobs finish in seconds); override per call with
+/// [`Client::set_read_timeout`].
+pub const DEFAULT_READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Bounded connect shared by [`Client`] and the exchange transport: each
+/// resolved candidate address is tried in turn; the last failure is
+/// reported if none accepts.
+pub(crate) fn connect_stream(addr: &str, timeout: Duration) -> std::io::Result<TcpStream> {
+    use std::net::ToSocketAddrs;
+    let mut last_err = None;
+    for candidate in addr.to_socket_addrs()? {
+        match TcpStream::connect_timeout(&candidate, timeout) {
+            Ok(stream) => return Ok(stream),
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(last_err.unwrap_or_else(|| {
+        std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            "address resolved to no socket addresses",
+        )
+    }))
+}
+
 impl Client {
     /// Connect to a server address (`host:port`), bounded by
-    /// [`DEFAULT_CONNECT_TIMEOUT`]. Use [`Client::connect_with_timeout`]
-    /// to pick the bound.
+    /// [`DEFAULT_CONNECT_TIMEOUT`] with [`DEFAULT_READ_TIMEOUT`]
+    /// installed. Use [`Client::connect_with_timeout`] to pick the
+    /// connect bound.
     pub fn connect(addr: &str) -> std::io::Result<Client> {
         Self::connect_with_timeout(addr, DEFAULT_CONNECT_TIMEOUT)
     }
 
-    /// Connect with an explicit bound, tried against each resolved
-    /// candidate address in turn; the last failure is reported if none
-    /// accepts.
+    /// Connect with an explicit bound. The returned client carries the
+    /// [`DEFAULT_READ_TIMEOUT`] read deadline so a stalled server
+    /// surfaces as an error instead of a hang.
     pub fn connect_with_timeout(addr: &str, timeout: Duration) -> std::io::Result<Client> {
-        use std::net::ToSocketAddrs;
-        let mut last_err = None;
-        for candidate in addr.to_socket_addrs()? {
-            match TcpStream::connect_timeout(&candidate, timeout) {
-                Ok(stream) => return Ok(Client { stream }),
-                Err(e) => last_err = Some(e),
-            }
-        }
-        Err(last_err.unwrap_or_else(|| {
-            std::io::Error::new(
-                std::io::ErrorKind::InvalidInput,
-                "address resolved to no socket addresses",
-            )
-        }))
+        let stream = connect_stream(addr, timeout)?;
+        stream.set_read_timeout(Some(DEFAULT_READ_TIMEOUT))?;
+        Ok(Client { stream })
     }
 
     /// Optional read timeout (tests use this to bound a hang).
@@ -432,6 +559,67 @@ mod tests {
             "connect_with_timeout took {:?}, bound was {bound:?}",
             start.elapsed()
         );
+    }
+
+    #[test]
+    fn hub_envelopes_roundtrip() {
+        use crate::service::api::{
+            ExchangeJoin, ExchangeJoined, ExchangeLeave, ExchangePublish, ExchangeView,
+        };
+        for req in [
+            HubRequest::Join(ExchangeJoin { shard: 0, shards: 4, n: 8, exchange_period: 16 }),
+            HubRequest::Publish(ExchangePublish {
+                shard: 3,
+                round: 7,
+                finished: false,
+                votes: vec![1, -2, i64::MIN, i64::MAX, 1 << 53, -(1 << 53) - 1, 0, 9],
+            }),
+            HubRequest::Leave(ExchangeLeave { shard: 1 }),
+        ] {
+            assert_eq!(HubRequest::parse(&req.to_json()).unwrap(), req);
+        }
+        for reply in [
+            HubReply::Joined(ExchangeJoined { shards: 4, round_timeout_ms: 2400 }),
+            HubReply::View(ExchangeView {
+                round: 7,
+                finished_shards: 2,
+                stale_peers: 1,
+                merged: vec![i64::MIN, -1, 0, 1, i64::MAX],
+            }),
+            HubReply::Error(ServeError::Incompatible("n mismatch".to_string())),
+        ] {
+            assert_eq!(HubReply::parse(&reply.to_json()).unwrap(), reply);
+        }
+        // Version handshake applies to hub frames too.
+        let future = r#"{"api_version":2,"leave":{"shard":0}}"#;
+        assert_eq!(HubRequest::parse(future), Err(ServeError::UnsupportedVersion(2)));
+    }
+
+    #[test]
+    fn default_read_timeout_bounds_a_stalled_server() {
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        // Accept in the background and hold the connection open silently —
+        // the stalled-hub regression the read deadline exists for.
+        let hold = crate::sync::thread::spawn(move || listener.accept().map(|(s, _)| s));
+        let mut client = Client::connect(&addr).unwrap();
+        assert_eq!(
+            client.stream.read_timeout().unwrap(),
+            Some(DEFAULT_READ_TIMEOUT),
+            "connect must install the default read deadline"
+        );
+        // Shrink the deadline so the check is fast; before the fix this
+        // call blocked forever (no read timeout was ever set).
+        client.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+        let start = std::time::Instant::now();
+        assert!(client.stats().is_err(), "stalled server must error, not hang");
+        assert!(
+            start.elapsed() < Duration::from_secs(20),
+            "read deadline did not bound the stall: {:?}",
+            start.elapsed()
+        );
+        drop(hold.join());
     }
 
     #[test]

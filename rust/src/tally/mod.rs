@@ -364,6 +364,13 @@ impl ExchangeBoard {
         self.slots.len()
     }
 
+    /// Tally dimension `n` every published snapshot must match. The
+    /// socket transport ([`crate::service::transport`]) validates remote
+    /// snapshots against this before they can reach a merge.
+    pub fn dim(&self) -> usize {
+        self.n
+    }
+
     /// Publish shard `k`'s local vote snapshot and block until every
     /// shard has published for this round. `finished` reports whether
     /// this shard is done iterating (converged or at its cap); the

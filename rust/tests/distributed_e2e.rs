@@ -1,0 +1,236 @@
+//! End-to-end multi-process sharded recovery: spawn the real `astir`
+//! binary (`CARGO_BIN_EXE_astir`) as one `exchange-hub` plus `S`
+//! `shard-worker` processes on loopback, and pin the two distributed
+//! contracts:
+//!
+//! * **Bit-identity** — the fleet's per-shard results (iteration counts,
+//!   residual/error bit patterns, an FNV digest of each iterate) are
+//!   bit-for-bit the in-process [`ShardedPool`] run at the same
+//!   `(S, E, seed)`: the socket transport adds processes, not
+//!   arithmetic.
+//! * **Degradation over deadlock** — killing one worker mid-round
+//!   retires it at the hub; the survivors keep exchanging against its
+//!   stale snapshot, finish, and exit cleanly, and the hub reports the
+//!   dead shard as degraded. Nothing hangs.
+//!
+//! Every child is killed on drop, and scrape loops are bounded, so a
+//! regression fails fast instead of wedging CI (the workflow adds a hard
+//! `timeout-minutes` on top).
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Lines};
+use std::process::{Child, ChildStdout, Command, Stdio};
+
+use astir::algorithms::Alg;
+use astir::async_runtime::AsyncOpts;
+use astir::problem::ProblemSpec;
+use astir::service::transport::x_digest;
+use astir::service::ShardedPool;
+use astir::sim::ShardOpts;
+
+const N: usize = 1000;
+const M: usize = 300;
+const B: usize = 15;
+const S_SPARSE: usize = 20;
+const SEED: u64 = 20170301;
+const SHARDS: usize = 4;
+const PERIOD: usize = 16;
+
+/// A spawned `astir` child with piped stdout, killed on drop.
+struct Proc {
+    child: Child,
+    lines: Lines<BufReader<ChildStdout>>,
+}
+
+impl Proc {
+    fn spawn(args: &[&str]) -> Proc {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_astir"));
+        cmd.args(args);
+        cmd.stdout(Stdio::piped()).stderr(Stdio::inherit()).stdin(Stdio::null());
+        let mut child = cmd.spawn().expect("spawn astir");
+        let stdout = child.stdout.take().expect("piped stdout");
+        Proc { child, lines: BufReader::new(stdout).lines() }
+    }
+
+    /// Read stdout until a line starts with `prefix`; returns the rest
+    /// of that line. Panics if the child exits first — the pipe EOF
+    /// bounds the wait.
+    fn scrape(&mut self, prefix: &str) -> String {
+        loop {
+            match self.lines.next() {
+                Some(Ok(line)) => {
+                    if let Some(rest) = line.strip_prefix(prefix) {
+                        return rest.trim().to_string();
+                    }
+                }
+                _ => panic!("child exited before printing `{prefix}`"),
+            }
+        }
+    }
+
+    /// Drain stdout to EOF (child exit), returning every line.
+    fn drain(&mut self) -> Vec<String> {
+        let lines: Vec<String> = (&mut self.lines).map_while(Result::ok).collect();
+        let status = self.child.wait().expect("wait astir child");
+        assert!(status.success(), "astir child failed: {status}");
+        lines
+    }
+}
+
+impl Drop for Proc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn spawn_hub(shards: usize, extra: &[&str]) -> (Proc, String) {
+    let shards = shards.to_string();
+    let mut args = vec!["exchange-hub", "--addr", "127.0.0.1:0", "--shards", &shards];
+    args.extend_from_slice(extra);
+    let mut hub = Proc::spawn(&args);
+    let addr = hub.scrape("listening on ");
+    (hub, addr)
+}
+
+fn spawn_worker(addr: &str, shard: usize, shards: usize, period: usize) -> Proc {
+    Proc::spawn(&[
+        "shard-worker",
+        "--hub",
+        addr,
+        "--shard",
+        &shard.to_string(),
+        "--shards",
+        &shards.to_string(),
+        "--exchange-period",
+        &period.to_string(),
+        "--n",
+        &N.to_string(),
+        "--m",
+        &M.to_string(),
+        "--b",
+        &B.to_string(),
+        "--s",
+        &S_SPARSE.to_string(),
+        "--seed",
+        &SEED.to_string(),
+    ])
+}
+
+/// `key=value` tokens of a worker's `shard-result` line.
+fn parse_result(line: &str) -> HashMap<String, String> {
+    line.split_whitespace()
+        .filter_map(|tok| tok.split_once('='))
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect()
+}
+
+/// The in-process reference at the fleet's exact axes: the same problem
+/// generation (`Rng::seed_from(seed)` feeding `ProblemSpec::generate`)
+/// and run-seed derivation (`seed ^ 0xA5`) the CLI uses.
+fn reference_pool() -> astir::service::ShardedOutcome {
+    // `ProblemSpec::paper()` IS the CLI default; the explicit dims the
+    // workers are launched with restate it so a default drift fails
+    // loudly here instead of silently changing the fleet's problem.
+    let spec = ProblemSpec { n: N, m: M, b: B, s: S_SPARSE, ..ProblemSpec::paper() };
+    let mut rng = astir::rng::Rng::seed_from(SEED);
+    let problem = spec.generate(&mut rng);
+    let sh = ShardOpts { shards: SHARDS, exchange_period: PERIOD, ..Default::default() };
+    ShardedPool::new(sh).run(&problem, Alg::Stoiht, &AsyncOpts::default(), SEED ^ 0xA5)
+}
+
+#[test]
+fn process_fleet_is_bit_identical_to_the_in_process_pool() {
+    let (mut hub, addr) = spawn_hub(SHARDS, &[]);
+    let mut workers: Vec<Proc> =
+        (0..SHARDS).map(|k| spawn_worker(&addr, k, SHARDS, PERIOD)).collect();
+    let pool = reference_pool();
+    for (k, w) in workers.iter_mut().enumerate() {
+        let lines = w.drain();
+        let result = lines
+            .iter()
+            .find_map(|l| l.strip_prefix("shard-result "))
+            .unwrap_or_else(|| panic!("worker {k} printed no shard-result: {lines:?}"));
+        let kv = parse_result(result);
+        let expect = &pool.shards[k];
+        assert_eq!(kv["shard"], k.to_string());
+        assert_eq!(kv["converged"], expect.converged.to_string(), "shard {k} convergence");
+        assert_eq!(kv["iters"], expect.iters.to_string(), "shard {k} iteration count");
+        assert_eq!(kv["rounds"], pool.rounds.to_string(), "shard {k} exchange rounds");
+        assert_eq!(kv["stale_rounds"], "0", "clean fleet must never observe staleness");
+        assert_eq!(
+            kv["residual_bits"],
+            format!("{:016x}", expect.residual.to_bits()),
+            "shard {k} residual drifted over the wire"
+        );
+        assert_eq!(
+            kv["error_bits"],
+            format!("{:016x}", expect.final_error.to_bits()),
+            "shard {k} recovery error drifted over the wire"
+        );
+        assert_eq!(
+            kv["x_fnv"],
+            format!("{:016x}", x_digest(&expect.x)),
+            "shard {k} iterate drifted over the wire"
+        );
+    }
+    let report = hub.drain().into_iter().find(|l| l.starts_with("hub-report ")).expect("report");
+    let kv = parse_result(&report);
+    assert_eq!(kv["degraded"], "[]", "clean fleet must not degrade");
+    assert_eq!(kv["rounds"], (pool.rounds + 1).to_string(), "hub counts the final drain round");
+}
+
+#[test]
+fn killing_a_worker_mid_round_degrades_the_fleet_instead_of_deadlocking() {
+    // Tight round deadline so the hub retires the killed worker quickly
+    // even if the socket EOF is swallowed.
+    let (mut hub, addr) = spawn_hub(SHARDS, &["--round-timeout-ms", "1000"]);
+    let mut workers: Vec<Proc> =
+        (0..SHARDS).map(|k| spawn_worker(&addr, k, SHARDS, PERIOD)).collect();
+    // The victim confirms fleet assembly (its join reply arrived), so the
+    // kill lands mid-session — after round 1 started, before the fleet
+    // drained.
+    let victim = workers.last_mut().expect("victim worker");
+    victim.scrape("joined hub as shard ");
+    victim.child.kill().expect("kill victim worker");
+    let _ = victim.child.wait();
+    workers.pop();
+    // Survivors must finish — with stale rounds observed, since the dead
+    // peer's snapshot goes stale the moment the hub retires it.
+    for (k, w) in workers.iter_mut().enumerate() {
+        let lines = w.drain();
+        let result = lines
+            .iter()
+            .find_map(|l| l.strip_prefix("shard-result "))
+            .unwrap_or_else(|| panic!("survivor {k} printed no shard-result: {lines:?}"));
+        let kv = parse_result(result);
+        assert_ne!(kv["rounds"], "0", "survivor {k} must have exchanged");
+        assert_ne!(kv["stale_rounds"], "0", "survivor {k} must observe the degraded rounds");
+    }
+    let report = hub.drain().into_iter().find(|l| l.starts_with("hub-report ")).expect("report");
+    let kv = parse_result(&report);
+    assert_eq!(
+        kv["degraded"],
+        format!("[{}]", SHARDS - 1),
+        "the hub must report exactly the killed shard as degraded"
+    );
+}
+
+/// The fleet barrier is load-bearing: a worker whose peers never arrive
+/// must not hang past the hub's join window, and the hub must report the
+/// absent shards. Keeps the timeout path honest without waiting the
+/// default 30 s.
+#[test]
+fn a_partial_fleet_starts_degraded_after_the_join_window() {
+    let (mut hub, addr) = spawn_hub(2, &["--join-timeout-ms", "1500", "--round-timeout-ms", "800"]);
+    let mut worker = spawn_worker(&addr, 0, 2, 4);
+    let lines = worker.drain();
+    let result = lines
+        .iter()
+        .find_map(|l| l.strip_prefix("shard-result "))
+        .unwrap_or_else(|| panic!("solo worker printed no shard-result: {lines:?}"));
+    let kv = parse_result(result);
+    assert_ne!(kv["stale_rounds"], "0", "the absent peer must read as stale");
+    let report = hub.drain().into_iter().find(|l| l.starts_with("hub-report ")).expect("report");
+    assert_eq!(parse_result(&report)["degraded"], "[1]");
+}

@@ -3,11 +3,17 @@
 //! `testutil` mini-framework. Each property runs across on the order of a
 //! hundred randomized cases; failures print an `ASTIR_PROP_SEED` repro.
 
+use std::io::Cursor;
+
 use astir::algorithms::StoihtKernel;
 use astir::coordinator::run_trials;
 use astir::linalg::{dist2, dot, lstsq, nrm2, Mat, MeasureOp, Operator};
 use astir::problem::{Ensemble, Problem, ProblemSpec};
 use astir::rng::Rng;
+use astir::service::api::{
+    ExchangeJoin, ExchangeJoined, ExchangeLeave, ExchangePublish, ExchangeView, ServeError,
+};
+use astir::service::wire::{read_frame, write_frame, HubReply, HubRequest};
 use astir::sim::{simulate, simulate_sharded, ShardOpts, SimOpts, SpeedSchedule};
 use astir::support::{accuracy, intersection_size, top_s, union, union_into};
 use astir::tally::{
@@ -356,5 +362,76 @@ fn prop_problem_blocks_partition() {
             reassembled.extend(blk.gemv(&x));
         }
         (dist2(&full, &reassembled) < 1e-10).or_fail("block views disagree with full gemv")
+    });
+}
+
+// ------------------------------------------------ distributed exchange
+
+/// Full-range `i64` vote vector: uniform random words plus one forced
+/// extreme per case, so the decimal-string encoding beyond the f64-exact
+/// window (`|v| > 2^53`) is always exercised alongside the plain-number
+/// path.
+fn vote_vec(g: &mut Gen) -> Vec<i64> {
+    const EDGES: [i64; 8] = [
+        i64::MIN,
+        i64::MAX,
+        1 << 53,
+        -(1 << 53),
+        (1 << 53) + 1,
+        -(1 << 53) - 1,
+        0,
+        -1,
+    ];
+    let len = g.usize_in(0, 24);
+    let mut votes: Vec<i64> = (0..len).map(|_| g.rng().next_u64() as i64).collect();
+    votes.push(*g.choose(&EDGES));
+    votes
+}
+
+#[test]
+fn prop_exchange_frames_roundtrip_the_wire() {
+    property("exchange frames roundtrip the wire", 120, |g| {
+        let req = match g.usize_in(0, 2) {
+            0 => HubRequest::Join(ExchangeJoin {
+                shard: g.usize_in(0, 63),
+                shards: g.usize_in(1, 64),
+                n: g.usize_in(0, 1 << 20),
+                exchange_period: g.usize_in(1, 1 << 16),
+            }),
+            1 => HubRequest::Publish(ExchangePublish {
+                shard: g.usize_in(0, 63),
+                // `u64` protocol counters ride plain JSON numbers and are
+                // rejected past 2^53 by design; stay in the exact window.
+                round: g.rng().next_u64() >> 11,
+                finished: g.bool(),
+                votes: vote_vec(g),
+            }),
+            _ => HubRequest::Leave(ExchangeLeave { shard: g.usize_in(0, 63) }),
+        };
+        let reply = match g.usize_in(0, 2) {
+            0 => HubReply::Joined(ExchangeJoined {
+                shards: g.usize_in(1, 64),
+                round_timeout_ms: g.rng().next_u64() >> 11,
+            }),
+            1 => HubReply::View(ExchangeView {
+                round: g.rng().next_u64() >> 11,
+                finished_shards: g.usize_in(0, 64),
+                stale_peers: g.usize_in(0, 64),
+                merged: vote_vec(g),
+            }),
+            _ => HubReply::Error(ServeError::Incompatible("shape mismatch".to_string())),
+        };
+        // Through the framed byte layer, not just the JSON text: what one
+        // side writes must read back identically on the other.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &req.to_json()).expect("write to a Vec cannot fail");
+        write_frame(&mut buf, &reply.to_json()).expect("write to a Vec cannot fail");
+        let mut cur = Cursor::new(buf);
+        let req_text = read_frame(&mut cur).expect("framed read").expect("frame present");
+        let reply_text = read_frame(&mut cur).expect("framed read").expect("frame present");
+        let req_back = HubRequest::parse(&req_text).map_err(|e| format!("request: {e:?}"))?;
+        (req_back == req).or_fail(format!("request drifted over the wire: {req:?}"))?;
+        let reply_back = HubReply::parse(&reply_text).map_err(|e| format!("reply: {e:?}"))?;
+        (reply_back == reply).or_fail(format!("reply drifted over the wire: {reply:?}"))
     });
 }
